@@ -1,0 +1,18 @@
+//! Regenerate the paper's Table III: fit the unified collective model
+//! comm_time(m, p) = c1*log2(p) + c2*m + c3 on a synthetic measurement grid
+//! (m = 2^2..2^26 floats, p = 2..256 — the paper's own grid) and compare
+//! the recovered constants with the paper's.
+//!
+//! Run with:  cargo run --release --example comm_model_fit
+
+use anyhow::Result;
+use phantom::experiments;
+
+fn main() -> Result<()> {
+    let r = experiments::run("table3", None)?;
+    print!("{}", r.render_markdown());
+    println!("\nThe latency constants (c1) of All-Gather/Reduce-Scatter are ~4x those of");
+    println!("Broadcast/All-Reduce — this is why PP's tiny k-float collectives are");
+    println!("latency-bound and TP's n*batch collectives are bandwidth-bound (Fig 5a).");
+    Ok(())
+}

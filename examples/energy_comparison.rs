@@ -1,0 +1,27 @@
+//! Table-I style energy comparison: train TP and PP models to the SAME
+//! fixed loss and compare model size, iteration count, energy per iteration
+//! and total energy — the paper's Sec. VI-B protocol at measured scale
+//! (n = 1,024, 2..8 simulated ranks).
+//!
+//! Run with:  cargo run --release --example energy_comparison
+
+use anyhow::Result;
+use phantom::experiments::fig7::{convergence_sweep, fig7a, fig7b, fig7c, table1};
+use phantom::runtime::{default_artifact_dir, ExecServer};
+
+fn main() -> Result<()> {
+    let server = ExecServer::start(default_artifact_dir())?;
+    eprintln!("running the fixed-loss convergence sweep (9 training runs)...");
+    let sweep = convergence_sweep(&server)?;
+    eprintln!("target loss lambda = {:.6}\n", sweep.target_loss);
+
+    for result in [
+        fig7a(&sweep)?,
+        fig7b(&sweep)?,
+        fig7c(&sweep)?,
+        table1(&sweep)?,
+    ] {
+        print!("{}", result.render_markdown());
+    }
+    Ok(())
+}

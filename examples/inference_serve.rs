@@ -1,0 +1,44 @@
+//! Inference serving comparison: the "inferencing" half of the paper's
+//! title. Serves batched forward-only queries through the PP and TP
+//! pipelines and reports per-batch latency, throughput, and energy per
+//! 1k queries — PP's forward path saves the same All-Gather traffic per
+//! query as per training iteration (Table II).
+//!
+//! Run with:  cargo run --release --example inference_serve [batches]
+
+use anyhow::Result;
+use phantom::config::{preset, Parallelism};
+use phantom::coordinator::driver::infer;
+use phantom::runtime::{default_artifact_dir, ExecServer};
+use phantom::util::stats::summarize;
+use phantom::util::table::{fmt_joules, fmt_secs, Table};
+
+fn main() -> Result<()> {
+    let batches: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(40);
+    let server = ExecServer::start(default_artifact_dir())?;
+
+    let mut table = Table::new(
+        &format!("Inference serving — n=1,024, p=8, {batches} batches of 32 queries"),
+        &["mode", "p50 latency", "p95 latency", "throughput (q/s, virtual)", "energy / 1k queries"],
+    );
+    for mode in [Parallelism::Phantom, Parallelism::Tensor] {
+        let cfg = preset("small", mode)?;
+        eprintln!("serving {} ...", mode.name());
+        let r = infer(&cfg, &server, batches)?;
+        let s = summarize(&r.latencies_s);
+        let queries = ((batches - 1) * cfg.train.batch) as f64;
+        table.row(vec![
+            mode.name().to_uppercase(),
+            fmt_secs(s.p50),
+            fmt_secs(s.p95),
+            format!("{:.0}", r.throughput),
+            fmt_joules(r.energy_j / queries * 1000.0),
+        ]);
+    }
+    print!("{}", table.markdown());
+    println!("\nPer-query PP moves 2*k*batch floats vs TP's (n + n/p)*batch (Table II).");
+    Ok(())
+}

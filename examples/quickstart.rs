@@ -1,0 +1,49 @@
+//! Quickstart: train a small FFN with phantom parallelism on 4 simulated
+//! ranks, then compare against the tensor-parallel baseline.
+//!
+//! Run with:  cargo run --release --example quickstart
+//! (needs `make artifacts` first)
+
+use anyhow::Result;
+use phantom::config::{preset, Parallelism};
+use phantom::coordinator;
+use phantom::runtime::{default_artifact_dir, ExecServer};
+use phantom::util::table::{fmt_joules, fmt_secs, Table};
+
+fn main() -> Result<()> {
+    let server = ExecServer::start(default_artifact_dir())?;
+
+    let mut table = Table::new(
+        "Quickstart — n=256, L=2, p=4, 60 iterations",
+        &["mode", "final loss", "params", "energy", "energy/iter", "virtual wall", "floats moved"],
+    );
+
+    for mode in [Parallelism::Phantom, Parallelism::Tensor] {
+        let mut cfg = preset("quickstart", mode)?;
+        cfg.train.max_iters = 60;
+        println!("training {} ...", mode.name());
+        let r = coordinator::train(&cfg, &server)?;
+        println!(
+            "  {}: loss {:.5} -> {:.5} over {} iters",
+            mode.name(),
+            r.losses.first().unwrap(),
+            r.losses.last().unwrap(),
+            r.iterations
+        );
+        let floats: u64 = r.per_rank.iter().map(|x| x.stats.floats_moved).sum();
+        table.row(vec![
+            mode.name().to_uppercase(),
+            format!("{:.5}", r.losses.last().unwrap()),
+            r.model_params.to_string(),
+            fmt_joules(r.energy_train_j),
+            fmt_joules(r.energy_per_iter_j()),
+            fmt_secs(r.wall_train_s),
+            floats.to_string(),
+        ]);
+    }
+
+    println!("\n{}", table.markdown());
+    println!("PP trains a smaller model with k-width phantom exchanges;");
+    println!("TP moves full activations. See EXPERIMENTS.md for the paper-scale results.");
+    Ok(())
+}

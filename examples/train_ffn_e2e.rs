@@ -1,0 +1,74 @@
+//! END-TO-END driver (DESIGN.md deliverable): train a ~134M-parameter FFN
+//! (n = 8,192, L = 2 — the TP-equivalent model is 2*8192^2 = 134.2M
+//! parameters) for a few hundred steps on the synthetic Gaussian-teacher
+//! corpus, through ALL layers of the stack:
+//!
+//!   AOT HLO artifacts (python/compile, built once by `make artifacts`)
+//!     -> PJRT executor thread (rust/src/runtime)
+//!     -> 8 rank workers + collective fabric (rust/src/comm, coordinator)
+//!     -> virtual-time energy ledger (rust/src/energy, simnet)
+//!
+//! Logs the loss curve for both phantom and tensor parallelism and reports
+//! the energy ledger. Results are recorded in EXPERIMENTS.md §End-to-end.
+//!
+//! Run with:  cargo run --release --example train_ffn_e2e [pp_iters] [tp_iters]
+
+use anyhow::Result;
+use phantom::config::{preset, Parallelism};
+use phantom::coordinator;
+use phantom::runtime::{default_artifact_dir, ExecServer};
+use phantom::util::table::{fmt_joules, fmt_params, fmt_secs, Table};
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let pp_iters: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(200);
+    let tp_iters: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(40);
+
+    let server = ExecServer::start(default_artifact_dir())?;
+    let mut table = Table::new(
+        "End-to-end: n=8,192 L=2 p=8 (TP model 134M params)",
+        &["mode", "iters", "first loss", "final loss", "params", "energy/iter", "E total", "virtual wall"],
+    );
+
+    for (mode, iters) in [(Parallelism::Phantom, pp_iters), (Parallelism::Tensor, tp_iters)] {
+        let mut cfg = preset("e2e", mode)?;
+        cfg.train.max_iters = iters;
+        eprintln!(
+            "[e2e] training {} for {} iterations (n=8192, p=8, k={}) ...",
+            mode.name(),
+            iters,
+            cfg.model.k
+        );
+        let t0 = std::time::Instant::now();
+        let r = coordinator::train(&cfg, &server)?;
+        eprintln!(
+            "[e2e] {} done in {:.1}s real time; loss curve:",
+            mode.name(),
+            t0.elapsed().as_secs_f64()
+        );
+        let stride = (r.losses.len() / 12).max(1);
+        for (i, l) in r.losses.iter().enumerate() {
+            if i % stride == 0 || i + 1 == r.losses.len() {
+                eprintln!("[e2e]   {:>8} iter {i:>4}  loss {l:.6}", mode.name());
+            }
+        }
+        assert!(
+            r.losses.last().unwrap() < r.losses.first().unwrap(),
+            "{} loss must decrease",
+            mode.name()
+        );
+        table.row(vec![
+            mode.name().to_uppercase(),
+            r.iterations.to_string(),
+            format!("{:.5}", r.losses.first().unwrap()),
+            format!("{:.5}", r.losses.last().unwrap()),
+            fmt_params(r.model_params),
+            fmt_joules(r.energy_per_iter_j()),
+            fmt_joules(r.energy_train_j),
+            fmt_secs(r.wall_train_s),
+        ]);
+    }
+
+    println!("\n{}", table.markdown());
+    Ok(())
+}

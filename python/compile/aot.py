@@ -1,0 +1,177 @@
+"""AOT lowering: JAX step functions -> HLO text artifacts + manifest.json.
+
+Interchange format is HLO *text*, not ``.serialize()``: jax >= 0.5 emits
+HloModuleProtos with 64-bit instruction ids which the xla_extension 0.5.1
+bundled with the Rust ``xla`` crate rejects (``proto.id() <= INT_MAX``); the
+text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md and /opt/xla-example/gen_hlo.py.
+
+Everything is lowered with ``return_tuple=True`` so every module's root is a
+tuple; the Rust runtime unwraps it uniformly.
+
+Usage (from python/):
+    python -m compile.aot --out ../artifacts [--configs tiny,small] [--force]
+
+Lowering is pure tracing (no XLA compilation happens here); the Rust runtime
+compiles lazily via PJRT and caches executables.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .shapes import ALL_ENTRIES, CONFIGS, ArtifactConfig
+
+F32 = jnp.float32
+
+
+def spec(*shape):
+    return jax.ShapeDtypeStruct(shape, F32)
+
+
+def entry_specs(cfg: ArtifactConfig, entry: str):
+    """Input ShapeDtypeStructs for one entry point under one config."""
+    B, n, k, p, m = cfg.batch, cfg.n, cfg.k, cfg.p, cfg.np_
+    table = {
+        # phantom parallelism
+        "pp_fwd_local": (spec(B, m), spec(m, m), spec(m, k)),
+        "pp_fwd_combine": (spec(B, m), spec(p, B, k), spec(p, k, m), spec(m)),
+        "pp_bwd_compress": (spec(B, m), spec(p, k, m)),
+        "pp_bwd_combine": (spec(B, m), spec(B, k), spec(m, m), spec(m, k), spec(B, m)),
+        "pp_grads": (spec(B, m), spec(B, m), spec(B, k), spec(p, B, k)),
+        # tensor parallelism
+        "tp_fwd": (spec(B, n), spec(n, m), spec(m)),
+        "tp_bwd_partial": (spec(B, m), spec(n, m)),
+        "tp_bwd_finish": (spec(B, m), spec(B, m)),
+        "tp_grads": (spec(B, n), spec(B, m)),
+        # fused segments (perf pass)
+        "pp_fwd_step": (
+            spec(B, m), spec(p, B, k), spec(p, k, m), spec(m), spec(m, m), spec(m, k),
+        ),
+        "pp_bwd_step": (
+            spec(B, m), spec(B, k), spec(m, m), spec(m, k), spec(B, m), spec(p, k, m),
+        ),
+        "pp_loss_step": (spec(B, m), spec(B, m), spec(B, m), spec(p, k, m)),
+        "tp_bwd_step": (spec(B, m), spec(B, m), spec(B, n)),
+        # shared
+        "mse_delta": (spec(B, m), spec(B, m), spec(B, m)),
+    }
+    return table[entry]
+
+
+def entry_fn(cfg: ArtifactConfig, entry: str):
+    """The traced callable for one entry point (tuple-returning)."""
+    if entry == "mse_delta":
+        fn = model.make_mse_delta(cfg.scale)
+    elif entry == "pp_loss_step":
+        fn = model.make_pp_loss_step(cfg.scale)
+    else:
+        fn = getattr(model, entry)
+
+    def tupled(*args):
+        out = fn(*args)
+        return out if isinstance(out, tuple) else (out,)
+
+    return tupled
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_entry(cfg: ArtifactConfig, entry: str) -> str:
+    model.use_pallas(cfg.variant == "pallas")
+    try:
+        lowered = jax.jit(entry_fn(cfg, entry)).lower(*entry_specs(cfg, entry))
+        return to_hlo_text(lowered)
+    finally:
+        model.use_pallas(False)
+
+
+def inputs_fingerprint() -> str:
+    """Hash of the compile-path sources; lets `make artifacts` skip no-ops."""
+    here = os.path.dirname(os.path.abspath(__file__))
+    h = hashlib.sha256()
+    for root, _dirs, files in sorted(os.walk(here)):
+        if "__pycache__" in root:
+            continue
+        for f in sorted(files):
+            if f.endswith(".py"):
+                with open(os.path.join(root, f), "rb") as fh:
+                    h.update(fh.read())
+    return h.hexdigest()
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    ap.add_argument("--configs", default="", help="comma-separated config names (default: all)")
+    ap.add_argument("--force", action="store_true", help="relower even if fingerprint matches")
+    args = ap.parse_args()
+
+    wanted = set(filter(None, args.configs.split(",")))
+    configs = [c for c in CONFIGS if not wanted or c.name in wanted]
+    if wanted and len(configs) != len(wanted):
+        missing = wanted - {c.name for c in configs}
+        print(f"unknown config(s): {sorted(missing)}", file=sys.stderr)
+        return 2
+
+    os.makedirs(args.out, exist_ok=True)
+    manifest_path = os.path.join(args.out, "manifest.json")
+    fp = inputs_fingerprint()
+
+    if not args.force and not wanted and os.path.exists(manifest_path):
+        with open(manifest_path) as f:
+            old = json.load(f)
+        if old.get("fingerprint") == fp:
+            print(f"artifacts up to date (fingerprint {fp[:12]}); skipping")
+            return 0
+
+    manifest = {"version": 1, "fingerprint": fp, "configs": []}
+    total = 0
+    for cfg in configs:
+        entries = {}
+        for entry in ALL_ENTRIES:
+            fname = f"{entry}__{cfg.name}.hlo.txt"
+            text = lower_entry(cfg, entry)
+            with open(os.path.join(args.out, fname), "w") as f:
+                f.write(text)
+            entries[entry] = fname
+            total += 1
+            print(f"  lowered {cfg.name:>14s} / {entry:<16s} -> {fname} ({len(text)} B)")
+        manifest["configs"].append(
+            {
+                "name": cfg.name,
+                "p": cfg.p,
+                "n": cfg.n,
+                "k": cfg.k,
+                "batch": cfg.batch,
+                "np": cfg.np_,
+                "scale": cfg.scale,
+                "variant": cfg.variant,
+                "entries": entries,
+            }
+        )
+
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {total} modules + manifest to {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,94 @@
+"""L1 structural analysis: VMEM footprint + MXU-utilization estimates per
+BlockSpec (the TPU perf proxy — interpret=True gives CPU-numpy timings only,
+so kernel optimization targets STRUCTURE; see DESIGN.md §3 and
+EXPERIMENTS.md §Perf).
+
+Run as a module to print the table:
+    python -m compile.kernels.analysis
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+# TPU v4-ish core budget used for the estimates.
+VMEM_BYTES = 16 * 1024 * 1024
+MXU_DIM = 128
+
+
+@dataclass
+class KernelEstimate:
+    name: str
+    grid: tuple
+    vmem_bytes: int
+    # Fraction of MXU lanes fed by the smallest contraction tile.
+    mxu_utilization: float
+    # HBM bytes read per grid step (double-buffered streams).
+    hbm_read_bytes: int
+
+    @property
+    def fits_vmem(self) -> bool:
+        # double buffering doubles the streamed-input footprint
+        return 2 * self.vmem_bytes <= VMEM_BYTES
+
+
+def _tile(dim: int, pref: int) -> int:
+    t = min(dim, pref)
+    while dim % t:
+        t -= 1
+    return t
+
+
+def fused_local_compress(B: int, m: int, k: int) -> KernelEstimate:
+    """One pass over y tiles feeding BOTH z=y@L and g=y@C accumulators."""
+    bB, bK = _tile(B, 64), _tile(m, MXU_DIM)
+    # resident per step: y tile + L K-slab + C K-slab + both accumulators
+    vmem = 4 * (bB * bK + bK * m + bK * k + bB * m + bB * k)
+    mxu = min(bK, MXU_DIM) / MXU_DIM * min(bB, MXU_DIM) / MXU_DIM
+    hbm = 4 * (bB * bK + bK * m + bK * k)
+    return KernelEstimate(
+        "fused_local_compress", (B // bB, m // bK), vmem, mxu, hbm
+    )
+
+
+def decompress_accum(B: int, m: int, k: int, p: int) -> KernelEstimate:
+    """Per-source accumulation in VMEM scratch: the (p-1) k-wide partial
+    products never round-trip to HBM (the GPU implementation writes each
+    decompressor output to HBM and sums)."""
+    bB = _tile(B, 64)
+    vmem = 4 * (bB * m + bB * k + k * m + m)
+    mxu = min(k, MXU_DIM) / MXU_DIM * min(bB, MXU_DIM) / MXU_DIM
+    hbm = 4 * (bB * k + k * m)
+    return KernelEstimate("decompress_accum", (B // bB, p), vmem, mxu, hbm)
+
+
+def error_compress(B: int, m: int, k: int, p: int) -> KernelEstimate:
+    bB = _tile(B, 64)
+    vmem = 4 * (bB * m + k * m + bB * k)
+    mxu = min(m, MXU_DIM) / MXU_DIM * min(bB, MXU_DIM) / MXU_DIM
+    hbm = 4 * (bB * m + k * m)
+    return KernelEstimate("error_compress", (p, B // bB), vmem, mxu, hbm)
+
+
+def analyze(B: int, m: int, k: int, p: int):
+    return [
+        fused_local_compress(B, m, k),
+        decompress_accum(B, m, k, p),
+        error_compress(B, m, k, p),
+    ]
+
+
+def main():
+    # paper-scale per-rank shapes: n=16,384 p=8 -> m=2048; Fig-6 scale m=512
+    for (B, m, k, p) in [(32, 2048, 16, 8), (32, 512, 64, 256), (16, 1024, 32, 8)]:
+        print(f"\n== B={B} m={m} k={k} p={p} ==")
+        print(f"{'kernel':>22s} {'grid':>12s} {'VMEM':>10s} {'fits':>5s} {'MXU util':>9s}")
+        for e in analyze(B, m, k, p):
+            print(
+                f"{e.name:>22s} {str(e.grid):>12s} {e.vmem_bytes/1024:>9.1f}K "
+                f"{str(e.fits_vmem):>5s} {e.mxu_utilization:>8.1%}"
+            )
+
+
+if __name__ == "__main__":
+    main()

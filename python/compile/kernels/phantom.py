@@ -1,0 +1,185 @@
+"""Pallas kernels for the phantom-parallel per-rank hot-spots (L1).
+
+Three kernels cover the paper's per-rank compute (Sec. IV):
+
+  * ``fused_local_compress``  — forward local update + compression,
+      z_loc = y @ L  and  g = y @ C  fused into ONE pass over the activation
+      tiles: y is read from HBM once and feeds both the MXU contraction with
+      L and the (skinny) contraction with C. On a real TPU this halves the
+      activation HBM traffic of the forward hot path; the paper's GPU
+      implementation pays two kernel launches + two reads.
+  * ``decompress_accum``      — forward remote update,
+      z = z_loc + sum_i g_all[i] @ D[i] + b; tiles over the n/p axis and
+      keeps the accumulator in VMEM scratch so the (p-1) small-k partial
+      products never round-trip to HBM (the small-GEMM problem the paper
+      attributes its p=256 flip-flop to; see DESIGN.md §Hardware-Adaptation).
+  * ``error_compress``        — backward error compression,
+      h_out[i] = delta @ D[i].T, the Reduce-Scatter payload of Eqn. 17.
+
+All kernels run with ``interpret=True``: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, so interpret mode is the correctness vehicle and the
+BlockSpec structure is the TPU-optimization artifact (VMEM footprint / MXU
+utilization estimates live in EXPERIMENTS.md §Perf).
+
+Grid conventions: the K-reduction dimension (n/p) is the innermost grid
+axis; outputs are accumulated in place across K steps with an @pl.when
+zero-init at step 0 — the canonical TPU matmul pattern.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+# Tile sizes. 128 matches the MXU systolic-array edge; batch tiles are
+# clamped to the actual batch. Shapes used by the coordinator are multiples
+# of these (shapes.py guarantees it); tests sweep ragged shapes through the
+# jnp reference instead.
+LANE = 128
+
+
+def _tile(dim: int, pref: int) -> int:
+    """Largest divisor of ``dim`` that is <= pref (tile must divide dim)."""
+    t = min(dim, pref)
+    while dim % t != 0:
+        t -= 1
+    return t
+
+
+# ---------------------------------------------------------------------------
+# fused local update + compression
+# ---------------------------------------------------------------------------
+
+def _fused_local_compress_kernel(y_ref, l_ref, c_ref, z_ref, g_ref, *, nsteps):
+    """Grid (B/bB, np/bK): K-step accumulation into both outputs.
+
+    y_ref: [bB, bK]  l_ref: [bK, np_]  c_ref: [bK, k]
+    z_ref: [bB, np_] g_ref: [bB, k]
+    """
+    kstep = pl.program_id(1)
+
+    @pl.when(kstep == 0)
+    def _init():
+        z_ref[...] = jnp.zeros_like(z_ref)
+        g_ref[...] = jnp.zeros_like(g_ref)
+
+    y = y_ref[...]
+    z_ref[...] += jnp.dot(y, l_ref[...], preferred_element_type=jnp.float32)
+    g_ref[...] += jnp.dot(y, c_ref[...], preferred_element_type=jnp.float32)
+    del nsteps  # documented for BlockSpec readers; grid carries it
+
+
+def fused_local_compress(y, L, C, *, b_tile=None, k_tile=None):
+    """z_loc = y @ L and g = y @ C in one fused pass (see module docstring)."""
+    B, np_ = y.shape
+    k = C.shape[1]
+    bB = b_tile or _tile(B, 64)
+    bK = k_tile or _tile(np_, LANE)
+    nsteps = np_ // bK
+    grid = (B // bB, nsteps)
+    return pl.pallas_call(
+        functools.partial(_fused_local_compress_kernel, nsteps=nsteps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bB, bK), lambda i, j: (i, j)),     # y tile
+            pl.BlockSpec((bK, np_), lambda i, j: (j, 0)),    # L K-slab
+            pl.BlockSpec((bK, k), lambda i, j: (j, 0)),      # C K-slab
+        ],
+        out_specs=[
+            pl.BlockSpec((bB, np_), lambda i, j: (i, 0)),    # z accumulator
+            pl.BlockSpec((bB, k), lambda i, j: (i, 0)),      # g accumulator
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, np_), jnp.float32),
+            jax.ShapeDtypeStruct((B, k), jnp.float32),
+        ],
+        interpret=True,
+    )(y, L, C)
+
+
+# ---------------------------------------------------------------------------
+# decompress + accumulate (remote update)
+# ---------------------------------------------------------------------------
+
+def _decompress_accum_kernel(zloc_ref, g_ref, d_ref, b_ref, z_ref, *, p):
+    """Grid (B/bB, p): accumulate one source rank's decompression per step.
+
+    zloc_ref: [bB, np_]  g_ref: [1, bB, k]  d_ref: [1, k, np_]
+    b_ref: [np_]         z_ref: [bB, np_]
+    """
+    src = pl.program_id(1)
+
+    @pl.when(src == 0)
+    def _init():
+        z_ref[...] = zloc_ref[...] + b_ref[...][None, :]
+
+    z_ref[...] += jnp.dot(
+        g_ref[0], d_ref[0], preferred_element_type=jnp.float32
+    )
+    del p
+
+
+def decompress_accum(z_loc, g_all, D, b, *, b_tile=None):
+    """z = z_loc + sum_i g_all[i] @ D[i] + b   (own slot of g_all is zero).
+
+    Returns the pre-activation z; the caller applies the activation (kept
+    separate so the same kernel serves forward and the z-stash for backward).
+    """
+    p, B, k = g_all.shape
+    np_ = z_loc.shape[1]
+    bB = b_tile or _tile(B, 64)
+    grid = (B // bB, p)
+    return pl.pallas_call(
+        functools.partial(_decompress_accum_kernel, p=p),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bB, np_), lambda i, s: (i, 0)),      # z_loc
+            pl.BlockSpec((1, bB, k), lambda i, s: (s, i, 0)),  # g_all[src]
+            pl.BlockSpec((1, k, np_), lambda i, s: (s, 0, 0)), # D[src]
+            pl.BlockSpec((np_,), lambda i, s: (0,)),           # bias
+        ],
+        out_specs=pl.BlockSpec((bB, np_), lambda i, s: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, np_), jnp.float32),
+        interpret=True,
+    )(z_loc, g_all, D, b)
+
+
+# ---------------------------------------------------------------------------
+# backward error compression
+# ---------------------------------------------------------------------------
+
+def _error_compress_kernel(delta_ref, d_ref, h_ref):
+    """Grid (p, B/bB): h[dest] = delta @ D[dest].T, one dest per grid step.
+
+    delta_ref: [bB, np_]  d_ref: [1, k, np_]  h_ref: [1, bB, k]
+    """
+    h_ref[0, ...] = jax.lax.dot_general(
+        delta_ref[...],
+        d_ref[0],
+        # contract delta's np_ axis (1) with D's np_ axis (1): delta @ D.T
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def error_compress(delta, D, *, b_tile=None):
+    """h_out[i] = delta @ D[i].T — the k-width Reduce-Scatter payload."""
+    p, k, np_ = D.shape
+    B = delta.shape[0]
+    bB = b_tile or _tile(B, 64)
+    grid = (p, B // bB)
+    return pl.pallas_call(
+        _error_compress_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bB, np_), lambda s, i: (i, 0)),      # delta
+            pl.BlockSpec((1, k, np_), lambda s, i: (s, 0, 0)), # D[dest]
+        ],
+        out_specs=pl.BlockSpec((1, bB, k), lambda s, i: (s, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((p, B, k), jnp.float32),
+        interpret=True,
+    )(delta, D)

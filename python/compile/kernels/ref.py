@@ -1,0 +1,183 @@
+"""Pure-jnp reference oracles for the phantom-parallel per-rank operators.
+
+These are the ground truth the Pallas kernels (phantom.py, tp.py) are tested
+against, and the numerically identical "fast path" that aot.py lowers for the
+Rust runtime (XLA fuses these to plain dot ops, which run much faster on the
+CPU PJRT backend than interpret-mode Pallas loops; the Pallas variants are
+lowered alongside them and exercised by tests and the --pallas artifact set).
+
+Shape conventions (batch-major, matching the Rust coordinator):
+    B  : batch size
+    np_: n / p, the per-rank shard width (``np`` shadows numpy, hence np_)
+    k  : phantom (ghost-neuron) width, k << np_
+    p  : number of ranks
+
+    y      : [B, np_]      local activation shard
+    L      : [np_, np_]    local update matrix      (paper: L_l^(j))
+    C      : [np_, k]      compressor               (paper: C_l^(j), transposed)
+    D      : [p, k, np_]   stacked decompressors    (paper: D_l^(i,j)); the
+                           slot belonging to the local rank is ZERO and its
+                           g_all slot is zeroed by the coordinator after the
+                           All-Gather, so no masking appears in the math.
+    g_all  : [p, B, k]     gathered phantom activations (own slot zeroed)
+    b      : [np_]         bias
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def relu(x):
+    return jnp.maximum(x, 0.0)
+
+
+def drelu(z):
+    """Derivative of ReLU evaluated at the pre-activation z."""
+    return (z > 0.0).astype(z.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Phantom-parallel forward (paper Eqn. 11)
+# ---------------------------------------------------------------------------
+
+def pp_fwd_local(y, L, C):
+    """Local update + compression: the per-rank forward hot-spot.
+
+    Returns (z_loc, g) where
+        z_loc = y @ L        [B, np_]   (local update)
+        g     = y @ C        [B, k]     (phantom layer, k ghost neurons)
+    """
+    return y @ L, y @ C
+
+
+def pp_fwd_combine(z_loc, g_all, D, b):
+    """Decompress-and-accumulate the gathered phantom layers.
+
+    z     = z_loc + sum_i g_all[i] @ D[i] + b     [B, np_]
+    y_out = relu(z)
+
+    The local rank's slot of g_all is zero, so the i != j restriction of
+    Eqn. (11) holds without masking.
+    Returns (y_out, z); z is kept for sigma'(z) in the backward pass.
+    """
+    z = z_loc + jnp.einsum("pbk,pkm->bm", g_all, D) + b[None, :]
+    return relu(z), z
+
+
+# ---------------------------------------------------------------------------
+# Phantom-parallel backward (paper Eqns. 15-21)
+# ---------------------------------------------------------------------------
+
+def pp_bwd_compress(delta, D):
+    """Per-destination compressed errors h (paper Eqn. 17, under-brace term).
+
+    h_out[i] = delta @ D[i].T    [p, B, k]
+
+    h_out[i] is the contribution of this rank to destination rank i; the
+    Reduce-Scatter collective sums slot i across ranks and delivers the sum
+    to rank i.
+    """
+    return jnp.einsum("bm,pkm->pbk", delta, D)
+
+
+def pp_bwd_combine(delta_next, h_sum, L, C, z_prev):
+    """Backpropagate the local error one layer (paper Eqn. 17).
+
+    delta_prev = (delta_next @ L.T + h_sum @ C.T) * relu'(z_prev)
+    """
+    return (delta_next @ L.T + h_sum @ C.T) * drelu(z_prev)
+
+
+def pp_grads(y_prev, delta, h_sum, g_all):
+    """Parameter gradients (paper Eqns. 18-21), batch-summed.
+
+    dL = y_prev.T @ delta            [np_, np_]
+    dC = y_prev.T @ h_sum            [np_, k]
+    dD[i] = g_all[i].T @ delta       [p, k, np_]  (own slot auto-zero)
+    db = sum_B delta                 [np_]
+    """
+    dL = y_prev.T @ delta
+    dC = y_prev.T @ h_sum
+    dD = jnp.einsum("pbk,bm->pkm", g_all, delta)
+    db = delta.sum(axis=0)
+    return dL, dC, dD, db
+
+
+# ---------------------------------------------------------------------------
+# Loss (sharded MSE, paper Eqns. 14-16)
+# ---------------------------------------------------------------------------
+
+def mse_delta(y_out, z, target, scale):
+    """Local shard of the additive MSE loss and its pre-activation error.
+
+    loss_local = sum((y_out - target)^2)          (rank-local partial sum;
+                                                   the coordinator divides by
+                                                   B*n after summing ranks)
+    delta_L    = 2*scale*(y_out - target)*relu'(z)   with scale = 1/(B*n)
+    """
+    diff = y_out - target
+    loss_local = jnp.sum(diff * diff)
+    delta = (2.0 * scale) * diff * drelu(z)
+    return loss_local, delta
+
+
+# ---------------------------------------------------------------------------
+# Tensor-parallel baseline (paper Sec. II-B / Table II)
+# ---------------------------------------------------------------------------
+
+def tp_fwd(y_full, W, b):
+    """TP forward: full activation (post All-Gather) times the column shard.
+
+    z = y_full @ W + b    [B, np_]    W: [n, np_]
+    Returns (y_out, z).
+    """
+    z = y_full @ W + b[None, :]
+    return relu(z), z
+
+
+def tp_bwd_partial(delta, W):
+    """TP backward partial: this rank's contribution to d y_full.
+
+    dy_full_partial = delta @ W.T    [B, n]
+    All-Reduce (or Reduce-Scatter) across ranks completes the sum.
+    """
+    return delta @ W.T
+
+
+def tp_bwd_finish(dy_shard, z_prev):
+    """Apply the activation derivative to the reduced shard."""
+    return dy_shard * drelu(z_prev)
+
+
+def tp_grads(y_full, delta):
+    """TP weight/bias gradients: dW = y_full.T @ delta, db = sum_B delta."""
+    return y_full.T @ delta, delta.sum(axis=0)
+
+
+# ---------------------------------------------------------------------------
+# Monolithic dense-equivalents (test oracles only, never lowered)
+# ---------------------------------------------------------------------------
+
+def pp_dense_layer(y_full, Ls, Cs, Ds, bs):
+    """Single-rank evaluation of one phantom layer over the FULL width.
+
+    y_full: [B, n]; Ls: [p, np_, np_]; Cs: [p, np_, k]; Ds: [p, p, k, np_]
+    (Ds[j, i] is rank j's decompressor for source rank i; Ds[j, j] == 0);
+    bs: [p, np_]. Returns (y_out_full [B, n], z_full [B, n]).
+    """
+    p, np_, _ = Ls.shape
+    B = y_full.shape[0]
+    shards = y_full.reshape(B, p, np_).transpose(1, 0, 2)       # [p, B, np_]
+    g = jnp.einsum("jbm,jmk->jbk", shards, Cs)                  # [p, B, k]
+    z = jnp.einsum("jbm,jmn->jbn", shards, Ls)                  # local update
+    z = z + jnp.einsum("ibk,jikn->jbn", g, Ds)                  # decompress
+    z = z + bs[:, None, :]
+    z_full = z.transpose(1, 0, 2).reshape(B, p * np_)
+    return relu(z_full), z_full
+
+
+def tp_dense_layer(y_full, W_full, b_full):
+    """Single-rank evaluation of one TP layer: y = relu(y @ W + b)."""
+    z = y_full @ W_full + b_full[None, :]
+    return relu(z), z

@@ -1,0 +1,56 @@
+"""Pallas kernel for the tensor-parallel baseline shard GEMM (L1).
+
+The TP per-rank forward hot-spot is z = y_full @ W + b with y_full [B, n]
+(the post-All-Gather full activation) and W [n, np_] (the column shard).
+Unlike the phantom kernels this is one large MXU-friendly GEMM — the paper's
+point is precisely that TP pays O(n^2/p) FLOPs *and* O(n) bytes on the wire
+where PP pays O(n^2/p^2 + kn/p) and O(k).
+
+Grid: (B/bB, n/bK) with K-accumulation into the output block, the same
+canonical TPU matmul pattern as phantom.fused_local_compress.
+interpret=True for CPU PJRT (see phantom.py docstring).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .phantom import LANE, _tile
+
+
+def _tp_shard_matmul_kernel(y_ref, w_ref, b_ref, z_ref):
+    """y_ref: [bB, bK]  w_ref: [bK, np_]  b_ref: [np_]  z_ref: [bB, np_]."""
+    kstep = pl.program_id(1)
+
+    @pl.when(kstep == 0)
+    def _init():
+        z_ref[...] = jnp.broadcast_to(b_ref[...][None, :], z_ref.shape)
+
+    z_ref[...] += jnp.dot(
+        y_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def tp_shard_matmul(y_full, W, b, *, b_tile=None, k_tile=None):
+    """z = y_full @ W + b over the column shard W [n, np_]."""
+    B, n = y_full.shape
+    np_ = W.shape[1]
+    bB = b_tile or _tile(B, 64)
+    bK = k_tile or _tile(n, LANE)
+    grid = (B // bB, n // bK)
+    return pl.pallas_call(
+        functools.partial(_tp_shard_matmul_kernel),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bB, bK), lambda i, j: (i, j)),
+            pl.BlockSpec((bK, np_), lambda i, j: (j, 0)),
+            pl.BlockSpec((np_,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bB, np_), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, np_), jnp.float32),
+        interpret=True,
+    )(y_full, W, b)

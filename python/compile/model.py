@@ -1,0 +1,160 @@
+"""L2: per-rank step functions for phantom-parallel and tensor-parallel FFNs.
+
+Each function here is one *collective-free* segment of a training iteration:
+the Rust coordinator executes these via PJRT and runs the collectives
+(All-Gather / Reduce-Scatter / All-Reduce / Broadcast) between them. The
+segment boundaries are exactly where the paper's Algorithm 1 places the
+custom autograd communication.
+
+Entry points lowered by aot.py (shapes are static per artifact config):
+
+  phantom parallelism (paper Sec. IV):
+    pp_fwd_local     (y, L, C)                         -> (z_loc, g)
+    pp_fwd_combine   (z_loc, g_all, D, b)              -> (y_out, z)
+    pp_bwd_compress  (delta, D)                        -> h_out [p,B,k]
+    pp_bwd_combine   (delta_next, h_sum, L, C, z_prev) -> delta_prev
+    pp_grads         (y_prev, delta, h_sum, g_all)     -> (dL, dC, dD, db)
+
+  tensor parallelism (paper Sec. II-B / Table II):
+    tp_fwd           (y_full, W, b)                    -> (y_out, z)
+    tp_bwd_partial   (delta, W)                        -> dy_full
+    tp_bwd_finish    (dy_shard, z_prev)                -> delta_prev
+    tp_grads         (y_full, delta)                   -> (dW, db)
+
+  shared:
+    make_mse_delta(scale) -> (y_out, z, target)        -> (loss_local, delta_L)
+
+Set ``use_pallas(True)`` to route the forward/backward hot-spots through the
+L1 Pallas kernels (kernels/phantom.py, kernels/tp.py); the default jnp path
+(kernels/ref.py) lowers to identical math that XLA fuses to plain dots.
+aot.py emits both variants; pytest asserts they agree.
+"""
+
+from __future__ import annotations
+
+from .kernels import phantom as pk
+from .kernels import ref
+from .kernels import tp as tpk
+
+_USE_PALLAS = False
+
+
+def use_pallas(flag: bool) -> None:
+    """Route hot-spot ops through the Pallas kernels (interpret mode)."""
+    global _USE_PALLAS
+    _USE_PALLAS = bool(flag)
+
+
+# ---------------------------------------------------------------------------
+# Phantom parallelism
+# ---------------------------------------------------------------------------
+
+def pp_fwd_local(y, L, C):
+    if _USE_PALLAS:
+        z_loc, g = pk.fused_local_compress(y, L, C)
+        return z_loc, g
+    return ref.pp_fwd_local(y, L, C)
+
+
+def pp_fwd_combine(z_loc, g_all, D, b):
+    if _USE_PALLAS:
+        z = pk.decompress_accum(z_loc, g_all, D, b)
+        return ref.relu(z), z
+    return ref.pp_fwd_combine(z_loc, g_all, D, b)
+
+
+def pp_bwd_compress(delta, D):
+    if _USE_PALLAS:
+        return pk.error_compress(delta, D)
+    return ref.pp_bwd_compress(delta, D)
+
+
+def pp_bwd_combine(delta_next, h_sum, L, C, z_prev):
+    return ref.pp_bwd_combine(delta_next, h_sum, L, C, z_prev)
+
+
+def pp_grads(y_prev, delta, h_sum, g_all):
+    return ref.pp_grads(y_prev, delta, h_sum, g_all)
+
+
+# ---------------------------------------------------------------------------
+# Tensor parallelism
+# ---------------------------------------------------------------------------
+
+def tp_fwd(y_full, W, b):
+    if _USE_PALLAS:
+        z = tpk.tp_shard_matmul(y_full, W, b)
+        return ref.relu(z), z
+    return ref.tp_fwd(y_full, W, b)
+
+
+def tp_bwd_partial(delta, W):
+    return ref.tp_bwd_partial(delta, W)
+
+
+def tp_bwd_finish(dy_shard, z_prev):
+    return ref.tp_bwd_finish(dy_shard, z_prev)
+
+
+def tp_grads(y_full, delta):
+    return ref.tp_grads(y_full, delta)
+
+
+# ---------------------------------------------------------------------------
+# Fused step entries (performance pass; see EXPERIMENTS.md §Perf)
+#
+# Adjacent collective-free segments of the schedule are fused into single
+# executables to cut PJRT call overhead: PP from 10 to 7 calls per
+# 2-layer iteration, TP from 7 to 6. Numerics are identical (pytest
+# asserts fused == unfused); the collective schedule is unchanged.
+# ---------------------------------------------------------------------------
+
+def pp_fwd_step(z_loc, g_all, D, b, L_next, C_next):
+    """fwd_combine(l) fused with fwd_local(l+1) — the inter-collective
+    segment between two forward All-Gathers."""
+    y_out, z = pp_fwd_combine(z_loc, g_all, D, b)
+    z_loc_next, g_next = pp_fwd_local(y_out, L_next, C_next)
+    return y_out, z, z_loc_next, g_next
+
+
+def pp_bwd_step(delta, h_sum, L, C, z_prev, D_prev):
+    """bwd_combine(l) fused with bwd_compress(l-1) — the inter-collective
+    segment between two backward Reduce-Scatters."""
+    delta_prev = pp_bwd_combine(delta, h_sum, L, C, z_prev)
+    h_out_prev = pp_bwd_compress(delta_prev, D_prev)
+    return delta_prev, h_out_prev
+
+
+def make_pp_loss_step(scale: float):
+    """mse_delta fused with the top layer's bwd_compress."""
+
+    def pp_loss_step(y_out, z, target, D):
+        loss_local, delta = ref.mse_delta(y_out, z, target, scale)
+        h_out = pp_bwd_compress(delta, D)
+        return loss_local, delta, h_out
+
+    return pp_loss_step
+
+
+def tp_bwd_step(dy_shard, z_prev, y_full_prev):
+    """tp_bwd_finish fused with the next layer's tp_grads."""
+    delta_prev = ref.tp_bwd_finish(dy_shard, z_prev)
+    dW, db = ref.tp_grads(y_full_prev, delta_prev)
+    return delta_prev, dW, db
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+def make_mse_delta(scale: float):
+    """MSE loss segment with the 1/(B*n) gradient scale baked in.
+
+    The scale is a compile-time constant (aot.py bakes one per artifact
+    config) so the lowered module has no scalar input plumbing.
+    """
+
+    def mse_delta(y_out, z, target):
+        return ref.mse_delta(y_out, z, target, scale)
+
+    return mse_delta

@@ -1,0 +1,93 @@
+"""Artifact configuration set shared by aot.py, the tests, and the Makefile.
+
+A config is one static-shape instantiation of the per-rank step functions:
+(p ranks, global width n, ghost width k, batch B). The Rust runtime selects
+a config by these four integers plus the kernel variant ("jnp" — the
+XLA-fused fast path — or "pallas" — the L1 interpret-mode kernels).
+
+Keep this list in sync with rust/src/config/presets.rs (the Rust side only
+*reads* the manifest, so adding a config here is enough to make it loadable).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class ArtifactConfig:
+    name: str
+    p: int          # rank count
+    n: int          # global layer width (n % p == 0)
+    k: int          # ghost neurons per phantom layer (k < n/p, Eqn. 8)
+    batch: int      # per-iteration batch size
+    variant: str    # "jnp" | "pallas"
+
+    @property
+    def np_(self) -> int:
+        return self.n // self.p
+
+    @property
+    def scale(self) -> float:
+        """Gradient scale for the global-mean MSE: 1/(B*n)."""
+        return 1.0 / (self.batch * self.n)
+
+    def validate(self) -> None:
+        assert self.n % self.p == 0, f"{self.name}: n must divide by p"
+        assert self.k < self.np_, f"{self.name}: Eqn. 8 requires k < n/p"
+        assert self.variant in ("jnp", "pallas")
+
+
+def _cfg(name, p, n, k, batch, variant="jnp"):
+    c = ArtifactConfig(name, p, n, k, batch, variant)
+    c.validate()
+    return c
+
+
+# The default artifact set. Names encode the role:
+#   tiny*      — unit/integration test shapes (both variants)
+#   quickstart — examples/quickstart.rs
+#   small*     — Table-I / Fig-7 style measured convergence sweeps
+#   e2e        — examples/train_ffn_e2e.rs (~134M-param TP-equivalent FFN)
+CONFIGS = [
+    _cfg("tiny", p=4, n=64, k=4, batch=8),
+    _cfg("tiny_pallas", p=4, n=64, k=4, batch=8, variant="pallas"),
+    _cfg("tiny_p2", p=2, n=32, k=4, batch=4),
+    _cfg("tiny_p2_pallas", p=2, n=32, k=4, batch=4, variant="pallas"),
+    _cfg("quickstart", p=4, n=256, k=8, batch=16),
+    # measured convergence sweep: fixed n=1024, varying p and k
+    _cfg("small", p=8, n=1024, k=16, batch=32),
+    _cfg("small_k4", p=8, n=1024, k=4, batch=32),
+    _cfg("small_k8", p=8, n=1024, k=8, batch=32),
+    _cfg("small_k32", p=8, n=1024, k=32, batch=32),
+    _cfg("small_p2", p=2, n=1024, k=16, batch=32),
+    _cfg("small_p4", p=4, n=1024, k=16, batch=32),
+    # medium: Fig-5b-style measured anchor (n=2048)
+    _cfg("medium", p=8, n=2048, k=16, batch=32),
+    # end-to-end driver: TP model is 2*8192^2 = 134M parameters
+    _cfg("e2e", p=8, n=8192, k=32, batch=16),
+]
+
+BY_NAME = {c.name: c for c in CONFIGS}
+
+# Entry points lowered per config (function name in compile.model).
+PP_ENTRIES = [
+    "pp_fwd_local",
+    "pp_fwd_combine",
+    "pp_bwd_compress",
+    "pp_bwd_combine",
+    "pp_grads",
+    # fused inter-collective segments (perf pass; EXPERIMENTS.md §Perf)
+    "pp_fwd_step",
+    "pp_bwd_step",
+    "pp_loss_step",
+]
+TP_ENTRIES = [
+    "tp_fwd",
+    "tp_bwd_partial",
+    "tp_bwd_finish",
+    "tp_grads",
+    "tp_bwd_step",
+]
+SHARED_ENTRIES = ["mse_delta"]
+ALL_ENTRIES = PP_ENTRIES + TP_ENTRIES + SHARED_ENTRIES

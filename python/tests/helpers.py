@@ -1,0 +1,233 @@
+"""Shared test utilities: parameter construction and a numpy-side simulation
+of the p-rank coordinator (collectives included) built from the per-rank
+step functions. This mirrors rust/src/coordinator exactly; the Rust
+integration tests assert the same invariants end-to-end through PJRT.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from compile.kernels import ref
+from compile import model
+
+
+def make_pp_params(rng, L, p, m, k, scale=0.2):
+    """Random phantom-parallel parameters.
+
+    Returns dict with:
+      Ls: [L, p, m, m]   Cs: [L, p, m, k]   bs: [L, p, m]
+      Ds: [L, p, p, k, m]  (Ds[l, j, i] = rank j's decompressor for source i,
+                            Ds[l, j, j] = 0)
+    """
+    Ls = rng.normal(size=(L, p, m, m)).astype(np.float32) * scale / np.sqrt(m)
+    Cs = rng.normal(size=(L, p, m, k)).astype(np.float32) * scale / np.sqrt(m)
+    Ds = rng.normal(size=(L, p, p, k, m)).astype(np.float32) * scale / np.sqrt(k)
+    for l in range(L):
+        for j in range(p):
+            Ds[l, j, j] = 0.0
+    bs = rng.normal(size=(L, p, m)).astype(np.float32) * 0.01
+    return {"Ls": Ls, "Cs": Cs, "Ds": Ds, "bs": bs}
+
+
+def make_tp_params(rng, L, p, n, scale=0.2):
+    """Random TP parameters: Ws: [L, n, n] (column shard j = W[:, j*m:(j+1)*m]),
+    bs: [L, n]."""
+    Ws = rng.normal(size=(L, n, n)).astype(np.float32) * scale / np.sqrt(n)
+    bs = rng.normal(size=(L, n)).astype(np.float32) * 0.01
+    return {"Ws": Ws, "bs": bs}
+
+
+def shard(x, p):
+    """[B, n] -> list of p shards [B, n/p]."""
+    return np.split(np.asarray(x), p, axis=1)
+
+
+def unshard(parts):
+    return np.concatenate(parts, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Simulated p-rank phantom-parallel iteration (fwd + bwd)
+# ---------------------------------------------------------------------------
+
+def pp_forward_sim(params, x):
+    """Run the p-rank PP forward using the step functions + numpy collectives.
+
+    Returns (y_out_full, stash) where stash holds per-layer, per-rank
+    activations needed for backward: ys[l][j], zs[l][j], g_alls[l][j].
+    """
+    Ls, Cs, Ds, bs = params["Ls"], params["Cs"], params["Ds"], params["bs"]
+    L, p = Ls.shape[0], Ls.shape[1]
+    ys = [shard(x, p)]        # ys[0] = input shards
+    zs, g_alls = [], []
+    for l in range(L):
+        zlocs, gs = [], []
+        for j in range(p):
+            z_loc, g = model.pp_fwd_local(
+                jnp.asarray(ys[l][j]), jnp.asarray(Ls[l, j]), jnp.asarray(Cs[l, j])
+            )
+            zlocs.append(np.asarray(z_loc))
+            gs.append(np.asarray(g))
+        gathered = np.stack(gs)                       # All-Gather [p, B, k]
+        y_next, z_next, galls = [], [], []
+        for j in range(p):
+            g_all = gathered.copy()
+            g_all[j] = 0.0                            # own slot zeroed
+            y_out, z = model.pp_fwd_combine(
+                jnp.asarray(zlocs[j]), jnp.asarray(g_all),
+                jnp.asarray(Ds[l, j]), jnp.asarray(bs[l, j]),
+            )
+            y_next.append(np.asarray(y_out))
+            z_next.append(np.asarray(z))
+            galls.append(g_all)
+        ys.append(y_next)
+        zs.append(z_next)
+        g_alls.append(galls)
+    return unshard(ys[-1]), {"ys": ys, "zs": zs, "g_alls": g_alls}
+
+
+def pp_backward_sim(params, stash, target):
+    """Run the p-rank PP backward; returns (loss, grads) with grads shaped
+    like params. Loss is the global mean((y-t)^2)."""
+    Ls, Cs, Ds, bs = params["Ls"], params["Cs"], params["Ds"], params["bs"]
+    L, p = Ls.shape[0], Ls.shape[1]
+    ys, zs, g_alls = stash["ys"], stash["zs"], stash["g_alls"]
+    B = ys[0][0].shape[0]
+    n = p * ys[0][0].shape[1]
+    scale = 1.0 / (B * n)
+    t_shards = shard(target, p)
+
+    mse = model.make_mse_delta(scale)
+    deltas, loss_total = [], 0.0
+    for j in range(p):
+        ll, d = mse(
+            jnp.asarray(ys[L][j]), jnp.asarray(zs[L - 1][j]), jnp.asarray(t_shards[j])
+        )
+        loss_total += float(ll)
+        deltas.append(np.asarray(d))
+    loss = loss_total * scale
+
+    grads = {k: np.zeros_like(v) for k, v in params.items()}
+    for l in range(L - 1, -1, -1):
+        # error compression + Reduce-Scatter
+        h_outs = [
+            np.asarray(model.pp_bwd_compress(jnp.asarray(deltas[i]), jnp.asarray(Ds[l, i])))
+            for i in range(p)
+        ]
+        h_sums = [sum(h_outs[i][j] for i in range(p)) for j in range(p)]
+        # gradients
+        for j in range(p):
+            dL, dC, dD, db = model.pp_grads(
+                jnp.asarray(ys[l][j]), jnp.asarray(deltas[j]),
+                jnp.asarray(h_sums[j]), jnp.asarray(g_alls[l][j]),
+            )
+            grads["Ls"][l, j] = np.asarray(dL)
+            grads["Cs"][l, j] = np.asarray(dC)
+            # dD from pp_grads is [p, k, m] = d/dD[j, i] for each source i
+            grads["Ds"][l, j] = np.asarray(dD)
+            grads["bs"][l, j] = np.asarray(db)
+        # propagate delta to layer l-1 (skip below the first layer)
+        if l > 0:
+            deltas = [
+                np.asarray(model.pp_bwd_combine(
+                    jnp.asarray(deltas[j]), jnp.asarray(h_sums[j]),
+                    jnp.asarray(Ls[l, j]), jnp.asarray(Cs[l, j]),
+                    jnp.asarray(zs[l - 1][j]),
+                ))
+                for j in range(p)
+            ]
+    return loss, grads
+
+
+# ---------------------------------------------------------------------------
+# Simulated p-rank TP iteration
+# ---------------------------------------------------------------------------
+
+def tp_forward_sim(params, x, p):
+    Ws, bs = params["Ws"], params["bs"]
+    L, n = Ws.shape[0], Ws.shape[1]
+    m = n // p
+    ys = [shard(x, p)]
+    zs = []
+    for l in range(L):
+        y_full = unshard(ys[l])                       # All-Gather
+        y_next, z_next = [], []
+        for j in range(p):
+            W = Ws[l][:, j * m:(j + 1) * m]
+            y_out, z = model.tp_fwd(
+                jnp.asarray(y_full), jnp.asarray(W), jnp.asarray(bs[l, j * m:(j + 1) * m])
+            )
+            y_next.append(np.asarray(y_out))
+            z_next.append(np.asarray(z))
+        ys.append(y_next)
+        zs.append(z_next)
+    return unshard(ys[-1]), {"ys": ys, "zs": zs}
+
+
+def tp_backward_sim(params, stash, target, p):
+    Ws, bs = params["Ws"], params["bs"]
+    L, n = Ws.shape[0], Ws.shape[1]
+    m = n // p
+    ys, zs = stash["ys"], stash["zs"]
+    B = ys[0][0].shape[0]
+    scale = 1.0 / (B * n)
+    t_shards = shard(target, p)
+
+    mse = model.make_mse_delta(scale)
+    deltas, loss_total = [], 0.0
+    for j in range(p):
+        ll, d = mse(
+            jnp.asarray(ys[L][j]), jnp.asarray(zs[L - 1][j]), jnp.asarray(t_shards[j])
+        )
+        loss_total += float(ll)
+        deltas.append(np.asarray(d))
+    loss = loss_total * scale
+
+    grads = {"Ws": np.zeros_like(Ws), "bs": np.zeros_like(bs)}
+    for l in range(L - 1, -1, -1):
+        y_full = unshard(ys[l])
+        for j in range(p):
+            dW, db = model.tp_grads(jnp.asarray(y_full), jnp.asarray(deltas[j]))
+            grads["Ws"][l][:, j * m:(j + 1) * m] = np.asarray(dW)
+            grads["bs"][l][j * m:(j + 1) * m] = np.asarray(db)
+        if l > 0:
+            # partial dy_full per rank, All-Reduce, slice own shard, * relu'
+            partials = [
+                np.asarray(model.tp_bwd_partial(
+                    jnp.asarray(deltas[j]), jnp.asarray(Ws[l][:, j * m:(j + 1) * m])
+                ))
+                for j in range(p)
+            ]
+            dy_full = sum(partials)                   # All-Reduce
+            deltas = [
+                np.asarray(model.tp_bwd_finish(
+                    jnp.asarray(dy_full[:, j * m:(j + 1) * m]),
+                    jnp.asarray(zs[l - 1][j]),
+                ))
+                for j in range(p)
+            ]
+    return loss, grads
+
+
+# ---------------------------------------------------------------------------
+# Dense oracles over the same parameters
+# ---------------------------------------------------------------------------
+
+def pp_dense_forward(params, x):
+    Ls, Cs, Ds, bs = params["Ls"], params["Cs"], params["Ds"], params["bs"]
+    y = jnp.asarray(x)
+    for l in range(Ls.shape[0]):
+        y, _ = ref.pp_dense_layer(
+            y, jnp.asarray(Ls[l]), jnp.asarray(Cs[l]), jnp.asarray(Ds[l]), jnp.asarray(bs[l])
+        )
+    return np.asarray(y)
+
+
+def tp_dense_forward(params, x):
+    Ws, bs = params["Ws"], params["bs"]
+    y = jnp.asarray(x)
+    for l in range(Ws.shape[0]):
+        y, _ = ref.tp_dense_layer(y, jnp.asarray(Ws[l]), jnp.asarray(bs[l]))
+    return np.asarray(y)

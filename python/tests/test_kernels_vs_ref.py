@@ -1,0 +1,111 @@
+"""L1 gate: Pallas kernels (interpret mode) vs the pure-jnp oracle.
+
+Hypothesis sweeps the kernels over shapes (batch, shard width, ghost width,
+rank count) and input dtypes, asserting allclose against kernels/ref.py.
+This is the CORE correctness signal for the L1 layer.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import phantom as pk
+from compile.kernels import ref
+from compile.kernels import tp as tpk
+
+# Interpret-mode Pallas is slow; keep hypothesis example counts moderate and
+# shapes small. Structure (tiling, accumulation order) is shape-independent.
+COMMON = dict(deadline=None, max_examples=25)
+
+dims = st.integers(min_value=1, max_value=24)
+ranks = st.integers(min_value=2, max_value=5)
+ghosts = st.integers(min_value=1, max_value=8)
+import ml_dtypes
+bfloat16 = ml_dtypes.bfloat16
+dtypes = st.sampled_from([np.float32, bfloat16])
+
+
+def _rand(rng, *shape, dtype=np.float32):
+    return rng.normal(size=shape).astype(np.float32).astype(dtype)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == bfloat16 else dict(rtol=2e-5, atol=2e-5)
+
+
+@settings(**COMMON)
+@given(B=dims, m=dims, k=ghosts, dtype=dtypes, seed=st.integers(0, 2**31 - 1))
+def test_fused_local_compress_matches_ref(B, m, k, dtype, seed):
+    rng = np.random.default_rng(seed)
+    y = _rand(rng, B, m, dtype=dtype)
+    L = _rand(rng, m, m, dtype=dtype)
+    C = _rand(rng, m, k, dtype=dtype)
+    z_pal, g_pal = pk.fused_local_compress(jnp.asarray(y), jnp.asarray(L), jnp.asarray(C))
+    z_ref, g_ref = ref.pp_fwd_local(
+        jnp.asarray(y, jnp.float32), jnp.asarray(L, jnp.float32), jnp.asarray(C, jnp.float32)
+    )
+    np.testing.assert_allclose(np.asarray(z_pal), np.asarray(z_ref), **_tol(dtype))
+    np.testing.assert_allclose(np.asarray(g_pal), np.asarray(g_ref), **_tol(dtype))
+
+
+@settings(**COMMON)
+@given(B=dims, m=dims, k=ghosts, p=ranks, seed=st.integers(0, 2**31 - 1))
+def test_decompress_accum_matches_ref(B, m, k, p, seed):
+    rng = np.random.default_rng(seed)
+    z_loc = _rand(rng, B, m)
+    g_all = _rand(rng, p, B, k)
+    g_all[0] = 0.0  # own-slot convention
+    D = _rand(rng, p, k, m)
+    b = _rand(rng, m)
+    z_pal = pk.decompress_accum(
+        jnp.asarray(z_loc), jnp.asarray(g_all), jnp.asarray(D), jnp.asarray(b)
+    )
+    _y, z_ref = ref.pp_fwd_combine(
+        jnp.asarray(z_loc), jnp.asarray(g_all), jnp.asarray(D), jnp.asarray(b)
+    )
+    np.testing.assert_allclose(np.asarray(z_pal), np.asarray(z_ref), rtol=2e-5, atol=2e-5)
+
+
+@settings(**COMMON)
+@given(B=dims, m=dims, k=ghosts, p=ranks, seed=st.integers(0, 2**31 - 1))
+def test_error_compress_matches_ref(B, m, k, p, seed):
+    rng = np.random.default_rng(seed)
+    delta = _rand(rng, B, m)
+    D = _rand(rng, p, k, m)
+    h_pal = pk.error_compress(jnp.asarray(delta), jnp.asarray(D))
+    h_ref = ref.pp_bwd_compress(jnp.asarray(delta), jnp.asarray(D))
+    np.testing.assert_allclose(np.asarray(h_pal), np.asarray(h_ref), rtol=2e-5, atol=2e-5)
+
+
+@settings(**COMMON)
+@given(B=dims, n=st.integers(2, 32), p=ranks, seed=st.integers(0, 2**31 - 1))
+def test_tp_shard_matmul_matches_ref(B, n, p, seed):
+    rng = np.random.default_rng(seed)
+    m = max(1, n // p)
+    y = _rand(rng, B, n)
+    W = _rand(rng, n, m)
+    b = _rand(rng, m)
+    z_pal = tpk.tp_shard_matmul(jnp.asarray(y), jnp.asarray(W), jnp.asarray(b))
+    _y, z_ref = ref.tp_fwd(jnp.asarray(y), jnp.asarray(W), jnp.asarray(b))
+    np.testing.assert_allclose(np.asarray(z_pal), np.asarray(z_ref), rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("B,m,k", [(8, 16, 4), (4, 128, 8), (16, 64, 16)])
+def test_fused_kernel_mxu_aligned_shapes(B, m, k):
+    """The artifact-config shapes (multiples of the tile sizes) in one place."""
+    rng = np.random.default_rng(0)
+    y, L, C = _rand(rng, B, m), _rand(rng, m, m), _rand(rng, m, k)
+    z_pal, g_pal = pk.fused_local_compress(jnp.asarray(y), jnp.asarray(L), jnp.asarray(C))
+    z_ref, g_ref = ref.pp_fwd_local(jnp.asarray(y), jnp.asarray(L), jnp.asarray(C))
+    np.testing.assert_allclose(np.asarray(z_pal), np.asarray(z_ref), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(g_pal), np.asarray(g_ref), rtol=1e-5, atol=1e-5)
+
+
+def test_tile_helper_divides():
+    for dim in range(1, 300):
+        t = pk._tile(dim, 128)
+        assert 1 <= t <= min(dim, 128)
+        assert dim % t == 0

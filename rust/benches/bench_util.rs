@@ -1,0 +1,54 @@
+//! Shared micro-benchmark harness (criterion substitute; the offline crate
+//! set has no criterion). Provides warmup + repeated timing with
+//! mean/std/p50 reporting through util::stats.
+
+use std::time::Instant;
+
+use phantom::util::stats::{summarize, Summary};
+use phantom::util::table::{fmt_secs, Table};
+
+/// Time `f` for `iters` measured runs after `warmup` runs; returns Summary
+/// of per-run seconds.
+pub fn time_it<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Summary {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    summarize(&samples)
+}
+
+/// A bench-table accumulator.
+pub struct Bench {
+    table: Table,
+}
+
+impl Bench {
+    pub fn new(title: &str) -> Bench {
+        Bench {
+            table: Table::new(title, &["case", "mean", "p50", "p95", "std", "runs"]),
+        }
+    }
+
+    pub fn case<F: FnMut()>(&mut self, name: &str, warmup: usize, iters: usize, f: F) {
+        let s = time_it(warmup, iters, f);
+        self.table.row(vec![
+            name.to_string(),
+            fmt_secs(s.mean),
+            fmt_secs(s.p50),
+            fmt_secs(s.p95),
+            fmt_secs(s.std),
+            s.n.to_string(),
+        ]);
+        eprintln!("  {name}: mean {}", fmt_secs(s.mean));
+    }
+
+    pub fn finish(self) {
+        print!("{}", self.table.markdown());
+        println!();
+    }
+}

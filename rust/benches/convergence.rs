@@ -1,0 +1,47 @@
+//! `cargo bench` target: the MEASURED paper artifacts — the fixed-loss
+//! convergence sweep behind Fig 7a/7b/7c and Table I. Trains 9 real models
+//! (TP and PP across p in {2,4,8} and k in {4..32}) to a common loss on the
+//! simulated cluster via PJRT. Takes a few minutes.
+//!
+//! Skipped gracefully when artifacts are missing (`make artifacts`).
+
+use phantom::experiments::fig7::{convergence_sweep, fig7a, fig7b, fig7c, table1};
+use phantom::runtime::{default_artifact_dir, ExecServer};
+
+fn main() {
+    let dir = default_artifact_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP convergence bench: no artifacts at {}", dir.display());
+        return;
+    }
+    let server = match ExecServer::start(&dir) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("SKIP convergence bench: {e:#}");
+            return;
+        }
+    };
+    eprintln!("running the fixed-loss convergence sweep (9 training runs)...");
+    let t0 = std::time::Instant::now();
+    let sweep = match convergence_sweep(&server) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("convergence sweep failed: {e:#}");
+            std::process::exit(1);
+        }
+    };
+    eprintln!(
+        "sweep done in {:.1}s real time; lambda = {:.6}",
+        t0.elapsed().as_secs_f64(),
+        sweep.target_loss
+    );
+    for f in [fig7a, fig7b, fig7c, table1] {
+        match f(&sweep) {
+            Ok(r) => print!("{}", r.render_markdown()),
+            Err(e) => {
+                eprintln!("render failed: {e:#}");
+                std::process::exit(1);
+            }
+        }
+    }
+}

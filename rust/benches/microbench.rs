@@ -1,0 +1,116 @@
+//! `cargo bench` target: substrate micro-benchmarks for the §Perf pass —
+//! the L3 hot paths: collective fabric round-trips, tensor reshuffles on
+//! the critical path, PJRT call overhead, and JSON/manifest parsing.
+
+mod bench_util;
+
+use std::sync::Arc;
+use std::thread;
+
+use bench_util::Bench;
+use phantom::comm::Fabric;
+use phantom::energy::EnergyLedger;
+use phantom::runtime::{default_artifact_dir, ExecServer};
+use phantom::simnet::NetworkProfile;
+use phantom::tensor::Tensor;
+use phantom::util::json::Json;
+use phantom::util::prng::Prng;
+
+fn bench_collectives() {
+    let mut b = Bench::new("L3 microbench — collective fabric (real thread rendezvous)");
+    for (p, floats) in [(4usize, 512usize), (8, 512), (8, 16_384)] {
+        b.case(&format!("all_gather p={p} m={floats}"), 3, 30, || {
+            let eps = Fabric::new(p, NetworkProfile::frontier());
+            let handles: Vec<_> = eps
+                .into_iter()
+                .map(|mut ep| {
+                    thread::spawn(move || {
+                        let mut led = EnergyLedger::new();
+                        for _ in 0..8 {
+                            ep.all_gather(Tensor::zeros(&[floats]), &mut led).unwrap();
+                        }
+                    })
+                })
+                .collect();
+            for h in handles {
+                h.join().unwrap();
+            }
+        });
+    }
+    b.finish();
+}
+
+fn bench_tensor_ops() {
+    let mut rng = Prng::new(1);
+    let stacked = Tensor::randn(&[8, 32, 256], 1.0, &mut rng);
+    let wide = Tensor::randn(&[32, 2048], 1.0, &mut rng);
+    let mut b = Bench::new("L3 microbench — tensor reshuffles on the iteration path");
+    b.case("concat_shards_stacked [8,32,256]", 10, 200, || {
+        let _ = stacked.concat_shards_stacked().unwrap();
+    });
+    b.case("col_shards p=8 [32,2048]", 10, 200, || {
+        let _ = wide.col_shards(8).unwrap();
+    });
+    b.case("col_slice [32,2048]->256", 10, 200, || {
+        let _ = wide.col_slice(256, 256).unwrap();
+    });
+    let a = Tensor::randn(&[128, 128], 1.0, &mut rng);
+    let c = Tensor::randn(&[128, 128], 1.0, &mut rng);
+    b.case("reference matmul 128^3", 5, 50, || {
+        let _ = a.matmul(&c).unwrap();
+    });
+    b.finish();
+}
+
+fn bench_pjrt() {
+    let dir = default_artifact_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP pjrt microbench: no artifacts");
+        return;
+    }
+    let server = ExecServer::start(&dir).expect("server");
+    let handle = server.handle();
+    let m = server.manifest.config("tiny").unwrap().clone();
+    let mut rng = Prng::new(2);
+    let y = Tensor::randn(&[m.batch, m.np], 1.0, &mut rng);
+    let l = Tensor::randn(&[m.np, m.np], 1.0, &mut rng);
+    let c = Tensor::randn(&[m.np, m.k], 1.0, &mut rng);
+    let mut b = Bench::new("Runtime microbench — PJRT execute round-trip (tiny shapes)");
+    b.case("pp_fwd_local tiny (exec+transfer)", 5, 100, || {
+        let _ = handle
+            .execute("tiny", "pp_fwd_local", vec![y.clone(), l.clone(), c.clone()])
+            .unwrap();
+    });
+    b.finish();
+}
+
+fn bench_json() {
+    let manifest_path = default_artifact_dir().join("manifest.json");
+    let text = std::fs::read_to_string(&manifest_path).unwrap_or_else(|_| {
+        // fall back to a synthetic blob
+        let rows: Vec<Json> = (0..200)
+            .map(|i| {
+                Json::obj(vec![
+                    ("name", Json::str(format!("cfg{i}"))),
+                    ("p", Json::int(8)),
+                    ("vals", Json::arr((0..20).map(Json::int).collect())),
+                ])
+            })
+            .collect();
+        Json::arr(rows).pretty()
+    });
+    let mut b = Bench::new("Util microbench — JSON parse (manifest-scale)");
+    let text = Arc::new(text);
+    let t2 = text.clone();
+    b.case(&format!("parse {} bytes", text.len()), 10, 200, move || {
+        let _ = Json::parse(&t2).unwrap();
+    });
+    b.finish();
+}
+
+fn main() {
+    bench_collectives();
+    bench_tensor_ops();
+    bench_pjrt();
+    bench_json();
+}

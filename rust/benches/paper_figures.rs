@@ -1,0 +1,18 @@
+//! `cargo bench` target: regenerate every MODELED paper artifact
+//! (Fig 5a/5b/5c, Fig 6, Table III) and print the tables. The measured
+//! artifacts (Fig 7a/b/c, Table I) live in benches/convergence.rs.
+
+use phantom::experiments;
+
+fn main() {
+    for id in ["fig5a", "fig5b", "fig5c", "fig6", "table3"] {
+        eprintln!("== {id} ==");
+        match experiments::run(id, None) {
+            Ok(r) => print!("{}", r.render_markdown()),
+            Err(e) => {
+                eprintln!("{id} failed: {e:#}");
+                std::process::exit(1);
+            }
+        }
+    }
+}

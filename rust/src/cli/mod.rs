@@ -1,0 +1,151 @@
+//! Hand-rolled CLI: flag parsing + subcommand dispatch for the `phantom`
+//! launcher (the offline crate set has no clap).
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+/// Parsed command line: positionals + `--key value` / `--flag` options.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from raw argv (excluding argv[0]). `--key value` and
+    /// `--key=value` both work; a `--key` followed by another option or
+    /// nothing is a boolean flag.
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(rest) = tok.strip_prefix("--") {
+                if rest.is_empty() {
+                    bail!("bare '--' is not supported");
+                }
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    out.options.insert(rest.to_string(), v);
+                } else {
+                    out.flags.push(rest.to_string());
+                }
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn opt_parse<T: std::str::FromStr>(&self, name: &str) -> Result<Option<T>>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.opt(name) {
+            None => Ok(None),
+            Some(s) => s
+                .parse::<T>()
+                .map(Some)
+                .map_err(|e| anyhow!("--{name} {s}: {e}")),
+        }
+    }
+
+    pub fn require(&self, name: &str) -> Result<&str> {
+        self.opt(name).ok_or_else(|| anyhow!("missing required option --{name}"))
+    }
+
+    /// Reject unknown options (typo guard). `known` lists valid option and
+    /// flag names.
+    pub fn check_known(&self, known: &[&str]) -> Result<()> {
+        for k in self.options.keys().chain(self.flags.iter()) {
+            if !known.contains(&k.as_str()) {
+                bail!("unknown option --{k} (valid: {})", known.join(", "));
+            }
+        }
+        Ok(())
+    }
+}
+
+pub const USAGE: &str = "\
+phantom — phantom-parallelism training system (Seal et al., 2025 reproduction)
+
+USAGE:
+    phantom <command> [options]
+
+COMMANDS:
+    train        Train an FFN on the simulated cluster (measured mode)
+                   --preset <name>        artifact preset (tiny|quickstart|small|...)
+                   --mode <tp|pp>         parallelism strategy    [pp]
+                   --iters <N>            iteration cap           [preset default]
+                   --target-loss <x>      stop at this loss
+                   --lr <x>               SGD learning rate       [0.05]
+                   --optimizer <sgd|momentum|adam>
+                   --seed <n>             data/init seed
+                   --out <file.json>      write the full report as JSON
+    experiment   Regenerate a paper table/figure
+                   <id|all>               fig5a fig5b fig5c fig6 fig7a fig7b
+                                          fig7c table1 table3
+                   --out-dir <dir>        write markdown+json per experiment
+    predict      One-shot analytic prediction (Frontier scale)
+                   --n <n> --p <p> --k <k> [--layers 2] [--batch 32]
+    inspect      List artifact configs in the manifest
+    fit-comm     Fit the collective model (Table III) and print constants
+    help         Show this text
+";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse(s.iter().map(|x| x.to_string())).unwrap()
+    }
+
+    #[test]
+    fn parses_positional_options_flags() {
+        let a = parse(&["train", "--mode", "pp", "--iters=30", "--verbose"]);
+        assert_eq!(a.positional, vec!["train"]);
+        assert_eq!(a.opt("mode"), Some("pp"));
+        assert_eq!(a.opt_parse::<usize>("iters").unwrap(), Some(30));
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("other"));
+    }
+
+    #[test]
+    fn option_value_starting_with_dashes_via_equals() {
+        let a = parse(&["x", "--name=--weird"]);
+        assert_eq!(a.opt("name"), Some("--weird"));
+    }
+
+    #[test]
+    fn trailing_option_is_flag() {
+        let a = parse(&["x", "--dry-run"]);
+        assert!(a.flag("dry-run"));
+    }
+
+    #[test]
+    fn require_and_unknown() {
+        let a = parse(&["x", "--good", "1"]);
+        assert_eq!(a.require("good").unwrap(), "1");
+        assert!(a.require("absent").is_err());
+        assert!(a.check_known(&["good"]).is_ok());
+        assert!(a.check_known(&["other"]).is_err());
+    }
+
+    #[test]
+    fn bad_parse_reports() {
+        let a = parse(&["x", "--n", "abc"]);
+        assert!(a.opt_parse::<usize>("n").is_err());
+    }
+}

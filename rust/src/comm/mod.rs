@@ -1,0 +1,551 @@
+//! In-memory collective communication fabric (the RCCL substitute).
+//!
+//! `Fabric::new(p, profile)` hands out one `Endpoint` per rank thread.
+//! Collectives rendezvous in shared memory with synchronous semantics: all
+//! ranks must call the same collective in the same order (SPMD), the last
+//! arriver computes the combined result, and every participant's virtual
+//! clock advances to
+//!
+//! ```text
+//! t_after = max_i(t_arrive_i) + comm_time(m, p)
+//! ```
+//!
+//! where `comm_time` is the paper's Eqn. (26) model with Table III constants
+//! (`simnet`). The wait until the slowest peer arrives is charged as Idle
+//! (static power B); driving the collective is charged as Communicate (also
+//! B — the paper folds communication into the static-draw coefficient).
+//!
+//! Message-size accounting follows Table II: the `m` fed to the model is the
+//! per-rank payload in floats (All-Gather: contribution size; Reduce-Scatter:
+//! slot size; All-Reduce / Broadcast: full tensor size).
+
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use anyhow::{anyhow, Result};
+
+use crate::energy::{Activity, EnergyLedger};
+use crate::simnet::{Collective, NetworkProfile};
+use crate::tensor::Tensor;
+
+/// Rendezvous timeout: a mis-sequenced collective (deadlock) fails loudly
+/// instead of hanging the test suite.
+const RENDEZVOUS_TIMEOUT: Duration = Duration::from_secs(60);
+
+struct ExchangeState {
+    gen: u64,
+    deposits: Vec<Option<(Tensor, f64)>>,
+    count: usize,
+    ready: bool,
+    results: Vec<Option<Tensor>>,
+    max_clock: f64,
+    pickups: usize,
+    /// Set by the first rank of a round; all others must match (SPMD check).
+    op: Option<&'static str>,
+    poisoned: bool,
+}
+
+struct Shared {
+    state: Mutex<ExchangeState>,
+    cv: Condvar,
+    p: usize,
+}
+
+/// Per-endpoint traffic statistics.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct CommStats {
+    pub all_gathers: u64,
+    pub reduce_scatters: u64,
+    pub all_reduces: u64,
+    pub broadcasts: u64,
+    pub barriers: u64,
+    /// Total floats counted as message size m across collectives.
+    pub floats_moved: u64,
+    /// Total modeled communication seconds.
+    pub comm_s: f64,
+}
+
+impl CommStats {
+    pub fn collectives(&self) -> u64 {
+        self.all_gathers + self.reduce_scatters + self.all_reduces + self.broadcasts
+    }
+}
+
+/// One rank's handle onto the fabric. Moves into the rank's thread.
+pub struct Endpoint {
+    pub rank: usize,
+    pub p: usize,
+    shared: Arc<Shared>,
+    profile: NetworkProfile,
+    pub stats: CommStats,
+}
+
+/// The fabric constructor.
+pub struct Fabric;
+
+impl Fabric {
+    pub fn new(p: usize, profile: NetworkProfile) -> Vec<Endpoint> {
+        assert!(p >= 1);
+        let shared = Arc::new(Shared {
+            state: Mutex::new(ExchangeState {
+                gen: 0,
+                deposits: (0..p).map(|_| None).collect(),
+                count: 0,
+                ready: false,
+                results: (0..p).map(|_| None).collect(),
+                max_clock: 0.0,
+                pickups: 0,
+                op: None,
+                poisoned: false,
+            }),
+            cv: Condvar::new(),
+            p,
+        });
+        (0..p)
+            .map(|rank| Endpoint {
+                rank,
+                p,
+                shared: shared.clone(),
+                profile,
+                stats: CommStats::default(),
+            })
+            .collect()
+    }
+}
+
+impl Endpoint {
+    /// Generic rendezvous: deposit `t`, let the last arriver run `combine`
+    /// over all deposits (ordered by rank) producing per-rank results, and
+    /// return this rank's result plus the max arrival clock.
+    fn exchange(
+        &mut self,
+        op: &'static str,
+        t: Tensor,
+        now_s: f64,
+        combine: impl FnOnce(Vec<Tensor>) -> Result<Vec<Tensor>>,
+    ) -> Result<(Tensor, f64)> {
+        if self.p == 1 {
+            let mut r = combine(vec![t])?;
+            return Ok((r.pop().unwrap(), now_s));
+        }
+        let sh = &self.shared;
+        let mut s = sh.state.lock().map_err(|_| anyhow!("fabric mutex poisoned"))?;
+
+        // Wait for the previous round to fully drain before depositing.
+        while s.ready && !s.poisoned {
+            let (ns, to) = sh
+                .cv
+                .wait_timeout(s, RENDEZVOUS_TIMEOUT)
+                .map_err(|_| anyhow!("fabric mutex poisoned"))?;
+            s = ns;
+            if to.timed_out() {
+                s.poisoned = true;
+                sh.cv.notify_all();
+                return Err(anyhow!(
+                    "rank {}: rendezvous timeout waiting to enter '{op}'",
+                    self.rank
+                ));
+            }
+        }
+        if s.poisoned {
+            return Err(anyhow!("fabric poisoned by a peer failure"));
+        }
+
+        // SPMD check: every rank of a round must run the same collective.
+        match s.op {
+            None => s.op = Some(op),
+            Some(prev) if prev != op => {
+                s.poisoned = true;
+                sh.cv.notify_all();
+                return Err(anyhow!(
+                    "collective mismatch: rank {} called '{op}' while round is '{prev}'",
+                    self.rank
+                ));
+            }
+            _ => {}
+        }
+
+        let my_gen = s.gen;
+        assert!(s.deposits[self.rank].is_none(), "double deposit by rank {}", self.rank);
+        s.deposits[self.rank] = Some((t, now_s));
+        s.count += 1;
+
+        if s.count == sh.p {
+            // Last arriver: combine.
+            let mut parts = Vec::with_capacity(sh.p);
+            let mut max_clock = f64::NEG_INFINITY;
+            for d in s.deposits.iter_mut() {
+                let (tensor, clk) = d.take().unwrap();
+                max_clock = max_clock.max(clk);
+                parts.push(tensor);
+            }
+            match combine(parts) {
+                Ok(results) => {
+                    debug_assert_eq!(results.len(), sh.p);
+                    for (slot, r) in s.results.iter_mut().zip(results) {
+                        *slot = Some(r);
+                    }
+                    s.max_clock = max_clock;
+                    s.ready = true;
+                    s.pickups = sh.p;
+                    sh.cv.notify_all();
+                }
+                Err(e) => {
+                    s.poisoned = true;
+                    sh.cv.notify_all();
+                    return Err(e);
+                }
+            }
+        } else {
+            // Wait for the round to complete.
+            while !(s.ready && s.gen == my_gen) && !s.poisoned {
+                let (ns, to) = sh
+                    .cv
+                    .wait_timeout(s, RENDEZVOUS_TIMEOUT)
+                    .map_err(|_| anyhow!("fabric mutex poisoned"))?;
+                s = ns;
+                if to.timed_out() {
+                    s.poisoned = true;
+                    sh.cv.notify_all();
+                    return Err(anyhow!(
+                        "rank {}: rendezvous timeout inside '{op}' \
+                         (a peer likely died or diverged)",
+                        self.rank
+                    ));
+                }
+            }
+            if s.poisoned {
+                return Err(anyhow!("fabric poisoned by a peer failure"));
+            }
+        }
+
+        let result = s.results[self.rank].take().expect("result already taken");
+        let max_clock = s.max_clock;
+        s.pickups -= 1;
+        if s.pickups == 0 {
+            s.ready = false;
+            s.count = 0;
+            s.gen += 1;
+            s.op = None;
+            sh.cv.notify_all();
+        }
+        Ok((result, max_clock))
+    }
+
+    /// Charge the ledger for a collective: idle until the slowest peer
+    /// arrived, then the modeled wire time.
+    fn charge(
+        &mut self,
+        ledger: &mut EnergyLedger,
+        collective: Collective,
+        msg_floats: usize,
+        max_arrival: f64,
+    ) {
+        let wire_s = self.profile.time(collective, msg_floats, self.p);
+        ledger.sync_to(max_arrival);
+        ledger.advance(wire_s, Activity::Communicate);
+        self.stats.floats_moved += msg_floats as u64;
+        self.stats.comm_s += wire_s;
+    }
+
+    /// All-Gather: every rank contributes `t`; every rank receives the
+    /// rank-ordered stack `[p, ...t.shape]`. Message size m = numel(t).
+    pub fn all_gather(&mut self, t: Tensor, ledger: &mut EnergyLedger) -> Result<Tensor> {
+        let m = t.numel();
+        let (result, max_arrival) = self.exchange("all_gather", t, ledger.now_s, |parts| {
+            let stacked = Tensor::stack(&parts)?;
+            Ok(vec![stacked; parts_len(&parts)])
+        })?;
+        self.charge(ledger, Collective::AllGather, m, max_arrival);
+        self.stats.all_gathers += 1;
+        Ok(result)
+    }
+
+    /// Reduce-Scatter: every rank contributes `[p, ...]`; slot j is summed
+    /// across ranks and delivered to rank j. Message size m = slot numel.
+    pub fn reduce_scatter(&mut self, t: Tensor, ledger: &mut EnergyLedger) -> Result<Tensor> {
+        let p = self.p;
+        if t.shape().first() != Some(&p) {
+            return Err(anyhow!(
+                "reduce_scatter input must have leading dim p={p}, got {:?}",
+                t.shape()
+            ));
+        }
+        let m = t.numel() / p;
+        let (result, max_arrival) = self.exchange("reduce_scatter", t, ledger.now_s, |parts| {
+            let mut out = Vec::with_capacity(p);
+            for j in 0..p {
+                let mut acc = parts[0].unstack_at(j);
+                for part in &parts[1..] {
+                    acc.add_assign(&part.unstack_at(j));
+                }
+                out.push(acc);
+            }
+            Ok(out)
+        })?;
+        self.charge(ledger, Collective::ReduceScatter, m, max_arrival);
+        self.stats.reduce_scatters += 1;
+        Ok(result)
+    }
+
+    /// All-Reduce (sum): every rank contributes `t` and receives the
+    /// elementwise sum. Message size m = numel(t).
+    pub fn all_reduce(&mut self, t: Tensor, ledger: &mut EnergyLedger) -> Result<Tensor> {
+        let m = t.numel();
+        let (result, max_arrival) = self.exchange("all_reduce", t, ledger.now_s, |parts| {
+            let mut acc = parts[0].clone();
+            for part in &parts[1..] {
+                acc.add_assign(part);
+            }
+            Ok(vec![acc; parts.len()])
+        })?;
+        self.charge(ledger, Collective::AllReduce, m, max_arrival);
+        self.stats.all_reduces += 1;
+        Ok(result)
+    }
+
+    /// Broadcast from `root`: non-root contributions are ignored (they pass
+    /// an empty tensor by convention). Message size m = numel(root tensor).
+    pub fn broadcast(
+        &mut self,
+        root: usize,
+        t: Tensor,
+        ledger: &mut EnergyLedger,
+    ) -> Result<Tensor> {
+        let (result, max_arrival) = self.exchange("broadcast", t, ledger.now_s, move |parts| {
+            let chosen = parts[root].clone();
+            Ok(vec![chosen; parts.len()])
+        })?;
+        let m = result.numel();
+        self.charge(ledger, Collective::Broadcast, m, max_arrival);
+        self.stats.broadcasts += 1;
+        Ok(result)
+    }
+
+    /// Barrier: pure synchronization (idle charge only, no wire time).
+    pub fn barrier(&mut self, ledger: &mut EnergyLedger) -> Result<()> {
+        let (_, max_arrival) =
+            self.exchange("barrier", Tensor::zeros(&[0]), ledger.now_s, |parts| {
+                Ok(vec![Tensor::zeros(&[0]); parts.len()])
+            })?;
+        ledger.sync_to(max_arrival);
+        self.stats.barriers += 1;
+        Ok(())
+    }
+
+    /// Charge the time of a collective WITHOUT moving data.
+    ///
+    /// The paper's TP pipeline issues Broadcast (forward) and an extra
+    /// synchronization collective (backward) beyond the functionally
+    /// necessary All-Gather/All-Reduce (Appendix, Table II). Our functional
+    /// implementation assembles the same values with one collective; this
+    /// method charges the wire time of the *paper's* schedule so beta_tau
+    /// is reproduced faithfully. Callers must already be clock-synchronized
+    /// (i.e. immediately after a functional collective), which keeps the
+    /// virtual clocks aligned without a rendezvous.
+    pub fn charge_modeled(
+        &mut self,
+        collective: Collective,
+        msg_floats: usize,
+        ledger: &mut EnergyLedger,
+    ) {
+        let wire_s = self.profile.time(collective, msg_floats, self.p);
+        ledger.advance(wire_s, Activity::Communicate);
+        self.stats.floats_moved += msg_floats as u64;
+        self.stats.comm_s += wire_s;
+        match collective {
+            Collective::Broadcast => self.stats.broadcasts += 1,
+            Collective::AllReduce => self.stats.all_reduces += 1,
+            Collective::AllGather => self.stats.all_gathers += 1,
+            Collective::ReduceScatter => self.stats.reduce_scatters += 1,
+        }
+    }
+
+    /// Scalar All-Reduce convenience (loss aggregation).
+    pub fn all_reduce_scalar(&mut self, v: f32, ledger: &mut EnergyLedger) -> Result<f32> {
+        let t = Tensor::from_vec(&[1], vec![v])?;
+        let r = self.all_reduce(t, ledger)?;
+        Ok(r.data()[0])
+    }
+}
+
+fn parts_len(parts: &[Tensor]) -> usize {
+    parts.len()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simnet::NetworkProfile;
+    use std::thread;
+
+    /// Run a closure on p fabric ranks, each on its own thread; returns the
+    /// per-rank results in rank order.
+    pub fn run_ranks<T: Send + 'static>(
+        p: usize,
+        f: impl Fn(Endpoint, EnergyLedger) -> T + Send + Sync + 'static,
+    ) -> Vec<T> {
+        let endpoints = Fabric::new(p, NetworkProfile::frontier());
+        let f = Arc::new(f);
+        let handles: Vec<_> = endpoints
+            .into_iter()
+            .map(|ep| {
+                let f = f.clone();
+                thread::spawn(move || f(ep, EnergyLedger::new()))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("rank thread panicked")).collect()
+    }
+
+    #[test]
+    fn all_gather_stacks_in_rank_order() {
+        let out = run_ranks(4, |mut ep, mut led| {
+            let t = Tensor::filled(&[2], ep.rank as f32);
+            ep.all_gather(t, &mut led).unwrap()
+        });
+        for g in out {
+            assert_eq!(g.shape(), &[4, 2]);
+            assert_eq!(g.data(), &[0.0, 0.0, 1.0, 1.0, 2.0, 2.0, 3.0, 3.0]);
+        }
+    }
+
+    #[test]
+    fn reduce_scatter_sums_and_scatters() {
+        let out = run_ranks(3, |mut ep, mut led| {
+            // rank r contributes [p, 1] tensor with slot j = r*10 + j
+            let data: Vec<f32> = (0..3).map(|j| (ep.rank * 10 + j) as f32).collect();
+            let t = Tensor::from_vec(&[3, 1], data).unwrap();
+            (ep.rank, ep.reduce_scatter(t, &mut led).unwrap())
+        });
+        for (rank, r) in out {
+            // slot j = sum_r (r*10 + j) = 30 + 3j
+            assert_eq!(r.shape(), &[1]);
+            assert_eq!(r.data()[0], 30.0 + 3.0 * rank as f32);
+        }
+    }
+
+    #[test]
+    fn all_reduce_sums() {
+        let out = run_ranks(4, |mut ep, mut led| {
+            let t = Tensor::filled(&[3], (ep.rank + 1) as f32);
+            ep.all_reduce(t, &mut led).unwrap()
+        });
+        for r in out {
+            assert_eq!(r.data(), &[10.0, 10.0, 10.0]);
+        }
+    }
+
+    #[test]
+    fn broadcast_takes_root() {
+        let out = run_ranks(3, |mut ep, mut led| {
+            let t = if ep.rank == 1 {
+                Tensor::filled(&[2], 7.0)
+            } else {
+                Tensor::zeros(&[2])
+            };
+            ep.broadcast(1, t, &mut led).unwrap()
+        });
+        for r in out {
+            assert_eq!(r.data(), &[7.0, 7.0]);
+        }
+    }
+
+    #[test]
+    fn virtual_clocks_synchronize() {
+        let out = run_ranks(2, |mut ep, mut led| {
+            // rank 1 computes longer before the collective
+            let work = if ep.rank == 1 { 2.0 } else { 0.5 };
+            led.advance(work, Activity::Compute);
+            ep.all_reduce(Tensor::filled(&[4], 1.0), &mut led).unwrap();
+            (ep.rank, led)
+        });
+        let wire = NetworkProfile::frontier().time(Collective::AllReduce, 4, 2);
+        for (rank, led) in out {
+            // both clocks end at max(2.0, 0.5) + wire
+            assert!((led.now_s - (2.0 + wire)).abs() < 1e-12, "rank {rank}: {}", led.now_s);
+            if rank == 0 {
+                assert!((led.idle_s() - 1.5).abs() < 1e-12);
+            } else {
+                assert_eq!(led.idle_s(), 0.0);
+            }
+            assert!((led.comm_s() - wire).abs() < 1e-15);
+        }
+    }
+
+    #[test]
+    fn repeated_rounds_reuse_fabric() {
+        let out = run_ranks(3, |mut ep, mut led| {
+            let mut acc = 0.0;
+            for round in 0..50 {
+                let t = Tensor::filled(&[1], (ep.rank + round) as f32);
+                acc += ep.all_reduce(t, &mut led).unwrap().data()[0];
+            }
+            acc
+        });
+        // round r: sum = (0 + 1 + 2) + 3r = 3 + 3r; total = sum_{0..50} = 150 + 3*1225
+        for r in out {
+            assert_eq!(r, (150 + 3 * 1225) as f32);
+        }
+    }
+
+    #[test]
+    fn single_rank_collectives_are_local() {
+        let eps = Fabric::new(1, NetworkProfile::frontier());
+        let mut ep = eps.into_iter().next().unwrap();
+        let mut led = EnergyLedger::new();
+        let g = ep.all_gather(Tensor::filled(&[2], 3.0), &mut led).unwrap();
+        assert_eq!(g.shape(), &[1, 2]);
+        let r = ep.all_reduce(Tensor::filled(&[2], 3.0), &mut led).unwrap();
+        assert_eq!(r.data(), &[3.0, 3.0]);
+        assert_eq!(led.comm_s(), 0.0, "p=1 must be communication-free");
+    }
+
+    #[test]
+    fn mismatched_collectives_poison_not_hang() {
+        let out = run_ranks(2, |mut ep, mut led| {
+            let t = Tensor::filled(&[1], 1.0);
+            if ep.rank == 0 {
+                ep.all_reduce(t, &mut led).map(|_| ())
+            } else {
+                ep.all_gather(t, &mut led).map(|_| ())
+            }
+        });
+        assert!(out.iter().any(|r| r.is_err()), "mismatch must surface as an error");
+    }
+
+    #[test]
+    fn reduce_scatter_validates_leading_dim() {
+        let out = run_ranks(2, |mut ep, mut led| {
+            if ep.rank == 0 {
+                // wrong leading dim on rank 0 -> local error, rank 1 must not hang
+                let bad = Tensor::zeros(&[3, 1]);
+                let e = ep.reduce_scatter(bad, &mut led);
+                assert!(e.is_err());
+                // recover by sending the right shape
+                let good = Tensor::zeros(&[2, 1]);
+                ep.reduce_scatter(good, &mut led).map(|_| ())
+            } else {
+                let good = Tensor::zeros(&[2, 1]);
+                ep.reduce_scatter(good, &mut led).map(|_| ())
+            }
+        });
+        assert!(out.into_iter().all(|r| r.is_ok()));
+    }
+
+    #[test]
+    fn stats_accumulate() {
+        let out = run_ranks(2, |mut ep, mut led| {
+            ep.all_gather(Tensor::zeros(&[8]), &mut led).unwrap();
+            ep.reduce_scatter(Tensor::zeros(&[2, 8]), &mut led).unwrap();
+            ep.barrier(&mut led).unwrap();
+            ep.stats
+        });
+        for s in out {
+            assert_eq!(s.all_gathers, 1);
+            assert_eq!(s.reduce_scatters, 1);
+            assert_eq!(s.barriers, 1);
+            assert_eq!(s.floats_moved, 8 + 8);
+            assert!(s.comm_s > 0.0);
+        }
+    }
+}

@@ -1,0 +1,507 @@
+//! Leader driver: spawns rank workers, aggregates losses out-of-band,
+//! decides the stopping point (fixed-loss or iteration cap), and assembles
+//! the training report (loss curve, per-rank energy/time ledgers, comm
+//! statistics).
+
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::rank_pp::PhantomRank;
+use super::rank_tp::TensorRank;
+use super::LossReport;
+use crate::comm::{CommStats, Fabric};
+use crate::config::{ComputeModel, Parallelism, RunConfig};
+use crate::data::{BatchCache, Teacher};
+use crate::energy::LedgerSummary;
+use crate::model::{pp_model_params, tp_model_params, PhantomRankParams, TpRankParams};
+use crate::runtime::ExecServer;
+use crate::tensor::Tensor;
+use crate::train::LossTracker;
+
+/// Per-rank outcome.
+#[derive(Debug, Clone)]
+pub struct RankReport {
+    pub rank: usize,
+    pub ledger: LedgerSummary,
+    pub stats: CommStats,
+    /// Virtual time at which warmup ended (energy accounting boundary).
+    pub warm_t: f64,
+    /// Energy over the post-warmup training phase only.
+    pub energy_train_j: f64,
+}
+
+/// Aggregated training report (one row of the paper's Table I, plus curves).
+#[derive(Debug, Clone)]
+pub struct TrainReport {
+    pub mode: Parallelism,
+    pub p: usize,
+    pub n: usize,
+    pub k: usize,
+    pub layers: usize,
+    pub batch: usize,
+    /// Global loss per iteration (mean squared error over B*n).
+    pub losses: Vec<f64>,
+    pub iterations: usize,
+    pub reached_target: bool,
+    pub per_rank: Vec<RankReport>,
+    /// Total model parameters across all ranks.
+    pub model_params: u64,
+    /// Cluster totals (all ranks, full run).
+    pub energy_total_j: f64,
+    /// Cluster energy excluding the warmup iterations (the paper's
+    /// training-phase accounting).
+    pub energy_train_j: f64,
+    /// Virtual wall time (max rank clock).
+    pub wall_s: f64,
+    /// Virtual wall time excluding warmup.
+    pub wall_train_s: f64,
+}
+
+impl TrainReport {
+    /// Energy per post-warmup iteration in Joules (Table I column).
+    pub fn energy_per_iter_j(&self) -> f64 {
+        let iters = self.iterations.saturating_sub(warmup_of(&self.per_rank)) as f64;
+        if iters > 0.0 {
+            self.energy_train_j / iters
+        } else {
+            0.0
+        }
+    }
+}
+
+fn warmup_of(per_rank: &[RankReport]) -> usize {
+    // warm_t > 0 means at least one warmup iteration was excluded; the
+    // driver stores the count in the report directly, so this is only a
+    // guard for empty runs.
+    usize::from(per_rank.iter().any(|r| r.warm_t > 0.0))
+}
+
+/// Train one configuration end-to-end on the simulated cluster.
+///
+/// `server` must serve an artifact bundle matching (p, n, k, batch) of
+/// `cfg` (see `RunConfig::artifact` / manifest lookup).
+pub fn train(cfg: &RunConfig, server: &ExecServer) -> Result<TrainReport> {
+    cfg.validate()?;
+    if !matches!(cfg.hardware.compute, ComputeModel::Measured) {
+        bail!("coordinator::train runs measured mode; use perfmodel for analytic predictions");
+    }
+    let artifact = cfg
+        .artifact
+        .clone()
+        .ok_or_else(|| anyhow!("measured run needs an artifact config name"))?;
+    let mcfg = server.manifest.config(&artifact)?.clone();
+    if mcfg.p != cfg.p || mcfg.n != cfg.model.n || mcfg.batch != cfg.train.batch {
+        bail!(
+            "artifact '{}' geometry (p={}, n={}, batch={}) does not match run \
+             (p={}, n={}, batch={})",
+            artifact,
+            mcfg.p,
+            mcfg.n,
+            mcfg.batch,
+            cfg.p,
+            cfg.model.n,
+            cfg.train.batch
+        );
+    }
+    if cfg.mode == Parallelism::Phantom && mcfg.k != cfg.model.k {
+        bail!("artifact '{}' k={} does not match run k={}", artifact, mcfg.k, cfg.model.k);
+    }
+
+    let p = cfg.p;
+    let scale = 1.0 / (cfg.train.batch as f64 * cfg.model.n as f64);
+    let endpoints = Fabric::new(p, cfg.hardware.net);
+    let teacher = Teacher::new(cfg.model.n, cfg.train.seed);
+    let cache = Arc::new(BatchCache::new(
+        teacher,
+        cfg.train.batch,
+        p,
+        cfg.train.dataset_batches,
+    ));
+
+    // Control plane: rank -> leader loss reports; leader -> rank continue.
+    let (loss_tx, loss_rx) = mpsc::channel::<LossReport>();
+    let mut cont_txs: Vec<mpsc::Sender<bool>> = Vec::with_capacity(p);
+
+    let mut handles = Vec::with_capacity(p);
+    for (rank, ep) in endpoints.into_iter().enumerate() {
+        let (ct, cr) = mpsc::channel::<bool>();
+        cont_txs.push(ct);
+        let cfg = cfg.clone();
+        let artifact = artifact.clone();
+        let exec = server.handle();
+        let cache = cache.clone();
+        let loss_tx = loss_tx.clone();
+        let warmup = cfg.train.warmup_iters;
+        handles.push(
+            thread::Builder::new()
+                .name(format!("rank-{rank}"))
+                .spawn(move || -> Result<RankReport> {
+                    run_rank(rank, &cfg, artifact, exec, ep, cache, loss_tx, cr, warmup)
+                })
+                .context("spawning rank thread")?,
+        );
+    }
+    drop(loss_tx);
+
+    // Leader loop: aggregate per-iteration losses, decide stopping.
+    let mut tracker = LossTracker::new(cfg.train.target_loss, cfg.train.max_iters);
+    let mut losses = Vec::new();
+    let mut pending: std::collections::HashMap<u64, (f64, usize)> = Default::default();
+    let mut next_iter: u64 = 0;
+    let mut leader_err: Option<anyhow::Error> = None;
+    'leader: loop {
+        let report = match loss_rx.recv() {
+            Ok(r) => r,
+            Err(_) => break, // all ranks done or died
+        };
+        let e = pending.entry(report.iter).or_insert((0.0, 0));
+        e.0 += report.loss_local;
+        e.1 += 1;
+        while let Some(&(sum, cnt)) = pending.get(&next_iter) {
+            if cnt < p {
+                break;
+            }
+            pending.remove(&next_iter);
+            let global = sum * scale;
+            losses.push(global);
+            let stop = {
+                let mut t = tracker.clone();
+                let s = t.record(global);
+                tracker = t;
+                s
+            };
+            for ct in &cont_txs {
+                // A rank that already exited with an error has dropped its
+                // receiver; surface that instead of spinning forever.
+                if ct.send(!stop).is_err() {
+                    leader_err = Some(anyhow!("a rank died mid-iteration"));
+                    break 'leader;
+                }
+            }
+            next_iter += 1;
+            if stop {
+                break 'leader;
+            }
+        }
+    }
+    drop(cont_txs);
+
+    let mut per_rank = Vec::with_capacity(p);
+    for h in handles {
+        match h.join() {
+            Ok(Ok(r)) => per_rank.push(r),
+            Ok(Err(e)) => return Err(e.context("rank failed")),
+            Err(_) => bail!("rank thread panicked"),
+        }
+    }
+    if let Some(e) = leader_err {
+        return Err(e);
+    }
+    per_rank.sort_by_key(|r| r.rank);
+
+    let mut totals = LedgerSummary::default();
+    let mut energy_total = 0.0;
+    let mut energy_train = 0.0;
+    let mut warm_t_max: f64 = 0.0;
+    for r in &per_rank {
+        totals.accumulate(&r.ledger);
+        energy_train += r.energy_train_j;
+        warm_t_max = warm_t_max.max(r.warm_t);
+    }
+    energy_total += totals.energy_j(&cfg.hardware.power);
+
+    let model_params = match cfg.mode {
+        Parallelism::Tensor => tp_model_params(cfg.model.n, cfg.model.layers),
+        Parallelism::Phantom => {
+            pp_model_params(cfg.model.n, cfg.model.layers, p, cfg.model.k)
+        }
+    };
+
+    Ok(TrainReport {
+        mode: cfg.mode,
+        p,
+        n: cfg.model.n,
+        k: cfg.model.k,
+        layers: cfg.model.layers,
+        batch: cfg.train.batch,
+        iterations: losses.len(),
+        losses,
+        reached_target: tracker.reached_target(),
+        model_params,
+        energy_total_j: energy_total,
+        energy_train_j: energy_train,
+        wall_s: totals.end_s,
+        wall_train_s: (totals.end_s - warm_t_max).max(0.0),
+        per_rank,
+    })
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_rank(
+    rank: usize,
+    cfg: &RunConfig,
+    artifact: String,
+    exec: crate::runtime::ExecHandle,
+    ep: crate::comm::Endpoint,
+    cache: Arc<BatchCache>,
+    loss_tx: mpsc::Sender<LossReport>,
+    cont_rx: mpsc::Receiver<bool>,
+    warmup: usize,
+) -> Result<RankReport> {
+    enum Worker {
+        Pp(PhantomRank),
+        Tp(TensorRank),
+    }
+    let mut worker = match cfg.mode {
+        Parallelism::Phantom => Worker::Pp(PhantomRank::new(
+            PhantomRankParams::init(&cfg.model, cfg.p, rank, cfg.train.seed)?,
+            artifact,
+            cfg.train.optimizer,
+            exec,
+            ep,
+        )),
+        Parallelism::Tensor => Worker::Tp(TensorRank::new(
+            TpRankParams::init(&cfg.model, cfg.p, rank, cfg.train.seed)?,
+            artifact,
+            cfg.train.optimizer,
+            exec,
+            ep,
+        )),
+    };
+
+    let mut warm_t = 0.0;
+    let mut iter: u64 = 0;
+    loop {
+        let (x, t) = cache.shard(iter, rank)?;
+        let loss_local = match &mut worker {
+            Worker::Pp(w) => w.iteration(&x, &t)?,
+            Worker::Tp(w) => w.iteration(&x, &t)?,
+        };
+        if (iter + 1) as usize == warmup {
+            warm_t = match &worker {
+                Worker::Pp(w) => w.ledger.now_s,
+                Worker::Tp(w) => w.ledger.now_s,
+            };
+        }
+        loss_tx
+            .send(LossReport { rank, iter, loss_local })
+            .map_err(|_| anyhow!("leader is gone"))?;
+        match cont_rx.recv() {
+            Ok(true) => iter += 1,
+            Ok(false) => break,
+            Err(_) => bail!("leader dropped the control channel"),
+        }
+    }
+
+    let (ledger, stats) = match worker {
+        Worker::Pp(w) => (w.ledger, w.ep.stats),
+        Worker::Tp(w) => (w.ledger, w.ep.stats),
+    };
+    let energy_train_j =
+        ledger.energy_j_between(&cfg.hardware.power, warm_t, ledger.now_s);
+    Ok(RankReport {
+        rank,
+        ledger: ledger.summary(),
+        stats,
+        warm_t,
+        energy_train_j,
+    })
+}
+
+/// Inference report: forward-only serving statistics (the "inferencing"
+/// half of the paper's title — PP's forward path saves the same
+/// communication per query as per training iteration).
+#[derive(Debug, Clone)]
+pub struct InferReport {
+    pub mode: Parallelism,
+    pub batches: usize,
+    /// Virtual latency per batch, seconds (post-warmup).
+    pub latencies_s: Vec<f64>,
+    /// Cluster energy over the serving phase (post-warmup), Joules.
+    pub energy_j: f64,
+    /// Samples served per virtual second (post-warmup).
+    pub throughput: f64,
+}
+
+/// Serve `batches` forward-only batches and report latency/energy.
+pub fn infer(cfg: &RunConfig, server: &ExecServer, batches: usize) -> Result<InferReport> {
+    cfg.validate()?;
+    let artifact = cfg.artifact.clone().ok_or_else(|| anyhow!("needs artifact"))?;
+    let p = cfg.p;
+    let endpoints = Fabric::new(p, cfg.hardware.net);
+    let teacher = Teacher::new(cfg.model.n, cfg.train.seed);
+    let cache = Arc::new(BatchCache::new(
+        teacher,
+        cfg.train.batch,
+        p,
+        cfg.train.dataset_batches,
+    ));
+
+    let mut handles = Vec::new();
+    for (rank, ep) in endpoints.into_iter().enumerate() {
+        let cfg = cfg.clone();
+        let artifact = artifact.clone();
+        let exec = server.handle();
+        let cache = cache.clone();
+        handles.push(thread::spawn(move || -> Result<(Vec<f64>, crate::energy::EnergyLedger)> {
+            let mut ledger = crate::energy::EnergyLedger::new();
+            let mut ep = ep;
+            let mut marks = vec![0.0f64];
+            match cfg.mode {
+                Parallelism::Phantom => {
+                    let params =
+                        PhantomRankParams::init(&cfg.model, cfg.p, rank, cfg.train.seed)?;
+                    for b in 0..batches as u64 {
+                        let (x, _) = cache.shard(b, rank)?;
+                        let mut y = x;
+                        for l in 0..params.layers() {
+                            let r = super::exec_charged(
+                                &exec,
+                                &mut ledger,
+                                &artifact,
+                                "pp_fwd_local",
+                                vec![y, params.locals[l].clone(), params.compressors[l].clone()],
+                            )?;
+                            let [z_loc, g]: [Tensor; 2] =
+                                super::rank_pp::unpack(r.outputs, "pp_fwd_local")?;
+                            let mut g_all = ep.all_gather(g, &mut ledger)?;
+                            g_all.zero_slot(rank);
+                            let r = super::exec_charged(
+                                &exec,
+                                &mut ledger,
+                                &artifact,
+                                "pp_fwd_combine",
+                                vec![
+                                    z_loc,
+                                    g_all,
+                                    params.decompressors[l].clone(),
+                                    params.biases[l].clone(),
+                                ],
+                            )?;
+                            let [y_out, _]: [Tensor; 2] =
+                                super::rank_pp::unpack(r.outputs, "pp_fwd_combine")?;
+                            y = y_out;
+                        }
+                        marks.push(ledger.now_s);
+                    }
+                }
+                Parallelism::Tensor => {
+                    let params = TpRankParams::init(&cfg.model, cfg.p, rank, cfg.train.seed)?;
+                    for b in 0..batches as u64 {
+                        let (x, _) = cache.shard(b, rank)?;
+                        let mut y_shard = x;
+                        for l in 0..params.layers() {
+                            let gathered = ep.all_gather(y_shard, &mut ledger)?;
+                            let y_full = gathered.concat_shards_stacked()?;
+                            ep.charge_modeled(
+                                crate::simnet::Collective::Broadcast,
+                                cfg.model.n * cfg.train.batch,
+                                &mut ledger,
+                            );
+                            let r = super::exec_charged(
+                                &exec,
+                                &mut ledger,
+                                &artifact,
+                                "tp_fwd",
+                                vec![y_full, params.weights[l].clone(), params.biases[l].clone()],
+                            )?;
+                            let [y_out, _]: [Tensor; 2] =
+                                super::rank_pp::unpack(r.outputs, "tp_fwd")?;
+                            y_shard = y_out;
+                        }
+                        marks.push(ledger.now_s);
+                    }
+                }
+            }
+            Ok((marks, ledger))
+        }));
+    }
+
+    let mut all_marks: Vec<Vec<f64>> = Vec::new();
+    let mut energy = 0.0;
+    let mut warm_t: f64 = 0.0;
+    let mut end_t: f64 = 0.0;
+    for h in handles {
+        let (marks, ledger) = h.join().map_err(|_| anyhow!("rank panicked"))??;
+        // warmup = first batch (PJRT compile)
+        warm_t = warm_t.max(marks.get(1).copied().unwrap_or(0.0));
+        end_t = end_t.max(ledger.now_s);
+        energy += ledger.energy_j_between(&cfg.hardware.power, marks[1], ledger.now_s);
+        all_marks.push(marks);
+    }
+    // Virtual latencies are identical across ranks (synchronous collectives);
+    // use rank 0's marks, skipping the warmup batch.
+    let marks = &all_marks[0];
+    let latencies: Vec<f64> = marks.windows(2).skip(1).map(|w| w[1] - w[0]).collect();
+    let serving_time = (end_t - warm_t).max(1e-12);
+    let throughput = ((batches - 1) * cfg.train.batch) as f64 / serving_time;
+    Ok(InferReport {
+        mode: cfg.mode,
+        batches,
+        latencies_s: latencies,
+        energy_j: energy,
+        throughput,
+    })
+}
+
+/// Convenience for tests/examples: evaluate the sharded PP forward once
+/// (no training) and return the assembled output. Drives the same phase
+/// schedule as training.
+pub fn pp_forward_once(
+    cfg: &RunConfig,
+    server: &ExecServer,
+    x_full: &Tensor,
+) -> Result<Tensor> {
+    let artifact = cfg.artifact.clone().ok_or_else(|| anyhow!("needs artifact"))?;
+    let p = cfg.p;
+    let endpoints = Fabric::new(p, cfg.hardware.net);
+    let x_shards = x_full.col_shards(p)?;
+    let mut handles = Vec::new();
+    for (rank, ep) in endpoints.into_iter().enumerate() {
+        let cfg = cfg.clone();
+        let artifact = artifact.clone();
+        let exec = server.handle();
+        let x = x_shards[rank].clone();
+        handles.push(thread::spawn(move || -> Result<Tensor> {
+            let mut w = PhantomRank::new(
+                PhantomRankParams::init(&cfg.model, cfg.p, rank, cfg.train.seed)?,
+                artifact,
+                cfg.train.optimizer,
+                exec,
+                ep,
+            );
+            let layers = w.params.layers();
+            let mut y = x;
+            for l in 0..layers {
+                let r = super::exec_charged(
+                    &w.exec,
+                    &mut w.ledger,
+                    &w.artifact.clone(),
+                    "pp_fwd_local",
+                    vec![y.clone(), w.params.locals[l].clone(), w.params.compressors[l].clone()],
+                )?;
+                let [z_loc, g]: [Tensor; 2] = super::rank_pp::unpack(r.outputs, "fwd")?;
+                let mut g_all = w.ep.all_gather(g, &mut w.ledger)?;
+                g_all.zero_slot(rank);
+                let r = super::exec_charged(
+                    &w.exec,
+                    &mut w.ledger,
+                    &w.artifact.clone(),
+                    "pp_fwd_combine",
+                    vec![z_loc, g_all, w.params.decompressors[l].clone(), w.params.biases[l].clone()],
+                )?;
+                let [y_out, _z]: [Tensor; 2] = super::rank_pp::unpack(r.outputs, "fwd")?;
+                y = y_out;
+            }
+            Ok(y)
+        }));
+    }
+    let mut shards = Vec::new();
+    for h in handles {
+        shards.push(h.join().map_err(|_| anyhow!("rank panicked"))??);
+    }
+    Tensor::from_col_shards(&shards)
+}

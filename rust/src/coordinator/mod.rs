@@ -1,0 +1,68 @@
+//! L3 coordinator: the paper's system contribution.
+//!
+//! A leader (`driver`) spawns one OS thread per rank. Each rank runs the
+//! per-iteration phase schedule of its parallelism mode, executing the
+//! collective-free compute segments through PJRT (`runtime::ExecHandle`)
+//! and the collectives through the in-memory fabric (`comm`), with virtual
+//! time / energy tracked by its `EnergyLedger`.
+//!
+//! Phase schedule per iteration (paper Secs. IV–V, Table II):
+//!
+//! Phantom (PP), per layer l forward:
+//!   1. exec pp_fwd_local        (z_loc = y·L, g = y·C — the L1 hot-spot)
+//!   2. All-Gather(g)            message k·batch      <- the only fwd comm
+//!   3. zero own slot of g_all   (own-slot convention)
+//!   4. exec pp_fwd_combine      (decompress + bias + relu)
+//! loss: exec mse_delta (local shard, no collective — loss reporting goes
+//! out-of-band to the leader, matching the paper's external monitoring).
+//! backward, per layer l (L..1):
+//!   5. exec pp_bwd_compress     (h_out[i] = delta·D[i]^T)
+//!   6. Reduce-Scatter(h_out)    message k·batch      <- the only bwd comm
+//!   7. exec pp_grads            (Eqns. 18-21)
+//!   8. exec pp_bwd_combine      (Eqn. 17, skipped below layer 1)
+//! optimizer step rank-locally.
+//!
+//! Tensor-parallel (TP) baseline, per layer l forward:
+//!   1. All-Gather(y_shard)      message (n/p)·batch
+//!   2. charge Broadcast(n·batch)         (paper's schedule, Table II)
+//!   3. exec tp_fwd
+//! backward:
+//!   4. exec tp_grads
+//!   5. exec tp_bwd_partial; All-Reduce(dy_full) message n·batch
+//!   6. charge Reduce-Scatter((n/p)·batch) (paper's schedule)
+//!   7. slice own shard; exec tp_bwd_finish
+
+pub mod driver;
+pub mod rank_pp;
+pub mod rank_tp;
+
+pub use driver::{train, RankReport, TrainReport};
+
+use crate::energy::{Activity, EnergyLedger};
+use crate::runtime::{ExecHandle, ExecReply};
+use anyhow::Result;
+
+/// Shared helper: execute a compute segment and charge its wall time to the
+/// rank's virtual clock as busy (dynamic-power) time.
+pub(crate) fn exec_charged(
+    exec: &ExecHandle,
+    ledger: &mut EnergyLedger,
+    artifact: &str,
+    entry: &str,
+    inputs: Vec<crate::tensor::Tensor>,
+) -> Result<ExecReply> {
+    let reply = exec.execute(artifact, entry, inputs)?;
+    ledger.advance(reply.wall_s, Activity::Compute);
+    Ok(reply)
+}
+
+/// Control-plane messages between ranks and the leader. The loss report /
+/// continue-decision travel out-of-band (host-side), mirroring the paper's
+/// external monitoring script; they are not charged to the device ledgers.
+#[derive(Debug)]
+pub(crate) struct LossReport {
+    pub rank: usize,
+    pub iter: u64,
+    /// Rank-local sum of squared errors (pre-scale).
+    pub loss_local: f64,
+}

@@ -1,0 +1,228 @@
+//! Phantom-parallel rank worker: one training iteration's phase schedule.
+
+use anyhow::{bail, Result};
+
+use super::exec_charged;
+use crate::comm::Endpoint;
+use crate::config::OptimizerConfig;
+use crate::energy::{Activity, EnergyLedger};
+use crate::model::PhantomRankParams;
+use crate::runtime::ExecHandle;
+use crate::tensor::Tensor;
+use crate::train::Optimizer;
+
+/// Per-rank phantom-parallel worker state.
+pub struct PhantomRank {
+    pub params: PhantomRankParams,
+    pub artifact: String,
+    opt: Optimizer,
+    pub exec: ExecHandle,
+    pub ep: Endpoint,
+    pub ledger: EnergyLedger,
+}
+
+impl PhantomRank {
+    pub fn new(
+        params: PhantomRankParams,
+        artifact: String,
+        opt_cfg: OptimizerConfig,
+        exec: ExecHandle,
+        ep: Endpoint,
+    ) -> PhantomRank {
+        let shapes = param_shapes(&params);
+        PhantomRank {
+            params,
+            artifact,
+            opt: Optimizer::new(opt_cfg, &shapes),
+            exec,
+            ep,
+            ledger: EnergyLedger::new(),
+        }
+    }
+
+    /// One forward+backward+update iteration over the local shard.
+    /// Returns the rank-local sum of squared errors (pre-scale).
+    ///
+    /// Uses the FUSED inter-collective segments (pp_fwd_step / pp_loss_step
+    /// / pp_bwd_step): every stretch of compute between two collectives is
+    /// one PJRT execution — 7 calls per 2-layer iteration instead of 10
+    /// (EXPERIMENTS.md §Perf). The collective schedule is unchanged from
+    /// the paper's Table II: one k*batch All-Gather per layer forward, one
+    /// k*batch Reduce-Scatter per layer backward.
+    pub fn iteration(&mut self, x_shard: &Tensor, t_shard: &Tensor) -> Result<f64> {
+        let layers = self.params.layers();
+        let rank = self.params.rank;
+        let art = self.artifact.clone();
+
+        // ---- forward ----
+        let mut ys: Vec<Tensor> = vec![x_shard.clone()];
+        let mut zs: Vec<Tensor> = Vec::with_capacity(layers);
+        let mut g_alls: Vec<Tensor> = Vec::with_capacity(layers);
+
+        let r = exec_charged(
+            &self.exec,
+            &mut self.ledger,
+            &art,
+            "pp_fwd_local",
+            vec![
+                ys[0].clone(),
+                self.params.locals[0].clone(),
+                self.params.compressors[0].clone(),
+            ],
+        )?;
+        let [mut z_loc, mut g]: [Tensor; 2] = unpack(r.outputs, "pp_fwd_local")?;
+
+        for l in 0..layers {
+            // The ONLY forward collective (paper Table II, PP row).
+            let mut g_all = self.ep.all_gather(g.clone(), &mut self.ledger)?;
+            g_all.zero_slot(rank);
+
+            if l + 1 < layers {
+                // fused: combine(l) + local(l+1)
+                let r = exec_charged(
+                    &self.exec,
+                    &mut self.ledger,
+                    &art,
+                    "pp_fwd_step",
+                    vec![
+                        z_loc,
+                        g_all.clone(),
+                        self.params.decompressors[l].clone(),
+                        self.params.biases[l].clone(),
+                        self.params.locals[l + 1].clone(),
+                        self.params.compressors[l + 1].clone(),
+                    ],
+                )?;
+                let [y_out, z, z_loc_next, g_next]: [Tensor; 4] =
+                    unpack(r.outputs, "pp_fwd_step")?;
+                ys.push(y_out);
+                zs.push(z);
+                g_alls.push(g_all);
+                z_loc = z_loc_next;
+                g = g_next;
+            } else {
+                let r = exec_charged(
+                    &self.exec,
+                    &mut self.ledger,
+                    &art,
+                    "pp_fwd_combine",
+                    vec![
+                        z_loc.clone(),
+                        g_all.clone(),
+                        self.params.decompressors[l].clone(),
+                        self.params.biases[l].clone(),
+                    ],
+                )?;
+                let [y_out, z]: [Tensor; 2] = unpack(r.outputs, "pp_fwd_combine")?;
+                ys.push(y_out);
+                zs.push(z);
+                g_alls.push(g_all);
+            }
+        }
+
+        // ---- loss + top-layer error compression (fused) ----
+        let r = exec_charged(
+            &self.exec,
+            &mut self.ledger,
+            &art,
+            "pp_loss_step",
+            vec![
+                ys[layers].clone(),
+                zs[layers - 1].clone(),
+                t_shard.clone(),
+                self.params.decompressors[layers - 1].clone(),
+            ],
+        )?;
+        let [loss_t, delta0, h_out]: [Tensor; 3] = unpack(r.outputs, "pp_loss_step")?;
+        let loss_local = loss_t.data()[0] as f64;
+        let mut delta = delta0;
+        // The ONLY backward collective (paper Table II, PP row).
+        let mut h_sum = self.ep.reduce_scatter(h_out, &mut self.ledger)?;
+
+        // ---- backward ----
+        let mut grads: Vec<Option<[Tensor; 4]>> = (0..layers).map(|_| None).collect();
+        for l in (0..layers).rev() {
+            let r = exec_charged(
+                &self.exec,
+                &mut self.ledger,
+                &art,
+                "pp_grads",
+                vec![ys[l].clone(), delta.clone(), h_sum.clone(), g_alls[l].clone()],
+            )?;
+            let [dl, dc, dd, db]: [Tensor; 4] = unpack(r.outputs, "pp_grads")?;
+            grads[l] = Some([dl, dc, dd, db]);
+
+            if l > 0 {
+                // fused: combine(l) + compress(l-1)
+                let r = exec_charged(
+                    &self.exec,
+                    &mut self.ledger,
+                    &art,
+                    "pp_bwd_step",
+                    vec![
+                        delta,
+                        h_sum,
+                        self.params.locals[l].clone(),
+                        self.params.compressors[l].clone(),
+                        zs[l - 1].clone(),
+                        self.params.decompressors[l - 1].clone(),
+                    ],
+                )?;
+                let [d, h_out_prev]: [Tensor; 2] = unpack(r.outputs, "pp_bwd_step")?;
+                delta = d;
+                h_sum = self.ep.reduce_scatter(h_out_prev, &mut self.ledger)?;
+            }
+        }
+
+        // ---- optimizer step (rank-local compute) ----
+        let t0 = std::time::Instant::now();
+        let mut grad_list = Vec::with_capacity(4 * layers);
+        // Order must match `param_shapes`/`named_tensors`: L*, C*, D*, b*.
+        for g in grads.iter().flatten() {
+            grad_list.push(g[0].clone());
+        }
+        for g in grads.iter().flatten() {
+            grad_list.push(g[1].clone());
+        }
+        for g in grads.iter().flatten() {
+            grad_list.push(g[2].clone());
+        }
+        for g in grads.iter().flatten() {
+            grad_list.push(g[3].clone());
+        }
+        {
+            let mut tensors = self.params.named_tensors();
+            let mut refs: Vec<&mut Tensor> =
+                tensors.iter_mut().map(|(_, t)| &mut **t).collect();
+            self.opt.step(&mut refs, &grad_list);
+        }
+        self.ledger.advance(t0.elapsed().as_secs_f64(), Activity::Compute);
+
+        Ok(loss_local)
+    }
+}
+
+pub(crate) fn param_shapes(params: &PhantomRankParams) -> Vec<Vec<usize>> {
+    let mut shapes = Vec::new();
+    for t in &params.locals {
+        shapes.push(t.shape().to_vec());
+    }
+    for t in &params.compressors {
+        shapes.push(t.shape().to_vec());
+    }
+    for t in &params.decompressors {
+        shapes.push(t.shape().to_vec());
+    }
+    for t in &params.biases {
+        shapes.push(t.shape().to_vec());
+    }
+    shapes
+}
+
+/// Unpack a fixed-arity executable result.
+pub(crate) fn unpack<const N: usize>(outputs: Vec<Tensor>, entry: &str) -> Result<[Tensor; N]> {
+    if outputs.len() != N {
+        bail!("{entry}: expected {N} outputs, got {}", outputs.len());
+    }
+    Ok(outputs.try_into().map_err(|_| ()).expect("length checked"))
+}

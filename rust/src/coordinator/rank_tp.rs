@@ -1,0 +1,182 @@
+//! Tensor-parallel rank worker: the paper's baseline pipeline.
+//!
+//! Functionally the forward assembles the full activation with one
+//! All-Gather and the backward sums partial input-gradients with one
+//! All-Reduce. The paper's implementation additionally issues a Broadcast
+//! (forward) and a Reduce-Scatter (backward) per layer (Table II); those are
+//! charged to the virtual clock via `Endpoint::charge_modeled` so beta_tau
+//! matches the paper's schedule (see comm::charge_modeled docs).
+
+use anyhow::Result;
+
+use super::exec_charged;
+use super::rank_pp::unpack;
+use crate::comm::Endpoint;
+use crate::config::OptimizerConfig;
+use crate::energy::{Activity, EnergyLedger};
+use crate::model::TpRankParams;
+use crate::runtime::ExecHandle;
+use crate::simnet::Collective;
+use crate::tensor::Tensor;
+use crate::train::Optimizer;
+
+/// Per-rank tensor-parallel worker state.
+pub struct TensorRank {
+    pub params: TpRankParams,
+    pub artifact: String,
+    opt: Optimizer,
+    pub exec: ExecHandle,
+    pub ep: Endpoint,
+    pub ledger: EnergyLedger,
+    /// Charge the paper's full Table II schedule (Broadcast + extra
+    /// Reduce-Scatter). On by default; ablation benches switch it off.
+    pub paper_schedule: bool,
+}
+
+impl TensorRank {
+    pub fn new(
+        params: TpRankParams,
+        artifact: String,
+        opt_cfg: OptimizerConfig,
+        exec: ExecHandle,
+        ep: Endpoint,
+    ) -> TensorRank {
+        let shapes: Vec<Vec<usize>> = params
+            .weights
+            .iter()
+            .map(|t| t.shape().to_vec())
+            .chain(params.biases.iter().map(|t| t.shape().to_vec()))
+            .collect();
+        TensorRank {
+            params,
+            artifact,
+            opt: Optimizer::new(opt_cfg, &shapes),
+            exec,
+            ep,
+            ledger: EnergyLedger::new(),
+        paper_schedule: true,
+        }
+    }
+
+    /// One forward+backward+update iteration. Returns the rank-local sum of
+    /// squared errors (pre-scale).
+    pub fn iteration(&mut self, x_shard: &Tensor, t_shard: &Tensor) -> Result<f64> {
+        let layers = self.params.layers();
+        let rank = self.params.rank;
+        let m = self.params.m;
+        let p = self.params.p;
+        let n = m * p;
+        let art = self.artifact.clone();
+        let batch = x_shard.shape()[0];
+
+        // ---- forward ----
+        let mut y_shard = x_shard.clone();
+        let mut y_fulls: Vec<Tensor> = Vec::with_capacity(layers);
+        let mut zs: Vec<Tensor> = Vec::with_capacity(layers);
+        for l in 0..layers {
+            // All-Gather the activation shards: message (n/p)*batch.
+            let gathered = self.ep.all_gather(y_shard, &mut self.ledger)?;
+            let y_full = gathered.concat_shards_stacked()?;
+            if self.paper_schedule {
+                // Paper Table II: Broadcast of the n*batch global layer.
+                self.ep.charge_modeled(Collective::Broadcast, n * batch, &mut self.ledger);
+            }
+            let r = exec_charged(
+                &self.exec,
+                &mut self.ledger,
+                &art,
+                "tp_fwd",
+                vec![
+                    y_full.clone(),
+                    self.params.weights[l].clone(),
+                    self.params.biases[l].clone(),
+                ],
+            )?;
+            let [y_out, z]: [Tensor; 2] = unpack(r.outputs, "tp_fwd")?;
+            y_fulls.push(y_full);
+            zs.push(z);
+            y_shard = y_out;
+        }
+
+        // ---- loss ----
+        let r = exec_charged(
+            &self.exec,
+            &mut self.ledger,
+            &art,
+            "mse_delta",
+            vec![y_shard.clone(), zs[layers - 1].clone(), t_shard.clone()],
+        )?;
+        let [loss_t, delta0]: [Tensor; 2] = unpack(r.outputs, "mse_delta")?;
+        let loss_local = loss_t.data()[0] as f64;
+        let mut delta = delta0;
+
+        // ---- backward ----
+        // Top layer's gradients, then for each lower layer the fused
+        // tp_bwd_step (finish + grads) after the All-Reduce — one PJRT call
+        // per inter-collective segment (EXPERIMENTS.md §Perf).
+        let mut grads: Vec<Option<[Tensor; 2]>> = (0..layers).map(|_| None).collect();
+        {
+            let r = exec_charged(
+                &self.exec,
+                &mut self.ledger,
+                &art,
+                "tp_grads",
+                vec![y_fulls[layers - 1].clone(), delta.clone()],
+            )?;
+            let [dw, db]: [Tensor; 2] = unpack(r.outputs, "tp_grads")?;
+            grads[layers - 1] = Some([dw, db]);
+        }
+        for l in (1..layers).rev() {
+            let r = exec_charged(
+                &self.exec,
+                &mut self.ledger,
+                &art,
+                "tp_bwd_partial",
+                vec![delta, self.params.weights[l].clone()],
+            )?;
+            let [dy_partial]: [Tensor; 1] = unpack(r.outputs, "tp_bwd_partial")?;
+
+            // All-Reduce the n*batch input-gradient (paper Table II).
+            let dy_full = self.ep.all_reduce(dy_partial, &mut self.ledger)?;
+            if self.paper_schedule {
+                // Paper Table II: Reduce-Scatter of the (n/p)*batch shard.
+                self.ep.charge_modeled(
+                    Collective::ReduceScatter,
+                    m * batch,
+                    &mut self.ledger,
+                );
+            }
+            let dy_shard = dy_full.col_slice(rank * m, m)?;
+            // fused: finish(l-1) + grads(l-1)
+            let r = exec_charged(
+                &self.exec,
+                &mut self.ledger,
+                &art,
+                "tp_bwd_step",
+                vec![dy_shard, zs[l - 1].clone(), y_fulls[l - 1].clone()],
+            )?;
+            let [d, dw, db]: [Tensor; 3] = unpack(r.outputs, "tp_bwd_step")?;
+            delta = d;
+            grads[l - 1] = Some([dw, db]);
+        }
+
+        // ---- optimizer step ----
+        let t0 = std::time::Instant::now();
+        let mut grad_list = Vec::with_capacity(2 * layers);
+        for g in grads.iter().flatten() {
+            grad_list.push(g[0].clone());
+        }
+        for g in grads.iter().flatten() {
+            grad_list.push(g[1].clone());
+        }
+        {
+            let mut tensors = self.params.named_tensors();
+            let mut refs: Vec<&mut Tensor> =
+                tensors.iter_mut().map(|(_, t)| &mut **t).collect();
+            self.opt.step(&mut refs, &grad_list);
+        }
+        self.ledger.advance(t0.elapsed().as_secs_f64(), Activity::Compute);
+
+        Ok(loss_local)
+    }
+}

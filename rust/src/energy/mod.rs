@@ -1,0 +1,306 @@
+//! Energy model and accounting (the ROCm-SMI substitute).
+//!
+//! Paper Eqn. (1):  e(n, p, L) = A * alpha + B * beta
+//! where A is the busy (dynamic) power draw and B the idle (static) draw of
+//! one device. On Frontier A ~ 560 W, B ~ 90 W. Each rank keeps a ledger of
+//! busy (compute) seconds and idle-or-communicating seconds in *virtual*
+//! time; energy is integrated exactly as A*busy + B*(comm + idle).
+//!
+//! A `PowerSensor` mirrors the paper's background monitoring script: it
+//! samples the ledger at a fixed interval into a power-time curve whose
+//! trapezoidal integral must agree with the exact ledger (tested), and which
+//! lets reports exclude initialization lead-in the way the paper does.
+
+/// Vendor power constants in Watts.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PowerModel {
+    /// Dynamic (busy) draw, W.
+    pub busy_w: f64,
+    /// Static (idle / communicating) draw, W.
+    pub idle_w: f64,
+}
+
+impl PowerModel {
+    /// Frontier MI250X GCD constants from the paper (Sec. II-A).
+    pub fn frontier() -> PowerModel {
+        PowerModel { busy_w: 560.0, idle_w: 90.0 }
+    }
+
+    /// Energy in Joules for a busy/idle split (Eqn. 1 per iteration).
+    pub fn energy(&self, busy_s: f64, idle_s: f64) -> f64 {
+        self.busy_w * busy_s + self.idle_w * idle_s
+    }
+}
+
+/// What a rank was doing during an interval of virtual time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Activity {
+    /// Executing compute (charged at A).
+    Compute,
+    /// Driving / waiting on a collective (charged at B).
+    Communicate,
+    /// Waiting at a rendezvous for slower peers (charged at B).
+    Idle,
+}
+
+/// One recorded interval.
+#[derive(Debug, Clone, Copy)]
+pub struct Interval {
+    pub start_s: f64,
+    pub end_s: f64,
+    pub activity: Activity,
+}
+
+/// Per-rank energy/time ledger in virtual time.
+#[derive(Debug, Clone, Default)]
+pub struct EnergyLedger {
+    intervals: Vec<Interval>,
+    /// Current virtual clock of this rank (seconds).
+    pub now_s: f64,
+}
+
+impl EnergyLedger {
+    pub fn new() -> EnergyLedger {
+        EnergyLedger::default()
+    }
+
+    /// Advance the clock by `dur_s` doing `activity`.
+    pub fn advance(&mut self, dur_s: f64, activity: Activity) {
+        assert!(dur_s >= 0.0, "negative duration {dur_s}");
+        if dur_s == 0.0 {
+            return;
+        }
+        let start = self.now_s;
+        self.now_s += dur_s;
+        self.intervals.push(Interval { start_s: start, end_s: self.now_s, activity });
+    }
+
+    /// Jump the clock forward to `t_s` (rendezvous with slower peers),
+    /// recording the gap as Idle. No-op if already past `t_s`.
+    pub fn sync_to(&mut self, t_s: f64) {
+        if t_s > self.now_s {
+            let gap = t_s - self.now_s;
+            self.advance(gap, Activity::Idle);
+        }
+    }
+
+    pub fn busy_s(&self) -> f64 {
+        self.total(Activity::Compute)
+    }
+
+    pub fn comm_s(&self) -> f64 {
+        self.total(Activity::Communicate)
+    }
+
+    pub fn idle_s(&self) -> f64 {
+        self.total(Activity::Idle)
+    }
+
+    fn total(&self, a: Activity) -> f64 {
+        self.intervals
+            .iter()
+            .filter(|i| i.activity == a)
+            .map(|i| i.end_s - i.start_s)
+            .sum()
+    }
+
+    pub fn intervals(&self) -> &[Interval] {
+        &self.intervals
+    }
+
+    /// Exact energy under `model` (Eqn. 1): busy at A, comm+idle at B.
+    pub fn energy_j(&self, model: &PowerModel) -> f64 {
+        model.energy(self.busy_s(), self.comm_s() + self.idle_s())
+    }
+
+    /// Exact energy restricted to [t0, t1) — used to exclude initialization
+    /// lead-in from the accounting, as the paper's monitoring script does.
+    pub fn energy_j_between(&self, model: &PowerModel, t0: f64, t1: f64) -> f64 {
+        let mut e = 0.0;
+        for iv in &self.intervals {
+            let s = iv.start_s.max(t0);
+            let t = iv.end_s.min(t1);
+            if t > s {
+                let w = match iv.activity {
+                    Activity::Compute => model.busy_w,
+                    _ => model.idle_w,
+                };
+                e += w * (t - s);
+            }
+        }
+        e
+    }
+
+    /// Merge another rank's ledger total into a cluster summary.
+    pub fn summary(&self) -> LedgerSummary {
+        LedgerSummary {
+            busy_s: self.busy_s(),
+            comm_s: self.comm_s(),
+            idle_s: self.idle_s(),
+            end_s: self.now_s,
+        }
+    }
+}
+
+/// Aggregated view of one or more ledgers.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct LedgerSummary {
+    pub busy_s: f64,
+    pub comm_s: f64,
+    pub idle_s: f64,
+    pub end_s: f64,
+}
+
+impl LedgerSummary {
+    pub fn accumulate(&mut self, other: &LedgerSummary) {
+        self.busy_s += other.busy_s;
+        self.comm_s += other.comm_s;
+        self.idle_s += other.idle_s;
+        self.end_s = self.end_s.max(other.end_s);
+    }
+
+    pub fn energy_j(&self, model: &PowerModel) -> f64 {
+        model.energy(self.busy_s, self.comm_s + self.idle_s)
+    }
+}
+
+/// Sampled power sensor: the rocm-smi substitute. Samples the instantaneous
+/// draw of a ledger at fixed intervals, producing the power-time curve whose
+/// area the paper integrates.
+#[derive(Debug, Clone)]
+pub struct PowerSensor {
+    pub interval_s: f64,
+}
+
+impl PowerSensor {
+    pub fn new(interval_s: f64) -> PowerSensor {
+        assert!(interval_s > 0.0);
+        PowerSensor { interval_s }
+    }
+
+    /// Sample the ledger: returns (time, Watts) pairs covering [0, now].
+    pub fn sample(&self, ledger: &EnergyLedger, model: &PowerModel) -> Vec<(f64, f64)> {
+        let mut out = Vec::new();
+        let mut t = 0.0;
+        while t <= ledger.now_s + 1e-12 {
+            out.push((t, self.power_at(ledger, model, t)));
+            t += self.interval_s;
+        }
+        out
+    }
+
+    fn power_at(&self, ledger: &EnergyLedger, model: &PowerModel, t: f64) -> f64 {
+        for iv in ledger.intervals() {
+            if t >= iv.start_s && t < iv.end_s {
+                return match iv.activity {
+                    Activity::Compute => model.busy_w,
+                    _ => model.idle_w,
+                };
+            }
+        }
+        model.idle_w
+    }
+
+    /// Left-Riemann integral of the sampled curve over [t0, t1] — the
+    /// paper's "area under the power-time curve over the training phase".
+    pub fn integrate(&self, samples: &[(f64, f64)], t0: f64, t1: f64) -> f64 {
+        let mut e = 0.0;
+        for w in samples.windows(2) {
+            let (ta, pa) = w[0];
+            let (tb, _) = w[1];
+            let s = ta.max(t0);
+            let t = tb.min(t1);
+            if t > s {
+                e += pa * (t - s);
+            }
+        }
+        e
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frontier_constants() {
+        let m = PowerModel::frontier();
+        assert_eq!(m.busy_w, 560.0);
+        assert_eq!(m.idle_w, 90.0);
+        assert!(m.busy_w > m.idle_w, "paper requires A > B");
+    }
+
+    #[test]
+    fn ledger_accumulates() {
+        let mut l = EnergyLedger::new();
+        l.advance(2.0, Activity::Compute);
+        l.advance(1.0, Activity::Communicate);
+        l.advance(0.5, Activity::Idle);
+        assert_eq!(l.busy_s(), 2.0);
+        assert_eq!(l.comm_s(), 1.0);
+        assert_eq!(l.idle_s(), 0.5);
+        assert_eq!(l.now_s, 3.5);
+        let m = PowerModel::frontier();
+        let e = l.energy_j(&m);
+        assert!((e - (560.0 * 2.0 + 90.0 * 1.5)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sync_to_records_idle() {
+        let mut l = EnergyLedger::new();
+        l.advance(1.0, Activity::Compute);
+        l.sync_to(3.0);
+        assert_eq!(l.idle_s(), 2.0);
+        l.sync_to(2.0); // past: no-op
+        assert_eq!(l.now_s, 3.0);
+    }
+
+    #[test]
+    fn zero_duration_is_noop() {
+        let mut l = EnergyLedger::new();
+        l.advance(0.0, Activity::Compute);
+        assert!(l.intervals().is_empty());
+    }
+
+    #[test]
+    fn energy_between_excludes_leadin() {
+        let mut l = EnergyLedger::new();
+        l.advance(1.0, Activity::Idle); // "initialization"
+        l.advance(2.0, Activity::Compute); // "training"
+        let m = PowerModel::frontier();
+        let full = l.energy_j(&m);
+        let train_only = l.energy_j_between(&m, 1.0, 3.0);
+        assert!((full - (90.0 + 1120.0)).abs() < 1e-9);
+        assert!((train_only - 1120.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sampled_curve_integral_matches_exact() {
+        let mut l = EnergyLedger::new();
+        l.advance(0.4, Activity::Compute);
+        l.advance(0.2, Activity::Communicate);
+        l.advance(0.4, Activity::Compute);
+        let m = PowerModel::frontier();
+        // Sample finer than the shortest interval so the Riemann sum is exact
+        // (all interval boundaries are multiples of the sampling step).
+        let sensor = PowerSensor::new(0.01);
+        let samples = sensor.sample(&l, &m);
+        let integral = sensor.integrate(&samples, 0.0, l.now_s);
+        let exact = l.energy_j(&m);
+        assert!(
+            (integral - exact).abs() / exact < 1e-6,
+            "integral={integral} exact={exact}"
+        );
+    }
+
+    #[test]
+    fn summary_accumulate() {
+        let mut a = LedgerSummary { busy_s: 1.0, comm_s: 2.0, idle_s: 3.0, end_s: 6.0 };
+        let b = LedgerSummary { busy_s: 0.5, comm_s: 0.5, idle_s: 0.5, end_s: 7.0 };
+        a.accumulate(&b);
+        assert_eq!(a.busy_s, 1.5);
+        assert_eq!(a.end_s, 7.0);
+        let m = PowerModel { busy_w: 100.0, idle_w: 10.0 };
+        assert!((a.energy_j(&m) - (150.0 + 60.0)).abs() < 1e-9);
+    }
+}

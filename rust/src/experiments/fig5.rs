@@ -1,0 +1,158 @@
+//! Fig. 5: parallel execution performance for a fixed number of epochs.
+//!
+//! (a) communication time per epoch, TP vs PP — n=65,536, L=6, k=64,
+//!     p in {32, 64, 128}. The paper shows PP communication far below TP.
+//! (b) total execution time per epoch, small model — n=4,096, L=2,
+//!     p in {8..256}; the paper shows PP ahead but CONVERGING to TP as p
+//!     grows (latency-bound regime).
+//! (c) same at n=16,384: PP regains a clear advantage.
+//!
+//! All three are modeled at the paper's scales with the calibrated
+//! perfmodel + the paper's own Table III collective constants.
+
+use anyhow::Result;
+
+use super::ExperimentResult;
+use crate::config::Parallelism::{Phantom, Tensor};
+use crate::perfmodel::{predict, GemmModel, Workload};
+use crate::simnet::NetworkProfile;
+use crate::util::json::Json;
+use crate::util::table::{fmt_secs, Table};
+
+/// Paper's per-p phantom widths for the small-model sweeps (Fig. 5b labels
+/// k=16..3; Fig. 5c labels k=16..4).
+fn k_for(p: usize, n: usize) -> usize {
+    let m = n / p;
+    // k shrinks with p, floored at 3-4 as in the paper's labels
+    (m / 64).clamp(if n >= 16_384 { 4 } else { 3 }, 64)
+}
+
+pub fn fig5a() -> Result<ExperimentResult> {
+    let net = NetworkProfile::frontier();
+    let mut table = Table::new(
+        "Fig 5a — Communication time per iteration (n=65,536, L=6, k=64) [modeled]",
+        &["p", "TP comm", "PP comm", "TP/PP ratio"],
+    );
+    let mut rows = Vec::new();
+    for p in [32usize, 64, 128] {
+        let w = Workload { n: 65_536, layers: 6, p, k: 64, batch: 32 };
+        let tp = crate::perfmodel::tp_comm_s(&w, &net);
+        let pp = crate::perfmodel::pp_comm_s(&w, &net);
+        table.row(vec![
+            p.to_string(),
+            fmt_secs(tp),
+            fmt_secs(pp),
+            format!("{:.1}x", tp / pp),
+        ]);
+        rows.push(Json::obj(vec![
+            ("p", Json::int(p as i64)),
+            ("tp_comm_s", Json::num(tp)),
+            ("pp_comm_s", Json::num(pp)),
+        ]));
+    }
+    Ok(ExperimentResult { id: "fig5a", tables: vec![table], raw: Json::arr(rows) })
+}
+
+fn total_time_sweep(id: &'static str, n: usize, title: &str) -> Result<ExperimentResult> {
+    let net = NetworkProfile::frontier();
+    let g = GemmModel::frontier();
+    let mut table = Table::new(title, &["p", "k (PP)", "TP total", "PP total", "winner"]);
+    let mut rows = Vec::new();
+    for p in [8usize, 16, 32, 64, 128, 256] {
+        let k = k_for(p, n);
+        let w = Workload { n, layers: 2, p, k, batch: 32 };
+        let tp = predict(Tensor, &w, &g, &net).total_s();
+        let pp = predict(Phantom, &w, &g, &net).total_s();
+        table.row(vec![
+            p.to_string(),
+            k.to_string(),
+            fmt_secs(tp),
+            fmt_secs(pp),
+            if pp < tp { "PP" } else { "TP" }.to_string(),
+        ]);
+        rows.push(Json::obj(vec![
+            ("p", Json::int(p as i64)),
+            ("k", Json::int(k as i64)),
+            ("tp_s", Json::num(tp)),
+            ("pp_s", Json::num(pp)),
+        ]));
+    }
+    Ok(ExperimentResult { id, tables: vec![table], raw: Json::arr(rows) })
+}
+
+pub fn fig5b() -> Result<ExperimentResult> {
+    total_time_sweep(
+        "fig5b",
+        4_096,
+        "Fig 5b — Total time per iteration (n=4,096, L=2) [modeled]",
+    )
+}
+
+pub fn fig5c() -> Result<ExperimentResult> {
+    total_time_sweep(
+        "fig5c",
+        16_384,
+        "Fig 5c — Total time per iteration (n=16,384, L=2) [modeled]",
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig5a_pp_comm_below_tp_everywhere() {
+        let r = fig5a().unwrap();
+        for row in r.raw.as_arr().unwrap() {
+            let tp = row.get("tp_comm_s").as_f64().unwrap();
+            let pp = row.get("pp_comm_s").as_f64().unwrap();
+            assert!(pp < tp, "{row:?}");
+            assert!(tp / pp > 3.0, "paper shows a wide gap: {row:?}");
+        }
+    }
+
+    #[test]
+    fn fig5b_pp_wins_small_p_and_converges() {
+        // PP ahead at p=8; the advantage shrinks as p grows (paper: "the
+        // relative performance tends to converge" for the small model; in
+        // our model the quadratic peer term eventually flips it).
+        let r = fig5b().unwrap();
+        let rows = r.raw.as_arr().unwrap();
+        let gap = |row: &Json| {
+            row.get("tp_s").as_f64().unwrap() / row.get("pp_s").as_f64().unwrap()
+        };
+        assert!(gap(&rows[0]) > 1.0, "PP should win at p=8: gap {}", gap(&rows[0]));
+        assert!(
+            gap(&rows[rows.len() - 1]) < gap(&rows[0]),
+            "gap should shrink with p: first {} last {}",
+            gap(&rows[0]),
+            gap(&rows[rows.len() - 1])
+        );
+    }
+
+    #[test]
+    fn fig5c_pp_wins_at_moderate_p() {
+        // Paper Fig 5c: PP regains its advantage at n=16,384. Our model
+        // reproduces the PP win through p=64 (the quadratic peer term takes
+        // over beyond that; the paper's plot shows rough parity there).
+        let r = fig5c().unwrap();
+        for row in r.raw.as_arr().unwrap() {
+            let p = row.get("p").as_usize().unwrap();
+            if p <= 64 {
+                let tp = row.get("tp_s").as_f64().unwrap();
+                let pp = row.get("pp_s").as_f64().unwrap();
+                assert!(pp < tp, "PP should win at p={p}");
+            }
+        }
+    }
+
+    #[test]
+    fn k_respects_eqn8() {
+        for n in [4_096usize, 16_384] {
+            for p in [8usize, 64, 256] {
+                let k = k_for(p, n);
+                assert!(k < n / p, "n={n} p={p} k={k}");
+            }
+        }
+    }
+}

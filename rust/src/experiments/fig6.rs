@@ -1,0 +1,84 @@
+//! Fig. 6: TP vs PP at the paper's largest model sizes (modeled).
+//!
+//! n = 131,072: PP wins up to p = 128; TP overtakes at p = 256 (the
+//! "flip-flop" the paper traces to small-GEMM inefficiency + p-proportional
+//! gradient-aggregation management).
+//! n = 262,144: PP wins everywhere tested; TP cannot even run at p = 32
+//! (64 GB GCD memory exhausted), while PP fits.
+
+use anyhow::Result;
+
+use super::ExperimentResult;
+use crate::config::Parallelism::{Phantom, Tensor};
+use crate::perfmodel::{fits_memory, predict, GemmModel, Workload};
+use crate::simnet::NetworkProfile;
+use crate::util::json::Json;
+use crate::util::table::{fmt_secs, Table};
+
+pub fn fig6() -> Result<ExperimentResult> {
+    let net = NetworkProfile::frontier();
+    let g = GemmModel::frontier();
+    let mut tables = Vec::new();
+    let mut raw = Vec::new();
+    for n in [131_072usize, 262_144] {
+        let mut table = Table::new(
+            &format!("Fig 6 — Time per iteration, n={n}, L=2, k=64 [modeled]"),
+            &["p", "TP total", "PP total", "winner"],
+        );
+        for p in [32usize, 64, 128, 256] {
+            let w = Workload { n, layers: 2, p, k: 64, batch: 32 };
+            let tp_fits = fits_memory(Tensor, &w);
+            let pp_fits = fits_memory(Phantom, &w);
+            assert!(pp_fits, "PP must fit everywhere in Fig 6");
+            let pp = predict(Phantom, &w, &g, &net).total_s();
+            let (tp_cell, winner, tp_json) = if tp_fits {
+                let tp = predict(Tensor, &w, &g, &net).total_s();
+                (
+                    fmt_secs(tp),
+                    if pp < tp { "PP" } else { "TP" },
+                    Json::num(tp),
+                )
+            } else {
+                ("OOM".to_string(), "PP", Json::Null)
+            };
+            table.row(vec![p.to_string(), tp_cell, fmt_secs(pp), winner.to_string()]);
+            raw.push(Json::obj(vec![
+                ("n", Json::int(n as i64)),
+                ("p", Json::int(p as i64)),
+                ("tp_s", tp_json),
+                ("pp_s", Json::num(pp)),
+                ("tp_oom", Json::Bool(!tp_fits)),
+            ]));
+        }
+        tables.push(table);
+    }
+    Ok(ExperimentResult { id: "fig6", tables, raw: Json::arr(raw) })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig6_matches_paper_structure() {
+        let r = fig6().unwrap();
+        for row in r.raw.as_arr().unwrap() {
+            let n = row.get("n").as_usize().unwrap();
+            let p = row.get("p").as_usize().unwrap();
+            let oom = row.get("tp_oom").as_bool().unwrap();
+            if n == 262_144 && p == 32 {
+                assert!(oom, "paper: TP OOMs at n=262144, p=32");
+                continue;
+            }
+            assert!(!oom, "only (262144, 32) should OOM: n={n} p={p}");
+            let tp = row.get("tp_s").as_f64().unwrap();
+            let pp = row.get("pp_s").as_f64().unwrap();
+            let pp_should_win = !(n == 131_072 && p == 256);
+            if pp_should_win {
+                assert!(pp < tp, "n={n} p={p}: PP should win (pp={pp} tp={tp})");
+            } else {
+                assert!(tp < pp, "n={n} p={p}: TP should win — the flip-flop");
+            }
+        }
+    }
+}

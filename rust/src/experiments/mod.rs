@@ -1,0 +1,78 @@
+//! Experiment harness: one module per table/figure of the paper's
+//! evaluation (Sec. VI + Appendix). Each experiment returns `Tables`
+//! (markdown/CSV-renderable) plus a raw JSON blob written to results/.
+//!
+//! Index (DESIGN.md §5):
+//!   fig5a  — comm time/epoch, TP vs PP, n=65,536 L=6 k=64      [modeled]
+//!   fig5b  — total time/epoch, n=4,096  L=2                     [modeled]
+//!   fig5c  — total time/epoch, n=16,384 L=2                     [modeled]
+//!   fig6   — time/epoch at n=131,072 / 262,144 (flip-flop, OOM) [modeled]
+//!   fig7a  — comm-free energy estimate to fixed loss            [measured]
+//!   fig7b  — measured energy to fixed loss                      [measured]
+//!   fig7c  — wall time to fixed loss                            [measured]
+//!   table1 — the full Table I at measured scale                 [measured]
+//!   table3 — collective model fit (Appendix Table III)          [synthetic]
+//!
+//! "measured" experiments train real models through PJRT on the simulated
+//! cluster at reduced width (n=1,024; see DESIGN.md §2 substitutions);
+//! "modeled" experiments use the calibrated analytic perfmodel at the
+//! paper's own scales.
+
+pub mod fig5;
+pub mod fig6;
+pub mod fig7;
+pub mod table3;
+
+use anyhow::Result;
+
+use crate::runtime::ExecServer;
+use crate::util::json::Json;
+use crate::util::table::Table;
+
+/// The result of one experiment.
+pub struct ExperimentResult {
+    pub id: &'static str,
+    pub tables: Vec<Table>,
+    pub raw: Json,
+}
+
+impl ExperimentResult {
+    pub fn render_markdown(&self) -> String {
+        let mut out = format!("## Experiment {}\n\n", self.id);
+        for t in &self.tables {
+            out.push_str(&t.markdown());
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Experiment ids in run order.
+pub const ALL: &[&str] = &[
+    "fig5a", "fig5b", "fig5c", "fig6", "fig7a", "fig7b", "fig7c", "table1", "table3",
+];
+
+/// Run one experiment by id. `server` is only used by the measured ones;
+/// passing None degrades those to an error message.
+pub fn run(id: &str, server: Option<&ExecServer>) -> Result<ExperimentResult> {
+    match id {
+        "fig5a" => fig5::fig5a(),
+        "fig5b" => fig5::fig5b(),
+        "fig5c" => fig5::fig5c(),
+        "fig6" => fig6::fig6(),
+        "fig7a" | "fig7b" | "fig7c" | "table1" => {
+            let server = server.ok_or_else(|| {
+                anyhow::anyhow!("experiment {id} needs artifacts (run `make artifacts`)")
+            })?;
+            let sweep = fig7::convergence_sweep(server)?;
+            match id {
+                "fig7a" => fig7::fig7a(&sweep),
+                "fig7b" => fig7::fig7b(&sweep),
+                "fig7c" => fig7::fig7c(&sweep),
+                _ => fig7::table1(&sweep),
+            }
+        }
+        "table3" => table3::table3(),
+        _ => anyhow::bail!("unknown experiment '{id}' (have: {})", ALL.join(", ")),
+    }
+}

@@ -1,0 +1,30 @@
+//! Phantom parallelism: an energy-efficient alternative to tensor
+//! parallelism for neural-network training and inferencing.
+//!
+//! Rust reproduction of Seal et al., *A Parallel Alternative for
+//! Energy-Efficient Neural Network Training and Inferencing* (ORNL, 2025),
+//! built as a three-layer stack:
+//!
+//! * L1 — Pallas kernels (python/compile/kernels, build-time only)
+//! * L2 — JAX per-rank step functions, AOT-lowered to HLO text artifacts
+//! * L3 — this crate: the distributed coordinator, collective fabric,
+//!   virtual-time network + energy simulation, training loop, and the
+//!   experiment harness that regenerates every table/figure of the paper.
+//!
+//! See DESIGN.md for the system inventory and EXPERIMENTS.md for
+//! paper-vs-measured results.
+
+pub mod cli;
+pub mod comm;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod energy;
+pub mod experiments;
+pub mod model;
+pub mod perfmodel;
+pub mod runtime;
+pub mod simnet;
+pub mod tensor;
+pub mod train;
+pub mod util;

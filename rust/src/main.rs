@@ -1,0 +1,242 @@
+//! `phantom` — launcher for the phantom-parallelism training system.
+//!
+//! See `phantom help` (cli::USAGE) for the command reference. Python/JAX
+//! never runs here: artifacts are AOT-built by `make artifacts` and loaded
+//! via PJRT.
+
+use anyhow::{bail, Result};
+
+use phantom::cli::{Args, USAGE};
+use phantom::config::{preset, OptimizerConfig, Parallelism};
+use phantom::coordinator;
+use phantom::experiments;
+use phantom::perfmodel::{self, GemmModel, Workload};
+use phantom::runtime::{default_artifact_dir, ExecServer};
+use phantom::simnet::NetworkProfile;
+use phantom::util::json::Json;
+use phantom::util::table::{fmt_joules, fmt_secs, Table};
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run(argv: Vec<String>) -> Result<()> {
+    let args = Args::parse(argv)?;
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "train" => cmd_train(&args),
+        "experiment" => cmd_experiment(&args),
+        "predict" => cmd_predict(&args),
+        "inspect" => cmd_inspect(),
+        "fit-comm" => cmd_fit_comm(),
+        "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown command '{other}'\n\n{USAGE}"),
+    }
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    args.check_known(&[
+        "preset", "mode", "iters", "target-loss", "lr", "optimizer", "seed", "out",
+    ])?;
+    let preset_name = args.opt("preset").unwrap_or("quickstart");
+    let mode = Parallelism::parse(args.opt("mode").unwrap_or("pp"))?;
+    let mut cfg = preset(preset_name, mode)?;
+    if let Some(iters) = args.opt_parse::<usize>("iters")? {
+        cfg.train.max_iters = iters;
+    }
+    cfg.train.target_loss = args.opt_parse::<f64>("target-loss")?;
+    if let Some(seed) = args.opt_parse::<u64>("seed")? {
+        cfg.train.seed = seed;
+    }
+    let lr = args.opt_parse::<f32>("lr")?.unwrap_or(1.0);
+    cfg.train.optimizer = match args.opt("optimizer").unwrap_or("sgd") {
+        "sgd" => OptimizerConfig::Sgd { lr },
+        "momentum" => OptimizerConfig::Momentum { lr, beta: 0.9 },
+        "adam" => OptimizerConfig::Adam { lr, beta1: 0.9, beta2: 0.999, eps: 1e-8 },
+        o => bail!("unknown optimizer '{o}'"),
+    };
+
+    let server = ExecServer::start(default_artifact_dir())?;
+    eprintln!(
+        "training {} / {} on {} simulated ranks (n={}, k={}, L={})...",
+        preset_name,
+        cfg.mode.name(),
+        cfg.p,
+        cfg.model.n,
+        cfg.model.k,
+        cfg.model.layers
+    );
+    let report = coordinator::train(&cfg, &server)?;
+
+    let mut t = Table::new(
+        &format!("Training report — {} ({})", preset_name, cfg.mode.name()),
+        &["metric", "value"],
+    );
+    t.row(vec!["iterations".into(), report.iterations.to_string()]);
+    t.row(vec![
+        "final loss".into(),
+        format!("{:.6}", report.losses.last().copied().unwrap_or(f64::NAN)),
+    ]);
+    t.row(vec!["model params".into(), report.model_params.to_string()]);
+    t.row(vec!["energy (train)".into(), fmt_joules(report.energy_train_j)]);
+    t.row(vec!["energy/iter".into(), fmt_joules(report.energy_per_iter_j())]);
+    t.row(vec!["virtual wall".into(), fmt_secs(report.wall_train_s)]);
+    print!("{}", t.markdown());
+
+    // loss curve (sparse print)
+    let stride = (report.losses.len() / 10).max(1);
+    println!("\nloss curve:");
+    for (i, l) in report.losses.iter().enumerate() {
+        if i % stride == 0 || i + 1 == report.losses.len() {
+            println!("  iter {i:>5}  loss {l:.6}");
+        }
+    }
+
+    if let Some(path) = args.opt("out") {
+        std::fs::write(path, report_json(&report).pretty())?;
+        eprintln!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn report_json(r: &coordinator::TrainReport) -> Json {
+    Json::obj(vec![
+        ("mode", Json::str(r.mode.name())),
+        ("p", Json::int(r.p as i64)),
+        ("n", Json::int(r.n as i64)),
+        ("k", Json::int(r.k as i64)),
+        ("layers", Json::int(r.layers as i64)),
+        ("batch", Json::int(r.batch as i64)),
+        ("iterations", Json::int(r.iterations as i64)),
+        ("reached_target", Json::Bool(r.reached_target)),
+        ("model_params", Json::int(r.model_params as i64)),
+        ("energy_total_j", Json::num(r.energy_total_j)),
+        ("energy_train_j", Json::num(r.energy_train_j)),
+        ("wall_s", Json::num(r.wall_s)),
+        ("wall_train_s", Json::num(r.wall_train_s)),
+        ("losses", Json::arr(r.losses.iter().map(|&l| Json::num(l)).collect())),
+        (
+            "per_rank",
+            Json::arr(
+                r.per_rank
+                    .iter()
+                    .map(|rr| {
+                        Json::obj(vec![
+                            ("rank", Json::int(rr.rank as i64)),
+                            ("busy_s", Json::num(rr.ledger.busy_s)),
+                            ("comm_s", Json::num(rr.ledger.comm_s)),
+                            ("idle_s", Json::num(rr.ledger.idle_s)),
+                            ("floats_moved", Json::int(rr.stats.floats_moved as i64)),
+                            ("collectives", Json::int(rr.stats.collectives() as i64)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+fn cmd_experiment(args: &Args) -> Result<()> {
+    args.check_known(&["out-dir"])?;
+    let id = args
+        .positional
+        .get(1)
+        .map(|s| s.as_str())
+        .ok_or_else(|| anyhow::anyhow!("usage: phantom experiment <id|all>"))?;
+    let ids: Vec<&str> = if id == "all" {
+        experiments::ALL.to_vec()
+    } else {
+        vec![id]
+    };
+    // Start the server lazily: the modeled experiments don't need it.
+    let needs_server = ids.iter().any(|i| i.starts_with("fig7") || *i == "table1");
+    let server = if needs_server {
+        Some(ExecServer::start(default_artifact_dir())?)
+    } else {
+        None
+    };
+    for id in ids {
+        eprintln!("running {id}...");
+        let result = experiments::run(id, server.as_ref())?;
+        print!("{}", result.render_markdown());
+        if let Some(dir) = args.opt("out-dir") {
+            std::fs::create_dir_all(dir)?;
+            std::fs::write(
+                format!("{dir}/{id}.md"),
+                result.render_markdown(),
+            )?;
+            std::fs::write(format!("{dir}/{id}.json"), result.raw.pretty())?;
+        }
+    }
+    Ok(())
+}
+
+fn cmd_predict(args: &Args) -> Result<()> {
+    args.check_known(&["n", "p", "k", "layers", "batch"])?;
+    let w = Workload {
+        n: args.opt_parse::<usize>("n")?.unwrap_or(131_072),
+        p: args.opt_parse::<usize>("p")?.unwrap_or(64),
+        k: args.opt_parse::<usize>("k")?.unwrap_or(64),
+        layers: args.opt_parse::<usize>("layers")?.unwrap_or(2),
+        batch: args.opt_parse::<usize>("batch")?.unwrap_or(32),
+    };
+    let g = GemmModel::frontier();
+    let net = NetworkProfile::frontier();
+    let power = phantom::energy::PowerModel::frontier();
+    let mut t = Table::new(
+        &format!(
+            "Analytic prediction — n={}, p={}, k={}, L={}, batch={}",
+            w.n, w.p, w.k, w.layers, w.batch
+        ),
+        &["mode", "compute", "comm", "dispatch", "total/iter", "energy/iter", "fits HBM"],
+    );
+    for mode in [Parallelism::Tensor, Parallelism::Phantom] {
+        let c = perfmodel::predict(mode, &w, &g, &net);
+        t.row(vec![
+            mode.name().to_uppercase(),
+            fmt_secs(c.compute_s),
+            fmt_secs(c.comm_s),
+            fmt_secs(c.dispatch_s),
+            fmt_secs(c.total_s()),
+            fmt_joules(c.energy_j(&power)),
+            perfmodel::fits_memory(mode, &w).to_string(),
+        ]);
+    }
+    print!("{}", t.markdown());
+    Ok(())
+}
+
+fn cmd_inspect() -> Result<()> {
+    let dir = default_artifact_dir();
+    let server = ExecServer::start(&dir)?;
+    let mut t = Table::new(
+        &format!("Artifact manifest — {}", dir.display()),
+        &["config", "p", "n", "k", "batch", "variant", "entries"],
+    );
+    for c in server.manifest.iter() {
+        t.row(vec![
+            c.name.clone(),
+            c.p.to_string(),
+            c.n.to_string(),
+            c.k.to_string(),
+            c.batch.to_string(),
+            c.variant.clone(),
+            c.entries.len().to_string(),
+        ]);
+    }
+    print!("{}", t.markdown());
+    Ok(())
+}
+
+fn cmd_fit_comm() -> Result<()> {
+    let result = experiments::run("table3", None)?;
+    print!("{}", result.render_markdown());
+    Ok(())
+}

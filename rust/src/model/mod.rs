@@ -1,0 +1,448 @@
+//! Model state: partitioning math, parameter shapes, initialization and
+//! parameter counting for phantom-parallel and tensor-parallel FFNs.
+//!
+//! Initialization is deterministic per (seed, mode, layer, rank) so a p-rank
+//! distributed run and the single-rank dense-equivalent oracle construct
+//! bit-identical weights — the integration tests rely on this.
+
+use anyhow::Result;
+
+use crate::config::ModelConfig;
+use crate::tensor::Tensor;
+use crate::util::prng::Prng;
+
+/// Per-rank phantom-parallel parameters (paper Sec. IV):
+/// for each layer l: L [m, m], C [m, k], D [p, k, m] (own slot zero), b [m].
+#[derive(Debug, Clone)]
+pub struct PhantomRankParams {
+    pub rank: usize,
+    pub p: usize,
+    /// Shard width m = n/p.
+    pub m: usize,
+    pub k: usize,
+    pub locals: Vec<Tensor>,
+    pub compressors: Vec<Tensor>,
+    pub decompressors: Vec<Tensor>,
+    pub biases: Vec<Tensor>,
+}
+
+/// Per-rank tensor-parallel parameters: for each layer l the column shard
+/// W [n, m] and bias shard b [m].
+#[derive(Debug, Clone)]
+pub struct TpRankParams {
+    pub rank: usize,
+    pub p: usize,
+    pub m: usize,
+    pub weights: Vec<Tensor>,
+    pub biases: Vec<Tensor>,
+}
+
+/// Weight init scales: He-style fan-in gains, with the phantom remote path
+/// normalized by the source count so the local and aggregate-remote
+/// contributions to z have comparable variance at init. This matters for
+/// the convergence experiments: the compressor-decompressor product is a
+/// rank-k bottleneck that learns very slowly from tiny init (deep-linear
+/// dynamics), and the paper's fixed-loss comparisons presume PP trains
+/// readily.
+fn local_sigma(m: usize) -> f32 {
+    (1.0 / m as f32).sqrt()
+}
+
+fn compressor_sigma(m: usize) -> f32 {
+    (2.0 / m as f32).sqrt()
+}
+
+fn decompressor_sigma(k: usize, p: usize) -> f32 {
+    (1.0 / (k * (p - 1).max(1)) as f32).sqrt()
+}
+
+fn tp_sigma(n: usize) -> f32 {
+    (2.0 / n as f32).sqrt()
+}
+
+const BIAS_SIGMA: f32 = 0.01;
+
+impl PhantomRankParams {
+    /// Deterministic init: stream derived from (seed, layer, rank, role).
+    pub fn init(model: &ModelConfig, p: usize, rank: usize, seed: u64) -> Result<Self> {
+        model.validate(p)?;
+        let m = model.n / p;
+        let k = model.k;
+        let mut locals = Vec::new();
+        let mut compressors = Vec::new();
+        let mut decompressors = Vec::new();
+        let mut biases = Vec::new();
+        for l in 0..model.layers {
+            locals.push(Tensor::randn(
+                &[m, m],
+                local_sigma(m),
+                &mut stream(seed, 0, l, rank, 0),
+            ));
+            compressors.push(Tensor::randn(
+                &[m, k],
+                compressor_sigma(m),
+                &mut stream(seed, 0, l, rank, 1),
+            ));
+            // D[src] on this rank decompresses the phantom layer received
+            // from `src`; stream keyed by (src -> rank) so the dense oracle
+            // can rebuild the identical matrix. Own slot stays zero.
+            let mut d = Tensor::zeros(&[p, k, m]);
+            for src in 0..p {
+                if src == rank {
+                    continue;
+                }
+                let block = Tensor::randn(
+                    &[k, m],
+                    decompressor_sigma(k, p),
+                    &mut dstream(seed, l, rank, src),
+                );
+                let off = src * k * m;
+                d.data_mut()[off..off + k * m].copy_from_slice(block.data());
+            }
+            decompressors.push(d);
+            biases.push(Tensor::randn(&[m], BIAS_SIGMA, &mut stream(seed, 0, l, rank, 2)));
+        }
+        Ok(PhantomRankParams {
+            rank,
+            p,
+            m,
+            k,
+            locals,
+            compressors,
+            decompressors,
+            biases,
+        })
+    }
+
+    pub fn layers(&self) -> usize {
+        self.locals.len()
+    }
+
+    /// Parameters held by this rank.
+    pub fn param_count(&self) -> u64 {
+        let per_layer = (self.m * self.m)                 // L
+            + (self.m * self.k)                           // C
+            + ((self.p - 1) * self.k * self.m)            // D (own slot frozen)
+            + self.m; // b
+        (per_layer * self.layers()) as u64
+    }
+
+    /// Flat list of (name, tensor) for optimizers/checkpoints. The D
+    /// tensors include the frozen zero slot; its gradient is always zero so
+    /// optimizers never move it (asserted in tests).
+    pub fn named_tensors(&mut self) -> Vec<(String, &mut Tensor)> {
+        let mut out = Vec::new();
+        let l = self.locals.len();
+        for (i, t) in self.locals.iter_mut().enumerate() {
+            out.push((format!("L{i}"), t));
+        }
+        for (i, t) in self.compressors.iter_mut().enumerate() {
+            out.push((format!("C{i}"), t));
+        }
+        for (i, t) in self.decompressors.iter_mut().enumerate() {
+            out.push((format!("D{i}"), t));
+        }
+        for (i, t) in self.biases.iter_mut().enumerate() {
+            out.push((format!("b{i}"), t));
+        }
+        debug_assert_eq!(out.len(), 4 * l);
+        out
+    }
+}
+
+impl TpRankParams {
+    /// Column shard of the full W. Streams are keyed by (layer, GLOBAL
+    /// column), not by rank, so the full matrix — and therefore the TP
+    /// training trajectory and its iterations-to-loss — is IDENTICAL for
+    /// every p (paper Table I: the TP epoch count is p-independent).
+    pub fn init(model: &ModelConfig, p: usize, rank: usize, seed: u64) -> Result<Self> {
+        model.validate(p)?;
+        let n = model.n;
+        let m = n / p;
+        let mut weights = Vec::new();
+        let mut biases = Vec::new();
+        for l in 0..model.layers {
+            let mut w = Tensor::zeros(&[n, m]);
+            let mut col = vec![0.0f32; n];
+            for c in 0..m {
+                let global_col = rank * m + c;
+                let mut rng = stream(seed, 1, l, global_col, 0);
+                rng.fill_normal(&mut col, tp_sigma(n));
+                for (r, &v) in col.iter().enumerate() {
+                    w.data_mut()[r * m + c] = v;
+                }
+            }
+            weights.push(w);
+            let mut b = Tensor::zeros(&[m]);
+            for c in 0..m {
+                let global_col = rank * m + c;
+                b.data_mut()[c] = stream(seed, 1, l, global_col, 2).normal_f32() * BIAS_SIGMA;
+            }
+            biases.push(b);
+        }
+        Ok(TpRankParams { rank, p, m, weights, biases })
+    }
+
+    pub fn layers(&self) -> usize {
+        self.weights.len()
+    }
+
+    pub fn param_count(&self) -> u64 {
+        let n = self.m * self.p;
+        ((n * self.m + self.m) * self.layers()) as u64
+    }
+
+    pub fn named_tensors(&mut self) -> Vec<(String, &mut Tensor)> {
+        let mut out = Vec::new();
+        for (i, t) in self.weights.iter_mut().enumerate() {
+            out.push((format!("W{i}"), t));
+        }
+        for (i, t) in self.biases.iter_mut().enumerate() {
+            out.push((format!("b{i}"), t));
+        }
+        out
+    }
+}
+
+/// Derive the deterministic stream for a parameter tensor.
+/// `mode`: 0 = phantom, 1 = tensor-parallel. `role`: 0 = weight, 1 =
+/// compressor, 2 = bias.
+fn stream(seed: u64, mode: u64, layer: usize, rank: usize, role: u64) -> Prng {
+    let tag = (mode << 48)
+        ^ ((layer as u64) << 32)
+        ^ ((rank as u64) << 16)
+        ^ (role << 8)
+        ^ 0x5EED;
+    Prng::new(seed ^ tag.wrapping_mul(0x9E3779B97F4A7C15))
+}
+
+/// Stream for a decompressor block (layer, dst rank, src rank).
+fn dstream(seed: u64, layer: usize, dst: usize, src: usize) -> Prng {
+    let tag = (2u64 << 48) ^ ((layer as u64) << 32) ^ ((dst as u64) << 16) ^ (src as u64);
+    Prng::new(seed ^ tag.wrapping_mul(0x9E3779B97F4A7C15))
+}
+
+// ---------------------------------------------------------------------------
+// Model-size accounting (paper Table I columns)
+// ---------------------------------------------------------------------------
+
+/// Total TP model size: L * (n^2 + n). Independent of p.
+pub fn tp_model_params(n: usize, layers: usize) -> u64 {
+    (layers * (n * n + n)) as u64
+}
+
+/// Total PP model size across all ranks:
+/// L * p * (m^2 + m*k + (p-1)*k*m + m) with m = n/p.
+pub fn pp_model_params(n: usize, layers: usize, p: usize, k: usize) -> u64 {
+    let m = n / p;
+    (layers * p * (m * m + m * k + (p - 1) * k * m + m)) as u64
+}
+
+/// Dense-equivalent of the sharded phantom model, evaluated on one rank.
+/// Used by integration tests (invariant 1 of DESIGN.md §6) and by the
+/// pure-Rust fallback path.
+pub struct DensePhantomOracle {
+    pub p: usize,
+    pub m: usize,
+    pub k: usize,
+    /// Per rank copies of the rank params, in rank order.
+    pub ranks: Vec<PhantomRankParams>,
+}
+
+impl DensePhantomOracle {
+    pub fn init(model: &ModelConfig, p: usize, seed: u64) -> Result<Self> {
+        let ranks = (0..p)
+            .map(|r| PhantomRankParams::init(model, p, r, seed))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(DensePhantomOracle { p, m: model.n / p, k: model.k, ranks })
+    }
+
+    /// Forward through all layers on the full width; returns y_out [B, n].
+    pub fn forward(&self, x: &Tensor) -> Result<Tensor> {
+        let mut y = x.clone();
+        let layers = self.ranks[0].layers();
+        for l in 0..layers {
+            y = self.forward_layer(l, &y)?;
+        }
+        Ok(y)
+    }
+
+    fn forward_layer(&self, l: usize, y_full: &Tensor) -> Result<Tensor> {
+        let shards = y_full.col_shards(self.p)?;
+        // phantom activations per source rank
+        let gs: Vec<Tensor> = (0..self.p)
+            .map(|j| shards[j].matmul(&self.ranks[j].compressors[l]))
+            .collect::<Result<_>>()?;
+        let mut outs = Vec::with_capacity(self.p);
+        for j in 0..self.p {
+            let mut z = shards[j].matmul(&self.ranks[j].locals[l])?;
+            for (src, g) in gs.iter().enumerate() {
+                if src == j {
+                    continue;
+                }
+                let d = self.ranks[j].decompressors[l].unstack_at(src); // [k, m]
+                z.add_assign(&g.matmul(&d)?);
+            }
+            // bias + relu
+            let b = &self.ranks[j].biases[l];
+            let bsz = z.shape()[0];
+            for r in 0..bsz {
+                for c in 0..self.m {
+                    let v = z.at(&[r, c]) + b.data()[c];
+                    z.set(&[r, c], v.max(0.0));
+                }
+            }
+            outs.push(z);
+        }
+        Tensor::from_col_shards(&outs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(n: usize, layers: usize, k: usize) -> ModelConfig {
+        ModelConfig { n, layers, k }
+    }
+
+    #[test]
+    fn table1_model_sizes() {
+        // Paper Table I, n = 16384, L = 2 (sizes in millions, rounded).
+        assert_eq!(tp_model_params(16_384, 2) / 1_000_000, 536); // "537M"
+        let cases = [
+            (8usize, 16usize, 71u64),
+            (16, 6, 36),  // "37M"
+            (32, 4, 21),
+            (64, 2, 12),  // "13M"
+            (128, 2, 13),
+            (256, 4, 35), // "36M"
+        ];
+        for (p, k, want_m) in cases {
+            let got = pp_model_params(16_384, 2, p, k) / 1_000_000;
+            assert!(
+                got == want_m || got == want_m + 1 || got + 1 == want_m,
+                "p={p} k={k}: got {got}M want ~{want_m}M"
+            );
+        }
+    }
+
+    #[test]
+    fn pp_smaller_than_tp_iff_eqn8() {
+        let n = 1024;
+        for p in [2usize, 4, 8, 16] {
+            let m = n / p;
+            for k in [1, m / 4, m - m / p - 1, m - m / p, m - 1] {
+                if k == 0 || k >= m {
+                    continue;
+                }
+                let pp = pp_model_params(n, 2, p, k);
+                let tp = tp_model_params(n, 2);
+                let eqn8 = (k as f64) < m as f64 * (1.0 - 1.0 / p as f64);
+                // Ignore the +n bias-count wrinkle by comparing weight-only
+                // when right at the boundary.
+                if eqn8 {
+                    assert!(pp < tp, "p={p} k={k}: pp={pp} tp={tp}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn init_is_deterministic_and_rank_distinct() {
+        let model = cfg(64, 2, 4);
+        let a = PhantomRankParams::init(&model, 4, 1, 7).unwrap();
+        let b = PhantomRankParams::init(&model, 4, 1, 7).unwrap();
+        assert_eq!(a.locals[0], b.locals[0]);
+        assert_eq!(a.decompressors[1], b.decompressors[1]);
+        let c = PhantomRankParams::init(&model, 4, 2, 7).unwrap();
+        assert_ne!(a.locals[0], c.locals[0]);
+        let d = PhantomRankParams::init(&model, 4, 1, 8).unwrap();
+        assert_ne!(a.locals[0], d.locals[0]);
+    }
+
+    #[test]
+    fn decompressor_own_slot_is_zero() {
+        let model = cfg(64, 2, 4);
+        for rank in 0..4 {
+            let params = PhantomRankParams::init(&model, 4, rank, 3).unwrap();
+            for l in 0..2 {
+                let own = params.decompressors[l].unstack_at(rank);
+                assert!(own.data().iter().all(|&x| x == 0.0), "rank {rank} layer {l}");
+                // and at least one other slot is nonzero
+                let other = params.decompressors[l].unstack_at((rank + 1) % 4);
+                assert!(other.data().iter().any(|&x| x != 0.0));
+            }
+        }
+    }
+
+    #[test]
+    fn param_count_matches_tensors() {
+        let model = cfg(64, 3, 4);
+        let mut params = PhantomRankParams::init(&model, 4, 0, 1).unwrap();
+        let m = 16usize;
+        let counted: usize = params
+            .named_tensors()
+            .iter()
+            .map(|(name, t)| {
+                if name.starts_with('D') {
+                    // exclude the frozen own slot from the logical count
+                    t.numel() - 4 * 0 - (4 - 3) * t.numel() / 4
+                } else {
+                    t.numel()
+                }
+            })
+            .sum();
+        assert_eq!(counted as u64, params.param_count());
+        assert_eq!(params.param_count(), (3 * (m * m + m * 4 + 3 * 4 * m + m)) as u64);
+    }
+
+    #[test]
+    fn tp_params_deterministic() {
+        let model = cfg(64, 2, 0);
+        let a = TpRankParams::init(&model, 4, 2, 9).unwrap();
+        let b = TpRankParams::init(&model, 4, 2, 9).unwrap();
+        assert_eq!(a.weights[1], b.weights[1]);
+        assert_eq!(a.param_count(), 2 * (64 * 16 + 16) as u64);
+    }
+
+    #[test]
+    fn tp_full_matrix_independent_of_p() {
+        // The assembled full W must be identical whether sharded 2-way or
+        // 8-way (paper: TP iterations-to-loss is p-independent).
+        let model = cfg(64, 2, 0);
+        let assemble = |p: usize| -> Tensor {
+            let shards: Vec<Tensor> = (0..p)
+                .map(|r| TpRankParams::init(&model, p, r, 5).unwrap().weights[0].clone())
+                .collect();
+            // weights are [n, m] column shards; reassemble columns
+            let n = 64;
+            let m = n / p;
+            let mut full = Tensor::zeros(&[n, n]);
+            for (j, s) in shards.iter().enumerate() {
+                for r in 0..n {
+                    for c in 0..m {
+                        full.set(&[r, j * m + c], s.at(&[r, c]));
+                    }
+                }
+            }
+            full
+        };
+        let w2 = assemble(2);
+        let w8 = assemble(8);
+        assert_eq!(w2, w8);
+    }
+
+    #[test]
+    fn dense_oracle_runs() {
+        let model = cfg(32, 2, 3);
+        let oracle = DensePhantomOracle::init(&model, 4, 5).unwrap();
+        let mut rng = Prng::new(1);
+        let x = Tensor::randn(&[4, 32], 1.0, &mut rng);
+        let y = oracle.forward(&x).unwrap();
+        assert_eq!(y.shape(), &[4, 32]);
+        // relu output is non-negative
+        assert!(y.data().iter().all(|&v| v >= 0.0));
+        assert!(y.data().iter().any(|&v| v > 0.0));
+    }
+}

@@ -1,0 +1,173 @@
+//! Artifact manifest: the contract between python/compile/aot.py and the
+//! Rust runtime. Parsed from artifacts/manifest.json with util::json.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// One static-shape artifact bundle (mirrors python/compile/shapes.py).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ManifestConfig {
+    pub name: String,
+    pub p: usize,
+    pub n: usize,
+    pub k: usize,
+    pub batch: usize,
+    /// Shard width n/p.
+    pub np: usize,
+    /// Baked-in MSE gradient scale 1/(batch*n).
+    pub scale: f64,
+    /// "jnp" (XLA-fused fast path) or "pallas" (L1 interpret kernels).
+    pub variant: String,
+    /// entry name -> HLO text filename.
+    pub entries: BTreeMap<String, String>,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    pub fingerprint: String,
+    configs: BTreeMap<String, ManifestConfig>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!(
+                "reading {} (run `make artifacts` to build the AOT bundle)",
+                path.display()
+            )
+        })?;
+        Manifest::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = Json::parse(text).map_err(|e| anyhow!("manifest: {e}"))?;
+        let version = j.get("version").as_i64().unwrap_or(0);
+        if version != 1 {
+            bail!("unsupported manifest version {version} (want 1)");
+        }
+        let mut configs = BTreeMap::new();
+        for c in j.get("configs").as_arr().context("manifest: configs[]")?.iter() {
+            let name = c.get("name").as_str().context("config name")?.to_string();
+            let entries = c
+                .get("entries")
+                .as_obj()
+                .context("config entries")?
+                .iter()
+                .map(|(k, v)| {
+                    v.as_str()
+                        .map(|s| (k.clone(), s.to_string()))
+                        .ok_or_else(|| anyhow!("entry '{k}' is not a string"))
+                })
+                .collect::<Result<BTreeMap<_, _>>>()?;
+            let cfg = ManifestConfig {
+                name: name.clone(),
+                p: c.get("p").as_usize().context("p")?,
+                n: c.get("n").as_usize().context("n")?,
+                k: c.get("k").as_usize().context("k")?,
+                batch: c.get("batch").as_usize().context("batch")?,
+                np: c.get("np").as_usize().context("np")?,
+                scale: c.get("scale").as_f64().context("scale")?,
+                variant: c.get("variant").as_str().unwrap_or("jnp").to_string(),
+                entries,
+            };
+            if cfg.np * cfg.p != cfg.n {
+                bail!("config '{name}': np * p != n ({} * {} != {})", cfg.np, cfg.p, cfg.n);
+            }
+            configs.insert(name, cfg);
+        }
+        Ok(Manifest {
+            fingerprint: j.get("fingerprint").as_str().unwrap_or("").to_string(),
+            configs,
+        })
+    }
+
+    pub fn config(&self, name: &str) -> Result<&ManifestConfig> {
+        self.configs.get(name).ok_or_else(|| {
+            anyhow!(
+                "artifact config '{name}' not in manifest (have: {})",
+                self.names().join(", ")
+            )
+        })
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        self.configs.keys().cloned().collect()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &ManifestConfig> {
+        self.configs.values()
+    }
+
+    /// Find a config matching the run geometry.
+    pub fn find(
+        &self,
+        p: usize,
+        n: usize,
+        k: usize,
+        batch: usize,
+        variant: &str,
+    ) -> Option<&ManifestConfig> {
+        self.configs.values().find(|c| {
+            c.p == p && c.n == n && c.k == k && c.batch == batch && c.variant == variant
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "fingerprint": "abc123",
+      "configs": [
+        {"name": "tiny", "p": 4, "n": 64, "k": 4, "batch": 8, "np": 16,
+         "scale": 0.001953125, "variant": "jnp",
+         "entries": {"pp_fwd_local": "pp_fwd_local__tiny.hlo.txt"}}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.fingerprint, "abc123");
+        let c = m.config("tiny").unwrap();
+        assert_eq!(c.p, 4);
+        assert_eq!(c.np, 16);
+        assert_eq!(c.entries["pp_fwd_local"], "pp_fwd_local__tiny.hlo.txt");
+        assert!(m.config("nope").is_err());
+        assert_eq!(m.find(4, 64, 4, 8, "jnp").unwrap().name, "tiny");
+        assert!(m.find(4, 64, 4, 8, "pallas").is_none());
+    }
+
+    #[test]
+    fn rejects_bad_version() {
+        assert!(Manifest::parse(r#"{"version": 2, "configs": []}"#).is_err());
+    }
+
+    #[test]
+    fn rejects_inconsistent_np() {
+        let bad = SAMPLE.replace("\"np\": 16", "\"np\": 8");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn loads_real_manifest_if_present() {
+        let dir = crate::runtime::default_artifact_dir();
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(m.config("tiny").is_ok());
+            let tiny = m.config("tiny").unwrap();
+            // every entry file must exist on disk
+            for f in tiny.entries.values() {
+                assert!(dir.join(f).exists(), "{f} missing");
+            }
+        }
+    }
+}

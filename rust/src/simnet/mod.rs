@@ -1,0 +1,269 @@
+//! Network performance model: the paper's unified collective cost model.
+//!
+//! Paper Appendix, Eqn. (26):
+//!     comm_time(m, p) = c1 * log2(p) + c2 * m + c3        [microseconds]
+//! with per-collective constants fitted on Frontier (Table III). We use the
+//! paper's constants to advance the virtual clock whenever the in-memory
+//! fabric executes a collective, and provide a least-squares fitting routine
+//! (`fit`) that regenerates Table III from (synthetic or measured) timings.
+
+use crate::util::stats;
+
+/// The collectives the paper's pipelines use (Table II).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Collective {
+    Broadcast,
+    AllReduce,
+    AllGather,
+    ReduceScatter,
+}
+
+impl Collective {
+    pub const ALL: [Collective; 4] = [
+        Collective::Broadcast,
+        Collective::AllReduce,
+        Collective::AllGather,
+        Collective::ReduceScatter,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Collective::Broadcast => "Broadcast",
+            Collective::AllReduce => "All-Reduce",
+            Collective::AllGather => "All-Gather",
+            Collective::ReduceScatter => "Reduce-Scatter",
+        }
+    }
+}
+
+/// Fitted constants of Eqn. (26) for one collective.
+/// c1: latency term (us per log2 p), c2: bandwidth term (us per float),
+/// c3: constant overhead (us) — ~0 on Frontier, carried for completeness.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CollectiveModel {
+    pub c1: f64,
+    pub c2: f64,
+    pub c3: f64,
+}
+
+impl CollectiveModel {
+    /// Predicted time in SECONDS for message size `m` floats across `p` ranks.
+    pub fn time(&self, m: usize, p: usize) -> f64 {
+        if p <= 1 {
+            return 0.0; // no communication without peers
+        }
+        let us = self.c1 * (p as f64).log2() + self.c2 * m as f64 + self.c3;
+        us * 1e-6
+    }
+}
+
+/// A full network profile: one model per collective.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NetworkProfile {
+    pub broadcast: CollectiveModel,
+    pub all_reduce: CollectiveModel,
+    pub all_gather: CollectiveModel,
+    pub reduce_scatter: CollectiveModel,
+}
+
+impl NetworkProfile {
+    /// The paper's Table III: Frontier, RCCL, message sizes 2^2..2^26 floats,
+    /// p in 2..256. c3 ~ 0 for all collectives (paper ignores it).
+    pub fn frontier() -> NetworkProfile {
+        NetworkProfile {
+            broadcast: CollectiveModel { c1: 35.5, c2: 1.12e-3, c3: 0.0 },
+            all_reduce: CollectiveModel { c1: 33.4, c2: 2.56e-3, c3: 0.0 },
+            all_gather: CollectiveModel { c1: 149.94, c2: 2.07e-3, c3: 0.0 },
+            reduce_scatter: CollectiveModel { c1: 145.52, c2: 2.40e-3, c3: 0.0 },
+        }
+    }
+
+    /// An idealized zero-cost network (for ablations / communication-free
+    /// energy estimates, Fig. 7a).
+    pub fn zero() -> NetworkProfile {
+        let z = CollectiveModel { c1: 0.0, c2: 0.0, c3: 0.0 };
+        NetworkProfile { broadcast: z, all_reduce: z, all_gather: z, reduce_scatter: z }
+    }
+
+    pub fn model(&self, c: Collective) -> &CollectiveModel {
+        match c {
+            Collective::Broadcast => &self.broadcast,
+            Collective::AllReduce => &self.all_reduce,
+            Collective::AllGather => &self.all_gather,
+            Collective::ReduceScatter => &self.reduce_scatter,
+        }
+    }
+
+    /// Predicted collective time in seconds.
+    pub fn time(&self, c: Collective, msg_floats: usize, p: usize) -> f64 {
+        self.model(c).time(msg_floats, p)
+    }
+}
+
+/// One timing observation for the fit.
+#[derive(Debug, Clone, Copy)]
+pub struct Observation {
+    pub msg_floats: usize,
+    pub p: usize,
+    pub time_us: f64,
+}
+
+/// Result of fitting Eqn. (26) to observations.
+#[derive(Debug, Clone, Copy)]
+pub struct FitResult {
+    pub model: CollectiveModel,
+    /// RMSE in log2(us), the metric Table III reports.
+    pub rmse_log2_us: f64,
+}
+
+/// Least-squares fit of comm_time(m, p) = c1 log2(p) + c2 m + c3.
+///
+/// The fit is RELATIVE-error weighted (each row scaled by 1/observed):
+/// collective timings span five orders of magnitude with multiplicative
+/// noise, so an unweighted linear fit lets the huge-message rows drown the
+/// latency term c1. Residuals are reported in log2(microseconds), the
+/// paper's Table III metric.
+pub fn fit(observations: &[Observation]) -> Option<FitResult> {
+    let rows = observations.len();
+    if rows < 3 {
+        return None;
+    }
+    // Iteratively reweighted least squares: round 0 weights by 1/observed,
+    // later rounds by 1/predicted. Weighting by the observation correlates
+    // the weight with the noise (low-noise rows get inflated weight, biasing
+    // the bandwidth term down); reweighting by the model's own prediction
+    // removes that correlation.
+    let mut weights: Vec<f64> = observations.iter().map(|o| 1.0 / o.time_us.max(1e-9)).collect();
+    let mut model = CollectiveModel { c1: 0.0, c2: 0.0, c3: 0.0 };
+    for _round in 0..3 {
+        let mut x = Vec::with_capacity(rows * 3);
+        let mut y = Vec::with_capacity(rows);
+        for (o, &w) in observations.iter().zip(&weights) {
+            x.extend_from_slice(&[
+                (o.p as f64).log2() * w,
+                o.msg_floats as f64 * w,
+                w,
+            ]);
+            y.push(o.time_us * w);
+        }
+        let beta = stats::least_squares(&x, 3, &y)?;
+        model = CollectiveModel { c1: beta[0], c2: beta[1], c3: beta[2] };
+        for (o, w) in observations.iter().zip(weights.iter_mut()) {
+            *w = 1.0 / (model.time(o.msg_floats, o.p) * 1e6).max(1e-9);
+        }
+    }
+
+    let pred_log: Vec<f64> = observations
+        .iter()
+        .map(|o| (model.time(o.msg_floats, o.p) * 1e6).max(1e-9).log2())
+        .collect();
+    let obs_log: Vec<f64> = observations.iter().map(|o| o.time_us.max(1e-9).log2()).collect();
+    Some(FitResult { model, rmse_log2_us: stats::rmse(&pred_log, &obs_log) })
+}
+
+/// Generate synthetic observations from a ground-truth model with
+/// multiplicative log-normal noise — the substitute for re-running the
+/// paper's microbenchmark campaign on Frontier (see DESIGN.md §2). Sweeps
+/// the paper's grid: m = 2^2..2^26 floats, p = 2..256.
+pub fn synthesize_observations(
+    truth: &CollectiveModel,
+    noise_sigma: f64,
+    rng: &mut crate::util::prng::Prng,
+) -> Vec<Observation> {
+    let mut out = Vec::new();
+    let mut p = 2usize;
+    while p <= 256 {
+        for logm in 2..=26 {
+            let m = 1usize << logm;
+            let t = truth.time(m, p) * 1e6; // us
+            let noisy = t * (rng.normal() * noise_sigma).exp();
+            out.push(Observation { msg_floats: m, p, time_us: noisy });
+        }
+        p *= 2;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Prng;
+
+    #[test]
+    fn frontier_constants_match_table3() {
+        let f = NetworkProfile::frontier();
+        assert_eq!(f.all_gather.c1, 149.94);
+        assert_eq!(f.reduce_scatter.c2, 2.40e-3);
+        assert_eq!(f.broadcast.c1, 35.5);
+        assert_eq!(f.all_reduce.c2, 2.56e-3);
+    }
+
+    #[test]
+    fn time_scales_with_p_and_m() {
+        let f = NetworkProfile::frontier();
+        let small = f.time(Collective::AllGather, 64, 8);
+        let wider = f.time(Collective::AllGather, 64, 64);
+        let bigger = f.time(Collective::AllGather, 1 << 20, 8);
+        assert!(wider > small, "latency term should grow with p");
+        assert!(bigger > small, "bandwidth term should grow with m");
+        // 64-float All-Gather at p=8: ~ 150*3 us latency-dominated
+        assert!((small - 449.95e-6).abs() < 1e-6);
+    }
+
+    #[test]
+    fn p1_is_free() {
+        let f = NetworkProfile::frontier();
+        assert_eq!(f.time(Collective::AllReduce, 1 << 20, 1), 0.0);
+    }
+
+    #[test]
+    fn pp_beats_tp_communication_per_iteration() {
+        // Paper Eqn. (9): k < n/p implies beta_pi < beta_tau. Check with the
+        // paper's own Table II message sizes and Table III constants.
+        let f = NetworkProfile::frontier();
+        let (n, p, k, batch) = (16_384usize, 32usize, 4usize, 32usize);
+        let tp = f.time(Collective::Broadcast, n * batch, p)
+            + f.time(Collective::AllGather, n / p * batch, p)
+            + f.time(Collective::AllReduce, n * batch, p)
+            + f.time(Collective::ReduceScatter, n / p * batch, p);
+        let pp = f.time(Collective::AllGather, k * batch, p)
+            + f.time(Collective::ReduceScatter, k * batch, p);
+        assert!(pp < tp, "pp={pp} tp={tp}");
+    }
+
+    #[test]
+    fn fit_recovers_truth_noiseless() {
+        let truth = CollectiveModel { c1: 100.0, c2: 2.5e-3, c3: 1.0 };
+        let mut rng = Prng::new(1);
+        let obs = synthesize_observations(&truth, 0.0, &mut rng);
+        let fitres = fit(&obs).unwrap();
+        assert!((fitres.model.c1 - truth.c1).abs() < 1e-6);
+        assert!((fitres.model.c2 - truth.c2).abs() < 1e-9);
+        assert!((fitres.model.c3 - truth.c3).abs() < 1e-4);
+        assert!(fitres.rmse_log2_us < 1e-6);
+    }
+
+    #[test]
+    fn fit_recovers_truth_with_noise() {
+        let truth = CollectiveModel { c1: 145.52, c2: 2.40e-3, c3: 0.0 };
+        let mut rng = Prng::new(2);
+        let obs = synthesize_observations(&truth, 0.3, &mut rng);
+        let fitres = fit(&obs).unwrap();
+        // Bandwidth term is identified by the huge-message rows; should be
+        // within ~15% despite noise.
+        assert!(
+            (fitres.model.c2 - truth.c2).abs() / truth.c2 < 0.15,
+            "c2={} vs {}",
+            fitres.model.c2,
+            truth.c2
+        );
+        assert!(fitres.rmse_log2_us > 0.0);
+    }
+
+    #[test]
+    fn fit_needs_enough_rows() {
+        assert!(fit(&[]).is_none());
+        let o = Observation { msg_floats: 4, p: 2, time_us: 1.0 };
+        assert!(fit(&[o, o]).is_none());
+    }
+}

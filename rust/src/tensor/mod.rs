@@ -1,0 +1,402 @@
+//! Host tensor: a dense, row-major f32 array with shape.
+//!
+//! This is the currency between PJRT executions, the collective fabric, and
+//! the optimizers. It deliberately implements only what the coordinator
+//! needs — plus a reference `matmul` used by tests to cross-check the
+//! AOT-compiled kernels and by the pure-Rust fallback path.
+
+use crate::util::prng::Prng;
+use anyhow::{bail, Result};
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        let numel = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![0.0; numel] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Result<Tensor> {
+        let numel: usize = shape.iter().product();
+        if numel != data.len() {
+            bail!("shape {:?} wants {} elements, got {}", shape, numel, data.len());
+        }
+        Ok(Tensor { shape: shape.to_vec(), data })
+    }
+
+    pub fn filled(shape: &[usize], v: f32) -> Tensor {
+        let numel = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![v; numel] }
+    }
+
+    /// N(0, sigma^2) initialization from a deterministic stream.
+    pub fn randn(shape: &[usize], sigma: f32, rng: &mut Prng) -> Tensor {
+        let mut t = Tensor::zeros(shape);
+        rng.fill_normal(&mut t.data, sigma);
+        t
+    }
+
+    // -- accessors ---------------------------------------------------------
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    pub fn at(&self, idx: &[usize]) -> f32 {
+        self.data[self.flat_index(idx)]
+    }
+
+    pub fn set(&mut self, idx: &[usize], v: f32) {
+        let i = self.flat_index(idx);
+        self.data[i] = v;
+    }
+
+    fn flat_index(&self, idx: &[usize]) -> usize {
+        assert_eq!(idx.len(), self.shape.len(), "index rank mismatch");
+        let mut flat = 0;
+        for (d, (&i, &s)) in idx.iter().zip(&self.shape).enumerate() {
+            assert!(i < s, "index {i} out of bounds for dim {d} (size {s})");
+            flat = flat * s + i;
+        }
+        flat
+    }
+
+    // -- shape ops ----------------------------------------------------------
+
+    pub fn reshape(&self, shape: &[usize]) -> Result<Tensor> {
+        let numel: usize = shape.iter().product();
+        if numel != self.data.len() {
+            bail!("cannot reshape {:?} ({} elems) to {:?}", self.shape, self.data.len(), shape);
+        }
+        Ok(Tensor { shape: shape.to_vec(), data: self.data.clone() })
+    }
+
+    /// Split along axis 1 of a 2-D tensor into `p` equal column shards.
+    /// This is the activation sharding used by both TP and PP.
+    pub fn col_shards(&self, p: usize) -> Result<Vec<Tensor>> {
+        if self.shape.len() != 2 {
+            bail!("col_shards needs a 2-D tensor, got {:?}", self.shape);
+        }
+        let (rows, cols) = (self.shape[0], self.shape[1]);
+        if cols % p != 0 {
+            bail!("cols {} not divisible by p {}", cols, p);
+        }
+        let w = cols / p;
+        let mut shards = vec![Tensor::zeros(&[rows, w]); p];
+        for r in 0..rows {
+            for j in 0..p {
+                let src = r * cols + j * w;
+                let dst = r * w;
+                shards[j].data[dst..dst + w].copy_from_slice(&self.data[src..src + w]);
+            }
+        }
+        Ok(shards)
+    }
+
+    /// Inverse of `col_shards`.
+    pub fn from_col_shards(shards: &[Tensor]) -> Result<Tensor> {
+        if shards.is_empty() {
+            bail!("no shards");
+        }
+        let rows = shards[0].shape[0];
+        let w = shards[0].shape[1];
+        for s in shards {
+            if s.shape != [rows, w] {
+                bail!("ragged shards: {:?} vs [{rows}, {w}]", s.shape);
+            }
+        }
+        let p = shards.len();
+        let mut out = Tensor::zeros(&[rows, w * p]);
+        for r in 0..rows {
+            for (j, s) in shards.iter().enumerate() {
+                let dst = r * w * p + j * w;
+                out.data[dst..dst + w].copy_from_slice(&s.data[r * w..(r + 1) * w]);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Stack equal-shaped tensors along a new leading axis.
+    pub fn stack(parts: &[Tensor]) -> Result<Tensor> {
+        if parts.is_empty() {
+            bail!("stack of nothing");
+        }
+        let inner = parts[0].shape.clone();
+        for t in parts {
+            if t.shape != inner {
+                bail!("ragged stack: {:?} vs {:?}", t.shape, inner);
+            }
+        }
+        let mut shape = vec![parts.len()];
+        shape.extend_from_slice(&inner);
+        let mut data = Vec::with_capacity(parts.len() * parts[0].numel());
+        for t in parts {
+            data.extend_from_slice(&t.data);
+        }
+        Ok(Tensor { shape, data })
+    }
+
+    /// Slice out index `i` of the leading axis.
+    pub fn unstack_at(&self, i: usize) -> Tensor {
+        assert!(!self.shape.is_empty() && i < self.shape[0]);
+        let inner: usize = self.shape[1..].iter().product();
+        Tensor {
+            shape: self.shape[1..].to_vec(),
+            data: self.data[i * inner..(i + 1) * inner].to_vec(),
+        }
+    }
+
+    /// Zero the `i`-th slice of the leading axis in place (the own-slot
+    /// convention after All-Gather; see python/compile/kernels/ref.py).
+    pub fn zero_slot(&mut self, i: usize) {
+        assert!(!self.shape.is_empty() && i < self.shape[0]);
+        let inner: usize = self.shape[1..].iter().product();
+        self.data[i * inner..(i + 1) * inner].fill(0.0);
+    }
+
+    /// Reassemble a stacked shard tensor [p, B, m] (All-Gather output) into
+    /// the full activation [B, p*m] with shard j occupying columns
+    /// [j*m, (j+1)*m). Inverse of `col_shards` + `stack`.
+    pub fn concat_shards_stacked(&self) -> Result<Tensor> {
+        if self.shape.len() != 3 {
+            bail!("concat_shards_stacked needs [p, B, m], got {:?}", self.shape);
+        }
+        let (p, b, m) = (self.shape[0], self.shape[1], self.shape[2]);
+        let mut out = Tensor::zeros(&[b, p * m]);
+        for j in 0..p {
+            for r in 0..b {
+                let src = (j * b + r) * m;
+                let dst = r * p * m + j * m;
+                out.data[dst..dst + m].copy_from_slice(&self.data[src..src + m]);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Slice columns [start, start+width) of a 2-D tensor.
+    pub fn col_slice(&self, start: usize, width: usize) -> Result<Tensor> {
+        if self.shape.len() != 2 {
+            bail!("col_slice needs a 2-D tensor, got {:?}", self.shape);
+        }
+        let (rows, cols) = (self.shape[0], self.shape[1]);
+        if start + width > cols {
+            bail!("col_slice [{start}, {}) out of bounds for {cols} cols", start + width);
+        }
+        let mut out = Tensor::zeros(&[rows, width]);
+        for r in 0..rows {
+            let src = r * cols + start;
+            out.data[r * width..(r + 1) * width]
+                .copy_from_slice(&self.data[src..src + width]);
+        }
+        Ok(out)
+    }
+
+    // -- elementwise ---------------------------------------------------------
+
+    pub fn add_assign(&mut self, other: &Tensor) {
+        assert_eq!(self.shape, other.shape, "add_assign shape mismatch");
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    pub fn scale(&mut self, s: f32) {
+        for a in self.data.iter_mut() {
+            *a *= s;
+        }
+    }
+
+    /// self -= lr * grad   (the SGD inner loop; optimizers build on this)
+    pub fn axpy(&mut self, alpha: f32, other: &Tensor) {
+        assert_eq!(self.shape, other.shape, "axpy shape mismatch");
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += alpha * b;
+        }
+    }
+
+    pub fn relu(&self) -> Tensor {
+        Tensor {
+            shape: self.shape.clone(),
+            data: self.data.iter().map(|&x| x.max(0.0)).collect(),
+        }
+    }
+
+    pub fn sq_sum(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum()
+    }
+
+    // -- reference linear algebra (tests / fallback; PJRT does the real work)
+
+    /// C = A @ B for 2-D tensors. Naive triple loop with the k-loop innermost
+    /// hoisted for cache friendliness; used by tests and the non-PJRT
+    /// fallback path only.
+    pub fn matmul(&self, other: &Tensor) -> Result<Tensor> {
+        if self.shape.len() != 2 || other.shape.len() != 2 {
+            bail!("matmul needs 2-D tensors: {:?} @ {:?}", self.shape, other.shape);
+        }
+        let (m, ka) = (self.shape[0], self.shape[1]);
+        let (kb, n) = (other.shape[0], other.shape[1]);
+        if ka != kb {
+            bail!("matmul inner dim mismatch: {:?} @ {:?}", self.shape, other.shape);
+        }
+        let mut out = Tensor::zeros(&[m, n]);
+        for i in 0..m {
+            for kk in 0..ka {
+                let a = self.data[i * ka + kk];
+                if a == 0.0 {
+                    continue;
+                }
+                let brow = &other.data[kk * n..(kk + 1) * n];
+                let orow = &mut out.data[i * n..(i + 1) * n];
+                for (o, &b) in orow.iter_mut().zip(brow) {
+                    *o += a * b;
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// 2-D transpose (reference).
+    pub fn transpose(&self) -> Result<Tensor> {
+        if self.shape.len() != 2 {
+            bail!("transpose needs a 2-D tensor, got {:?}", self.shape);
+        }
+        let (m, n) = (self.shape[0], self.shape[1]);
+        let mut out = Tensor::zeros(&[n, m]);
+        for i in 0..m {
+            for j in 0..n {
+                out.data[j * m + i] = self.data[i * n + j];
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{assert_close, quickcheck};
+
+    #[test]
+    fn construct_and_index() {
+        let mut t = Tensor::zeros(&[2, 3]);
+        t.set(&[1, 2], 5.0);
+        assert_eq!(t.at(&[1, 2]), 5.0);
+        assert_eq!(t.at(&[0, 0]), 0.0);
+        assert_eq!(t.numel(), 6);
+    }
+
+    #[test]
+    fn from_vec_validates() {
+        assert!(Tensor::from_vec(&[2, 2], vec![1.0; 4]).is_ok());
+        assert!(Tensor::from_vec(&[2, 2], vec![1.0; 3]).is_err());
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = Tensor::from_vec(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let b = Tensor::from_vec(&[2, 2], vec![1.0, 1.0, 1.0, 1.0]).unwrap();
+        let c = a.matmul(&b).unwrap();
+        assert_eq!(c.data(), &[3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn matmul_shape_errors() {
+        let a = Tensor::zeros(&[2, 3]);
+        let b = Tensor::zeros(&[2, 3]);
+        assert!(a.matmul(&b).is_err());
+    }
+
+    #[test]
+    fn shard_roundtrip() {
+        let mut rng = Prng::new(3);
+        let t = Tensor::randn(&[4, 8], 1.0, &mut rng);
+        let shards = t.col_shards(4).unwrap();
+        assert_eq!(shards.len(), 4);
+        assert_eq!(shards[0].shape(), &[4, 2]);
+        let back = Tensor::from_col_shards(&shards).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn stack_unstack_zero_slot() {
+        let a = Tensor::filled(&[2, 2], 1.0);
+        let b = Tensor::filled(&[2, 2], 2.0);
+        let mut s = Tensor::stack(&[a.clone(), b.clone()]).unwrap();
+        assert_eq!(s.shape(), &[2, 2, 2]);
+        assert_eq!(s.unstack_at(1), b);
+        s.zero_slot(0);
+        assert_eq!(s.unstack_at(0), Tensor::zeros(&[2, 2]));
+        assert_eq!(s.unstack_at(1), b);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        quickcheck("transpose twice is identity", |rng| {
+            let m = rng.int_in(1, 8) as usize;
+            let n = rng.int_in(1, 8) as usize;
+            let t = Tensor::randn(&[m, n], 1.0, rng);
+            let tt = t.transpose().unwrap().transpose().unwrap();
+            assert_close(t.data(), tt.data(), 0.0, 0.0)
+        });
+    }
+
+    #[test]
+    fn matmul_transpose_property() {
+        // (A @ B)^T == B^T @ A^T
+        quickcheck("matmul transpose identity", |rng| {
+            let m = rng.int_in(1, 6) as usize;
+            let k = rng.int_in(1, 6) as usize;
+            let n = rng.int_in(1, 6) as usize;
+            let a = Tensor::randn(&[m, k], 1.0, rng);
+            let b = Tensor::randn(&[k, n], 1.0, rng);
+            let lhs = a.matmul(&b).unwrap().transpose().unwrap();
+            let rhs = b.transpose().unwrap().matmul(&a.transpose().unwrap()).unwrap();
+            assert_close(lhs.data(), rhs.data(), 1e-5, 1e-6)
+        });
+    }
+
+    #[test]
+    fn elementwise_ops() {
+        let mut a = Tensor::filled(&[3], 1.0);
+        let b = Tensor::filled(&[3], 2.0);
+        a.add_assign(&b);
+        assert_eq!(a.data(), &[3.0, 3.0, 3.0]);
+        a.axpy(-0.5, &b);
+        assert_eq!(a.data(), &[2.0, 2.0, 2.0]);
+        a.scale(2.0);
+        assert_eq!(a.data(), &[4.0, 4.0, 4.0]);
+        let r = Tensor::from_vec(&[2], vec![-1.0, 1.0]).unwrap().relu();
+        assert_eq!(r.data(), &[0.0, 1.0]);
+    }
+
+    #[test]
+    fn randn_statistics() {
+        let mut rng = Prng::new(11);
+        let t = Tensor::randn(&[100, 100], 0.5, &mut rng);
+        let mean: f64 = t.data().iter().map(|&x| x as f64).sum::<f64>() / 10_000.0;
+        let var = t.sq_sum() / 10_000.0 - mean * mean;
+        assert!(mean.abs() < 0.02);
+        assert!((var - 0.25).abs() < 0.02);
+    }
+}

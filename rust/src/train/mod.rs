@@ -1,0 +1,249 @@
+//! Training utilities: optimizers over host tensors, loss tracking, and the
+//! fixed-loss stopping rule used by the paper's energy experiments.
+//!
+//! Optimizers run rank-locally in Rust (no collective is needed: every
+//! parameter lives on exactly one rank in both TP and PP). The frozen zero
+//! slot of phantom decompressors never moves because its gradient is
+//! structurally zero (pp_grads sees a zeroed g_all slot).
+
+use crate::config::OptimizerConfig;
+use crate::tensor::Tensor;
+
+/// Optimizer state for one parameter list.
+pub enum Optimizer {
+    Sgd { lr: f32 },
+    Momentum { lr: f32, beta: f32, velocity: Vec<Tensor> },
+    Adam { lr: f32, beta1: f32, beta2: f32, eps: f32, t: u64, m: Vec<Tensor>, v: Vec<Tensor> },
+}
+
+impl Optimizer {
+    /// Build from config for a parameter list with the given shapes.
+    pub fn new(cfg: OptimizerConfig, shapes: &[Vec<usize>]) -> Optimizer {
+        match cfg {
+            OptimizerConfig::Sgd { lr } => Optimizer::Sgd { lr },
+            OptimizerConfig::Momentum { lr, beta } => Optimizer::Momentum {
+                lr,
+                beta,
+                velocity: shapes.iter().map(|s| Tensor::zeros(s)).collect(),
+            },
+            OptimizerConfig::Adam { lr, beta1, beta2, eps } => Optimizer::Adam {
+                lr,
+                beta1,
+                beta2,
+                eps,
+                t: 0,
+                m: shapes.iter().map(|s| Tensor::zeros(s)).collect(),
+                v: shapes.iter().map(|s| Tensor::zeros(s)).collect(),
+            },
+        }
+    }
+
+    /// Apply one step: params[i] updated in place from grads[i].
+    pub fn step(&mut self, params: &mut [&mut Tensor], grads: &[Tensor]) {
+        assert_eq!(params.len(), grads.len(), "param/grad arity mismatch");
+        match self {
+            Optimizer::Sgd { lr } => {
+                for (p, g) in params.iter_mut().zip(grads) {
+                    p.axpy(-*lr, g);
+                }
+            }
+            Optimizer::Momentum { lr, beta, velocity } => {
+                for ((p, g), v) in params.iter_mut().zip(grads).zip(velocity) {
+                    // v = beta*v + g;  p -= lr*v
+                    v.scale(*beta);
+                    v.add_assign(g);
+                    p.axpy(-*lr, v);
+                }
+            }
+            Optimizer::Adam { lr, beta1, beta2, eps, t, m, v } => {
+                *t += 1;
+                let bc1 = 1.0 - beta1.powi(*t as i32);
+                let bc2 = 1.0 - beta2.powi(*t as i32);
+                for ((p, g), (mi, vi)) in params.iter_mut().zip(grads).zip(m.iter_mut().zip(v)) {
+                    let (b1, b2) = (*beta1, *beta2);
+                    for i in 0..g.numel() {
+                        let gd = g.data()[i];
+                        let md = b1 * mi.data()[i] + (1.0 - b1) * gd;
+                        let vd = b2 * vi.data()[i] + (1.0 - b2) * gd * gd;
+                        mi.data_mut()[i] = md;
+                        vi.data_mut()[i] = vd;
+                        let mhat = md / bc1;
+                        let vhat = vd / bc2;
+                        p.data_mut()[i] -= *lr * mhat / (vhat.sqrt() + *eps);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Fixed-loss stopping rule (the nu_lambda of paper Eqn. 2): stop when the
+/// smoothed loss reaches the target, or at the iteration cap.
+#[derive(Debug, Clone)]
+pub struct LossTracker {
+    pub history: Vec<f64>,
+    pub target: Option<f64>,
+    pub max_iters: usize,
+    /// EMA smoothing factor for the stopping test (1.0 = raw loss).
+    pub ema_alpha: f64,
+    ema: Option<f64>,
+}
+
+impl LossTracker {
+    pub fn new(target: Option<f64>, max_iters: usize) -> LossTracker {
+        LossTracker { history: Vec::new(), target, max_iters, ema_alpha: 1.0, ema: None }
+    }
+
+    /// Record a loss; returns true if training should stop.
+    pub fn record(&mut self, loss: f64) -> bool {
+        self.history.push(loss);
+        let s = match self.ema {
+            None => loss,
+            Some(prev) => self.ema_alpha * loss + (1.0 - self.ema_alpha) * prev,
+        };
+        self.ema = Some(s);
+        if let Some(t) = self.target {
+            if s <= t {
+                return true;
+            }
+        }
+        self.history.len() >= self.max_iters
+    }
+
+    pub fn iterations(&self) -> usize {
+        self.history.len()
+    }
+
+    pub fn final_loss(&self) -> Option<f64> {
+        self.history.last().copied()
+    }
+
+    pub fn reached_target(&self) -> bool {
+        match (self.target, self.ema) {
+            (Some(t), Some(s)) => s <= t,
+            _ => false,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Prng;
+
+    fn quad_grad(p: &Tensor) -> Tensor {
+        // grad of f(p) = 0.5*||p||^2 is p
+        p.clone()
+    }
+
+    #[test]
+    fn sgd_descends_quadratic() {
+        let mut p = Tensor::filled(&[4], 1.0);
+        let mut opt = Optimizer::new(OptimizerConfig::Sgd { lr: 0.1 }, &[vec![4]]);
+        for _ in 0..100 {
+            let g = quad_grad(&p);
+            opt.step(&mut [&mut p], &[g]);
+        }
+        assert!(p.sq_sum() < 1e-6, "{:?}", p.data());
+    }
+
+    #[test]
+    fn momentum_descends_quadratic() {
+        let mut p = Tensor::filled(&[4], 1.0);
+        let mut opt =
+            Optimizer::new(OptimizerConfig::Momentum { lr: 0.05, beta: 0.9 }, &[vec![4]]);
+        for _ in 0..200 {
+            let g = quad_grad(&p);
+            opt.step(&mut [&mut p], &[g]);
+        }
+        assert!(p.sq_sum() < 1e-6);
+    }
+
+    #[test]
+    fn adam_descends_quadratic() {
+        let mut p = Tensor::filled(&[4], 1.0);
+        let mut opt = Optimizer::new(
+            OptimizerConfig::Adam { lr: 0.05, beta1: 0.9, beta2: 0.999, eps: 1e-8 },
+            &[vec![4]],
+        );
+        for _ in 0..400 {
+            let g = quad_grad(&p);
+            opt.step(&mut [&mut p], &[g]);
+        }
+        assert!(p.sq_sum() < 1e-4, "{}", p.sq_sum());
+    }
+
+    #[test]
+    fn momentum_beats_sgd_on_illconditioned() {
+        // f(p) = 0.5*(100*x^2 + y^2): heavy-ball should converge faster at
+        // the same stable lr.
+        let run = |cfg: OptimizerConfig| {
+            let mut p = Tensor::from_vec(&[2], vec![1.0, 1.0]).unwrap();
+            let mut opt = Optimizer::new(cfg, &[vec![2]]);
+            for _ in 0..150 {
+                let g =
+                    Tensor::from_vec(&[2], vec![100.0 * p.data()[0], p.data()[1]]).unwrap();
+                opt.step(&mut [&mut p], &[g]);
+            }
+            p.sq_sum()
+        };
+        let sgd = run(OptimizerConfig::Sgd { lr: 0.009 });
+        let mom = run(OptimizerConfig::Momentum { lr: 0.009, beta: 0.9 });
+        assert!(mom < sgd, "momentum {mom} should beat sgd {sgd}");
+    }
+
+    #[test]
+    fn zero_grad_slot_never_moves() {
+        // The frozen decompressor slot: zero gradient -> parameter unchanged
+        // under every optimizer.
+        for cfg in [
+            OptimizerConfig::Sgd { lr: 0.1 },
+            OptimizerConfig::Momentum { lr: 0.1, beta: 0.9 },
+            OptimizerConfig::Adam { lr: 0.1, beta1: 0.9, beta2: 0.999, eps: 1e-8 },
+        ] {
+            let mut p = Tensor::zeros(&[3]);
+            let mut opt = Optimizer::new(cfg, &[vec![3]]);
+            for _ in 0..10 {
+                opt.step(&mut [&mut p], &[Tensor::zeros(&[3])]);
+            }
+            assert_eq!(p, Tensor::zeros(&[3]), "{:?}", cfg.name());
+        }
+    }
+
+    #[test]
+    fn optimizers_deterministic() {
+        let mut rng = Prng::new(3);
+        let g: Vec<Tensor> = (0..5).map(|_| Tensor::randn(&[8], 1.0, &mut rng)).collect();
+        let run = || {
+            let mut p = Tensor::filled(&[8], 0.5);
+            let mut opt = Optimizer::new(
+                OptimizerConfig::Adam { lr: 0.01, beta1: 0.9, beta2: 0.999, eps: 1e-8 },
+                &[vec![8]],
+            );
+            for gi in &g {
+                opt.step(&mut [&mut p], std::slice::from_ref(gi));
+            }
+            p
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn loss_tracker_stops_at_target() {
+        let mut t = LossTracker::new(Some(0.1), 100);
+        assert!(!t.record(1.0));
+        assert!(!t.record(0.5));
+        assert!(t.record(0.09));
+        assert!(t.reached_target());
+        assert_eq!(t.iterations(), 3);
+    }
+
+    #[test]
+    fn loss_tracker_stops_at_cap() {
+        let mut t = LossTracker::new(Some(0.0), 3);
+        assert!(!t.record(1.0));
+        assert!(!t.record(1.0));
+        assert!(t.record(1.0));
+        assert!(!t.reached_target());
+    }
+}

@@ -1,0 +1,9 @@
+//! Foundation utilities built in-repo (the offline crate set contains only
+//! `xla` and `anyhow`): JSON, PRNG, statistics, table rendering, and a
+//! property-test driver.
+
+pub mod json;
+pub mod prng;
+pub mod proptest;
+pub mod stats;
+pub mod table;

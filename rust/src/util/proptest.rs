@@ -1,0 +1,108 @@
+//! Seeded random-case property-test driver.
+//!
+//! A lightweight stand-in for the `proptest` crate (not available in the
+//! offline crate set): runs a property over many PRNG-generated cases and
+//! reports the failing seed so a case can be replayed deterministically
+//! (`PHANTOM_PROP_SEED=<seed> cargo test ...`).
+
+use super::prng::Prng;
+
+/// Configuration for a property run.
+#[derive(Debug, Clone, Copy)]
+pub struct PropConfig {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        // Env override lets a failing case be replayed exactly.
+        let seed = std::env::var("PHANTOM_PROP_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0xC0FFEE);
+        PropConfig { cases: 64, seed }
+    }
+}
+
+/// Run `prop` over `cfg.cases` random cases. Each case gets an independent
+/// PRNG stream derived from the base seed; on failure, panics with the
+/// case index and per-case seed for replay.
+pub fn check<F>(name: &str, cfg: PropConfig, mut prop: F)
+where
+    F: FnMut(&mut Prng) -> Result<(), String>,
+{
+    let mut root = Prng::new(cfg.seed);
+    for case in 0..cfg.cases {
+        let case_seed = root.next_u64();
+        let mut rng = Prng::new(case_seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property '{name}' failed on case {case}/{} (case_seed={case_seed:#x}, \
+                 base seed={:#x}): {msg}\nreplay: PHANTOM_PROP_SEED={} cargo test",
+                cfg.cases, cfg.seed, cfg.seed
+            );
+        }
+    }
+}
+
+/// Convenience: run with default config.
+pub fn quickcheck<F>(name: &str, prop: F)
+where
+    F: FnMut(&mut Prng) -> Result<(), String>,
+{
+    check(name, PropConfig::default(), prop);
+}
+
+/// Assert two f32 slices are elementwise close; returns an Err describing
+/// the worst violation (for use inside properties).
+pub fn assert_close(a: &[f32], b: &[f32], rtol: f32, atol: f32) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch: {} vs {}", a.len(), b.len()));
+    }
+    let mut worst = (0usize, 0.0f32);
+    for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+        let diff = (x - y).abs();
+        let bound = atol + rtol * y.abs().max(x.abs());
+        if diff > bound && diff > worst.1 {
+            worst = (i, diff);
+        }
+    }
+    if worst.1 > 0.0 {
+        return Err(format!(
+            "mismatch at [{}]: {} vs {} (|diff|={}, rtol={rtol}, atol={atol})",
+            worst.0, a[worst.0], b[worst.0], worst.1
+        ));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_completes() {
+        quickcheck("u64 is even or odd", |rng| {
+            let v = rng.next_u64();
+            if v % 2 == 0 || v % 2 == 1 {
+                Ok(())
+            } else {
+                Err("impossible".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn failing_property_panics_with_seed() {
+        check("always fails", PropConfig { cases: 3, seed: 1 }, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn assert_close_detects_mismatch() {
+        assert!(assert_close(&[1.0, 2.0], &[1.0, 2.0], 1e-6, 1e-6).is_ok());
+        assert!(assert_close(&[1.0], &[1.1], 1e-3, 1e-3).is_err());
+        assert!(assert_close(&[1.0], &[1.0, 2.0], 1e-3, 1e-3).is_err());
+    }
+}

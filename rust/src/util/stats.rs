@@ -1,0 +1,192 @@
+//! Small statistics + linear least-squares toolkit.
+//!
+//! Used by the benchmark harness (timing summaries) and by `simnet::fit`,
+//! which regenerates the paper's Table III by fitting the collective
+//! communication model  t(m, p) = c1*log2(p) + c2*m + c3  to measurements.
+
+/// Summary statistics over a sample.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+    pub p50: f64,
+    pub p95: f64,
+}
+
+pub fn summarize(xs: &[f64]) -> Summary {
+    assert!(!xs.is_empty(), "summarize: empty sample");
+    let n = xs.len();
+    let mean = xs.iter().sum::<f64>() / n as f64;
+    let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+    let mut sorted: Vec<f64> = xs.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Summary {
+        n,
+        mean,
+        std: var.sqrt(),
+        min: sorted[0],
+        max: sorted[n - 1],
+        p50: percentile_sorted(&sorted, 50.0),
+        p95: percentile_sorted(&sorted, 95.0),
+    }
+}
+
+/// Percentile with linear interpolation; input must be sorted.
+pub fn percentile_sorted(sorted: &[f64], pct: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    let n = sorted.len();
+    if n == 1 {
+        return sorted[0];
+    }
+    let rank = (pct / 100.0).clamp(0.0, 1.0) * (n - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// Solve the ordinary least-squares problem  X beta = y  via normal
+/// equations with Gaussian elimination (partial pivoting). X is row-major
+/// with `cols` features per row. Small systems only (cols <= ~8), which is
+/// all the communication-model fit needs (3 features).
+pub fn least_squares(x: &[f64], cols: usize, y: &[f64]) -> Option<Vec<f64>> {
+    let rows = y.len();
+    assert_eq!(x.len(), rows * cols, "design matrix shape mismatch");
+    if rows < cols {
+        return None;
+    }
+    // Normal equations: (X'X) beta = X'y
+    let mut xtx = vec![0.0; cols * cols];
+    let mut xty = vec![0.0; cols];
+    for r in 0..rows {
+        for i in 0..cols {
+            let xi = x[r * cols + i];
+            xty[i] += xi * y[r];
+            for j in 0..cols {
+                xtx[i * cols + j] += xi * x[r * cols + j];
+            }
+        }
+    }
+    solve_linear(&mut xtx, &mut xty, cols)
+}
+
+/// In-place Gaussian elimination with partial pivoting; returns the solution
+/// of A x = b or None if A is (numerically) singular.
+pub fn solve_linear(a: &mut [f64], b: &mut [f64], n: usize) -> Option<Vec<f64>> {
+    assert_eq!(a.len(), n * n);
+    assert_eq!(b.len(), n);
+    for col in 0..n {
+        // pivot
+        let mut piv = col;
+        for r in (col + 1)..n {
+            if a[r * n + col].abs() > a[piv * n + col].abs() {
+                piv = r;
+            }
+        }
+        if a[piv * n + col].abs() < 1e-12 {
+            return None;
+        }
+        if piv != col {
+            for j in 0..n {
+                a.swap(col * n + j, piv * n + j);
+            }
+            b.swap(col, piv);
+        }
+        // eliminate
+        for r in (col + 1)..n {
+            let f = a[r * n + col] / a[col * n + col];
+            for j in col..n {
+                a[r * n + j] -= f * a[col * n + j];
+            }
+            b[r] -= f * b[col];
+        }
+    }
+    // back-substitute
+    let mut x = vec![0.0; n];
+    for col in (0..n).rev() {
+        let mut s = b[col];
+        for j in (col + 1)..n {
+            s -= a[col * n + j] * x[j];
+        }
+        x[col] = s / a[col * n + col];
+    }
+    Some(x)
+}
+
+/// Root-mean-square error of predictions vs observations.
+pub fn rmse(pred: &[f64], obs: &[f64]) -> f64 {
+    assert_eq!(pred.len(), obs.len());
+    let n = pred.len() as f64;
+    (pred.iter().zip(obs).map(|(p, o)| (p - o) * (p - o)).sum::<f64>() / n).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basics() {
+        let s = summarize(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.n, 5);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert!((s.p50 - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let sorted = [0.0, 10.0];
+        assert!((percentile_sorted(&sorted, 50.0) - 5.0).abs() < 1e-12);
+        assert_eq!(percentile_sorted(&sorted, 0.0), 0.0);
+        assert_eq!(percentile_sorted(&sorted, 100.0), 10.0);
+    }
+
+    #[test]
+    fn solves_linear_system() {
+        // [2 1; 1 3] x = [5; 10] -> x = [1, 3]
+        let mut a = vec![2.0, 1.0, 1.0, 3.0];
+        let mut b = vec![5.0, 10.0];
+        let x = solve_linear(&mut a, &mut b, 2).unwrap();
+        assert!((x[0] - 1.0).abs() < 1e-10);
+        assert!((x[1] - 3.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn singular_returns_none() {
+        let mut a = vec![1.0, 2.0, 2.0, 4.0];
+        let mut b = vec![1.0, 2.0];
+        assert!(solve_linear(&mut a, &mut b, 2).is_none());
+    }
+
+    #[test]
+    fn least_squares_recovers_exact_model() {
+        // y = 3*f0 + 0.5*f1 - 2
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        for i in 0..20 {
+            let f0 = i as f64;
+            let f1 = (i * i) as f64 * 0.1;
+            xs.extend_from_slice(&[f0, f1, 1.0]);
+            ys.push(3.0 * f0 + 0.5 * f1 - 2.0);
+        }
+        let beta = least_squares(&xs, 3, &ys).unwrap();
+        assert!((beta[0] - 3.0).abs() < 1e-8);
+        assert!((beta[1] - 0.5).abs() < 1e-8);
+        assert!((beta[2] + 2.0).abs() < 1e-8);
+    }
+
+    #[test]
+    fn least_squares_underdetermined_is_none() {
+        assert!(least_squares(&[1.0, 2.0, 3.0], 3, &[1.0]).is_none());
+    }
+
+    #[test]
+    fn rmse_zero_for_perfect_fit() {
+        assert_eq!(rmse(&[1.0, 2.0], &[1.0, 2.0]), 0.0);
+        assert!((rmse(&[0.0, 0.0], &[3.0, 4.0]) - (12.5f64).sqrt()).abs() < 1e-12);
+    }
+}

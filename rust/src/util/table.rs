@@ -1,0 +1,163 @@
+//! Markdown / CSV table rendering for experiment reports.
+//!
+//! Every experiment in `experiments/` emits its rows through this module so
+//! EXPERIMENTS.md and the bench output share one formatting path.
+
+/// A simple column-aligned table builder.
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells);
+        self
+    }
+
+    /// Render as a GitHub-flavored markdown table with aligned pipes.
+    pub fn markdown(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            out.push_str(&format!("### {}\n\n", self.title));
+        }
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::from("|");
+            for (c, w) in cells.iter().zip(widths) {
+                line.push_str(&format!(" {c:<w$} |"));
+            }
+            line.push('\n');
+            line
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        let mut sep = String::from("|");
+        for w in &widths {
+            sep.push_str(&format!("{}|", "-".repeat(w + 2)));
+        }
+        sep.push('\n');
+        out.push_str(&sep);
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+        }
+        out
+    }
+
+    /// Render as CSV (RFC-4180-ish quoting).
+    pub fn csv(&self) -> String {
+        let esc = |s: &str| {
+            if s.contains(',') || s.contains('"') || s.contains('\n') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        };
+        let mut out = String::new();
+        out.push_str(&self.headers.iter().map(|h| esc(h)).collect::<Vec<_>>().join(","));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Format seconds human-readably (ns/us/ms/s picked by magnitude).
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1} ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.1} µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2} ms", s * 1e3)
+    } else {
+        format!("{s:.2} s")
+    }
+}
+
+/// Format Joules (J / kJ / MJ).
+pub fn fmt_joules(j: f64) -> String {
+    if j < 1e3 {
+        format!("{j:.1} J")
+    } else if j < 1e6 {
+        format!("{:.1} kJ", j / 1e3)
+    } else {
+        format!("{:.2} MJ", j / 1e6)
+    }
+}
+
+/// Format a parameter count (K/M/B).
+pub fn fmt_params(n: u64) -> String {
+    if n < 1_000 {
+        format!("{n}")
+    } else if n < 1_000_000 {
+        format!("{:.1}K", n as f64 / 1e3)
+    } else if n < 1_000_000_000 {
+        format!("{:.1}M", n as f64 / 1e6)
+    } else {
+        format!("{:.2}B", n as f64 / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn markdown_renders_aligned() {
+        let mut t = Table::new("T", &["a", "long_header"]);
+        t.row(vec!["1".into(), "2".into()]);
+        let md = t.markdown();
+        assert!(md.contains("### T"));
+        assert!(md.contains("| a | long_header |"));
+        assert!(md.contains("| 1 | 2           |"));
+    }
+
+    #[test]
+    fn csv_quotes_specials() {
+        let mut t = Table::new("", &["x"]);
+        t.row(vec!["a,b".into()]);
+        t.row(vec!["q\"q".into()]);
+        let csv = t.csv();
+        assert!(csv.contains("\"a,b\""));
+        assert!(csv.contains("\"q\"\"q\""));
+    }
+
+    #[test]
+    #[should_panic]
+    fn arity_mismatch_panics() {
+        let mut t = Table::new("", &["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+
+    #[test]
+    fn formatters() {
+        assert_eq!(fmt_secs(2.5e-9), "2.5 ns");
+        assert_eq!(fmt_secs(3.2e-5), "32.0 µs");
+        assert_eq!(fmt_secs(0.004), "4.00 ms");
+        assert_eq!(fmt_secs(2.0), "2.00 s");
+        assert_eq!(fmt_joules(10.0), "10.0 J");
+        assert_eq!(fmt_joules(82_084.0), "82.1 kJ");
+        assert_eq!(fmt_joules(3_113_741.0), "3.11 MJ");
+        assert_eq!(fmt_params(537_000_000), "537.0M");
+        assert_eq!(fmt_params(71_000_000), "71.0M");
+        assert_eq!(fmt_params(950), "950");
+    }
+}

@@ -1,0 +1,219 @@
+//! Property-style stress tests of the collective fabric: random sequences
+//! of collectives over random shapes/rank-counts must match a
+//! single-threaded reference, keep all virtual clocks aligned, and satisfy
+//! the ledger identity busy + comm + idle == now for every rank.
+//! (DESIGN.md §6 invariants 4 and 5.)
+
+use std::sync::Arc;
+use std::thread;
+
+use phantom::comm::{Endpoint, Fabric};
+use phantom::energy::{Activity, EnergyLedger};
+use phantom::simnet::NetworkProfile;
+use phantom::tensor::Tensor;
+use phantom::util::prng::Prng;
+use phantom::util::proptest::assert_close;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Op {
+    AllGather,
+    ReduceScatter,
+    AllReduce,
+    Broadcast(usize),
+    Barrier,
+}
+
+fn random_plan(rng: &mut Prng, p: usize) -> Vec<(Op, Vec<usize>, f64)> {
+    let rounds = rng.int_in(3, 12) as usize;
+    (0..rounds)
+        .map(|_| {
+            let shape = vec![rng.int_in(1, 5) as usize, rng.int_in(1, 6) as usize];
+            let work = rng.next_f64() * 1e-3;
+            let op = match rng.int_in(0, 4) {
+                0 => Op::AllGather,
+                1 => Op::ReduceScatter,
+                2 => Op::AllReduce,
+                3 => Op::Broadcast(rng.int_in(0, p as u64 - 1) as usize),
+                _ => Op::Barrier,
+            };
+            (op, shape, work)
+        })
+        .collect()
+}
+
+/// Single-threaded reference of the whole plan: returns each rank's final
+/// accumulated checksum.
+fn reference(plan: &[(Op, Vec<usize>, f64)], p: usize, seed: u64) -> Vec<f64> {
+    let mut acc = vec![0.0f64; p];
+    for (round, (op, shape, _)) in plan.iter().enumerate() {
+        // each rank's contribution tensor (same derivation as the threads)
+        let inputs: Vec<Tensor> = (0..p)
+            .map(|r| contribution(seed, round, r, shape, *op, p))
+            .collect();
+        match op {
+            Op::AllGather => {
+                let stacked = Tensor::stack(&inputs).unwrap();
+                let sum: f64 = stacked.data().iter().map(|&x| x as f64).sum();
+                for a in acc.iter_mut() {
+                    *a += sum;
+                }
+            }
+            Op::ReduceScatter => {
+                for (j, a) in acc.iter_mut().enumerate() {
+                    let mut slot = inputs[0].unstack_at(j);
+                    for inp in &inputs[1..] {
+                        slot.add_assign(&inp.unstack_at(j));
+                    }
+                    *a += slot.data().iter().map(|&x| x as f64).sum::<f64>();
+                }
+            }
+            Op::AllReduce => {
+                let mut total = inputs[0].clone();
+                for inp in &inputs[1..] {
+                    total.add_assign(inp);
+                }
+                let sum: f64 = total.data().iter().map(|&x| x as f64).sum();
+                for a in acc.iter_mut() {
+                    *a += sum;
+                }
+            }
+            Op::Broadcast(root) => {
+                let sum: f64 = inputs[*root].data().iter().map(|&x| x as f64).sum();
+                for a in acc.iter_mut() {
+                    *a += sum;
+                }
+            }
+            Op::Barrier => {}
+        }
+    }
+    acc
+}
+
+fn contribution(seed: u64, round: usize, rank: usize, shape: &[usize], op: Op, p: usize) -> Tensor {
+    let mut rng = Prng::new(
+        seed ^ (round as u64) << 32 ^ (rank as u64) << 8 ^ 0xFAB,
+    );
+    match op {
+        // reduce_scatter needs leading dim p
+        Op::ReduceScatter => {
+            let mut s = vec![p];
+            s.extend_from_slice(shape);
+            Tensor::randn(&s, 1.0, &mut rng)
+        }
+        Op::Barrier => Tensor::zeros(&[0]),
+        _ => Tensor::randn(shape, 1.0, &mut rng),
+    }
+}
+
+fn run_plan(
+    ep: &mut Endpoint,
+    ledger: &mut EnergyLedger,
+    plan: &[(Op, Vec<usize>, f64)],
+    seed: u64,
+    rank: usize,
+    p: usize,
+) -> f64 {
+    let mut acc = 0.0f64;
+    for (round, (op, shape, work)) in plan.iter().enumerate() {
+        // unequal compute before the collective (exercises sync_to)
+        ledger.advance(work * (rank + 1) as f64, Activity::Compute);
+        let t = contribution(seed, round, rank, shape, *op, p);
+        let out = match op {
+            Op::AllGather => Some(ep.all_gather(t, ledger).unwrap()),
+            Op::ReduceScatter => Some(ep.reduce_scatter(t, ledger).unwrap()),
+            Op::AllReduce => Some(ep.all_reduce(t, ledger).unwrap()),
+            Op::Broadcast(root) => Some(ep.broadcast(*root, t, ledger).unwrap()),
+            Op::Barrier => {
+                ep.barrier(ledger).unwrap();
+                None
+            }
+        };
+        if let Some(out) = out {
+            acc += out.data().iter().map(|&x| x as f64).sum::<f64>();
+        }
+    }
+    acc
+}
+
+#[test]
+fn random_collective_sequences_match_reference() {
+    let mut meta = Prng::new(0xFEED);
+    for case in 0..25 {
+        let p = meta.int_in(2, 6) as usize;
+        let seed = meta.next_u64();
+        let plan = Arc::new(random_plan(&mut meta, p));
+
+        let endpoints = Fabric::new(p, NetworkProfile::frontier());
+        let handles: Vec<_> = endpoints
+            .into_iter()
+            .enumerate()
+            .map(|(rank, mut ep)| {
+                let plan = plan.clone();
+                thread::spawn(move || {
+                    let mut ledger = EnergyLedger::new();
+                    let acc = run_plan(&mut ep, &mut ledger, &plan, seed, rank, p);
+                    (acc, ledger)
+                })
+            })
+            .collect();
+        let results: Vec<(f64, EnergyLedger)> =
+            handles.into_iter().map(|h| h.join().unwrap()).collect();
+
+        // 1. payloads match the single-threaded reference
+        let expect = reference(&plan, p, seed);
+        for (rank, ((acc, _), want)) in results.iter().zip(&expect).enumerate() {
+            assert_close(&[*acc as f32], &[*want as f32], 1e-4, 1e-4)
+                .unwrap_or_else(|e| panic!("case {case} rank {rank}: {e}"));
+        }
+
+        // 2. synchronous collectives leave all clocks aligned
+        let t0 = results[0].1.now_s;
+        for (rank, (_, led)) in results.iter().enumerate() {
+            assert!(
+                (led.now_s - t0).abs() < 1e-12,
+                "case {case} rank {rank}: clock skew {} vs {}",
+                led.now_s,
+                t0
+            );
+            // 3. ledger identity
+            let total = led.busy_s() + led.comm_s() + led.idle_s();
+            assert!(
+                (total - led.now_s).abs() < 1e-9,
+                "case {case} rank {rank}: ledger identity violated"
+            );
+        }
+    }
+}
+
+#[test]
+fn slowest_rank_never_idles_at_its_own_collective() {
+    // The rank with the largest pre-collective compute arrives last; its
+    // idle time for that round must be ~0.
+    let p = 4;
+    let endpoints = Fabric::new(p, NetworkProfile::frontier());
+    let handles: Vec<_> = endpoints
+        .into_iter()
+        .enumerate()
+        .map(|(rank, mut ep)| {
+            thread::spawn(move || {
+                let mut led = EnergyLedger::new();
+                led.advance(0.010 * (rank + 1) as f64, Activity::Compute);
+                ep.all_reduce(Tensor::filled(&[4], 1.0), &mut led).unwrap();
+                (rank, led)
+            })
+        })
+        .collect();
+    for h in handles {
+        let (rank, led) = h.join().unwrap();
+        if rank == p - 1 {
+            assert!(led.idle_s() < 1e-12, "slowest rank idled {}", led.idle_s());
+        } else {
+            let expected_idle = 0.010 * (p - rank - 1) as f64;
+            assert!(
+                (led.idle_s() - expected_idle).abs() < 1e-9,
+                "rank {rank}: idle {} want {expected_idle}",
+                led.idle_s()
+            );
+        }
+    }
+}

@@ -1,0 +1,177 @@
+//! Integration tests over the full stack: AOT artifacts -> PJRT runtime ->
+//! collective fabric -> coordinator pipelines.
+//!
+//! DESIGN.md §6 invariants 1-3 and 5, end-to-end through real executables.
+//! These tests need `make artifacts` to have produced artifacts/ (the
+//! Makefile test target guarantees it); they are skipped with a message if
+//! the bundle is missing.
+
+use phantom::config::{preset, Parallelism, RunConfig};
+use phantom::coordinator::{self, driver::pp_forward_once};
+use phantom::model::DensePhantomOracle;
+use phantom::runtime::ExecServer;
+use phantom::tensor::Tensor;
+use phantom::util::prng::Prng;
+
+fn server_or_skip() -> Option<ExecServer> {
+    let dir = phantom::runtime::default_artifact_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: no artifacts at {} (run `make artifacts`)", dir.display());
+        return None;
+    }
+    Some(ExecServer::start(dir).expect("exec server"))
+}
+
+/// Invariant 1: the p-rank sharded phantom forward equals the monolithic
+/// dense-equivalent oracle.
+#[test]
+fn pp_sharded_forward_equals_dense_oracle() {
+    let Some(server) = server_or_skip() else { return };
+    for name in ["tiny", "tiny_p2"] {
+        let cfg = preset(name, Parallelism::Phantom).unwrap();
+        let mut rng = Prng::new(99);
+        let x = Tensor::randn(&[cfg.train.batch, cfg.model.n], 1.0, &mut rng);
+
+        let y_sharded = pp_forward_once(&cfg, &server, &x).unwrap();
+        let oracle = DensePhantomOracle::init(&cfg.model, cfg.p, cfg.train.seed).unwrap();
+        let y_dense = oracle.forward(&x).unwrap();
+
+        assert_eq!(y_sharded.shape(), y_dense.shape());
+        phantom::util::proptest::assert_close(y_sharded.data(), y_dense.data(), 1e-4, 1e-5)
+            .unwrap_or_else(|e| panic!("{name}: {e}"));
+    }
+}
+
+/// Invariant: training runs end-to-end and the loss decreases (both modes).
+#[test]
+fn training_reduces_loss_both_modes() {
+    let Some(server) = server_or_skip() else { return };
+    for mode in [Parallelism::Phantom, Parallelism::Tensor] {
+        let mut cfg = preset("tiny", mode).unwrap();
+        cfg.train.max_iters = 30;
+        let report = coordinator::train(&cfg, &server).unwrap();
+        assert_eq!(report.iterations, 30);
+        let first = report.losses[0];
+        let last = *report.losses.last().unwrap();
+        assert!(
+            last < first * 0.9,
+            "{:?}: loss did not decrease: {first} -> {last}",
+            mode
+        );
+        // Per-rank accounting sanity.
+        assert_eq!(report.per_rank.len(), cfg.p);
+        for r in &report.per_rank {
+            assert!(r.ledger.busy_s > 0.0, "rank {} never computed", r.rank);
+            assert!(r.stats.comm_s > 0.0, "rank {} never communicated", r.rank);
+        }
+        assert!(report.energy_total_j > 0.0);
+        assert!(report.energy_train_j <= report.energy_total_j);
+    }
+}
+
+/// Same loss trajectory across repeated runs (full determinism).
+#[test]
+fn training_is_deterministic() {
+    let Some(server) = server_or_skip() else { return };
+    let mut cfg = preset("tiny_p2", Parallelism::Phantom).unwrap();
+    cfg.train.max_iters = 10;
+    let a = coordinator::train(&cfg, &server).unwrap();
+    let b = coordinator::train(&cfg, &server).unwrap();
+    assert_eq!(a.losses, b.losses);
+}
+
+/// PP moves strictly fewer floats than TP at every scale (Table II), and at
+/// bandwidth-relevant sizes its modeled comm time is lower too (Eqn. 9 /
+/// Fig. 5a). At tiny latency-bound sizes the two CONVERGE (the paper's own
+/// Fig. 5b observation: "the bandwidth-bound communication costs of both
+/// approaches become comparable") — so the seconds assertion uses `medium`.
+#[test]
+fn pp_comm_less_than_tp() {
+    let Some(server) = server_or_skip() else { return };
+    // floats-on-the-wire: PP < TP even at tiny scale
+    let mut pp = preset("tiny", Parallelism::Phantom).unwrap();
+    let mut tp = preset("tiny", Parallelism::Tensor).unwrap();
+    pp.train.max_iters = 3;
+    tp.train.max_iters = 3;
+    let rp = coordinator::train(&pp, &server).unwrap();
+    let rt = coordinator::train(&tp, &server).unwrap();
+    let pp_floats: u64 = rp.per_rank.iter().map(|r| r.stats.floats_moved).sum();
+    let tp_floats: u64 = rt.per_rank.iter().map(|r| r.stats.floats_moved).sum();
+    assert!(pp_floats < tp_floats, "pp={pp_floats} tp={tp_floats}");
+
+    // modeled comm seconds: PP < TP once messages are bandwidth-relevant
+    let mut pp = preset("medium", Parallelism::Phantom).unwrap();
+    let mut tp = preset("medium", Parallelism::Tensor).unwrap();
+    pp.train.max_iters = 2;
+    tp.train.max_iters = 2;
+    let rp = coordinator::train(&pp, &server).unwrap();
+    let rt = coordinator::train(&tp, &server).unwrap();
+    let pp_comm: f64 = rp.per_rank.iter().map(|r| r.stats.comm_s).sum();
+    let tp_comm: f64 = rt.per_rank.iter().map(|r| r.stats.comm_s).sum();
+    assert!(pp_comm < tp_comm, "pp_comm={pp_comm} tp_comm={tp_comm}");
+}
+
+/// The PP model is smaller than the TP model when Eqn. (8) holds.
+#[test]
+fn pp_model_smaller() {
+    let Some(server) = server_or_skip() else { return };
+    let mut pp = preset("tiny", Parallelism::Phantom).unwrap();
+    let mut tp = preset("tiny", Parallelism::Tensor).unwrap();
+    pp.train.max_iters = 1;
+    tp.train.max_iters = 1;
+    let rp = coordinator::train(&pp, &server).unwrap();
+    let rt = coordinator::train(&tp, &server).unwrap();
+    assert!(rp.model_params < rt.model_params);
+}
+
+/// Fixed-loss stopping: run PP to a target reachable within the cap.
+#[test]
+fn fixed_loss_stopping_works() {
+    let Some(server) = server_or_skip() else { return };
+    let mut cfg = preset("tiny", Parallelism::Phantom).unwrap();
+    cfg.train.max_iters = 200;
+    // First run to discover a reachable loss value.
+    let mut probe = cfg.clone();
+    probe.train.max_iters = 40;
+    let r = coordinator::train(&probe, &server).unwrap();
+    let target = r.losses.last().unwrap() * 1.05;
+    cfg.train.target_loss = Some(target);
+    let r2 = coordinator::train(&cfg, &server).unwrap();
+    assert!(r2.reached_target, "should reach {target}");
+    assert!(r2.iterations <= 40, "stopped at {}", r2.iterations);
+}
+
+/// Geometry mismatch between run config and artifact bundle is rejected.
+#[test]
+fn artifact_geometry_mismatch_rejected() {
+    let Some(server) = server_or_skip() else { return };
+    let mut cfg = preset("tiny", Parallelism::Phantom).unwrap();
+    cfg.artifact = Some("tiny_p2".into()); // wrong p/n/batch
+    let err = coordinator::train(&cfg, &server).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("does not match"), "{msg}");
+}
+
+/// The pallas-kernel artifact variant produces the same numbers as the
+/// jnp variant (L1 integration through PJRT, not just pytest).
+#[test]
+fn pallas_variant_matches_jnp_through_pjrt() {
+    let Some(server) = server_or_skip() else { return };
+    let mut jnp = preset("tiny_p2", Parallelism::Phantom).unwrap();
+    jnp.train.max_iters = 5;
+    let mut pal = jnp.clone();
+    pal.artifact = Some("tiny_p2_pallas".into());
+    let rj = coordinator::train(&jnp, &server).unwrap();
+    let rp = coordinator::train(&pal, &server).unwrap();
+    for (a, b) in rj.losses.iter().zip(&rp.losses) {
+        assert!((a - b).abs() < 1e-6 * a.abs().max(1.0), "{a} vs {b}");
+    }
+}
+
+/// RunConfig validation rejects k >= n/p (Eqn. 8 hard bound).
+#[test]
+fn config_validation() {
+    let mut cfg: RunConfig = preset("tiny", Parallelism::Phantom).unwrap();
+    cfg.model.k = cfg.model.n / cfg.p;
+    assert!(cfg.validate().is_err());
+}
