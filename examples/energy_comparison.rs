@@ -7,10 +7,10 @@
 
 use anyhow::Result;
 use phantom::experiments::fig7::{convergence_sweep, fig7a, fig7b, fig7c, table1};
-use phantom::runtime::{default_artifact_dir, ExecServer};
+use phantom::runtime::ExecServer;
 
 fn main() -> Result<()> {
-    let server = ExecServer::start(default_artifact_dir())?;
+    let server = ExecServer::native();
     eprintln!("running the fixed-loss convergence sweep (9 training runs)...");
     let sweep = convergence_sweep(&server)?;
     eprintln!("target loss lambda = {:.6}\n", sweep.target_loss);

@@ -9,7 +9,7 @@
 use anyhow::Result;
 use phantom::config::{preset, Parallelism};
 use phantom::coordinator::driver::infer;
-use phantom::runtime::{default_artifact_dir, ExecServer};
+use phantom::runtime::ExecServer;
 use phantom::util::stats::summarize;
 use phantom::util::table::{fmt_joules, fmt_secs, Table};
 
@@ -18,7 +18,7 @@ fn main() -> Result<()> {
         .nth(1)
         .and_then(|s| s.parse().ok())
         .unwrap_or(40);
-    let server = ExecServer::start(default_artifact_dir())?;
+    let server = ExecServer::native();
 
     let mut table = Table::new(
         &format!("Inference serving — n=1,024, p=8, {batches} batches of 32 queries"),

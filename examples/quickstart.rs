@@ -2,16 +2,26 @@
 //! ranks, then compare against the tensor-parallel baseline.
 //!
 //! Run with:  cargo run --release --example quickstart
-//! (needs `make artifacts` first)
+//!
+//! ## Native vs the `xla` feature
+//!
+//! By default this runs on the NATIVE backend (runtime/native.rs): fused
+//! pure-Rust kernels over the blocked-GEMM tensor substrate. It is fully
+//! self-contained — no `make artifacts`, no PJRT/XLA install, nothing but
+//! `cargo run`. To execute the AOT HLO artifacts through PJRT instead,
+//! build with `--features xla` (supplying the `xla` crate, see
+//! rust/Cargo.toml), run `make artifacts`, and swap in
+//! `ExecServer::start(default_artifact_dir())?` — every downstream line is
+//! backend-agnostic, the two paths compute the same numbers (DESIGN.md §3).
 
 use anyhow::Result;
 use phantom::config::{preset, Parallelism};
 use phantom::coordinator;
-use phantom::runtime::{default_artifact_dir, ExecServer};
+use phantom::runtime::ExecServer;
 use phantom::util::table::{fmt_joules, fmt_secs, Table};
 
 fn main() -> Result<()> {
-    let server = ExecServer::start(default_artifact_dir())?;
+    let server = ExecServer::native();
 
     let mut table = Table::new(
         "Quickstart — n=256, L=2, p=4, 60 iterations",

@@ -9,7 +9,7 @@ use anyhow::Result;
 use phantom::config::{preset, Parallelism};
 use phantom::coordinator;
 use phantom::experiments;
-use phantom::runtime::{default_artifact_dir, ExecServer};
+use phantom::runtime::ExecServer;
 use phantom::util::table::{fmt_secs, Table};
 
 fn main() -> Result<()> {
@@ -20,7 +20,7 @@ fn main() -> Result<()> {
     }
 
     // Measured anchor: per-iteration comm split at n=2,048, p=8.
-    let server = ExecServer::start(default_artifact_dir())?;
+    let server = ExecServer::native();
     let mut table = Table::new(
         "Measured anchor — per-iteration comm/compute split (n=2,048, p=8, 5 iters)",
         &["mode", "busy/rank", "comm/rank", "idle/rank", "floats moved/rank"],

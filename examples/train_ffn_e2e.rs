@@ -3,8 +3,8 @@
 //! parameters) for a few hundred steps on the synthetic Gaussian-teacher
 //! corpus, through ALL layers of the stack:
 //!
-//!   AOT HLO artifacts (python/compile, built once by `make artifacts`)
-//!     -> PJRT executor thread (rust/src/runtime)
+//!   native fused kernels (rust/src/runtime/native.rs; or AOT HLO via
+//!   PJRT with the `xla` feature + `make artifacts`)
 //!     -> 8 rank workers + collective fabric (rust/src/comm, coordinator)
 //!     -> virtual-time energy ledger (rust/src/energy, simnet)
 //!
@@ -16,7 +16,7 @@
 use anyhow::Result;
 use phantom::config::{preset, Parallelism};
 use phantom::coordinator;
-use phantom::runtime::{default_artifact_dir, ExecServer};
+use phantom::runtime::ExecServer;
 use phantom::util::table::{fmt_joules, fmt_params, fmt_secs, Table};
 
 fn main() -> Result<()> {
@@ -24,7 +24,7 @@ fn main() -> Result<()> {
     let pp_iters: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(200);
     let tp_iters: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(40);
 
-    let server = ExecServer::start(default_artifact_dir())?;
+    let server = ExecServer::native();
     let mut table = Table::new(
         "End-to-end: n=8,192 L=2 p=8 (TP model 134M params)",
         &["mode", "iters", "first loss", "final loss", "params", "energy/iter", "E total", "virtual wall"],

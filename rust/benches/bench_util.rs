@@ -1,9 +1,11 @@
 //! Shared micro-benchmark harness (criterion substitute; the offline crate
 //! set has no criterion). Provides warmup + repeated timing with
-//! mean/std/p50 reporting through util::stats.
+//! mean/std/p50 reporting through util::stats, plus machine-readable JSON
+//! record emission for perf-trajectory files (BENCH_*.json).
 
 use std::time::Instant;
 
+use phantom::util::json::Json;
 use phantom::util::stats::{summarize, Summary};
 use phantom::util::table::{fmt_secs, Table};
 
@@ -34,7 +36,7 @@ impl Bench {
         }
     }
 
-    pub fn case<F: FnMut()>(&mut self, name: &str, warmup: usize, iters: usize, f: F) {
+    pub fn case<F: FnMut()>(&mut self, name: &str, warmup: usize, iters: usize, f: F) -> Summary {
         let s = time_it(warmup, iters, f);
         self.table.row(vec![
             name.to_string(),
@@ -45,10 +47,21 @@ impl Bench {
             s.n.to_string(),
         ]);
         eprintln!("  {name}: mean {}", fmt_secs(s.mean));
+        s
     }
 
     pub fn finish(self) {
         print!("{}", self.table.markdown());
         println!();
+    }
+}
+
+/// Write (key, value) records as a flat JSON object — the machine-readable
+/// perf trajectory future PRs diff against.
+pub fn write_records_json(path: &std::path::Path, records: &[(String, f64)]) {
+    let obj = Json::obj(records.iter().map(|(k, v)| (k.as_str(), Json::num(*v))).collect());
+    match std::fs::write(path, obj.pretty()) {
+        Ok(()) => eprintln!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write {}: {e}", path.display()),
     }
 }

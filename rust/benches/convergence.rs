@@ -1,27 +1,29 @@
 //! `cargo bench` target: the MEASURED paper artifacts — the fixed-loss
 //! convergence sweep behind Fig 7a/7b/7c and Table I. Trains 9 real models
 //! (TP and PP across p in {2,4,8} and k in {4..32}) to a common loss on the
-//! simulated cluster via PJRT. Takes a few minutes.
-//!
-//! Skipped gracefully when artifacts are missing (`make artifacts`).
+//! simulated cluster. Runs on the self-contained native backend by default;
+//! set PHANTOM_BENCH_BACKEND=xla (with the `xla` cargo feature and a built
+//! artifact bundle) to run through PJRT instead.
 
 use phantom::experiments::fig7::{convergence_sweep, fig7a, fig7b, fig7c, table1};
 use phantom::runtime::{default_artifact_dir, ExecServer};
 
 fn main() {
-    let dir = default_artifact_dir();
-    if !dir.join("manifest.json").exists() {
-        eprintln!("SKIP convergence bench: no artifacts at {}", dir.display());
-        return;
-    }
-    let server = match ExecServer::start(&dir) {
-        Ok(s) => s,
-        Err(e) => {
-            eprintln!("SKIP convergence bench: {e:#}");
-            return;
+    let server = if std::env::var("PHANTOM_BENCH_BACKEND").as_deref() == Ok("xla") {
+        match ExecServer::start(default_artifact_dir()) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("SKIP convergence bench: {e:#}");
+                return;
+            }
         }
+    } else {
+        ExecServer::native()
     };
-    eprintln!("running the fixed-loss convergence sweep (9 training runs)...");
+    eprintln!(
+        "running the fixed-loss convergence sweep (9 training runs, {} backend)...",
+        server.backend_name()
+    );
     let t0 = std::time::Instant::now();
     let sweep = match convergence_sweep(&server) {
         Ok(s) => s,

@@ -1,20 +1,90 @@
 //! `cargo bench` target: substrate micro-benchmarks for the §Perf pass —
-//! the L3 hot paths: collective fabric round-trips, tensor reshuffles on
-//! the critical path, PJRT call overhead, and JSON/manifest parsing.
+//! the native GEMM kernels against the naive reference, the fused-backend
+//! dispatch round-trip, collective fabric rendezvous, tensor reshuffles on
+//! the critical path, and JSON/manifest parsing.
+//!
+//! Emits BENCH_native_backend.json (repo root): ns/op for blocked vs naive
+//! matmul at 128/512, the blocked-over-naive speedup, and the full native
+//! PP iteration wall time at p=4 — the perf trajectory future PRs diff
+//! against. (tests/native_perf.rs writes the same file under tier-1 so the
+//! numbers exist even when only `cargo test` ran.)
 
 mod bench_util;
 
+use std::path::PathBuf;
 use std::sync::Arc;
 use std::thread;
 
-use bench_util::Bench;
+use bench_util::{write_records_json, Bench};
 use phantom::comm::Fabric;
+use phantom::config::{preset, Parallelism};
+use phantom::coordinator;
 use phantom::energy::EnergyLedger;
-use phantom::runtime::{default_artifact_dir, ExecServer};
+use phantom::runtime::ExecServer;
 use phantom::simnet::NetworkProfile;
-use phantom::tensor::Tensor;
+use phantom::tensor::{Scratch, Tensor};
 use phantom::util::json::Json;
 use phantom::util::prng::Prng;
+
+fn bench_native_matmul(records: &mut Vec<(String, f64)>) {
+    let mut rng = Prng::new(1);
+    let mut b = Bench::new("Tensor microbench — blocked multithreaded matmul vs naive reference");
+    for (size, warmup, iters) in [(128usize, 3, 30), (512usize, 2, 8)] {
+        let x = Tensor::randn(&[size, size], 1.0, &mut rng);
+        let y = Tensor::randn(&[size, size], 1.0, &mut rng);
+        let naive = b.case(&format!("naive matmul {size}^3"), warmup.min(1), iters.min(5), || {
+            let _ = x.matmul_naive(&y).unwrap();
+        });
+        let blocked = b.case(&format!("blocked matmul {size}^3"), warmup, iters, || {
+            let _ = x.matmul(&y).unwrap();
+        });
+        let mut scratch = Scratch::new();
+        let mut out = scratch.zeros(&[size, size]);
+        let into = b.case(&format!("matmul_into {size}^3 (scratch reuse)"), warmup, iters, || {
+            x.matmul_into(&y, &mut out).unwrap();
+        });
+        records.push((format!("naive_matmul_{size}_ns"), naive.mean * 1e9));
+        records.push((format!("blocked_matmul_{size}_ns"), blocked.mean * 1e9));
+        records.push((format!("matmul_into_{size}_ns"), into.mean * 1e9));
+        records.push((format!("speedup_blocked_over_naive_{size}"), naive.mean / blocked.mean));
+    }
+    b.finish();
+}
+
+fn bench_pp_iteration(records: &mut Vec<(String, f64)>) {
+    // Full native PP training iterations at p=4 (quickstart geometry:
+    // n=256, batch=16, L=2): rank threads + fused kernels + fabric.
+    const ITERS_PER_RUN: usize = 5;
+    let server = ExecServer::native();
+    let mut cfg = preset("quickstart", Parallelism::Phantom).expect("preset");
+    cfg.train.max_iters = ITERS_PER_RUN;
+    let mut b = Bench::new("Native backend — full PP iteration (p=4, n=256, real threads)");
+    let s = b.case(&format!("pp train {ITERS_PER_RUN} iters p=4"), 1, 5, || {
+        let _ = coordinator::train(&cfg, &server).unwrap();
+    });
+    records.push((
+        "pp_iteration_p4_ns".to_string(),
+        s.mean / ITERS_PER_RUN as f64 * 1e9,
+    ));
+    b.finish();
+}
+
+fn bench_backend_dispatch() {
+    // Native dispatch round-trip at tiny shapes: measures the per-call
+    // overhead (manifest lookup + gate + shape checks) around the kernels.
+    let server = ExecServer::native();
+    let handle = server.handle();
+    let m = server.manifest.config("tiny").unwrap().clone();
+    let mut rng = Prng::new(2);
+    let y = Tensor::randn(&[m.batch, m.np], 1.0, &mut rng);
+    let l = Tensor::randn(&[m.np, m.np], 1.0, &mut rng);
+    let c = Tensor::randn(&[m.np, m.k], 1.0, &mut rng);
+    let mut b = Bench::new("Runtime microbench — native execute round-trip (tiny shapes)");
+    b.case("pp_fwd_local tiny (dispatch+kernel)", 5, 100, || {
+        let _ = handle.execute("tiny", "pp_fwd_local", &[&y, &l, &c]).unwrap();
+    });
+    b.finish();
+}
 
 fn bench_collectives() {
     let mut b = Bench::new("L3 microbench — collective fabric (real thread rendezvous)");
@@ -54,63 +124,46 @@ fn bench_tensor_ops() {
     b.case("col_slice [32,2048]->256", 10, 200, || {
         let _ = wide.col_slice(256, 256).unwrap();
     });
-    let a = Tensor::randn(&[128, 128], 1.0, &mut rng);
-    let c = Tensor::randn(&[128, 128], 1.0, &mut rng);
-    b.case("reference matmul 128^3", 5, 50, || {
-        let _ = a.matmul(&c).unwrap();
-    });
-    b.finish();
-}
-
-fn bench_pjrt() {
-    let dir = default_artifact_dir();
-    if !dir.join("manifest.json").exists() {
-        eprintln!("SKIP pjrt microbench: no artifacts");
-        return;
-    }
-    let server = ExecServer::start(&dir).expect("server");
-    let handle = server.handle();
-    let m = server.manifest.config("tiny").unwrap().clone();
-    let mut rng = Prng::new(2);
-    let y = Tensor::randn(&[m.batch, m.np], 1.0, &mut rng);
-    let l = Tensor::randn(&[m.np, m.np], 1.0, &mut rng);
-    let c = Tensor::randn(&[m.np, m.k], 1.0, &mut rng);
-    let mut b = Bench::new("Runtime microbench — PJRT execute round-trip (tiny shapes)");
-    b.case("pp_fwd_local tiny (exec+transfer)", 5, 100, || {
-        let _ = handle
-            .execute("tiny", "pp_fwd_local", vec![y.clone(), l.clone(), c.clone()])
-            .unwrap();
+    let tall = Tensor::randn(&[2048, 512], 1.0, &mut rng);
+    b.case("blocked transpose [2048,512]", 5, 50, || {
+        let _ = tall.transpose().unwrap();
     });
     b.finish();
 }
 
 fn bench_json() {
-    let manifest_path = default_artifact_dir().join("manifest.json");
-    let text = std::fs::read_to_string(&manifest_path).unwrap_or_else(|_| {
-        // fall back to a synthetic blob
-        let rows: Vec<Json> = (0..200)
-            .map(|i| {
-                Json::obj(vec![
-                    ("name", Json::str(format!("cfg{i}"))),
-                    ("p", Json::int(8)),
-                    ("vals", Json::arr((0..20).map(Json::int).collect())),
-                ])
-            })
-            .collect();
-        Json::arr(rows).pretty()
-    });
-    let mut b = Bench::new("Util microbench — JSON parse (manifest-scale)");
-    let text = Arc::new(text);
+    // Synthetic manifest-scale blob (artifact bundles are optional now).
+    let rows: Vec<Json> = (0..200)
+        .map(|i| {
+            Json::obj(vec![
+                ("name", Json::str(format!("cfg{i}"))),
+                ("p", Json::int(8)),
+                ("vals", Json::arr((0..20).map(Json::int).collect())),
+            ])
+        })
+        .collect();
+    let text = Arc::new(Json::arr(rows).pretty());
     let t2 = text.clone();
+    let mut b = Bench::new("Util microbench — JSON parse (manifest-scale)");
     b.case(&format!("parse {} bytes", text.len()), 10, 200, move || {
         let _ = Json::parse(&t2).unwrap();
     });
     b.finish();
 }
 
+/// BENCH_native_backend.json lands at the repository root regardless of
+/// the cargo invocation directory.
+fn bench_json_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../BENCH_native_backend.json")
+}
+
 fn main() {
+    let mut records: Vec<(String, f64)> = Vec::new();
+    bench_native_matmul(&mut records);
+    bench_pp_iteration(&mut records);
+    bench_backend_dispatch();
     bench_collectives();
     bench_tensor_ops();
-    bench_pjrt();
     bench_json();
+    write_records_json(&bench_json_path(), &records);
 }

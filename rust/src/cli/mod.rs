@@ -87,6 +87,11 @@ COMMANDS:
     train        Train an FFN on the simulated cluster (measured mode)
                    --preset <name>        artifact preset (tiny|quickstart|small|...)
                    --mode <tp|pp>         parallelism strategy    [pp]
+                   --backend <native|xla> compute backend         [native]
+                                          (native = pure-Rust fused kernels,
+                                           no artifacts needed; xla = PJRT
+                                           over AOT artifacts, needs the
+                                           `xla` cargo feature)
                    --iters <N>            iteration cap           [preset default]
                    --target-loss <x>      stop at this loss
                    --lr <x>               SGD learning rate       [0.05]
@@ -96,10 +101,12 @@ COMMANDS:
     experiment   Regenerate a paper table/figure
                    <id|all>               fig5a fig5b fig5c fig6 fig7a fig7b
                                           fig7c table1 table3
+                   --backend <native|xla> backend for measured runs [native]
                    --out-dir <dir>        write markdown+json per experiment
     predict      One-shot analytic prediction (Frontier scale)
                    --n <n> --p <p> --k <k> [--layers 2] [--batch 32]
     inspect      List artifact configs in the manifest
+                   --backend <native|xla> which manifest           [native]
     fit-comm     Fit the collective model (Table III) and print constants
     help         Show this text
 ";

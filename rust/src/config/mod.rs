@@ -34,6 +34,35 @@ impl Parallelism {
     }
 }
 
+/// Which compute backend executes the per-rank kernels (runtime::Backend).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum BackendKind {
+    /// Pure-Rust fused kernels (runtime/native.rs); self-contained, no
+    /// artifacts or libxla needed. The default.
+    #[default]
+    Native,
+    /// PJRT over AOT HLO artifacts; needs the `xla` cargo feature plus an
+    /// artifact bundle (`make artifacts`).
+    Xla,
+}
+
+impl BackendKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            BackendKind::Native => "native",
+            BackendKind::Xla => "xla",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<BackendKind> {
+        match s {
+            "native" => Ok(BackendKind::Native),
+            "xla" | "pjrt" => Ok(BackendKind::Xla),
+            _ => bail!("unknown backend '{s}' (want native|xla)"),
+        }
+    }
+}
+
 /// The FFN being trained.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct ModelConfig {
@@ -171,6 +200,8 @@ pub struct RunConfig {
     pub hardware: HardwareConfig,
     /// Artifact config name (python/compile/shapes.py); Measured mode only.
     pub artifact: Option<String>,
+    /// Which compute backend executes the kernels (native by default).
+    pub backend: BackendKind,
 }
 
 impl RunConfig {
@@ -235,6 +266,7 @@ impl RunConfig {
                 "artifact",
                 self.artifact.clone().map(Json::str).unwrap_or(Json::Null),
             ),
+            ("backend", Json::str(self.backend.name())),
             ("busy_w", Json::num(self.hardware.power.busy_w)),
             ("idle_w", Json::num(self.hardware.power.idle_w)),
         ])
@@ -292,29 +324,47 @@ impl RunConfig {
             },
             hardware,
             artifact: j.get("artifact").as_str().map(|s| s.to_string()),
+            backend: match j.get("backend").as_str() {
+                Some(s) => BackendKind::parse(s)?,
+                None => BackendKind::Native,
+            },
         };
         cfg.validate()?;
         Ok(cfg)
     }
 }
 
+/// Preset geometry table, shared by `preset` and the native backend's
+/// synthetic manifest (runtime::native::preset_manifest).
+const PRESETS: &[(&str, (usize, usize, usize, usize))] = &[
+    ("tiny", (4, 64, 4, 8)),
+    ("tiny_pallas", (4, 64, 4, 8)),
+    ("tiny_p2", (2, 32, 4, 4)),
+    ("tiny_p2_pallas", (2, 32, 4, 4)),
+    ("quickstart", (4, 256, 8, 16)),
+    ("small", (8, 1024, 16, 32)),
+    ("small_k4", (8, 1024, 4, 32)),
+    ("small_k8", (8, 1024, 8, 32)),
+    ("small_k32", (8, 1024, 32, 32)),
+    ("small_p2", (2, 1024, 16, 32)),
+    ("small_p4", (4, 1024, 16, 32)),
+    ("medium", (8, 2048, 16, 32)),
+    ("e2e", (8, 8192, 32, 16)),
+];
+
+/// All preset names, in table order.
+pub fn preset_names() -> Vec<&'static str> {
+    PRESETS.iter().map(|(n, _)| *n).collect()
+}
+
 /// Presets matching python/compile/shapes.py (Measured mode). `mode` picks
 /// TP or PP over the same artifact bundle.
 pub fn preset(artifact: &str, mode: Parallelism) -> Result<RunConfig> {
-    let (p, n, k, batch) = match artifact {
-        "tiny" | "tiny_pallas" => (4, 64, 4, 8),
-        "tiny_p2" | "tiny_p2_pallas" => (2, 32, 4, 4),
-        "quickstart" => (4, 256, 8, 16),
-        "small" => (8, 1024, 16, 32),
-        "small_k4" => (8, 1024, 4, 32),
-        "small_k8" => (8, 1024, 8, 32),
-        "small_k32" => (8, 1024, 32, 32),
-        "small_p2" => (2, 1024, 16, 32),
-        "small_p4" => (4, 1024, 16, 32),
-        "medium" => (8, 2048, 16, 32),
-        "e2e" => (8, 8192, 32, 16),
-        other => bail!("unknown preset '{other}'"),
-    };
+    let (p, n, k, batch) = PRESETS
+        .iter()
+        .find(|(name, _)| *name == artifact)
+        .map(|(_, g)| *g)
+        .ok_or_else(|| anyhow::anyhow!("unknown preset '{artifact}'"))?;
     Ok(RunConfig {
         mode,
         p,
@@ -322,6 +372,7 @@ pub fn preset(artifact: &str, mode: Parallelism) -> Result<RunConfig> {
         train: TrainConfig { batch, ..TrainConfig::default() },
         hardware: HardwareConfig::frontier_measured(),
         artifact: Some(artifact.to_string()),
+        backend: BackendKind::Native,
     })
 }
 
@@ -378,5 +429,28 @@ mod tests {
         assert_eq!(Parallelism::parse("tp").unwrap(), Parallelism::Tensor);
         assert_eq!(Parallelism::parse("phantom").unwrap(), Parallelism::Phantom);
         assert!(Parallelism::parse("x").is_err());
+    }
+
+    #[test]
+    fn backend_parse_and_default() {
+        assert_eq!(BackendKind::parse("native").unwrap(), BackendKind::Native);
+        assert_eq!(BackendKind::parse("xla").unwrap(), BackendKind::Xla);
+        assert_eq!(BackendKind::parse("pjrt").unwrap(), BackendKind::Xla);
+        assert!(BackendKind::parse("cuda").is_err());
+        assert_eq!(BackendKind::default(), BackendKind::Native);
+        // JSON without a backend field defaults to native
+        let mut j = preset("tiny", Parallelism::Phantom).unwrap().to_json();
+        if let Json::Obj(map) = &mut j {
+            map.remove("backend");
+        }
+        assert_eq!(RunConfig::from_json(&j).unwrap().backend, BackendKind::Native);
+    }
+
+    #[test]
+    fn preset_names_cover_the_table() {
+        for name in preset_names() {
+            assert!(preset(name, Parallelism::Phantom).is_ok(), "{name}");
+        }
+        assert!(preset_names().contains(&"quickstart"));
     }
 }

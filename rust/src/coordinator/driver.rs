@@ -363,7 +363,7 @@ pub fn infer(cfg: &RunConfig, server: &ExecServer, batches: usize) -> Result<Inf
                                 &mut ledger,
                                 &artifact,
                                 "pp_fwd_local",
-                                vec![y, params.locals[l].clone(), params.compressors[l].clone()],
+                                &[&y, &params.locals[l], &params.compressors[l]],
                             )?;
                             let [z_loc, g]: [Tensor; 2] =
                                 super::rank_pp::unpack(r.outputs, "pp_fwd_local")?;
@@ -374,12 +374,7 @@ pub fn infer(cfg: &RunConfig, server: &ExecServer, batches: usize) -> Result<Inf
                                 &mut ledger,
                                 &artifact,
                                 "pp_fwd_combine",
-                                vec![
-                                    z_loc,
-                                    g_all,
-                                    params.decompressors[l].clone(),
-                                    params.biases[l].clone(),
-                                ],
+                                &[&z_loc, &g_all, &params.decompressors[l], &params.biases[l]],
                             )?;
                             let [y_out, _]: [Tensor; 2] =
                                 super::rank_pp::unpack(r.outputs, "pp_fwd_combine")?;
@@ -406,7 +401,7 @@ pub fn infer(cfg: &RunConfig, server: &ExecServer, batches: usize) -> Result<Inf
                                 &mut ledger,
                                 &artifact,
                                 "tp_fwd",
-                                vec![y_full, params.weights[l].clone(), params.biases[l].clone()],
+                                &[&y_full, &params.weights[l], &params.biases[l]],
                             )?;
                             let [y_out, _]: [Tensor; 2] =
                                 super::rank_pp::unpack(r.outputs, "tp_fwd")?;
@@ -474,14 +469,15 @@ pub fn pp_forward_once(
                 ep,
             );
             let layers = w.params.layers();
+            let artifact = w.artifact.clone();
             let mut y = x;
             for l in 0..layers {
                 let r = super::exec_charged(
                     &w.exec,
                     &mut w.ledger,
-                    &w.artifact.clone(),
+                    &artifact,
                     "pp_fwd_local",
-                    vec![y.clone(), w.params.locals[l].clone(), w.params.compressors[l].clone()],
+                    &[&y, &w.params.locals[l], &w.params.compressors[l]],
                 )?;
                 let [z_loc, g]: [Tensor; 2] = super::rank_pp::unpack(r.outputs, "fwd")?;
                 let mut g_all = w.ep.all_gather(g, &mut w.ledger)?;
@@ -489,9 +485,9 @@ pub fn pp_forward_once(
                 let r = super::exec_charged(
                     &w.exec,
                     &mut w.ledger,
-                    &w.artifact.clone(),
+                    &artifact,
                     "pp_fwd_combine",
-                    vec![z_loc, g_all, w.params.decompressors[l].clone(), w.params.biases[l].clone()],
+                    &[&z_loc, &g_all, &w.params.decompressors[l], &w.params.biases[l]],
                 )?;
                 let [y_out, _z]: [Tensor; 2] = super::rank_pp::unpack(r.outputs, "fwd")?;
                 y = y_out;

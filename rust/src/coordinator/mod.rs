@@ -2,9 +2,10 @@
 //!
 //! A leader (`driver`) spawns one OS thread per rank. Each rank runs the
 //! per-iteration phase schedule of its parallelism mode, executing the
-//! collective-free compute segments through PJRT (`runtime::ExecHandle`)
-//! and the collectives through the in-memory fabric (`comm`), with virtual
-//! time / energy tracked by its `EnergyLedger`.
+//! collective-free compute segments through the configured backend
+//! (`runtime::ExecHandle` — native fused kernels by default, PJRT behind
+//! the `xla` feature) and the collectives through the in-memory fabric
+//! (`comm`), with virtual time / energy tracked by its `EnergyLedger`.
 //!
 //! Phase schedule per iteration (paper Secs. IV–V, Table II):
 //!
@@ -43,13 +44,14 @@ use crate::runtime::{ExecHandle, ExecReply};
 use anyhow::Result;
 
 /// Shared helper: execute a compute segment and charge its wall time to the
-/// rank's virtual clock as busy (dynamic-power) time.
+/// rank's virtual clock as busy (dynamic-power) time. Inputs are borrowed —
+/// weights and activations are never cloned for a call.
 pub(crate) fn exec_charged(
     exec: &ExecHandle,
     ledger: &mut EnergyLedger,
     artifact: &str,
     entry: &str,
-    inputs: Vec<crate::tensor::Tensor>,
+    inputs: &[&crate::tensor::Tensor],
 ) -> Result<ExecReply> {
     let reply = exec.execute(artifact, entry, inputs)?;
     ledger.advance(reply.wall_s, Activity::Compute);

@@ -45,36 +45,40 @@ impl PhantomRank {
     ///
     /// Uses the FUSED inter-collective segments (pp_fwd_step / pp_loss_step
     /// / pp_bwd_step): every stretch of compute between two collectives is
-    /// one PJRT execution — 7 calls per 2-layer iteration instead of 10
+    /// one backend execution — 7 calls per 2-layer iteration instead of 10
     /// (EXPERIMENTS.md §Perf). The collective schedule is unchanged from
     /// the paper's Table II: one k*batch All-Gather per layer forward, one
     /// k*batch Reduce-Scatter per layer backward.
+    ///
+    /// Zero-clone hot path: every backend call borrows its inputs, so no
+    /// weight, decompressor, bias or retained activation is copied — only
+    /// the collectives take (and must take) owned payloads.
     pub fn iteration(&mut self, x_shard: &Tensor, t_shard: &Tensor) -> Result<f64> {
         let layers = self.params.layers();
         let rank = self.params.rank;
-        let art = self.artifact.clone();
 
         // ---- forward ----
-        let mut ys: Vec<Tensor> = vec![x_shard.clone()];
+        // ys[l] = post-activation output of layer l; the layer-l input is
+        // x_shard for l == 0, else ys[l - 1].
+        let mut ys: Vec<Tensor> = Vec::with_capacity(layers);
         let mut zs: Vec<Tensor> = Vec::with_capacity(layers);
         let mut g_alls: Vec<Tensor> = Vec::with_capacity(layers);
 
         let r = exec_charged(
             &self.exec,
             &mut self.ledger,
-            &art,
+            &self.artifact,
             "pp_fwd_local",
-            vec![
-                ys[0].clone(),
-                self.params.locals[0].clone(),
-                self.params.compressors[0].clone(),
-            ],
+            &[x_shard, &self.params.locals[0], &self.params.compressors[0]],
         )?;
-        let [mut z_loc, mut g]: [Tensor; 2] = unpack(r.outputs, "pp_fwd_local")?;
+        let [mut z_loc, g]: [Tensor; 2] = unpack(r.outputs, "pp_fwd_local")?;
+        let mut g = Some(g);
 
         for l in 0..layers {
-            // The ONLY forward collective (paper Table II, PP row).
-            let mut g_all = self.ep.all_gather(g.clone(), &mut self.ledger)?;
+            // The ONLY forward collective (paper Table II, PP row); it
+            // consumes g, which the next fused step replaces.
+            let mut g_all =
+                self.ep.all_gather(g.take().expect("g set each layer"), &mut self.ledger)?;
             g_all.zero_slot(rank);
 
             if l + 1 < layers {
@@ -82,15 +86,15 @@ impl PhantomRank {
                 let r = exec_charged(
                     &self.exec,
                     &mut self.ledger,
-                    &art,
+                    &self.artifact,
                     "pp_fwd_step",
-                    vec![
-                        z_loc,
-                        g_all.clone(),
-                        self.params.decompressors[l].clone(),
-                        self.params.biases[l].clone(),
-                        self.params.locals[l + 1].clone(),
-                        self.params.compressors[l + 1].clone(),
+                    &[
+                        &z_loc,
+                        &g_all,
+                        &self.params.decompressors[l],
+                        &self.params.biases[l],
+                        &self.params.locals[l + 1],
+                        &self.params.compressors[l + 1],
                     ],
                 )?;
                 let [y_out, z, z_loc_next, g_next]: [Tensor; 4] =
@@ -99,18 +103,18 @@ impl PhantomRank {
                 zs.push(z);
                 g_alls.push(g_all);
                 z_loc = z_loc_next;
-                g = g_next;
+                g = Some(g_next);
             } else {
                 let r = exec_charged(
                     &self.exec,
                     &mut self.ledger,
-                    &art,
+                    &self.artifact,
                     "pp_fwd_combine",
-                    vec![
-                        z_loc.clone(),
-                        g_all.clone(),
-                        self.params.decompressors[l].clone(),
-                        self.params.biases[l].clone(),
+                    &[
+                        &z_loc,
+                        &g_all,
+                        &self.params.decompressors[l],
+                        &self.params.biases[l],
                     ],
                 )?;
                 let [y_out, z]: [Tensor; 2] = unpack(r.outputs, "pp_fwd_combine")?;
@@ -124,13 +128,13 @@ impl PhantomRank {
         let r = exec_charged(
             &self.exec,
             &mut self.ledger,
-            &art,
+            &self.artifact,
             "pp_loss_step",
-            vec![
-                ys[layers].clone(),
-                zs[layers - 1].clone(),
-                t_shard.clone(),
-                self.params.decompressors[layers - 1].clone(),
+            &[
+                &ys[layers - 1],
+                &zs[layers - 1],
+                t_shard,
+                &self.params.decompressors[layers - 1],
             ],
         )?;
         let [loss_t, delta0, h_out]: [Tensor; 3] = unpack(r.outputs, "pp_loss_step")?;
@@ -142,12 +146,14 @@ impl PhantomRank {
         // ---- backward ----
         let mut grads: Vec<Option<[Tensor; 4]>> = (0..layers).map(|_| None).collect();
         for l in (0..layers).rev() {
+            // The layer-l input activation, borrowed (not cloned).
+            let y_prev: &Tensor = if l == 0 { x_shard } else { &ys[l - 1] };
             let r = exec_charged(
                 &self.exec,
                 &mut self.ledger,
-                &art,
+                &self.artifact,
                 "pp_grads",
-                vec![ys[l].clone(), delta.clone(), h_sum.clone(), g_alls[l].clone()],
+                &[y_prev, &delta, &h_sum, &g_alls[l]],
             )?;
             let [dl, dc, dd, db]: [Tensor; 4] = unpack(r.outputs, "pp_grads")?;
             grads[l] = Some([dl, dc, dd, db]);
@@ -157,15 +163,15 @@ impl PhantomRank {
                 let r = exec_charged(
                     &self.exec,
                     &mut self.ledger,
-                    &art,
+                    &self.artifact,
                     "pp_bwd_step",
-                    vec![
-                        delta,
-                        h_sum,
-                        self.params.locals[l].clone(),
-                        self.params.compressors[l].clone(),
-                        zs[l - 1].clone(),
-                        self.params.decompressors[l - 1].clone(),
+                    &[
+                        &delta,
+                        &h_sum,
+                        &self.params.locals[l],
+                        &self.params.compressors[l],
+                        &zs[l - 1],
+                        &self.params.decompressors[l - 1],
                     ],
                 )?;
                 let [d, h_out_prev]: [Tensor; 2] = unpack(r.outputs, "pp_bwd_step")?;
@@ -176,20 +182,23 @@ impl PhantomRank {
 
         // ---- optimizer step (rank-local compute) ----
         let t0 = std::time::Instant::now();
-        let mut grad_list = Vec::with_capacity(4 * layers);
         // Order must match `param_shapes`/`named_tensors`: L*, C*, D*, b*.
-        for g in grads.iter().flatten() {
-            grad_list.push(g[0].clone());
+        // The per-layer arrays are moved out, never cloned.
+        let mut dls = Vec::with_capacity(layers);
+        let mut dcs = Vec::with_capacity(layers);
+        let mut dds = Vec::with_capacity(layers);
+        let mut dbs = Vec::with_capacity(layers);
+        for g in grads.into_iter() {
+            let [dl, dc, dd, db] = g.expect("every layer produced grads");
+            dls.push(dl);
+            dcs.push(dc);
+            dds.push(dd);
+            dbs.push(db);
         }
-        for g in grads.iter().flatten() {
-            grad_list.push(g[1].clone());
-        }
-        for g in grads.iter().flatten() {
-            grad_list.push(g[2].clone());
-        }
-        for g in grads.iter().flatten() {
-            grad_list.push(g[3].clone());
-        }
+        let mut grad_list = dls;
+        grad_list.append(&mut dcs);
+        grad_list.append(&mut dds);
+        grad_list.append(&mut dbs);
         {
             let mut tensors = self.params.named_tensors();
             let mut refs: Vec<&mut Tensor> =

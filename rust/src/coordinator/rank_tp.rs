@@ -60,13 +60,17 @@ impl TensorRank {
 
     /// One forward+backward+update iteration. Returns the rank-local sum of
     /// squared errors (pre-scale).
+    ///
+    /// Zero-clone hot path: every backend call borrows its inputs; the one
+    /// remaining copy is the input batch shard handed to the first
+    /// All-Gather (collectives take owned payloads — that copy IS the
+    /// modeled data movement).
     pub fn iteration(&mut self, x_shard: &Tensor, t_shard: &Tensor) -> Result<f64> {
         let layers = self.params.layers();
         let rank = self.params.rank;
         let m = self.params.m;
         let p = self.params.p;
         let n = m * p;
-        let art = self.artifact.clone();
         let batch = x_shard.shape()[0];
 
         // ---- forward ----
@@ -84,13 +88,9 @@ impl TensorRank {
             let r = exec_charged(
                 &self.exec,
                 &mut self.ledger,
-                &art,
+                &self.artifact,
                 "tp_fwd",
-                vec![
-                    y_full.clone(),
-                    self.params.weights[l].clone(),
-                    self.params.biases[l].clone(),
-                ],
+                &[&y_full, &self.params.weights[l], &self.params.biases[l]],
             )?;
             let [y_out, z]: [Tensor; 2] = unpack(r.outputs, "tp_fwd")?;
             y_fulls.push(y_full);
@@ -102,9 +102,9 @@ impl TensorRank {
         let r = exec_charged(
             &self.exec,
             &mut self.ledger,
-            &art,
+            &self.artifact,
             "mse_delta",
-            vec![y_shard.clone(), zs[layers - 1].clone(), t_shard.clone()],
+            &[&y_shard, &zs[layers - 1], t_shard],
         )?;
         let [loss_t, delta0]: [Tensor; 2] = unpack(r.outputs, "mse_delta")?;
         let loss_local = loss_t.data()[0] as f64;
@@ -112,16 +112,16 @@ impl TensorRank {
 
         // ---- backward ----
         // Top layer's gradients, then for each lower layer the fused
-        // tp_bwd_step (finish + grads) after the All-Reduce — one PJRT call
-        // per inter-collective segment (EXPERIMENTS.md §Perf).
+        // tp_bwd_step (finish + grads) after the All-Reduce — one backend
+        // call per inter-collective segment (EXPERIMENTS.md §Perf).
         let mut grads: Vec<Option<[Tensor; 2]>> = (0..layers).map(|_| None).collect();
         {
             let r = exec_charged(
                 &self.exec,
                 &mut self.ledger,
-                &art,
+                &self.artifact,
                 "tp_grads",
-                vec![y_fulls[layers - 1].clone(), delta.clone()],
+                &[&y_fulls[layers - 1], &delta],
             )?;
             let [dw, db]: [Tensor; 2] = unpack(r.outputs, "tp_grads")?;
             grads[layers - 1] = Some([dw, db]);
@@ -130,9 +130,9 @@ impl TensorRank {
             let r = exec_charged(
                 &self.exec,
                 &mut self.ledger,
-                &art,
+                &self.artifact,
                 "tp_bwd_partial",
-                vec![delta, self.params.weights[l].clone()],
+                &[&delta, &self.params.weights[l]],
             )?;
             let [dy_partial]: [Tensor; 1] = unpack(r.outputs, "tp_bwd_partial")?;
 
@@ -151,9 +151,9 @@ impl TensorRank {
             let r = exec_charged(
                 &self.exec,
                 &mut self.ledger,
-                &art,
+                &self.artifact,
                 "tp_bwd_step",
-                vec![dy_shard, zs[l - 1].clone(), y_fulls[l - 1].clone()],
+                &[&dy_shard, &zs[l - 1], &y_fulls[l - 1]],
             )?;
             let [d, dw, db]: [Tensor; 3] = unpack(r.outputs, "tp_bwd_step")?;
             delta = d;
@@ -162,13 +162,16 @@ impl TensorRank {
 
         // ---- optimizer step ----
         let t0 = std::time::Instant::now();
-        let mut grad_list = Vec::with_capacity(2 * layers);
-        for g in grads.iter().flatten() {
-            grad_list.push(g[0].clone());
+        // Order must match named_tensors: W*, b*; arrays moved, not cloned.
+        let mut dws = Vec::with_capacity(layers);
+        let mut dbs = Vec::with_capacity(layers);
+        for g in grads.into_iter() {
+            let [dw, db] = g.expect("every layer produced grads");
+            dws.push(dw);
+            dbs.push(db);
         }
-        for g in grads.iter().flatten() {
-            grad_list.push(g[1].clone());
-        }
+        let mut grad_list = dws;
+        grad_list.append(&mut dbs);
         {
             let mut tensors = self.params.named_tensors();
             let mut refs: Vec<&mut Tensor> =

@@ -13,10 +13,11 @@
 //!   table1 — the full Table I at measured scale                 [measured]
 //!   table3 — collective model fit (Appendix Table III)          [synthetic]
 //!
-//! "measured" experiments train real models through PJRT on the simulated
-//! cluster at reduced width (n=1,024; see DESIGN.md §2 substitutions);
-//! "modeled" experiments use the calibrated analytic perfmodel at the
-//! paper's own scales.
+//! "measured" experiments train real models through the configured backend
+//! (native fused kernels by default; PJRT with `--backend xla`) on the
+//! simulated cluster at reduced width (n=1,024; see DESIGN.md §2
+//! substitutions); "modeled" experiments use the calibrated analytic
+//! perfmodel at the paper's own scales.
 
 pub mod fig5;
 pub mod fig6;

@@ -11,6 +11,11 @@
 //!   virtual-time network + energy simulation, training loop, and the
 //!   experiment harness that regenerates every table/figure of the paper.
 //!
+//! The crate is self-contained by default: the native backend
+//! (runtime/native.rs) executes every per-rank kernel as fused pure-Rust
+//! GEMMs, so L1/L2 and the PJRT runtime are optional (`xla` cargo
+//! feature) accelerators rather than prerequisites.
+//!
 //! See DESIGN.md for the system inventory and EXPERIMENTS.md for
 //! paper-vs-measured results.
 

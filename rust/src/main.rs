@@ -1,13 +1,15 @@
 //! `phantom` — launcher for the phantom-parallelism training system.
 //!
 //! See `phantom help` (cli::USAGE) for the command reference. Python/JAX
-//! never runs here: artifacts are AOT-built by `make artifacts` and loaded
-//! via PJRT.
+//! never runs here. The default `--backend native` executes the fused
+//! pure-Rust kernels, fully self-contained; `--backend xla` loads AOT
+//! artifacts through PJRT (requires the `xla` cargo feature and
+//! `make artifacts`).
 
 use anyhow::{bail, Result};
 
 use phantom::cli::{Args, USAGE};
-use phantom::config::{preset, OptimizerConfig, Parallelism};
+use phantom::config::{preset, BackendKind, OptimizerConfig, Parallelism};
 use phantom::coordinator;
 use phantom::experiments;
 use phantom::perfmodel::{self, GemmModel, Workload};
@@ -31,7 +33,7 @@ fn run(argv: Vec<String>) -> Result<()> {
         "train" => cmd_train(&args),
         "experiment" => cmd_experiment(&args),
         "predict" => cmd_predict(&args),
-        "inspect" => cmd_inspect(),
+        "inspect" => cmd_inspect(&args),
         "fit-comm" => cmd_fit_comm(),
         "help" | "--help" | "-h" => {
             print!("{USAGE}");
@@ -43,11 +45,12 @@ fn run(argv: Vec<String>) -> Result<()> {
 
 fn cmd_train(args: &Args) -> Result<()> {
     args.check_known(&[
-        "preset", "mode", "iters", "target-loss", "lr", "optimizer", "seed", "out",
+        "preset", "mode", "iters", "target-loss", "lr", "optimizer", "seed", "out", "backend",
     ])?;
     let preset_name = args.opt("preset").unwrap_or("quickstart");
     let mode = Parallelism::parse(args.opt("mode").unwrap_or("pp"))?;
     let mut cfg = preset(preset_name, mode)?;
+    cfg.backend = BackendKind::parse(args.opt("backend").unwrap_or("native"))?;
     if let Some(iters) = args.opt_parse::<usize>("iters")? {
         cfg.train.max_iters = iters;
     }
@@ -63,15 +66,16 @@ fn cmd_train(args: &Args) -> Result<()> {
         o => bail!("unknown optimizer '{o}'"),
     };
 
-    let server = ExecServer::start(default_artifact_dir())?;
+    let server = ExecServer::for_run(&cfg)?;
     eprintln!(
-        "training {} / {} on {} simulated ranks (n={}, k={}, L={})...",
+        "training {} / {} on {} simulated ranks (n={}, k={}, L={}, backend={})...",
         preset_name,
         cfg.mode.name(),
         cfg.p,
         cfg.model.n,
         cfg.model.k,
-        cfg.model.layers
+        cfg.model.layers,
+        server.backend_name()
     );
     let report = coordinator::train(&cfg, &server)?;
 
@@ -144,7 +148,7 @@ fn report_json(r: &coordinator::TrainReport) -> Json {
 }
 
 fn cmd_experiment(args: &Args) -> Result<()> {
-    args.check_known(&["out-dir"])?;
+    args.check_known(&["out-dir", "backend"])?;
     let id = args
         .positional
         .get(1)
@@ -155,10 +159,11 @@ fn cmd_experiment(args: &Args) -> Result<()> {
     } else {
         vec![id]
     };
+    let backend = BackendKind::parse(args.opt("backend").unwrap_or("native"))?;
     // Start the server lazily: the modeled experiments don't need it.
     let needs_server = ids.iter().any(|i| i.starts_with("fig7") || *i == "table1");
     let server = if needs_server {
-        Some(ExecServer::start(default_artifact_dir())?)
+        Some(ExecServer::for_backend(backend)?)
     } else {
         None
     };
@@ -213,11 +218,16 @@ fn cmd_predict(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_inspect() -> Result<()> {
-    let dir = default_artifact_dir();
-    let server = ExecServer::start(&dir)?;
+fn cmd_inspect(args: &Args) -> Result<()> {
+    args.check_known(&["backend"])?;
+    let backend = BackendKind::parse(args.opt("backend").unwrap_or("native"))?;
+    let server = ExecServer::for_backend(backend)?;
+    let source = match backend {
+        BackendKind::Native => "native synthetic manifest".to_string(),
+        BackendKind::Xla => format!("{}", default_artifact_dir().display()),
+    };
     let mut t = Table::new(
-        &format!("Artifact manifest — {}", dir.display()),
+        &format!("Artifact manifest — {source}"),
         &["config", "p", "n", "k", "batch", "variant", "entries"],
     );
     for c in server.manifest.iter() {

@@ -26,6 +26,26 @@ pub struct ManifestConfig {
     pub entries: BTreeMap<String, String>,
 }
 
+impl ManifestConfig {
+    /// A synthetic config for the native backend: same geometry contract as
+    /// an AOT bundle (np = n/p, scale = 1/(batch*n) baked into the loss
+    /// kernels), but with no HLO files behind it.
+    pub fn native(name: &str, p: usize, n: usize, k: usize, batch: usize) -> ManifestConfig {
+        assert!(p > 0 && n % p == 0, "native config '{name}': n={n} not divisible by p={p}");
+        ManifestConfig {
+            name: name.to_string(),
+            p,
+            n,
+            k,
+            batch,
+            np: n / p,
+            scale: 1.0 / ((batch * n) as f64),
+            variant: "native".to_string(),
+            entries: BTreeMap::new(),
+        }
+    }
+}
+
 /// The parsed manifest.
 #[derive(Debug, Clone, Default)]
 pub struct Manifest {
@@ -34,6 +54,21 @@ pub struct Manifest {
 }
 
 impl Manifest {
+    /// Build a manifest from in-memory configs (no artifact files). Used by
+    /// the native backend, which has no on-disk bundle.
+    pub fn synthetic(configs: Vec<ManifestConfig>) -> Manifest {
+        let mut m = Manifest { fingerprint: "synthetic".to_string(), ..Default::default() };
+        for c in configs {
+            m.insert(c);
+        }
+        m
+    }
+
+    /// Insert (or replace) a config.
+    pub fn insert(&mut self, cfg: ManifestConfig) {
+        self.configs.insert(cfg.name.clone(), cfg);
+    }
+
     pub fn load(dir: &Path) -> Result<Manifest> {
         let path = dir.join("manifest.json");
         let text = std::fs::read_to_string(&path).with_context(|| {
@@ -144,6 +179,19 @@ mod tests {
         assert!(m.config("nope").is_err());
         assert_eq!(m.find(4, 64, 4, 8, "jnp").unwrap().name, "tiny");
         assert!(m.find(4, 64, 4, 8, "pallas").is_none());
+    }
+
+    #[test]
+    fn synthetic_native_configs() {
+        let m = Manifest::synthetic(vec![ManifestConfig::native("tiny", 4, 64, 4, 8)]);
+        let c = m.config("tiny").unwrap();
+        assert_eq!(c.np, 16);
+        assert!((c.scale - 1.0 / (8.0 * 64.0)).abs() < 1e-15);
+        assert_eq!(c.variant, "native");
+        assert!(c.entries.is_empty());
+        let mut m = m;
+        m.insert(ManifestConfig::native("tiny", 2, 64, 4, 8)); // replace
+        assert_eq!(m.config("tiny").unwrap().p, 2);
     }
 
     #[test]

@@ -1,195 +1,161 @@
-//! PJRT runtime: loads AOT artifacts (HLO text) and executes them for the
-//! coordinator's rank threads.
+//! Execution runtime: pluggable compute `Backend`s behind a uniform
+//! handle, serving the artifact entry points the coordinator's rank threads
+//! execute between collectives.
 //!
-//! The `xla` crate's wrappers hold raw pointers (!Send), so a dedicated
-//! executor thread owns the `PjRtClient` and the compiled-executable cache;
-//! rank threads talk to it through an `ExecHandle` (mpsc). This also
-//! serializes executions, which keeps measured per-call wall times free of
-//! cross-rank CPU contention — the virtual-time model (DESIGN.md §2) wants
-//! each rank's compute time as if it had the device to itself.
+//! Two backends implement the contract (DESIGN.md §3):
+//!
+//! * `NativeBackend` (native.rs, always available) — fused pure-Rust
+//!   kernels over the blocked-GEMM tensor substrate. Self-contained: no
+//!   artifact directory, no PJRT/XLA install.
+//! * The PJRT executor (pjrt.rs, behind the `xla` cargo feature) — loads
+//!   AOT HLO artifacts and executes them through a dedicated executor
+//!   thread (the `xla` crate's wrappers hold raw pointers and are !Send).
+//!
+//! Both serialize kernel execution so the `wall_s` each reply reports is
+//! free of cross-rank CPU contention — the virtual-time model (DESIGN.md
+//! §2) wants each rank's compute time as if it had the device to itself.
+//!
+//! `ExecHandle::execute` borrows its inputs (`&[&Tensor]`): rank workers
+//! pass weights, decompressors and activations by reference every
+//! iteration instead of cloning them per call.
 
 pub mod manifest;
+pub mod native;
+#[cfg(feature = "xla")]
+pub mod pjrt;
 
-use std::collections::HashMap;
 use std::path::{Path, PathBuf};
-use std::sync::mpsc;
-use std::thread::JoinHandle;
-use std::time::Instant;
+use std::sync::Arc;
 
-use anyhow::{anyhow, bail, Context, Result};
+use anyhow::Result;
 
+use crate::config::{BackendKind, RunConfig};
 use crate::tensor::Tensor;
 pub use manifest::{Manifest, ManifestConfig};
-
-/// A request to execute `entry` of artifact-config `config`.
-struct ExecRequest {
-    config: String,
-    entry: String,
-    inputs: Vec<Tensor>,
-    reply: mpsc::Sender<Result<ExecReply>>,
-}
+pub use native::NativeBackend;
 
 /// Execution result: output tensors (tuple-unpacked) + wall time of the
-/// execute+transfer on the executor thread.
+/// kernel on the backend, measured contention-free.
 pub struct ExecReply {
     pub outputs: Vec<Tensor>,
     pub wall_s: f64,
 }
 
+/// A compute backend. Implementations must (DESIGN.md §3):
+/// 1. be callable from many rank threads concurrently,
+/// 2. report `wall_s` as the kernel's own execution time, serialized or
+///    otherwise isolated from cross-rank CPU contention, and
+/// 3. compute exactly the entry-point semantics of
+///    python/compile/kernels/ref.py.
+pub trait Backend: Send + Sync {
+    /// Execute `entry` of artifact-config `config`; blocks until done.
+    fn execute(&self, config: &str, entry: &str, inputs: &[&Tensor]) -> Result<ExecReply>;
+
+    /// Short name for reports ("native", "pjrt").
+    fn name(&self) -> &'static str;
+}
+
 /// Cloneable handle used by rank threads.
 #[derive(Clone)]
 pub struct ExecHandle {
-    tx: mpsc::Sender<ExecRequest>,
+    backend: Arc<dyn Backend>,
 }
 
 impl ExecHandle {
-    /// Execute an entry point; blocks until the executor replies.
-    pub fn execute(&self, config: &str, entry: &str, inputs: Vec<Tensor>) -> Result<ExecReply> {
-        let (reply_tx, reply_rx) = mpsc::channel();
-        self.tx
-            .send(ExecRequest {
-                config: config.to_string(),
-                entry: entry.to_string(),
-                inputs,
-                reply: reply_tx,
-            })
-            .map_err(|_| anyhow!("exec server is gone"))?;
-        reply_rx.recv().map_err(|_| anyhow!("exec server dropped the request"))?
+    /// Execute an entry point; blocks until the backend replies. Inputs are
+    /// borrowed — the caller keeps ownership of weights and activations.
+    pub fn execute(&self, config: &str, entry: &str, inputs: &[&Tensor]) -> Result<ExecReply> {
+        self.backend.execute(config, entry, inputs)
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
     }
 }
 
-/// The executor server. Owns the PJRT client; shut down by dropping all
-/// handles and then joining (or just dropping the server).
+/// The execution server handed to the coordinator: a backend plus the
+/// manifest describing the artifact-config geometries it can serve.
 pub struct ExecServer {
-    handle: Option<JoinHandle<()>>,
-    tx: Option<mpsc::Sender<ExecRequest>>,
+    backend: Arc<dyn Backend>,
     pub manifest: Manifest,
 }
 
 impl ExecServer {
-    /// Start the executor for the given artifact directory.
+    pub(crate) fn new(backend: Arc<dyn Backend>, manifest: Manifest) -> ExecServer {
+        ExecServer { backend, manifest }
+    }
+
+    /// The native backend over the full preset-config set — the default
+    /// way to run on a machine with no artifacts and no libxla.
+    pub fn native() -> ExecServer {
+        let manifest = native::preset_manifest();
+        ExecServer::new(Arc::new(NativeBackend::new(manifest.clone())), manifest)
+    }
+
+    /// Native backend guaranteed to serve `cfg`'s geometry: the preset set
+    /// plus a synthetic config under `cfg`'s artifact name (overriding a
+    /// preset of the same name if the geometry was customized).
+    pub fn native_for(cfg: &RunConfig) -> Result<ExecServer> {
+        let mut manifest = native::preset_manifest();
+        if let Some(name) = cfg.artifact.as_deref() {
+            manifest.insert(ManifestConfig::native(
+                name,
+                cfg.p,
+                cfg.model.n,
+                cfg.model.k,
+                cfg.train.batch,
+            ));
+        }
+        Ok(ExecServer::new(Arc::new(NativeBackend::new(manifest.clone())), manifest))
+    }
+
+    /// Start the PJRT executor for the given artifact directory. Requires
+    /// the `xla` cargo feature; without it this fails with a pointer to
+    /// `ExecServer::native()`.
+    #[cfg(feature = "xla")]
     pub fn start(artifact_dir: impl AsRef<Path>) -> Result<ExecServer> {
-        let dir = artifact_dir.as_ref().to_path_buf();
-        let manifest = Manifest::load(&dir)?;
-        let manifest_for_thread = manifest.clone();
-        let (tx, rx) = mpsc::channel::<ExecRequest>();
-        let handle = std::thread::Builder::new()
-            .name("pjrt-exec".into())
-            .spawn(move || executor_loop(dir, manifest_for_thread, rx))
-            .context("spawning executor thread")?;
-        Ok(ExecServer { handle: Some(handle), tx: Some(tx), manifest })
+        pjrt::start(artifact_dir.as_ref())
+    }
+
+    #[cfg(not(feature = "xla"))]
+    pub fn start(artifact_dir: impl AsRef<Path>) -> Result<ExecServer> {
+        let _ = artifact_dir.as_ref();
+        anyhow::bail!(
+            "this build has no PJRT support (the `xla` cargo feature is off); \
+             use the native backend instead (ExecServer::native() / --backend native)"
+        )
+    }
+
+    /// Start a backend with no run geometry attached: the native preset
+    /// manifest, or the PJRT executor over the default artifact directory.
+    /// The single dispatch point for `BackendKind` (CLI, benches).
+    pub fn for_backend(kind: BackendKind) -> Result<ExecServer> {
+        match kind {
+            BackendKind::Native => Ok(ExecServer::native()),
+            BackendKind::Xla => Self::start(default_artifact_dir()),
+        }
+    }
+
+    /// Start the backend selected by `cfg.backend`, guaranteeing `cfg`'s
+    /// geometry is servable.
+    pub fn for_run(cfg: &RunConfig) -> Result<ExecServer> {
+        match cfg.backend {
+            BackendKind::Native => Self::native_for(cfg),
+            BackendKind::Xla => Self::for_backend(BackendKind::Xla),
+        }
     }
 
     pub fn handle(&self) -> ExecHandle {
-        ExecHandle { tx: self.tx.as_ref().expect("server already shut down").clone() }
+        ExecHandle { backend: self.backend.clone() }
     }
 
-    /// Drop the sender and join the executor thread.
-    pub fn shutdown(mut self) {
-        self.tx.take();
-        if let Some(h) = self.handle.take() {
-            let _ = h.join();
-        }
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
     }
-}
 
-impl Drop for ExecServer {
-    fn drop(&mut self) {
-        self.tx.take();
-        if let Some(h) = self.handle.take() {
-            let _ = h.join();
-        }
-    }
-}
-
-fn executor_loop(dir: PathBuf, manifest: Manifest, rx: mpsc::Receiver<ExecRequest>) {
-    // PJRT client lives (and dies) on this thread.
-    let client = match xla::PjRtClient::cpu() {
-        Ok(c) => c,
-        Err(e) => {
-            // Fail every request with the construction error.
-            while let Ok(req) = rx.recv() {
-                let _ = req.reply.send(Err(anyhow!("PJRT client failed to start: {e}")));
-            }
-            return;
-        }
-    };
-    let mut cache: HashMap<(String, String), xla::PjRtLoadedExecutable> = HashMap::new();
-
-    while let Ok(req) = rx.recv() {
-        let result = serve_one(&client, &dir, &manifest, &mut cache, &req);
-        let _ = req.reply.send(result);
-    }
-}
-
-fn serve_one(
-    client: &xla::PjRtClient,
-    dir: &Path,
-    manifest: &Manifest,
-    cache: &mut HashMap<(String, String), xla::PjRtLoadedExecutable>,
-    req: &ExecRequest,
-) -> Result<ExecReply> {
-    let key = (req.config.clone(), req.entry.clone());
-    if !cache.contains_key(&key) {
-        let cfg = manifest
-            .config(&req.config)
-            .with_context(|| format!("unknown artifact config '{}'", req.config))?;
-        let fname = cfg
-            .entries
-            .get(&req.entry)
-            .with_context(|| format!("config '{}' has no entry '{}'", req.config, req.entry))?;
-        let path = dir.join(fname);
-        let proto = xla::HloModuleProto::from_text_file(&path)
-            .map_err(|e| anyhow!("loading {}: {e}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = client
-            .compile(&comp)
-            .map_err(|e| anyhow!("compiling {}/{}: {e}", req.config, req.entry))?;
-        cache.insert(key.clone(), exe);
-    }
-    let exe = cache.get(&key).unwrap();
-
-    let literals: Vec<xla::Literal> =
-        req.inputs.iter().map(tensor_to_literal).collect::<Result<_>>()?;
-
-    let t0 = Instant::now();
-    let bufs = exe
-        .execute::<xla::Literal>(&literals)
-        .map_err(|e| anyhow!("executing {}/{}: {e}", req.config, req.entry))?;
-    let out_literal = bufs[0][0]
-        .to_literal_sync()
-        .map_err(|e| anyhow!("fetching result of {}/{}: {e}", req.config, req.entry))?;
-    let wall_s = t0.elapsed().as_secs_f64();
-
-    // aot.py lowers with return_tuple=True: the root is always a tuple.
-    let parts = out_literal
-        .to_tuple()
-        .map_err(|e| anyhow!("untupling result of {}/{}: {e}", req.config, req.entry))?;
-    let outputs: Vec<Tensor> = parts.iter().map(literal_to_tensor).collect::<Result<_>>()?;
-    Ok(ExecReply { outputs, wall_s })
-}
-
-/// Host tensor -> XLA literal (f32, row-major). Single copy: the literal is
-/// created directly from the tensor's bytes with its final shape (§Perf:
-/// the previous vec1+reshape path copied twice per input).
-pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
-    let bytes: &[u8] = unsafe {
-        std::slice::from_raw_parts(t.data().as_ptr() as *const u8, t.data().len() * 4)
-    };
-    xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::F32, t.shape(), bytes)
-        .map_err(|e| anyhow!("literal from shape {:?}: {e}", t.shape()))
-}
-
-/// XLA literal -> host tensor. Scalars become shape [1].
-pub fn literal_to_tensor(lit: &xla::Literal) -> Result<Tensor> {
-    let shape = lit.array_shape().map_err(|e| anyhow!("literal shape: {e}"))?;
-    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
-    let data = lit.to_vec::<f32>().map_err(|e| anyhow!("literal to_vec: {e}"))?;
-    let dims = if dims.is_empty() { vec![1] } else { dims };
-    if dims.iter().product::<usize>() != data.len() {
-        bail!("literal shape {:?} disagrees with {} elements", dims, data.len());
-    }
-    Tensor::from_vec(&dims, data)
+    /// Explicit shutdown; equivalent to dropping the server (backends tear
+    /// down their executor threads on drop).
+    pub fn shutdown(self) {}
 }
 
 /// Locate the artifact directory: $PHANTOM_ARTIFACTS or the nearest

@@ -1,0 +1,572 @@
+//! NativeBackend: the self-contained pure-Rust compute backend.
+//!
+//! Implements every artifact entry point the rank workers execute
+//! (python/compile/kernels/ref.py semantics) as fused kernels over the
+//! blocked-GEMM tensor substrate:
+//!
+//! * forward: `pp_fwd_local`, `pp_fwd_combine`, `pp_fwd_step`, `tp_fwd`
+//! * loss:    `mse_delta`, `pp_loss_step`
+//! * backward: `pp_bwd_compress`, `pp_bwd_combine`, `pp_bwd_step`,
+//!   `pp_grads`, `tp_bwd_partial`, `tp_bwd_finish`, `tp_bwd_step`,
+//!   `tp_grads`
+//!
+//! "Fused" here means each inter-collective segment is ONE backend call
+//! whose multi-term products accumulate into a single output buffer
+//! (`gemm_acc` / `gemm_a_bt_acc` / `gemm_at_b_acc`) — no intermediate
+//! tensors are materialized between the matmul, bias, and activation
+//! stages, unlike the unfused composition the property tests compare
+//! against.
+//!
+//! Shape conventions (batch-major, matching ref.py):
+//!   y [B, m] · L [m, m] · C [m, k] · D [p, k, m] · g_all [p, B, k] ·
+//!   b [m] · h_sum [B, k];  m = n/p.
+//!
+//! A kernel call is serialized behind a mutex so the wall time it reports
+//! is free of cross-rank CPU contention (the virtual-time contract,
+//! DESIGN.md §3); the GEMMs inside a call still use every core via
+//! row-band threading.
+
+use std::sync::Mutex;
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use super::{Backend, ExecReply, Manifest, ManifestConfig};
+use crate::config::{preset, preset_names, Parallelism};
+use crate::tensor::{gemm_a_bt_acc, gemm_acc, gemm_at_b_acc, Tensor};
+
+/// The synthetic manifest the native backend serves by default: every
+/// preset geometry from config::preset, no files behind any of them.
+pub fn preset_manifest() -> Manifest {
+    let mut m = Manifest::synthetic(Vec::new());
+    for name in preset_names() {
+        let cfg = preset(name, Parallelism::Phantom).expect("preset table entry");
+        m.insert(ManifestConfig::native(
+            name,
+            cfg.p,
+            cfg.model.n,
+            cfg.model.k,
+            cfg.train.batch,
+        ));
+    }
+    m
+}
+
+pub struct NativeBackend {
+    manifest: Manifest,
+    /// Serializes kernel execution so each reply's wall time is measured
+    /// as if the rank had the machine to itself.
+    gate: Mutex<()>,
+}
+
+impl NativeBackend {
+    pub fn new(manifest: Manifest) -> NativeBackend {
+        NativeBackend { manifest, gate: Mutex::new(()) }
+    }
+}
+
+impl Backend for NativeBackend {
+    fn execute(&self, config: &str, entry: &str, inputs: &[&Tensor]) -> Result<ExecReply> {
+        let geo = self.manifest.config(config)?;
+        let _serialized = self.gate.lock().unwrap_or_else(|p| p.into_inner());
+        let t0 = Instant::now();
+        let outputs = run_entry(geo, entry, inputs)?;
+        Ok(ExecReply { outputs, wall_s: t0.elapsed().as_secs_f64() })
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+/// Dispatch one entry point. Shape checks are structural (consistency
+/// among the inputs); the config supplies only the baked-in loss scale,
+/// exactly as the AOT artifacts bake 1/(batch*n) into their loss kernels.
+pub fn run_entry(geo: &ManifestConfig, entry: &str, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+    match entry {
+        "pp_fwd_local" => {
+            let [y, l, c] = args(entry, inputs)?;
+            pp_fwd_local(entry, y, l, c)
+        }
+        "pp_fwd_combine" => {
+            let [z_loc, g_all, d, b] = args(entry, inputs)?;
+            pp_fwd_combine(entry, z_loc, g_all, d, b)
+        }
+        "pp_fwd_step" => {
+            // fused: combine(l) then local(l+1) on the fresh activation
+            let [z_loc, g_all, d, b, l_next, c_next] = args(entry, inputs)?;
+            let mut out = pp_fwd_combine(entry, z_loc, g_all, d, b)?;
+            let next = pp_fwd_local(entry, &out[0], l_next, c_next)?;
+            out.extend(next);
+            Ok(out)
+        }
+        "mse_delta" => {
+            let [y, z, t] = args(entry, inputs)?;
+            mse_delta(entry, y, z, t, geo.scale as f32)
+        }
+        "pp_loss_step" => {
+            // fused: mse_delta then compress of the fresh top-layer error
+            let [y, z, t, d] = args(entry, inputs)?;
+            let mut out = mse_delta(entry, y, z, t, geo.scale as f32)?;
+            let h_out = compress(entry, &out[1], d)?;
+            out.push(h_out);
+            Ok(out)
+        }
+        "pp_bwd_compress" => {
+            let [delta, d] = args(entry, inputs)?;
+            Ok(vec![compress(entry, delta, d)?])
+        }
+        "pp_bwd_combine" => {
+            let [delta, h_sum, l, c, z_prev] = args(entry, inputs)?;
+            Ok(vec![pp_bwd_combine(entry, delta, h_sum, l, c, z_prev)?])
+        }
+        "pp_bwd_step" => {
+            // fused: combine(l) then compress(l-1) of the fresh error
+            let [delta, h_sum, l, c, z_prev, d_prev] = args(entry, inputs)?;
+            let delta_prev = pp_bwd_combine(entry, delta, h_sum, l, c, z_prev)?;
+            let h_out_prev = compress(entry, &delta_prev, d_prev)?;
+            Ok(vec![delta_prev, h_out_prev])
+        }
+        "pp_grads" => {
+            let [y_prev, delta, h_sum, g_all] = args(entry, inputs)?;
+            pp_grads(entry, y_prev, delta, h_sum, g_all)
+        }
+        "tp_fwd" => {
+            let [y_full, w, b] = args(entry, inputs)?;
+            tp_fwd(entry, y_full, w, b)
+        }
+        "tp_grads" => {
+            let [y_full, delta] = args(entry, inputs)?;
+            tp_grads(entry, y_full, delta)
+        }
+        "tp_bwd_partial" => {
+            let [delta, w] = args(entry, inputs)?;
+            let (bsz, m) = d2(entry, "delta", delta)?;
+            let (n, mw) = d2(entry, "W", w)?;
+            if mw != m {
+                bail!("{entry}: delta {:?} vs W {:?}", delta.shape(), w.shape());
+            }
+            let mut dy = Tensor::zeros(&[bsz, n]);
+            delta.matmul_a_bt_into(w, &mut dy)?;
+            Ok(vec![dy])
+        }
+        "tp_bwd_finish" => {
+            let [dy, z_prev] = args(entry, inputs)?;
+            Ok(vec![tp_bwd_finish(entry, dy, z_prev)?])
+        }
+        "tp_bwd_step" => {
+            // fused: finish(l-1) then grads(l-1) from the fresh error
+            let [dy, z_prev, y_full] = args(entry, inputs)?;
+            let delta = tp_bwd_finish(entry, dy, z_prev)?;
+            let grads = tp_grads(entry, y_full, &delta)?;
+            let mut out = vec![delta];
+            out.extend(grads);
+            Ok(out)
+        }
+        other => bail!(
+            "native backend has no entry '{other}' (config '{}'); \
+             see runtime/native.rs for the entry-point inventory",
+            geo.name
+        ),
+    }
+}
+
+// -- kernel bodies ----------------------------------------------------------
+
+/// (z_loc, g) = (y @ L, y @ C): the per-rank forward hot-spot.
+fn pp_fwd_local(entry: &str, y: &Tensor, l: &Tensor, c: &Tensor) -> Result<Vec<Tensor>> {
+    let (bsz, m) = d2(entry, "y", y)?;
+    let (ml, ml2) = d2(entry, "L", l)?;
+    let (mc, k) = d2(entry, "C", c)?;
+    if ml != m || ml2 != m || mc != m {
+        bail!("{entry}: y {:?} vs L {:?} vs C {:?}", y.shape(), l.shape(), c.shape());
+    }
+    let mut z_loc = Tensor::zeros(&[bsz, m]);
+    y.matmul_into(l, &mut z_loc)?;
+    let mut g = Tensor::zeros(&[bsz, k]);
+    y.matmul_into(c, &mut g)?;
+    Ok(vec![z_loc, g])
+}
+
+/// z = z_loc + sum_i g_all[i] @ D[i] + b;  y_out = relu(z).
+/// The p decompression products accumulate straight into z.
+fn pp_fwd_combine(
+    entry: &str,
+    z_loc: &Tensor,
+    g_all: &Tensor,
+    d: &Tensor,
+    b: &Tensor,
+) -> Result<Vec<Tensor>> {
+    let (bsz, m) = d2(entry, "z_loc", z_loc)?;
+    let (p, bg, k) = d3(entry, "g_all", g_all)?;
+    let (pd, kd, md) = d3(entry, "D", d)?;
+    if bg != bsz || pd != p || kd != k || md != m || b.shape() != &[m] {
+        bail!(
+            "{entry}: z_loc {:?} vs g_all {:?} vs D {:?} vs b {:?}",
+            z_loc.shape(),
+            g_all.shape(),
+            d.shape(),
+            b.shape()
+        );
+    }
+    let mut z = z_loc.clone();
+    for i in 0..p {
+        gemm_acc(
+            &g_all.data()[i * bsz * k..(i + 1) * bsz * k],
+            bsz,
+            k,
+            &d.data()[i * k * m..(i + 1) * k * m],
+            m,
+            z.data_mut(),
+        );
+    }
+    for row in z.data_mut().chunks_mut(m) {
+        for (x, &bv) in row.iter_mut().zip(b.data()) {
+            *x += bv;
+        }
+    }
+    let y_out = z.relu();
+    Ok(vec![y_out, z])
+}
+
+/// loss = sum((y - t)^2) (rank-local partial), delta = 2*scale*(y - t)*relu'(z).
+fn mse_delta(entry: &str, y: &Tensor, z: &Tensor, t: &Tensor, scale: f32) -> Result<Vec<Tensor>> {
+    if y.shape() != z.shape() || y.shape() != t.shape() || y.shape().len() != 2 {
+        bail!("{entry}: y {:?} vs z {:?} vs target {:?}", y.shape(), z.shape(), t.shape());
+    }
+    let mut delta = Tensor::zeros(y.shape());
+    let mut loss = 0.0f64;
+    let two_scale = 2.0 * scale;
+    for ((dv, &yv), (&zv, &tv)) in delta
+        .data_mut()
+        .iter_mut()
+        .zip(y.data())
+        .zip(z.data().iter().zip(t.data()))
+    {
+        let diff = yv - tv;
+        loss += (diff as f64) * (diff as f64);
+        *dv = if zv > 0.0 { two_scale * diff } else { 0.0 };
+    }
+    Ok(vec![Tensor::from_vec(&[1], vec![loss as f32])?, delta])
+}
+
+/// h_out[i] = delta @ D[i]ᵀ for every destination rank i: [p, B, k].
+fn compress(entry: &str, delta: &Tensor, d: &Tensor) -> Result<Tensor> {
+    let (bsz, m) = d2(entry, "delta", delta)?;
+    let (p, k, md) = d3(entry, "D", d)?;
+    if md != m {
+        bail!("{entry}: delta {:?} vs D {:?}", delta.shape(), d.shape());
+    }
+    let mut h = Tensor::zeros(&[p, bsz, k]);
+    for i in 0..p {
+        gemm_a_bt_acc(
+            delta.data(),
+            bsz,
+            m,
+            &d.data()[i * k * m..(i + 1) * k * m],
+            k,
+            &mut h.data_mut()[i * bsz * k..(i + 1) * bsz * k],
+        );
+    }
+    Ok(h)
+}
+
+/// delta_prev = (delta @ Lᵀ + h_sum @ Cᵀ) * relu'(z_prev), the two products
+/// accumulated into one buffer before masking.
+fn pp_bwd_combine(
+    entry: &str,
+    delta: &Tensor,
+    h_sum: &Tensor,
+    l: &Tensor,
+    c: &Tensor,
+    z_prev: &Tensor,
+) -> Result<Tensor> {
+    let (bsz, m) = d2(entry, "delta", delta)?;
+    let (bh, k) = d2(entry, "h_sum", h_sum)?;
+    let (ml, ml2) = d2(entry, "L", l)?;
+    let (mc, kc) = d2(entry, "C", c)?;
+    if bh != bsz || ml != m || ml2 != m || mc != m || kc != k || z_prev.shape() != &[bsz, m] {
+        bail!(
+            "{entry}: delta {:?} / h_sum {:?} / L {:?} / C {:?} / z_prev {:?}",
+            delta.shape(),
+            h_sum.shape(),
+            l.shape(),
+            c.shape(),
+            z_prev.shape()
+        );
+    }
+    let mut out = Tensor::zeros(&[bsz, m]);
+    delta.matmul_a_bt_into(l, &mut out)?;
+    gemm_a_bt_acc(h_sum.data(), bsz, k, c.data(), m, out.data_mut());
+    for (o, &zv) in out.data_mut().iter_mut().zip(z_prev.data()) {
+        if zv <= 0.0 {
+            *o = 0.0;
+        }
+    }
+    Ok(out)
+}
+
+/// Parameter gradients (paper Eqns. 18-21), batch-summed:
+/// dL = y_prevᵀ @ delta; dC = y_prevᵀ @ h_sum; dD[i] = g_all[i]ᵀ @ delta;
+/// db = sum_B delta. The own slot of dD is structurally zero because the
+/// coordinator zeroed the own slot of g_all.
+fn pp_grads(
+    entry: &str,
+    y_prev: &Tensor,
+    delta: &Tensor,
+    h_sum: &Tensor,
+    g_all: &Tensor,
+) -> Result<Vec<Tensor>> {
+    let (bsz, m) = d2(entry, "y_prev", y_prev)?;
+    let (bd, md) = d2(entry, "delta", delta)?;
+    let (bh, k) = d2(entry, "h_sum", h_sum)?;
+    let (p, bg, kg) = d3(entry, "g_all", g_all)?;
+    if bd != bsz || md != m || bh != bsz || bg != bsz || kg != k {
+        bail!(
+            "{entry}: y_prev {:?} / delta {:?} / h_sum {:?} / g_all {:?}",
+            y_prev.shape(),
+            delta.shape(),
+            h_sum.shape(),
+            g_all.shape()
+        );
+    }
+    let mut dl = Tensor::zeros(&[m, m]);
+    y_prev.matmul_at_b_into(delta, &mut dl)?;
+    let mut dc = Tensor::zeros(&[m, k]);
+    y_prev.matmul_at_b_into(h_sum, &mut dc)?;
+    let mut dd = Tensor::zeros(&[p, k, m]);
+    for i in 0..p {
+        gemm_at_b_acc(
+            &g_all.data()[i * bsz * k..(i + 1) * bsz * k],
+            bsz,
+            k,
+            delta.data(),
+            m,
+            &mut dd.data_mut()[i * k * m..(i + 1) * k * m],
+        );
+    }
+    let db = col_sum(delta, m);
+    Ok(vec![dl, dc, dd, db])
+}
+
+/// z = y_full @ W + b;  y_out = relu(z).
+fn tp_fwd(entry: &str, y_full: &Tensor, w: &Tensor, b: &Tensor) -> Result<Vec<Tensor>> {
+    let (bsz, n) = d2(entry, "y_full", y_full)?;
+    let (nw, m) = d2(entry, "W", w)?;
+    if nw != n || b.shape() != &[m] {
+        bail!("{entry}: y_full {:?} vs W {:?} vs b {:?}", y_full.shape(), w.shape(), b.shape());
+    }
+    let mut z = Tensor::zeros(&[bsz, m]);
+    y_full.matmul_into(w, &mut z)?;
+    for row in z.data_mut().chunks_mut(m) {
+        for (x, &bv) in row.iter_mut().zip(b.data()) {
+            *x += bv;
+        }
+    }
+    let y_out = z.relu();
+    Ok(vec![y_out, z])
+}
+
+/// dW = y_fullᵀ @ delta; db = sum_B delta.
+fn tp_grads(entry: &str, y_full: &Tensor, delta: &Tensor) -> Result<Vec<Tensor>> {
+    let (bsz, n) = d2(entry, "y_full", y_full)?;
+    let (bd, m) = d2(entry, "delta", delta)?;
+    if bd != bsz {
+        bail!("{entry}: y_full {:?} vs delta {:?}", y_full.shape(), delta.shape());
+    }
+    let mut dw = Tensor::zeros(&[n, m]);
+    y_full.matmul_at_b_into(delta, &mut dw)?;
+    let db = col_sum(delta, m);
+    Ok(vec![dw, db])
+}
+
+/// delta = dy * relu'(z_prev).
+fn tp_bwd_finish(entry: &str, dy: &Tensor, z_prev: &Tensor) -> Result<Tensor> {
+    if dy.shape() != z_prev.shape() || dy.shape().len() != 2 {
+        bail!("{entry}: dy {:?} vs z_prev {:?}", dy.shape(), z_prev.shape());
+    }
+    let mut out = dy.clone();
+    for (o, &zv) in out.data_mut().iter_mut().zip(z_prev.data()) {
+        if zv <= 0.0 {
+            *o = 0.0;
+        }
+    }
+    Ok(out)
+}
+
+// -- small helpers ----------------------------------------------------------
+
+/// Fixed-arity input unpack with a good error message.
+fn args<'a, const N: usize>(entry: &str, inputs: &[&'a Tensor]) -> Result<[&'a Tensor; N]> {
+    if inputs.len() != N {
+        bail!("{entry}: expected {N} inputs, got {}", inputs.len());
+    }
+    Ok(std::array::from_fn(|i| inputs[i]))
+}
+
+fn d2(entry: &str, what: &str, t: &Tensor) -> Result<(usize, usize)> {
+    match t.shape() {
+        [a, b] => Ok((*a, *b)),
+        s => bail!("{entry}: {what} must be 2-D, got {s:?}"),
+    }
+}
+
+fn d3(entry: &str, what: &str, t: &Tensor) -> Result<(usize, usize, usize)> {
+    match t.shape() {
+        [a, b, c] => Ok((*a, *b, *c)),
+        s => bail!("{entry}: {what} must be 3-D, got {s:?}"),
+    }
+}
+
+/// Column sums of a [B, m] tensor -> [m].
+fn col_sum(t: &Tensor, m: usize) -> Tensor {
+    let mut out = Tensor::zeros(&[m]);
+    for row in t.data().chunks(m) {
+        for (o, &v) in out.data_mut().iter_mut().zip(row) {
+            *o += v;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::ExecServer;
+    use crate::util::prng::Prng;
+    use crate::util::proptest::assert_close;
+
+    fn geo() -> ManifestConfig {
+        ManifestConfig::native("t", 4, 64, 4, 8)
+    }
+
+    #[test]
+    fn preset_manifest_serves_every_preset() {
+        let m = preset_manifest();
+        for name in preset_names() {
+            let c = m.config(name).unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert_eq!(c.variant, "native");
+            assert_eq!(c.np * c.p, c.n);
+        }
+    }
+
+    #[test]
+    fn pp_fwd_local_matches_naive() {
+        let mut rng = Prng::new(1);
+        let y = Tensor::randn(&[8, 16], 1.0, &mut rng);
+        let l = Tensor::randn(&[16, 16], 1.0, &mut rng);
+        let c = Tensor::randn(&[16, 4], 1.0, &mut rng);
+        let out = run_entry(&geo(), "pp_fwd_local", &[&y, &l, &c]).unwrap();
+        assert_close(out[0].data(), y.matmul_naive(&l).unwrap().data(), 1e-5, 1e-6).unwrap();
+        assert_close(out[1].data(), y.matmul_naive(&c).unwrap().data(), 1e-5, 1e-6).unwrap();
+    }
+
+    #[test]
+    fn pp_fwd_combine_matches_unfused_reference() {
+        let (p, bsz, k, m) = (3usize, 5usize, 2usize, 6usize);
+        let mut rng = Prng::new(2);
+        let z_loc = Tensor::randn(&[bsz, m], 1.0, &mut rng);
+        let g_all = Tensor::randn(&[p, bsz, k], 1.0, &mut rng);
+        let d = Tensor::randn(&[p, k, m], 1.0, &mut rng);
+        let b = Tensor::randn(&[m], 1.0, &mut rng);
+        let out = run_entry(&geo(), "pp_fwd_combine", &[&z_loc, &g_all, &d, &b]).unwrap();
+
+        // unfused: z = z_loc + sum_i g[i] @ D[i] + b, y = relu(z)
+        let mut z = z_loc.clone();
+        for i in 0..p {
+            z.add_assign(&g_all.unstack_at(i).matmul_naive(&d.unstack_at(i)).unwrap());
+        }
+        for r in 0..bsz {
+            for cidx in 0..m {
+                let v = z.at(&[r, cidx]) + b.data()[cidx];
+                z.set(&[r, cidx], v);
+            }
+        }
+        assert_close(out[1].data(), z.data(), 1e-5, 1e-6).unwrap();
+        assert_close(out[0].data(), z.relu().data(), 1e-5, 1e-6).unwrap();
+    }
+
+    #[test]
+    fn tp_fwd_matches_naive() {
+        let mut rng = Prng::new(3);
+        let y = Tensor::randn(&[4, 12], 1.0, &mut rng);
+        let w = Tensor::randn(&[12, 3], 1.0, &mut rng);
+        let b = Tensor::randn(&[3], 1.0, &mut rng);
+        let out = run_entry(&geo(), "tp_fwd", &[&y, &w, &b]).unwrap();
+        let mut z = y.matmul_naive(&w).unwrap();
+        for r in 0..4 {
+            for c in 0..3 {
+                let v = z.at(&[r, c]) + b.data()[c];
+                z.set(&[r, c], v);
+            }
+        }
+        assert_close(out[1].data(), z.data(), 1e-5, 1e-6).unwrap();
+        assert_close(out[0].data(), z.relu().data(), 1e-5, 1e-6).unwrap();
+    }
+
+    #[test]
+    fn mse_delta_uses_config_scale() {
+        let g = geo(); // scale = 1/(8*64)
+        let y = Tensor::from_vec(&[1, 2], vec![1.0, -1.0]).unwrap();
+        let z = Tensor::from_vec(&[1, 2], vec![0.5, -0.5]).unwrap();
+        let t = Tensor::from_vec(&[1, 2], vec![0.0, 0.0]).unwrap();
+        let out = run_entry(&g, "mse_delta", &[&y, &z, &t]).unwrap();
+        assert!((out[0].data()[0] - 2.0).abs() < 1e-6); // 1 + 1
+        let s = 2.0 * (g.scale as f32);
+        // z > 0 passes the gradient; z <= 0 kills it
+        assert!((out[1].data()[0] - s).abs() < 1e-7);
+        assert_eq!(out[1].data()[1], 0.0);
+    }
+
+    #[test]
+    fn grads_own_slot_stays_zero() {
+        let (p, bsz, k, m) = (4usize, 8usize, 3usize, 5usize);
+        let mut rng = Prng::new(4);
+        let y_prev = Tensor::randn(&[bsz, m], 1.0, &mut rng);
+        let delta = Tensor::randn(&[bsz, m], 1.0, &mut rng);
+        let h_sum = Tensor::randn(&[bsz, k], 1.0, &mut rng);
+        let mut g_all = Tensor::randn(&[p, bsz, k], 1.0, &mut rng);
+        g_all.zero_slot(2);
+        let out = run_entry(&geo(), "pp_grads", &[&y_prev, &delta, &h_sum, &g_all]).unwrap();
+        let dd = &out[2];
+        assert!(dd.unstack_at(2).data().iter().all(|&v| v == 0.0));
+        assert!(dd.unstack_at(0).data().iter().any(|&v| v != 0.0));
+        // db is the column sum of delta
+        let db = &out[3];
+        let mut want = vec![0.0f32; m];
+        for row in delta.data().chunks(m) {
+            for (o, &v) in want.iter_mut().zip(row) {
+                *o += v;
+            }
+        }
+        assert_close(db.data(), &want, 1e-6, 1e-6).unwrap();
+    }
+
+    #[test]
+    fn bad_arity_and_unknown_entry_error() {
+        let y = Tensor::zeros(&[2, 2]);
+        assert!(run_entry(&geo(), "pp_fwd_local", &[&y]).is_err());
+        assert!(run_entry(&geo(), "no_such_entry", &[&y]).is_err());
+        let l = Tensor::zeros(&[3, 3]); // mismatched vs y
+        let c = Tensor::zeros(&[3, 1]);
+        assert!(run_entry(&geo(), "pp_fwd_local", &[&y, &l, &c]).is_err());
+    }
+
+    #[test]
+    fn executes_through_server_handle() {
+        let server = ExecServer::native();
+        let h = server.handle();
+        assert_eq!(h.backend_name(), "native");
+        let g = server.manifest.config("tiny").unwrap().clone();
+        let mut rng = Prng::new(5);
+        let y = Tensor::randn(&[g.batch, g.np], 1.0, &mut rng);
+        let l = Tensor::randn(&[g.np, g.np], 1.0, &mut rng);
+        let c = Tensor::randn(&[g.np, g.k], 1.0, &mut rng);
+        let r = h.execute("tiny", "pp_fwd_local", &[&y, &l, &c]).unwrap();
+        assert_eq!(r.outputs.len(), 2);
+        assert_eq!(r.outputs[0].shape(), &[g.batch, g.np]);
+        assert_eq!(r.outputs[1].shape(), &[g.batch, g.k]);
+        assert!(r.wall_s >= 0.0);
+        assert!(h.execute("nope", "pp_fwd_local", &[&y, &l, &c]).is_err());
+    }
+}

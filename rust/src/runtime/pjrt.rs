@@ -1,0 +1,179 @@
+//! PJRT backend (behind the `xla` cargo feature): loads AOT artifacts
+//! (HLO text) and executes them for the coordinator's rank threads.
+//!
+//! The `xla` crate's wrappers hold raw pointers (!Send), so a dedicated
+//! executor thread owns the `PjRtClient` and the compiled-executable cache;
+//! rank threads reach it through an mpsc channel. This also serializes
+//! executions, which keeps measured per-call wall times free of cross-rank
+//! CPU contention — the virtual-time contract every `Backend` must honor
+//! (DESIGN.md §3).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::{Backend, ExecReply, ExecServer, Manifest};
+use crate::tensor::Tensor;
+
+/// A request to execute `entry` of artifact-config `config`.
+struct ExecRequest {
+    config: String,
+    entry: String,
+    inputs: Vec<Tensor>,
+    reply: mpsc::Sender<Result<ExecReply>>,
+}
+
+/// The PJRT-backed `Backend`: a channel to the executor thread.
+pub struct PjrtBackend {
+    tx: Mutex<Option<mpsc::Sender<ExecRequest>>>,
+    handle: Mutex<Option<JoinHandle<()>>>,
+}
+
+/// Start the executor for the given artifact directory.
+pub fn start(artifact_dir: &Path) -> Result<ExecServer> {
+    let dir = artifact_dir.to_path_buf();
+    let manifest = Manifest::load(&dir)?;
+    let manifest_for_thread = manifest.clone();
+    let (tx, rx) = mpsc::channel::<ExecRequest>();
+    let handle = std::thread::Builder::new()
+        .name("pjrt-exec".into())
+        .spawn(move || executor_loop(dir, manifest_for_thread, rx))
+        .context("spawning executor thread")?;
+    let backend = PjrtBackend {
+        tx: Mutex::new(Some(tx)),
+        handle: Mutex::new(Some(handle)),
+    };
+    Ok(ExecServer::new(Arc::new(backend), manifest))
+}
+
+impl Backend for PjrtBackend {
+    fn execute(&self, config: &str, entry: &str, inputs: &[&Tensor]) -> Result<ExecReply> {
+        let tx = self
+            .tx
+            .lock()
+            .map_err(|_| anyhow!("exec server mutex poisoned"))?
+            .as_ref()
+            .ok_or_else(|| anyhow!("exec server is shut down"))?
+            .clone();
+        let (reply_tx, reply_rx) = mpsc::channel();
+        tx.send(ExecRequest {
+            config: config.to_string(),
+            entry: entry.to_string(),
+            // The executor thread owns its inputs (they cross a channel and
+            // are copied into device literals anyway).
+            inputs: inputs.iter().map(|t| (*t).clone()).collect(),
+            reply: reply_tx,
+        })
+        .map_err(|_| anyhow!("exec server is gone"))?;
+        reply_rx.recv().map_err(|_| anyhow!("exec server dropped the request"))?
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+}
+
+impl Drop for PjrtBackend {
+    fn drop(&mut self) {
+        if let Ok(mut g) = self.tx.lock() {
+            g.take();
+        }
+        if let Some(h) = self.handle.lock().ok().and_then(|mut g| g.take()) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn executor_loop(dir: PathBuf, manifest: Manifest, rx: mpsc::Receiver<ExecRequest>) {
+    // PJRT client lives (and dies) on this thread.
+    let client = match xla::PjRtClient::cpu() {
+        Ok(c) => c,
+        Err(e) => {
+            // Fail every request with the construction error.
+            while let Ok(req) = rx.recv() {
+                let _ = req.reply.send(Err(anyhow!("PJRT client failed to start: {e}")));
+            }
+            return;
+        }
+    };
+    let mut cache: HashMap<(String, String), xla::PjRtLoadedExecutable> = HashMap::new();
+
+    while let Ok(req) = rx.recv() {
+        let result = serve_one(&client, &dir, &manifest, &mut cache, &req);
+        let _ = req.reply.send(result);
+    }
+}
+
+fn serve_one(
+    client: &xla::PjRtClient,
+    dir: &Path,
+    manifest: &Manifest,
+    cache: &mut HashMap<(String, String), xla::PjRtLoadedExecutable>,
+    req: &ExecRequest,
+) -> Result<ExecReply> {
+    let key = (req.config.clone(), req.entry.clone());
+    if !cache.contains_key(&key) {
+        let cfg = manifest
+            .config(&req.config)
+            .with_context(|| format!("unknown artifact config '{}'", req.config))?;
+        let fname = cfg
+            .entries
+            .get(&req.entry)
+            .with_context(|| format!("config '{}' has no entry '{}'", req.config, req.entry))?;
+        let path = dir.join(fname);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("loading {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}/{}: {e}", req.config, req.entry))?;
+        cache.insert(key.clone(), exe);
+    }
+    let exe = cache.get(&key).unwrap();
+
+    let literals: Vec<xla::Literal> =
+        req.inputs.iter().map(tensor_to_literal).collect::<Result<_>>()?;
+
+    let t0 = Instant::now();
+    let bufs = exe
+        .execute::<xla::Literal>(&literals)
+        .map_err(|e| anyhow!("executing {}/{}: {e}", req.config, req.entry))?;
+    let out_literal = bufs[0][0]
+        .to_literal_sync()
+        .map_err(|e| anyhow!("fetching result of {}/{}: {e}", req.config, req.entry))?;
+    let wall_s = t0.elapsed().as_secs_f64();
+
+    // aot.py lowers with return_tuple=True: the root is always a tuple.
+    let parts = out_literal
+        .to_tuple()
+        .map_err(|e| anyhow!("untupling result of {}/{}: {e}", req.config, req.entry))?;
+    let outputs: Vec<Tensor> = parts.iter().map(literal_to_tensor).collect::<Result<_>>()?;
+    Ok(ExecReply { outputs, wall_s })
+}
+
+/// Host tensor -> XLA literal (f32, row-major). Single copy: the literal is
+/// created directly from the tensor's bytes with its final shape (§Perf:
+/// the previous vec1+reshape path copied twice per input).
+pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
+    let bytes: &[u8] = unsafe {
+        std::slice::from_raw_parts(t.data().as_ptr() as *const u8, t.data().len() * 4)
+    };
+    xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::F32, t.shape(), bytes)
+        .map_err(|e| anyhow!("literal from shape {:?}: {e}", t.shape()))
+}
+
+/// XLA literal -> host tensor. Scalars become shape [1].
+pub fn literal_to_tensor(lit: &xla::Literal) -> Result<Tensor> {
+    let shape = lit.array_shape().map_err(|e| anyhow!("literal shape: {e}"))?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let data = lit.to_vec::<f32>().map_err(|e| anyhow!("literal to_vec: {e}"))?;
+    let dims = if dims.is_empty() { vec![1] } else { dims };
+    if dims.iter().product::<usize>() != data.len() {
+        bail!("literal shape {:?} disagrees with {} elements", dims, data.len());
+    }
+    Tensor::from_vec(&dims, data)
+}

@@ -1,17 +1,253 @@
 //! Host tensor: a dense, row-major f32 array with shape.
 //!
-//! This is the currency between PJRT executions, the collective fabric, and
-//! the optimizers. It deliberately implements only what the coordinator
-//! needs — plus a reference `matmul` used by tests to cross-check the
-//! AOT-compiled kernels and by the pure-Rust fallback path.
+//! This is the currency between backend executions, the collective fabric,
+//! and the optimizers. Since the NativeBackend (runtime/native.rs) runs the
+//! per-rank step functions as pure-Rust kernels, the linear algebra here is
+//! the compute hot path of the whole simulator:
+//!
+//! * `matmul` / `matmul_into` — cache-blocked, panel-packed GEMM with
+//!   4-row register blocking and `std::thread`-based row-band parallelism
+//!   for large shapes (DESIGN.md §4).
+//! * `matmul_at_b*` / `matmul_a_bt*` — the transpose family (`Aᵀ·B`,
+//!   `A·Bᵀ`) used by the backward kernels, computed without materializing
+//!   the transpose.
+//! * `gemm_acc` and friends — slice-level accumulate kernels the fused
+//!   backend kernels use to sum multi-term products into one buffer
+//!   without intermediate allocations.
+//! * `Scratch` — a reusable buffer pool; the GEMM panel packing draws from
+//!   a thread-local pool, and callers can allocate/recycle output tensors.
+//! * `matmul_naive` — the textbook triple loop kept as the property-test
+//!   oracle for all of the above.
 
 use crate::util::prng::Prng;
 use anyhow::{bail, Result};
+use std::cell::RefCell;
 
 #[derive(Debug, Clone, PartialEq)]
 pub struct Tensor {
     shape: Vec<usize>,
     data: Vec<f32>,
+}
+
+// ---------------------------------------------------------------------------
+// Scratch: reusable f32 buffer pool
+// ---------------------------------------------------------------------------
+
+/// A pool of reusable f32 allocations. Kernels on the per-iteration critical
+/// path acquire zeroed tensors / raw buffers from it and return them when
+/// done. GEMM panel packing draws from a per-thread pool, so serial GEMMs
+/// (and the calling thread's band of threaded ones) reuse their workspace
+/// across calls on the long-lived rank threads; bands on spawned scoped
+/// threads allocate once per call.
+#[derive(Debug, Default)]
+pub struct Scratch {
+    free: Vec<Vec<f32>>,
+}
+
+impl Scratch {
+    pub fn new() -> Scratch {
+        Scratch::default()
+    }
+
+    /// A zeroed tensor of `shape`, reusing a pooled allocation when
+    /// available.
+    pub fn zeros(&mut self, shape: &[usize]) -> Tensor {
+        let numel = shape.iter().product();
+        let data = self.buf(numel);
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    /// Return a tensor's allocation to the pool.
+    pub fn recycle(&mut self, t: Tensor) {
+        self.put(t.data);
+    }
+
+    /// A zero-filled raw buffer of exactly `len` elements.
+    pub fn buf(&mut self, len: usize) -> Vec<f32> {
+        let mut b = self.free.pop().unwrap_or_default();
+        b.clear();
+        b.resize(len, 0.0);
+        b
+    }
+
+    /// Return a raw buffer to the pool.
+    pub fn put(&mut self, buf: Vec<f32>) {
+        self.free.push(buf);
+    }
+
+    /// Number of pooled (idle) buffers — used by tests.
+    pub fn pooled(&self) -> usize {
+        self.free.len()
+    }
+}
+
+thread_local! {
+    /// Per-thread pool for GEMM panel packing (each row-band worker packs
+    /// into its own panel, so the pool is contention-free by construction).
+    static PACK_POOL: RefCell<Scratch> = RefCell::new(Scratch::new());
+}
+
+// ---------------------------------------------------------------------------
+// Slice-level GEMM kernels (accumulating: C += ...)
+// ---------------------------------------------------------------------------
+
+/// Register-block height of the microkernel (output rows per pass).
+const MR: usize = 4;
+/// Depth (k) blocking: one packed panel row-count.
+const KC: usize = 256;
+/// Width (j) blocking: packed panel width; KC*JC floats = 512 KiB panel.
+const JC: usize = 512;
+/// Below this many multiply-adds a GEMM stays single-threaded (thread spawn
+/// costs more than it saves on the tiny per-rank shapes).
+const PAR_MIN_FLOPS: usize = 1 << 22;
+
+fn hw_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// C[m,n] += A[m,kd] @ B[kd,n]; all row-major and contiguous. Blocked and
+/// panel-packed; splits the output into row bands across threads when the
+/// work is large enough.
+pub fn gemm_acc(a: &[f32], m: usize, kd: usize, b: &[f32], n: usize, out: &mut [f32]) {
+    assert_eq!(a.len(), m * kd, "gemm_acc: A length vs [{m}, {kd}]");
+    assert_eq!(b.len(), kd * n, "gemm_acc: B length vs [{kd}, {n}]");
+    assert_eq!(out.len(), m * n, "gemm_acc: C length vs [{m}, {n}]");
+    let flops = m.saturating_mul(kd).saturating_mul(n);
+    let bands = if flops >= PAR_MIN_FLOPS {
+        hw_threads().min(m / MR).max(1)
+    } else {
+        1
+    };
+    if bands <= 1 {
+        gemm_serial(a, m, kd, b, n, out);
+        return;
+    }
+    let rows_per = (m + bands - 1) / bands;
+    std::thread::scope(|s| {
+        let mut first: Option<(&mut [f32], &[f32])> = None;
+        for (band, a_band) in out.chunks_mut(rows_per * n).zip(a.chunks(rows_per * kd)) {
+            if first.is_none() {
+                first = Some((band, a_band));
+                continue;
+            }
+            let rows = band.len() / n;
+            s.spawn(move || gemm_serial(a_band, rows, kd, b, n, band));
+        }
+        // Band 0 runs on the calling thread: rank worker threads are
+        // long-lived, so their pack pool actually gets reused (the spawned
+        // bands' thread-locals die with the scope).
+        if let Some((band, a_band)) = first {
+            let rows = band.len() / n;
+            gemm_serial(a_band, rows, kd, b, n, band);
+        }
+    });
+}
+
+/// Single-threaded blocked kernel behind `gemm_acc`. Packs B panels into a
+/// thread-local scratch buffer and walks them with an MR-row microkernel,
+/// so each loaded B element feeds MR accumulator rows.
+fn gemm_serial(a: &[f32], m: usize, kd: usize, b: &[f32], n: usize, out: &mut [f32]) {
+    if m == 0 || kd == 0 || n == 0 {
+        return;
+    }
+    PACK_POOL.with(|pool| {
+        let mut bp = pool.borrow_mut().buf(KC.min(kd) * JC.min(n));
+        let mut jc = 0;
+        while jc < n {
+            let jw = JC.min(n - jc);
+            let mut kc = 0;
+            while kc < kd {
+                let kw = KC.min(kd - kc);
+                for kk in 0..kw {
+                    let src = (kc + kk) * n + jc;
+                    bp[kk * jw..kk * jw + jw].copy_from_slice(&b[src..src + jw]);
+                }
+                let mut i = 0;
+                while i + MR <= m {
+                    let band = &mut out[i * n..(i + MR) * n];
+                    let (r0, rest) = band.split_at_mut(n);
+                    let (r1, rest) = rest.split_at_mut(n);
+                    let (r2, r3) = rest.split_at_mut(n);
+                    let o0 = &mut r0[jc..jc + jw];
+                    let o1 = &mut r1[jc..jc + jw];
+                    let o2 = &mut r2[jc..jc + jw];
+                    let o3 = &mut r3[jc..jc + jw];
+                    let a0 = &a[i * kd + kc..i * kd + kc + kw];
+                    let a1 = &a[(i + 1) * kd + kc..(i + 1) * kd + kc + kw];
+                    let a2 = &a[(i + 2) * kd + kc..(i + 2) * kd + kc + kw];
+                    let a3 = &a[(i + 3) * kd + kc..(i + 3) * kd + kc + kw];
+                    for kk in 0..kw {
+                        let (v0, v1, v2, v3) = (a0[kk], a1[kk], a2[kk], a3[kk]);
+                        let brow = &bp[kk * jw..kk * jw + jw];
+                        for j in 0..jw {
+                            let bv = brow[j];
+                            o0[j] += v0 * bv;
+                            o1[j] += v1 * bv;
+                            o2[j] += v2 * bv;
+                            o3[j] += v3 * bv;
+                        }
+                    }
+                    i += MR;
+                }
+                while i < m {
+                    let orow = &mut out[i * n + jc..i * n + jc + jw];
+                    let arow = &a[i * kd + kc..i * kd + kc + kw];
+                    for kk in 0..kw {
+                        let v = arow[kk];
+                        let brow = &bp[kk * jw..kk * jw + jw];
+                        for j in 0..jw {
+                            orow[j] += v * brow[j];
+                        }
+                    }
+                    i += 1;
+                }
+                kc += kw;
+            }
+            jc += jw;
+        }
+        pool.borrow_mut().put(bp);
+    });
+}
+
+/// C[m,n] += Aᵀ @ B with A stored as [kd, m], B as [kd, n]. The gradient
+/// kernels' shape (`Yᵀ·delta`): computed by rank-1 row updates so neither
+/// operand is transposed in memory.
+pub fn gemm_at_b_acc(a: &[f32], kd: usize, m: usize, b: &[f32], n: usize, out: &mut [f32]) {
+    assert_eq!(a.len(), kd * m, "gemm_at_b_acc: A length vs [{kd}, {m}]");
+    assert_eq!(b.len(), kd * n, "gemm_at_b_acc: B length vs [{kd}, {n}]");
+    assert_eq!(out.len(), m * n, "gemm_at_b_acc: C length vs [{m}, {n}]");
+    for kk in 0..kd {
+        let arow = &a[kk * m..kk * m + m];
+        let brow = &b[kk * n..kk * n + n];
+        for i in 0..m {
+            let v = arow[i];
+            let orow = &mut out[i * n..i * n + n];
+            for j in 0..n {
+                orow[j] += v * brow[j];
+            }
+        }
+    }
+}
+
+/// C[m,n] += A @ Bᵀ with A stored as [m, kd], B as [n, kd]. Both operands
+/// are walked contiguously (row dot-products), so no transpose is
+/// materialized on the backward path.
+pub fn gemm_a_bt_acc(a: &[f32], m: usize, kd: usize, b: &[f32], n: usize, out: &mut [f32]) {
+    assert_eq!(a.len(), m * kd, "gemm_a_bt_acc: A length vs [{m}, {kd}]");
+    assert_eq!(b.len(), n * kd, "gemm_a_bt_acc: B length vs [{n}, {kd}]");
+    assert_eq!(out.len(), m * n, "gemm_a_bt_acc: C length vs [{m}, {n}]");
+    for i in 0..m {
+        let arow = &a[i * kd..i * kd + kd];
+        let orow = &mut out[i * n..i * n + n];
+        for j in 0..n {
+            let brow = &b[j * kd..j * kd + kd];
+            let mut acc = 0.0f32;
+            for t in 0..kd {
+                acc += arow[t] * brow[t];
+            }
+            orow[j] += acc;
+        }
+    }
 }
 
 impl Tensor {
@@ -102,15 +338,17 @@ impl Tensor {
             bail!("cols {} not divisible by p {}", cols, p);
         }
         let w = cols / p;
-        let mut shards = vec![Tensor::zeros(&[rows, w]); p];
+        let mut datas: Vec<Vec<f32>> = (0..p).map(|_| Vec::with_capacity(rows * w)).collect();
         for r in 0..rows {
-            for j in 0..p {
-                let src = r * cols + j * w;
-                let dst = r * w;
-                shards[j].data[dst..dst + w].copy_from_slice(&self.data[src..src + w]);
+            let row = &self.data[r * cols..(r + 1) * cols];
+            for (j, d) in datas.iter_mut().enumerate() {
+                d.extend_from_slice(&row[j * w..(j + 1) * w]);
             }
         }
-        Ok(shards)
+        Ok(datas
+            .into_iter()
+            .map(|data| Tensor { shape: vec![rows, w], data })
+            .collect())
     }
 
     /// Inverse of `col_shards`.
@@ -126,14 +364,13 @@ impl Tensor {
             }
         }
         let p = shards.len();
-        let mut out = Tensor::zeros(&[rows, w * p]);
+        let mut data = Vec::with_capacity(rows * w * p);
         for r in 0..rows {
-            for (j, s) in shards.iter().enumerate() {
-                let dst = r * w * p + j * w;
-                out.data[dst..dst + w].copy_from_slice(&s.data[r * w..(r + 1) * w]);
+            for s in shards {
+                data.extend_from_slice(&s.data[r * w..(r + 1) * w]);
             }
         }
-        Ok(out)
+        Ok(Tensor { shape: vec![rows, w * p], data })
     }
 
     /// Stack equal-shaped tensors along a new leading axis.
@@ -182,15 +419,14 @@ impl Tensor {
             bail!("concat_shards_stacked needs [p, B, m], got {:?}", self.shape);
         }
         let (p, b, m) = (self.shape[0], self.shape[1], self.shape[2]);
-        let mut out = Tensor::zeros(&[b, p * m]);
-        for j in 0..p {
-            for r in 0..b {
+        let mut data = Vec::with_capacity(p * b * m);
+        for r in 0..b {
+            for j in 0..p {
                 let src = (j * b + r) * m;
-                let dst = r * p * m + j * m;
-                out.data[dst..dst + m].copy_from_slice(&self.data[src..src + m]);
+                data.extend_from_slice(&self.data[src..src + m]);
             }
         }
-        Ok(out)
+        Ok(Tensor { shape: vec![b, p * m], data })
     }
 
     /// Slice columns [start, start+width) of a 2-D tensor.
@@ -202,13 +438,12 @@ impl Tensor {
         if start + width > cols {
             bail!("col_slice [{start}, {}) out of bounds for {cols} cols", start + width);
         }
-        let mut out = Tensor::zeros(&[rows, width]);
+        let mut data = Vec::with_capacity(rows * width);
         for r in 0..rows {
             let src = r * cols + start;
-            out.data[r * width..(r + 1) * width]
-                .copy_from_slice(&self.data[src..src + width]);
+            data.extend_from_slice(&self.data[src..src + width]);
         }
-        Ok(out)
+        Ok(Tensor { shape: vec![rows, width], data })
     }
 
     // -- elementwise ---------------------------------------------------------
@@ -245,47 +480,134 @@ impl Tensor {
         self.data.iter().map(|&x| (x as f64) * (x as f64)).sum()
     }
 
-    // -- reference linear algebra (tests / fallback; PJRT does the real work)
+    // -- linear algebra ------------------------------------------------------
 
-    /// C = A @ B for 2-D tensors. Naive triple loop with the k-loop innermost
-    /// hoisted for cache friendliness; used by tests and the non-PJRT
-    /// fallback path only.
-    pub fn matmul(&self, other: &Tensor) -> Result<Tensor> {
-        if self.shape.len() != 2 || other.shape.len() != 2 {
-            bail!("matmul needs 2-D tensors: {:?} @ {:?}", self.shape, other.shape);
+    fn dims2(&self, op: &str) -> Result<(usize, usize)> {
+        if self.shape.len() != 2 {
+            bail!("{op} needs 2-D tensors, got {:?}", self.shape);
         }
-        let (m, ka) = (self.shape[0], self.shape[1]);
-        let (kb, n) = (other.shape[0], other.shape[1]);
+        Ok((self.shape[0], self.shape[1]))
+    }
+
+    /// C = A @ B for 2-D tensors: the blocked, panel-packed, multithreaded
+    /// hot path (see `gemm_acc`).
+    pub fn matmul(&self, other: &Tensor) -> Result<Tensor> {
+        let mut out = Tensor::zeros(&self.matmul_shape(other, "matmul", false, false)?);
+        self.matmul_into(other, &mut out)?;
+        Ok(out)
+    }
+
+    /// C = A @ B written into a caller-provided (e.g. `Scratch`-pooled)
+    /// tensor of the right shape. Overwrites `out`.
+    pub fn matmul_into(&self, other: &Tensor, out: &mut Tensor) -> Result<()> {
+        let shape = self.matmul_shape(other, "matmul_into", false, false)?;
+        if out.shape != shape {
+            bail!("matmul_into: out shape {:?} wants {:?}", out.shape, shape);
+        }
+        out.data.fill(0.0);
+        let (m, kd) = (self.shape[0], self.shape[1]);
+        let n = other.shape[1];
+        gemm_acc(&self.data, m, kd, &other.data, n, &mut out.data);
+        Ok(())
+    }
+
+    /// C = Aᵀ @ B without materializing the transpose (A is `self`,
+    /// stored [k, m]).
+    pub fn matmul_at_b(&self, other: &Tensor) -> Result<Tensor> {
+        let mut out = Tensor::zeros(&self.matmul_shape(other, "matmul_at_b", true, false)?);
+        self.matmul_at_b_into(other, &mut out)?;
+        Ok(out)
+    }
+
+    /// C = Aᵀ @ B into a caller-provided tensor. Overwrites `out`.
+    pub fn matmul_at_b_into(&self, other: &Tensor, out: &mut Tensor) -> Result<()> {
+        let shape = self.matmul_shape(other, "matmul_at_b_into", true, false)?;
+        if out.shape != shape {
+            bail!("matmul_at_b_into: out shape {:?} wants {:?}", out.shape, shape);
+        }
+        out.data.fill(0.0);
+        let (kd, m) = (self.shape[0], self.shape[1]);
+        let n = other.shape[1];
+        gemm_at_b_acc(&self.data, kd, m, &other.data, n, &mut out.data);
+        Ok(())
+    }
+
+    /// C = A @ Bᵀ without materializing the transpose (B is `other`,
+    /// stored [n, k]).
+    pub fn matmul_a_bt(&self, other: &Tensor) -> Result<Tensor> {
+        let mut out = Tensor::zeros(&self.matmul_shape(other, "matmul_a_bt", false, true)?);
+        self.matmul_a_bt_into(other, &mut out)?;
+        Ok(out)
+    }
+
+    /// C = A @ Bᵀ into a caller-provided tensor. Overwrites `out`.
+    pub fn matmul_a_bt_into(&self, other: &Tensor, out: &mut Tensor) -> Result<()> {
+        let shape = self.matmul_shape(other, "matmul_a_bt_into", false, true)?;
+        if out.shape != shape {
+            bail!("matmul_a_bt_into: out shape {:?} wants {:?}", out.shape, shape);
+        }
+        out.data.fill(0.0);
+        let (m, kd) = (self.shape[0], self.shape[1]);
+        let n = other.shape[0];
+        gemm_a_bt_acc(&self.data, m, kd, &other.data, n, &mut out.data);
+        Ok(())
+    }
+
+    /// Output shape + inner-dimension check for the matmul family.
+    fn matmul_shape(
+        &self,
+        other: &Tensor,
+        op: &str,
+        t_a: bool,
+        t_b: bool,
+    ) -> Result<Vec<usize>> {
+        let (a0, a1) = self.dims2(op)?;
+        let (b0, b1) = other.dims2(op)?;
+        let (m, ka) = if t_a { (a1, a0) } else { (a0, a1) };
+        let (kb, n) = if t_b { (b1, b0) } else { (b0, b1) };
         if ka != kb {
-            bail!("matmul inner dim mismatch: {:?} @ {:?}", self.shape, other.shape);
+            bail!("{op} inner dim mismatch: {:?} @ {:?}", self.shape, other.shape);
+        }
+        Ok(vec![m, n])
+    }
+
+    /// Textbook i-j-k triple loop. The reference oracle the blocked kernels
+    /// are property-tested against, and the baseline the microbench
+    /// speedup is measured from.
+    pub fn matmul_naive(&self, other: &Tensor) -> Result<Tensor> {
+        let (m, ka) = self.dims2("matmul_naive")?;
+        let (kb, n) = other.dims2("matmul_naive")?;
+        if ka != kb {
+            bail!("matmul_naive inner dim mismatch: {:?} @ {:?}", self.shape, other.shape);
         }
         let mut out = Tensor::zeros(&[m, n]);
         for i in 0..m {
-            for kk in 0..ka {
-                let a = self.data[i * ka + kk];
-                if a == 0.0 {
-                    continue;
+            for j in 0..n {
+                let mut acc = 0.0f32;
+                for t in 0..ka {
+                    acc += self.data[i * ka + t] * other.data[t * n + j];
                 }
-                let brow = &other.data[kk * n..(kk + 1) * n];
-                let orow = &mut out.data[i * n..(i + 1) * n];
-                for (o, &b) in orow.iter_mut().zip(brow) {
-                    *o += a * b;
-                }
+                out.data[i * n + j] = acc;
             }
         }
         Ok(out)
     }
 
-    /// 2-D transpose (reference).
+    /// 2-D transpose, tiled 32x32 so both source and destination are walked
+    /// in cache-line-sized runs.
     pub fn transpose(&self) -> Result<Tensor> {
-        if self.shape.len() != 2 {
-            bail!("transpose needs a 2-D tensor, got {:?}", self.shape);
-        }
-        let (m, n) = (self.shape[0], self.shape[1]);
+        let (m, n) = self.dims2("transpose")?;
+        const TB: usize = 32;
         let mut out = Tensor::zeros(&[n, m]);
-        for i in 0..m {
-            for j in 0..n {
-                out.data[j * m + i] = self.data[i * n + j];
+        for ib in (0..m).step_by(TB) {
+            let ie = (ib + TB).min(m);
+            for jb in (0..n).step_by(TB) {
+                let je = (jb + TB).min(n);
+                for i in ib..ie {
+                    for j in jb..je {
+                        out.data[j * m + i] = self.data[i * n + j];
+                    }
+                }
             }
         }
         Ok(out)
@@ -325,6 +647,91 @@ mod tests {
         let a = Tensor::zeros(&[2, 3]);
         let b = Tensor::zeros(&[2, 3]);
         assert!(a.matmul(&b).is_err());
+        assert!(a.matmul_naive(&b).is_err());
+        // but the transpose variants accept exactly these shapes
+        assert!(a.matmul_a_bt(&b).is_ok());
+        assert!(a.matmul_at_b(&b).is_ok());
+    }
+
+    #[test]
+    fn blocked_matmul_matches_naive_ragged() {
+        // The property the whole native backend rests on: the blocked,
+        // packed, (potentially) threaded kernel agrees with the textbook
+        // triple loop on ragged, non-power-of-two shapes.
+        quickcheck("blocked matmul == naive", |rng| {
+            let m = rng.int_in(1, 40) as usize;
+            let k = rng.int_in(1, 40) as usize;
+            let n = rng.int_in(1, 40) as usize;
+            let a = Tensor::randn(&[m, k], 1.0, rng);
+            let b = Tensor::randn(&[k, n], 1.0, rng);
+            let fast = a.matmul(&b).unwrap();
+            let slow = a.matmul_naive(&b).unwrap();
+            assert_close(fast.data(), slow.data(), 1e-5, 1e-6)
+        });
+    }
+
+    #[test]
+    fn blocked_matmul_matches_naive_across_block_boundaries() {
+        // Dimensions straddling MR / KC / JC block edges, large enough to
+        // engage the row-band threading path.
+        let mut rng = Prng::new(77);
+        for (m, k, n) in [(70, 300, 530), (257, 513, 65), (129, 64, 515)] {
+            let a = Tensor::randn(&[m, k], 1.0, &mut rng);
+            let b = Tensor::randn(&[k, n], 1.0, &mut rng);
+            let fast = a.matmul(&b).unwrap();
+            let slow = a.matmul_naive(&b).unwrap();
+            assert_close(fast.data(), slow.data(), 1e-4, 1e-5)
+                .unwrap_or_else(|e| panic!("({m},{k},{n}): {e}"));
+        }
+    }
+
+    #[test]
+    fn transpose_family_matches_compositions() {
+        quickcheck("A^T@B and A@B^T match transpose compositions", |rng| {
+            let m = rng.int_in(1, 12) as usize;
+            let k = rng.int_in(1, 12) as usize;
+            let n = rng.int_in(1, 12) as usize;
+            let a = Tensor::randn(&[k, m], 1.0, rng);
+            let b = Tensor::randn(&[k, n], 1.0, rng);
+            let atb = a.matmul_at_b(&b).unwrap();
+            let reference = a.transpose().unwrap().matmul_naive(&b).unwrap();
+            assert_close(atb.data(), reference.data(), 1e-5, 1e-6)?;
+
+            let c = Tensor::randn(&[m, k], 1.0, rng);
+            let d = Tensor::randn(&[n, k], 1.0, rng);
+            let abt = c.matmul_a_bt(&d).unwrap();
+            let reference = c.matmul_naive(&d.transpose().unwrap()).unwrap();
+            assert_close(abt.data(), reference.data(), 1e-5, 1e-6)
+        });
+    }
+
+    #[test]
+    fn gemm_acc_accumulates() {
+        let a = Tensor::filled(&[2, 3], 1.0);
+        let b = Tensor::filled(&[3, 2], 2.0);
+        let mut out = vec![10.0f32; 4];
+        gemm_acc(a.data(), 2, 3, b.data(), 2, &mut out);
+        assert_eq!(out, vec![16.0; 4]); // 10 + 1*2*3
+    }
+
+    #[test]
+    fn matmul_into_reuses_scratch() {
+        let mut scratch = Scratch::new();
+        let mut rng = Prng::new(5);
+        let a = Tensor::randn(&[6, 4], 1.0, &mut rng);
+        let b = Tensor::randn(&[4, 5], 1.0, &mut rng);
+        let mut out = scratch.zeros(&[6, 5]);
+        a.matmul_into(&b, &mut out).unwrap();
+        assert_close(out.data(), a.matmul_naive(&b).unwrap().data(), 1e-5, 1e-6).unwrap();
+        scratch.recycle(out);
+        assert_eq!(scratch.pooled(), 1);
+        // Second acquisition reuses the pooled allocation and is zeroed.
+        let out2 = scratch.zeros(&[5, 4]);
+        assert_eq!(scratch.pooled(), 0);
+        assert!(out2.data().iter().all(|&x| x == 0.0));
+        // Shape mismatch is rejected.
+        let mut bad = Tensor::zeros(&[3, 3]);
+        assert!(a.matmul_into(&b, &mut bad).is_err());
     }
 
     #[test]
@@ -336,6 +743,25 @@ mod tests {
         assert_eq!(shards[0].shape(), &[4, 2]);
         let back = Tensor::from_col_shards(&shards).unwrap();
         assert_eq!(back, t);
+    }
+
+    #[test]
+    fn col_slice_agrees_with_col_shards() {
+        let mut rng = Prng::new(13);
+        let t = Tensor::randn(&[5, 12], 1.0, &mut rng);
+        let shards = t.col_shards(4).unwrap();
+        for (j, s) in shards.iter().enumerate() {
+            assert_eq!(&t.col_slice(j * 3, 3).unwrap(), s);
+        }
+        assert!(t.col_slice(10, 3).is_err());
+    }
+
+    #[test]
+    fn concat_shards_stacked_inverts_shard_stack() {
+        let mut rng = Prng::new(21);
+        let t = Tensor::randn(&[6, 8], 1.0, &mut rng);
+        let stacked = Tensor::stack(&t.col_shards(4).unwrap()).unwrap();
+        assert_eq!(stacked.concat_shards_stacked().unwrap(), t);
     }
 
     #[test]
@@ -353,8 +779,8 @@ mod tests {
     #[test]
     fn transpose_involution() {
         quickcheck("transpose twice is identity", |rng| {
-            let m = rng.int_in(1, 8) as usize;
-            let n = rng.int_in(1, 8) as usize;
+            let m = rng.int_in(1, 40) as usize;
+            let n = rng.int_in(1, 40) as usize;
             let t = Tensor::randn(&[m, n], 1.0, rng);
             let tt = t.transpose().unwrap().transpose().unwrap();
             assert_close(t.data(), tt.data(), 0.0, 0.0)

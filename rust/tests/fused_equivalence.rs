@@ -1,138 +1,152 @@
-//! Fused-segment equivalence: the fused artifacts (pp_fwd_step,
+//! Fused-segment equivalence: the fused entry points (pp_fwd_step,
 //! pp_bwd_step, pp_loss_step, tp_bwd_step) must compute exactly what their
-//! unfused compositions compute, through PJRT.
+//! unfused compositions compute, through the backend dispatch path.
+//!
+//! Property-tested over random ragged geometries (p, B, k, m) on the
+//! native backend — the shapes deliberately do NOT match the registered
+//! config geometry, which only supplies the baked-in loss scale, so the
+//! kernels are exercised well off the preset grid.
 
-use phantom::runtime::{default_artifact_dir, ExecServer};
+use phantom::runtime::ExecServer;
 use phantom::tensor::Tensor;
 use phantom::util::prng::Prng;
-use phantom::util::proptest::assert_close;
+use phantom::util::proptest::{assert_close, quickcheck};
 
-fn server_or_skip() -> Option<ExecServer> {
-    let dir = default_artifact_dir();
-    if !dir.join("manifest.json").exists() {
-        eprintln!("SKIP: no artifacts");
-        return None;
-    }
-    Some(ExecServer::start(dir).expect("exec server"))
+/// Random ragged PP geometry: (p, batch, k, m).
+fn geometry(rng: &mut Prng) -> (usize, usize, usize, usize) {
+    (
+        rng.int_in(2, 5) as usize,
+        rng.int_in(1, 9) as usize,
+        rng.int_in(1, 5) as usize,
+        rng.int_in(2, 10) as usize,
+    )
 }
 
 #[test]
 fn pp_fwd_step_equals_composition() {
-    let Some(server) = server_or_skip() else { return };
+    let server = ExecServer::native();
     let h = server.handle();
-    let m = server.manifest.config("tiny").unwrap().clone();
-    let mut rng = Prng::new(1);
-    let z_loc = Tensor::randn(&[m.batch, m.np], 1.0, &mut rng);
-    let mut g_all = Tensor::randn(&[m.p, m.batch, m.k], 1.0, &mut rng);
-    g_all.zero_slot(0);
-    let d = Tensor::randn(&[m.p, m.k, m.np], 1.0, &mut rng);
-    let b = Tensor::randn(&[m.np], 1.0, &mut rng);
-    let l_next = Tensor::randn(&[m.np, m.np], 1.0, &mut rng);
-    let c_next = Tensor::randn(&[m.np, m.k], 1.0, &mut rng);
+    quickcheck("pp_fwd_step == combine + local", |rng| {
+        let (p, bsz, k, m) = geometry(rng);
+        let z_loc = Tensor::randn(&[bsz, m], 1.0, rng);
+        let mut g_all = Tensor::randn(&[p, bsz, k], 1.0, rng);
+        g_all.zero_slot(0);
+        let d = Tensor::randn(&[p, k, m], 1.0, rng);
+        let b = Tensor::randn(&[m], 1.0, rng);
+        let l_next = Tensor::randn(&[m, m], 1.0, rng);
+        let c_next = Tensor::randn(&[m, k], 1.0, rng);
 
-    let fused = h
-        .execute(
-            "tiny",
-            "pp_fwd_step",
-            vec![z_loc.clone(), g_all.clone(), d.clone(), b.clone(), l_next.clone(), c_next.clone()],
-        )
-        .unwrap()
-        .outputs;
-    let comb = h
-        .execute("tiny", "pp_fwd_combine", vec![z_loc, g_all, d, b])
-        .unwrap()
-        .outputs;
-    let local = h
-        .execute("tiny", "pp_fwd_local", vec![comb[0].clone(), l_next, c_next])
-        .unwrap()
-        .outputs;
-    assert_close(fused[0].data(), comb[0].data(), 1e-6, 1e-6).unwrap(); // y_out
-    assert_close(fused[1].data(), comb[1].data(), 1e-6, 1e-6).unwrap(); // z
-    assert_close(fused[2].data(), local[0].data(), 1e-6, 1e-6).unwrap(); // z_loc_next
-    assert_close(fused[3].data(), local[1].data(), 1e-6, 1e-6).unwrap(); // g_next
+        let fused = h
+            .execute(
+                "tiny",
+                "pp_fwd_step",
+                &[&z_loc, &g_all, &d, &b, &l_next, &c_next],
+            )
+            .map_err(|e| e.to_string())?
+            .outputs;
+        let comb = h
+            .execute("tiny", "pp_fwd_combine", &[&z_loc, &g_all, &d, &b])
+            .map_err(|e| e.to_string())?
+            .outputs;
+        let local = h
+            .execute("tiny", "pp_fwd_local", &[&comb[0], &l_next, &c_next])
+            .map_err(|e| e.to_string())?
+            .outputs;
+        assert_close(fused[0].data(), comb[0].data(), 1e-6, 1e-6)?; // y_out
+        assert_close(fused[1].data(), comb[1].data(), 1e-6, 1e-6)?; // z
+        assert_close(fused[2].data(), local[0].data(), 1e-6, 1e-6)?; // z_loc_next
+        assert_close(fused[3].data(), local[1].data(), 1e-6, 1e-6) // g_next
+    });
 }
 
 #[test]
 fn pp_bwd_step_equals_composition() {
-    let Some(server) = server_or_skip() else { return };
+    let server = ExecServer::native();
     let h = server.handle();
-    let m = server.manifest.config("tiny").unwrap().clone();
-    let mut rng = Prng::new(2);
-    let delta = Tensor::randn(&[m.batch, m.np], 1.0, &mut rng);
-    let h_sum = Tensor::randn(&[m.batch, m.k], 1.0, &mut rng);
-    let l = Tensor::randn(&[m.np, m.np], 1.0, &mut rng);
-    let c = Tensor::randn(&[m.np, m.k], 1.0, &mut rng);
-    let z_prev = Tensor::randn(&[m.batch, m.np], 1.0, &mut rng);
-    let d_prev = Tensor::randn(&[m.p, m.k, m.np], 1.0, &mut rng);
+    quickcheck("pp_bwd_step == combine + compress", |rng| {
+        let (p, bsz, k, m) = geometry(rng);
+        let delta = Tensor::randn(&[bsz, m], 1.0, rng);
+        let h_sum = Tensor::randn(&[bsz, k], 1.0, rng);
+        let l = Tensor::randn(&[m, m], 1.0, rng);
+        let c = Tensor::randn(&[m, k], 1.0, rng);
+        let z_prev = Tensor::randn(&[bsz, m], 1.0, rng);
+        let d_prev = Tensor::randn(&[p, k, m], 1.0, rng);
 
-    let fused = h
-        .execute(
-            "tiny",
-            "pp_bwd_step",
-            vec![delta.clone(), h_sum.clone(), l.clone(), c.clone(), z_prev.clone(), d_prev.clone()],
-        )
-        .unwrap()
-        .outputs;
-    let comb = h
-        .execute("tiny", "pp_bwd_combine", vec![delta, h_sum, l, c, z_prev])
-        .unwrap()
-        .outputs;
-    let compress = h
-        .execute("tiny", "pp_bwd_compress", vec![comb[0].clone(), d_prev])
-        .unwrap()
-        .outputs;
-    assert_close(fused[0].data(), comb[0].data(), 1e-6, 1e-6).unwrap();
-    assert_close(fused[1].data(), compress[0].data(), 1e-6, 1e-6).unwrap();
+        let fused = h
+            .execute(
+                "tiny",
+                "pp_bwd_step",
+                &[&delta, &h_sum, &l, &c, &z_prev, &d_prev],
+            )
+            .map_err(|e| e.to_string())?
+            .outputs;
+        let comb = h
+            .execute("tiny", "pp_bwd_combine", &[&delta, &h_sum, &l, &c, &z_prev])
+            .map_err(|e| e.to_string())?
+            .outputs;
+        let compress = h
+            .execute("tiny", "pp_bwd_compress", &[&comb[0], &d_prev])
+            .map_err(|e| e.to_string())?
+            .outputs;
+        assert_close(fused[0].data(), comb[0].data(), 1e-6, 1e-6)?;
+        assert_close(fused[1].data(), compress[0].data(), 1e-6, 1e-6)
+    });
 }
 
 #[test]
 fn pp_loss_step_equals_composition() {
-    let Some(server) = server_or_skip() else { return };
+    let server = ExecServer::native();
     let h = server.handle();
-    let m = server.manifest.config("tiny").unwrap().clone();
-    let mut rng = Prng::new(3);
-    let y = Tensor::randn(&[m.batch, m.np], 1.0, &mut rng);
-    let z = Tensor::randn(&[m.batch, m.np], 1.0, &mut rng);
-    let t = Tensor::randn(&[m.batch, m.np], 1.0, &mut rng);
-    let d = Tensor::randn(&[m.p, m.k, m.np], 1.0, &mut rng);
+    quickcheck("pp_loss_step == mse_delta + compress", |rng| {
+        let (p, bsz, k, m) = geometry(rng);
+        let y = Tensor::randn(&[bsz, m], 1.0, rng);
+        let z = Tensor::randn(&[bsz, m], 1.0, rng);
+        let t = Tensor::randn(&[bsz, m], 1.0, rng);
+        let d = Tensor::randn(&[p, k, m], 1.0, rng);
 
-    let fused = h
-        .execute("tiny", "pp_loss_step", vec![y.clone(), z.clone(), t.clone(), d.clone()])
-        .unwrap()
-        .outputs;
-    let mse = h.execute("tiny", "mse_delta", vec![y, z, t]).unwrap().outputs;
-    let compress = h
-        .execute("tiny", "pp_bwd_compress", vec![mse[1].clone(), d])
-        .unwrap()
-        .outputs;
-    assert_close(fused[0].data(), mse[0].data(), 1e-6, 1e-6).unwrap(); // loss
-    assert_close(fused[1].data(), mse[1].data(), 1e-6, 1e-6).unwrap(); // delta
-    assert_close(fused[2].data(), compress[0].data(), 1e-6, 1e-6).unwrap(); // h_out
+        let fused = h
+            .execute("tiny", "pp_loss_step", &[&y, &z, &t, &d])
+            .map_err(|e| e.to_string())?
+            .outputs;
+        let mse = h
+            .execute("tiny", "mse_delta", &[&y, &z, &t])
+            .map_err(|e| e.to_string())?
+            .outputs;
+        let compress = h
+            .execute("tiny", "pp_bwd_compress", &[&mse[1], &d])
+            .map_err(|e| e.to_string())?
+            .outputs;
+        assert_close(fused[0].data(), mse[0].data(), 1e-6, 1e-6)?; // loss
+        assert_close(fused[1].data(), mse[1].data(), 1e-6, 1e-6)?; // delta
+        assert_close(fused[2].data(), compress[0].data(), 1e-6, 1e-6) // h_out
+    });
 }
 
 #[test]
 fn tp_bwd_step_equals_composition() {
-    let Some(server) = server_or_skip() else { return };
+    let server = ExecServer::native();
     let h = server.handle();
-    let m = server.manifest.config("tiny").unwrap().clone();
-    let mut rng = Prng::new(4);
-    let dy = Tensor::randn(&[m.batch, m.np], 1.0, &mut rng);
-    let z_prev = Tensor::randn(&[m.batch, m.np], 1.0, &mut rng);
-    let y_full = Tensor::randn(&[m.batch, m.n], 1.0, &mut rng);
+    quickcheck("tp_bwd_step == finish + grads", |rng| {
+        let (p, bsz, _k, m) = geometry(rng);
+        let n = p * m;
+        let dy = Tensor::randn(&[bsz, m], 1.0, rng);
+        let z_prev = Tensor::randn(&[bsz, m], 1.0, rng);
+        let y_full = Tensor::randn(&[bsz, n], 1.0, rng);
 
-    let fused = h
-        .execute("tiny", "tp_bwd_step", vec![dy.clone(), z_prev.clone(), y_full.clone()])
-        .unwrap()
-        .outputs;
-    let fin = h
-        .execute("tiny", "tp_bwd_finish", vec![dy, z_prev])
-        .unwrap()
-        .outputs;
-    let grads = h
-        .execute("tiny", "tp_grads", vec![y_full, fin[0].clone()])
-        .unwrap()
-        .outputs;
-    assert_close(fused[0].data(), fin[0].data(), 1e-6, 1e-6).unwrap();
-    assert_close(fused[1].data(), grads[0].data(), 1e-6, 1e-6).unwrap();
-    assert_close(fused[2].data(), grads[1].data(), 1e-6, 1e-6).unwrap();
+        let fused = h
+            .execute("tiny", "tp_bwd_step", &[&dy, &z_prev, &y_full])
+            .map_err(|e| e.to_string())?
+            .outputs;
+        let fin = h
+            .execute("tiny", "tp_bwd_finish", &[&dy, &z_prev])
+            .map_err(|e| e.to_string())?
+            .outputs;
+        let grads = h
+            .execute("tiny", "tp_grads", &[&y_full, &fin[0]])
+            .map_err(|e| e.to_string())?
+            .outputs;
+        assert_close(fused[0].data(), fin[0].data(), 1e-6, 1e-6)?;
+        assert_close(fused[1].data(), grads[0].data(), 1e-6, 1e-6)?;
+        assert_close(fused[2].data(), grads[1].data(), 1e-6, 1e-6)
+    });
 }

@@ -1,0 +1,104 @@
+//! Perf smoke for the native GEMM hot path, run under tier-1 (`cargo test`
+//! builds with opt-level 2, see the workspace profile):
+//!
+//! * the blocked multithreaded `matmul` must agree with the naive
+//!   reference at 512^3 and beat it by a wide margin, and
+//! * the measured numbers are recorded to BENCH_native_backend.json at the
+//!   repo root so every CI run leaves a perf trajectory point even when
+//!   `cargo bench` never ran. (benches/microbench.rs refreshes the same
+//!   file with the identical key schema.)
+//!
+//! The in-test assertion is deliberately conservative (>= 3x) so a loaded
+//! CI box doesn't flake; the recorded speedup is the real number —
+//! typically well above 5x, since the reference is the textbook i-j-k loop
+//! with strided B access and the blocked kernel is packed, register-tiled
+//! and row-band threaded.
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use phantom::config::{preset, Parallelism};
+use phantom::coordinator;
+use phantom::runtime::ExecServer;
+use phantom::tensor::Tensor;
+use phantom::util::json::Json;
+use phantom::util::prng::Prng;
+use phantom::util::proptest::assert_close;
+
+/// Minimum wall time of `runs` executions (min is the stablest estimator
+/// under background load).
+fn best_of<F: FnMut()>(runs: usize, mut f: F) -> f64 {
+    let mut best = f64::INFINITY;
+    for _ in 0..runs {
+        let t0 = Instant::now();
+        f();
+        best = best.min(t0.elapsed().as_secs_f64());
+    }
+    best
+}
+
+#[test]
+fn blocked_matmul_beats_naive_and_records_trajectory() {
+    let mut rng = Prng::new(1234);
+    let mut records: Vec<(String, f64)> = Vec::new();
+    let mut speedup_512 = 0.0;
+
+    for (size, naive_runs, blocked_runs) in [(128usize, 5, 10), (512usize, 3, 6)] {
+        let a = Tensor::randn(&[size, size], 1.0, &mut rng);
+        let b = Tensor::randn(&[size, size], 1.0, &mut rng);
+
+        // Correctness first: the fast path must match the oracle.
+        let fast = a.matmul(&b).unwrap();
+        let slow = a.matmul_naive(&b).unwrap();
+        assert_close(fast.data(), slow.data(), 1e-3, 1e-4)
+            .unwrap_or_else(|e| panic!("blocked != naive at {size}: {e}"));
+
+        let t_naive = best_of(naive_runs, || {
+            let _ = a.matmul_naive(&b).unwrap();
+        });
+        let t_blocked = best_of(blocked_runs, || {
+            let _ = a.matmul(&b).unwrap();
+        });
+        let mut scratch = phantom::tensor::Scratch::new();
+        let mut out = scratch.zeros(&[size, size]);
+        let t_into = best_of(blocked_runs, || {
+            a.matmul_into(&b, &mut out).unwrap();
+        });
+        let speedup = t_naive / t_blocked;
+        eprintln!(
+            "matmul {size}^3: naive {:.3}ms, blocked {:.3}ms, into {:.3}ms, speedup {speedup:.1}x",
+            t_naive * 1e3,
+            t_blocked * 1e3,
+            t_into * 1e3
+        );
+        records.push((format!("naive_matmul_{size}_ns"), t_naive * 1e9));
+        records.push((format!("blocked_matmul_{size}_ns"), t_blocked * 1e9));
+        records.push((format!("matmul_into_{size}_ns"), t_into * 1e9));
+        records.push((format!("speedup_blocked_over_naive_{size}"), speedup));
+        if size == 512 {
+            speedup_512 = speedup;
+        }
+    }
+
+    // Full native PP iteration at p=4 (quickstart geometry), the end-to-end
+    // trajectory number.
+    const ITERS: usize = 5;
+    let server = ExecServer::native();
+    let mut cfg = preset("quickstart", Parallelism::Phantom).unwrap();
+    cfg.train.max_iters = ITERS;
+    let t_train = best_of(2, || {
+        let _ = coordinator::train(&cfg, &server).unwrap();
+    });
+    records.push(("pp_iteration_p4_ns".to_string(), t_train / ITERS as f64 * 1e9));
+    eprintln!("native PP iteration p=4: {:.3}ms", t_train / ITERS as f64 * 1e3);
+
+    let path = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../BENCH_native_backend.json");
+    let obj = Json::obj(records.iter().map(|(k, v)| (k.as_str(), Json::num(*v))).collect());
+    std::fs::write(&path, obj.pretty()).expect("write BENCH_native_backend.json");
+
+    assert!(
+        speedup_512 >= 3.0,
+        "blocked matmul only {speedup_512:.2}x over naive at 512^3 (want >= 3x \
+         conservatively; >= 5x on an unloaded box)"
+    );
+}
