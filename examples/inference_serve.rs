@@ -1,44 +1,59 @@
 //! Inference serving comparison: the "inferencing" half of the paper's
-//! title. Serves batched forward-only queries through the PP and TP
-//! pipelines and reports per-batch latency, throughput, and energy per
-//! 1k queries — PP's forward path saves the same All-Gather traffic per
-//! query as per training iteration (Table II).
+//! title, on top of the persistent serve subsystem (rust/src/serve,
+//! DESIGN.md §7) instead of spawning fresh ranks per run.
 //!
-//! Run with:  cargo run --release --example inference_serve [batches]
+//! A long-lived rank pool holds the weight shards; an open-loop Poisson
+//! arrival stream flows through the bounded admission queue and dynamic
+//! micro-batcher; the report compares PP and TP on p50/p95 latency,
+//! throughput, and energy per 1k queries — PP's forward path saves the
+//! same All-Gather traffic per query as per training iteration (Table II).
+//!
+//! Run with:  cargo run --release --example inference_serve [queries] [rate_qps]
 
 use anyhow::Result;
-use phantom::config::{preset, Parallelism};
-use phantom::coordinator::driver::infer;
+use phantom::config::{preset, Parallelism, ServeConfig};
 use phantom::runtime::ExecServer;
-use phantom::util::stats::summarize;
+use phantom::serve::{run_load, LoadGenConfig};
 use phantom::util::table::{fmt_joules, fmt_secs, Table};
 
 fn main() -> Result<()> {
-    let batches: usize = std::env::args()
-        .nth(1)
-        .and_then(|s| s.parse().ok())
-        .unwrap_or(40);
-    let server = ExecServer::native();
+    let queries: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(512);
+    let rate_qps: f64 = std::env::args().nth(2).and_then(|s| s.parse().ok()).unwrap_or(2_000.0);
 
     let mut table = Table::new(
-        &format!("Inference serving — n=1,024, p=8, {batches} batches of 32 queries"),
-        &["mode", "p50 latency", "p95 latency", "throughput (q/s, virtual)", "energy / 1k queries"],
+        &format!("Inference serving — n=1,024, p=8, {queries} queries @ {rate_qps} q/s (virtual)"),
+        &[
+            "mode",
+            "batches",
+            "mean batch",
+            "p50 latency",
+            "p95 latency",
+            "throughput (q/s, virtual)",
+            "energy / 1k queries",
+        ],
     );
     for mode in [Parallelism::Phantom, Parallelism::Tensor] {
         let cfg = preset("small", mode)?;
+        let server = ExecServer::for_run(&cfg)?;
+        let scfg = ServeConfig { mode, ..ServeConfig::default() };
+        let lcfg = LoadGenConfig { queries, rate_qps, ..LoadGenConfig::default() };
         eprintln!("serving {} ...", mode.name());
-        let r = infer(&cfg, &server, batches)?;
-        let s = summarize(&r.latencies_s);
-        let queries = ((batches - 1) * cfg.train.batch) as f64;
+        let r = run_load(&cfg, &scfg, &lcfg, &server)?;
+        assert_eq!(r.misordered, 0, "responses must come back in order");
+        assert_eq!(r.completed, queries, "blocking backpressure drops nothing");
         table.row(vec![
             mode.name().to_uppercase(),
-            fmt_secs(s.p50),
-            fmt_secs(s.p95),
-            format!("{:.0}", r.throughput),
-            fmt_joules(r.energy_j / queries * 1000.0),
+            r.batches.to_string(),
+            format!("{:.1}", r.mean_batch),
+            fmt_secs(r.latency.p50),
+            fmt_secs(r.latency.p95),
+            format!("{:.0}", r.throughput_qps),
+            fmt_joules(r.energy_per_kq_j),
         ]);
     }
     print!("{}", table.markdown());
-    println!("\nPer-query PP moves 2*k*batch floats vs TP's (n + n/p)*batch (Table II).");
+    println!("\nPer-query PP moves 2*k*batch floats vs TP's (n + n/p)*batch (Table II);");
+    println!("the rank pool holds shards across requests, idling at the static draw B");
+    println!("between batches. `phantom serve` runs the same harness from the CLI.");
     Ok(())
 }

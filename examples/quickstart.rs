@@ -3,6 +3,18 @@
 //!
 //! Run with:  cargo run --release --example quickstart
 //!
+//! ## Serving
+//!
+//! The same pipelines serve inference traffic through the persistent serve
+//! subsystem (rust/src/serve, DESIGN.md §7): a long-lived rank pool keeps
+//! the weight shards resident, a bounded admission queue applies
+//! backpressure, and a dynamic micro-batcher coalesces queries:
+//!
+//! ```text
+//! cargo run --release -- serve --backend native      # PP vs TP, writes BENCH_serve.json
+//! cargo run --release --example inference_serve      # library-level harness
+//! ```
+//!
 //! ## Native vs the `xla` feature
 //!
 //! By default this runs on the NATIVE backend (runtime/native.rs): fused

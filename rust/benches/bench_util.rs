@@ -5,7 +5,6 @@
 
 use std::time::Instant;
 
-use phantom::util::json::Json;
 use phantom::util::stats::{summarize, Summary};
 use phantom::util::table::{fmt_secs, Table};
 
@@ -57,10 +56,11 @@ impl Bench {
 }
 
 /// Write (key, value) records as a flat JSON object — the machine-readable
-/// perf trajectory future PRs diff against.
+/// perf trajectory future PRs diff against. Delegates to the library's
+/// serializer (util::json::write_records_json) so the format has one
+/// source, keeping bench ergonomics: a failed write warns, not aborts.
 pub fn write_records_json(path: &std::path::Path, records: &[(String, f64)]) {
-    let obj = Json::obj(records.iter().map(|(k, v)| (k.as_str(), Json::num(*v))).collect());
-    match std::fs::write(path, obj.pretty()) {
+    match phantom::util::json::write_records_json(path, records) {
         Ok(()) => eprintln!("wrote {}", path.display()),
         Err(e) => eprintln!("could not write {}: {e}", path.display()),
     }

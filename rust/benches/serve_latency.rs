@@ -1,0 +1,49 @@
+//! Serving latency/energy bench: a longer load-generator run than the CI
+//! smoke test, refreshing BENCH_serve.json with higher-confidence numbers.
+//!
+//! Run with:  cargo bench --bench serve_latency [queries] [rate_qps]
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+use phantom::config::{preset, Parallelism, ServeConfig};
+use phantom::runtime::ExecServer;
+use phantom::serve::{combined_records, run_load, LoadGenConfig};
+use phantom::util::table::{fmt_joules, fmt_secs, Table};
+
+fn main() -> Result<()> {
+    let queries: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(1024);
+    let rate_qps: f64 = std::env::args().nth(2).and_then(|s| s.parse().ok()).unwrap_or(2_000.0);
+
+    let mut table = Table::new(
+        &format!("Serving bench — small preset, {queries} queries @ {rate_qps} q/s"),
+        &["mode", "p50", "p95", "throughput (q/s)", "energy / 1k queries", "mean batch"],
+    );
+    let mut reports = Vec::new();
+    for mode in [Parallelism::Phantom, Parallelism::Tensor] {
+        let cfg = preset("small", mode)?;
+        let exec = ExecServer::for_run(&cfg)?;
+        let scfg = ServeConfig { mode, ..ServeConfig::default() };
+        let lcfg = LoadGenConfig { queries, rate_qps, ..LoadGenConfig::default() };
+        eprintln!("serving {} ...", mode.name());
+        let r = run_load(&cfg, &scfg, &lcfg, &exec)?;
+        assert_eq!(r.misordered, 0);
+        assert_eq!(r.completed, queries);
+        table.row(vec![
+            mode.name().to_uppercase(),
+            fmt_secs(r.latency.p50),
+            fmt_secs(r.latency.p95),
+            format!("{:.0}", r.throughput_qps),
+            fmt_joules(r.energy_per_kq_j),
+            format!("{:.1}", r.mean_batch),
+        ]);
+        reports.push(r);
+    }
+    print!("{}", table.markdown());
+    let records = combined_records(&reports);
+
+    let path = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../BENCH_serve.json");
+    phantom::serve::write_records_json(&path, &records)?;
+    eprintln!("wrote {}", path.display());
+    Ok(())
+}

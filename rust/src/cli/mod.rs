@@ -103,6 +103,19 @@ COMMANDS:
                                           fig7c table1 table3
                    --backend <native|xla> backend for measured runs [native]
                    --out-dir <dir>        write markdown+json per experiment
+    serve        Persistent serving with dynamic batching (load harness)
+                   --preset <name>        artifact preset          [small]
+                   --mode <tp|pp|both>    pipeline(s) to serve     [both]
+                   --backend <native|xla> compute backend          [native]
+                   --queries <N>          arrival-stream length    [512]
+                   --rate <qps>           mean arrival rate (virtual) [2000]
+                   --max-batch <B>        micro-batcher cap        [preset batch]
+                   --linger-ms <x>        batcher linger deadline  [2.0]
+                   --queue-depth <D>      admission queue bound    [4*max-batch]
+                   --open-loop            shed on a full queue instead of
+                                          blocking the arrival stream
+                   --seed <n>             arrival/payload seed
+                   --out <file.json>      perf-trajectory records  [BENCH_serve.json]
     predict      One-shot analytic prediction (Frontier scale)
                    --n <n> --p <p> --k <k> [--layers 2] [--batch 32]
     inspect      List artifact configs in the manifest

@@ -28,8 +28,9 @@ use crate::energy::{Activity, EnergyLedger};
 use crate::simnet::{Collective, NetworkProfile};
 use crate::tensor::Tensor;
 
-/// Rendezvous timeout: a mis-sequenced collective (deadlock) fails loudly
-/// instead of hanging the test suite.
+/// Default rendezvous timeout: a mis-sequenced collective (deadlock) fails
+/// loudly instead of hanging the test suite. `Fabric::with_timeout` lets
+/// deadlock tests shrink this to milliseconds.
 const RENDEZVOUS_TIMEOUT: Duration = Duration::from_secs(60);
 
 struct ExchangeState {
@@ -49,6 +50,7 @@ struct Shared {
     state: Mutex<ExchangeState>,
     cv: Condvar,
     p: usize,
+    timeout: Duration,
 }
 
 /// Per-endpoint traffic statistics.
@@ -69,6 +71,17 @@ impl CommStats {
     pub fn collectives(&self) -> u64 {
         self.all_gathers + self.reduce_scatters + self.all_reduces + self.broadcasts
     }
+
+    /// Merge another endpoint's counters into this one (cluster totals).
+    pub fn accumulate(&mut self, other: &CommStats) {
+        self.all_gathers += other.all_gathers;
+        self.reduce_scatters += other.reduce_scatters;
+        self.all_reduces += other.all_reduces;
+        self.broadcasts += other.broadcasts;
+        self.barriers += other.barriers;
+        self.floats_moved += other.floats_moved;
+        self.comm_s += other.comm_s;
+    }
 }
 
 /// One rank's handle onto the fabric. Moves into the rank's thread.
@@ -85,6 +98,13 @@ pub struct Fabric;
 
 impl Fabric {
     pub fn new(p: usize, profile: NetworkProfile) -> Vec<Endpoint> {
+        Self::with_timeout(p, profile, RENDEZVOUS_TIMEOUT)
+    }
+
+    /// Like `new`, with an explicit rendezvous timeout. Production callers
+    /// keep the 60 s default; deadlock/poisoning tests pass milliseconds so
+    /// a mis-sequenced collective surfaces as a prompt error.
+    pub fn with_timeout(p: usize, profile: NetworkProfile, timeout: Duration) -> Vec<Endpoint> {
         assert!(p >= 1);
         let shared = Arc::new(Shared {
             state: Mutex::new(ExchangeState {
@@ -100,6 +120,7 @@ impl Fabric {
             }),
             cv: Condvar::new(),
             p,
+            timeout,
         });
         (0..p)
             .map(|rank| Endpoint {
@@ -135,7 +156,7 @@ impl Endpoint {
         while s.ready && !s.poisoned {
             let (ns, to) = sh
                 .cv
-                .wait_timeout(s, RENDEZVOUS_TIMEOUT)
+                .wait_timeout(s, sh.timeout)
                 .map_err(|_| anyhow!("fabric mutex poisoned"))?;
             s = ns;
             if to.timed_out() {
@@ -201,7 +222,7 @@ impl Endpoint {
             while !(s.ready && s.gen == my_gen) && !s.poisoned {
                 let (ns, to) = sh
                     .cv
-                    .wait_timeout(s, RENDEZVOUS_TIMEOUT)
+                    .wait_timeout(s, sh.timeout)
                     .map_err(|_| anyhow!("fabric mutex poisoned"))?;
                 s = ns;
                 if to.timed_out() {
@@ -230,6 +251,17 @@ impl Endpoint {
             sh.cv.notify_all();
         }
         Ok((result, max_clock))
+    }
+
+    /// Poison the fabric, waking any peers blocked in a rendezvous with a
+    /// prompt error instead of leaving them to the rendezvous timeout.
+    /// Long-lived consumers (the serve pool) call this when a rank fails
+    /// outside a collective so its peers never hang waiting for it.
+    pub fn poison(&self) {
+        if let Ok(mut s) = self.shared.state.lock() {
+            s.poisoned = true;
+            self.shared.cv.notify_all();
+        }
     }
 
     /// Charge the ledger for a collective: idle until the slowest peer
@@ -514,6 +546,26 @@ mod tests {
     }
 
     #[test]
+    fn poison_wakes_blocked_peers_promptly() {
+        // Default 60 s timeout: the blocked rank must wake via the poison
+        // signal, not the timeout — the elapsed-time bound proves it.
+        let t0 = std::time::Instant::now();
+        let out = run_ranks(2, |mut ep, mut led| {
+            if ep.rank == 0 {
+                ep.all_reduce(Tensor::filled(&[4], 1.0), &mut led).map(|_| ())
+            } else {
+                // Give rank 0 a moment to enter the rendezvous, then fail
+                // out-of-band (what a dying serve rank does).
+                thread::sleep(Duration::from_millis(50));
+                ep.poison();
+                Ok(())
+            }
+        });
+        assert!(out[0].is_err(), "blocked rank must surface the poisoning");
+        assert!(t0.elapsed() < Duration::from_secs(10), "woke by signal, not timeout");
+    }
+
+    #[test]
     fn reduce_scatter_validates_leading_dim() {
         let out = run_ranks(2, |mut ep, mut led| {
             if ep.rank == 0 {
@@ -530,6 +582,20 @@ mod tests {
             }
         });
         assert!(out.into_iter().all(|r| r.is_ok()));
+    }
+
+    #[test]
+    fn stats_merge_across_endpoints() {
+        let mut total = CommStats::default();
+        let a = CommStats { all_gathers: 2, floats_moved: 100, comm_s: 0.5, ..Default::default() };
+        let b = CommStats { reduce_scatters: 3, floats_moved: 50, comm_s: 0.25, ..Default::default() };
+        total.accumulate(&a);
+        total.accumulate(&b);
+        assert_eq!(total.all_gathers, 2);
+        assert_eq!(total.reduce_scatters, 3);
+        assert_eq!(total.collectives(), 5);
+        assert_eq!(total.floats_moved, 150);
+        assert!((total.comm_s - 0.75).abs() < 1e-15);
     }
 
     #[test]

@@ -150,6 +150,78 @@ impl Default for TrainConfig {
     }
 }
 
+/// Serving-subsystem configuration (rust/src/serve, DESIGN.md §7): the
+/// bounded admission queue and dynamic micro-batcher in front of the
+/// persistent rank pool.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ServeConfig {
+    /// Admission-queue capacity in queries. Arrivals beyond this see
+    /// backpressure: shed (open-loop clients) or blocked (closed-loop).
+    pub queue_depth: usize,
+    /// Maximum queries coalesced into one dispatched forward batch.
+    pub max_batch: usize,
+    /// Batcher linger deadline in virtual seconds: a forming batch waits at
+    /// most this long past pool-ready for stragglers before dispatching.
+    pub linger_s: f64,
+    /// Which forward pipeline serves the queries (PP or the TP baseline).
+    pub mode: Parallelism,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            queue_depth: 128,
+            max_batch: 32,
+            linger_s: 2e-3,
+            mode: Parallelism::Phantom,
+        }
+    }
+}
+
+impl ServeConfig {
+    pub fn validate(&self) -> Result<()> {
+        if self.max_batch == 0 {
+            bail!("max_batch must be positive");
+        }
+        if self.queue_depth < self.max_batch {
+            bail!(
+                "queue_depth={} must be >= max_batch={} (a full queue must \
+                 always contain a dispatchable batch)",
+                self.queue_depth,
+                self.max_batch
+            );
+        }
+        if !self.linger_s.is_finite() || self.linger_s < 0.0 {
+            bail!("linger_s must be finite and non-negative, got {}", self.linger_s);
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("queue_depth", Json::int(self.queue_depth as i64)),
+            ("max_batch", Json::int(self.max_batch as i64)),
+            ("linger_s", Json::num(self.linger_s)),
+            ("mode", Json::str(self.mode.name())),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<ServeConfig> {
+        let d = ServeConfig::default();
+        let cfg = ServeConfig {
+            queue_depth: j.get("queue_depth").as_usize().unwrap_or(d.queue_depth),
+            max_batch: j.get("max_batch").as_usize().unwrap_or(d.max_batch),
+            linger_s: j.get("linger_s").as_f64().unwrap_or(d.linger_s),
+            mode: match j.get("mode").as_str() {
+                Some(s) => Parallelism::parse(s)?,
+                None => d.mode,
+            },
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
 /// How per-rank compute time is charged to the virtual clock.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum ComputeModel {
@@ -444,6 +516,36 @@ mod tests {
             map.remove("backend");
         }
         assert_eq!(RunConfig::from_json(&j).unwrap().backend, BackendKind::Native);
+    }
+
+    #[test]
+    fn serve_config_validates_and_roundtrips() {
+        let d = ServeConfig::default();
+        assert!(d.validate().is_ok());
+        assert_eq!(ServeConfig::from_json(&d.to_json()).unwrap(), d);
+
+        let custom = ServeConfig {
+            queue_depth: 16,
+            max_batch: 4,
+            linger_s: 5e-4,
+            mode: Parallelism::Tensor,
+        };
+        assert_eq!(ServeConfig::from_json(&custom.to_json()).unwrap(), custom);
+
+        let bad = ServeConfig { max_batch: 0, ..d };
+        assert!(bad.validate().is_err());
+        let bad = ServeConfig { queue_depth: 3, max_batch: 4, ..d };
+        assert!(bad.validate().is_err());
+        let bad = ServeConfig { linger_s: -1.0, ..d };
+        assert!(bad.validate().is_err());
+        let bad = ServeConfig { linger_s: f64::NAN, ..d };
+        assert!(bad.validate().is_err());
+
+        // missing fields fall back to defaults
+        let partial = Json::parse("{\"max_batch\": 8, \"queue_depth\": 8}").unwrap();
+        let cfg = ServeConfig::from_json(&partial).unwrap();
+        assert_eq!(cfg.max_batch, 8);
+        assert_eq!(cfg.mode, Parallelism::Phantom);
     }
 
     #[test]

@@ -356,30 +356,9 @@ pub fn infer(cfg: &RunConfig, server: &ExecServer, batches: usize) -> Result<Inf
                         PhantomRankParams::init(&cfg.model, cfg.p, rank, cfg.train.seed)?;
                     for b in 0..batches as u64 {
                         let (x, _) = cache.shard(b, rank)?;
-                        let mut y = x;
-                        for l in 0..params.layers() {
-                            let r = super::exec_charged(
-                                &exec,
-                                &mut ledger,
-                                &artifact,
-                                "pp_fwd_local",
-                                &[&y, &params.locals[l], &params.compressors[l]],
-                            )?;
-                            let [z_loc, g]: [Tensor; 2] =
-                                super::rank_pp::unpack(r.outputs, "pp_fwd_local")?;
-                            let mut g_all = ep.all_gather(g, &mut ledger)?;
-                            g_all.zero_slot(rank);
-                            let r = super::exec_charged(
-                                &exec,
-                                &mut ledger,
-                                &artifact,
-                                "pp_fwd_combine",
-                                &[&z_loc, &g_all, &params.decompressors[l], &params.biases[l]],
-                            )?;
-                            let [y_out, _]: [Tensor; 2] =
-                                super::rank_pp::unpack(r.outputs, "pp_fwd_combine")?;
-                            y = y_out;
-                        }
+                        super::pp_forward_shard(
+                            &exec, &artifact, &params, &mut ep, &mut ledger, x,
+                        )?;
                         marks.push(ledger.now_s);
                     }
                 }
@@ -387,26 +366,9 @@ pub fn infer(cfg: &RunConfig, server: &ExecServer, batches: usize) -> Result<Inf
                     let params = TpRankParams::init(&cfg.model, cfg.p, rank, cfg.train.seed)?;
                     for b in 0..batches as u64 {
                         let (x, _) = cache.shard(b, rank)?;
-                        let mut y_shard = x;
-                        for l in 0..params.layers() {
-                            let gathered = ep.all_gather(y_shard, &mut ledger)?;
-                            let y_full = gathered.concat_shards_stacked()?;
-                            ep.charge_modeled(
-                                crate::simnet::Collective::Broadcast,
-                                cfg.model.n * cfg.train.batch,
-                                &mut ledger,
-                            );
-                            let r = super::exec_charged(
-                                &exec,
-                                &mut ledger,
-                                &artifact,
-                                "tp_fwd",
-                                &[&y_full, &params.weights[l], &params.biases[l]],
-                            )?;
-                            let [y_out, _]: [Tensor; 2] =
-                                super::rank_pp::unpack(r.outputs, "tp_fwd")?;
-                            y_shard = y_out;
-                        }
+                        super::tp_forward_shard(
+                            &exec, &artifact, &params, &mut ep, &mut ledger, x, true,
+                        )?;
                         marks.push(ledger.now_s);
                     }
                 }
@@ -461,38 +423,10 @@ pub fn pp_forward_once(
         let exec = server.handle();
         let x = x_shards[rank].clone();
         handles.push(thread::spawn(move || -> Result<Tensor> {
-            let mut w = PhantomRank::new(
-                PhantomRankParams::init(&cfg.model, cfg.p, rank, cfg.train.seed)?,
-                artifact,
-                cfg.train.optimizer,
-                exec,
-                ep,
-            );
-            let layers = w.params.layers();
-            let artifact = w.artifact.clone();
-            let mut y = x;
-            for l in 0..layers {
-                let r = super::exec_charged(
-                    &w.exec,
-                    &mut w.ledger,
-                    &artifact,
-                    "pp_fwd_local",
-                    &[&y, &w.params.locals[l], &w.params.compressors[l]],
-                )?;
-                let [z_loc, g]: [Tensor; 2] = super::rank_pp::unpack(r.outputs, "fwd")?;
-                let mut g_all = w.ep.all_gather(g, &mut w.ledger)?;
-                g_all.zero_slot(rank);
-                let r = super::exec_charged(
-                    &w.exec,
-                    &mut w.ledger,
-                    &artifact,
-                    "pp_fwd_combine",
-                    &[&z_loc, &g_all, &w.params.decompressors[l], &w.params.biases[l]],
-                )?;
-                let [y_out, _z]: [Tensor; 2] = super::rank_pp::unpack(r.outputs, "fwd")?;
-                y = y_out;
-            }
-            Ok(y)
+            let params = PhantomRankParams::init(&cfg.model, cfg.p, rank, cfg.train.seed)?;
+            let mut ep = ep;
+            let mut ledger = crate::energy::EnergyLedger::new();
+            super::pp_forward_shard(&exec, &artifact, &params, &mut ep, &mut ledger, x)
         }));
     }
     let mut shards = Vec::new();

@@ -39,8 +39,12 @@ pub mod rank_tp;
 
 pub use driver::{train, RankReport, TrainReport};
 
+use crate::comm::Endpoint;
 use crate::energy::{Activity, EnergyLedger};
+use crate::model::{PhantomRankParams, TpRankParams};
 use crate::runtime::{ExecHandle, ExecReply};
+use crate::simnet::Collective;
+use crate::tensor::Tensor;
 use anyhow::Result;
 
 /// Shared helper: execute a compute segment and charge its wall time to the
@@ -56,6 +60,81 @@ pub(crate) fn exec_charged(
     let reply = exec.execute(artifact, entry, inputs)?;
     ledger.advance(reply.wall_s, Activity::Compute);
     Ok(reply)
+}
+
+/// One phantom-parallel forward pass over this rank's column shard: the
+/// training schedule's forward phases only (pp_fwd_local → All-Gather →
+/// zero own slot → pp_fwd_combine, per layer). Shared by `driver::infer`,
+/// `driver::pp_forward_once`, and the persistent serving pool
+/// (`serve::pool`), so every forward consumer drives the identical
+/// collective schedule and energy accounting.
+pub fn pp_forward_shard(
+    exec: &ExecHandle,
+    artifact: &str,
+    params: &PhantomRankParams,
+    ep: &mut Endpoint,
+    ledger: &mut EnergyLedger,
+    x_shard: Tensor,
+) -> Result<Tensor> {
+    let mut y = x_shard;
+    for l in 0..params.layers() {
+        let r = exec_charged(
+            exec,
+            ledger,
+            artifact,
+            "pp_fwd_local",
+            &[&y, &params.locals[l], &params.compressors[l]],
+        )?;
+        let [z_loc, g]: [Tensor; 2] = rank_pp::unpack(r.outputs, "pp_fwd_local")?;
+        // The ONLY forward collective (paper Table II, PP row).
+        let mut g_all = ep.all_gather(g, ledger)?;
+        g_all.zero_slot(params.rank);
+        let r = exec_charged(
+            exec,
+            ledger,
+            artifact,
+            "pp_fwd_combine",
+            &[&z_loc, &g_all, &params.decompressors[l], &params.biases[l]],
+        )?;
+        let [y_out, _z]: [Tensor; 2] = rank_pp::unpack(r.outputs, "pp_fwd_combine")?;
+        y = y_out;
+    }
+    Ok(y)
+}
+
+/// One tensor-parallel forward pass over this rank's column shard
+/// (All-Gather → optional paper-schedule Broadcast charge → tp_fwd, per
+/// layer). `paper_schedule` charges the Broadcast of the full n·batch
+/// activation the paper's TP pipeline issues (Table II).
+pub fn tp_forward_shard(
+    exec: &ExecHandle,
+    artifact: &str,
+    params: &TpRankParams,
+    ep: &mut Endpoint,
+    ledger: &mut EnergyLedger,
+    x_shard: Tensor,
+    paper_schedule: bool,
+) -> Result<Tensor> {
+    let n = params.m * params.p;
+    let mut y_shard = x_shard;
+    for l in 0..params.layers() {
+        let batch = y_shard.shape()[0];
+        let gathered = ep.all_gather(y_shard, ledger)?;
+        let y_full = gathered.concat_shards_stacked()?;
+        if paper_schedule {
+            ep.charge_modeled(Collective::Broadcast, n * batch, ledger);
+        }
+        let r = exec_charged(
+            exec,
+            ledger,
+            artifact,
+            "tp_fwd",
+            &[&y_full, &params.weights[l], &params.biases[l]],
+        )?;
+        let [y_out, _z]: [Tensor; 2] = rank_pp::unpack(r.outputs, "tp_fwd")?;
+        y_shard = y_out;
+    }
+    Ok(y_shard)
 }
 
 /// Control-plane messages between ranks and the leader. The loss report /

@@ -131,6 +131,28 @@ impl EnergyLedger {
         e
     }
 
+    /// Merge the recorded intervals into one aggregate interval per
+    /// activity. Totals (`busy_s`/`comm_s`/`idle_s`), the clock, and
+    /// `energy_j` are preserved exactly; fine-grained windowed queries
+    /// (`energy_j_between`) become approximate past the compaction point.
+    /// Long-lived serving ranks call this per batch so their ledgers stay
+    /// O(1) instead of growing with every kernel and collective.
+    pub fn compact(&mut self) {
+        let (busy, comm, idle) = (self.busy_s(), self.comm_s(), self.idle_s());
+        self.intervals.clear();
+        let mut t = self.now_s - (busy + comm + idle);
+        for (dur, activity) in [
+            (busy, Activity::Compute),
+            (comm, Activity::Communicate),
+            (idle, Activity::Idle),
+        ] {
+            if dur > 0.0 {
+                self.intervals.push(Interval { start_s: t, end_s: t + dur, activity });
+                t += dur;
+            }
+        }
+    }
+
     /// Merge another rank's ledger total into a cluster summary.
     pub fn summary(&self) -> LedgerSummary {
         LedgerSummary {
@@ -260,6 +282,30 @@ mod tests {
         let mut l = EnergyLedger::new();
         l.advance(0.0, Activity::Compute);
         assert!(l.intervals().is_empty());
+    }
+
+    #[test]
+    fn compact_preserves_totals_clock_and_energy() {
+        let mut l = EnergyLedger::new();
+        l.advance(0.5, Activity::Compute);
+        l.advance(0.25, Activity::Communicate);
+        l.sync_to(1.0);
+        l.advance(0.5, Activity::Compute);
+        let m = PowerModel::frontier();
+        let (busy, comm, idle, now, e) =
+            (l.busy_s(), l.comm_s(), l.idle_s(), l.now_s, l.energy_j(&m));
+        l.compact();
+        assert!(l.intervals().len() <= 3);
+        assert_eq!(l.busy_s(), busy);
+        assert_eq!(l.comm_s(), comm);
+        assert_eq!(l.idle_s(), idle);
+        assert_eq!(l.now_s, now);
+        assert!((l.energy_j(&m) - e).abs() < 1e-12);
+        // Compaction is idempotent and keeps accepting new intervals.
+        l.compact();
+        l.advance(1.0, Activity::Idle);
+        assert_eq!(l.idle_s(), idle + 1.0);
+        assert_eq!(l.now_s, now + 1.0);
     }
 
     #[test]

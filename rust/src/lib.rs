@@ -29,6 +29,7 @@ pub mod experiments;
 pub mod model;
 pub mod perfmodel;
 pub mod runtime;
+pub mod serve;
 pub mod simnet;
 pub mod tensor;
 pub mod train;

@@ -9,7 +9,7 @@
 use anyhow::{bail, Result};
 
 use phantom::cli::{Args, USAGE};
-use phantom::config::{preset, BackendKind, OptimizerConfig, Parallelism};
+use phantom::config::{preset, BackendKind, OptimizerConfig, Parallelism, ServeConfig};
 use phantom::coordinator;
 use phantom::experiments;
 use phantom::perfmodel::{self, GemmModel, Workload};
@@ -31,6 +31,7 @@ fn run(argv: Vec<String>) -> Result<()> {
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     match cmd {
         "train" => cmd_train(&args),
+        "serve" => cmd_serve(&args),
         "experiment" => cmd_experiment(&args),
         "predict" => cmd_predict(&args),
         "inspect" => cmd_inspect(&args),
@@ -107,6 +108,109 @@ fn cmd_train(args: &Args) -> Result<()> {
         std::fs::write(path, report_json(&report).pretty())?;
         eprintln!("wrote {path}");
     }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    args.check_known(&[
+        "preset",
+        "mode",
+        "backend",
+        "queries",
+        "rate",
+        "max-batch",
+        "linger-ms",
+        "queue-depth",
+        "open-loop",
+        "seed",
+        "out",
+    ])?;
+    let preset_name = args.opt("preset").unwrap_or("small");
+    let modes: Vec<Parallelism> = match args.opt("mode").unwrap_or("both") {
+        "both" => vec![Parallelism::Phantom, Parallelism::Tensor],
+        m => vec![Parallelism::parse(m)?],
+    };
+    let backend = BackendKind::parse(args.opt("backend").unwrap_or("native"))?;
+    let open_loop = args.flag("open-loop");
+
+    let mut table = Table::new(
+        &format!("Serving — preset {preset_name}, dynamic batching"),
+        &[
+            "mode",
+            "batches",
+            "mean batch",
+            "p50 latency",
+            "p95 latency",
+            "throughput (q/s)",
+            "energy / 1k queries",
+            "shed",
+            "blocked",
+        ],
+    );
+    let mut reports = Vec::new();
+    for mode in modes {
+        let mut cfg = preset(preset_name, mode)?;
+        cfg.backend = backend;
+        let server = ExecServer::for_run(&cfg)?;
+        let max_batch = args.opt_parse::<usize>("max-batch")?.unwrap_or(cfg.train.batch);
+        let scfg = ServeConfig {
+            queue_depth: args.opt_parse::<usize>("queue-depth")?.unwrap_or(4 * max_batch),
+            max_batch,
+            linger_s: args.opt_parse::<f64>("linger-ms")?.unwrap_or(2.0) * 1e-3,
+            mode,
+        };
+        let defaults = phantom::serve::LoadGenConfig::default();
+        let lcfg = phantom::serve::LoadGenConfig {
+            queries: args.opt_parse::<usize>("queries")?.unwrap_or(defaults.queries),
+            rate_qps: args.opt_parse::<f64>("rate")?.unwrap_or(defaults.rate_qps),
+            seed: args.opt_parse::<u64>("seed")?.unwrap_or(defaults.seed),
+            open_loop,
+        };
+        eprintln!(
+            "serving {} / {} ({} queries @ {} q/s, batch<={}, linger {:.1} ms)...",
+            preset_name,
+            mode.name(),
+            lcfg.queries,
+            lcfg.rate_qps,
+            scfg.max_batch,
+            scfg.linger_s * 1e3
+        );
+        let r = phantom::serve::run_load(&cfg, &scfg, &lcfg, &server)?;
+        if r.misordered > 0 {
+            bail!("{} responses arrived out of order (serve bug)", r.misordered);
+        }
+        if !open_loop && r.completed != lcfg.queries {
+            bail!(
+                "dropped {} of {} queries despite blocking backpressure",
+                lcfg.queries - r.completed,
+                lcfg.queries
+            );
+        }
+        table.row(vec![
+            mode.name().to_uppercase(),
+            r.batches.to_string(),
+            format!("{:.1}", r.mean_batch),
+            fmt_secs(r.latency.p50),
+            fmt_secs(r.latency.p95),
+            format!("{:.0}", r.throughput_qps),
+            fmt_joules(r.energy_per_kq_j),
+            r.rejected.to_string(),
+            r.blocked.to_string(),
+        ]);
+        reports.push(r);
+    }
+    print!("{}", table.markdown());
+
+    let records = phantom::serve::combined_records(&reports);
+    if let Some((_, ratio)) = records.iter().find(|(k, _)| k == "pp_over_tp_energy") {
+        println!(
+            "\nPP serves at {:.1}% of TP's energy per 1k queries (Table II traffic savings).",
+            ratio * 100.0
+        );
+    }
+    let out = args.opt("out").unwrap_or("BENCH_serve.json");
+    phantom::serve::write_records_json(std::path::Path::new(out), &records)?;
+    eprintln!("wrote {out}");
     Ok(())
 }
 

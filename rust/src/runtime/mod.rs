@@ -47,6 +47,12 @@ pub struct ExecReply {
 ///    otherwise isolated from cross-rank CPU contention, and
 /// 3. compute exactly the entry-point semantics of
 ///    python/compile/kernels/ref.py.
+///
+/// Entry points are batch-size polymorphic: shape checks are structural
+/// (consistency among the inputs), with only the loss scale baked in from
+/// the manifest config. The serving micro-batcher (serve/batcher.rs)
+/// relies on this to dispatch partial batches of any size up to
+/// `max_batch` through the same backend the fixed-batch trainer uses.
 pub trait Backend: Send + Sync {
     /// Execute `entry` of artifact-config `config`; blocks until done.
     fn execute(&self, config: &str, entry: &str, inputs: &[&Tensor]) -> Result<ExecReply>;

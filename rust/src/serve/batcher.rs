@@ -1,0 +1,270 @@
+//! Bounded admission queue + dynamic micro-batcher in front of the rank
+//! pool.
+//!
+//! Queries arrive with nondecreasing *virtual* timestamps (one open-loop
+//! client stream). The batcher coalesces queued queries into a forward
+//! batch under two rules (DESIGN.md §7):
+//!
+//! * **fill**: as soon as `max_batch` queries are queued and the pool is
+//!   free, dispatch a full batch (no lingering);
+//! * **linger**: otherwise a forming batch waits at most `linger_s` past
+//!   pool-ready for stragglers, then dispatches whatever arrived.
+//!
+//! The queue is bounded at `queue_depth` *in virtual time*: a query whose
+//! arrival finds `queue_depth` queries still waiting is either shed
+//! (`try_submit` → `Admission::Rejected`, the open-loop client walks away)
+//! or blocked (`submit_blocking`: the client stalls until a dispatch frees
+//! a slot, and is admitted at that instant — backpressure propagates to
+//! the arrival stream).
+//!
+//! Dispatch simulation is lazy: a batch is only executed once its virtual
+//! dispatch time is certain AND has been passed by the arrival frontier,
+//! so queue occupancy seen by admission control matches what a real
+//! concurrent queue would hold at that instant. Responses therefore come
+//! back in strict query-id order — misordering is structurally impossible
+//! and the load harness asserts it anyway.
+
+use std::collections::VecDeque;
+
+use anyhow::{bail, Result};
+
+use crate::config::{RunConfig, ServeConfig};
+use crate::runtime::ExecServer;
+use crate::tensor::Tensor;
+
+use super::pool::{PoolRankReport, RankPool};
+
+/// One served query's outcome.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: u64,
+    /// Effective admission time (after any backpressure blocking).
+    pub arrival_s: f64,
+    /// When its batch left the queue.
+    pub dispatch_s: f64,
+    /// When its batch completed (max rank clock).
+    pub done_s: f64,
+    /// Size of the batch it rode in.
+    pub batch_size: usize,
+    /// The output row [n].
+    pub y: Tensor,
+}
+
+impl Response {
+    pub fn latency_s(&self) -> f64 {
+        self.done_s - self.arrival_s
+    }
+}
+
+/// Admission verdict of `try_submit`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Admission {
+    Accepted(u64),
+    /// Queue full at the arrival instant: backpressure, query shed.
+    Rejected,
+}
+
+/// Counters the server keeps while running.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ServerStats {
+    pub admitted: u64,
+    pub rejected: u64,
+    /// Submissions that had to block for a queue slot.
+    pub blocked: u64,
+    pub batches: u64,
+    pub max_queue_seen: usize,
+    /// Sum of dispatched batch sizes (mean = / batches).
+    pub dispatched: u64,
+}
+
+struct Pending {
+    id: u64,
+    arrival_s: f64,
+    x: Tensor, // [n]
+}
+
+/// The serving front-end: admission queue + batcher + rank pool.
+pub struct Server {
+    pool: RankPool,
+    scfg: ServeConfig,
+    pending: VecDeque<Pending>,
+    completed: Vec<Response>,
+    next_id: u64,
+    last_arrival_s: f64,
+    pub stats: ServerStats,
+}
+
+impl Server {
+    pub fn start(run: &RunConfig, scfg: ServeConfig, exec: &ExecServer) -> Result<Server> {
+        let pool = RankPool::start(run, &scfg, exec)?;
+        Ok(Server {
+            pool,
+            scfg,
+            pending: VecDeque::new(),
+            completed: Vec::new(),
+            next_id: 0,
+            last_arrival_s: 0.0,
+            stats: ServerStats::default(),
+        })
+    }
+
+    pub fn n(&self) -> usize {
+        self.pool.n()
+    }
+
+    /// Open-loop submission at virtual time `arrival_s` (must be
+    /// nondecreasing across calls). Returns `Rejected` when the queue is
+    /// full at that instant.
+    pub fn try_submit(&mut self, arrival_s: f64, x: Tensor) -> Result<Admission> {
+        self.check_arrival(arrival_s, &x)?;
+        // Every observed arrival advances the frontier, rejected or not —
+        // a later submission must never precede a rejection it witnessed.
+        self.last_arrival_s = arrival_s;
+        self.advance_to(arrival_s)?;
+        if self.pending.len() >= self.scfg.queue_depth {
+            self.stats.rejected += 1;
+            return Ok(Admission::Rejected);
+        }
+        Ok(Admission::Accepted(self.enqueue(arrival_s, x)))
+    }
+
+    /// Closed-loop submission: when the queue is full, the client blocks
+    /// until a dispatch frees a slot and is admitted at that instant.
+    /// Returns (query id, effective arrival time). Subsequent submissions
+    /// must not precede the returned effective arrival.
+    pub fn submit_blocking(&mut self, arrival_s: f64, x: Tensor) -> Result<(u64, f64)> {
+        self.check_arrival(arrival_s, &x)?;
+        self.advance_to(arrival_s)?;
+        let mut effective_s = arrival_s;
+        let mut was_blocked = false;
+        while self.pending.len() >= self.scfg.queue_depth {
+            // The blocked client is the next event in the stream, so no
+            // other arrival can precede the freeing dispatch: force it.
+            let (dispatch_s, count) = self
+                .next_dispatch(f64::INFINITY)
+                .expect("a full queue always contains a dispatchable batch");
+            self.dispatch(dispatch_s, count)?;
+            effective_s = effective_s.max(dispatch_s);
+            was_blocked = true;
+        }
+        if was_blocked {
+            self.stats.blocked += 1;
+        }
+        self.last_arrival_s = effective_s;
+        Ok((self.enqueue(effective_s, x), effective_s))
+    }
+
+    /// Dispatch everything still queued (the arrival stream has ended).
+    pub fn drain(&mut self) -> Result<()> {
+        self.advance_to(f64::INFINITY)
+    }
+
+    /// Pop the responses completed so far, in query-id order.
+    pub fn take_responses(&mut self) -> Vec<Response> {
+        std::mem::take(&mut self.completed)
+    }
+
+    /// Drain, then shut the pool down. Returns any not-yet-taken responses
+    /// plus the final stats and per-rank accounting.
+    pub fn finish(mut self) -> Result<(Vec<Response>, ServerStats, Vec<PoolRankReport>)> {
+        self.drain()?;
+        let responses = self.take_responses();
+        let stats = self.stats;
+        let per_rank = self.pool.shutdown()?;
+        Ok((responses, stats, per_rank))
+    }
+
+    // -- internals ---------------------------------------------------------
+
+    fn check_arrival(&self, arrival_s: f64, x: &Tensor) -> Result<()> {
+        if !arrival_s.is_finite() || arrival_s < self.last_arrival_s {
+            bail!(
+                "arrivals must be finite and nondecreasing: got {arrival_s} after {}",
+                self.last_arrival_s
+            );
+        }
+        if x.shape() != &[self.pool.n()] {
+            bail!("query must be a [n]={} row, got {:?}", self.pool.n(), x.shape());
+        }
+        Ok(())
+    }
+
+    fn enqueue(&mut self, arrival_s: f64, x: Tensor) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.last_arrival_s = self.last_arrival_s.max(arrival_s);
+        self.pending.push_back(Pending { id, arrival_s, x });
+        self.stats.admitted += 1;
+        self.stats.max_queue_seen = self.stats.max_queue_seen.max(self.pending.len());
+        id
+    }
+
+    /// Decide the next batch, given that no arrival can occur before
+    /// `now_s`. Returns (dispatch time, query count), or None if the batch
+    /// composition or timing is not yet certain.
+    fn next_dispatch(&self, now_s: f64) -> Option<(f64, usize)> {
+        let head = self.pending.front()?;
+        let t_ready = self.pool.free_s().max(head.arrival_s);
+        let deadline = t_ready + self.scfg.linger_s;
+        if self.pending.len() >= self.scfg.max_batch {
+            let t_full = self.pending[self.scfg.max_batch - 1].arrival_s;
+            if t_full <= deadline {
+                // Fill rule: the batch is full before the linger expires.
+                let t = t_ready.max(t_full);
+                return if t <= now_s { Some((t, self.scfg.max_batch)) } else { None };
+            }
+            // The linger closes first; later-queued arrivals prove nothing
+            // more can join, so fall through to the linger rule (its
+            // composition is already certain regardless of `now_s`, but
+            // dispatch still waits for the frontier to pass the deadline).
+        }
+        if deadline <= now_s {
+            let count = self
+                .pending
+                .iter()
+                .take_while(|q| q.arrival_s <= deadline)
+                .count()
+                .min(self.scfg.max_batch);
+            debug_assert!(count >= 1, "head arrived by t_ready <= deadline");
+            return Some((deadline, count));
+        }
+        None
+    }
+
+    /// Dispatch every batch that is due before the arrival frontier.
+    fn advance_to(&mut self, now_s: f64) -> Result<()> {
+        while let Some((dispatch_s, count)) = self.next_dispatch(now_s) {
+            self.dispatch(dispatch_s, count)?;
+        }
+        Ok(())
+    }
+
+    fn dispatch(&mut self, dispatch_s: f64, count: usize) -> Result<()> {
+        debug_assert!(count >= 1 && count <= self.pending.len());
+        let n = self.pool.n();
+        let queries: Vec<Pending> = self.pending.drain(..count).collect();
+        let mut flat = Vec::with_capacity(count * n);
+        for q in &queries {
+            flat.extend_from_slice(q.x.data());
+        }
+        let x_full = Tensor::from_vec(&[count, n], flat)?;
+        let (y_full, done_s) = self.pool.execute(dispatch_s, &x_full)?;
+        if y_full.shape() != &[count, n] {
+            bail!("pool returned {:?}, want [{count}, {n}]", y_full.shape());
+        }
+        for (i, q) in queries.into_iter().enumerate() {
+            let y = Tensor::from_vec(&[n], y_full.data()[i * n..(i + 1) * n].to_vec())?;
+            self.completed.push(Response {
+                id: q.id,
+                arrival_s: q.arrival_s,
+                dispatch_s,
+                done_s,
+                batch_size: count,
+                y,
+            });
+        }
+        self.stats.batches += 1;
+        self.stats.dispatched += count as u64;
+        Ok(())
+    }
+}

@@ -1,0 +1,216 @@
+//! Open-loop load generator: Poisson-ish arrivals from the deterministic
+//! PRNG, driven through the serving front-end, summarized as the paper-style
+//! serving report (p50/p95 latency, throughput, energy per 1k queries).
+//!
+//! Determinism: the whole arrival stream (timestamps AND query payloads) is
+//! a pure function of `seed`, so PP and TP runs serve bit-identical traffic
+//! and the BENCH_serve.json trajectory is reproducible.
+
+use anyhow::{bail, Result};
+
+use crate::comm::CommStats;
+use crate::config::{Parallelism, RunConfig, ServeConfig};
+use crate::energy::PowerModel;
+use crate::runtime::ExecServer;
+use crate::tensor::Tensor;
+use crate::util::prng::Prng;
+use crate::util::stats::{summarize, Summary};
+
+use super::batcher::{Admission, Server, ServerStats};
+use super::pool::PoolRankReport;
+
+/// Load-generator knobs.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LoadGenConfig {
+    /// Total queries in the arrival stream.
+    pub queries: usize,
+    /// Mean arrival rate in queries per virtual second (exponential gaps).
+    pub rate_qps: f64,
+    /// Seed for arrival gaps and query payloads.
+    pub seed: u64,
+    /// Open loop: shed on a full queue (rejections count as drops).
+    /// Closed loop (default): block the stream until a slot frees.
+    pub open_loop: bool,
+}
+
+impl Default for LoadGenConfig {
+    fn default() -> Self {
+        LoadGenConfig { queries: 512, rate_qps: 2_000.0, seed: 0x5E47E, open_loop: false }
+    }
+}
+
+/// One serving run's summary — the row the CLI table and BENCH_serve.json
+/// are built from.
+#[derive(Debug, Clone)]
+pub struct LoadReport {
+    pub mode: Parallelism,
+    pub queries: usize,
+    /// Offered arrival rate of the run (LoadGenConfig::rate_qps).
+    pub rate_qps: f64,
+    /// Admission-queue bound of the run (ServeConfig::queue_depth).
+    pub queue_depth: usize,
+    pub completed: usize,
+    /// Shed by admission control (open-loop only; 0 under blocking).
+    pub rejected: usize,
+    /// Submissions that stalled on backpressure (blocking mode).
+    pub blocked: usize,
+    /// Responses whose id regressed — structurally 0, asserted anyway.
+    pub misordered: usize,
+    /// Latency (done - original arrival) over completed queries, seconds.
+    pub latency: Summary,
+    /// Completed queries per virtual second, over [0, last completion].
+    pub throughput_qps: f64,
+    /// Cluster energy over the whole run, Joules (all ranks, Eqn. 1).
+    pub energy_j: f64,
+    pub energy_per_kq_j: f64,
+    pub batches: u64,
+    pub mean_batch: f64,
+    pub max_queue_seen: usize,
+    /// Aggregated wire traffic across all rank endpoints.
+    pub comm: CommStats,
+    pub per_rank: Vec<PoolRankReport>,
+}
+
+/// Drive one full load-generator run through a fresh serving stack.
+pub fn run_load(
+    run: &RunConfig,
+    scfg: &ServeConfig,
+    lcfg: &LoadGenConfig,
+    exec: &ExecServer,
+) -> Result<LoadReport> {
+    if lcfg.queries == 0 || lcfg.rate_qps <= 0.0 || !lcfg.rate_qps.is_finite() {
+        bail!("load generator needs queries >= 1 and a positive finite rate");
+    }
+    let n = run.model.n;
+    let mut server = Server::start(run, *scfg, exec)?;
+
+    let mut rng = Prng::new(lcfg.seed);
+    let mut t = 0.0f64;
+    // Original (pre-backpressure) arrival time per query id, for honest
+    // client-side latency accounting.
+    let mut arrivals: Vec<f64> = Vec::with_capacity(lcfg.queries);
+    let mut last_effective = 0.0f64;
+    let mut responses = Vec::with_capacity(lcfg.queries);
+    for _ in 0..lcfg.queries {
+        // Exponential inter-arrival gap (1 - u in (0, 1] avoids ln 0).
+        t += -(1.0 - rng.next_f64()).ln() / lcfg.rate_qps;
+        let x = Tensor::randn(&[n], 1.0, &mut rng);
+        if lcfg.open_loop {
+            // Open loop: shed clients never delay the stream.
+            match server.try_submit(t, x)? {
+                Admission::Accepted(id) => {
+                    debug_assert_eq!(id as usize, arrivals.len());
+                    arrivals.push(t);
+                }
+                Admission::Rejected => {}
+            }
+        } else {
+            // A blocked stream delays every later arrival past the block.
+            let (id, effective) = server.submit_blocking(t.max(last_effective), x)?;
+            debug_assert_eq!(id as usize, arrivals.len());
+            arrivals.push(t); // latency is measured from the client's intent
+            last_effective = effective;
+        }
+        responses.append(&mut server.take_responses());
+    }
+    let (mut tail, stats, per_rank) = server.finish()?;
+    responses.append(&mut tail);
+
+    summarize_run(run, lcfg, scfg, stats, per_rank, &arrivals, responses)
+}
+
+fn summarize_run(
+    run: &RunConfig,
+    lcfg: &LoadGenConfig,
+    scfg: &ServeConfig,
+    stats: ServerStats,
+    per_rank: Vec<PoolRankReport>,
+    arrivals: &[f64],
+    responses: Vec<super::batcher::Response>,
+) -> Result<LoadReport> {
+    let completed = responses.len();
+    if completed == 0 {
+        bail!("no queries completed — the load generator shed everything");
+    }
+    let mut misordered = 0usize;
+    let mut last_id: Option<u64> = None;
+    let mut latencies = Vec::with_capacity(completed);
+    let mut last_done = 0.0f64;
+    for r in &responses {
+        if let Some(prev) = last_id {
+            if r.id <= prev {
+                misordered += 1;
+            }
+        }
+        last_id = Some(r.id);
+        let orig = arrivals.get(r.id as usize).copied().unwrap_or(r.arrival_s);
+        latencies.push(r.done_s - orig);
+        last_done = last_done.max(r.done_s);
+    }
+
+    let power: PowerModel = run.hardware.power;
+    let mut energy_j = 0.0;
+    let mut comm = CommStats::default();
+    for r in &per_rank {
+        energy_j += r.ledger.energy_j(&power);
+        comm.accumulate(&r.stats);
+    }
+
+    Ok(LoadReport {
+        mode: scfg.mode,
+        queries: lcfg.queries,
+        rate_qps: lcfg.rate_qps,
+        queue_depth: scfg.queue_depth,
+        completed,
+        rejected: stats.rejected as usize,
+        blocked: stats.blocked as usize,
+        misordered,
+        latency: summarize(&latencies),
+        throughput_qps: completed as f64 / last_done.max(1e-12),
+        energy_j,
+        energy_per_kq_j: energy_j / completed as f64 * 1_000.0,
+        batches: stats.batches,
+        mean_batch: stats.dispatched as f64 / stats.batches.max(1) as f64,
+        max_queue_seen: stats.max_queue_seen,
+        comm,
+        per_rank,
+    })
+}
+
+/// Combine per-mode records and, when both PP and TP reports are present,
+/// append the `pp_over_tp_energy` headline ratio. The single source of the
+/// BENCH_serve.json schema for the CLI, the serve bench, and the CI smoke
+/// test.
+pub fn combined_records(reports: &[LoadReport]) -> Vec<(String, f64)> {
+    let mut records: Vec<(String, f64)> = Vec::new();
+    for r in reports {
+        records.extend(bench_records(r));
+    }
+    let energy =
+        |mode: Parallelism| reports.iter().find(|r| r.mode == mode).map(|r| r.energy_per_kq_j);
+    if let (Some(pp), Some(tp)) = (energy(Parallelism::Phantom), energy(Parallelism::Tensor)) {
+        records.push(("pp_over_tp_energy".to_string(), pp / tp));
+    }
+    records
+}
+
+/// Flat (key, value) records for one mode's run, prefixed by the mode name
+/// ("pp_p50_latency_s", ...).
+pub fn bench_records(r: &LoadReport) -> Vec<(String, f64)> {
+    let m = r.mode.name();
+    vec![
+        (format!("{m}_queries"), r.queries as f64),
+        (format!("{m}_rate_qps"), r.rate_qps),
+        (format!("{m}_queue_depth"), r.queue_depth as f64),
+        (format!("{m}_completed"), r.completed as f64),
+        (format!("{m}_rejected"), r.rejected as f64),
+        (format!("{m}_misordered"), r.misordered as f64),
+        (format!("{m}_p50_latency_s"), r.latency.p50),
+        (format!("{m}_p95_latency_s"), r.latency.p95),
+        (format!("{m}_throughput_qps"), r.throughput_qps),
+        (format!("{m}_energy_per_kq_j"), r.energy_per_kq_j),
+        (format!("{m}_batches"), r.batches as f64),
+        (format!("{m}_mean_batch"), r.mean_batch),
+        (format!("{m}_floats_moved"), r.comm.floats_moved as f64),
+    ]
+}

@@ -1,0 +1,175 @@
+//! Persistent phantom-parallel serving subsystem (DESIGN.md §7): the
+//! "inferencing" half of the paper's title as a long-running system rather
+//! than a one-shot example.
+//!
+//! Three layers:
+//!
+//! * `pool`    — one long-lived thread per rank holding its weight shards
+//!   and `Fabric` endpoint across requests; ranks outlive any single
+//!   pipeline invocation and idle (static draw B) between batches.
+//! * `batcher` — bounded admission queue with backpressure plus a dynamic
+//!   micro-batcher (fill up to `max_batch`, or linger `linger_s` past
+//!   pool-ready, whichever closes the batch first).
+//! * `loadgen` — open-loop Poisson-ish load harness over the deterministic
+//!   PRNG; reports p50/p95 latency, throughput and energy per 1k queries,
+//!   and emits the BENCH_serve.json perf-trajectory records.
+//!
+//! PP's forward path saves the same All-Gather traffic per query as per
+//! training step (paper Table II), so the serving comparison mirrors the
+//! training one: same fabric, same energy ledger, same Eqn. 26 wire model.
+
+pub mod batcher;
+pub mod loadgen;
+pub mod pool;
+
+pub use batcher::{Admission, Response, Server, ServerStats};
+pub use loadgen::{bench_records, combined_records, run_load, LoadGenConfig, LoadReport};
+pub use pool::{PoolRankReport, RankPool};
+
+use anyhow::{Context, Result};
+
+/// Write flat (key, value) records as the BENCH_serve.json trajectory file.
+/// Thin Result-typed wrapper over the shared perf-record serializer
+/// (util::json::write_records_json).
+pub fn write_records_json(path: &std::path::Path, records: &[(String, f64)]) -> Result<()> {
+    crate::util::json::write_records_json(path, records)
+        .with_context(|| format!("writing {}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{preset, Parallelism, ServeConfig};
+    use crate::runtime::ExecServer;
+    use crate::tensor::Tensor;
+    use crate::util::prng::Prng;
+
+    fn tiny_cfg() -> (crate::config::RunConfig, ExecServer) {
+        let cfg = preset("tiny_p2", Parallelism::Phantom).unwrap();
+        let server = ExecServer::for_run(&cfg).unwrap();
+        (cfg, server)
+    }
+
+    #[test]
+    fn fill_and_linger_rules_batch_deterministically() {
+        let (cfg, exec) = tiny_cfg();
+        let scfg = ServeConfig {
+            queue_depth: 8,
+            max_batch: 4,
+            linger_s: 1e-3,
+            mode: Parallelism::Phantom,
+        };
+        let mut server = Server::start(&cfg, scfg, &exec).unwrap();
+        let mut rng = Prng::new(7);
+        let n = server.n();
+
+        // Four queries in a tight burst: the fill rule closes the batch at
+        // the fourth arrival (1e-4 * 4), not at the linger deadline.
+        for i in 1..=4u64 {
+            let x = Tensor::randn(&[n], 1.0, &mut rng);
+            let a = server.try_submit(1e-4 * i as f64, x).unwrap();
+            assert!(matches!(a, Admission::Accepted(_)));
+        }
+        // A straggler far in the future flushes the first batch...
+        let x = Tensor::randn(&[n], 1.0, &mut rng);
+        server.try_submit(10.0, x).unwrap();
+        let first: Vec<Response> = server.take_responses();
+        assert_eq!(first.len(), 4);
+        for (i, r) in first.iter().enumerate() {
+            assert_eq!(r.id, i as u64);
+            assert_eq!(r.batch_size, 4);
+            assert!((r.dispatch_s - 4e-4).abs() < 1e-12, "fill rule: {}", r.dispatch_s);
+            assert!(r.done_s > r.dispatch_s);
+            assert!(r.latency_s() > 0.0);
+        }
+        // ...and itself dispatches alone at its linger deadline on drain.
+        let (tail, stats, per_rank) = server.finish().unwrap();
+        assert_eq!(tail.len(), 1);
+        assert_eq!(tail[0].id, 4);
+        assert_eq!(tail[0].batch_size, 1);
+        assert!(
+            (tail[0].dispatch_s - 10.001).abs() < 1e-9,
+            "linger rule: {}",
+            tail[0].dispatch_s
+        );
+        assert_eq!(stats.batches, 2);
+        assert_eq!(stats.dispatched, 5);
+        assert_eq!(stats.rejected, 0);
+        assert_eq!(per_rank.len(), cfg.p);
+        for r in &per_rank {
+            // Ranks idled between the two widely spaced batches.
+            assert!(r.ledger.idle_s > 9.0, "rank {} idle {}", r.rank, r.ledger.idle_s);
+            assert!(r.stats.all_gathers > 0);
+        }
+    }
+
+    #[test]
+    fn burst_overload_sheds_open_loop_and_blocks_closed_loop() {
+        let (cfg, exec) = tiny_cfg();
+        let scfg = ServeConfig {
+            queue_depth: 4,
+            max_batch: 4,
+            linger_s: 1e-3,
+            mode: Parallelism::Phantom,
+        };
+        // 64 queries arriving essentially at once (rate 1e12 qps): far more
+        // than one batch can absorb before the pool goes busy.
+        let lcfg = LoadGenConfig { queries: 64, rate_qps: 1e12, seed: 42, open_loop: true };
+        let shed = run_load(&cfg, &scfg, &lcfg, &exec).unwrap();
+        assert!(shed.rejected > 0, "open loop must shed under burst overload");
+        assert_eq!(shed.completed + shed.rejected, 64);
+        assert_eq!(shed.misordered, 0);
+
+        let lcfg = LoadGenConfig { open_loop: false, ..lcfg };
+        let blocked = run_load(&cfg, &scfg, &lcfg, &exec).unwrap();
+        assert_eq!(blocked.completed, 64, "blocking backpressure drops nothing");
+        assert_eq!(blocked.rejected, 0);
+        assert!(blocked.blocked > 0, "the stream must have stalled at least once");
+        assert_eq!(blocked.misordered, 0);
+        assert!(blocked.latency.p95 >= blocked.latency.p50);
+        assert!(blocked.energy_j > 0.0);
+    }
+
+    #[test]
+    fn rejection_advances_the_arrival_frontier() {
+        let (cfg, exec) = tiny_cfg();
+        let scfg = ServeConfig {
+            queue_depth: 1,
+            max_batch: 1,
+            linger_s: 2e-3,
+            mode: Parallelism::Phantom,
+        };
+        let mut server = Server::start(&cfg, scfg, &exec).unwrap();
+        let n = server.n();
+        let mut rng = Prng::new(11);
+        let mut q = || Tensor::randn(&[n], 1.0, &mut rng);
+        // q1 queues; q2's arrival dispatches q1 and queues itself; q3 finds
+        // the pool busy (virtual service >> the 1 us arrival gaps) with the
+        // one-slot queue held by q2 -> rejected.
+        assert!(matches!(server.try_submit(1.0, q()).unwrap(), Admission::Accepted(_)));
+        assert!(matches!(server.try_submit(1.000001, q()).unwrap(), Admission::Accepted(_)));
+        assert!(matches!(server.try_submit(1.000002, q()).unwrap(), Admission::Rejected));
+        // The rejected arrival still advanced the frontier: time cannot
+        // rewind behind an observed (even shed) arrival.
+        assert!(server.try_submit(1.0000015, q()).is_err());
+        let (resp, stats, _) = server.finish().unwrap();
+        assert_eq!(resp.len(), 2);
+        assert_eq!(stats.rejected, 1);
+    }
+
+    #[test]
+    fn submissions_must_be_monotone_and_well_shaped() {
+        let (cfg, exec) = tiny_cfg();
+        let mut server = Server::start(&cfg, ServeConfig::default(), &exec).unwrap();
+        let n = server.n();
+        let mut rng = Prng::new(3);
+        server.try_submit(1.0, Tensor::randn(&[n], 1.0, &mut rng)).unwrap();
+        // time going backwards is a caller bug
+        assert!(server.try_submit(0.5, Tensor::randn(&[n], 1.0, &mut rng)).is_err());
+        // wrong query shape
+        assert!(server.try_submit(2.0, Tensor::randn(&[n + 1], 1.0, &mut rng)).is_err());
+        assert!(server.try_submit(2.0, Tensor::randn(&[1, n], 1.0, &mut rng)).is_err());
+        let (resp, _, _) = server.finish().unwrap();
+        assert_eq!(resp.len(), 1);
+    }
+}

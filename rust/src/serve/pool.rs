@@ -1,0 +1,251 @@
+//! Persistent rank worker pool: one long-lived thread per rank, holding its
+//! weight shards and its `Fabric` endpoint across requests.
+//!
+//! This is the first subsystem where ranks outlive a single pipeline
+//! invocation (DESIGN.md §7): `RankPool::start` materializes parameters and
+//! endpoints once; every dispatched batch reuses them. Between batches each
+//! rank's virtual clock idles (`sync_to(dispatch_s)` charges the gap at the
+//! static draw B), so serving energy accounts for the duty cycle, not just
+//! the busy bursts.
+
+use std::sync::mpsc;
+use std::thread;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::comm::{CommStats, Fabric};
+use crate::config::{Parallelism, RunConfig, ServeConfig};
+use crate::coordinator::{pp_forward_shard, tp_forward_shard};
+use crate::energy::{EnergyLedger, LedgerSummary};
+use crate::model::{PhantomRankParams, TpRankParams};
+use crate::runtime::ExecServer;
+use crate::tensor::Tensor;
+
+struct Job {
+    seq: u64,
+    /// Virtual time at which the batch leaves the queue; each rank idles up
+    /// to this instant before computing.
+    dispatch_s: f64,
+    x_shard: Tensor,
+}
+
+struct Done {
+    seq: u64,
+    rank: usize,
+    y_shard: Tensor,
+    now_s: f64,
+}
+
+/// Final accounting for one pool rank, returned at shutdown.
+#[derive(Debug, Clone)]
+pub struct PoolRankReport {
+    pub rank: usize,
+    pub ledger: LedgerSummary,
+    pub stats: CommStats,
+}
+
+/// The long-lived worker pool. Batches go in via `execute`; per-rank
+/// ledgers come out via `shutdown`.
+pub struct RankPool {
+    p: usize,
+    n: usize,
+    mode: Parallelism,
+    job_txs: Vec<mpsc::Sender<Job>>,
+    done_rx: mpsc::Receiver<Result<Done>>,
+    handles: Vec<thread::JoinHandle<PoolRankReport>>,
+    next_seq: u64,
+    free_s: f64,
+}
+
+impl RankPool {
+    /// Spawn the p rank threads. `scfg.mode` selects the serving pipeline;
+    /// `run` supplies geometry, seed, and hardware. Each rank initializes
+    /// its parameter shards deterministically from (seed, mode, rank) —
+    /// identical to the training-side initialization.
+    pub fn start(run: &RunConfig, scfg: &ServeConfig, exec: &ExecServer) -> Result<RankPool> {
+        run.validate()?;
+        scfg.validate()?;
+        let artifact = run
+            .artifact
+            .clone()
+            .ok_or_else(|| anyhow!("serving needs an artifact config name"))?;
+        let mcfg = exec.manifest.config(&artifact)?;
+        if mcfg.p != run.p || mcfg.n != run.model.n {
+            bail!(
+                "artifact '{}' geometry (p={}, n={}) does not match serve run (p={}, n={})",
+                artifact,
+                mcfg.p,
+                mcfg.n,
+                run.p,
+                run.model.n
+            );
+        }
+
+        let p = run.p;
+        let endpoints = Fabric::new(p, run.hardware.net);
+        let (done_tx, done_rx) = mpsc::channel::<Result<Done>>();
+        let mut job_txs = Vec::with_capacity(p);
+        let mut handles = Vec::with_capacity(p);
+        for (rank, ep) in endpoints.into_iter().enumerate() {
+            let (job_tx, job_rx) = mpsc::channel::<Job>();
+            job_txs.push(job_tx);
+            let done_tx = done_tx.clone();
+            let handle = exec.handle();
+            let artifact = artifact.clone();
+            let model = run.model;
+            let seed = run.train.seed;
+            let mode = scfg.mode;
+            handles.push(
+                thread::Builder::new()
+                    .name(format!("serve-rank-{rank}"))
+                    .spawn(move || {
+                        rank_loop(rank, p, mode, model, seed, artifact, handle, ep, job_rx, done_tx)
+                    })
+                    .context("spawning serve rank thread")?,
+            );
+        }
+        drop(done_tx);
+
+        Ok(RankPool {
+            p,
+            n: run.model.n,
+            mode: scfg.mode,
+            job_txs,
+            done_rx,
+            handles,
+            next_seq: 0,
+            free_s: 0.0,
+        })
+    }
+
+    /// Virtual time at which the pool finished its last batch (0 before the
+    /// first dispatch). The batcher never dispatches earlier than this.
+    pub fn free_s(&self) -> f64 {
+        self.free_s
+    }
+
+    pub fn p(&self) -> usize {
+        self.p
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn mode(&self) -> Parallelism {
+        self.mode
+    }
+
+    /// Run one batched forward pass at virtual time `dispatch_s` over
+    /// `x_full` [B, n]. Blocks until every rank finishes; returns the
+    /// assembled output [B, n] and the batch completion time (max rank
+    /// clock).
+    pub fn execute(&mut self, dispatch_s: f64, x_full: &Tensor) -> Result<(Tensor, f64)> {
+        if dispatch_s < self.free_s {
+            bail!(
+                "dispatch at t={dispatch_s} precedes pool-free time {} (batcher bug)",
+                self.free_s
+            );
+        }
+        let shards = x_full.col_shards(self.p)?;
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        for (tx, shard) in self.job_txs.iter().zip(shards) {
+            tx.send(Job { seq, dispatch_s, x_shard: shard })
+                .map_err(|_| anyhow!("a serve rank died"))?;
+        }
+        let mut outs: Vec<Option<Tensor>> = (0..self.p).map(|_| None).collect();
+        let mut done_s = dispatch_s;
+        for _ in 0..self.p {
+            let d = self
+                .done_rx
+                .recv()
+                .map_err(|_| anyhow!("serve rank pool died mid-batch"))??;
+            if d.seq != seq {
+                bail!("out-of-sequence completion: got {} want {seq}", d.seq);
+            }
+            done_s = done_s.max(d.now_s);
+            outs[d.rank] = Some(d.y_shard);
+        }
+        let shards: Vec<Tensor> =
+            outs.into_iter().map(|o| o.expect("every rank reported")).collect();
+        let y_full = Tensor::from_col_shards(&shards)?;
+        self.free_s = done_s;
+        Ok((y_full, done_s))
+    }
+
+    /// Tear the pool down and collect per-rank ledgers/stats (rank order).
+    pub fn shutdown(self) -> Result<Vec<PoolRankReport>> {
+        let RankPool { job_txs, done_rx, handles, .. } = self;
+        drop(job_txs);
+        drop(done_rx);
+        let mut reports = Vec::with_capacity(handles.len());
+        for h in handles {
+            reports.push(h.join().map_err(|_| anyhow!("serve rank thread panicked"))?);
+        }
+        reports.sort_by_key(|r| r.rank);
+        Ok(reports)
+    }
+}
+
+enum Worker {
+    Pp(PhantomRankParams),
+    Tp(TpRankParams),
+}
+
+#[allow(clippy::too_many_arguments)]
+fn rank_loop(
+    rank: usize,
+    p: usize,
+    mode: Parallelism,
+    model: crate::config::ModelConfig,
+    seed: u64,
+    artifact: String,
+    exec: crate::runtime::ExecHandle,
+    mut ep: crate::comm::Endpoint,
+    job_rx: mpsc::Receiver<Job>,
+    done_tx: mpsc::Sender<Result<Done>>,
+) -> PoolRankReport {
+    let mut ledger = EnergyLedger::new();
+    let worker = match mode {
+        Parallelism::Phantom => PhantomRankParams::init(&model, p, rank, seed).map(Worker::Pp),
+        Parallelism::Tensor => TpRankParams::init(&model, p, rank, seed).map(Worker::Tp),
+    };
+    match worker {
+        Ok(worker) => {
+            while let Ok(job) = job_rx.recv() {
+                ledger.sync_to(job.dispatch_s);
+                let res = match &worker {
+                    Worker::Pp(params) => pp_forward_shard(
+                        &exec, &artifact, params, &mut ep, &mut ledger, job.x_shard,
+                    ),
+                    Worker::Tp(params) => tp_forward_shard(
+                        &exec, &artifact, params, &mut ep, &mut ledger, job.x_shard, true,
+                    ),
+                };
+                // Long-lived thread: keep the ledger O(1) across batches.
+                ledger.compact();
+                match res {
+                    Ok(y_shard) => {
+                        let done = Done { seq: job.seq, rank, y_shard, now_s: ledger.now_s };
+                        if done_tx.send(Ok(done)).is_err() {
+                            break; // leader gone: drain and report
+                        }
+                    }
+                    Err(e) => {
+                        // Wake peers blocked in the rendezvous promptly
+                        // instead of leaving them to the 60 s timeout.
+                        ep.poison();
+                        let _ = done_tx.send(Err(e.context(format!("serve rank {rank}"))));
+                        break;
+                    }
+                }
+            }
+        }
+        Err(e) => {
+            ep.poison();
+            let _ = done_tx.send(Err(e.context(format!("serve rank {rank} init"))));
+        }
+    }
+    PoolRankReport { rank, ledger: ledger.summary(), stats: ep.stats }
+}

@@ -206,6 +206,17 @@ fn write_escaped(out: &mut String, s: &str) {
     out.push('"');
 }
 
+/// Write flat (key, value) records as a pretty JSON object — the
+/// machine-readable perf-trajectory format (BENCH_*.json) that benches,
+/// tests and the CLI diff across PRs.
+pub fn write_records_json(
+    path: &std::path::Path,
+    records: &[(String, f64)],
+) -> Result<(), std::io::Error> {
+    let obj = Json::obj(records.iter().map(|(k, v)| (k.as_str(), Json::num(*v))).collect());
+    std::fs::write(path, obj.pretty())
+}
+
 /// Parse error with byte offset for diagnostics.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct JsonError {

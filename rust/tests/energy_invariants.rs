@@ -1,0 +1,112 @@
+//! Invariant tests for the energy ledger (ISSUE 2 hardening pass; Tripp et
+//! al. motivate validating energy bookkeeping with invariants rather than
+//! trusting it):
+//!
+//! * per-activity joules are non-negative for arbitrary ledgers,
+//! * the activity buckets partition virtual time (busy + comm + idle ==
+//!   now) and their energies sum to the reported total, also under any
+//!   [t0, t1) windowing,
+//! * on the quickstart preset, PP's communicate-energy never exceeds TP's
+//!   (the Table II traffic claim, measured end-to-end through training).
+
+use phantom::config::{preset, Parallelism};
+use phantom::coordinator;
+use phantom::energy::{Activity, EnergyLedger, PowerModel};
+use phantom::runtime::ExecServer;
+use phantom::util::proptest::{check, PropConfig};
+
+fn random_ledger(rng: &mut phantom::util::prng::Prng) -> EnergyLedger {
+    let mut led = EnergyLedger::new();
+    let steps = rng.int_in(1, 40);
+    for _ in 0..steps {
+        let dur = rng.next_f64() * 2.0;
+        match rng.int_in(0, 3) {
+            0 => led.advance(dur, Activity::Compute),
+            1 => led.advance(dur, Activity::Communicate),
+            2 => led.advance(dur, Activity::Idle),
+            _ => led.sync_to(led.now_s + dur * rng.next_f64()),
+        }
+    }
+    led
+}
+
+#[test]
+fn activity_buckets_partition_time_and_energy() {
+    let cfg = PropConfig { cases: 128, ..PropConfig::default() };
+    check("ledger bucket partition", cfg, |rng| {
+        let led = random_ledger(rng);
+        let model = PowerModel::frontier();
+
+        let (busy, comm, idle) = (led.busy_s(), led.comm_s(), led.idle_s());
+        if busy < 0.0 || comm < 0.0 || idle < 0.0 {
+            return Err(format!("negative bucket: busy={busy} comm={comm} idle={idle}"));
+        }
+        let total_s = busy + comm + idle;
+        if (total_s - led.now_s).abs() > 1e-9 * led.now_s.max(1.0) {
+            return Err(format!("buckets {total_s} != clock {}", led.now_s));
+        }
+
+        // Per-activity joules are non-negative and sum to the total.
+        let busy_j = model.busy_w * busy;
+        let comm_j = model.idle_w * comm;
+        let idle_j = model.idle_w * idle;
+        if busy_j < 0.0 || comm_j < 0.0 || idle_j < 0.0 {
+            return Err("negative per-activity energy".into());
+        }
+        let exact = led.energy_j(&model);
+        let summed = busy_j + comm_j + idle_j;
+        if (summed - exact).abs() > 1e-9 * exact.max(1.0) {
+            return Err(format!("bucket energies {summed} != energy_j {exact}"));
+        }
+
+        // Windowing partitions the total at any cut point.
+        let cut = led.now_s * rng.next_f64();
+        let left = led.energy_j_between(&model, 0.0, cut);
+        let right = led.energy_j_between(&model, cut, led.now_s);
+        if left < 0.0 || right < 0.0 {
+            return Err("negative windowed energy".into());
+        }
+        if (left + right - exact).abs() > 1e-9 * exact.max(1.0) {
+            return Err(format!("window split {left}+{right} != {exact}"));
+        }
+
+        // The summary must agree with the ledger it summarizes.
+        let s = led.summary();
+        if (s.energy_j(&model) - exact).abs() > 1e-9 * exact.max(1.0) {
+            return Err("summary energy diverges from ledger energy".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn quickstart_pp_communicate_energy_at_most_tp() {
+    let server = ExecServer::native();
+    let model = PowerModel::frontier();
+    let mut comm_energy = Vec::new();
+    let mut totals = Vec::new();
+    for mode in [Parallelism::Phantom, Parallelism::Tensor] {
+        let mut cfg = preset("quickstart", mode).unwrap();
+        cfg.train.max_iters = 6;
+        let report = coordinator::train(&cfg, &server).unwrap();
+        let comm_s: f64 = report.per_rank.iter().map(|r| r.ledger.comm_s).sum();
+        // Communication is charged at the static draw B (the paper folds
+        // it into the idle coefficient).
+        comm_energy.push(model.idle_w * comm_s);
+        totals.push(report.energy_total_j);
+        for r in &report.per_rank {
+            let bucket_sum = r.ledger.busy_s + r.ledger.comm_s + r.ledger.idle_s;
+            assert!(
+                (bucket_sum - r.ledger.end_s).abs() <= 1e-9 * r.ledger.end_s.max(1.0),
+                "rank {}: buckets {} != clock {}",
+                r.rank,
+                bucket_sum,
+                r.ledger.end_s
+            );
+            assert!(r.ledger.busy_s >= 0.0 && r.ledger.comm_s > 0.0 && r.ledger.idle_s >= 0.0);
+        }
+    }
+    let (pp, tp) = (comm_energy[0], comm_energy[1]);
+    assert!(pp <= tp, "PP communicate-energy {pp} J must be <= TP's {tp} J (Table II)");
+    assert!(totals.iter().all(|&e| e > 0.0));
+}

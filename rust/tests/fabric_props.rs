@@ -1,0 +1,192 @@
+//! Property tests for the collective fabric (ISSUE 2 hardening pass):
+//!
+//! * mis-sequenced collectives poison the exchange and error LOUDLY — the
+//!   whole suite runs in seconds, never a 60 s rendezvous hang, thanks to
+//!   `Fabric::with_timeout`;
+//! * virtual clocks advance monotonically through random collective
+//!   sequences and end aligned across ranks;
+//! * All-Gather followed by a 1/p-scaled Reduce-Scatter is the identity on
+//!   ragged (odd-sized, non-power-of-two) shard shapes.
+
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use phantom::comm::{Endpoint, Fabric};
+use phantom::energy::{Activity, EnergyLedger};
+use phantom::simnet::NetworkProfile;
+use phantom::tensor::Tensor;
+use phantom::util::proptest::{assert_close, check, PropConfig};
+
+/// Run one closure per rank on its own thread; returns per-rank results in
+/// rank order.
+fn run_ranks<T: Send + 'static>(
+    p: usize,
+    timeout: Duration,
+    f: impl Fn(Endpoint, EnergyLedger) -> T + Send + Sync + 'static,
+) -> Vec<T> {
+    let endpoints = Fabric::with_timeout(p, NetworkProfile::frontier(), timeout);
+    let f = Arc::new(f);
+    let handles: Vec<_> = endpoints
+        .into_iter()
+        .map(|ep| {
+            let f = f.clone();
+            thread::spawn(move || f(ep, EnergyLedger::new()))
+        })
+        .collect();
+    handles.into_iter().map(|h| h.join().expect("rank thread panicked")).collect()
+}
+
+#[test]
+fn mis_sequenced_collectives_error_loudly_not_hang() {
+    let t0 = Instant::now();
+    let cfg = PropConfig { cases: 8, ..PropConfig::default() };
+    check("collective mismatch poisons", cfg, |rng| {
+        let p = rng.int_in(2, 4) as usize;
+        // Rank `odd_rank` calls a different collective than its peers.
+        let odd_rank = rng.int_in(0, p as u64 - 1) as usize;
+        let swap = rng.int_in(0, 1) == 0;
+        let out = run_ranks(p, Duration::from_millis(250), move |mut ep, mut led| {
+            let t = Tensor::filled(&[2], 1.0);
+            let mine_odd = ep.rank == odd_rank;
+            let r = if mine_odd != swap {
+                ep.all_reduce(t, &mut led).map(|_| ())
+            } else {
+                ep.all_gather(t, &mut led).map(|_| ())
+            };
+            // After a poisoning, every later collective must fail fast too.
+            let after = ep.all_reduce(Tensor::filled(&[2], 1.0), &mut led);
+            (r, after.map(|_| ()))
+        });
+        if !out.iter().any(|(r, _)| r.is_err()) {
+            return Err("mismatch must surface as at least one error".into());
+        }
+        if let Some((i, _)) = out.iter().enumerate().find(|(_, (_, a))| a.is_ok()) {
+            return Err(format!("rank {i}: collective succeeded on a poisoned fabric"));
+        }
+        Ok(())
+    });
+    assert!(
+        t0.elapsed() < Duration::from_secs(30),
+        "mismatches must fail in milliseconds, not rendezvous-timeout hangs"
+    );
+}
+
+#[test]
+fn absent_peer_times_out_loudly_not_hang() {
+    let t0 = Instant::now();
+    // Rank 1 never shows up; rank 0 must get a timeout error, promptly.
+    let out = run_ranks(2, Duration::from_millis(200), |mut ep, mut led| {
+        if ep.rank == 0 {
+            ep.all_reduce(Tensor::filled(&[4], 1.0), &mut led).map(|_| ())
+        } else {
+            Ok(()) // deserter
+        }
+    });
+    assert!(out[0].is_err(), "the waiting rank must error, not hang");
+    let msg = format!("{:#}", out[0].as_ref().unwrap_err());
+    assert!(msg.contains("timeout"), "error should name the timeout: {msg}");
+    assert!(t0.elapsed() < Duration::from_secs(10));
+}
+
+#[test]
+fn virtual_clocks_monotone_and_aligned() {
+    let cfg = PropConfig { cases: 24, ..PropConfig::default() };
+    check("clock monotonicity", cfg, |rng| {
+        let p = rng.int_in(2, 5) as usize;
+        let rounds = rng.int_in(2, 7) as usize;
+        // Per-round op id, shape, and per-rank compute skew.
+        let plan: Vec<(u64, usize, usize, f64)> = (0..rounds)
+            .map(|_| {
+                (
+                    rng.int_in(0, 2),
+                    rng.int_in(1, 5) as usize,
+                    rng.int_in(1, 6) as usize,
+                    rng.next_f64() * 1e-3,
+                )
+            })
+            .collect();
+        let plan = Arc::new(plan);
+        let out = run_ranks(p, Duration::from_secs(60), move |mut ep, mut led| {
+            let mut clocks = vec![led.now_s];
+            for &(op, a, b, work) in plan.iter() {
+                led.advance(work * (ep.rank + 1) as f64, Activity::Compute);
+                match op {
+                    0 => {
+                        ep.all_gather(Tensor::filled(&[a, b], 1.0), &mut led).unwrap();
+                    }
+                    1 => {
+                        let mut shape = vec![ep.p];
+                        shape.extend_from_slice(&[a, b]);
+                        ep.reduce_scatter(Tensor::filled(&shape, 1.0), &mut led).unwrap();
+                    }
+                    _ => {
+                        ep.all_reduce(Tensor::filled(&[a, b], 1.0), &mut led).unwrap();
+                    }
+                }
+                clocks.push(led.now_s);
+            }
+            clocks
+        });
+        for (rank, clocks) in out.iter().enumerate() {
+            for w in clocks.windows(2) {
+                if w[1] < w[0] {
+                    return Err(format!("rank {rank}: clock regressed {} -> {}", w[0], w[1]));
+                }
+            }
+        }
+        // Synchronous collectives leave every rank at the same post-round
+        // clock (the max-arrival + wire-time rendezvous rule).
+        for round in 1..out[0].len() {
+            let t0 = out[0][round];
+            for (rank, clocks) in out.iter().enumerate() {
+                if (clocks[round] - t0).abs() > 1e-12 {
+                    return Err(format!(
+                        "round {round}: rank {rank} clock {} != rank 0 clock {t0}",
+                        clocks[round]
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn gather_scatter_roundtrip_is_identity_on_ragged_shapes() {
+    let cfg = PropConfig { cases: 24, ..PropConfig::default() };
+    check("all-gather/reduce-scatter round-trip", cfg, |rng| {
+        let p = rng.int_in(2, 6) as usize;
+        // Ragged: odd, non-power-of-two dims, sometimes degenerate width 1.
+        let shape = vec![
+            (2 * rng.int_in(0, 3) + 1) as usize,
+            (2 * rng.int_in(0, 6) + 1) as usize,
+        ];
+        let seed = rng.next_u64();
+        let shape_arc = Arc::new(shape);
+        let out = run_ranks(p, Duration::from_secs(60), move |mut ep, mut led| {
+            let mut r =
+                phantom::util::prng::Prng::new(seed ^ (ep.rank as u64).wrapping_mul(0x9E37));
+            let t = Tensor::randn(shape_arc.as_slice(), 1.0, &mut r);
+            let mut gathered = ep.all_gather(t.clone(), &mut led).unwrap();
+            // Every rank holds the identical [p, ...] stack; scaling by 1/p
+            // and reduce-scattering sums p copies of slot_j / p = slot_j,
+            // delivering rank j's original contribution back to rank j.
+            gathered.scale(1.0 / ep.p as f32);
+            let back = ep.reduce_scatter(gathered, &mut led).unwrap();
+            (t, back)
+        });
+        for (rank, (t, back)) in out.iter().enumerate() {
+            if back.shape() != t.shape() {
+                return Err(format!(
+                    "rank {rank}: round-trip shape {:?} != {:?}",
+                    back.shape(),
+                    t.shape()
+                ));
+            }
+            assert_close(back.data(), t.data(), 1e-5, 1e-6)
+                .map_err(|e| format!("rank {rank}: {e}"))?;
+        }
+        Ok(())
+    });
+}

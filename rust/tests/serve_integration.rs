@@ -1,0 +1,147 @@
+//! End-to-end serve-subsystem integration (DESIGN.md §7):
+//!
+//! * the persistent pool's batched PP forward agrees row-for-row with the
+//!   one-shot sharded forward (`pp_forward_once`) on the same weights,
+//! * responses come back in strict id order with sane timestamps,
+//! * TP serving is batching-invariant (outputs don't depend on how the
+//!   micro-batcher grouped the queries), and
+//! * the small-preset load run completes every query, with PP at or below
+//!   TP's energy per 1k queries — recorded to BENCH_serve.json so CI keeps
+//!   a serving perf trajectory per PR.
+
+use std::path::PathBuf;
+
+use phantom::config::{preset, Parallelism, ServeConfig};
+use phantom::coordinator::driver::pp_forward_once;
+use phantom::runtime::ExecServer;
+use phantom::serve::{combined_records, run_load, LoadGenConfig, Server};
+use phantom::tensor::Tensor;
+use phantom::util::prng::Prng;
+use phantom::util::proptest::assert_close;
+
+#[test]
+fn pool_pp_forward_matches_one_shot_and_orders_responses() {
+    let cfg = preset("quickstart", Parallelism::Phantom).unwrap();
+    let exec = ExecServer::for_run(&cfg).unwrap();
+    let n = cfg.model.n;
+    let queries = 24usize;
+
+    let mut rng = Prng::new(0xCAFE);
+    let rows: Vec<Tensor> = (0..queries).map(|_| Tensor::randn(&[n], 1.0, &mut rng)).collect();
+
+    let scfg = ServeConfig {
+        queue_depth: 32,
+        max_batch: 8,
+        linger_s: 1e-3,
+        mode: Parallelism::Phantom,
+    };
+    let mut server = Server::start(&cfg, scfg, &exec).unwrap();
+    for (i, row) in rows.iter().enumerate() {
+        // spaced arrivals: several dispatches of varying size
+        server.submit_blocking(1e-4 * (i + 1) as f64, row.clone()).unwrap();
+    }
+    let (responses, stats, per_rank) = server.finish().unwrap();
+    assert_eq!(responses.len(), queries);
+    assert!(stats.batches >= 3, "24 queries at max_batch 8 need >= 3 batches");
+
+    // Reference: the one-shot sharded forward over the same weights.
+    let mut flat = Vec::with_capacity(queries * n);
+    for row in &rows {
+        flat.extend_from_slice(row.data());
+    }
+    let x_full = Tensor::from_vec(&[queries, n], flat).unwrap();
+    let want = pp_forward_once(&cfg, &exec, &x_full).unwrap();
+
+    let mut prev_done = 0.0f64;
+    for (i, r) in responses.iter().enumerate() {
+        assert_eq!(r.id, i as u64, "responses must arrive in admission order");
+        assert!(r.arrival_s <= r.dispatch_s && r.dispatch_s < r.done_s);
+        assert!(r.done_s >= prev_done, "batch completions must not regress");
+        prev_done = r.done_s;
+        assert!(r.batch_size >= 1 && r.batch_size <= scfg.max_batch);
+        let want_row = &want.data()[i * n..(i + 1) * n];
+        assert_close(r.y.data(), want_row, 1e-4, 1e-5)
+            .unwrap_or_else(|e| panic!("query {i}: {e}"));
+    }
+
+    // Persistent ranks: one fabric, reused across every dispatch.
+    assert_eq!(per_rank.len(), cfg.p);
+    for rank in &per_rank {
+        assert_eq!(
+            rank.stats.all_gathers,
+            stats.batches * cfg.model.layers as u64,
+            "one All-Gather per layer per dispatched batch"
+        );
+    }
+}
+
+#[test]
+fn tp_serving_is_batching_invariant() {
+    let cfg = preset("quickstart", Parallelism::Tensor).unwrap();
+    let exec = ExecServer::for_run(&cfg).unwrap();
+    let n = cfg.model.n;
+    let queries = 12usize;
+    let mut rng = Prng::new(0xBEEF);
+    let rows: Vec<Tensor> = (0..queries).map(|_| Tensor::randn(&[n], 1.0, &mut rng)).collect();
+
+    let mut outputs: Vec<Vec<Tensor>> = Vec::new();
+    for max_batch in [1usize, 6] {
+        let scfg = ServeConfig {
+            queue_depth: 2 * queries,
+            max_batch,
+            linger_s: 5e-4,
+            mode: Parallelism::Tensor,
+        };
+        let mut server = Server::start(&cfg, scfg, &exec).unwrap();
+        for (i, row) in rows.iter().enumerate() {
+            server.submit_blocking(1e-5 * (i + 1) as f64, row.clone()).unwrap();
+        }
+        let (responses, _, _) = server.finish().unwrap();
+        assert_eq!(responses.len(), queries);
+        outputs.push(responses.into_iter().map(|r| r.y).collect());
+    }
+    for (i, (a, b)) in outputs[0].iter().zip(&outputs[1]).enumerate() {
+        assert_close(a.data(), b.data(), 1e-4, 1e-5)
+            .unwrap_or_else(|e| panic!("query {i} differs across batchings: {e}"));
+    }
+}
+
+#[test]
+fn small_preset_load_run_pp_beats_tp_energy_and_records_trajectory() {
+    let queries = 256usize;
+    let lcfg = LoadGenConfig { queries, rate_qps: 2_000.0, seed: 0x5E47E, open_loop: false };
+    let mut reports = Vec::new();
+    for mode in [Parallelism::Phantom, Parallelism::Tensor] {
+        let cfg = preset("small", mode).unwrap();
+        let exec = ExecServer::for_run(&cfg).unwrap();
+        let scfg = ServeConfig { mode, ..ServeConfig::default() };
+        let r = run_load(&cfg, &scfg, &lcfg, &exec).unwrap();
+        assert_eq!(r.completed, queries, "{}: blocking backpressure drops nothing", mode.name());
+        assert_eq!(r.misordered, 0, "{}: responses misordered", mode.name());
+        assert_eq!(r.rejected, 0);
+        assert!(r.latency.p50 > 0.0 && r.latency.p95 >= r.latency.p50);
+        assert!(r.throughput_qps > 0.0);
+        assert_eq!(r.queue_depth, scfg.queue_depth);
+        reports.push(r);
+    }
+    let records = combined_records(&reports);
+    let (pp, tp) = (reports[0].energy_per_kq_j, reports[1].energy_per_kq_j);
+    assert!(
+        pp <= tp,
+        "PP must serve at no more energy than TP per 1k queries: pp={pp} tp={tp}"
+    );
+    // PP moves strictly fewer floats on the wire per query (Table II).
+    assert!(
+        reports[0].comm.floats_moved < reports[1].comm.floats_moved,
+        "PP wire traffic {} must undercut TP's {}",
+        reports[0].comm.floats_moved,
+        reports[1].comm.floats_moved
+    );
+
+    let path = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../BENCH_serve.json");
+    phantom::serve::write_records_json(&path, &records).unwrap();
+    eprintln!(
+        "serve trajectory: pp {pp:.1} J/kq vs tp {tp:.1} J/kq -> {}",
+        path.display()
+    );
+}

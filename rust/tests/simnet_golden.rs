@@ -1,0 +1,91 @@
+//! Golden regression for the collective-model fit (paper Appendix, Eqn. 26
+//! / Table III): refitting the model on timings synthesized from the
+//! Table III constants must recover those constants, for all four
+//! collectives — exactly under zero noise, within tolerance under the
+//! multiplicative log-normal noise the fitting pipeline assumes.
+
+use phantom::simnet::{fit, synthesize_observations, Collective, NetworkProfile};
+use phantom::util::prng::Prng;
+
+#[test]
+fn refit_recovers_table3_constants_for_all_collectives() {
+    let profile = NetworkProfile::frontier();
+    for (i, collective) in Collective::ALL.iter().enumerate() {
+        let truth = *profile.model(*collective);
+
+        // Noiseless synthesis: the fit must be numerically exact.
+        let mut rng = Prng::new(0x7AB3 + i as u64);
+        let obs = synthesize_observations(&truth, 0.0, &mut rng);
+        let exact = fit(&obs).unwrap_or_else(|| panic!("{}: fit failed", collective.name()));
+        assert!(
+            (exact.model.c1 - truth.c1).abs() < 1e-6,
+            "{}: c1 {} vs {}",
+            collective.name(),
+            exact.model.c1,
+            truth.c1
+        );
+        assert!(
+            (exact.model.c2 - truth.c2).abs() < 1e-9,
+            "{}: c2 {} vs {}",
+            collective.name(),
+            exact.model.c2,
+            truth.c2
+        );
+        assert!(
+            exact.model.c3.abs() < 1e-4,
+            "{}: c3 {} should vanish (Table III reports ~0)",
+            collective.name(),
+            exact.model.c3
+        );
+        assert!(exact.rmse_log2_us < 1e-6);
+
+        // Noisy synthesis (sigma = 0.1 in log space, the paper-style
+        // multiplicative measurement noise): constants within tolerance.
+        let obs = synthesize_observations(&truth, 0.1, &mut rng);
+        let noisy = fit(&obs).unwrap();
+        let c1_rel = (noisy.model.c1 - truth.c1).abs() / truth.c1;
+        let c2_rel = (noisy.model.c2 - truth.c2).abs() / truth.c2;
+        assert!(
+            c1_rel < 0.10,
+            "{}: latency term off by {:.1}% ({} vs {})",
+            collective.name(),
+            c1_rel * 100.0,
+            noisy.model.c1,
+            truth.c1
+        );
+        assert!(
+            c2_rel < 0.10,
+            "{}: bandwidth term off by {:.1}% ({} vs {})",
+            collective.name(),
+            c2_rel * 100.0,
+            noisy.model.c2,
+            truth.c2
+        );
+        assert!(
+            noisy.model.c3.abs() < 5.0,
+            "{}: c3 {} drifted far from Table III's ~0 us",
+            collective.name(),
+            noisy.model.c3
+        );
+        assert!(
+            noisy.rmse_log2_us > 0.0 && noisy.rmse_log2_us < 0.25,
+            "{}: rmse_log2_us {} out of range for sigma=0.1",
+            collective.name(),
+            noisy.rmse_log2_us
+        );
+
+        // The recovered model must predict like the truth across the
+        // paper's sweep grid (2^2..2^26 floats, p in 2..256).
+        for &(m, p) in &[(16usize, 4usize), (1 << 12, 16), (1 << 20, 64), (1 << 26, 256)] {
+            let want = truth.time(m, p);
+            let got = noisy.model.time(m, p);
+            let rel = (got - want).abs() / want.max(1e-12);
+            assert!(
+                rel < 0.20,
+                "{} at m={m} p={p}: predicted {got} vs truth {want} ({:.1}% off)",
+                collective.name(),
+                rel * 100.0
+            );
+        }
+    }
+}
