@@ -1,0 +1,94 @@
+//! Elastic checkpoint walkthrough: train TP, crash, resume bit-identically,
+//! re-shard the trained model down to a 2-rank phantom layout, and hot-swap
+//! it into a running serve pool — the paper's "train big TP, serve small
+//! PP" energy scenario end-to-end (DESIGN.md §8).
+//!
+//! Run with:  cargo run --release --example ckpt_elastic
+
+use anyhow::Result;
+use phantom::ckpt::{reshard, Snapshot};
+use phantom::config::{preset, CkptPolicy, Parallelism, ServeConfig};
+use phantom::coordinator::{train_with, TrainOptions};
+use phantom::runtime::ExecServer;
+use phantom::serve::Server;
+use phantom::tensor::Tensor;
+use phantom::util::prng::Prng;
+
+fn main() -> Result<()> {
+    let ckpt_dir =
+        std::env::temp_dir().join(format!("phantom-ckpt-elastic-{}", std::process::id()));
+
+    // ---- 1. train a TP p=4 model with periodic snapshots -----------------
+    let mut cfg = preset("tiny", Parallelism::Tensor)?;
+    cfg.train.max_iters = 12;
+    let server = ExecServer::for_run(&cfg)?;
+    println!(
+        "[1] training TP p={} n={} for 12 iterations, snapshot every 4...",
+        cfg.p, cfg.model.n
+    );
+    let policy = CkptPolicy { every: 4, dir: ckpt_dir.clone() };
+    let full = train_with(&cfg, &server, TrainOptions { ckpt: Some(policy), resume: None })?;
+    println!("    final loss {:.6}", full.losses.last().unwrap());
+
+    // ---- 2. "crash" after iteration 8, resume to 12 ----------------------
+    println!("[2] crash-resume from {}...", ckpt_dir.join("ckpt-000008").display());
+    let snap8 = Snapshot::load(&ckpt_dir.join("ckpt-000008"))?;
+    let mut resume_cfg = snap8.config.clone();
+    resume_cfg.train.max_iters = 12;
+    let resumed =
+        train_with(&resume_cfg, &server, TrainOptions { ckpt: None, resume: Some(snap8) })?;
+    assert_eq!(
+        resumed.losses, full.losses,
+        "resumed trajectory must be bit-identical to the uninterrupted run"
+    );
+    println!("    resumed losses match the uninterrupted run bit for bit");
+
+    // ---- 3. re-shard the trained TP p=4 model to PP p=2 ------------------
+    let tp_snap = Snapshot::load(&ckpt_dir.join("ckpt-000012"))?;
+    let pp_snap = reshard(&tp_snap, 2, Parallelism::Phantom)?;
+    println!(
+        "[3] resharded TP p={} -> PP p={} (dense-phantom, k = {})",
+        tp_snap.p(),
+        pp_snap.p(),
+        pp_snap.k()
+    );
+    let mut rng = Prng::new(42);
+    let x = Tensor::randn(&[4, tp_snap.n()], 1.0, &mut rng);
+    let (y_tp, y_pp) = (tp_snap.forward_host(&x)?, pp_snap.forward_host(&x)?);
+    let worst = y_tp
+        .data()
+        .iter()
+        .zip(y_pp.data())
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    println!("    forward equivalence: worst |Δ| = {worst:.3e}");
+    assert!(worst < 1e-3, "re-sharded model must be forward-equivalent");
+
+    // ---- 4. hot-swap the re-sharded model into a serve pool --------------
+    let mut pool_cfg = cfg.clone();
+    pool_cfg.mode = Parallelism::Phantom;
+    pool_cfg.p = 2;
+    pool_cfg.artifact = Some("elastic_pool".to_string());
+    let pool_server = ExecServer::for_run(&pool_cfg)?;
+    let scfg = ServeConfig { mode: Parallelism::Phantom, ..ServeConfig::default() };
+    let mut serve = Server::start(&pool_cfg, scfg, &pool_server)?;
+    println!("[4] serve pool up (PP p=2); hot-swapping the trained snapshot in...");
+    serve.hot_swap(&pp_snap)?;
+    let n = tp_snap.n();
+    for i in 0..8usize {
+        let mut rowrng = Prng::new(1000 + i as u64);
+        let row = Tensor::randn(&[n], 1.0, &mut rowrng);
+        serve.submit_blocking(1e-3 * (i + 1) as f64, row)?;
+    }
+    let (responses, stats, _) = serve.finish()?;
+    assert_eq!(responses.len(), 8, "no query may be dropped across the swap");
+    println!(
+        "    served {} queries in {} batches with the re-sharded weights; none dropped",
+        responses.len(),
+        stats.batches
+    );
+
+    std::fs::remove_dir_all(&ckpt_dir).ok();
+    println!("\ntrain TP p=4 -> crash -> resume -> reshard -> serve PP p=2: done.");
+    Ok(())
+}

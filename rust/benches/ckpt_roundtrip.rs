@@ -1,0 +1,83 @@
+//! Checkpoint throughput bench: save/load/reshard a larger snapshot than
+//! the CI smoke test and refresh BENCH_ckpt.json with higher-confidence
+//! numbers.
+//!
+//! Run with:  cargo bench --bench ckpt_roundtrip [n] [p]
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use anyhow::Result;
+use phantom::ckpt::{reshard, Snapshot};
+use phantom::config::{preset, ModelConfig, Parallelism};
+use phantom::util::json::write_records_json;
+use phantom::util::table::Table;
+
+fn main() -> Result<()> {
+    let n: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(512);
+    let p: usize = std::env::args().nth(2).and_then(|s| s.parse().ok()).unwrap_or(4);
+
+    let mut cfg = preset("tiny", Parallelism::Phantom)?;
+    cfg.p = p;
+    cfg.model = ModelConfig { n, layers: 2, k: (n / p / 4).max(1) };
+    cfg.artifact = Some("ckpt_bench".to_string());
+    let snap = Snapshot::init(&cfg)?;
+
+    let dir = std::env::temp_dir().join(format!("phantom-ckpt-bench-{}", std::process::id()));
+
+    let t0 = Instant::now();
+    snap.save(&dir)?;
+    let save_s = t0.elapsed().as_secs_f64();
+
+    let bytes: u64 = std::fs::read_dir(&dir)?
+        .filter_map(|e| e.ok())
+        .map(|e| e.metadata().map(|m| m.len()).unwrap_or(0))
+        .sum();
+    let mb = bytes as f64 / 1e6;
+
+    let t0 = Instant::now();
+    let loaded = Snapshot::load(&dir)?;
+    let load_s = t0.elapsed().as_secs_f64();
+
+    let t0 = Instant::now();
+    let merged = reshard(&loaded, p / 2, Parallelism::Phantom)?;
+    let reshard_s = t0.elapsed().as_secs_f64();
+
+    let t0 = Instant::now();
+    let tp = reshard(&loaded, p, Parallelism::Tensor)?;
+    let convert_s = t0.elapsed().as_secs_f64();
+
+    std::fs::remove_dir_all(&dir).ok();
+
+    let mut table = Table::new(
+        &format!("Checkpoint bench — PP p={p}, n={n} ({mb:.2} MB on disk)"),
+        &["op", "seconds", "MB/s"],
+    );
+    table.row(vec!["save".into(), format!("{save_s:.4}"), format!("{:.0}", mb / save_s)]);
+    table.row(vec!["load".into(), format!("{load_s:.4}"), format!("{:.0}", mb / load_s)]);
+    table.row(vec![
+        format!("reshard pp p={p} -> p={}", merged.p()),
+        format!("{reshard_s:.4}"),
+        "-".into(),
+    ]);
+    table.row(vec![
+        format!("convert pp -> tp p={}", tp.p()),
+        format!("{convert_s:.4}"),
+        "-".into(),
+    ]);
+    print!("{}", table.markdown());
+
+    let records = vec![
+        ("snapshot_mb".to_string(), mb),
+        ("save_s".to_string(), save_s),
+        ("load_s".to_string(), load_s),
+        (format!("reshard_p{p}_to_p{}_s", p / 2), reshard_s),
+        ("convert_pp_to_tp_s".to_string(), convert_s),
+        ("save_mb_per_s".to_string(), mb / save_s.max(1e-9)),
+        ("load_mb_per_s".to_string(), mb / load_s.max(1e-9)),
+    ];
+    let path = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../BENCH_ckpt.json");
+    write_records_json(&path, &records)?;
+    eprintln!("wrote {}", path.display());
+    Ok(())
+}

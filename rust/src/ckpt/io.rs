@@ -1,0 +1,350 @@
+//! Checkpoint binary shard format + atomic directory writes.
+//!
+//! A snapshot directory holds one `manifest.json` (util::json) and one
+//! framed binary file per rank. Shard files are self-describing and
+//! self-checking:
+//!
+//! ```text
+//! magic "PHCKPT01"
+//! u32   record count
+//! per record:
+//!   u32  name length, name bytes (UTF-8)
+//!   u32  ndim, ndim x u64 dims
+//!   u64  payload length in bytes (= numel * 4)
+//!   f32  payload, little-endian
+//!   u64  FNV-1a 64 checksum of the payload bytes
+//! ```
+//!
+//! The manifest additionally records every shard file's byte length and
+//! whole-file FNV-1a checksum, so corruption is caught at both the file
+//! and the record level before any tensor reaches the model.
+//!
+//! Crash consistency: `atomic_write_dir` materializes the whole snapshot
+//! in a sibling `.tmp` directory and `rename`s it into place as the last
+//! step. A reader never observes a half-written snapshot directory under
+//! the final name; an orphaned `.tmp` from a crash is inert and simply
+//! overwritten by the next save. Replacing an existing snapshot moves the
+//! old copy aside before the rename and deletes it after, so at least one
+//! complete copy survives any crash point.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::tensor::Tensor;
+
+pub const MAGIC: &[u8; 8] = b"PHCKPT01";
+
+/// FNV-1a 64-bit: tiny, dependency-free integrity hash (not cryptographic —
+/// this guards against torn writes and bit rot, not adversaries).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Encode named tensors into the framed shard format.
+pub fn encode_records(records: &[(String, &Tensor)]) -> Vec<u8> {
+    let mut out = Vec::new();
+    out.extend_from_slice(MAGIC);
+    out.extend_from_slice(&(records.len() as u32).to_le_bytes());
+    for (name, t) in records {
+        out.extend_from_slice(&(name.len() as u32).to_le_bytes());
+        out.extend_from_slice(name.as_bytes());
+        out.extend_from_slice(&(t.shape().len() as u32).to_le_bytes());
+        for &d in t.shape() {
+            out.extend_from_slice(&(d as u64).to_le_bytes());
+        }
+        let payload_len = t.numel() * 4;
+        out.extend_from_slice(&(payload_len as u64).to_le_bytes());
+        let start = out.len();
+        for &v in t.data() {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        let checksum = fnv1a64(&out[start..]);
+        out.extend_from_slice(&checksum.to_le_bytes());
+    }
+    out
+}
+
+struct Cursor<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.bytes.len() {
+            bail!(
+                "truncated shard file: need {n} bytes at offset {}, have {}",
+                self.pos,
+                self.bytes.len() - self.pos
+            );
+        }
+        let s = &self.bytes[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().expect("4 bytes")))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().expect("8 bytes")))
+    }
+}
+
+/// Decode a framed shard file, verifying per-record checksums and that the
+/// file is consumed exactly.
+pub fn decode_records(bytes: &[u8]) -> Result<Vec<(String, Tensor)>> {
+    let mut c = Cursor { bytes, pos: 0 };
+    if c.take(8)? != MAGIC {
+        bail!("bad shard magic (not a PHCKPT01 file)");
+    }
+    let count = c.u32()? as usize;
+    let mut out = Vec::with_capacity(count);
+    for i in 0..count {
+        let name_len = c.u32()? as usize;
+        let name = std::str::from_utf8(c.take(name_len)?)
+            .with_context(|| format!("record {i}: name is not UTF-8"))?
+            .to_string();
+        let ndim = c.u32()? as usize;
+        if ndim > 8 {
+            bail!("record '{name}': implausible ndim {ndim}");
+        }
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            shape.push(c.u64()? as usize);
+        }
+        let numel: usize = shape.iter().product();
+        let payload_len = c.u64()? as usize;
+        if payload_len != numel * 4 {
+            bail!(
+                "record '{name}': payload length {payload_len} does not match shape \
+                 {shape:?} ({} floats)",
+                numel
+            );
+        }
+        let payload = c.take(payload_len)?;
+        let want = c.u64()?;
+        let got = fnv1a64(payload);
+        if got != want {
+            bail!("record '{name}': checksum mismatch ({got:#018x} vs {want:#018x})");
+        }
+        let data: Vec<f32> = payload
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes(b.try_into().expect("4 bytes")))
+            .collect();
+        out.push((name.clone(), Tensor::from_vec(&shape, data)?));
+    }
+    if c.pos != bytes.len() {
+        bail!("trailing garbage after the last record ({} bytes)", bytes.len() - c.pos);
+    }
+    Ok(out)
+}
+
+/// Read a shard file, verifying its byte length and whole-file checksum
+/// against the manifest's expectations before decoding.
+pub fn read_shard_file(
+    path: &Path,
+    want_bytes: u64,
+    want_fnv: u64,
+) -> Result<Vec<(String, Tensor)>> {
+    let bytes =
+        std::fs::read(path).with_context(|| format!("reading shard {}", path.display()))?;
+    if bytes.len() as u64 != want_bytes {
+        bail!("{}: {} bytes on disk, manifest says {want_bytes}", path.display(), bytes.len());
+    }
+    let got = fnv1a64(&bytes);
+    if got != want_fnv {
+        bail!("{}: file checksum {got:#018x}, manifest says {want_fnv:#018x}", path.display());
+    }
+    decode_records(&bytes).with_context(|| format!("decoding {}", path.display()))
+}
+
+/// Materialize a directory atomically: `build` populates a sibling temp
+/// directory, which is renamed to `final_dir` only after it is complete.
+/// An existing `final_dir` is replaced by first moving it aside and only
+/// removing it once the new directory is in place — at every instant at
+/// least one complete copy exists on disk (a crash mid-replace can at
+/// worst leave the old copy under its `.old` aside name).
+pub fn atomic_write_dir(final_dir: &Path, build: impl FnOnce(&Path) -> Result<()>) -> Result<()> {
+    let name = final_dir
+        .file_name()
+        .ok_or_else(|| anyhow::anyhow!("snapshot path {:?} has no final component", final_dir))?
+        .to_string_lossy()
+        .to_string();
+    let parent: PathBuf = match final_dir.parent() {
+        Some(p) if !p.as_os_str().is_empty() => p.to_path_buf(),
+        _ => PathBuf::from("."),
+    };
+    std::fs::create_dir_all(&parent)
+        .with_context(|| format!("creating {}", parent.display()))?;
+    let tmp = parent.join(format!(".{name}.tmp-{}", std::process::id()));
+    if tmp.exists() {
+        std::fs::remove_dir_all(&tmp)
+            .with_context(|| format!("clearing stale {}", tmp.display()))?;
+    }
+    std::fs::create_dir_all(&tmp).with_context(|| format!("creating {}", tmp.display()))?;
+    match build(&tmp) {
+        Ok(()) => {}
+        Err(e) => {
+            std::fs::remove_dir_all(&tmp).ok();
+            return Err(e);
+        }
+    }
+    // Replace without a no-copy window: move the old snapshot aside, put
+    // the new one in place, then drop the old. A directory cannot be
+    // renamed over a non-empty directory on POSIX, so remove-then-rename
+    // would briefly leave NO copy — fatal for a durability subsystem.
+    let mut aside: Option<PathBuf> = None;
+    if final_dir.exists() {
+        let old = parent.join(format!(".{name}.old-{}", std::process::id()));
+        if old.exists() {
+            std::fs::remove_dir_all(&old)
+                .with_context(|| format!("clearing stale {}", old.display()))?;
+        }
+        std::fs::rename(final_dir, &old)
+            .with_context(|| format!("moving old {} aside", final_dir.display()))?;
+        aside = Some(old);
+    }
+    std::fs::rename(&tmp, final_dir).with_context(|| {
+        format!("renaming {} into place as {}", tmp.display(), final_dir.display())
+    })?;
+    if let Some(old) = aside {
+        std::fs::remove_dir_all(&old).ok();
+    }
+    Ok(())
+}
+
+/// Hex helpers for 64-bit checksums / PRNG states in the JSON manifest
+/// (u64 does not survive a JSON f64 round-trip above 2^53).
+pub fn u64_to_hex(v: u64) -> String {
+    format!("{v:016x}")
+}
+
+pub fn u64_from_hex(s: &str) -> Result<u64> {
+    u64::from_str_radix(s, 16).with_context(|| format!("bad hex u64 '{s}'"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Prng;
+
+    fn tdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("phantom-ckpt-io-{tag}-{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn records_roundtrip_bitwise() {
+        let mut rng = Prng::new(7);
+        let tensors: Vec<(String, Tensor)> = vec![
+            ("L0".into(), Tensor::randn(&[4, 4], 1.0, &mut rng)),
+            ("C0".into(), Tensor::randn(&[4, 2], 0.5, &mut rng)),
+            ("D0".into(), Tensor::randn(&[2, 2, 4], 0.5, &mut rng)),
+            ("b0".into(), Tensor::randn(&[4], 0.01, &mut rng)),
+            ("empty".into(), Tensor::zeros(&[0])),
+        ];
+        let refs: Vec<(String, &Tensor)> =
+            tensors.iter().map(|(n, t)| (n.clone(), t)).collect();
+        let bytes = encode_records(&refs);
+        let back = decode_records(&bytes).unwrap();
+        assert_eq!(back.len(), tensors.len());
+        for ((n1, t1), (n2, t2)) in tensors.iter().zip(&back) {
+            assert_eq!(n1, n2);
+            assert_eq!(t1.shape(), t2.shape());
+            for (a, b) in t1.data().iter().zip(t2.data()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{n1}");
+            }
+        }
+    }
+
+    #[test]
+    fn corruption_is_detected() {
+        let mut rng = Prng::new(9);
+        let t = Tensor::randn(&[8, 8], 1.0, &mut rng);
+        let refs = vec![("W".to_string(), &t)];
+        let good = encode_records(&refs);
+        assert!(decode_records(&good).is_ok());
+
+        // flip one payload byte
+        let mut bad = good.clone();
+        let mid = bad.len() / 2;
+        bad[mid] ^= 0x40;
+        assert!(decode_records(&bad).is_err(), "payload corruption must fail");
+        // truncate
+        assert!(decode_records(&good[..good.len() - 3]).is_err());
+        // trailing garbage
+        let mut long = good.clone();
+        long.push(0);
+        assert!(decode_records(&long).is_err());
+        // wrong magic
+        let mut wrong = good;
+        wrong[0] ^= 1;
+        assert!(decode_records(&wrong).is_err());
+    }
+
+    #[test]
+    fn shard_file_checks_length_and_checksum() {
+        let dir = tdir("shard");
+        let t = Tensor::filled(&[3], 2.0);
+        let refs = vec![("b".to_string(), &t)];
+        let bytes = encode_records(&refs);
+        let path = dir.join("rank-0000.bin");
+        std::fs::write(&path, &bytes).unwrap();
+        let fnv = fnv1a64(&bytes);
+        assert!(read_shard_file(&path, bytes.len() as u64, fnv).is_ok());
+        assert!(read_shard_file(&path, bytes.len() as u64 + 1, fnv).is_err());
+        assert!(read_shard_file(&path, bytes.len() as u64, fnv ^ 1).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn atomic_write_replaces_and_cleans_up_on_error() {
+        let root = tdir("atomic");
+        let dst = root.join("snap");
+        atomic_write_dir(&dst, |d| {
+            std::fs::write(d.join("a.txt"), "one")?;
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(std::fs::read_to_string(dst.join("a.txt")).unwrap(), "one");
+
+        // replace an existing snapshot
+        atomic_write_dir(&dst, |d| {
+            std::fs::write(d.join("a.txt"), "two")?;
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(std::fs::read_to_string(dst.join("a.txt")).unwrap(), "two");
+
+        // a failing build leaves the old contents and no temp litter
+        let err = atomic_write_dir(&dst, |_| bail!("boom"));
+        assert!(err.is_err());
+        assert_eq!(std::fs::read_to_string(dst.join("a.txt")).unwrap(), "two");
+        let litter: Vec<String> = std::fs::read_dir(&root)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .map(|e| e.file_name().to_string_lossy().into_owned())
+            .filter(|n| n.contains("tmp") || n.contains("old"))
+            .collect();
+        assert!(litter.is_empty(), "temp/aside dirs must not survive: {litter:?}");
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn hex_roundtrip() {
+        for v in [0u64, 1, 0xF00D, u64::MAX, 0x9E3779B97F4A7C15] {
+            assert_eq!(u64_from_hex(&u64_to_hex(v)).unwrap(), v);
+        }
+        assert!(u64_from_hex("xyz").is_err());
+    }
+}

@@ -1,0 +1,721 @@
+//! Elastic checkpoint & recovery subsystem (DESIGN.md §8).
+//!
+//! Three layers:
+//!
+//! * **Format + I/O** (`io`, this module): a versioned on-disk snapshot —
+//!   `manifest.json` + one framed, checksummed binary shard file per rank —
+//!   capturing model weights, optimizer moments + step count, train
+//!   progress (iteration, loss history, run-level PRNG state) and the
+//!   `RunConfig` that produced it. Writes are atomic (temp dir + rename);
+//!   loads verify whole-file and per-record checksums. Round-trips at both
+//!   rank (`load_rank`) and whole-model (`load`) granularity.
+//! * **Re-sharding** (`reshard`): gather the logical parameters out of any
+//!   (p, TP|PP) layout and re-slice them into any other — TP column
+//!   re-sharding, exact PP block-merge down-scaling, and TP→PP
+//!   dense-phantom conversion. See reshard.rs for the algebra.
+//! * **Integration**: `coordinator::driver::train_with` writes periodic
+//!   snapshots and resumes bit-identically; `serve::RankPool::load_weights`
+//!   hot-swaps a running pool onto a snapshot between batches; the
+//!   `phantom ckpt` CLI exposes inspect/reshard/verify.
+//!
+//! Snapshotting is host-side control plane (like loss aggregation): it is
+//! not charged to the device ledgers.
+
+pub mod io;
+pub mod reshard;
+
+pub use reshard::reshard;
+
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::config::{Parallelism, RunConfig};
+use crate::model::{
+    assemble_tp_dense, tp_dense_forward, DensePhantomOracle, PhantomRankParams, TpRankParams,
+};
+use crate::tensor::Tensor;
+use crate::train::OptimizerState;
+use crate::util::json::{read_json, Json};
+use crate::util::prng::{Prng, PrngState};
+
+/// On-disk format version (manifest `version` field).
+pub const VERSION: i64 = 1;
+
+/// The run-level PRNG stream: advanced once per training iteration by the
+/// driver and captured in every snapshot, so any future run-level
+/// stochasticity resumes bit-identically. `Prng::from_state` restores it.
+pub fn run_stream(seed: u64) -> Prng {
+    Prng::new(seed ^ 0x52554E) // "RUN"
+}
+
+/// One rank's model parameters, either parallelism mode.
+#[derive(Debug, Clone)]
+pub enum RankParams {
+    Phantom(PhantomRankParams),
+    Tensor(TpRankParams),
+}
+
+impl RankParams {
+    pub fn mode(&self) -> Parallelism {
+        match self {
+            RankParams::Phantom(_) => Parallelism::Phantom,
+            RankParams::Tensor(_) => Parallelism::Tensor,
+        }
+    }
+
+    /// Named tensors in the canonical serialization order (matches
+    /// `named_tensors` / the optimizer's parameter order).
+    fn named(&self) -> Vec<(String, &Tensor)> {
+        let mut out = Vec::new();
+        match self {
+            RankParams::Phantom(p) => {
+                for (i, t) in p.locals.iter().enumerate() {
+                    out.push((format!("L{i}"), t));
+                }
+                for (i, t) in p.compressors.iter().enumerate() {
+                    out.push((format!("C{i}"), t));
+                }
+                for (i, t) in p.decompressors.iter().enumerate() {
+                    out.push((format!("D{i}"), t));
+                }
+                for (i, t) in p.biases.iter().enumerate() {
+                    out.push((format!("b{i}"), t));
+                }
+            }
+            RankParams::Tensor(p) => {
+                for (i, t) in p.weights.iter().enumerate() {
+                    out.push((format!("W{i}"), t));
+                }
+                for (i, t) in p.biases.iter().enumerate() {
+                    out.push((format!("b{i}"), t));
+                }
+            }
+        }
+        out
+    }
+}
+
+/// One rank's complete checkpointable state.
+#[derive(Debug, Clone)]
+pub struct RankShard {
+    pub rank: usize,
+    pub params: RankParams,
+    /// `None` = fresh optimizer on restore. Re-sharding drops moments (they
+    /// have no meaning across a layout change).
+    pub opt: Option<OptimizerState>,
+}
+
+/// Where training stood when the snapshot was taken.
+#[derive(Debug, Clone)]
+pub struct TrainProgress {
+    /// Completed iterations (also the length of `losses`).
+    pub iter: u64,
+    /// Full global-loss history from iteration 0 — replayed through the
+    /// `LossTracker` on resume so the stopping rule continues exactly.
+    pub losses: Vec<f64>,
+    /// Run-level PRNG state (see `run_stream`).
+    pub prng: PrngState,
+}
+
+impl TrainProgress {
+    /// Progress of a never-trained snapshot for `seed`.
+    pub fn fresh(seed: u64) -> TrainProgress {
+        TrainProgress { iter: 0, losses: Vec::new(), prng: run_stream(seed).state() }
+    }
+}
+
+/// A complete model snapshot: config + progress + one shard per rank.
+#[derive(Debug, Clone)]
+pub struct Snapshot {
+    pub config: RunConfig,
+    pub progress: TrainProgress,
+    pub shards: Vec<RankShard>,
+}
+
+impl Snapshot {
+    pub fn mode(&self) -> Parallelism {
+        self.config.mode
+    }
+
+    pub fn p(&self) -> usize {
+        self.config.p
+    }
+
+    pub fn n(&self) -> usize {
+        self.config.model.n
+    }
+
+    pub fn k(&self) -> usize {
+        self.config.model.k
+    }
+
+    pub fn layers(&self) -> usize {
+        self.config.model.layers
+    }
+
+    /// Build the snapshot of a freshly initialized (untrained) model —
+    /// deterministic from the config, exactly the state training starts
+    /// from. Useful for re-sharding demos and tests without a train run.
+    pub fn init(config: &RunConfig) -> Result<Snapshot> {
+        let mut shards = Vec::with_capacity(config.p);
+        for rank in 0..config.p {
+            let params = match config.mode {
+                Parallelism::Phantom => RankParams::Phantom(PhantomRankParams::init(
+                    &config.model,
+                    config.p,
+                    rank,
+                    config.train.seed,
+                )?),
+                Parallelism::Tensor => RankParams::Tensor(TpRankParams::init(
+                    &config.model,
+                    config.p,
+                    rank,
+                    config.train.seed,
+                )?),
+            };
+            shards.push(RankShard { rank, params, opt: None });
+        }
+        let snap = Snapshot {
+            config: config.clone(),
+            progress: TrainProgress::fresh(config.train.seed),
+            shards,
+        };
+        snap.validate()?;
+        Ok(snap)
+    }
+
+    /// Structural validation: one shard per rank in order, every tensor
+    /// shaped for this (p, n, k, layers), own decompressor slots zero.
+    /// Deliberately more permissive than `RunConfig::validate` in exactly
+    /// one place: phantom k may equal n/p (the dense-phantom layout that
+    /// TP→PP re-sharding produces).
+    pub fn validate(&self) -> Result<()> {
+        let (p, n, layers) = (self.config.p, self.config.model.n, self.config.model.layers);
+        if p == 0 || n == 0 || layers == 0 {
+            bail!("snapshot geometry must be positive (p={p}, n={n}, layers={layers})");
+        }
+        if n % p != 0 {
+            bail!("n={n} not divisible by p={p}");
+        }
+        let m = n / p;
+        if self.shards.len() != p {
+            bail!("{} shards for p={p}", self.shards.len());
+        }
+        if self.progress.losses.len() as u64 != self.progress.iter {
+            bail!(
+                "progress: {} losses for {} completed iterations",
+                self.progress.losses.len(),
+                self.progress.iter
+            );
+        }
+        for (i, s) in self.shards.iter().enumerate() {
+            if s.rank != i {
+                bail!("shard {i} claims rank {}", s.rank);
+            }
+            if s.params.mode() != self.config.mode {
+                bail!("shard {i} mode {:?} vs config {:?}", s.params.mode(), self.config.mode);
+            }
+            if let Some(opt) = &s.opt {
+                if opt.kind() != self.config.train.optimizer.name() {
+                    bail!(
+                        "shard {i} optimizer state '{}' vs config '{}'",
+                        opt.kind(),
+                        self.config.train.optimizer.name()
+                    );
+                }
+            }
+            match &s.params {
+                RankParams::Phantom(ps) => {
+                    let k = self.config.model.k;
+                    if k == 0 || k > m {
+                        bail!("phantom k={k} outside 1..={m}");
+                    }
+                    if ps.p != p || ps.m != m || ps.k != k || ps.layers() != layers {
+                        bail!("shard {i}: phantom geometry mismatch");
+                    }
+                    for l in 0..layers {
+                        check_shape("L", i, l, &ps.locals[l], &[m, m])?;
+                        check_shape("C", i, l, &ps.compressors[l], &[m, k])?;
+                        check_shape("D", i, l, &ps.decompressors[l], &[p, k, m])?;
+                        check_shape("b", i, l, &ps.biases[l], &[m])?;
+                        let own = ps.decompressors[l].unstack_at(i);
+                        if own.data().iter().any(|&x| x != 0.0) {
+                            bail!("shard {i} layer {l}: frozen own decompressor slot is nonzero");
+                        }
+                    }
+                }
+                RankParams::Tensor(ts) => {
+                    if ts.p != p || ts.m != m || ts.layers() != layers {
+                        bail!("shard {i}: tp geometry mismatch");
+                    }
+                    for l in 0..layers {
+                        check_shape("W", i, l, &ts.weights[l], &[n, m])?;
+                        check_shape("b", i, l, &ts.biases[l], &[m])?;
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Host-side forward of the whole snapshot on `x` [B, n] — the
+    /// backend-free reference used by `phantom ckpt verify` and the
+    /// re-sharding equivalence proofs.
+    pub fn forward_host(&self, x: &Tensor) -> Result<Tensor> {
+        self.validate()?;
+        match self.config.mode {
+            Parallelism::Phantom => {
+                let ranks: Vec<PhantomRankParams> = self
+                    .shards
+                    .iter()
+                    .map(|s| match &s.params {
+                        RankParams::Phantom(p) => p.clone(),
+                        RankParams::Tensor(_) => unreachable!("validated phantom"),
+                    })
+                    .collect();
+                DensePhantomOracle::from_ranks(ranks)?.forward(x)
+            }
+            Parallelism::Tensor => {
+                let shards: Vec<TpRankParams> = self
+                    .shards
+                    .iter()
+                    .map(|s| match &s.params {
+                        RankParams::Tensor(t) => t.clone(),
+                        RankParams::Phantom(_) => unreachable!("validated tp"),
+                    })
+                    .collect();
+                let (weights, biases) = assemble_tp_dense(&shards)?;
+                tp_dense_forward(&weights, &biases, x)
+            }
+        }
+    }
+
+    // -- persistence -------------------------------------------------------
+
+    /// Write the snapshot atomically into `dir` (created; an existing
+    /// snapshot of the same name is replaced only after the new one is
+    /// fully on disk).
+    pub fn save(&self, dir: &Path) -> Result<()> {
+        self.validate()?;
+        io::atomic_write_dir(dir, |tmp| {
+            let mut shard_entries = Vec::with_capacity(self.shards.len());
+            for shard in &self.shards {
+                let file = shard_file_name(shard.rank);
+                let mut records = shard.params.named();
+                let opt_meta = append_opt_records(&mut records, &shard.opt);
+                let bytes = io::encode_records(&records);
+                std::fs::write(tmp.join(&file), &bytes)
+                    .with_context(|| format!("writing shard {file}"))?;
+                let mut entry = vec![
+                    ("rank", Json::int(shard.rank as i64)),
+                    ("file", Json::str(file.clone())),
+                    ("bytes", Json::int(bytes.len() as i64)),
+                    ("fnv", Json::str(io::u64_to_hex(io::fnv1a64(&bytes)))),
+                    ("tensors", Json::int(records.len() as i64)),
+                ];
+                entry.extend(opt_meta);
+                shard_entries.push(Json::obj(entry));
+            }
+            let manifest = Json::obj(vec![
+                ("version", Json::int(VERSION)),
+                ("kind", Json::str("phantom-snapshot")),
+                ("config", self.config.to_json()),
+                (
+                    "progress",
+                    Json::obj(vec![
+                        ("iter", Json::int(self.progress.iter as i64)),
+                        (
+                            "losses",
+                            Json::arr(self.progress.losses.iter().map(|&l| Json::num(l)).collect()),
+                        ),
+                        ("prng_state", Json::str(io::u64_to_hex(self.progress.prng.state))),
+                        (
+                            "prng_spare",
+                            self.progress.prng.spare_normal.map(Json::num).unwrap_or(Json::Null),
+                        ),
+                    ]),
+                ),
+                ("shards", Json::arr(shard_entries)),
+            ]);
+            std::fs::write(tmp.join("manifest.json"), manifest.pretty())
+                .context("writing manifest.json")?;
+            Ok(())
+        })
+        .with_context(|| format!("saving snapshot to {}", dir.display()))
+    }
+
+    /// Load a full snapshot, verifying every checksum.
+    pub fn load(dir: &Path) -> Result<Snapshot> {
+        let (config, progress, entries) = load_manifest(dir)?;
+        let mut shards = Vec::with_capacity(entries.len());
+        for e in &entries {
+            shards.push(load_shard(dir, &config, e)?);
+        }
+        let snap = Snapshot { config, progress, shards };
+        snap.validate().with_context(|| format!("snapshot {} is invalid", dir.display()))?;
+        Ok(snap)
+    }
+
+    /// Load a single rank's shard (manifest + that rank's file only) — the
+    /// rank-granular half of the round-trip contract, for workers that must
+    /// not materialize the whole model.
+    pub fn load_rank(dir: &Path, rank: usize) -> Result<RankShard> {
+        let (config, _, entries) = load_manifest(dir)?;
+        let e = entries
+            .iter()
+            .find(|e| e.rank == rank)
+            .ok_or_else(|| anyhow!("snapshot has no shard for rank {rank}"))?;
+        load_shard(dir, &config, e)
+    }
+}
+
+fn check_shape(name: &str, rank: usize, layer: usize, t: &Tensor, want: &[usize]) -> Result<()> {
+    if t.shape() != want {
+        bail!("shard {rank} layer {layer}: {name} shaped {:?}, want {:?}", t.shape(), want);
+    }
+    Ok(())
+}
+
+fn shard_file_name(rank: usize) -> String {
+    format!("rank-{rank:04}.bin")
+}
+
+/// Append the optimizer moments as `opt.*` records; returns the manifest
+/// metadata fields describing the state.
+fn append_opt_records<'a>(
+    records: &mut Vec<(String, &'a Tensor)>,
+    opt: &'a Option<OptimizerState>,
+) -> Vec<(&'static str, Json)> {
+    match opt {
+        None => vec![("opt", Json::str("none"))],
+        Some(OptimizerState::Sgd) => vec![("opt", Json::str("sgd"))],
+        Some(OptimizerState::Momentum { velocity }) => {
+            for (i, t) in velocity.iter().enumerate() {
+                records.push((format!("opt.v.{i}"), t));
+            }
+            vec![("opt", Json::str("momentum"))]
+        }
+        Some(OptimizerState::Adam { t, m, v }) => {
+            for (i, x) in m.iter().enumerate() {
+                records.push((format!("opt.m.{i}"), x));
+            }
+            for (i, x) in v.iter().enumerate() {
+                records.push((format!("opt.v.{i}"), x));
+            }
+            vec![("opt", Json::str("adam")), ("opt_t", Json::int(*t as i64))]
+        }
+    }
+}
+
+/// A parsed manifest shard entry.
+struct ShardEntry {
+    rank: usize,
+    file: String,
+    bytes: u64,
+    fnv: u64,
+    opt: String,
+    /// Adam step count; required (not defaulted) when `opt == "adam"` so a
+    /// damaged manifest fails the load instead of silently resetting t.
+    opt_t: Option<u64>,
+}
+
+fn load_manifest(dir: &Path) -> Result<(RunConfig, TrainProgress, Vec<ShardEntry>)> {
+    let path = dir.join("manifest.json");
+    let j = read_json(&path).with_context(|| format!("reading {}", path.display()))?;
+    let version = j.get("version").as_i64().unwrap_or(0);
+    if version != VERSION {
+        bail!("unsupported snapshot version {version} (want {VERSION})");
+    }
+    if j.get("kind").as_str() != Some("phantom-snapshot") {
+        bail!("{} is not a phantom snapshot manifest", path.display());
+    }
+    let config = RunConfig::from_json_unchecked(j.get("config")).context("manifest config")?;
+    let pj = j.get("progress");
+    let losses: Vec<f64> = pj
+        .get("losses")
+        .as_arr()
+        .context("manifest progress.losses")?
+        .iter()
+        .map(|l| l.as_f64().context("loss entry"))
+        .collect::<Result<_>>()?;
+    let prng_state = pj.get("prng_state").as_str().context("progress.prng_state")?;
+    let progress = TrainProgress {
+        iter: pj.get("iter").as_i64().context("progress.iter")? as u64,
+        losses,
+        prng: PrngState {
+            state: io::u64_from_hex(prng_state)?,
+            spare_normal: pj.get("prng_spare").as_f64(),
+        },
+    };
+    let mut entries = Vec::new();
+    for e in j.get("shards").as_arr().context("manifest shards[]")?.iter() {
+        entries.push(ShardEntry {
+            rank: e.get("rank").as_usize().context("shard rank")?,
+            file: e.get("file").as_str().context("shard file")?.to_string(),
+            bytes: e.get("bytes").as_i64().context("shard bytes")? as u64,
+            fnv: io::u64_from_hex(e.get("fnv").as_str().context("shard fnv")?)?,
+            opt: e.get("opt").as_str().unwrap_or("none").to_string(),
+            opt_t: e.get("opt_t").as_i64().map(|v| v as u64),
+        });
+    }
+    Ok((config, progress, entries))
+}
+
+fn load_shard(dir: &Path, config: &RunConfig, e: &ShardEntry) -> Result<RankShard> {
+    if e.file.contains('/') || e.file.contains("..") {
+        bail!("shard file name '{}' escapes the snapshot directory", e.file);
+    }
+    let records = io::read_shard_file(&dir.join(&e.file), e.bytes, e.fnv)?;
+    let mut map: std::collections::BTreeMap<String, Tensor> = records.into_iter().collect();
+    let mut take = |name: &str| -> Result<Tensor> {
+        map.remove(name).ok_or_else(|| anyhow!("shard {}: missing tensor '{name}'", e.rank))
+    };
+    let layers = config.model.layers;
+    let params = match config.mode {
+        Parallelism::Phantom => {
+            let mut locals = Vec::with_capacity(layers);
+            let mut compressors = Vec::with_capacity(layers);
+            let mut decompressors = Vec::with_capacity(layers);
+            let mut biases = Vec::with_capacity(layers);
+            for l in 0..layers {
+                locals.push(take(&format!("L{l}"))?);
+                compressors.push(take(&format!("C{l}"))?);
+                decompressors.push(take(&format!("D{l}"))?);
+                biases.push(take(&format!("b{l}"))?);
+            }
+            RankParams::Phantom(PhantomRankParams {
+                rank: e.rank,
+                p: config.p,
+                m: config.model.n / config.p,
+                k: config.model.k,
+                locals,
+                compressors,
+                decompressors,
+                biases,
+            })
+        }
+        Parallelism::Tensor => {
+            let mut weights = Vec::with_capacity(layers);
+            let mut biases = Vec::with_capacity(layers);
+            for l in 0..layers {
+                weights.push(take(&format!("W{l}"))?);
+                biases.push(take(&format!("b{l}"))?);
+            }
+            RankParams::Tensor(TpRankParams {
+                rank: e.rank,
+                p: config.p,
+                m: config.model.n / config.p,
+                weights,
+                biases,
+            })
+        }
+    };
+    let n_params = match &params {
+        RankParams::Phantom(_) => 4 * layers,
+        RankParams::Tensor(_) => 2 * layers,
+    };
+    let opt = match e.opt.as_str() {
+        "none" => None,
+        "sgd" => Some(OptimizerState::Sgd),
+        "momentum" => {
+            let mut velocity = Vec::with_capacity(n_params);
+            for i in 0..n_params {
+                velocity.push(take(&format!("opt.v.{i}"))?);
+            }
+            Some(OptimizerState::Momentum { velocity })
+        }
+        "adam" => {
+            let t = e
+                .opt_t
+                .ok_or_else(|| anyhow!("shard {}: adam state is missing opt_t", e.rank))?;
+            let mut m = Vec::with_capacity(n_params);
+            let mut v = Vec::with_capacity(n_params);
+            for i in 0..n_params {
+                m.push(take(&format!("opt.m.{i}"))?);
+            }
+            for i in 0..n_params {
+                v.push(take(&format!("opt.v.{i}"))?);
+            }
+            Some(OptimizerState::Adam { t, m, v })
+        }
+        other => bail!("shard {}: unknown optimizer state kind '{other}'", e.rank),
+    };
+    if let Some((name, _)) = map.into_iter().next() {
+        bail!("shard {}: unexpected tensor '{name}' in file", e.rank);
+    }
+    Ok(RankShard { rank: e.rank, params, opt })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{preset, OptimizerConfig};
+    use crate::train::Optimizer;
+    use crate::util::proptest::assert_close;
+    use std::path::PathBuf;
+
+    fn tdir(tag: &str) -> PathBuf {
+        let d =
+            std::env::temp_dir().join(format!("phantom-ckpt-mod-{tag}-{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn pp_snapshot() -> Snapshot {
+        let cfg = preset("tiny", Parallelism::Phantom).unwrap();
+        Snapshot::init(&cfg).unwrap()
+    }
+
+    fn tensors_equal(a: &Tensor, b: &Tensor) -> bool {
+        a.shape() == b.shape()
+            && a.data().iter().zip(b.data()).all(|(x, y)| x.to_bits() == y.to_bits())
+    }
+
+    #[test]
+    fn save_load_roundtrips_bitwise_both_modes() {
+        let root = tdir("roundtrip");
+        for mode in [Parallelism::Phantom, Parallelism::Tensor] {
+            let mut cfg = preset("tiny", mode).unwrap();
+            cfg.train.optimizer =
+                OptimizerConfig::Adam { lr: 1e-3, beta1: 0.9, beta2: 0.999, eps: 1e-8 };
+            let mut snap = Snapshot::init(&cfg).unwrap();
+            // attach a non-trivial optimizer state + progress
+            for shard in &mut snap.shards {
+                let shapes: Vec<Vec<usize>> =
+                    shard.params.named().iter().map(|(_, t)| t.shape().to_vec()).collect();
+                let mut opt = Optimizer::new(cfg.train.optimizer, &shapes);
+                let grads: Vec<Tensor> =
+                    shapes.iter().map(|s| Tensor::filled(s, 0.25)).collect();
+                let mut params: Vec<Tensor> =
+                    shapes.iter().map(|s| Tensor::filled(s, 1.0)).collect();
+                let mut refs: Vec<&mut Tensor> = params.iter_mut().collect();
+                opt.step(&mut refs, &grads);
+                shard.opt = Some(opt.state());
+            }
+            snap.progress = TrainProgress {
+                iter: 3,
+                losses: vec![1.5, 0.75, 0.25],
+                prng: run_stream(7).state(),
+            };
+
+            let dir = root.join(mode.name());
+            snap.save(&dir).unwrap();
+            let back = Snapshot::load(&dir).unwrap();
+            assert_eq!(back.config, snap.config);
+            assert_eq!(back.progress.iter, 3);
+            assert_eq!(back.progress.losses, snap.progress.losses);
+            assert_eq!(back.progress.prng, snap.progress.prng);
+            for (a, b) in snap.shards.iter().zip(&back.shards) {
+                let (na, nb) = (a.params.named(), b.params.named());
+                assert_eq!(na.len(), nb.len());
+                for ((n1, t1), (n2, t2)) in na.iter().zip(&nb) {
+                    assert_eq!(n1, n2);
+                    assert!(tensors_equal(t1, t2), "{} {n1}", mode.name());
+                }
+                assert_eq!(a.opt, b.opt, "optimizer state must round-trip");
+            }
+            // rank granularity
+            let shard1 = Snapshot::load_rank(&dir, 1).unwrap();
+            assert_eq!(shard1.rank, 1);
+            let want = snap.shards[1].params.named();
+            let got = shard1.params.named();
+            for ((n1, t1), (_, t2)) in want.iter().zip(&got) {
+                assert!(tensors_equal(t1, t2), "rank shard {n1}");
+            }
+            assert!(Snapshot::load_rank(&dir, 99).is_err());
+
+            // a lost adam step count must fail the load, not default to 0
+            let mpath = dir.join("manifest.json");
+            let text = std::fs::read_to_string(&mpath).unwrap();
+            let stripped = text.replacen("\"opt_t\": 1,", "", 1);
+            assert_ne!(stripped, text, "manifest must carry opt_t for adam");
+            std::fs::write(&mpath, stripped).unwrap();
+            assert!(Snapshot::load(&dir).is_err(), "missing opt_t must fail the load");
+        }
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn tampering_is_rejected() {
+        let root = tdir("tamper");
+        let snap = pp_snapshot();
+        let dir = root.join("snap");
+        snap.save(&dir).unwrap();
+
+        // flip one byte in a shard payload
+        let shard_path = dir.join(shard_file_name(0));
+        let mut bytes = std::fs::read(&shard_path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x10;
+        std::fs::write(&shard_path, &bytes).unwrap();
+        assert!(Snapshot::load(&dir).is_err(), "payload tamper must fail the load");
+        assert!(Snapshot::load_rank(&dir, 0).is_err());
+        // ...but other ranks stay individually loadable
+        assert!(Snapshot::load_rank(&dir, 1).is_ok());
+
+        // manifest pointing at a wrong length
+        snap.save(&dir).unwrap();
+        let mpath = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&mpath).unwrap();
+        let j = Json::parse(&text).unwrap();
+        let bytes0 = j.get("shards").as_arr().unwrap()[0].get("bytes").as_i64().unwrap();
+        let text = text.replacen(
+            &format!("\"bytes\": {bytes0}"),
+            &format!("\"bytes\": {}", bytes0 + 1),
+            1,
+        );
+        std::fs::write(&mpath, text).unwrap();
+        assert!(Snapshot::load(&dir).is_err(), "manifest length tamper must fail");
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn validate_catches_structural_damage() {
+        let mut snap = pp_snapshot();
+        snap.shards.swap(0, 1);
+        assert!(snap.validate().is_err(), "out-of-order ranks");
+
+        let mut snap = pp_snapshot();
+        snap.shards.pop();
+        assert!(snap.validate().is_err(), "missing shard");
+
+        let mut snap = pp_snapshot();
+        if let RankParams::Phantom(p) = &mut snap.shards[2].params {
+            // poke the frozen own slot
+            let off = 2 * p.k * p.m;
+            p.decompressors[0].data_mut()[off] = 1.0;
+        }
+        assert!(snap.validate().is_err(), "nonzero frozen slot");
+
+        let mut snap = pp_snapshot();
+        snap.progress.iter = 5; // losses is empty
+        assert!(snap.validate().is_err(), "iter/losses mismatch");
+    }
+
+    #[test]
+    fn forward_host_matches_dense_oracle() {
+        let snap = pp_snapshot();
+        let model = snap.config.model;
+        let oracle = DensePhantomOracle::init(&model, snap.p(), snap.config.train.seed).unwrap();
+        let mut rng = Prng::new(11);
+        let x = Tensor::randn(&[3, snap.n()], 1.0, &mut rng);
+        let a = snap.forward_host(&x).unwrap();
+        let b = oracle.forward(&x).unwrap();
+        assert_close(a.data(), b.data(), 1e-6, 1e-7).unwrap();
+    }
+
+    #[test]
+    fn init_snapshot_matches_training_init_tp() {
+        let cfg = preset("tiny", Parallelism::Tensor).unwrap();
+        let snap = Snapshot::init(&cfg).unwrap();
+        let direct = TpRankParams::init(&cfg.model, cfg.p, 2, cfg.train.seed).unwrap();
+        match &snap.shards[2].params {
+            RankParams::Tensor(t) => {
+                assert!(tensors_equal(&t.weights[0], &direct.weights[0]));
+                assert!(tensors_equal(&t.biases[1], &direct.biases[1]));
+            }
+            RankParams::Phantom(_) => panic!("mode"),
+        }
+    }
+}

@@ -1,0 +1,422 @@
+//! Re-sharding algebra: move a snapshot between (p, TP|PP) layouts.
+//!
+//! Every layout computes `y_out = relu(y_full W + b)` for some logical
+//! [n, n] matrix per layer, so re-sharding is gather-then-reslice on that
+//! logical model (DESIGN.md §8):
+//!
+//! * **TP gather** — the column shards tile W exactly.
+//! * **PP gather (densify)** — block (src, dst) of W is `L_dst` on the
+//!   diagonal and the rank-k product `C_src · D_dst[src]` off it (the
+//!   dense-equivalent oracle's matrix).
+//! * **TP reslice** — cut columns; exact for any p' dividing n.
+//! * **PP reslice (dense-phantom)** — from a dense W there is no exact
+//!   rank-k factorization for k < n/p', so conversion targets k' = n/p'
+//!   with the identity compressor: `C = I`, `D_dst[src] = W[src, dst]`
+//!   block, `L_dst = W[dst, dst]`, own decompressor slot frozen at zero.
+//!   `y · I` is exact in floating point, so the converted model is
+//!   forward-equivalent to the source up to summation order.
+//! * **PP merge (elastic down-scaling)** — the special case PP p → p'
+//!   where p' divides p keeps the compression structure instead of
+//!   densifying: merging r = p/p' ranks concatenates their shards with
+//!   k' = r·k. Intra-group phantom paths become part of the merged local
+//!   matrix (`L'` absorbs `C_a · D_b[a]` for a, b in the same group),
+//!   the merged compressor is block-diagonal, and remote decompressors
+//!   stack blockwise. Since k < n/p implies r·k < n/p', the merged model
+//!   always satisfies the phantom size constraint — down-scaling is
+//!   closed under the paper's Eqn. 8 regime.
+//!
+//! Optimizer moments do not survive a layout change (their axes are tied
+//! to the shard geometry), so re-sharded shards carry `opt: None`; loss
+//! history, iteration count and PRNG state are preserved.
+
+use anyhow::{bail, Result};
+
+use crate::config::Parallelism;
+use crate::model::{assemble_tp_dense, PhantomRankParams, TpRankParams};
+use crate::tensor::Tensor;
+
+use super::{RankParams, RankShard, Snapshot};
+
+/// Re-shard `src` into `target_p` ranks in `target_mode`. The result is
+/// forward-equivalent to the source (within floating-point summation
+/// order) and carries the source's training progress with a fresh
+/// optimizer.
+pub fn reshard(src: &Snapshot, target_p: usize, target_mode: Parallelism) -> Result<Snapshot> {
+    src.validate()?;
+    let n = src.n();
+    if target_p == 0 || n % target_p != 0 {
+        bail!("target p={target_p} must divide n={n}");
+    }
+    if target_mode == Parallelism::Phantom && target_p < 2 {
+        bail!("phantom layouts need p >= 2 (p=1 has no remote ranks)");
+    }
+
+    let shards = match (src.mode(), target_mode) {
+        (Parallelism::Phantom, Parallelism::Phantom)
+            if src.p() % target_p == 0 && target_p < src.p() =>
+        {
+            merge_phantom(src, target_p)?
+        }
+        _ => {
+            let (weights, biases) = gather_dense(src)?;
+            match target_mode {
+                Parallelism::Tensor => slice_tp(&weights, &biases, target_p)?,
+                Parallelism::Phantom => slice_dense_phantom(&weights, &biases, target_p)?,
+            }
+        }
+    };
+
+    let mut config = src.config.clone();
+    config.mode = target_mode;
+    config.p = target_p;
+    if target_mode == Parallelism::Phantom {
+        config.model.k = match &shards[0] {
+            RankParams::Phantom(p) => p.k,
+            RankParams::Tensor(_) => unreachable!("phantom target"),
+        };
+    }
+    // The source's artifact name described the old geometry; consumers of
+    // a re-sharded snapshot (serve hot-swap, host-side forward) bring
+    // their own execution context.
+    config.artifact = None;
+
+    let out = Snapshot {
+        config,
+        progress: src.progress.clone(),
+        shards: shards
+            .into_iter()
+            .enumerate()
+            .map(|(rank, params)| RankShard { rank, params, opt: None })
+            .collect(),
+    };
+    out.validate()?;
+    Ok(out)
+}
+
+/// Gather the logical dense weights [n, n] and biases [n] per layer.
+fn gather_dense(src: &Snapshot) -> Result<(Vec<Tensor>, Vec<Tensor>)> {
+    match src.mode() {
+        Parallelism::Tensor => {
+            let shards: Vec<TpRankParams> = src
+                .shards
+                .iter()
+                .map(|s| match &s.params {
+                    RankParams::Tensor(t) => t.clone(),
+                    RankParams::Phantom(_) => unreachable!("validated tp"),
+                })
+                .collect();
+            assemble_tp_dense(&shards)
+        }
+        Parallelism::Phantom => {
+            let (p, n, layers) = (src.p(), src.n(), src.layers());
+            let m = n / p;
+            let mut weights = Vec::with_capacity(layers);
+            let mut biases = Vec::with_capacity(layers);
+            for l in 0..layers {
+                let mut w = Tensor::zeros(&[n, n]);
+                let mut b = Tensor::zeros(&[n]);
+                for dst in 0..p {
+                    let ps = phantom(&src.shards[dst].params);
+                    paste(&mut w, n, dst * m, dst * m, &ps.locals[l]);
+                    b.data_mut()[dst * m..(dst + 1) * m].copy_from_slice(ps.biases[l].data());
+                    for s in 0..p {
+                        if s == dst {
+                            continue;
+                        }
+                        let c = &phantom(&src.shards[s].params).compressors[l];
+                        let block = c.matmul(&ps.decompressors[l].unstack_at(s))?;
+                        paste(&mut w, n, s * m, dst * m, &block);
+                    }
+                }
+                weights.push(w);
+                biases.push(b);
+            }
+            Ok((weights, biases))
+        }
+    }
+}
+
+/// Cut the dense model into TP column shards.
+fn slice_tp(weights: &[Tensor], biases: &[Tensor], p: usize) -> Result<Vec<RankParams>> {
+    let n = biases[0].numel();
+    let m = n / p;
+    let mut out = Vec::with_capacity(p);
+    for rank in 0..p {
+        let mut ws = Vec::with_capacity(weights.len());
+        let mut bs = Vec::with_capacity(weights.len());
+        for (w, b) in weights.iter().zip(biases) {
+            ws.push(w.col_slice(rank * m, m)?);
+            bs.push(Tensor::from_vec(&[m], b.data()[rank * m..(rank + 1) * m].to_vec())?);
+        }
+        out.push(RankParams::Tensor(TpRankParams { rank, p, m, weights: ws, biases: bs }));
+    }
+    Ok(out)
+}
+
+/// Cut the dense model into the dense-phantom layout: k = m with identity
+/// compressors, diagonal blocks as locals, off-diagonal blocks as
+/// decompressors (own slot zero).
+fn slice_dense_phantom(weights: &[Tensor], biases: &[Tensor], p: usize) -> Result<Vec<RankParams>> {
+    let n = biases[0].numel();
+    let m = n / p;
+    let layers = weights.len();
+    let mut ident = Tensor::zeros(&[m, m]);
+    for i in 0..m {
+        ident.data_mut()[i * m + i] = 1.0;
+    }
+    let mut out = Vec::with_capacity(p);
+    for rank in 0..p {
+        let mut locals = Vec::with_capacity(layers);
+        let mut compressors = Vec::with_capacity(layers);
+        let mut decompressors = Vec::with_capacity(layers);
+        let mut bs = Vec::with_capacity(layers);
+        for (w, b) in weights.iter().zip(biases) {
+            locals.push(block(w, n, rank * m, rank * m, m, m));
+            compressors.push(ident.clone());
+            let mut d = Tensor::zeros(&[p, m, m]);
+            for s in 0..p {
+                if s == rank {
+                    continue;
+                }
+                let blk = block(w, n, s * m, rank * m, m, m);
+                d.data_mut()[s * m * m..(s + 1) * m * m].copy_from_slice(blk.data());
+            }
+            decompressors.push(d);
+            bs.push(Tensor::from_vec(&[m], b.data()[rank * m..(rank + 1) * m].to_vec())?);
+        }
+        out.push(RankParams::Phantom(PhantomRankParams {
+            rank,
+            p,
+            m,
+            k: m,
+            locals,
+            compressors,
+            decompressors,
+            biases: bs,
+        }));
+    }
+    Ok(out)
+}
+
+/// Elastic PP down-scaling: merge groups of r = p/p' consecutive ranks,
+/// keeping the compression structure with k' = r·k.
+fn merge_phantom(src: &Snapshot, target_p: usize) -> Result<Vec<RankParams>> {
+    let (p, n, layers, k) = (src.p(), src.n(), src.layers(), src.k());
+    let m = n / p;
+    let r = p / target_p;
+    let (m2, k2) = (r * m, r * k);
+    let old = |i: usize| phantom(&src.shards[i].params);
+
+    let mut out = Vec::with_capacity(target_p);
+    for big in 0..target_p {
+        let group = |a: usize| big * r + a; // old rank index of sub-block a
+        let mut locals = Vec::with_capacity(layers);
+        let mut compressors = Vec::with_capacity(layers);
+        let mut decompressors = Vec::with_capacity(layers);
+        let mut biases = Vec::with_capacity(layers);
+        for l in 0..layers {
+            // L': diagonal sub-blocks are the old locals; intra-group
+            // phantom paths C_a · D_b[a] become ordinary local weight.
+            let mut lw = Tensor::zeros(&[m2, m2]);
+            for a in 0..r {
+                for bsub in 0..r {
+                    if a == bsub {
+                        paste(&mut lw, m2, a * m, bsub * m, &old(group(a)).locals[l]);
+                    } else {
+                        let blk = old(group(a)).compressors[l]
+                            .matmul(&old(group(bsub)).decompressors[l].unstack_at(group(a)))?;
+                        paste(&mut lw, m2, a * m, bsub * m, &blk);
+                    }
+                }
+            }
+            locals.push(lw);
+
+            // C': block-diagonal stack of the old compressors.
+            let mut cw = Tensor::zeros(&[m2, k2]);
+            for a in 0..r {
+                paste(&mut cw, k2, a * m, a * k, &old(group(a)).compressors[l]);
+            }
+            compressors.push(cw);
+
+            // D'[src_big]: old D_{dst}[src] blocks, rows by source
+            // sub-block (g layout), columns by destination sub-block.
+            let mut d = Tensor::zeros(&[target_p, k2, m2]);
+            for src_big in 0..target_p {
+                if src_big == big {
+                    continue; // own slot stays zero
+                }
+                let base = src_big * k2 * m2;
+                for a in 0..r {
+                    for bsub in 0..r {
+                        let blk = old(group(bsub)).decompressors[l].unstack_at(src_big * r + a);
+                        for row in 0..k {
+                            let dst_off = base + (a * k + row) * m2 + bsub * m;
+                            d.data_mut()[dst_off..dst_off + m]
+                                .copy_from_slice(&blk.data()[row * m..(row + 1) * m]);
+                        }
+                    }
+                }
+            }
+            decompressors.push(d);
+
+            let mut bv = Tensor::zeros(&[m2]);
+            for a in 0..r {
+                bv.data_mut()[a * m..(a + 1) * m]
+                    .copy_from_slice(old(group(a)).biases[l].data());
+            }
+            biases.push(bv);
+        }
+        out.push(RankParams::Phantom(PhantomRankParams {
+            rank: big,
+            p: target_p,
+            m: m2,
+            k: k2,
+            locals,
+            compressors,
+            decompressors,
+            biases,
+        }));
+    }
+    Ok(out)
+}
+
+fn phantom(p: &RankParams) -> &PhantomRankParams {
+    match p {
+        RankParams::Phantom(x) => x,
+        RankParams::Tensor(_) => unreachable!("caller checked the mode"),
+    }
+}
+
+/// Copy `src` [h, w] into the matrix `dst` (row stride `dst_cols`) at
+/// (row0, col0).
+fn paste(dst: &mut Tensor, dst_cols: usize, row0: usize, col0: usize, src: &Tensor) {
+    let (h, w) = (src.shape()[0], src.shape()[1]);
+    for row in 0..h {
+        let off = (row0 + row) * dst_cols + col0;
+        dst.data_mut()[off..off + w].copy_from_slice(&src.data()[row * w..(row + 1) * w]);
+    }
+}
+
+/// Extract the [h, w] block of the matrix `src` (row stride `src_cols`)
+/// at (row0, col0).
+fn block(src: &Tensor, src_cols: usize, row0: usize, col0: usize, h: usize, w: usize) -> Tensor {
+    let mut out = Tensor::zeros(&[h, w]);
+    for row in 0..h {
+        let off = (row0 + row) * src_cols + col0;
+        out.data_mut()[row * w..(row + 1) * w].copy_from_slice(&src.data()[off..off + w]);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+    use crate::util::prng::Prng;
+    use crate::util::proptest::assert_close;
+
+    fn snap(mode: Parallelism, p: usize, n: usize, k: usize) -> Snapshot {
+        let mut cfg = crate::config::preset("tiny", mode).unwrap();
+        cfg.p = p;
+        cfg.model = ModelConfig { n, layers: 2, k };
+        cfg.artifact = Some("custom".to_string());
+        Snapshot::init(&cfg).unwrap()
+    }
+
+    fn batch(n: usize, seed: u64) -> Tensor {
+        let mut rng = Prng::new(seed);
+        Tensor::randn(&[5, n], 1.0, &mut rng)
+    }
+
+    fn assert_forward_equiv(a: &Snapshot, b: &Snapshot, tag: &str) {
+        let x = batch(a.n(), 0xE0);
+        let ya = a.forward_host(&x).unwrap();
+        let yb = b.forward_host(&x).unwrap();
+        assert_close(ya.data(), yb.data(), 1e-4, 1e-5).unwrap_or_else(|e| panic!("{tag}: {e}"));
+    }
+
+    #[test]
+    fn tp_resharding_is_exact_any_p() {
+        let src = snap(Parallelism::Tensor, 8, 64, 0);
+        for p2 in [1usize, 2, 4, 8, 16] {
+            let re = reshard(&src, p2, Parallelism::Tensor).unwrap();
+            assert_eq!(re.p(), p2);
+            assert_eq!(re.mode(), Parallelism::Tensor);
+            assert_eq!(re.config.artifact, None);
+            assert_forward_equiv(&src, &re, &format!("tp->tp p={p2}"));
+        }
+    }
+
+    #[test]
+    fn tp_to_dense_phantom_is_forward_equivalent() {
+        // The acceptance-criteria scenario: TP p=8 -> PP p=2.
+        let src = snap(Parallelism::Tensor, 8, 64, 0);
+        let re = reshard(&src, 2, Parallelism::Phantom).unwrap();
+        assert_eq!(re.mode(), Parallelism::Phantom);
+        assert_eq!(re.k(), 32, "dense-phantom conversion uses k = n/p");
+        // frozen own slots survived the conversion
+        re.validate().unwrap();
+        assert_forward_equiv(&src, &re, "tp p=8 -> pp p=2");
+        // and the round trip back to TP still matches
+        let back = reshard(&re, 4, Parallelism::Tensor).unwrap();
+        assert_forward_equiv(&src, &back, "pp p=2 -> tp p=4");
+    }
+
+    #[test]
+    fn pp_merge_down_scaling_is_forward_equivalent_and_keeps_k_small() {
+        let src = snap(Parallelism::Phantom, 8, 64, 3);
+        let p4 = reshard(&src, 4, Parallelism::Phantom).unwrap();
+        assert_eq!(p4.k(), 6, "merge doubles k, not densify");
+        assert_forward_equiv(&src, &p4, "pp p=8 -> p=4");
+        // elastic chain p=8 -> p=4 -> p=2
+        let p2 = reshard(&p4, 2, Parallelism::Phantom).unwrap();
+        assert_eq!(p2.k(), 12);
+        assert_forward_equiv(&src, &p2, "pp p=8 -> p=4 -> p=2");
+        // merged models keep k' < m' (Eqn. 8 regime closed under merging)
+        assert!(p2.k() < p2.n() / p2.p());
+    }
+
+    #[test]
+    fn pp_up_scaling_densifies() {
+        let src = snap(Parallelism::Phantom, 2, 32, 4);
+        let up = reshard(&src, 4, Parallelism::Phantom).unwrap();
+        assert_eq!(up.k(), 8, "up-scaling has no exact factorization: k = n/p");
+        assert_forward_equiv(&src, &up, "pp p=2 -> p=4");
+    }
+
+    #[test]
+    fn pp_to_tp_round_trips_progress() {
+        let mut src = snap(Parallelism::Phantom, 4, 32, 3);
+        src.progress.losses = vec![2.0, 1.0];
+        src.progress.iter = 2;
+        let re = reshard(&src, 2, Parallelism::Tensor).unwrap();
+        assert_eq!(re.progress.losses, src.progress.losses);
+        assert_eq!(re.progress.iter, 2);
+        assert!(re.shards.iter().all(|s| s.opt.is_none()), "moments dropped");
+        assert_forward_equiv(&src, &re, "pp p=4 -> tp p=2");
+    }
+
+    #[test]
+    fn reshard_rejects_bad_targets() {
+        let src = snap(Parallelism::Tensor, 4, 32, 0);
+        assert!(reshard(&src, 0, Parallelism::Tensor).is_err());
+        assert!(reshard(&src, 3, Parallelism::Tensor).is_err(), "3 does not divide 32");
+        assert!(reshard(&src, 1, Parallelism::Phantom).is_err(), "phantom needs p >= 2");
+    }
+
+    #[test]
+    fn identity_reshard_preserves_weights_bitwise() {
+        let src = snap(Parallelism::Tensor, 4, 32, 0);
+        let re = reshard(&src, 4, Parallelism::Tensor).unwrap();
+        for (a, b) in src.shards.iter().zip(&re.shards) {
+            match (&a.params, &b.params) {
+                (RankParams::Tensor(x), RankParams::Tensor(y)) => {
+                    // gather + reslice at the same p is an exact copy
+                    assert_eq!(x.weights, y.weights);
+                    assert_eq!(x.biases, y.biases);
+                }
+                _ => panic!("mode"),
+            }
+        }
+    }
+}

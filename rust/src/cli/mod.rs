@@ -98,6 +98,14 @@ COMMANDS:
                    --optimizer <sgd|momentum|adam>
                    --seed <n>             data/init seed
                    --out <file.json>      write the full report as JSON
+                   --ckpt-every <N>       snapshot every N iterations
+                   --ckpt-dir <dir>       where ckpt-NNNNNN snapshots go
+                                          (both --ckpt-* flags go together)
+                   --resume <dir>         continue from a snapshot directory
+                                          (bit-identical loss trajectory; the
+                                          snapshot fixes preset/mode/optimizer,
+                                          only --iters/--target-loss/--ckpt-*
+                                          may be combined)
     experiment   Regenerate a paper table/figure
                    <id|all>               fig5a fig5b fig5c fig6 fig7a fig7b
                                           fig7c table1 table3
@@ -116,6 +124,15 @@ COMMANDS:
                                           blocking the arrival stream
                    --seed <n>             arrival/payload seed
                    --out <file.json>      perf-trajectory records  [BENCH_serve.json]
+    ckpt         Inspect, re-shard and verify checkpoint snapshots
+                   inspect --dir <D>      manifest + shard summary
+                   reshard --dir <D> --out <D2> [--p <P>] [--mode <tp|pp>]
+                                          gather + re-slice to a new layout
+                                          (TP<->PP, elastic p changes)
+                   verify  --dir <D> [--against <D2>] [--batch <B>] [--seed <n>]
+                           [--tol <x>]    integrity check + host-side forward;
+                                          with --against, proves forward
+                                          equivalence on a shared batch
     predict      One-shot analytic prediction (Frontier scale)
                    --n <n> --p <p> --k <k> [--layers 2] [--batch 32]
     inspect      List artifact configs in the manifest

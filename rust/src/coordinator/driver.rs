@@ -2,6 +2,14 @@
 //! decides the stopping point (fixed-loss or iteration cap), and assembles
 //! the training report (loss curve, per-rank energy/time ledgers, comm
 //! statistics).
+//!
+//! Checkpointing (DESIGN.md §8) rides the same control plane: the
+//! per-iteration continue message can additionally request a snapshot, at
+//! which point every rank clones its parameters + optimizer state onto a
+//! shard channel and keeps computing while the leader assembles and
+//! atomically writes the `ckpt::Snapshot`. Resume replays the saved loss
+//! history through the `LossTracker` and hands every rank its saved shard,
+//! so the continued run is bit-identical to the uninterrupted one.
 
 use std::sync::mpsc;
 use std::sync::Arc;
@@ -12,14 +20,16 @@ use anyhow::{anyhow, bail, Context, Result};
 use super::rank_pp::PhantomRank;
 use super::rank_tp::TensorRank;
 use super::LossReport;
+use crate::ckpt::{self, RankParams, RankShard, Snapshot, TrainProgress};
 use crate::comm::{CommStats, Fabric};
-use crate::config::{ComputeModel, Parallelism, RunConfig};
+use crate::config::{CkptPolicy, ComputeModel, Parallelism, RunConfig};
 use crate::data::{BatchCache, Teacher};
 use crate::energy::LedgerSummary;
 use crate::model::{pp_model_params, tp_model_params, PhantomRankParams, TpRankParams};
 use crate::runtime::ExecServer;
 use crate::tensor::Tensor;
 use crate::train::LossTracker;
+use crate::util::prng::Prng;
 
 /// Per-rank outcome.
 #[derive(Debug, Clone)]
@@ -79,11 +89,39 @@ fn warmup_of(per_rank: &[RankReport]) -> usize {
     usize::from(per_rank.iter().any(|r| r.warm_t > 0.0))
 }
 
+/// Durability/elasticity options for a training run.
+#[derive(Debug, Clone, Default)]
+pub struct TrainOptions {
+    /// Periodic snapshots: every `ckpt.every` iterations into
+    /// `ckpt.dir/ckpt-NNNNNN` (plus a final snapshot at the stopping
+    /// point).
+    pub ckpt: Option<CkptPolicy>,
+    /// Continue a previous run from its snapshot. The snapshot's config
+    /// must match `cfg` on everything that shapes the math (mode, p,
+    /// model, batch, seed, optimizer, dataset); iteration caps and loss
+    /// targets may differ.
+    pub resume: Option<Snapshot>,
+}
+
+/// The per-iteration control message the leader sends every rank.
+#[derive(Debug, Clone, Copy)]
+struct RankCommand {
+    /// Clone and ship this rank's shard onto the snapshot channel.
+    snapshot: bool,
+    /// Keep training (false = clean stop).
+    go: bool,
+}
+
 /// Train one configuration end-to-end on the simulated cluster.
 ///
 /// `server` must serve an artifact bundle matching (p, n, k, batch) of
 /// `cfg` (see `RunConfig::artifact` / manifest lookup).
 pub fn train(cfg: &RunConfig, server: &ExecServer) -> Result<TrainReport> {
+    train_with(cfg, server, TrainOptions::default())
+}
+
+/// `train` with checkpoint/resume options.
+pub fn train_with(cfg: &RunConfig, server: &ExecServer, opts: TrainOptions) -> Result<TrainReport> {
     cfg.validate()?;
     if !matches!(cfg.hardware.compute, ComputeModel::Measured) {
         bail!("coordinator::train runs measured mode; use perfmodel for analytic predictions");
@@ -109,9 +147,41 @@ pub fn train(cfg: &RunConfig, server: &ExecServer) -> Result<TrainReport> {
     if cfg.mode == Parallelism::Phantom && mcfg.k != cfg.model.k {
         bail!("artifact '{}' k={} does not match run k={}", artifact, mcfg.k, cfg.model.k);
     }
+    if let Some(policy) = &opts.ckpt {
+        policy.validate()?;
+    }
 
     let p = cfg.p;
     let scale = 1.0 / (cfg.train.batch as f64 * cfg.model.n as f64);
+
+    // Resume: replay the saved loss history through a fresh tracker so the
+    // stopping rule (EMA, target, cap) continues exactly, restore the
+    // run-level PRNG, and stage each rank's saved shard.
+    let mut tracker = LossTracker::new(cfg.train.target_loss, cfg.train.max_iters);
+    let mut run_rng = ckpt::run_stream(cfg.train.seed);
+    let start_iter: u64;
+    let mut resume_shards: Vec<Option<RankShard>> = (0..p).map(|_| None).collect();
+    if let Some(snap) = opts.resume {
+        check_resume_compat(cfg, &snap)?;
+        start_iter = snap.progress.iter;
+        let mut replay_stop = false;
+        for l in &snap.progress.losses {
+            replay_stop = tracker.record(*l);
+        }
+        run_rng = Prng::from_state(snap.progress.prng);
+        if replay_stop {
+            // Nothing left to train: the snapshot already satisfies the
+            // stopping rule. Report it without spawning ranks.
+            return Ok(finished_report(cfg, &tracker));
+        }
+        for shard in snap.shards {
+            let rank = shard.rank;
+            resume_shards[rank] = Some(shard);
+        }
+    } else {
+        start_iter = 0;
+    }
+
     let endpoints = Fabric::new(p, cfg.hardware.net);
     let teacher = Teacher::new(cfg.model.n, cfg.train.seed);
     let cache = Arc::new(BatchCache::new(
@@ -121,67 +191,92 @@ pub fn train(cfg: &RunConfig, server: &ExecServer) -> Result<TrainReport> {
         cfg.train.dataset_batches,
     ));
 
-    // Control plane: rank -> leader loss reports; leader -> rank continue.
+    // Control plane: rank -> leader loss reports; leader -> rank commands;
+    // rank -> leader parameter shards when a snapshot is requested.
     let (loss_tx, loss_rx) = mpsc::channel::<LossReport>();
-    let mut cont_txs: Vec<mpsc::Sender<bool>> = Vec::with_capacity(p);
+    let (shard_tx, shard_rx) = mpsc::channel::<RankShard>();
+    let mut cont_txs: Vec<mpsc::Sender<RankCommand>> = Vec::with_capacity(p);
 
     let mut handles = Vec::with_capacity(p);
-    for (rank, ep) in endpoints.into_iter().enumerate() {
-        let (ct, cr) = mpsc::channel::<bool>();
+    for ((rank, ep), resume_shard) in endpoints.into_iter().enumerate().zip(resume_shards) {
+        let (ct, cr) = mpsc::channel::<RankCommand>();
         cont_txs.push(ct);
         let cfg = cfg.clone();
         let artifact = artifact.clone();
         let exec = server.handle();
         let cache = cache.clone();
         let loss_tx = loss_tx.clone();
+        let shard_tx = shard_tx.clone();
         let warmup = cfg.train.warmup_iters;
         handles.push(
             thread::Builder::new()
                 .name(format!("rank-{rank}"))
                 .spawn(move || -> Result<RankReport> {
-                    run_rank(rank, &cfg, artifact, exec, ep, cache, loss_tx, cr, warmup)
+                    run_rank(RankCtx {
+                        rank,
+                        cfg: &cfg,
+                        artifact,
+                        exec,
+                        ep,
+                        cache,
+                        loss_tx,
+                        cont_rx: cr,
+                        shard_tx,
+                        warmup,
+                        start_iter,
+                        resume_shard,
+                    })
                 })
                 .context("spawning rank thread")?,
         );
     }
     drop(loss_tx);
+    drop(shard_tx);
 
-    // Leader loop: aggregate per-iteration losses, decide stopping.
-    let mut tracker = LossTracker::new(cfg.train.target_loss, cfg.train.max_iters);
-    let mut losses = Vec::new();
-    let mut pending: std::collections::HashMap<u64, (f64, usize)> = Default::default();
-    let mut next_iter: u64 = 0;
+    // Leader loop: aggregate per-iteration losses, decide stopping, and
+    // collect + write snapshots at checkpoint boundaries.
+    let mut pending: std::collections::HashMap<u64, Vec<(usize, f64)>> = Default::default();
+    let mut next_iter: u64 = start_iter;
     let mut leader_err: Option<anyhow::Error> = None;
+    let mut ckpt_err: Option<anyhow::Error> = None;
     'leader: loop {
         let report = match loss_rx.recv() {
             Ok(r) => r,
             Err(_) => break, // all ranks done or died
         };
-        let e = pending.entry(report.iter).or_insert((0.0, 0));
-        e.0 += report.loss_local;
-        e.1 += 1;
-        while let Some(&(sum, cnt)) = pending.get(&next_iter) {
-            if cnt < p {
-                break;
-            }
-            pending.remove(&next_iter);
-            let global = sum * scale;
-            losses.push(global);
-            let stop = {
-                let mut t = tracker.clone();
-                let s = t.record(global);
-                tracker = t;
-                s
+        pending.entry(report.iter).or_default().push((report.rank, report.loss_local));
+        while pending.get(&next_iter).map(|v| v.len()) == Some(p) {
+            let mut parts = pending.remove(&next_iter).expect("presence checked");
+            // Sum in rank order, not arrival order: f64 addition is not
+            // associative, and both run-to-run determinism and the
+            // bit-identical resume guarantee need one canonical order.
+            parts.sort_by_key(|&(rank, _)| rank);
+            let global = parts.iter().map(|&(_, loss)| loss).sum::<f64>() * scale;
+            let stop = tracker.record(global);
+            run_rng.next_u64(); // run-level stream: one draw per iteration
+            let completed = next_iter + 1;
+            let snapshot = match &opts.ckpt {
+                Some(policy) => stop || completed % policy.every as u64 == 0,
+                None => false,
             };
             for ct in &cont_txs {
                 // A rank that already exited with an error has dropped its
                 // receiver; surface that instead of spinning forever.
-                if ct.send(!stop).is_err() {
+                if ct.send(RankCommand { snapshot, go: !stop }).is_err() {
                     leader_err = Some(anyhow!("a rank died mid-iteration"));
                     break 'leader;
                 }
             }
-            next_iter += 1;
+            next_iter = completed;
+            if snapshot {
+                let policy = opts.ckpt.as_ref().expect("snapshot implies a policy");
+                if let Err(e) =
+                    write_snapshot(cfg, policy, completed, &tracker, &run_rng, &shard_rx, p)
+                {
+                    ckpt_err = Some(e);
+                    break 'leader;
+                }
+            }
             if stop {
                 break 'leader;
             }
@@ -190,12 +285,30 @@ pub fn train(cfg: &RunConfig, server: &ExecServer) -> Result<TrainReport> {
     drop(cont_txs);
 
     let mut per_rank = Vec::with_capacity(p);
+    let mut rank_err: Option<anyhow::Error> = None;
     for h in handles {
         match h.join() {
             Ok(Ok(r)) => per_rank.push(r),
-            Ok(Err(e)) => return Err(e.context("rank failed")),
-            Err(_) => bail!("rank thread panicked"),
+            Ok(Err(e)) => {
+                if rank_err.is_none() {
+                    rank_err = Some(e.context("rank failed"));
+                }
+            }
+            Err(_) => {
+                if rank_err.is_none() {
+                    rank_err = Some(anyhow!("rank thread panicked"));
+                }
+            }
         }
+    }
+    // A checkpoint-write failure is the root cause (ranks then only died of
+    // the leader's disappearance), so it wins; otherwise the first rank
+    // error carries the diagnosis, with the leader's observation last.
+    if let Some(e) = ckpt_err {
+        return Err(e);
+    }
+    if let Some(e) = rank_err {
+        return Err(e);
     }
     if let Some(e) = leader_err {
         return Err(e);
@@ -213,13 +326,6 @@ pub fn train(cfg: &RunConfig, server: &ExecServer) -> Result<TrainReport> {
     }
     energy_total += totals.energy_j(&cfg.hardware.power);
 
-    let model_params = match cfg.mode {
-        Parallelism::Tensor => tp_model_params(cfg.model.n, cfg.model.layers),
-        Parallelism::Phantom => {
-            pp_model_params(cfg.model.n, cfg.model.layers, p, cfg.model.k)
-        }
-    };
-
     Ok(TrainReport {
         mode: cfg.mode,
         p,
@@ -227,10 +333,10 @@ pub fn train(cfg: &RunConfig, server: &ExecServer) -> Result<TrainReport> {
         k: cfg.model.k,
         layers: cfg.model.layers,
         batch: cfg.train.batch,
-        iterations: losses.len(),
-        losses,
+        iterations: tracker.history.len(),
+        losses: tracker.history.clone(),
         reached_target: tracker.reached_target(),
-        model_params,
+        model_params: model_params_of(cfg),
         energy_total_j: energy_total,
         energy_train_j: energy_train,
         wall_s: totals.end_s,
@@ -239,41 +345,184 @@ pub fn train(cfg: &RunConfig, server: &ExecServer) -> Result<TrainReport> {
     })
 }
 
-#[allow(clippy::too_many_arguments)]
-fn run_rank(
-    rank: usize,
+fn model_params_of(cfg: &RunConfig) -> u64 {
+    match cfg.mode {
+        Parallelism::Tensor => tp_model_params(cfg.model.n, cfg.model.layers),
+        Parallelism::Phantom => pp_model_params(cfg.model.n, cfg.model.layers, cfg.p, cfg.model.k),
+    }
+}
+
+/// Report for a resumed run whose snapshot already satisfies the stopping
+/// rule: the full loss history, no new rank activity.
+fn finished_report(cfg: &RunConfig, tracker: &LossTracker) -> TrainReport {
+    TrainReport {
+        mode: cfg.mode,
+        p: cfg.p,
+        n: cfg.model.n,
+        k: cfg.model.k,
+        layers: cfg.model.layers,
+        batch: cfg.train.batch,
+        iterations: tracker.history.len(),
+        losses: tracker.history.clone(),
+        reached_target: tracker.reached_target(),
+        model_params: model_params_of(cfg),
+        energy_total_j: 0.0,
+        energy_train_j: 0.0,
+        wall_s: 0.0,
+        wall_train_s: 0.0,
+        per_rank: Vec::new(),
+    }
+}
+
+/// Everything that shapes the training math must match for a bit-identical
+/// continuation; caps/targets and hardware accounting may differ.
+fn check_resume_compat(cfg: &RunConfig, snap: &Snapshot) -> Result<()> {
+    snap.validate()?;
+    let sc = &snap.config;
+    if sc.mode != cfg.mode || sc.p != cfg.p {
+        bail!(
+            "resume layout ({}, p={}) does not match run ({}, p={})",
+            sc.mode.name(),
+            sc.p,
+            cfg.mode.name(),
+            cfg.p
+        );
+    }
+    if sc.model != cfg.model {
+        bail!("resume model {:?} does not match run {:?}", sc.model, cfg.model);
+    }
+    if sc.train.batch != cfg.train.batch
+        || sc.train.seed != cfg.train.seed
+        || sc.train.dataset_batches != cfg.train.dataset_batches
+    {
+        bail!(
+            "resume data stream (batch={}, seed={}, dataset_batches={}) does not match run \
+             (batch={}, seed={}, dataset_batches={})",
+            sc.train.batch,
+            sc.train.seed,
+            sc.train.dataset_batches,
+            cfg.train.batch,
+            cfg.train.seed,
+            cfg.train.dataset_batches
+        );
+    }
+    if sc.train.optimizer != cfg.train.optimizer {
+        bail!(
+            "resume optimizer {:?} does not match run {:?}",
+            sc.train.optimizer,
+            cfg.train.optimizer
+        );
+    }
+    Ok(())
+}
+
+/// Collect one shard per rank off the snapshot channel and write the
+/// snapshot atomically as `dir/ckpt-NNNNNN`.
+fn write_snapshot(
     cfg: &RunConfig,
+    policy: &CkptPolicy,
+    completed: u64,
+    tracker: &LossTracker,
+    run_rng: &Prng,
+    shard_rx: &mpsc::Receiver<RankShard>,
+    p: usize,
+) -> Result<()> {
+    let mut shards: Vec<Option<RankShard>> = (0..p).map(|_| None).collect();
+    for _ in 0..p {
+        let shard = shard_rx
+            .recv()
+            .map_err(|_| anyhow!("a rank died before shipping its snapshot shard"))?;
+        let rank = shard.rank;
+        shards[rank] = Some(shard);
+    }
+    let snap = Snapshot {
+        config: cfg.clone(),
+        progress: TrainProgress {
+            iter: completed,
+            losses: tracker.history.clone(),
+            prng: run_rng.state(),
+        },
+        shards: shards.into_iter().map(|s| s.expect("every rank shipped")).collect(),
+    };
+    let dir = policy.dir.join(format!("ckpt-{completed:06}"));
+    snap.save(&dir)
+        .with_context(|| format!("writing checkpoint at iteration {completed}"))
+}
+
+/// Arguments of one rank worker thread.
+struct RankCtx<'a> {
+    rank: usize,
+    cfg: &'a RunConfig,
     artifact: String,
     exec: crate::runtime::ExecHandle,
     ep: crate::comm::Endpoint,
     cache: Arc<BatchCache>,
     loss_tx: mpsc::Sender<LossReport>,
-    cont_rx: mpsc::Receiver<bool>,
+    cont_rx: mpsc::Receiver<RankCommand>,
+    shard_tx: mpsc::Sender<RankShard>,
     warmup: usize,
-) -> Result<RankReport> {
+    start_iter: u64,
+    resume_shard: Option<RankShard>,
+}
+
+fn run_rank(ctx: RankCtx<'_>) -> Result<RankReport> {
     enum Worker {
         Pp(PhantomRank),
         Tp(TensorRank),
     }
+    let RankCtx {
+        rank,
+        cfg,
+        artifact,
+        exec,
+        ep,
+        cache,
+        loss_tx,
+        cont_rx,
+        shard_tx,
+        warmup,
+        start_iter,
+        resume_shard,
+    } = ctx;
+    let (resume_params, resume_opt) = match resume_shard {
+        Some(shard) => (Some(shard.params), shard.opt),
+        None => (None, None),
+    };
     let mut worker = match cfg.mode {
-        Parallelism::Phantom => Worker::Pp(PhantomRank::new(
-            PhantomRankParams::init(&cfg.model, cfg.p, rank, cfg.train.seed)?,
-            artifact,
-            cfg.train.optimizer,
-            exec,
-            ep,
-        )),
-        Parallelism::Tensor => Worker::Tp(TensorRank::new(
-            TpRankParams::init(&cfg.model, cfg.p, rank, cfg.train.seed)?,
-            artifact,
-            cfg.train.optimizer,
-            exec,
-            ep,
-        )),
+        Parallelism::Phantom => {
+            let params = match resume_params {
+                Some(RankParams::Phantom(p)) => p,
+                Some(RankParams::Tensor(_)) => bail!("resume shard is TP but the run is PP"),
+                None => PhantomRankParams::init(&cfg.model, cfg.p, rank, cfg.train.seed)?,
+            };
+            Worker::Pp(PhantomRank::with_state(
+                params,
+                artifact,
+                cfg.train.optimizer,
+                resume_opt,
+                exec,
+                ep,
+            )?)
+        }
+        Parallelism::Tensor => {
+            let params = match resume_params {
+                Some(RankParams::Tensor(t)) => t,
+                Some(RankParams::Phantom(_)) => bail!("resume shard is PP but the run is TP"),
+                None => TpRankParams::init(&cfg.model, cfg.p, rank, cfg.train.seed)?,
+            };
+            Worker::Tp(TensorRank::with_state(
+                params,
+                artifact,
+                cfg.train.optimizer,
+                resume_opt,
+                exec,
+                ep,
+            )?)
+        }
     };
 
     let mut warm_t = 0.0;
-    let mut iter: u64 = 0;
+    let mut iter: u64 = start_iter;
     loop {
         let (x, t) = cache.shard(iter, rank)?;
         let loss_local = match &mut worker {
@@ -290,8 +539,33 @@ fn run_rank(
             .send(LossReport { rank, iter, loss_local })
             .map_err(|_| anyhow!("leader is gone"))?;
         match cont_rx.recv() {
-            Ok(true) => iter += 1,
-            Ok(false) => break,
+            Ok(cmd) => {
+                if cmd.snapshot {
+                    // Clone-and-ship is host-side control plane (like the
+                    // loss report): not charged to the device ledger. The
+                    // rank keeps training while the leader writes.
+                    let shard = match &worker {
+                        Worker::Pp(w) => RankShard {
+                            rank,
+                            params: RankParams::Phantom(w.params.clone()),
+                            opt: Some(w.opt_state()),
+                        },
+                        Worker::Tp(w) => RankShard {
+                            rank,
+                            params: RankParams::Tensor(w.params.clone()),
+                            opt: Some(w.opt_state()),
+                        },
+                    };
+                    if shard_tx.send(shard).is_err() {
+                        bail!("leader dropped the snapshot channel");
+                    }
+                }
+                if cmd.go {
+                    iter += 1;
+                } else {
+                    break;
+                }
+            }
             Err(_) => bail!("leader dropped the control channel"),
         }
     }

@@ -37,7 +37,7 @@ pub mod driver;
 pub mod rank_pp;
 pub mod rank_tp;
 
-pub use driver::{train, RankReport, TrainReport};
+pub use driver::{train, train_with, RankReport, TrainOptions, TrainReport};
 
 use crate::comm::Endpoint;
 use crate::energy::{Activity, EnergyLedger};

@@ -9,7 +9,7 @@ use crate::energy::{Activity, EnergyLedger};
 use crate::model::PhantomRankParams;
 use crate::runtime::ExecHandle;
 use crate::tensor::Tensor;
-use crate::train::Optimizer;
+use crate::train::{Optimizer, OptimizerState};
 
 /// Per-rank phantom-parallel worker state.
 pub struct PhantomRank {
@@ -29,15 +29,28 @@ impl PhantomRank {
         exec: ExecHandle,
         ep: Endpoint,
     ) -> PhantomRank {
+        Self::with_state(params, artifact, opt_cfg, None, exec, ep)
+            .expect("a fresh optimizer always matches its own shapes")
+    }
+
+    /// Build with a restored optimizer state (checkpoint resume); `None`
+    /// starts a fresh optimizer, identical to `new`.
+    pub fn with_state(
+        params: PhantomRankParams,
+        artifact: String,
+        opt_cfg: OptimizerConfig,
+        opt_state: Option<OptimizerState>,
+        exec: ExecHandle,
+        ep: Endpoint,
+    ) -> Result<PhantomRank> {
         let shapes = param_shapes(&params);
-        PhantomRank {
-            params,
-            artifact,
-            opt: Optimizer::new(opt_cfg, &shapes),
-            exec,
-            ep,
-            ledger: EnergyLedger::new(),
-        }
+        let opt = Optimizer::with_state(opt_cfg, &shapes, opt_state)?;
+        Ok(PhantomRank { params, artifact, opt, exec, ep, ledger: EnergyLedger::new() })
+    }
+
+    /// Export the optimizer's accumulated state for checkpointing.
+    pub fn opt_state(&self) -> OptimizerState {
+        self.opt.state()
     }
 
     /// One forward+backward+update iteration over the local shard.

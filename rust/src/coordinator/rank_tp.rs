@@ -18,7 +18,7 @@ use crate::model::TpRankParams;
 use crate::runtime::ExecHandle;
 use crate::simnet::Collective;
 use crate::tensor::Tensor;
-use crate::train::Optimizer;
+use crate::train::{Optimizer, OptimizerState};
 
 /// Per-rank tensor-parallel worker state.
 pub struct TensorRank {
@@ -41,21 +41,41 @@ impl TensorRank {
         exec: ExecHandle,
         ep: Endpoint,
     ) -> TensorRank {
+        Self::with_state(params, artifact, opt_cfg, None, exec, ep)
+            .expect("a fresh optimizer always matches its own shapes")
+    }
+
+    /// Build with a restored optimizer state (checkpoint resume); `None`
+    /// starts a fresh optimizer, identical to `new`.
+    pub fn with_state(
+        params: TpRankParams,
+        artifact: String,
+        opt_cfg: OptimizerConfig,
+        opt_state: Option<OptimizerState>,
+        exec: ExecHandle,
+        ep: Endpoint,
+    ) -> Result<TensorRank> {
         let shapes: Vec<Vec<usize>> = params
             .weights
             .iter()
             .map(|t| t.shape().to_vec())
             .chain(params.biases.iter().map(|t| t.shape().to_vec()))
             .collect();
-        TensorRank {
+        let opt = Optimizer::with_state(opt_cfg, &shapes, opt_state)?;
+        Ok(TensorRank {
             params,
             artifact,
-            opt: Optimizer::new(opt_cfg, &shapes),
+            opt,
             exec,
             ep,
             ledger: EnergyLedger::new(),
-        paper_schedule: true,
-        }
+            paper_schedule: true,
+        })
+    }
+
+    /// Export the optimizer's accumulated state for checkpointing.
+    pub fn opt_state(&self) -> OptimizerState {
+        self.opt.state()
     }
 
     /// One forward+backward+update iteration. Returns the rank-local sum of

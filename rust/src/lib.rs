@@ -19,6 +19,7 @@
 //! See DESIGN.md for the system inventory and EXPERIMENTS.md for
 //! paper-vs-measured results.
 
+pub mod ckpt;
 pub mod cli;
 pub mod comm;
 pub mod config;

@@ -6,11 +6,14 @@
 //! artifacts through PJRT (requires the `xla` cargo feature and
 //! `make artifacts`).
 
-use anyhow::{bail, Result};
+use std::path::Path;
 
+use anyhow::{bail, Context, Result};
+
+use phantom::ckpt::{self, Snapshot};
 use phantom::cli::{Args, USAGE};
-use phantom::config::{preset, BackendKind, OptimizerConfig, Parallelism, ServeConfig};
-use phantom::coordinator;
+use phantom::config::{preset, BackendKind, CkptPolicy, OptimizerConfig, Parallelism, ServeConfig};
+use phantom::coordinator::{self, TrainOptions};
 use phantom::experiments;
 use phantom::perfmodel::{self, GemmModel, Workload};
 use phantom::runtime::{default_artifact_dir, ExecServer};
@@ -32,6 +35,7 @@ fn run(argv: Vec<String>) -> Result<()> {
     match cmd {
         "train" => cmd_train(&args),
         "serve" => cmd_serve(&args),
+        "ckpt" => cmd_ckpt(&args),
         "experiment" => cmd_experiment(&args),
         "predict" => cmd_predict(&args),
         "inspect" => cmd_inspect(&args),
@@ -46,25 +50,74 @@ fn run(argv: Vec<String>) -> Result<()> {
 
 fn cmd_train(args: &Args) -> Result<()> {
     args.check_known(&[
-        "preset", "mode", "iters", "target-loss", "lr", "optimizer", "seed", "out", "backend",
+        "preset",
+        "mode",
+        "iters",
+        "target-loss",
+        "lr",
+        "optimizer",
+        "seed",
+        "out",
+        "backend",
+        "ckpt-every",
+        "ckpt-dir",
+        "resume",
     ])?;
-    let preset_name = args.opt("preset").unwrap_or("quickstart");
-    let mode = Parallelism::parse(args.opt("mode").unwrap_or("pp"))?;
-    let mut cfg = preset(preset_name, mode)?;
-    cfg.backend = BackendKind::parse(args.opt("backend").unwrap_or("native"))?;
+
+    let resume_dir = args.opt("resume");
+    let (mut cfg, preset_name, resume) = match resume_dir {
+        Some(dir) => {
+            // The snapshot fixes everything that shapes the math; allowing
+            // these flags alongside --resume would silently diverge from
+            // the saved trajectory.
+            for fixed in ["preset", "mode", "optimizer", "lr", "seed", "backend"] {
+                if args.opt(fixed).is_some() || args.flag(fixed) {
+                    bail!("--{fixed} cannot be combined with --resume (the snapshot fixes it)");
+                }
+            }
+            let snap = Snapshot::load(Path::new(dir))
+                .with_context(|| format!("loading --resume snapshot {dir}"))?;
+            let cfg = snap.config.clone();
+            cfg.validate().context("resumed snapshot config")?;
+            eprintln!(
+                "resuming from {dir} at iteration {} (loss {:.6})",
+                snap.progress.iter,
+                snap.progress.losses.last().copied().unwrap_or(f64::NAN)
+            );
+            (cfg, "resumed".to_string(), Some(snap))
+        }
+        None => {
+            let preset_name = args.opt("preset").unwrap_or("quickstart");
+            let mode = Parallelism::parse(args.opt("mode").unwrap_or("pp"))?;
+            let mut cfg = preset(preset_name, mode)?;
+            cfg.backend = BackendKind::parse(args.opt("backend").unwrap_or("native"))?;
+            if let Some(seed) = args.opt_parse::<u64>("seed")? {
+                cfg.train.seed = seed;
+            }
+            let lr = args.opt_parse::<f32>("lr")?.unwrap_or(1.0);
+            cfg.train.optimizer = match args.opt("optimizer").unwrap_or("sgd") {
+                "sgd" => OptimizerConfig::Sgd { lr },
+                "momentum" => OptimizerConfig::Momentum { lr, beta: 0.9 },
+                "adam" => OptimizerConfig::Adam { lr, beta1: 0.9, beta2: 0.999, eps: 1e-8 },
+                o => bail!("unknown optimizer '{o}'"),
+            };
+            (cfg, preset_name.to_string(), None)
+        }
+    };
     if let Some(iters) = args.opt_parse::<usize>("iters")? {
         cfg.train.max_iters = iters;
     }
-    cfg.train.target_loss = args.opt_parse::<f64>("target-loss")?;
-    if let Some(seed) = args.opt_parse::<u64>("seed")? {
-        cfg.train.seed = seed;
+    if let Some(target) = args.opt_parse::<f64>("target-loss")? {
+        cfg.train.target_loss = Some(target);
     }
-    let lr = args.opt_parse::<f32>("lr")?.unwrap_or(1.0);
-    cfg.train.optimizer = match args.opt("optimizer").unwrap_or("sgd") {
-        "sgd" => OptimizerConfig::Sgd { lr },
-        "momentum" => OptimizerConfig::Momentum { lr, beta: 0.9 },
-        "adam" => OptimizerConfig::Adam { lr, beta1: 0.9, beta2: 0.999, eps: 1e-8 },
-        o => bail!("unknown optimizer '{o}'"),
+    let ckpt = match (args.opt_parse::<usize>("ckpt-every")?, args.opt("ckpt-dir")) {
+        (Some(every), Some(dir)) => {
+            let policy = CkptPolicy { every, dir: dir.into() };
+            policy.validate()?;
+            Some(policy)
+        }
+        (None, None) => None,
+        _ => bail!("--ckpt-every and --ckpt-dir must be given together"),
     };
 
     let server = ExecServer::for_run(&cfg)?;
@@ -78,7 +131,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         cfg.model.layers,
         server.backend_name()
     );
-    let report = coordinator::train(&cfg, &server)?;
+    let report = coordinator::train_with(&cfg, &server, TrainOptions { ckpt, resume })?;
 
     let mut t = Table::new(
         &format!("Training report — {} ({})", preset_name, cfg.mode.name()),
@@ -212,6 +265,126 @@ fn cmd_serve(args: &Args) -> Result<()> {
     phantom::serve::write_records_json(std::path::Path::new(out), &records)?;
     eprintln!("wrote {out}");
     Ok(())
+}
+
+fn cmd_ckpt(args: &Args) -> Result<()> {
+    let sub = args
+        .positional
+        .get(1)
+        .map(|s| s.as_str())
+        .ok_or_else(|| anyhow::anyhow!("usage: phantom ckpt <inspect|reshard|verify> ..."))?;
+    match sub {
+        "inspect" => {
+            args.check_known(&["dir"])?;
+            let dir = args.require("dir")?;
+            let snap = Snapshot::load(Path::new(dir))?;
+            let mut t = Table::new(&format!("Snapshot — {dir}"), &["field", "value"]);
+            t.row(vec!["mode".into(), snap.mode().name().to_uppercase()]);
+            t.row(vec!["p".into(), snap.p().to_string()]);
+            t.row(vec!["n".into(), snap.n().to_string()]);
+            t.row(vec!["k".into(), snap.k().to_string()]);
+            t.row(vec!["layers".into(), snap.layers().to_string()]);
+            t.row(vec!["batch".into(), snap.config.train.batch.to_string()]);
+            t.row(vec!["optimizer".into(), snap.config.train.optimizer.name().into()]);
+            t.row(vec!["iterations".into(), snap.progress.iter.to_string()]);
+            t.row(vec![
+                "last loss".into(),
+                snap.progress
+                    .losses
+                    .last()
+                    .map(|l| format!("{l:.6}"))
+                    .unwrap_or_else(|| "-".into()),
+            ]);
+            let params: u64 = snap
+                .shards
+                .iter()
+                .map(|s| match &s.params {
+                    phantom::ckpt::RankParams::Phantom(p) => p.param_count(),
+                    phantom::ckpt::RankParams::Tensor(p) => p.param_count(),
+                })
+                .sum();
+            t.row(vec!["model params".into(), params.to_string()]);
+            t.row(vec![
+                "optimizer state".into(),
+                snap.shards[0]
+                    .opt
+                    .as_ref()
+                    .map(|o| o.kind().to_string())
+                    .unwrap_or_else(|| "fresh".into()),
+            ]);
+            print!("{}", t.markdown());
+            Ok(())
+        }
+        "reshard" => {
+            args.check_known(&["dir", "out", "p", "mode"])?;
+            let dir = args.require("dir")?;
+            let out = args.require("out")?;
+            let snap = Snapshot::load(Path::new(dir))?;
+            let target_p = args.opt_parse::<usize>("p")?.unwrap_or(snap.p());
+            let target_mode = match args.opt("mode") {
+                Some(m) => Parallelism::parse(m)?,
+                None => snap.mode(),
+            };
+            let re = ckpt::reshard(&snap, target_p, target_mode)?;
+            re.save(Path::new(out))?;
+            eprintln!(
+                "resharded {} (p={}, {}) -> {} (p={}, {}, k={})",
+                dir,
+                snap.p(),
+                snap.mode().name(),
+                out,
+                re.p(),
+                re.mode().name(),
+                re.k()
+            );
+            Ok(())
+        }
+        "verify" => {
+            args.check_known(&["dir", "against", "batch", "seed", "tol"])?;
+            let dir = args.require("dir")?;
+            let snap = Snapshot::load(Path::new(dir))?;
+            let batch = args.opt_parse::<usize>("batch")?.unwrap_or(8);
+            let seed = args.opt_parse::<u64>("seed")?.unwrap_or(0xC4EC);
+            let tol = args.opt_parse::<f32>("tol")?.unwrap_or(1e-4);
+            let mut rng = phantom::util::prng::Prng::new(seed);
+            let x = phantom::tensor::Tensor::randn(&[batch, snap.n()], 1.0, &mut rng);
+            let y = snap.forward_host(&x)?;
+            if !y.data().iter().all(|v| v.is_finite()) {
+                bail!("{dir}: forward produced non-finite outputs");
+            }
+            eprintln!("{dir}: checksums ok, forward on [{batch}, {}] finite", snap.n());
+            if let Some(other) = args.opt("against") {
+                let snap2 = Snapshot::load(Path::new(other))?;
+                if snap2.n() != snap.n() {
+                    bail!("{other}: n={} does not match {dir} n={}", snap2.n(), snap.n());
+                }
+                let y2 = snap2.forward_host(&x)?;
+                if !y2.data().iter().all(|v| v.is_finite()) {
+                    bail!("{other}: forward produced non-finite outputs");
+                }
+                let mut worst = 0.0f32;
+                for (a, b) in y.data().iter().zip(y2.data()) {
+                    worst = worst.max((a - b).abs() / (1.0 + a.abs()));
+                }
+                if worst > tol {
+                    bail!(
+                        "forward outputs diverge: worst relative error {worst:.3e} > tol \
+                         {tol:.3e}"
+                    );
+                }
+                println!(
+                    "equivalent: worst relative error {worst:.3e} <= tol {tol:.3e} \
+                     ({} p={} vs {} p={})",
+                    snap.mode().name(),
+                    snap.p(),
+                    snap2.mode().name(),
+                    snap2.p()
+                );
+            }
+            Ok(())
+        }
+        other => bail!("unknown ckpt subcommand '{other}' (want inspect|reshard|verify)"),
+    }
 }
 
 fn report_json(r: &coordinator::TrainReport) -> Json {

@@ -257,6 +257,32 @@ impl DensePhantomOracle {
         Ok(DensePhantomOracle { p, m: model.n / p, k: model.k, ranks })
     }
 
+    /// Wrap existing per-rank parameters (e.g. loaded from a checkpoint)
+    /// as the dense-equivalent oracle. `ranks` must be the full rank set
+    /// in rank order with consistent geometry.
+    pub fn from_ranks(ranks: Vec<PhantomRankParams>) -> Result<Self> {
+        let first = ranks.first().ok_or_else(|| anyhow::anyhow!("empty rank set"))?;
+        let (p, m, k) = (first.p, first.m, first.k);
+        if ranks.len() != p {
+            anyhow::bail!("got {} ranks for p={p}", ranks.len());
+        }
+        for (i, r) in ranks.iter().enumerate() {
+            if r.rank != i || r.p != p || r.m != m || r.k != k {
+                anyhow::bail!(
+                    "rank {i}: inconsistent shard (rank={}, p={}, m={}, k={})",
+                    r.rank,
+                    r.p,
+                    r.m,
+                    r.k
+                );
+            }
+            if r.layers() != first.layers() {
+                anyhow::bail!("rank {i}: {} layers vs {}", r.layers(), first.layers());
+            }
+        }
+        Ok(DensePhantomOracle { p, m, k, ranks })
+    }
+
     /// Forward through all layers on the full width; returns y_out [B, n].
     pub fn forward(&self, x: &Tensor) -> Result<Tensor> {
         let mut y = x.clone();
@@ -296,6 +322,62 @@ impl DensePhantomOracle {
         }
         Tensor::from_col_shards(&outs)
     }
+}
+
+/// Reassemble the full TP weight matrices [n, n] and biases [n] from the
+/// per-rank column shards (rank order). The exact inverse of `TpRankParams`
+/// column sharding; checkpoint re-sharding gathers through this.
+pub fn assemble_tp_dense(shards: &[TpRankParams]) -> Result<(Vec<Tensor>, Vec<Tensor>)> {
+    let first = shards.first().ok_or_else(|| anyhow::anyhow!("empty shard set"))?;
+    let (p, m) = (first.p, first.m);
+    let n = p * m;
+    if shards.len() != p {
+        anyhow::bail!("got {} shards for p={p}", shards.len());
+    }
+    let layers = first.layers();
+    for (j, s) in shards.iter().enumerate() {
+        if s.rank != j || s.p != p || s.m != m || s.layers() != layers {
+            anyhow::bail!("shard {j}: inconsistent geometry");
+        }
+        for l in 0..layers {
+            if s.weights[l].shape() != [n, m] {
+                anyhow::bail!(
+                    "shard {j} layer {l}: weight {:?}, want [{n}, {m}]",
+                    s.weights[l].shape()
+                );
+            }
+        }
+    }
+    let mut weights = Vec::with_capacity(layers);
+    let mut biases = Vec::with_capacity(layers);
+    for l in 0..layers {
+        let cols: Vec<Tensor> = shards.iter().map(|s| s.weights[l].clone()).collect();
+        weights.push(Tensor::from_col_shards(&cols)?);
+        let mut b = Tensor::zeros(&[n]);
+        for (j, s) in shards.iter().enumerate() {
+            b.data_mut()[j * m..(j + 1) * m].copy_from_slice(s.biases[l].data());
+        }
+        biases.push(b);
+    }
+    Ok((weights, biases))
+}
+
+/// Forward an input [B, n] through dense layer stacks y = relu(y W + b) —
+/// the host-side reference for TP models (checkpoint verify / re-sharding
+/// equivalence proofs).
+pub fn tp_dense_forward(weights: &[Tensor], biases: &[Tensor], x: &Tensor) -> Result<Tensor> {
+    let mut y = x.clone();
+    for (w, b) in weights.iter().zip(biases) {
+        let mut z = y.matmul(w)?;
+        let n = b.numel();
+        for row in z.data_mut().chunks_mut(n) {
+            for (v, &bv) in row.iter_mut().zip(b.data()) {
+                *v = (*v + bv).max(0.0);
+            }
+        }
+        y = z;
+    }
+    Ok(y)
 }
 
 #[cfg(test)]
@@ -431,6 +513,72 @@ mod tests {
         let w2 = assemble(2);
         let w8 = assemble(8);
         assert_eq!(w2, w8);
+    }
+
+    #[test]
+    fn assemble_tp_dense_inverts_column_sharding() {
+        let model = cfg(64, 2, 0);
+        let p = 4;
+        let shards: Vec<TpRankParams> =
+            (0..p).map(|r| TpRankParams::init(&model, p, r, 5).unwrap()).collect();
+        let (weights, biases) = assemble_tp_dense(&shards).unwrap();
+        assert_eq!(weights[0].shape(), &[64, 64]);
+        assert_eq!(biases[0].shape(), &[64]);
+        let m = 16;
+        for (j, s) in shards.iter().enumerate() {
+            for l in 0..2 {
+                for r in [0usize, 17, 63] {
+                    for c in 0..m {
+                        assert_eq!(
+                            weights[l].at(&[r, j * m + c]),
+                            s.weights[l].at(&[r, c]),
+                            "layer {l} shard {j}"
+                        );
+                    }
+                }
+                for c in 0..m {
+                    assert_eq!(biases[l].data()[j * m + c], s.biases[l].data()[c]);
+                }
+            }
+        }
+        // dense forward == concatenated per-shard forward
+        let mut rng = Prng::new(2);
+        let x = Tensor::randn(&[3, 64], 1.0, &mut rng);
+        let dense = tp_dense_forward(&weights, &biases, &x).unwrap();
+        let mut y = x;
+        for l in 0..2 {
+            let mut outs = Vec::new();
+            for s in &shards {
+                let mut z = y.matmul(&s.weights[l]).unwrap();
+                for row in z.data_mut().chunks_mut(m) {
+                    for (v, &bv) in row.iter_mut().zip(s.biases[l].data()) {
+                        *v = (*v + bv).max(0.0);
+                    }
+                }
+                outs.push(z);
+            }
+            y = Tensor::from_col_shards(&outs).unwrap();
+        }
+        for (a, b) in dense.data().iter().zip(y.data()) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn oracle_from_ranks_validates_and_matches_init() {
+        let model = cfg(32, 2, 3);
+        let ranks: Vec<PhantomRankParams> =
+            (0..4).map(|r| PhantomRankParams::init(&model, 4, r, 5).unwrap()).collect();
+        let wrapped = DensePhantomOracle::from_ranks(ranks.clone()).unwrap();
+        let fresh = DensePhantomOracle::init(&model, 4, 5).unwrap();
+        let mut rng = Prng::new(8);
+        let x = Tensor::randn(&[2, 32], 1.0, &mut rng);
+        assert_eq!(wrapped.forward(&x).unwrap(), fresh.forward(&x).unwrap());
+        // out-of-order ranks are rejected
+        let mut bad = ranks;
+        bad.swap(0, 1);
+        assert!(DensePhantomOracle::from_ranks(bad).is_err());
+        assert!(DensePhantomOracle::from_ranks(Vec::new()).is_err());
     }
 
     #[test]

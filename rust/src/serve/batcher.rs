@@ -112,6 +112,19 @@ impl Server {
         self.pool.n()
     }
 
+    /// Queries admitted but not yet dispatched.
+    pub fn queued(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Hot-swap the pool onto a (possibly re-sharded) checkpoint snapshot.
+    /// Takes effect between batches: queries still queued at the swap —
+    /// and everything submitted later — are served by the new weights;
+    /// nothing queued is dropped or reordered.
+    pub fn hot_swap(&mut self, snap: &crate::ckpt::Snapshot) -> Result<()> {
+        self.pool.load_weights(snap)
+    }
+
     /// Open-loop submission at virtual time `arrival_s` (must be
     /// nondecreasing across calls). Returns `Rejected` when the queue is
     /// full at that instant.

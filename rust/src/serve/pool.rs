@@ -7,12 +7,20 @@
 //! rank's virtual clock idles (`sync_to(dispatch_s)` charges the gap at the
 //! static draw B), so serving energy accounts for the duty cycle, not just
 //! the busy bursts.
+//!
+//! `load_weights` hot-swaps the pool onto a checkpoint snapshot
+//! (DESIGN.md §8) between batches: the swap message rides the same
+//! per-rank channel as jobs, so per-rank ordering guarantees every query
+//! dispatched before the swap is served by the old weights and everything
+//! after — including queries already queued in the batcher — by the new,
+//! with nothing dropped.
 
 use std::sync::mpsc;
 use std::thread;
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use crate::ckpt::{RankParams, Snapshot};
 use crate::comm::{CommStats, Fabric};
 use crate::config::{Parallelism, RunConfig, ServeConfig};
 use crate::coordinator::{pp_forward_shard, tp_forward_shard};
@@ -27,6 +35,18 @@ struct Job {
     /// to this instant before computing.
     dispatch_s: f64,
     x_shard: Tensor,
+}
+
+/// What a pool rank receives: a forward job, or a weight swap that takes
+/// effect for every subsequent job on that rank.
+enum RankMsg {
+    Job(Job),
+    Swap(Box<Worker>),
+}
+
+enum Worker {
+    Pp(PhantomRankParams),
+    Tp(TpRankParams),
 }
 
 struct Done {
@@ -50,7 +70,7 @@ pub struct RankPool {
     p: usize,
     n: usize,
     mode: Parallelism,
-    job_txs: Vec<mpsc::Sender<Job>>,
+    job_txs: Vec<mpsc::Sender<RankMsg>>,
     done_rx: mpsc::Receiver<Result<Done>>,
     handles: Vec<thread::JoinHandle<PoolRankReport>>,
     next_seq: u64,
@@ -87,7 +107,7 @@ impl RankPool {
         let mut job_txs = Vec::with_capacity(p);
         let mut handles = Vec::with_capacity(p);
         for (rank, ep) in endpoints.into_iter().enumerate() {
-            let (job_tx, job_rx) = mpsc::channel::<Job>();
+            let (job_tx, job_rx) = mpsc::channel::<RankMsg>();
             job_txs.push(job_tx);
             let done_tx = done_tx.clone();
             let handle = exec.handle();
@@ -136,6 +156,36 @@ impl RankPool {
         self.mode
     }
 
+    /// Hot-swap every rank's weights to a (possibly re-sharded) snapshot.
+    /// The swap rides the per-rank job channels, so it lands between
+    /// batches on every rank: queries already dispatched are answered by
+    /// the old weights, every later dispatch by the new — no query is
+    /// dropped and no batch sees a torn mix of layouts. The snapshot's
+    /// parallelism mode may differ from the pool's starting mode (the
+    /// collective schedule follows the weights).
+    pub fn load_weights(&mut self, snap: &Snapshot) -> Result<()> {
+        snap.validate()?;
+        if snap.p() != self.p || snap.n() != self.n {
+            bail!(
+                "snapshot geometry (p={}, n={}) does not match pool (p={}, n={})",
+                snap.p(),
+                snap.n(),
+                self.p,
+                self.n
+            );
+        }
+        for (rank, tx) in self.job_txs.iter().enumerate() {
+            let worker = match &snap.shards[rank].params {
+                RankParams::Phantom(params) => Worker::Pp(params.clone()),
+                RankParams::Tensor(params) => Worker::Tp(params.clone()),
+            };
+            tx.send(RankMsg::Swap(Box::new(worker)))
+                .map_err(|_| anyhow!("a serve rank died"))?;
+        }
+        self.mode = snap.mode();
+        Ok(())
+    }
+
     /// Run one batched forward pass at virtual time `dispatch_s` over
     /// `x_full` [B, n]. Blocks until every rank finishes; returns the
     /// assembled output [B, n] and the batch completion time (max rank
@@ -151,7 +201,7 @@ impl RankPool {
         let seq = self.next_seq;
         self.next_seq += 1;
         for (tx, shard) in self.job_txs.iter().zip(shards) {
-            tx.send(Job { seq, dispatch_s, x_shard: shard })
+            tx.send(RankMsg::Job(Job { seq, dispatch_s, x_shard: shard }))
                 .map_err(|_| anyhow!("a serve rank died"))?;
         }
         let mut outs: Vec<Option<Tensor>> = (0..self.p).map(|_| None).collect();
@@ -188,11 +238,6 @@ impl RankPool {
     }
 }
 
-enum Worker {
-    Pp(PhantomRankParams),
-    Tp(TpRankParams),
-}
-
 #[allow(clippy::too_many_arguments)]
 fn rank_loop(
     rank: usize,
@@ -203,7 +248,7 @@ fn rank_loop(
     artifact: String,
     exec: crate::runtime::ExecHandle,
     mut ep: crate::comm::Endpoint,
-    job_rx: mpsc::Receiver<Job>,
+    job_rx: mpsc::Receiver<RankMsg>,
     done_tx: mpsc::Sender<Result<Done>>,
 ) -> PoolRankReport {
     let mut ledger = EnergyLedger::new();
@@ -212,8 +257,18 @@ fn rank_loop(
         Parallelism::Tensor => TpRankParams::init(&model, p, rank, seed).map(Worker::Tp),
     };
     match worker {
-        Ok(worker) => {
-            while let Ok(job) = job_rx.recv() {
+        Ok(mut worker) => {
+            while let Ok(msg) = job_rx.recv() {
+                let job = match msg {
+                    RankMsg::Swap(new_worker) => {
+                        // Host-side weight adoption between batches: not
+                        // charged to the device ledger (like loading a
+                        // snapshot off the host filesystem).
+                        worker = *new_worker;
+                        continue;
+                    }
+                    RankMsg::Job(job) => job,
+                };
                 ledger.sync_to(job.dispatch_s);
                 let res = match &worker {
                     Worker::Pp(params) => pp_forward_shard(

@@ -6,6 +6,8 @@
 //! slot of phantom decompressors never moves because its gradient is
 //! structurally zero (pp_grads sees a zeroed g_all slot).
 
+use anyhow::{bail, Result};
+
 use crate::config::OptimizerConfig;
 use crate::tensor::Tensor;
 
@@ -14,6 +16,27 @@ pub enum Optimizer {
     Sgd { lr: f32 },
     Momentum { lr: f32, beta: f32, velocity: Vec<Tensor> },
     Adam { lr: f32, beta1: f32, beta2: f32, eps: f32, t: u64, m: Vec<Tensor>, v: Vec<Tensor> },
+}
+
+/// The serializable part of an `Optimizer`: the accumulated moments and the
+/// step count, without the hyperparameters (those live in
+/// `OptimizerConfig`). Checkpoints persist this so a resumed run continues
+/// the exact update sequence of the uninterrupted one.
+#[derive(Debug, Clone, PartialEq)]
+pub enum OptimizerState {
+    Sgd,
+    Momentum { velocity: Vec<Tensor> },
+    Adam { t: u64, m: Vec<Tensor>, v: Vec<Tensor> },
+}
+
+impl OptimizerState {
+    pub fn kind(&self) -> &'static str {
+        match self {
+            OptimizerState::Sgd => "sgd",
+            OptimizerState::Momentum { .. } => "momentum",
+            OptimizerState::Adam { .. } => "adam",
+        }
+    }
 }
 
 impl Optimizer {
@@ -35,6 +58,65 @@ impl Optimizer {
                 m: shapes.iter().map(|s| Tensor::zeros(s)).collect(),
                 v: shapes.iter().map(|s| Tensor::zeros(s)).collect(),
             },
+        }
+    }
+
+    /// Build from config, adopting a previously exported state. `None`
+    /// starts fresh (identical to `new`). The state's kind and tensor
+    /// shapes must match the config and parameter list.
+    pub fn with_state(
+        cfg: OptimizerConfig,
+        shapes: &[Vec<usize>],
+        state: Option<OptimizerState>,
+    ) -> Result<Optimizer> {
+        let Some(state) = state else {
+            return Ok(Optimizer::new(cfg, shapes));
+        };
+        if state.kind() != cfg.name() {
+            bail!(
+                "optimizer state kind '{}' does not match config '{}'",
+                state.kind(),
+                cfg.name()
+            );
+        }
+        let check = |name: &str, ts: &[Tensor]| -> Result<()> {
+            if ts.len() != shapes.len() {
+                bail!("{name}: {} state tensors for {} parameters", ts.len(), shapes.len());
+            }
+            for (i, (t, s)) in ts.iter().zip(shapes).enumerate() {
+                if t.shape() != s.as_slice() {
+                    bail!("{name}[{i}]: state shape {:?} vs parameter {:?}", t.shape(), s);
+                }
+            }
+            Ok(())
+        };
+        Ok(match (cfg, state) {
+            (OptimizerConfig::Sgd { lr }, OptimizerState::Sgd) => Optimizer::Sgd { lr },
+            (OptimizerConfig::Momentum { lr, beta }, OptimizerState::Momentum { velocity }) => {
+                check("velocity", &velocity)?;
+                Optimizer::Momentum { lr, beta, velocity }
+            }
+            (OptimizerConfig::Adam { lr, beta1, beta2, eps }, OptimizerState::Adam { t, m, v }) => {
+                check("m", &m)?;
+                check("v", &v)?;
+                Optimizer::Adam { lr, beta1, beta2, eps, t, m, v }
+            }
+            _ => unreachable!("kind checked above"),
+        })
+    }
+
+    /// Export the accumulated state (moments + step count) for
+    /// checkpointing. Hyperparameters are not included; pair with the
+    /// `OptimizerConfig` to rebuild via `with_state`.
+    pub fn state(&self) -> OptimizerState {
+        match self {
+            Optimizer::Sgd { .. } => OptimizerState::Sgd,
+            Optimizer::Momentum { velocity, .. } => {
+                OptimizerState::Momentum { velocity: velocity.clone() }
+            }
+            Optimizer::Adam { t, m, v, .. } => {
+                OptimizerState::Adam { t: *t, m: m.clone(), v: v.clone() }
+            }
         }
     }
 
@@ -190,6 +272,152 @@ mod tests {
         let sgd = run(OptimizerConfig::Sgd { lr: 0.009 });
         let mom = run(OptimizerConfig::Momentum { lr: 0.009, beta: 0.9 });
         assert!(mom < sgd, "momentum {mom} should beat sgd {sgd}");
+    }
+
+    #[test]
+    fn adam_matches_scalar_reference() {
+        // Scalar textbook Adam (Kingma & Ba, Alg. 1) with bias correction,
+        // written in the same f32 evaluation order as the vectorized
+        // optimizer — the trajectories must agree bitwise, including the
+        // large corrections at small t where 1 - beta^t is far from 1.
+        crate::util::proptest::quickcheck("adam scalar reference", |rng| {
+            let dim = 1 + (rng.next_u64() % 6) as usize;
+            let steps = 1 + (rng.next_u64() % 6) as usize;
+            let (lr, beta1, beta2, eps) = (0.07f32, 0.9f32, 0.999f32, 1e-8f32);
+            let grads: Vec<Tensor> =
+                (0..steps).map(|_| Tensor::randn(&[dim], 1.0, rng)).collect();
+
+            let mut p = Tensor::randn(&[dim], 1.0, rng);
+            let mut p_ref = p.data().to_vec();
+            let mut opt = Optimizer::new(
+                OptimizerConfig::Adam { lr, beta1, beta2, eps },
+                &[vec![dim]],
+            );
+            let (mut m_ref, mut v_ref) = (vec![0.0f32; dim], vec![0.0f32; dim]);
+            for (step, g) in grads.iter().enumerate() {
+                opt.step(&mut [&mut p], std::slice::from_ref(g));
+                let t = (step + 1) as i32;
+                let bc1 = 1.0 - beta1.powi(t);
+                let bc2 = 1.0 - beta2.powi(t);
+                for i in 0..dim {
+                    let gd = g.data()[i];
+                    m_ref[i] = beta1 * m_ref[i] + (1.0 - beta1) * gd;
+                    v_ref[i] = beta2 * v_ref[i] + (1.0 - beta2) * gd * gd;
+                    let mhat = m_ref[i] / bc1;
+                    let vhat = v_ref[i] / bc2;
+                    p_ref[i] -= lr * mhat / (vhat.sqrt() + eps);
+                }
+                for i in 0..dim {
+                    if p.data()[i].to_bits() != p_ref[i].to_bits() {
+                        return Err(format!(
+                            "step {t} dim {i}: optimizer {} vs reference {}",
+                            p.data()[i],
+                            p_ref[i]
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn adam_first_step_bias_correction_closed_form() {
+        // At t = 1 the bias corrections cancel exactly: mhat = g, vhat = g^2,
+        // so the update is lr * g / (|g| + eps) regardless of beta1/beta2.
+        let (lr, eps) = (0.5f32, 1e-8f32);
+        let g = Tensor::from_vec(&[3], vec![2.0, -0.25, 1e-3]).unwrap();
+        let mut p = Tensor::zeros(&[3]);
+        let mut opt = Optimizer::new(
+            OptimizerConfig::Adam { lr, beta1: 0.9, beta2: 0.999, eps },
+            &[vec![3]],
+        );
+        opt.step(&mut [&mut p], std::slice::from_ref(&g));
+        for i in 0..3 {
+            let gd = g.data()[i];
+            let want = -lr * gd / (gd.abs() + eps);
+            assert!(
+                (p.data()[i] - want).abs() <= 1e-6 * want.abs().max(1.0),
+                "dim {i}: {} vs {want}",
+                p.data()[i]
+            );
+        }
+    }
+
+    #[test]
+    fn momentum_beta0_is_exactly_sgd() {
+        crate::util::proptest::quickcheck("momentum beta=0 == sgd", |rng| {
+            let dim = 1 + (rng.next_u64() % 8) as usize;
+            let steps = 1 + (rng.next_u64() % 8) as usize;
+            let lr = 0.05f32;
+            let grads: Vec<Tensor> =
+                (0..steps).map(|_| Tensor::randn(&[dim], 1.0, rng)).collect();
+            let init = Tensor::randn(&[dim], 1.0, rng);
+
+            let mut p_sgd = init.clone();
+            let mut sgd = Optimizer::new(OptimizerConfig::Sgd { lr }, &[vec![dim]]);
+            let mut p_mom = init;
+            let mut mom =
+                Optimizer::new(OptimizerConfig::Momentum { lr, beta: 0.0 }, &[vec![dim]]);
+            for g in &grads {
+                sgd.step(&mut [&mut p_sgd], std::slice::from_ref(g));
+                mom.step(&mut [&mut p_mom], std::slice::from_ref(g));
+            }
+            if p_sgd != p_mom {
+                return Err(format!("{:?} vs {:?}", p_sgd.data(), p_mom.data()));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn state_restore_continues_bit_identically() {
+        // For every optimizer: 3 steps, export, rebuild, 3 more steps ==
+        // 6 uninterrupted steps. This is the rank-local half of the
+        // checkpoint-resume guarantee.
+        let mut rng = Prng::new(0xC4E7);
+        let grads: Vec<Tensor> = (0..6).map(|_| Tensor::randn(&[5], 1.0, &mut rng)).collect();
+        for cfg in [
+            OptimizerConfig::Sgd { lr: 0.1 },
+            OptimizerConfig::Momentum { lr: 0.1, beta: 0.9 },
+            OptimizerConfig::Adam { lr: 0.05, beta1: 0.9, beta2: 0.999, eps: 1e-8 },
+        ] {
+            let mut p_full = Tensor::filled(&[5], 1.0);
+            let mut full = Optimizer::new(cfg, &[vec![5]]);
+            for g in &grads {
+                full.step(&mut [&mut p_full], std::slice::from_ref(g));
+            }
+
+            let mut p_split = Tensor::filled(&[5], 1.0);
+            let mut first = Optimizer::new(cfg, &[vec![5]]);
+            for g in &grads[..3] {
+                first.step(&mut [&mut p_split], std::slice::from_ref(g));
+            }
+            let state = first.state();
+            assert_eq!(state.kind(), cfg.name());
+            let mut second = Optimizer::with_state(cfg, &[vec![5]], Some(state)).unwrap();
+            for g in &grads[3..] {
+                second.step(&mut [&mut p_split], std::slice::from_ref(g));
+            }
+            assert_eq!(p_full, p_split, "{} resume diverged", cfg.name());
+        }
+    }
+
+    #[test]
+    fn with_state_rejects_mismatches() {
+        let sgd = OptimizerConfig::Sgd { lr: 0.1 };
+        let mom = OptimizerConfig::Momentum { lr: 0.1, beta: 0.9 };
+        // kind mismatch
+        let state = Optimizer::new(mom, &[vec![3]]).state();
+        assert!(Optimizer::with_state(sgd, &[vec![3]], Some(state)).is_err());
+        // shape mismatch
+        let state = Optimizer::new(mom, &[vec![3]]).state();
+        assert!(Optimizer::with_state(mom, &[vec![4]], Some(state)).is_err());
+        // arity mismatch
+        let state = Optimizer::new(mom, &[vec![3]]).state();
+        assert!(Optimizer::with_state(mom, &[vec![3], vec![3]], Some(state)).is_err());
+        // None starts fresh
+        assert!(Optimizer::with_state(mom, &[vec![3]], None).is_ok());
     }
 
     #[test]

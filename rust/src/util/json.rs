@@ -217,6 +217,36 @@ pub fn write_records_json(
     std::fs::write(path, obj.pretty())
 }
 
+/// Read and parse a JSON file; parse failures surface as
+/// `io::ErrorKind::InvalidData` so callers have one error channel for both
+/// missing and malformed files. Used for checkpoint-manifest reads.
+pub fn read_json(path: &std::path::Path) -> Result<Json, std::io::Error> {
+    let text = std::fs::read_to_string(path)?;
+    Json::parse(&text).map_err(|e| {
+        std::io::Error::new(std::io::ErrorKind::InvalidData, format!("{}: {e}", path.display()))
+    })
+}
+
+/// Counterpart of `write_records_json`: read a flat (key, value) record
+/// file back as ordered pairs. Rejects nesting — the perf-trajectory format
+/// is a single object of numbers, and a file that stopped being flat should
+/// fail loudly rather than be half-read.
+pub fn read_records_json(path: &std::path::Path) -> Result<Vec<(String, f64)>, std::io::Error> {
+    let invalid = |msg: String| std::io::Error::new(std::io::ErrorKind::InvalidData, msg);
+    let j = read_json(path)?;
+    let obj = j
+        .as_obj()
+        .ok_or_else(|| invalid(format!("{}: records file must be an object", path.display())))?;
+    let mut out = Vec::with_capacity(obj.len());
+    for (k, v) in obj {
+        let x = v.as_f64().ok_or_else(|| {
+            invalid(format!("{}: record '{k}' is not a number", path.display()))
+        })?;
+        out.push((k.clone(), x));
+    }
+    Ok(out)
+}
+
 /// Parse error with byte offset for diagnostics.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct JsonError {
@@ -508,6 +538,36 @@ mod tests {
         assert_eq!(v.get("n").as_i64(), Some(8));
         assert_eq!(v.get("x").as_i64(), None);
         assert_eq!(v.get("x").as_f64(), Some(1.5));
+    }
+
+    #[test]
+    fn records_roundtrip_and_reject_nesting() {
+        let dir = std::env::temp_dir().join(format!("phantom-json-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("records.json");
+        let records = vec![
+            ("alpha".to_string(), 1.5),
+            ("beta".to_string(), -3.0),
+            ("gamma".to_string(), 0.125),
+        ];
+        write_records_json(&path, &records).unwrap();
+        let back = read_records_json(&path).unwrap();
+        // Object keys serialize sorted; compare as sets of exact pairs.
+        assert_eq!(back.len(), records.len());
+        for (k, v) in &records {
+            let got = back.iter().find(|(bk, _)| bk == k).unwrap_or_else(|| panic!("{k}"));
+            assert_eq!(got.1, *v, "{k}");
+        }
+
+        std::fs::write(&path, r#"{"a": {"nested": 1}}"#).unwrap();
+        assert!(read_records_json(&path).is_err(), "nested value must be rejected");
+        std::fs::write(&path, "[1, 2]").unwrap();
+        assert!(read_records_json(&path).is_err(), "non-object must be rejected");
+        std::fs::write(&path, "{bad").unwrap();
+        let err = read_json(&path).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
+        assert!(read_json(&dir.join("missing.json")).is_err());
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -1,0 +1,348 @@
+//! End-to-end checkpoint subsystem integration (DESIGN.md §8):
+//!
+//! * crash-resume: train 10 iters -> snapshot -> resume 10 more produces
+//!   the uninterrupted 20-iter run's loss trajectory bit for bit (PP+Adam
+//!   and TP+Momentum),
+//! * re-sharding: a TP snapshot re-sharded to PP (and an elastic PP merge
+//!   chain) is forward-equivalent to its source, proven both host-side and
+//!   through the real sharded serving pipeline,
+//! * hot swap: a running serve pool adopts a re-sharded snapshot between
+//!   batches without dropping or reordering any queued query,
+//! * perf trajectory: save/load/reshard throughput recorded to
+//!   BENCH_ckpt.json (and read back with util::json::read_records_json).
+
+use std::path::PathBuf;
+
+use phantom::ckpt::{reshard, Snapshot};
+use phantom::config::{preset, CkptPolicy, ModelConfig, OptimizerConfig, Parallelism, ServeConfig};
+use phantom::coordinator::{train_with, TrainOptions};
+use phantom::runtime::ExecServer;
+use phantom::serve::Server;
+use phantom::tensor::Tensor;
+use phantom::util::json::{read_records_json, write_records_json};
+use phantom::util::prng::Prng;
+use phantom::util::proptest::assert_close;
+
+fn tdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("phantom-ckpt-it-{tag}-{}", std::process::id()));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn resume_case(mode: Parallelism, opt: OptimizerConfig, tag: &str) {
+    let root = tdir(tag);
+    let mut cfg = preset("tiny_p2", mode).unwrap();
+    cfg.train.optimizer = opt;
+
+    // Uninterrupted reference: 20 iterations.
+    let mut full_cfg = cfg.clone();
+    full_cfg.train.max_iters = 20;
+    let server = ExecServer::for_run(&full_cfg).unwrap();
+    let full = train_with(&full_cfg, &server, TrainOptions::default()).unwrap();
+    assert_eq!(full.iterations, 20);
+
+    // First leg: 10 iterations with periodic snapshots every 5.
+    let mut leg_cfg = cfg.clone();
+    leg_cfg.train.max_iters = 10;
+    let policy = CkptPolicy { every: 5, dir: root.clone() };
+    let leg =
+        train_with(&leg_cfg, &server, TrainOptions { ckpt: Some(policy), resume: None }).unwrap();
+    assert_eq!(leg.iterations, 10);
+    assert!(root.join("ckpt-000005").join("manifest.json").exists());
+    assert!(root.join("ckpt-000010").join("manifest.json").exists());
+
+    // The first leg must itself match the reference prefix bitwise.
+    assert_eq!(&full.losses[..10], &leg.losses[..], "{tag}: first leg diverged");
+
+    // "Crash", then resume from the iteration-10 snapshot to 20 total.
+    let snap = Snapshot::load(&root.join("ckpt-000010")).unwrap();
+    assert_eq!(snap.progress.iter, 10);
+    let mut resume_cfg = snap.config.clone();
+    resume_cfg.train.max_iters = 20;
+    let resumed =
+        train_with(&resume_cfg, &server, TrainOptions { ckpt: None, resume: Some(snap) }).unwrap();
+
+    // Bit-identical continuation: the resumed run's full trajectory equals
+    // the uninterrupted one, f64-exactly.
+    assert_eq!(resumed.iterations, 20, "{tag}");
+    assert_eq!(resumed.losses, full.losses, "{tag}: resumed trajectory diverged");
+    std::fs::remove_dir_all(&root).ok();
+}
+
+#[test]
+fn resume_is_bit_identical_pp_adam() {
+    resume_case(
+        Parallelism::Phantom,
+        OptimizerConfig::Adam { lr: 1e-3, beta1: 0.9, beta2: 0.999, eps: 1e-8 },
+        "pp-adam",
+    );
+}
+
+#[test]
+fn resume_is_bit_identical_tp_momentum() {
+    resume_case(Parallelism::Tensor, OptimizerConfig::Momentum { lr: 0.5, beta: 0.9 }, "tp-mom");
+}
+
+#[test]
+fn resume_from_satisfied_snapshot_trains_nothing() {
+    let root = tdir("satisfied");
+    let mut cfg = preset("tiny_p2", Parallelism::Phantom).unwrap();
+    cfg.train.max_iters = 6;
+    let server = ExecServer::for_run(&cfg).unwrap();
+    let policy = CkptPolicy { every: 3, dir: root.clone() };
+    train_with(&cfg, &server, TrainOptions { ckpt: Some(policy), resume: None }).unwrap();
+
+    // Resuming with the same cap: the snapshot already satisfies it.
+    let snap = Snapshot::load(&root.join("ckpt-000006")).unwrap();
+    let report =
+        train_with(&cfg, &server, TrainOptions { ckpt: None, resume: Some(snap) }).unwrap();
+    assert_eq!(report.iterations, 6);
+    assert!(report.per_rank.is_empty(), "no rank work for a satisfied snapshot");
+    std::fs::remove_dir_all(&root).ok();
+}
+
+#[test]
+fn resume_rejects_mismatched_config() {
+    let root = tdir("mismatch");
+    let mut cfg = preset("tiny_p2", Parallelism::Phantom).unwrap();
+    cfg.train.max_iters = 4;
+    let server = ExecServer::for_run(&cfg).unwrap();
+    let policy = CkptPolicy { every: 4, dir: root.clone() };
+    train_with(&cfg, &server, TrainOptions { ckpt: Some(policy), resume: None }).unwrap();
+    let snap = Snapshot::load(&root.join("ckpt-000004")).unwrap();
+
+    let mut wrong_seed = cfg.clone();
+    wrong_seed.train.seed ^= 1;
+    wrong_seed.train.max_iters = 8;
+    let opts = TrainOptions { ckpt: None, resume: Some(snap.clone()) };
+    let err = train_with(&wrong_seed, &server, opts);
+    assert!(err.is_err(), "a different data seed must refuse to resume");
+
+    let mut wrong_opt = cfg.clone();
+    wrong_opt.train.optimizer = OptimizerConfig::Sgd { lr: 0.9 };
+    wrong_opt.train.max_iters = 8;
+    let err = train_with(&wrong_opt, &server, TrainOptions { ckpt: None, resume: Some(snap) });
+    assert!(err.is_err(), "a different optimizer must refuse to resume");
+    std::fs::remove_dir_all(&root).ok();
+}
+
+/// A trained TP p=8 snapshot re-sharded to PP p=2 runs through the REAL
+/// sharded forward pipeline (serve pool) and matches the TP source's
+/// host-side forward — the acceptance-criteria scenario end-to-end,
+/// including the disk round-trip of the dense-phantom layout.
+#[test]
+fn trained_tp_snapshot_reshards_to_pp_and_serves() {
+    let root = tdir("reshard-serve");
+    let mut tp_cfg = preset("tiny_p2", Parallelism::Tensor).unwrap();
+    tp_cfg.p = 8;
+    // k is unused by TP; it must only satisfy k < n/p for config validation.
+    tp_cfg.model = ModelConfig { n: 32, layers: 2, k: 2 };
+    tp_cfg.artifact = Some("ckpt_tp8".to_string());
+    tp_cfg.train.max_iters = 6;
+    let server = ExecServer::for_run(&tp_cfg).unwrap();
+    let policy = CkptPolicy { every: 6, dir: root.clone() };
+    train_with(&tp_cfg, &server, TrainOptions { ckpt: Some(policy), resume: None }).unwrap();
+
+    let tp_snap = Snapshot::load(&root.join("ckpt-000006")).unwrap();
+    let pp_snap = reshard(&tp_snap, 2, Parallelism::Phantom).unwrap();
+    assert_eq!(pp_snap.k(), 16, "dense-phantom conversion: k = n/p");
+    // disk round-trip of the re-sharded layout
+    let pp_dir = root.join("resharded-pp2");
+    pp_snap.save(&pp_dir).unwrap();
+    let pp_snap = Snapshot::load(&pp_dir).unwrap();
+    assert_eq!(pp_snap.progress.iter, tp_snap.progress.iter, "progress survives reshard");
+
+    // host-side equivalence
+    let mut rng = Prng::new(0x7E57);
+    let x = Tensor::randn(&[6, 32], 1.0, &mut rng);
+    let want = tp_snap.forward_host(&x).unwrap();
+    let got = pp_snap.forward_host(&x).unwrap();
+    assert_close(got.data(), want.data(), 1e-4, 1e-5).unwrap();
+
+    // through the real sharded pipeline: a p=2 PP pool hot-swapped onto
+    // the re-sharded snapshot must reproduce the TP source's outputs.
+    let mut pool_cfg = preset("tiny_p2", Parallelism::Phantom).unwrap();
+    let exec = ExecServer::for_run(&pool_cfg).unwrap();
+    pool_cfg.train.seed = 0xD1FF; // pool starts with unrelated weights
+    let scfg = ServeConfig {
+        queue_depth: 16,
+        max_batch: 8,
+        linger_s: 1e-3,
+        mode: Parallelism::Phantom,
+    };
+    let mut server = Server::start(&pool_cfg, scfg, &exec).unwrap();
+    server.hot_swap(&pp_snap).unwrap();
+    for i in 0..6usize {
+        let row = Tensor::from_vec(&[32], x.data()[i * 32..(i + 1) * 32].to_vec()).unwrap();
+        server.submit_blocking(1e-3 * (i + 1) as f64, row).unwrap();
+    }
+    let (responses, stats, _) = server.finish().unwrap();
+    assert_eq!(responses.len(), 6);
+    assert_eq!(stats.rejected, 0);
+    for (i, r) in responses.iter().enumerate() {
+        let want_row = &want.data()[i * 32..(i + 1) * 32];
+        assert_close(r.y.data(), want_row, 1e-4, 1e-5)
+            .unwrap_or_else(|e| panic!("query {i} after swap: {e}"));
+    }
+    std::fs::remove_dir_all(&root).ok();
+}
+
+/// Elastic PP merge chain p=8 -> p=4 -> p=2 on an initialized model stays
+/// forward-equivalent and keeps the compressed structure (k scales by the
+/// merge factor instead of densifying).
+#[test]
+fn elastic_pp_merge_chain_is_equivalent() {
+    let mut cfg = preset("tiny_p2", Parallelism::Phantom).unwrap();
+    cfg.p = 8;
+    cfg.model = ModelConfig { n: 64, layers: 2, k: 3 };
+    cfg.artifact = Some("ckpt_pp8".to_string());
+    let p8 = Snapshot::init(&cfg).unwrap();
+    let p4 = reshard(&p8, 4, Parallelism::Phantom).unwrap();
+    let p2 = reshard(&p4, 2, Parallelism::Phantom).unwrap();
+    assert_eq!(p4.k(), 6);
+    assert_eq!(p2.k(), 12);
+
+    let mut rng = Prng::new(0xE1a5);
+    let x = Tensor::randn(&[5, 64], 1.0, &mut rng);
+    let want = p8.forward_host(&x).unwrap();
+    for (snap, tag) in [(&p4, "p=4"), (&p2, "p=2")] {
+        let got = snap.forward_host(&x).unwrap();
+        assert_close(got.data(), want.data(), 1e-4, 1e-5)
+            .unwrap_or_else(|e| panic!("{tag}: {e}"));
+    }
+}
+
+/// Queries queued before a hot swap are served by the new weights — none
+/// dropped, none reordered — while queries dispatched before the swap kept
+/// the old weights.
+#[test]
+fn hot_swap_preserves_queued_queries() {
+    let cfg = preset("tiny_p2", Parallelism::Phantom).unwrap();
+    let exec = ExecServer::for_run(&cfg).unwrap();
+    let n = cfg.model.n;
+    let old_snap = Snapshot::init(&cfg).unwrap(); // == the pool's start weights
+
+    // A different model to swap in: TP p=4 with another seed, re-sharded
+    // down to this pool's p=2 phantom layout.
+    let mut other = cfg.clone();
+    other.mode = Parallelism::Tensor;
+    other.p = 4;
+    other.train.seed = 0x5EED5;
+    other.artifact = Some("ckpt_swap_src".to_string());
+    let new_snap = reshard(&Snapshot::init(&other).unwrap(), 2, Parallelism::Phantom).unwrap();
+
+    let scfg = ServeConfig {
+        queue_depth: 16,
+        max_batch: 4,
+        linger_s: 1e-3,
+        mode: Parallelism::Phantom,
+    };
+    let mut server = Server::start(&cfg, scfg, &exec).unwrap();
+    let mut rng = Prng::new(0xABCD);
+    let rows: Vec<Tensor> = (0..8).map(|_| Tensor::randn(&[n], 1.0, &mut rng)).collect();
+
+    // First 4 queries: the fill rule (max_batch = 4) dispatches them at the
+    // 4th arrival, with the ORIGINAL weights.
+    for (i, row) in rows[..4].iter().enumerate() {
+        server.submit_blocking(1e-4 * (i + 1) as f64, row.clone()).unwrap();
+    }
+    // Next 3 arrive and stay queued (not enough for the fill rule, linger
+    // deadline not yet passed by the frontier).
+    for (i, row) in rows[4..7].iter().enumerate() {
+        server.submit_blocking(1.0 + 1e-4 * (i + 1) as f64, row.clone()).unwrap();
+    }
+    assert_eq!(server.queued(), 3, "three queries must still be queued at the swap");
+    server.hot_swap(&new_snap).unwrap();
+    // One more query after the swap, then drain.
+    server.submit_blocking(2.0, rows[7].clone()).unwrap();
+    let (responses, stats, _) = server.finish().unwrap();
+
+    assert_eq!(responses.len(), 8, "hot swap must not drop queued queries");
+    assert_eq!(stats.rejected, 0);
+    for (i, r) in responses.iter().enumerate() {
+        assert_eq!(r.id, i as u64, "responses must stay in admission order");
+    }
+
+    let x_all = {
+        let mut flat = Vec::with_capacity(8 * n);
+        for row in &rows {
+            flat.extend_from_slice(row.data());
+        }
+        Tensor::from_vec(&[8, n], flat).unwrap()
+    };
+    let y_old = old_snap.forward_host(&x_all).unwrap();
+    let y_new = new_snap.forward_host(&x_all).unwrap();
+    for (i, r) in responses.iter().enumerate() {
+        let (want, tag) = if i < 4 {
+            (&y_old.data()[i * n..(i + 1) * n], "old")
+        } else {
+            (&y_new.data()[i * n..(i + 1) * n], "new")
+        };
+        assert_close(r.y.data(), want, 1e-4, 1e-5)
+            .unwrap_or_else(|e| panic!("query {i} ({tag} weights): {e}"));
+    }
+    // The two models genuinely differ, so the swap was observable.
+    let mut max_diff = 0.0f32;
+    for (a, b) in y_old.data().iter().zip(y_new.data()) {
+        max_diff = max_diff.max((a - b).abs());
+    }
+    assert!(max_diff > 1e-3, "swap target must differ from the start weights");
+}
+
+/// Save/restore/reshard throughput -> BENCH_ckpt.json (CI artifact), read
+/// back through util::json::read_records_json.
+#[test]
+fn ckpt_perf_trajectory_records() {
+    let mut cfg = preset("tiny_p2", Parallelism::Phantom).unwrap();
+    cfg.p = 4;
+    cfg.model = ModelConfig { n: 128, layers: 2, k: 8 };
+    cfg.artifact = Some("ckpt_bench".to_string());
+    let snap = Snapshot::init(&cfg).unwrap();
+    let root = tdir("bench");
+    let dir = root.join("snap");
+
+    let t0 = std::time::Instant::now();
+    snap.save(&dir).unwrap();
+    let save_s = t0.elapsed().as_secs_f64();
+
+    let bytes: u64 = std::fs::read_dir(&dir)
+        .unwrap()
+        .filter_map(|e| e.ok())
+        .map(|e| e.metadata().map(|m| m.len()).unwrap_or(0))
+        .sum();
+
+    let t0 = std::time::Instant::now();
+    let loaded = Snapshot::load(&dir).unwrap();
+    let load_s = t0.elapsed().as_secs_f64();
+
+    let t0 = std::time::Instant::now();
+    let merged = reshard(&loaded, 2, Parallelism::Phantom).unwrap();
+    let reshard_s = t0.elapsed().as_secs_f64();
+    assert_eq!(merged.p(), 2);
+
+    let mb = bytes as f64 / 1e6;
+    let records = vec![
+        ("snapshot_mb".to_string(), mb),
+        ("save_s".to_string(), save_s),
+        ("load_s".to_string(), load_s),
+        ("reshard_p4_to_p2_s".to_string(), reshard_s),
+        ("save_mb_per_s".to_string(), mb / save_s.max(1e-9)),
+        ("load_mb_per_s".to_string(), mb / load_s.max(1e-9)),
+    ];
+    let path = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../BENCH_ckpt.json");
+    write_records_json(&path, &records).unwrap();
+
+    let back = read_records_json(&path).unwrap();
+    for key in ["snapshot_mb", "save_s", "load_s", "reshard_p4_to_p2_s"] {
+        let (_, v) = back
+            .iter()
+            .find(|(k, _)| k == key)
+            .unwrap_or_else(|| panic!("missing record {key}"));
+        assert!(*v > 0.0, "{key} must be positive, got {v}");
+    }
+    eprintln!(
+        "ckpt trajectory: {mb:.2} MB, save {save_s:.4}s, load {load_s:.4}s -> {}",
+        path.display()
+    );
+    std::fs::remove_dir_all(&root).ok();
+}
