@@ -27,7 +27,8 @@ fn main() -> Result<()> {
         cfg.p, cfg.model.n
     );
     let policy = CkptPolicy { every: 4, dir: ckpt_dir.clone() };
-    let full = train_with(&cfg, &server, TrainOptions { ckpt: Some(policy), resume: None })?;
+    let opts = TrainOptions { ckpt: Some(policy), resume: None, ..Default::default() };
+    let full = train_with(&cfg, &server, opts)?;
     println!("    final loss {:.6}", full.losses.last().unwrap());
 
     // ---- 2. "crash" after iteration 8, resume to 12 ----------------------
@@ -35,8 +36,11 @@ fn main() -> Result<()> {
     let snap8 = Snapshot::load(&ckpt_dir.join("ckpt-000008"))?;
     let mut resume_cfg = snap8.config.clone();
     resume_cfg.train.max_iters = 12;
-    let resumed =
-        train_with(&resume_cfg, &server, TrainOptions { ckpt: None, resume: Some(snap8) })?;
+    let resumed = train_with(
+        &resume_cfg,
+        &server,
+        TrainOptions { ckpt: None, resume: Some(snap8), ..Default::default() },
+    )?;
     assert_eq!(
         resumed.losses, full.losses,
         "resumed trajectory must be bit-identical to the uninterrupted run"

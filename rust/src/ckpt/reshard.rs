@@ -405,6 +405,88 @@ mod tests {
     }
 
     #[test]
+    fn p1_tp_round_trip_is_identity() {
+        // Edge case: gather everything onto a single rank and re-shard
+        // back out. p=1 is a legal TP layout (the dense model itself);
+        // the round trip must be an exact copy, not just close.
+        let src = snap(Parallelism::Tensor, 4, 32, 0);
+        let dense = reshard(&src, 1, Parallelism::Tensor).unwrap();
+        assert_eq!(dense.p(), 1);
+        assert_eq!(dense.shards.len(), 1);
+        assert_forward_equiv(&src, &dense, "tp p=4 -> p=1");
+        let back = reshard(&dense, 4, Parallelism::Tensor).unwrap();
+        for (a, b) in src.shards.iter().zip(&back.shards) {
+            match (&a.params, &b.params) {
+                (RankParams::Tensor(x), RankParams::Tensor(y)) => {
+                    assert_eq!(x.weights, y.weights, "p=1 round trip must be bitwise");
+                    assert_eq!(x.biases, y.biases);
+                }
+                _ => panic!("mode"),
+            }
+        }
+        // PP cannot target p=1 (no remote ranks to hold phantom layers),
+        // but a PP source can collapse to the dense p=1 TP layout.
+        let pp = snap(Parallelism::Phantom, 4, 32, 3);
+        assert!(reshard(&pp, 1, Parallelism::Phantom).is_err());
+        let collapsed = reshard(&pp, 1, Parallelism::Tensor).unwrap();
+        assert_forward_equiv(&pp, &collapsed, "pp p=4 -> dense p=1");
+    }
+
+    #[test]
+    fn non_divisor_targets_error_cleanly_in_both_modes() {
+        // p' must divide n: n=32 rejects p'=3, 5, 7, 12, 33 for TP and PP
+        // alike, with an error that names the constraint instead of
+        // slicing garbage.
+        let tp = snap(Parallelism::Tensor, 4, 32, 0);
+        let pp = snap(Parallelism::Phantom, 4, 32, 3);
+        for bad_p in [3usize, 5, 7, 12, 33] {
+            for (src, mode) in [(&tp, Parallelism::Tensor), (&pp, Parallelism::Phantom)] {
+                let err = reshard(src, bad_p, mode)
+                    .expect_err(&format!("p={bad_p} must be rejected"));
+                let msg = err.to_string();
+                assert!(msg.contains("divide"), "{mode:?} p={bad_p}: {msg}");
+            }
+        }
+    }
+
+    #[test]
+    fn reshard_then_reshard_back_is_exact_tp() {
+        // TP column cuts are pure copies, so p=4 -> p=8 -> p=4 must
+        // restore every shard bitwise (not merely forward-equivalent).
+        let src = snap(Parallelism::Tensor, 4, 64, 0);
+        let wide = reshard(&src, 8, Parallelism::Tensor).unwrap();
+        let back = reshard(&wide, 4, Parallelism::Tensor).unwrap();
+        for (a, b) in src.shards.iter().zip(&back.shards) {
+            match (&a.params, &b.params) {
+                (RankParams::Tensor(x), RankParams::Tensor(y)) => {
+                    assert_eq!(x.weights, y.weights, "reshard-back must be bitwise");
+                    assert_eq!(x.biases, y.biases);
+                }
+                _ => panic!("mode"),
+            }
+        }
+    }
+
+    #[test]
+    fn reshard_then_reshard_back_stays_forward_equivalent_pp() {
+        // PP round trips are not bitwise (densify/merge change the
+        // factorization) but must stay forward-equivalent and structurally
+        // valid through a full cycle: merge down, densify up, and a
+        // cross-mode PP -> TP -> PP loop.
+        let src = snap(Parallelism::Phantom, 8, 64, 3);
+        let down = reshard(&src, 2, Parallelism::Phantom).unwrap();
+        let up = reshard(&down, 8, Parallelism::Phantom).unwrap();
+        up.validate().unwrap();
+        assert_forward_equiv(&src, &up, "pp p=8 -> p=2 -> p=8");
+
+        let as_tp = reshard(&src, 4, Parallelism::Tensor).unwrap();
+        let back_pp = reshard(&as_tp, 8, Parallelism::Phantom).unwrap();
+        back_pp.validate().unwrap();
+        assert_eq!(back_pp.k(), 8, "dense-phantom conversion uses k = n/p");
+        assert_forward_equiv(&src, &back_pp, "pp -> tp -> pp");
+    }
+
+    #[test]
     fn identity_reshard_preserves_weights_bitwise() {
         let src = snap(Parallelism::Tensor, 4, 32, 0);
         let re = reshard(&src, 4, Parallelism::Tensor).unwrap();

@@ -133,6 +133,20 @@ COMMANDS:
                            [--tol <x>]    integrity check + host-side forward;
                                           with --against, proves forward
                                           equivalence on a shared batch
+    chaos        Deterministic fault-injection & conformance harness
+                   --scenario <sweep|train|serve|all>   which drivers to run [all]
+                   --configs <N>          differential-sweep size   [25]
+                   --iters <N>            train iterations per case [3]
+                   --seed <s>             sweep + fault-plan seed
+                   --preset <name>        chaos scenario geometry   [tiny_p2]
+                   --crash-rank <r>       rank killed by the chaos runs [1]
+                   --crash-iter <i>       training iteration of the kill [3]
+                   --out <file.json>      conformance records [BENCH_conformance.json]
+                                          (sweep: distributed ≡ single-rank
+                                          oracle ≡ naive math, TP ≡ PP across
+                                          reshard; train: crash -> resume is
+                                          bit-identical; serve: crash ->
+                                          hot_swap recovery, zero drops)
     predict      One-shot analytic prediction (Frontier scale)
                    --n <n> --p <p> --k <k> [--layers 2] [--batch 32]
     inspect      List artifact configs in the manifest

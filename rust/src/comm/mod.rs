@@ -18,6 +18,17 @@
 //! Message-size accounting follows Table II: the `m` fed to the model is the
 //! per-rank payload in floats (All-Gather: contribution size; Reduce-Scatter:
 //! slot size; All-Reduce / Broadcast: full tensor size).
+//!
+//! **Fault hooks** (DESIGN.md §9): every endpoint can carry a
+//! `FaultInjector` consulted once per rendezvous collective. The injector
+//! sees `(rank, seq, op)` — `seq` is this endpoint's collective counter —
+//! and answers with a `FaultAction`: proceed, stall the virtual clock
+//! (straggler), drop the message (peers hit the rendezvous timeout),
+//! poison the fabric, or crash the rank (panic after poisoning so peers
+//! surface errors promptly instead of hanging). Faults are charged to the
+//! *virtual* clock, never to wall-clock sleeps, so an injected schedule is
+//! bit-reproducible; `testkit::FaultPlan` builds seeded schedules on top
+//! of this hook.
 
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
@@ -84,6 +95,58 @@ impl CommStats {
     }
 }
 
+/// What an armed `FaultInjector` tells an endpoint to do at a collective.
+#[derive(Debug, Clone, PartialEq)]
+pub enum FaultAction {
+    /// No fault: run the collective normally.
+    Proceed,
+    /// Straggle: stall this rank's virtual clock by `seconds` (charged as
+    /// Idle) before entering the rendezvous. Peers absorb the stall as
+    /// rendezvous wait via the max-arrival rule.
+    Delay { seconds: f64 },
+    /// Lose the message: this rank never deposits and errors out; peers
+    /// blocked in the rendezvous surface the configured timeout.
+    Drop,
+    /// Poison the fabric out-of-band, then error. Peers wake promptly.
+    Poison,
+    /// Kill the rank: poison the fabric (so peers surface errors instead
+    /// of hanging) and panic with a recognizable payload. Propagated as a
+    /// structured error by `Fabric::run_ranks` and the coordinator driver.
+    Crash,
+}
+
+/// Per-endpoint fault hook, consulted once per rendezvous collective.
+/// `seq` counts this endpoint's collectives from 0 (`charge_modeled` and
+/// the internal delegation of `all_reduce_scalar` do not tick it).
+pub trait FaultInjector: Send {
+    fn on_collective(&mut self, rank: usize, seq: u64, op: &'static str) -> FaultAction;
+}
+
+/// Cloneable per-rank injector source: drivers that own fabric construction
+/// (`coordinator::train_with`, `serve::RankPool`) accept one of these and
+/// arm each endpoint at spawn time, so rank workers run unmodified.
+#[derive(Clone)]
+pub struct InjectorFactory(Arc<dyn Fn(usize) -> Option<Box<dyn FaultInjector>> + Send + Sync>);
+
+impl InjectorFactory {
+    pub fn new(
+        f: impl Fn(usize) -> Option<Box<dyn FaultInjector>> + Send + Sync + 'static,
+    ) -> InjectorFactory {
+        InjectorFactory(Arc::new(f))
+    }
+
+    /// The injector for one rank (`None` = that rank runs fault-free).
+    pub fn for_rank(&self, rank: usize) -> Option<Box<dyn FaultInjector>> {
+        (self.0)(rank)
+    }
+}
+
+impl std::fmt::Debug for InjectorFactory {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("InjectorFactory(..)")
+    }
+}
+
 /// One rank's handle onto the fabric. Moves into the rank's thread.
 pub struct Endpoint {
     pub rank: usize,
@@ -91,6 +154,9 @@ pub struct Endpoint {
     shared: Arc<Shared>,
     profile: NetworkProfile,
     pub stats: CommStats,
+    injector: Option<Box<dyn FaultInjector>>,
+    /// Rendezvous collectives issued by this endpoint (fault-hook clock).
+    collective_seq: u64,
 }
 
 /// The fabric constructor.
@@ -129,12 +195,158 @@ impl Fabric {
                 shared: shared.clone(),
                 profile,
                 stats: CommStats::default(),
+                injector: None,
+                collective_seq: 0,
             })
             .collect()
+    }
+
+    /// Run a closure on p fabric ranks, one OS thread each, and return the
+    /// per-rank results in rank order. A panicking rank is propagated as a
+    /// structured `RankPanic` (rank id + panic payload + the offending
+    /// collective context embedded in the payload) instead of a bare
+    /// join-handle unwrap, so chaos tests can assert on the failure shape.
+    pub fn run_ranks<T: Send + 'static>(
+        p: usize,
+        profile: NetworkProfile,
+        timeout: Duration,
+        f: impl Fn(Endpoint, EnergyLedger) -> T + Send + Sync + 'static,
+    ) -> Result<Vec<T>, RankPanic> {
+        let endpoints = Fabric::with_timeout(p, profile, timeout);
+        let f = Arc::new(f);
+        let handles: Vec<_> = endpoints
+            .into_iter()
+            .map(|ep| {
+                let f = f.clone();
+                let rank = ep.rank;
+                std::thread::Builder::new()
+                    .name(format!("fabric-rank-{rank}"))
+                    .spawn(move || f(ep, EnergyLedger::new()))
+                    .expect("spawning fabric rank thread")
+            })
+            .collect();
+        let (ok, panic) = join_rank_threads(handles);
+        match panic {
+            None => Ok(ok.into_iter().map(|(_, v)| v).collect()),
+            Some(p) => Err(p),
+        }
+    }
+}
+
+/// Join rank-indexed thread handles (index = rank), separating successful
+/// results from panics. The single place crash-surfacing join semantics
+/// live: `Fabric::run_ranks`, the training driver, and the serve pool all
+/// report panicking ranks through this.
+pub fn join_rank_threads<T>(
+    handles: Vec<std::thread::JoinHandle<T>>,
+) -> (Vec<(usize, T)>, Option<RankPanic>) {
+    let mut out = Vec::with_capacity(handles.len());
+    let mut failures: Vec<(usize, String)> = Vec::new();
+    for (rank, h) in handles.into_iter().enumerate() {
+        match h.join() {
+            Ok(v) => out.push((rank, v)),
+            Err(payload) => failures.push((rank, panic_payload(payload))),
+        }
+    }
+    let panic = if failures.is_empty() { None } else { Some(RankPanic::new(failures)) };
+    (out, panic)
+}
+
+/// Structured failure from `Fabric::run_ranks`: which rank(s) panicked and
+/// with what payload, in rank order.
+#[derive(Debug)]
+pub struct RankPanic {
+    /// Lowest-numbered panicking rank.
+    pub rank: usize,
+    /// That rank's panic payload.
+    pub payload: String,
+    /// Every panicking rank with its payload, in rank order.
+    pub all: Vec<(usize, String)>,
+}
+
+impl RankPanic {
+    fn new(all: Vec<(usize, String)>) -> RankPanic {
+        let (rank, payload) = all.first().cloned().expect("at least one failure");
+        RankPanic { rank, payload, all }
+    }
+}
+
+impl std::fmt::Display for RankPanic {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "rank {} panicked: {}", self.rank, self.payload)?;
+        if self.all.len() > 1 {
+            write!(f, " ({} ranks panicked in total)", self.all.len())?;
+        }
+        Ok(())
+    }
+}
+
+impl std::error::Error for RankPanic {}
+
+/// Best-effort extraction of a panic payload into a printable string.
+pub fn panic_payload(e: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = e.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = e.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
     }
 }
 
 impl Endpoint {
+    /// Install a fault injector on this endpoint. Subsequent rendezvous
+    /// collectives consult it before depositing.
+    pub fn arm_faults(&mut self, injector: Box<dyn FaultInjector>) {
+        self.injector = Some(injector);
+    }
+
+    /// Rendezvous collectives issued so far (the fault-hook sequence clock).
+    pub fn collective_seq(&self) -> u64 {
+        self.collective_seq
+    }
+
+    /// Consult the armed injector (if any) before a rendezvous collective.
+    /// Ticks the per-endpoint sequence counter exactly once per collective.
+    fn fault_gate(&mut self, op: &'static str, ledger: &mut EnergyLedger) -> Result<()> {
+        let seq = self.collective_seq;
+        self.collective_seq += 1;
+        let Some(inj) = self.injector.as_mut() else {
+            return Ok(());
+        };
+        match inj.on_collective(self.rank, seq, op) {
+            FaultAction::Proceed => Ok(()),
+            FaultAction::Delay { seconds } => {
+                // Straggler: virtual-clock stall only — never a real sleep,
+                // so the injected schedule stays bit-reproducible.
+                ledger.advance(seconds, Activity::Idle);
+                Ok(())
+            }
+            FaultAction::Drop => Err(anyhow!(
+                "injected fault: rank {} dropped '{op}' (collective #{seq}); \
+                 peers will surface the rendezvous timeout",
+                self.rank
+            )),
+            FaultAction::Poison => {
+                self.poison();
+                Err(anyhow!(
+                    "injected fault: rank {} poisoned the fabric at '{op}' (collective #{seq})",
+                    self.rank
+                ))
+            }
+            FaultAction::Crash => {
+                // Poison first so peers blocked in the rendezvous wake with
+                // an error instead of waiting out the timeout: a crash must
+                // surface, never hang.
+                self.poison();
+                panic!(
+                    "injected fault: rank {} crashed at '{op}' (collective #{seq})",
+                    self.rank
+                );
+            }
+        }
+    }
+
     /// Generic rendezvous: deposit `t`, let the last arriver run `combine`
     /// over all deposits (ordered by rank) producing per-rank results, and
     /// return this rank's result plus the max arrival clock.
@@ -283,6 +495,7 @@ impl Endpoint {
     /// All-Gather: every rank contributes `t`; every rank receives the
     /// rank-ordered stack `[p, ...t.shape]`. Message size m = numel(t).
     pub fn all_gather(&mut self, t: Tensor, ledger: &mut EnergyLedger) -> Result<Tensor> {
+        self.fault_gate("all_gather", ledger)?;
         let m = t.numel();
         let (result, max_arrival) = self.exchange("all_gather", t, ledger.now_s, |parts| {
             let stacked = Tensor::stack(&parts)?;
@@ -296,6 +509,7 @@ impl Endpoint {
     /// Reduce-Scatter: every rank contributes `[p, ...]`; slot j is summed
     /// across ranks and delivered to rank j. Message size m = slot numel.
     pub fn reduce_scatter(&mut self, t: Tensor, ledger: &mut EnergyLedger) -> Result<Tensor> {
+        self.fault_gate("reduce_scatter", ledger)?;
         let p = self.p;
         if t.shape().first() != Some(&p) {
             return Err(anyhow!(
@@ -323,6 +537,7 @@ impl Endpoint {
     /// All-Reduce (sum): every rank contributes `t` and receives the
     /// elementwise sum. Message size m = numel(t).
     pub fn all_reduce(&mut self, t: Tensor, ledger: &mut EnergyLedger) -> Result<Tensor> {
+        self.fault_gate("all_reduce", ledger)?;
         let m = t.numel();
         let (result, max_arrival) = self.exchange("all_reduce", t, ledger.now_s, |parts| {
             let mut acc = parts[0].clone();
@@ -344,6 +559,7 @@ impl Endpoint {
         t: Tensor,
         ledger: &mut EnergyLedger,
     ) -> Result<Tensor> {
+        self.fault_gate("broadcast", ledger)?;
         let (result, max_arrival) = self.exchange("broadcast", t, ledger.now_s, move |parts| {
             let chosen = parts[root].clone();
             Ok(vec![chosen; parts.len()])
@@ -356,6 +572,7 @@ impl Endpoint {
 
     /// Barrier: pure synchronization (idle charge only, no wire time).
     pub fn barrier(&mut self, ledger: &mut EnergyLedger) -> Result<()> {
+        self.fault_gate("barrier", ledger)?;
         let (_, max_arrival) =
             self.exchange("barrier", Tensor::zeros(&[0]), ledger.now_s, |parts| {
                 Ok(vec![Tensor::zeros(&[0]); parts.len()])
@@ -411,22 +628,14 @@ mod tests {
     use crate::simnet::NetworkProfile;
     use std::thread;
 
-    /// Run a closure on p fabric ranks, each on its own thread; returns the
-    /// per-rank results in rank order.
+    /// Test shorthand: `Fabric::run_ranks` at the frontier profile and the
+    /// production rendezvous timeout, expecting no rank to panic.
     pub fn run_ranks<T: Send + 'static>(
         p: usize,
         f: impl Fn(Endpoint, EnergyLedger) -> T + Send + Sync + 'static,
     ) -> Vec<T> {
-        let endpoints = Fabric::new(p, NetworkProfile::frontier());
-        let f = Arc::new(f);
-        let handles: Vec<_> = endpoints
-            .into_iter()
-            .map(|ep| {
-                let f = f.clone();
-                thread::spawn(move || f(ep, EnergyLedger::new()))
-            })
-            .collect();
-        handles.into_iter().map(|h| h.join().expect("rank thread panicked")).collect()
+        Fabric::run_ranks(p, NetworkProfile::frontier(), RENDEZVOUS_TIMEOUT, f)
+            .expect("no rank panicked")
     }
 
     #[test]
@@ -596,6 +805,129 @@ mod tests {
         assert_eq!(total.collectives(), 5);
         assert_eq!(total.floats_moved, 150);
         assert!((total.comm_s - 0.75).abs() < 1e-15);
+    }
+
+    /// A one-off injector for hook tests: fire `action` on `(rank, seq)`.
+    struct OneShot {
+        rank: usize,
+        seq: u64,
+        action: FaultAction,
+    }
+
+    impl FaultInjector for OneShot {
+        fn on_collective(&mut self, rank: usize, seq: u64, _op: &'static str) -> FaultAction {
+            if rank == self.rank && seq == self.seq {
+                self.action.clone()
+            } else {
+                FaultAction::Proceed
+            }
+        }
+    }
+
+    #[test]
+    fn run_ranks_propagates_panic_as_structured_error() {
+        let err = Fabric::run_ranks(
+            3,
+            NetworkProfile::frontier(),
+            Duration::from_millis(200),
+            |ep, _led| {
+                if ep.rank == 1 {
+                    panic!("boom from rank {}", ep.rank);
+                }
+                ep.rank
+            },
+        )
+        .expect_err("rank 1 panicked");
+        assert_eq!(err.rank, 1);
+        assert!(err.payload.contains("boom from rank 1"), "{}", err.payload);
+        assert_eq!(err.all.len(), 1);
+        let msg = err.to_string();
+        assert!(msg.contains("rank 1 panicked"), "{msg}");
+    }
+
+    #[test]
+    fn injected_delay_stalls_straggler_and_peers_absorb_it() {
+        let delay = 3.0f64;
+        let out = run_ranks(2, move |mut ep, mut led| {
+            if ep.rank == 1 {
+                ep.arm_faults(Box::new(OneShot {
+                    rank: 1,
+                    seq: 0,
+                    action: FaultAction::Delay { seconds: delay },
+                }));
+            }
+            ep.all_reduce(Tensor::filled(&[4], 1.0), &mut led).unwrap();
+            led
+        });
+        let wire = NetworkProfile::frontier().time(Collective::AllReduce, 4, 2);
+        for led in &out {
+            // Both clocks end at the injected stall + wire time.
+            assert!((led.now_s - (delay + wire)).abs() < 1e-12, "{}", led.now_s);
+        }
+        // Rank 0 waited the stall out at the rendezvous; rank 1 idled
+        // through its own injected stall. Either way the stall is Idle.
+        assert!((out[0].idle_s() - delay).abs() < 1e-12);
+        assert!((out[1].idle_s() - delay).abs() < 1e-12);
+    }
+
+    #[test]
+    fn injected_crash_poisons_peers_and_surfaces_rank_id() {
+        let err = Fabric::run_ranks(
+            2,
+            NetworkProfile::frontier(),
+            Duration::from_secs(60),
+            |mut ep, mut led| {
+                if ep.rank == 0 {
+                    let f = OneShot { rank: 0, seq: 1, action: FaultAction::Crash };
+                    ep.arm_faults(Box::new(f));
+                }
+                ep.all_reduce(Tensor::filled(&[2], 1.0), &mut led).unwrap();
+                // Second collective: rank 0 crashes; rank 1 must error
+                // promptly via the poison signal, not the 60 s timeout.
+                let t0 = std::time::Instant::now();
+                let r = ep.all_reduce(Tensor::filled(&[2], 1.0), &mut led);
+                if ep.rank == 1 {
+                    assert!(r.is_err(), "peer of a crashed rank must error");
+                    assert!(t0.elapsed() < Duration::from_secs(10), "woke by poison");
+                }
+            },
+        )
+        .expect_err("rank 0 crashed");
+        assert_eq!(err.rank, 0);
+        assert!(err.payload.contains("injected fault"), "{}", err.payload);
+        assert!(err.payload.contains("collective #1"), "{}", err.payload);
+    }
+
+    #[test]
+    fn injected_drop_errors_the_dropping_rank() {
+        // The peer-side timeout path is covered with a short timeout in
+        // tests/chaos_integration.rs; here only the dropping rank runs the
+        // collective so the production 60 s fabric never has to wait.
+        let out = run_ranks(2, |mut ep, mut led| {
+            if ep.rank == 1 {
+                ep.arm_faults(Box::new(OneShot { rank: 1, seq: 0, action: FaultAction::Drop }));
+                let e = ep.all_reduce(Tensor::filled(&[2], 1.0), &mut led).unwrap_err();
+                assert!(e.to_string().contains("dropped"), "{e}");
+            }
+            ep.rank
+        });
+        assert_eq!(out, vec![0, 1]);
+    }
+
+    #[test]
+    fn fault_seq_counts_rendezvous_collectives_only() {
+        let out = run_ranks(2, |mut ep, mut led| {
+            ep.all_gather(Tensor::zeros(&[2]), &mut led).unwrap();
+            ep.all_reduce_scalar(1.0, &mut led).unwrap();
+            ep.charge_modeled(Collective::Broadcast, 8, &mut led);
+            ep.barrier(&mut led).unwrap();
+            ep.collective_seq()
+        });
+        for seq in out {
+            // all_gather + (scalar -> all_reduce) + barrier = 3 ticks;
+            // charge_modeled is not a rendezvous and must not tick.
+            assert_eq!(seq, 3);
+        }
     }
 
     #[test]

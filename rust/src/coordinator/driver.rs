@@ -21,7 +21,7 @@ use super::rank_pp::PhantomRank;
 use super::rank_tp::TensorRank;
 use super::LossReport;
 use crate::ckpt::{self, RankParams, RankShard, Snapshot, TrainProgress};
-use crate::comm::{CommStats, Fabric};
+use crate::comm::{join_rank_threads, CommStats, Fabric, InjectorFactory};
 use crate::config::{CkptPolicy, ComputeModel, Parallelism, RunConfig};
 use crate::data::{BatchCache, Teacher};
 use crate::energy::LedgerSummary;
@@ -101,6 +101,14 @@ pub struct TrainOptions {
     /// model, batch, seed, optimizer, dataset); iteration caps and loss
     /// targets may differ.
     pub resume: Option<Snapshot>,
+    /// Deterministic fault injection (testkit, DESIGN.md §9): each rank's
+    /// fabric endpoint is armed with `faults.for_rank(rank)` before it
+    /// starts training. `None` = fault-free.
+    pub faults: Option<InjectorFactory>,
+    /// Override the fabric rendezvous timeout. Chaos tests that inject
+    /// message drops shrink this to milliseconds so the peers' timeout
+    /// errors surface promptly; `None` keeps the production 60 s default.
+    pub rendezvous_timeout: Option<std::time::Duration>,
 }
 
 /// The per-iteration control message the leader sends every rank.
@@ -182,7 +190,10 @@ pub fn train_with(cfg: &RunConfig, server: &ExecServer, opts: TrainOptions) -> R
         start_iter = 0;
     }
 
-    let endpoints = Fabric::new(p, cfg.hardware.net);
+    let endpoints = match opts.rendezvous_timeout {
+        Some(t) => Fabric::with_timeout(p, cfg.hardware.net, t),
+        None => Fabric::new(p, cfg.hardware.net),
+    };
     let teacher = Teacher::new(cfg.model.n, cfg.train.seed);
     let cache = Arc::new(BatchCache::new(
         teacher,
@@ -198,7 +209,12 @@ pub fn train_with(cfg: &RunConfig, server: &ExecServer, opts: TrainOptions) -> R
     let mut cont_txs: Vec<mpsc::Sender<RankCommand>> = Vec::with_capacity(p);
 
     let mut handles = Vec::with_capacity(p);
-    for ((rank, ep), resume_shard) in endpoints.into_iter().enumerate().zip(resume_shards) {
+    for ((rank, mut ep), resume_shard) in endpoints.into_iter().enumerate().zip(resume_shards) {
+        if let Some(factory) = &opts.faults {
+            if let Some(injector) = factory.for_rank(rank) {
+                ep.arm_faults(injector);
+            }
+        }
         let (ct, cr) = mpsc::channel::<RankCommand>();
         cont_txs.push(ct);
         let cfg = cfg.clone();
@@ -284,23 +300,24 @@ pub fn train_with(cfg: &RunConfig, server: &ExecServer, opts: TrainOptions) -> R
     }
     drop(cont_txs);
 
+    // Structured crash surfacing (rank id + panic payload via RankPanic):
+    // chaos tests assert on who died and why, not a bare "thread panicked".
+    let (joined, panic) = join_rank_threads(handles);
     let mut per_rank = Vec::with_capacity(p);
     let mut rank_err: Option<anyhow::Error> = None;
-    for h in handles {
-        match h.join() {
-            Ok(Ok(r)) => per_rank.push(r),
-            Ok(Err(e)) => {
+    for (rank, res) in joined {
+        match res {
+            Ok(r) => per_rank.push(r),
+            Err(e) => {
                 if rank_err.is_none() {
-                    rank_err = Some(e.context("rank failed"));
-                }
-            }
-            Err(_) => {
-                if rank_err.is_none() {
-                    rank_err = Some(anyhow!("rank thread panicked"));
+                    rank_err = Some(e.context(format!("rank {rank} failed")));
                 }
             }
         }
     }
+    // A crash is the root cause of its peers' poisoned-fabric errors, so a
+    // panic outranks an ordinary rank error regardless of join order.
+    let rank_err = panic.map(anyhow::Error::new).or(rank_err);
     // A checkpoint-write failure is the root cause (ranks then only died of
     // the leader's disappearance), so it wins; otherwise the first rank
     // error carries the diagnosis, with the leader's observation last.

@@ -33,5 +33,6 @@ pub mod runtime;
 pub mod serve;
 pub mod simnet;
 pub mod tensor;
+pub mod testkit;
 pub mod train;
 pub mod util;

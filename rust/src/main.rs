@@ -36,6 +36,7 @@ fn run(argv: Vec<String>) -> Result<()> {
         "train" => cmd_train(&args),
         "serve" => cmd_serve(&args),
         "ckpt" => cmd_ckpt(&args),
+        "chaos" => cmd_chaos(&args),
         "experiment" => cmd_experiment(&args),
         "predict" => cmd_predict(&args),
         "inspect" => cmd_inspect(&args),
@@ -131,7 +132,8 @@ fn cmd_train(args: &Args) -> Result<()> {
         cfg.model.layers,
         server.backend_name()
     );
-    let report = coordinator::train_with(&cfg, &server, TrainOptions { ckpt, resume })?;
+    let opts = TrainOptions { ckpt, resume, ..Default::default() };
+    let report = coordinator::train_with(&cfg, &server, opts)?;
 
     let mut t = Table::new(
         &format!("Training report — {} ({})", preset_name, cfg.mode.name()),
@@ -385,6 +387,161 @@ fn cmd_ckpt(args: &Args) -> Result<()> {
         }
         other => bail!("unknown ckpt subcommand '{other}' (want inspect|reshard|verify)"),
     }
+}
+
+fn cmd_chaos(args: &Args) -> Result<()> {
+    args.check_known(&[
+        "scenario",
+        "configs",
+        "iters",
+        "seed",
+        "preset",
+        "crash-rank",
+        "crash-iter",
+        "out",
+    ])?;
+    let scenario = args.opt("scenario").unwrap_or("all");
+    if !matches!(scenario, "sweep" | "train" | "serve" | "all") {
+        bail!("unknown chaos scenario '{scenario}' (want sweep|train|serve|all)");
+    }
+    let preset_name = args.opt("preset").unwrap_or("tiny_p2");
+    let seed = args.opt_parse::<u64>("seed")?.unwrap_or(0xC4A05);
+    let crash_rank = args.opt_parse::<usize>("crash-rank")?.unwrap_or(1);
+    let crash_iter = args.opt_parse::<u64>("crash-iter")?.unwrap_or(3);
+    // Validate the chaos parameters up front, before the (comparatively
+    // expensive) differential sweep runs under --scenario all — and reject
+    // options the chosen scenario would silently ignore.
+    if scenario == "serve" && args.opt("crash-iter").is_some() {
+        bail!("--crash-iter applies to the train scenario only (serve crashes at a fixed batch)");
+    }
+    if scenario == "sweep"
+        && (args.opt("crash-rank").is_some() || args.opt("crash-iter").is_some())
+    {
+        bail!("--crash-rank/--crash-iter apply to the train/serve scenarios only");
+    }
+    if matches!(scenario, "train" | "serve")
+        && (args.opt("configs").is_some() || args.opt("iters").is_some())
+    {
+        bail!("--configs/--iters apply to the sweep scenario only");
+    }
+    if matches!(scenario, "train" | "serve" | "all") {
+        let probe = preset(preset_name, Parallelism::Phantom)?;
+        if crash_rank >= probe.p {
+            bail!(
+                "--crash-rank {crash_rank} out of range for preset '{preset_name}' (p={})",
+                probe.p
+            );
+        }
+        // The train scenario runs 8 iterations with snapshots every 2.
+        if matches!(scenario, "train" | "all") && !(2..8).contains(&crash_iter) {
+            bail!(
+                "--crash-iter {crash_iter} must be in [2, 8) (the train scenario runs 8 \
+                 iterations with snapshots every 2)"
+            );
+        }
+    }
+    let mut records: Vec<(String, f64)> = Vec::new();
+    let mut table = Table::new("Chaos & conformance harness", &["check", "result"]);
+
+    if matches!(scenario, "sweep" | "all") {
+        let sw = phantom::testkit::SweepConfig {
+            cases: args.opt_parse::<usize>("configs")?.unwrap_or(25),
+            iters: args.opt_parse::<usize>("iters")?.unwrap_or(3),
+            seed,
+            ..Default::default()
+        };
+        eprintln!(
+            "differential sweep: {} randomized configs x 2 modes, {} iters each...",
+            sw.cases, sw.iters
+        );
+        let report = phantom::testkit::run_sweep(&sw)?;
+        table.row(vec![
+            "differential sweep".into(),
+            format!(
+                "{} configs ok (loss dev {:.1e}, grad dev {:.1e}, reshard dev {:.1e})",
+                report.cases.len(),
+                report.max_loss_dev,
+                report.max_grad_dev,
+                report.max_forward_dev
+            ),
+        ]);
+        records.extend(report.records());
+    }
+
+    if matches!(scenario, "train" | "all") {
+        let mut cfg = preset(preset_name, Parallelism::Phantom)?;
+        cfg.train.seed = seed;
+        let dir = std::env::temp_dir()
+            .join(format!("phantom-chaos-{}-{}", std::process::id(), seed));
+        eprintln!(
+            "train chaos: crash rank {crash_rank} at iteration {crash_iter}, then resume..."
+        );
+        let result =
+            phantom::testkit::train_crash_resume(&cfg, 8, 2, crash_rank, crash_iter, &dir);
+        std::fs::remove_dir_all(&dir).ok(); // clean up snapshots on error paths too
+        let report = result?;
+        if !report.bit_identical {
+            bail!("crash-resume trajectory diverged from the uninterrupted run");
+        }
+        table.row(vec![
+            "train crash-resume".into(),
+            format!(
+                "bit-identical over {} iters (resumed from iter {}; \"{}\")",
+                report.baseline.len(),
+                report.resumed_from,
+                report.crash_error
+            ),
+        ]);
+        records.push(("chaos_train_bit_identical".to_string(), 1.0));
+        records.push(("chaos_train_resumed_from".to_string(), report.resumed_from as f64));
+    }
+
+    if matches!(scenario, "serve" | "all") {
+        let mut cfg = preset(preset_name, Parallelism::Phantom)?;
+        cfg.train.seed = seed;
+        let scfg = ServeConfig {
+            max_batch: cfg.train.batch,
+            queue_depth: 4 * cfg.train.batch,
+            linger_s: 1e-3,
+            mode: cfg.mode,
+        };
+        let crash_seq = phantom::testkit::collectives_per_forward(cfg.model.layers) * 2;
+        eprintln!("serve chaos: crash rank {crash_rank} mid-stream, hot-swap recovery...");
+        let report =
+            phantom::testkit::serve_crash_swap(&cfg, &scfg, 6, crash_rank, crash_seq)?;
+        if !report.outputs_match {
+            bail!("recovered serve answers diverged from the reference runs");
+        }
+        if !report.swap_observable {
+            bail!("hot-swap weights were indistinguishable — the swap was not exercised");
+        }
+        table.row(vec![
+            "serve crash + hot-swap".into(),
+            format!(
+                "{} batches, zero dropped (replayed batch {} on swapped weights)",
+                report.batches, report.recovered_batch
+            ),
+        ]);
+        records.push(("chaos_serve_outputs_match".to_string(), 1.0));
+        records.push(("chaos_serve_recovered_batch".to_string(), report.recovered_batch as f64));
+    }
+
+    print!("{}", table.markdown());
+    let out = args.opt("out").unwrap_or("BENCH_conformance.json");
+    let out_path = Path::new(out);
+    // Scoped runs (--scenario train/serve/sweep) keep the other scenarios'
+    // records: merge by key into an existing record file, don't clobber it.
+    let mut merged =
+        phantom::util::json::read_records_json(out_path).unwrap_or_default();
+    for (k, v) in records {
+        match merged.iter_mut().find(|(mk, _)| *mk == k) {
+            Some(slot) => slot.1 = v,
+            None => merged.push((k, v)),
+        }
+    }
+    phantom::serve::write_records_json(out_path, &merged)?;
+    eprintln!("wrote {out}");
+    Ok(())
 }
 
 fn report_json(r: &coordinator::TrainReport) -> Json {

@@ -24,7 +24,7 @@ pub mod pool;
 
 pub use batcher::{Admission, Response, Server, ServerStats};
 pub use loadgen::{bench_records, combined_records, run_load, LoadGenConfig, LoadReport};
-pub use pool::{PoolRankReport, RankPool};
+pub use pool::{PoolOptions, PoolRankReport, RankPool};
 
 use anyhow::{Context, Result};
 

@@ -21,7 +21,7 @@ use std::thread;
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::ckpt::{RankParams, Snapshot};
-use crate::comm::{CommStats, Fabric};
+use crate::comm::{join_rank_threads, CommStats, Fabric, InjectorFactory};
 use crate::config::{Parallelism, RunConfig, ServeConfig};
 use crate::coordinator::{pp_forward_shard, tp_forward_shard};
 use crate::energy::{EnergyLedger, LedgerSummary};
@@ -77,12 +77,33 @@ pub struct RankPool {
     free_s: f64,
 }
 
+/// Optional pool wiring for chaos/conformance testing (DESIGN.md §9).
+#[derive(Debug, Clone, Default)]
+pub struct PoolOptions {
+    /// Deterministic fault injection: each rank endpoint is armed with
+    /// `faults.for_rank(rank)` before serving. `None` = fault-free.
+    pub faults: Option<InjectorFactory>,
+    /// Override the fabric rendezvous timeout (chaos tests shrink it so
+    /// injected drops surface in milliseconds). `None` = production 60 s.
+    pub rendezvous_timeout: Option<std::time::Duration>,
+}
+
 impl RankPool {
     /// Spawn the p rank threads. `scfg.mode` selects the serving pipeline;
     /// `run` supplies geometry, seed, and hardware. Each rank initializes
     /// its parameter shards deterministically from (seed, mode, rank) —
     /// identical to the training-side initialization.
     pub fn start(run: &RunConfig, scfg: &ServeConfig, exec: &ExecServer) -> Result<RankPool> {
+        Self::start_with(run, scfg, exec, PoolOptions::default())
+    }
+
+    /// `start` with fault-injection / timeout options.
+    pub fn start_with(
+        run: &RunConfig,
+        scfg: &ServeConfig,
+        exec: &ExecServer,
+        opts: PoolOptions,
+    ) -> Result<RankPool> {
         run.validate()?;
         scfg.validate()?;
         let artifact = run
@@ -102,11 +123,19 @@ impl RankPool {
         }
 
         let p = run.p;
-        let endpoints = Fabric::new(p, run.hardware.net);
+        let endpoints = match opts.rendezvous_timeout {
+            Some(t) => Fabric::with_timeout(p, run.hardware.net, t),
+            None => Fabric::new(p, run.hardware.net),
+        };
         let (done_tx, done_rx) = mpsc::channel::<Result<Done>>();
         let mut job_txs = Vec::with_capacity(p);
         let mut handles = Vec::with_capacity(p);
-        for (rank, ep) in endpoints.into_iter().enumerate() {
+        for (rank, mut ep) in endpoints.into_iter().enumerate() {
+            if let Some(factory) = &opts.faults {
+                if let Some(injector) = factory.for_rank(rank) {
+                    ep.arm_faults(injector);
+                }
+            }
             let (job_tx, job_rx) = mpsc::channel::<RankMsg>();
             job_txs.push(job_tx);
             let done_tx = done_tx.clone();
@@ -225,14 +254,17 @@ impl RankPool {
     }
 
     /// Tear the pool down and collect per-rank ledgers/stats (rank order).
+    /// A panicked rank surfaces as a structured error (rank id + payload)
+    /// after every surviving thread has been joined.
     pub fn shutdown(self) -> Result<Vec<PoolRankReport>> {
         let RankPool { job_txs, done_rx, handles, .. } = self;
         drop(job_txs);
         drop(done_rx);
-        let mut reports = Vec::with_capacity(handles.len());
-        for h in handles {
-            reports.push(h.join().map_err(|_| anyhow!("serve rank thread panicked"))?);
+        let (joined, panic) = join_rank_threads(handles);
+        if let Some(p) = panic {
+            return Err(anyhow!("serve rank {} panicked: {}", p.rank, p.payload));
         }
+        let mut reports: Vec<PoolRankReport> = joined.into_iter().map(|(_, r)| r).collect();
         reports.sort_by_key(|r| r.rank);
         Ok(reports)
     }

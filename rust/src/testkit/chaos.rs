@@ -1,0 +1,274 @@
+//! Chaos drivers: scripted failure scenarios over the real subsystems.
+//!
+//! * `train_crash_resume` — kill a rank mid-train with an injected crash,
+//!   verify the failure surfaces as a structured error (rank id + the
+//!   injected-fault payload), then resume from the last periodic snapshot
+//!   and assert the continued loss trajectory is **bit-identical** to an
+//!   uninterrupted run (the ckpt subsystem's durability contract under an
+//!   actual crash, not just a polite stop).
+//! * `serve_crash_swap` — crash a serve-pool rank mid-stream, rebuild the
+//!   pool, hot-swap it onto a *reseeded* snapshot (`RankPool::load_weights`
+//!   with weights distinguishable from the rebuilt pool's own init, so a
+//!   silently dropped swap cannot pass), replay the failed batch and
+//!   finish the stream; assert nothing is dropped — every answer bitwise
+//!   matches its weight-set's fault-free reference.
+//!
+//! Both drivers are deterministic end to end: the fault schedules key on
+//! virtual-time collective sequence numbers, so reruns reproduce the same
+//! failure at the same point (tests/chaos_integration.rs relies on this).
+
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::ckpt::Snapshot;
+use crate::config::{CkptPolicy, RunConfig, ServeConfig};
+use crate::coordinator::{train_with, TrainOptions};
+use crate::runtime::ExecServer;
+use crate::serve::{PoolOptions, RankPool};
+use crate::tensor::Tensor;
+use crate::testkit::fault::FaultPlan;
+use crate::util::prng::Prng;
+
+/// Outcome of the train crash-resume scenario.
+#[derive(Debug, Clone)]
+pub struct CrashResumeReport {
+    /// Loss trajectory of the uninterrupted reference run.
+    pub baseline: Vec<f64>,
+    /// The structured error the crashed run surfaced.
+    pub crash_error: String,
+    /// Iteration count of the snapshot the resume started from.
+    pub resumed_from: u64,
+    /// Full trajectory of crashed-then-resumed training.
+    pub resumed: Vec<f64>,
+    /// `resumed == baseline`, f64-bit for f64-bit.
+    pub bit_identical: bool,
+}
+
+/// Run the crash-resume scenario: train `total_iters` with snapshots every
+/// `ckpt_every` into `dir`, crash `crash_rank` at the start of iteration
+/// `crash_iter`, resume from the newest surviving snapshot, and compare
+/// against an uninterrupted run of the same config.
+pub fn train_crash_resume(
+    cfg: &RunConfig,
+    total_iters: usize,
+    ckpt_every: usize,
+    crash_rank: usize,
+    crash_iter: u64,
+    dir: &Path,
+) -> Result<CrashResumeReport> {
+    if crash_rank >= cfg.p {
+        bail!("crash rank {crash_rank} out of range for p={}", cfg.p);
+    }
+    if crash_iter == 0 || crash_iter as usize >= total_iters {
+        bail!("crash iteration {crash_iter} must be inside (0, {total_iters})");
+    }
+    if ckpt_every == 0 || (crash_iter as usize) < ckpt_every {
+        bail!(
+            "crash iteration {crash_iter} precedes the first snapshot \
+             (ckpt every {ckpt_every}) — there would be nothing to resume from"
+        );
+    }
+    let mut cfg = cfg.clone();
+    cfg.train.max_iters = total_iters;
+    cfg.train.target_loss = None;
+    let server = ExecServer::for_run(&cfg)?;
+
+    // Uninterrupted reference.
+    let baseline = train_with(&cfg, &server, TrainOptions::default())
+        .context("baseline run")?
+        .losses;
+
+    // Crashed run: periodic snapshots + an injected crash.
+    std::fs::create_dir_all(dir).context("creating checkpoint dir")?;
+    let plan = FaultPlan::crash_at_iter(crash_rank, crash_iter, cfg.mode, cfg.model.layers);
+    let err = match train_with(
+        &cfg,
+        &server,
+        TrainOptions {
+            ckpt: Some(CkptPolicy { every: ckpt_every, dir: dir.to_path_buf() }),
+            faults: Some(plan.injector_factory()),
+            ..Default::default()
+        },
+    ) {
+        Ok(_) => bail!("the injected crash did not surface as an error"),
+        Err(e) => format!("{e:#}"),
+    };
+    if !err.contains("injected fault") {
+        bail!("crash error lost the injected-fault payload: {err}");
+    }
+
+    // Resume from the newest snapshot at or before the crash point.
+    let resumed_dir = latest_snapshot(dir, crash_iter)?;
+    let snap = Snapshot::load(&resumed_dir)
+        .with_context(|| format!("loading {}", resumed_dir.display()))?;
+    let resumed_from = snap.progress.iter;
+    let mut resume_cfg = snap.config.clone();
+    resume_cfg.train.max_iters = total_iters;
+    let resumed = train_with(
+        &resume_cfg,
+        &server,
+        TrainOptions { resume: Some(snap), ..Default::default() },
+    )
+    .context("resumed run")?
+    .losses;
+
+    let bit_identical = resumed == baseline;
+    Ok(CrashResumeReport { baseline, crash_error: err, resumed_from, resumed, bit_identical })
+}
+
+/// Newest `ckpt-NNNNNN` under `dir` with NNNNNN <= `limit`.
+fn latest_snapshot(dir: &Path, limit: u64) -> Result<std::path::PathBuf> {
+    let mut best: Option<(u64, std::path::PathBuf)> = None;
+    for entry in std::fs::read_dir(dir).with_context(|| format!("listing {}", dir.display()))? {
+        let entry = entry?;
+        let name = entry.file_name();
+        let Some(iter) = name
+            .to_str()
+            .and_then(|s| s.strip_prefix("ckpt-"))
+            .and_then(|s| s.parse::<u64>().ok())
+        else {
+            continue;
+        };
+        if iter <= limit && best.as_ref().map(|(b, _)| iter > *b).unwrap_or(true) {
+            best = Some((iter, entry.path()));
+        }
+    }
+    best.map(|(_, p)| p)
+        .ok_or_else(|| anyhow!("no snapshot at or before iteration {limit} in {}", dir.display()))
+}
+
+/// Outcome of the serve crash + hot-swap recovery scenario.
+#[derive(Debug, Clone)]
+pub struct ServeChaosReport {
+    pub batches: usize,
+    /// Error surfaced by the batch the crash landed in.
+    pub crash_error: String,
+    /// Structured shutdown error of the dead pool (rank id + payload).
+    pub shutdown_error: String,
+    /// Index of the batch that was replayed after recovery.
+    pub recovered_batch: usize,
+    /// Every answer equals its expected reference, bit for bit: old
+    /// weights before the crash, swap-snapshot weights from the replayed
+    /// batch on. This is also the zero-dropped proof — a missing answer
+    /// can't match anything. (Zero-reordered is enforced inside
+    /// `RankPool::execute` itself, which rejects out-of-sequence
+    /// completions.)
+    pub outputs_match: bool,
+    /// The swap snapshot's answers differ from the original weights' on
+    /// the replayed batch — i.e. the hot swap was actually observable,
+    /// so a silently dropped `load_weights` cannot pass.
+    pub swap_observable: bool,
+}
+
+/// Run the serve-pool chaos scenario: stream `batches` deterministic query
+/// batches through a pool whose `crash_rank` crashes at its
+/// `crash_collective`-th collective; on the failed batch, rebuild the
+/// pool, hot-swap it onto a *different* snapshot (`load_weights` of a
+/// reseeded init — distinguishable from the rebuilt pool's own weights),
+/// replay the failed batch and finish the stream. Every answer is compared
+/// bitwise against fault-free reference runs of the matching weights.
+pub fn serve_crash_swap(
+    cfg: &RunConfig,
+    scfg: &ServeConfig,
+    batches: usize,
+    crash_rank: usize,
+    crash_collective: u64,
+) -> Result<ServeChaosReport> {
+    let mut cfg = cfg.clone();
+    // Serving weights are deterministic in (seed, mode, rank); align the
+    // run config's mode so snapshots and pools agree on the pipeline.
+    cfg.mode = scfg.mode;
+    if crash_rank >= cfg.p {
+        bail!("crash rank {crash_rank} out of range for p={}", cfg.p);
+    }
+    let server = ExecServer::for_run(&cfg)?;
+    let batch_of = |b: usize| -> Tensor {
+        let mut rng = Prng::new(cfg.train.seed ^ 0x5E7E ^ (b as u64).wrapping_mul(0x9E37));
+        Tensor::randn(&[cfg.train.batch, cfg.model.n], 1.0, &mut rng)
+    };
+    // The recovery snapshot: same geometry, different seed, so serving it
+    // produces visibly different answers than the crashed pool's weights.
+    let mut swap_cfg = cfg.clone();
+    swap_cfg.train.seed ^= 0xA11A;
+    let swap_snap = Snapshot::init(&swap_cfg)?;
+
+    // Fault-free reference answers for both weight sets.
+    let mut ref_old = Vec::with_capacity(batches);
+    let mut pool = RankPool::start(&cfg, scfg, &server)?;
+    for b in 0..batches {
+        let (y, _) = pool.execute(pool.free_s(), &batch_of(b))?;
+        ref_old.push(y);
+    }
+    pool.shutdown().context("reference pool shutdown")?;
+    let mut ref_swap = Vec::with_capacity(batches);
+    let mut pool = RankPool::start(&cfg, scfg, &server)?;
+    pool.load_weights(&swap_snap).context("reference swap pool")?;
+    for b in 0..batches {
+        let (y, _) = pool.execute(pool.free_s(), &batch_of(b))?;
+        ref_swap.push(y);
+    }
+    pool.shutdown().context("swap reference pool shutdown")?;
+
+    // Faulted run.
+    let plan = FaultPlan::crash(crash_rank, crash_collective);
+    let opts = PoolOptions { faults: Some(plan.injector_factory()), ..Default::default() };
+    let mut pool = RankPool::start_with(&cfg, scfg, &server, opts)?;
+    let mut answers: Vec<Option<Tensor>> = (0..batches).map(|_| None).collect();
+    let mut crash_error = String::new();
+    let mut shutdown_error = String::new();
+    let mut recovered_batch = usize::MAX;
+    let mut b = 0;
+    while b < batches {
+        match pool.execute(pool.free_s(), &batch_of(b)) {
+            Ok((y, _)) => {
+                answers[b] = Some(y);
+                b += 1;
+            }
+            Err(e) => {
+                if recovered_batch != usize::MAX {
+                    return Err(e.context("pool failed again after recovery"));
+                }
+                crash_error = format!("{e:#}");
+                // The pool is dead (fabric poisoned, one rank gone):
+                // tear it down — the panicked rank surfaces structurally —
+                // then rebuild and hot-swap onto the recovery snapshot.
+                shutdown_error = match pool.shutdown() {
+                    Ok(_) => bail!("crashed pool shut down without surfacing the panic"),
+                    Err(se) => format!("{se:#}"),
+                };
+                pool = RankPool::start(&cfg, scfg, &server)?;
+                pool.load_weights(&swap_snap).context("hot-swapping the rebuilt pool")?;
+                recovered_batch = b;
+                // Replay the failed batch: nothing is dropped.
+            }
+        }
+    }
+    pool.shutdown().context("recovered pool shutdown")?;
+
+    if recovered_batch == usize::MAX {
+        bail!("the injected crash never fired (crash_collective {crash_collective} too large?)");
+    }
+    if !crash_error.contains("poisoned") && !crash_error.contains("injected") {
+        bail!("crash error lost its cause: {crash_error}");
+    }
+    if !shutdown_error.contains(&format!("serve rank {crash_rank} panicked")) {
+        bail!("shutdown error is not structured: {shutdown_error}");
+    }
+
+    // Expected answers: old weights before the crash, swap weights from
+    // the replayed batch on.
+    let outputs_match = answers.iter().enumerate().all(|(i, a)| {
+        let want = if i < recovered_batch { &ref_old[i] } else { &ref_swap[i] };
+        a.as_ref().map(|y| y == want).unwrap_or(false)
+    });
+    let swap_observable = ref_swap[recovered_batch] != ref_old[recovered_batch];
+    Ok(ServeChaosReport {
+        batches,
+        crash_error,
+        shutdown_error,
+        recovered_batch,
+        outputs_match,
+        swap_observable,
+    })
+}

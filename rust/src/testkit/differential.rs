@@ -1,0 +1,312 @@
+//! Differential conformance runner: randomized `(n, p, mode, backend,
+//! batch, layers, optimizer, seed)` configs, each asserting the full
+//! equivalence chain
+//!
+//! ```text
+//! distributed train (p ranks, fabric, fused kernels)
+//!   ≡ ReferenceTrainer (single thread, simulated collectives)   [tight]
+//!   ≡ naive unfused math (matmul_naive, paper equations)        [float tol]
+//! TP layout ≡ PP layout (reshard + host-side forward)           [float tol]
+//! ```
+//!
+//! so every future perf PR can be checked against a fixed oracle: if the
+//! fabric, the drivers, the fused kernels, or the re-sharding algebra
+//! drift, a sweep case fails and names the config that exposed it.
+
+use anyhow::{bail, Context, Result};
+
+use crate::ckpt::{reshard, Snapshot};
+use crate::config::{
+    BackendKind, HardwareConfig, ModelConfig, OptimizerConfig, Parallelism, RunConfig,
+    TrainConfig,
+};
+use crate::coordinator;
+use crate::runtime::ExecServer;
+use crate::tensor::Tensor;
+use crate::testkit::oracle::ReferenceTrainer;
+use crate::util::prng::Prng;
+
+/// Sweep shape and tolerances.
+#[derive(Debug, Clone)]
+pub struct SweepConfig {
+    /// Randomized configs to draw (each runs BOTH parallelism modes).
+    pub cases: usize,
+    pub seed: u64,
+    /// Training iterations per case.
+    pub iters: usize,
+    /// Max relative loss deviation, distributed vs oracle (bitwise in
+    /// practice; the tolerance only absorbs hypothetical platform drift).
+    pub loss_rtol: f64,
+    /// Max normalized gradient deviation, fused kernels vs naive math.
+    pub grad_rtol: f32,
+    /// Max normalized forward deviation, TP vs re-sharded PP layout.
+    pub forward_rtol: f32,
+}
+
+impl Default for SweepConfig {
+    fn default() -> Self {
+        SweepConfig {
+            cases: 25,
+            seed: 0xD1FF,
+            iters: 3,
+            loss_rtol: 1e-7,
+            grad_rtol: 2e-2,
+            forward_rtol: 1e-3,
+        }
+    }
+}
+
+/// One sampled config and its worst observed deviations.
+#[derive(Debug, Clone)]
+pub struct CaseReport {
+    pub n: usize,
+    pub p: usize,
+    pub k: usize,
+    pub layers: usize,
+    pub batch: usize,
+    pub optimizer: &'static str,
+    pub seed: u64,
+    pub backend: &'static str,
+    /// Worst relative loss deviation across both modes and all iterations.
+    pub loss_dev: f64,
+    /// Worst normalized gradient deviation (kernel vs naive), both modes.
+    pub grad_dev: f32,
+    /// Worst normalized forward deviation across TP->PP and PP->TP reshard.
+    pub forward_dev: f32,
+}
+
+/// The whole sweep.
+#[derive(Debug, Clone, Default)]
+pub struct SweepReport {
+    pub cases: Vec<CaseReport>,
+    pub max_loss_dev: f64,
+    pub max_grad_dev: f32,
+    pub max_forward_dev: f32,
+}
+
+impl SweepReport {
+    /// Flat records for BENCH_conformance.json.
+    pub fn records(&self) -> Vec<(String, f64)> {
+        vec![
+            ("conformance_cases".to_string(), self.cases.len() as f64),
+            ("conformance_loss_max_rel_dev".to_string(), self.max_loss_dev),
+            ("conformance_grad_max_rel_dev".to_string(), self.max_grad_dev as f64),
+            ("conformance_forward_max_rel_dev".to_string(), self.max_forward_dev as f64),
+        ]
+    }
+}
+
+/// Draw one random case geometry.
+fn sample_case(rng: &mut Prng, iters: usize) -> (RunConfig, &'static str) {
+    let p = rng.int_in(2, 4) as usize;
+    let m = rng.int_in(3, 8) as usize;
+    let n = p * m;
+    let layers = rng.int_in(1, 3) as usize;
+    let batch = rng.int_in(2, 6) as usize;
+    let k = rng.int_in(1, (m - 1).min(4) as u64) as usize;
+    let (optimizer, opt_name): (OptimizerConfig, &'static str) = match rng.int_in(0, 2) {
+        0 => (OptimizerConfig::Sgd { lr: 0.1 }, "sgd"),
+        1 => (OptimizerConfig::Momentum { lr: 0.05, beta: 0.9 }, "momentum"),
+        _ => (
+            OptimizerConfig::Adam { lr: 1e-2, beta1: 0.9, beta2: 0.999, eps: 1e-8 },
+            "adam",
+        ),
+    };
+    let seed = rng.next_u64();
+    let cfg = RunConfig {
+        mode: Parallelism::Phantom, // per-mode runs overwrite this
+        p,
+        model: ModelConfig { n, layers, k },
+        train: TrainConfig {
+            batch,
+            optimizer,
+            seed,
+            max_iters: iters,
+            target_loss: None,
+            warmup_iters: 1,
+            dataset_batches: 2,
+        },
+        hardware: HardwareConfig::frontier_measured(),
+        artifact: Some("conformance-case".to_string()),
+        // The sweep dimension is the backend the distributed run executes
+        // on; only the native backend exists in a default build (the PJRT
+        // path needs the `xla` cargo feature + artifacts).
+        backend: BackendKind::Native,
+    };
+    (cfg, opt_name)
+}
+
+/// Worst normalized elementwise deviation: |a-b| / (atol + max(|a|,|b|)).
+/// Non-finite values (NaN/inf on either side) count as infinite deviation —
+/// `max` and `>` both silently discard NaN, and a conformance gate that
+/// waves NaN math through would be worse than none.
+fn worst_dev(a: &[f32], b: &[f32], atol: f32) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut worst = 0.0f32;
+    for (&x, &y) in a.iter().zip(b) {
+        if !x.is_finite() || !y.is_finite() {
+            return f32::INFINITY;
+        }
+        let dev = (x - y).abs() / (atol + x.abs().max(y.abs()));
+        worst = worst.max(dev);
+    }
+    worst
+}
+
+/// Run one case for one mode: distributed vs oracle (loss trajectory) and
+/// kernel vs naive (gradients). Returns (worst loss dev, worst grad dev).
+fn run_mode(cfg: &RunConfig, sw: &SweepConfig) -> Result<(f64, f32)> {
+    let server = ExecServer::for_run(cfg).context("starting backend")?;
+    let report = coordinator::train(cfg, &server).context("distributed train")?;
+    let mut oracle = ReferenceTrainer::new(cfg)?;
+    oracle.run(sw.iters)?;
+    if report.losses.len() != oracle.losses.len() {
+        bail!(
+            "{}: distributed ran {} iterations, oracle {}",
+            cfg.mode.name(),
+            report.losses.len(),
+            oracle.losses.len()
+        );
+    }
+    let mut loss_dev = 0.0f64;
+    for (i, (a, b)) in report.losses.iter().zip(&oracle.losses).enumerate() {
+        let dev = if a.is_finite() && b.is_finite() {
+            (a - b).abs() / b.abs().max(1e-12)
+        } else {
+            f64::INFINITY // NaN/inf must fail the gate, not slip past max()
+        };
+        loss_dev = loss_dev.max(dev);
+        if dev > sw.loss_rtol {
+            bail!(
+                "{} iter {i}: distributed loss {a} vs oracle {b} (rel dev {dev:.3e} > {:.1e})",
+                cfg.mode.name(),
+                sw.loss_rtol
+            );
+        }
+    }
+    // Gradient cross-check at the evolved state (end of the short run).
+    let (lk, gk) = oracle.forward_backward(oracle.iterations())?;
+    let (ln, gn) = oracle.naive_forward_backward(oracle.iterations())?;
+    let mut grad_dev = if lk.is_finite() && ln.is_finite() {
+        ((lk - ln).abs() / lk.abs().max(1e-12)) as f32
+    } else {
+        f32::INFINITY
+    };
+    if grad_dev > sw.grad_rtol {
+        bail!(
+            "{}: kernel vs naive loss dev {grad_dev:.3e} > {:.1e}",
+            cfg.mode.name(),
+            sw.grad_rtol
+        );
+    }
+    for (rank, (a, b)) in gk.iter().zip(&gn).enumerate() {
+        if a.len() != b.len() {
+            bail!("rank {rank}: {} kernel grads vs {} naive", a.len(), b.len());
+        }
+        for (i, (ta, tb)) in a.iter().zip(b).enumerate() {
+            let dev = worst_dev(ta.data(), tb.data(), 1e-5);
+            grad_dev = grad_dev.max(dev);
+            if dev > sw.grad_rtol {
+                bail!(
+                    "{} rank {rank} grad {i}: kernel vs naive dev {dev:.3e} > {:.1e}",
+                    cfg.mode.name(),
+                    sw.grad_rtol
+                );
+            }
+        }
+    }
+    Ok((loss_dev, grad_dev))
+}
+
+/// Cross-layout forward equivalence through the re-sharding algebra:
+/// TP -> dense-phantom PP and PP -> TP, both checked against the source
+/// layout's host-side forward on a shared batch.
+fn cross_layout_dev(
+    pp_cfg: &RunConfig,
+    tp_cfg: &RunConfig,
+    case_seed: u64,
+    sw: &SweepConfig,
+) -> Result<f32> {
+    let mut rng = Prng::new(case_seed ^ 0xF0B0);
+    let x = Tensor::randn(&[4, tp_cfg.model.n], 1.0, &mut rng);
+    let mut worst = 0.0f32;
+
+    let snap_tp = Snapshot::init(tp_cfg)?;
+    let as_pp = reshard(&snap_tp, tp_cfg.p, Parallelism::Phantom)?;
+    let y_tp = snap_tp.forward_host(&x)?;
+    let y_pp = as_pp.forward_host(&x)?;
+    worst = worst.max(worst_dev(y_tp.data(), y_pp.data(), 1e-4));
+
+    let snap_pp = Snapshot::init(pp_cfg)?;
+    let as_tp = reshard(&snap_pp, pp_cfg.p, Parallelism::Tensor)?;
+    let y_src = snap_pp.forward_host(&x)?;
+    let y_dst = as_tp.forward_host(&x)?;
+    worst = worst.max(worst_dev(y_src.data(), y_dst.data(), 1e-4));
+
+    if worst > sw.forward_rtol {
+        bail!("cross-layout forward dev {worst:.3e} > {:.1e}", sw.forward_rtol);
+    }
+    Ok(worst)
+}
+
+/// Run the full sweep. Every case asserts the whole equivalence chain;
+/// the report carries the worst observed deviations for the bench record.
+pub fn run_sweep(sw: &SweepConfig) -> Result<SweepReport> {
+    let mut rng = Prng::new(sw.seed);
+    let mut report = SweepReport::default();
+    for case in 0..sw.cases {
+        let (base, opt_name) = sample_case(&mut rng, sw.iters);
+        let mut pp_cfg = base.clone();
+        pp_cfg.mode = Parallelism::Phantom;
+        let mut tp_cfg = base.clone();
+        tp_cfg.mode = Parallelism::Tensor;
+
+        let ctx = format!(
+            "case {case}: n={} p={} k={} L={} batch={} opt={} seed={:#x}",
+            base.model.n, base.p, base.model.k, base.model.layers, base.train.batch,
+            opt_name, base.train.seed
+        );
+        let (pp_loss, pp_grad) = run_mode(&pp_cfg, sw).context(ctx.clone())?;
+        let (tp_loss, tp_grad) = run_mode(&tp_cfg, sw).context(ctx.clone())?;
+        let fwd = cross_layout_dev(&pp_cfg, &tp_cfg, base.train.seed, sw).context(ctx)?;
+
+        let loss_dev = pp_loss.max(tp_loss);
+        let grad_dev = pp_grad.max(tp_grad);
+        report.max_loss_dev = report.max_loss_dev.max(loss_dev);
+        report.max_grad_dev = report.max_grad_dev.max(grad_dev);
+        report.max_forward_dev = report.max_forward_dev.max(fwd);
+        report.cases.push(CaseReport {
+            n: base.model.n,
+            p: base.p,
+            k: base.model.k,
+            layers: base.model.layers,
+            batch: base.train.batch,
+            optimizer: opt_name,
+            seed: base.train.seed,
+            backend: base.backend.name(),
+            loss_dev,
+            grad_dev,
+            forward_dev: fwd,
+        });
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn a_small_sweep_passes_and_is_deterministic() {
+        let sw = SweepConfig { cases: 3, seed: 0x5EED, iters: 2, ..Default::default() };
+        let a = run_sweep(&sw).unwrap();
+        assert_eq!(a.cases.len(), 3);
+        let b = run_sweep(&sw).unwrap();
+        // Same seed, same cases, same (bitwise) observed deviations.
+        for (x, y) in a.cases.iter().zip(&b.cases) {
+            assert_eq!(x.n, y.n);
+            assert_eq!(x.seed, y.seed);
+            assert_eq!(x.loss_dev.to_bits(), y.loss_dev.to_bits());
+        }
+    }
+}

@@ -1,0 +1,323 @@
+//! Seeded, reproducible fault schedules over the comm-layer fault hooks.
+//!
+//! A `FaultPlan` is a concrete, fully materialized schedule: a sorted list
+//! of `(rank, collective seq, fault kind)` events. Plans are built either
+//! explicitly (`crash`, `delay`, `drop_message`, `crash_at_iter`) or
+//! generated from a seed (`FaultPlan::generate`) — same seed, same spec,
+//! same schedule, byte for byte (`canonical_bytes`).
+//!
+//! **Determinism contract** (DESIGN.md §9): because faults key on the
+//! per-endpoint *collective sequence number* — virtual-time state, not
+//! wall-clock state — the same plan armed on the same workload fires the
+//! same faults at the same points on every run. Every firing is recorded
+//! in a shared log; `fired_bytes()` canonicalizes it so two runs can be
+//! compared byte-identically (tests/conformance.rs asserts this).
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::{Arc, Mutex};
+
+use crate::comm::{FaultAction, FaultInjector, InjectorFactory};
+use crate::config::Parallelism;
+use crate::util::prng::Prng;
+
+/// One scheduled fault: at the `seq`-th rendezvous collective issued by
+/// `rank`'s endpoint, apply `action`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultEvent {
+    pub rank: usize,
+    pub seq: u64,
+    pub action: FaultAction,
+}
+
+/// One observed firing, recorded by the armed injectors.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FiredFault {
+    pub rank: usize,
+    pub seq: u64,
+    pub op: &'static str,
+    pub action: FaultAction,
+}
+
+/// Spec for seeded random schedule generation ("poison storms" et al.).
+#[derive(Debug, Clone)]
+pub struct StormSpec {
+    /// Number of ranks faults may target.
+    pub p: usize,
+    /// Collective-sequence horizon faults are placed within.
+    pub horizon: u64,
+    /// How many events to generate.
+    pub events: usize,
+    /// Mean injected delay in virtual seconds (delays are sampled uniform
+    /// in (0, 2*mean_delay_s)).
+    pub mean_delay_s: f64,
+    /// Include Drop events (peers then ride the rendezvous timeout).
+    pub allow_drops: bool,
+    /// Include Poison events (out-of-band fabric poisoning bursts).
+    pub allow_poison: bool,
+}
+
+impl Default for StormSpec {
+    fn default() -> Self {
+        StormSpec {
+            p: 2,
+            horizon: 16,
+            events: 4,
+            mean_delay_s: 1e-3,
+            allow_drops: false,
+            allow_poison: false,
+        }
+    }
+}
+
+/// A concrete fault schedule plus the shared firing log.
+#[derive(Debug, Clone, Default)]
+pub struct FaultPlan {
+    events: Vec<FaultEvent>,
+    log: Arc<Mutex<Vec<FiredFault>>>,
+}
+
+impl FaultPlan {
+    pub fn new() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    /// Add one event (builder style).
+    pub fn with(mut self, rank: usize, seq: u64, action: FaultAction) -> FaultPlan {
+        self.events.push(FaultEvent { rank, seq, action });
+        self.normalize();
+        self
+    }
+
+    /// Crash `rank` at its `seq`-th collective.
+    pub fn crash(rank: usize, seq: u64) -> FaultPlan {
+        FaultPlan::new().with(rank, seq, FaultAction::Crash)
+    }
+
+    /// Stall `rank` by `seconds` of virtual time at its `seq`-th collective.
+    pub fn delay(rank: usize, seq: u64, seconds: f64) -> FaultPlan {
+        FaultPlan::new().with(rank, seq, FaultAction::Delay { seconds })
+    }
+
+    /// Drop `rank`'s message at its `seq`-th collective (peers time out).
+    pub fn drop_message(rank: usize, seq: u64) -> FaultPlan {
+        FaultPlan::new().with(rank, seq, FaultAction::Drop)
+    }
+
+    /// Crash `rank` at the first collective of training iteration `iter`
+    /// (0-based) for the given pipeline shape — the "kill rank r at
+    /// iteration i" chaos scenario.
+    pub fn crash_at_iter(rank: usize, iter: u64, mode: Parallelism, layers: usize) -> FaultPlan {
+        FaultPlan::crash(rank, iter * collectives_per_train_iter(mode, layers))
+    }
+
+    /// Seeded random schedule: same `(seed, spec)` always yields the same
+    /// events (the generation-side half of the determinism contract).
+    /// Collisions on a (rank, seq) slot are resampled, so the plan carries
+    /// exactly `spec.events` events whenever the (p × horizon) grid has
+    /// room for them.
+    pub fn generate(seed: u64, spec: &StormSpec) -> FaultPlan {
+        let mut rng = Prng::new(seed ^ 0xFA_17B0A7); // "FAULTBOAT"
+        let mut plan = FaultPlan::new();
+        let mut used: BTreeSet<(usize, u64)> = BTreeSet::new();
+        let target = spec.events.min(spec.p.max(1) * spec.horizon.max(1) as usize);
+        // Bounded resampling keeps generation total even near a full grid.
+        let mut attempts = 0usize;
+        while plan.events.len() < target && attempts < 64 * target.max(1) {
+            attempts += 1;
+            let rank = rng.int_in(0, spec.p.max(1) as u64 - 1) as usize;
+            let seq = rng.int_in(0, spec.horizon.max(1) - 1);
+            if !used.insert((rank, seq)) {
+                continue; // slot taken: resample instead of silently dropping
+            }
+            let mut kinds: Vec<u8> = vec![0]; // delay is always allowed
+            if spec.allow_drops {
+                kinds.push(1);
+            }
+            if spec.allow_poison {
+                kinds.push(2);
+            }
+            let kind = kinds[rng.int_in(0, kinds.len() as u64 - 1) as usize];
+            let action = match kind {
+                0 => FaultAction::Delay { seconds: rng.next_f64() * 2.0 * spec.mean_delay_s },
+                1 => FaultAction::Drop,
+                _ => FaultAction::Poison,
+            };
+            plan.events.push(FaultEvent { rank, seq, action });
+        }
+        plan.normalize();
+        plan
+    }
+
+    /// Sort by (rank, seq) and keep the first event per slot so lookup is
+    /// unambiguous and serialization is canonical.
+    fn normalize(&mut self) {
+        self.events.sort_by_key(|e| (e.rank, e.seq));
+        self.events.dedup_by_key(|e| (e.rank, e.seq));
+    }
+
+    pub fn events(&self) -> &[FaultEvent] {
+        &self.events
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Canonical byte serialization of the *schedule* — one line per event,
+    /// sorted. Two plans are the same schedule iff these bytes are equal.
+    pub fn canonical_bytes(&self) -> Vec<u8> {
+        let mut out = String::new();
+        for e in &self.events {
+            out.push_str(&format!("{} {} {}\n", e.rank, e.seq, action_str(&e.action)));
+        }
+        out.into_bytes()
+    }
+
+    /// Everything the armed injectors fired so far, in canonical
+    /// (rank, seq) order.
+    pub fn fired(&self) -> Vec<FiredFault> {
+        let mut v = self.log.lock().expect("fault log poisoned").clone();
+        v.sort_by_key(|f| (f.rank, f.seq));
+        v
+    }
+
+    /// Canonical byte serialization of the *observed* firings — the
+    /// run-side half of the determinism contract: two runs of the same
+    /// workload under the same plan must produce identical bytes.
+    pub fn fired_bytes(&self) -> Vec<u8> {
+        let mut out = String::new();
+        for f in self.fired() {
+            out.push_str(&format!(
+                "{} {} {} {}\n",
+                f.rank,
+                f.seq,
+                f.op,
+                action_str(&f.action)
+            ));
+        }
+        out.into_bytes()
+    }
+
+    /// Clear the firing log (between runs of the same plan).
+    pub fn reset_log(&self) {
+        self.log.lock().expect("fault log poisoned").clear();
+    }
+
+    /// The per-rank injector source drivers accept
+    /// (`TrainOptions::faults`, `PoolOptions::faults`).
+    pub fn injector_factory(&self) -> InjectorFactory {
+        let mut by_rank: BTreeMap<usize, BTreeMap<u64, FaultAction>> = BTreeMap::new();
+        for e in &self.events {
+            by_rank.entry(e.rank).or_default().insert(e.seq, e.action.clone());
+        }
+        let log = self.log.clone();
+        InjectorFactory::new(move |rank| {
+            let events = by_rank.get(&rank)?.clone();
+            Some(Box::new(PlanInjector { events, log: log.clone() }) as Box<dyn FaultInjector>)
+        })
+    }
+}
+
+/// f64 seconds serialized via to_bits so canonical bytes are exact.
+fn action_str(a: &FaultAction) -> String {
+    match a {
+        FaultAction::Proceed => "proceed".to_string(),
+        FaultAction::Delay { seconds } => format!("delay:{:016x}", seconds.to_bits()),
+        FaultAction::Drop => "drop".to_string(),
+        FaultAction::Poison => "poison".to_string(),
+        FaultAction::Crash => "crash".to_string(),
+    }
+}
+
+struct PlanInjector {
+    events: BTreeMap<u64, FaultAction>,
+    log: Arc<Mutex<Vec<FiredFault>>>,
+}
+
+impl FaultInjector for PlanInjector {
+    fn on_collective(&mut self, rank: usize, seq: u64, op: &'static str) -> FaultAction {
+        match self.events.get(&seq) {
+            None => FaultAction::Proceed,
+            Some(action) => {
+                let action = action.clone();
+                if let Ok(mut log) = self.log.lock() {
+                    log.push(FiredFault { rank, seq, op, action: action.clone() });
+                }
+                action
+            }
+        }
+    }
+}
+
+/// Rendezvous collectives one training iteration issues per rank:
+/// PP = L forward All-Gathers + L backward Reduce-Scatters; TP = L forward
+/// All-Gathers + (L-1) backward All-Reduces (`charge_modeled` entries are
+/// not rendezvous and do not tick the fault clock).
+pub fn collectives_per_train_iter(mode: Parallelism, layers: usize) -> u64 {
+    match mode {
+        Parallelism::Phantom => 2 * layers as u64,
+        Parallelism::Tensor => (2 * layers).saturating_sub(1) as u64,
+    }
+}
+
+/// Rendezvous collectives one forward-only (serving) batch issues per
+/// rank: L All-Gathers in both pipelines.
+pub fn collectives_per_forward(layers: usize) -> u64 {
+    layers as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generation_is_seed_deterministic() {
+        let spec = StormSpec { p: 4, horizon: 32, events: 12, ..Default::default() };
+        let a = FaultPlan::generate(7, &spec);
+        let b = FaultPlan::generate(7, &spec);
+        assert_eq!(a.canonical_bytes(), b.canonical_bytes());
+        assert_eq!(a.events().len(), 12, "collisions are resampled, not dropped");
+        let c = FaultPlan::generate(8, &spec);
+        assert_ne!(a.canonical_bytes(), c.canonical_bytes(), "different seed, different plan");
+    }
+
+    #[test]
+    fn canonical_bytes_are_sorted_and_deduped() {
+        let plan = FaultPlan::new()
+            .with(1, 5, FaultAction::Crash)
+            .with(0, 2, FaultAction::Drop)
+            .with(1, 5, FaultAction::Drop); // duplicate slot: first wins
+        let text = String::from_utf8(plan.canonical_bytes()).unwrap();
+        assert_eq!(text, "0 2 drop\n1 5 crash\n");
+    }
+
+    #[test]
+    fn injector_fires_and_logs() {
+        let plan = FaultPlan::delay(1, 2, 0.25);
+        let factory = plan.injector_factory();
+        assert!(factory.for_rank(0).is_none(), "rank 0 has no events");
+        let mut inj = factory.for_rank(1).unwrap();
+        assert_eq!(inj.on_collective(1, 0, "all_gather"), FaultAction::Proceed);
+        assert_eq!(inj.on_collective(1, 1, "all_gather"), FaultAction::Proceed);
+        assert_eq!(
+            inj.on_collective(1, 2, "reduce_scatter"),
+            FaultAction::Delay { seconds: 0.25 }
+        );
+        let fired = plan.fired();
+        assert_eq!(fired.len(), 1);
+        assert_eq!(fired[0].rank, 1);
+        assert_eq!(fired[0].seq, 2);
+        assert_eq!(fired[0].op, "reduce_scatter");
+        plan.reset_log();
+        assert!(plan.fired().is_empty());
+    }
+
+    #[test]
+    fn iter_targeting_matches_schedule_arithmetic() {
+        assert_eq!(collectives_per_train_iter(Parallelism::Phantom, 2), 4);
+        assert_eq!(collectives_per_train_iter(Parallelism::Tensor, 2), 3);
+        assert_eq!(collectives_per_train_iter(Parallelism::Tensor, 1), 1);
+        let plan = FaultPlan::crash_at_iter(1, 3, Parallelism::Phantom, 2);
+        assert_eq!(plan.events(), &[FaultEvent { rank: 1, seq: 12, action: FaultAction::Crash }]);
+    }
+}

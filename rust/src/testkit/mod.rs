@@ -1,0 +1,37 @@
+//! Deterministic fault-injection fabric + differential conformance harness
+//! (DESIGN.md §9).
+//!
+//! Four pieces, layered on the comm fault hooks:
+//!
+//! * `fault` — `FaultPlan`: seeded, byte-reproducible fault schedules
+//!   (per-collective delay, message drop -> timeout, rank crash at
+//!   iteration i, poison storms) armed onto `comm::Endpoint`s through
+//!   `InjectorFactory`, so `rank_tp`/`rank_pp`/`serve::pool` run
+//!   unmodified.
+//! * `oracle` — `ReferenceTrainer`: the dense single-rank reference
+//!   (forward + backward + optimizer on the logical model, collectives
+//!   replaced by their rank-ordered definitions), bit-matching the
+//!   distributed trainer; plus an independent naive-math implementation
+//!   for gradient cross-checks.
+//! * `differential` — the randomized `(n, p, TP|PP, backend, batch)`
+//!   conformance sweep asserting distributed ≡ oracle ≡ naive and
+//!   TP ≡ PP across re-sharding.
+//! * `chaos` — scripted failure drivers: crash-resume bit-identity for
+//!   training, crash + hot-swap recovery with zero dropped/reordered
+//!   queries for serving.
+//!
+//! Exposed to operators as `phantom chaos` (cli), exercised in CI by
+//! tests/conformance.rs and tests/chaos_integration.rs.
+
+pub mod chaos;
+pub mod differential;
+pub mod fault;
+pub mod oracle;
+
+pub use chaos::{serve_crash_swap, train_crash_resume, CrashResumeReport, ServeChaosReport};
+pub use differential::{run_sweep, CaseReport, SweepConfig, SweepReport};
+pub use fault::{
+    collectives_per_forward, collectives_per_train_iter, FaultEvent, FaultPlan, FiredFault,
+    StormSpec,
+};
+pub use oracle::ReferenceTrainer;

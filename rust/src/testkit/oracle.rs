@@ -1,0 +1,775 @@
+//! The dense single-rank reference oracle: forward + backward + optimizer
+//! on the *logical* model, executed serially on one thread with no fabric.
+//!
+//! `ReferenceTrainer` materializes every rank's parameter shard (the same
+//! deterministic init the distributed workers use), runs the identical
+//! per-rank kernel schedule through `runtime::native::run_entry`, and
+//! replaces each collective with its mathematical definition evaluated in
+//! canonical rank order — exactly the order the fabric's last-arriver
+//! combine uses. Because the kernels, the collectives' summation order,
+//! and the driver's rank-ordered f64 loss aggregation are all replicated,
+//! the oracle's loss trajectory matches a distributed `coordinator::train`
+//! run **bit for bit**; the differential runner (testkit::differential)
+//! asserts this within a tight tolerance on randomized configs.
+//!
+//! `naive_forward_backward` is a second, independent implementation of the
+//! same math — unfused, `matmul_naive`-based, written from the paper's
+//! equations (18–21) rather than from the kernels — used to cross-check
+//! gradients within a loose float tolerance. A fused-kernel bug and a
+//! schedule bug cannot both hide: the distributed run is checked against
+//! the oracle, and the oracle against the naive math.
+
+use anyhow::{bail, Result};
+
+use crate::config::{Parallelism, RunConfig};
+use crate::coordinator::rank_pp::param_shapes;
+use crate::data::Teacher;
+use crate::model::{PhantomRankParams, TpRankParams};
+use crate::runtime::native::run_entry;
+use crate::runtime::ManifestConfig;
+use crate::tensor::Tensor;
+use crate::train::Optimizer;
+
+/// The serial single-thread reference trainer (see module docs).
+pub struct ReferenceTrainer {
+    pub cfg: RunConfig,
+    geo: ManifestConfig,
+    teacher: Teacher,
+    state: RankStates,
+    opts: Vec<Optimizer>,
+    /// Global loss per completed iteration (same scaling as the driver).
+    pub losses: Vec<f64>,
+    iter: u64,
+}
+
+enum RankStates {
+    Pp(Vec<PhantomRankParams>),
+    Tp(Vec<TpRankParams>),
+}
+
+impl ReferenceTrainer {
+    pub fn new(cfg: &RunConfig) -> Result<ReferenceTrainer> {
+        cfg.model.validate(cfg.p)?;
+        if cfg.train.batch == 0 {
+            bail!("batch must be positive");
+        }
+        let geo = ManifestConfig::native(
+            "testkit-oracle",
+            cfg.p,
+            cfg.model.n,
+            cfg.model.k,
+            cfg.train.batch,
+        );
+        let mut opts = Vec::with_capacity(cfg.p);
+        let state = match cfg.mode {
+            Parallelism::Phantom => {
+                let mut ranks = Vec::with_capacity(cfg.p);
+                for rank in 0..cfg.p {
+                    let params =
+                        PhantomRankParams::init(&cfg.model, cfg.p, rank, cfg.train.seed)?;
+                    opts.push(Optimizer::new(cfg.train.optimizer, &param_shapes(&params)));
+                    ranks.push(params);
+                }
+                RankStates::Pp(ranks)
+            }
+            Parallelism::Tensor => {
+                let mut ranks = Vec::with_capacity(cfg.p);
+                for rank in 0..cfg.p {
+                    let params = TpRankParams::init(&cfg.model, cfg.p, rank, cfg.train.seed)?;
+                    let shapes: Vec<Vec<usize>> = params
+                        .weights
+                        .iter()
+                        .map(|t| t.shape().to_vec())
+                        .chain(params.biases.iter().map(|t| t.shape().to_vec()))
+                        .collect();
+                    opts.push(Optimizer::new(cfg.train.optimizer, &shapes));
+                    ranks.push(params);
+                }
+                RankStates::Tp(ranks)
+            }
+        };
+        Ok(ReferenceTrainer {
+            cfg: cfg.clone(),
+            geo,
+            teacher: Teacher::new(cfg.model.n, cfg.train.seed),
+            state,
+            opts,
+            losses: Vec::new(),
+            iter: 0,
+        })
+    }
+
+    /// Completed iterations.
+    pub fn iterations(&self) -> u64 {
+        self.iter
+    }
+
+    /// The (x, t) shards of training iteration `iter`, identical to the
+    /// driver's `BatchCache` (fixed dataset, iteration i trains on batch
+    /// i % dataset_batches).
+    fn batch_shards(&self, iter: u64) -> Result<(Vec<Tensor>, Vec<Tensor>)> {
+        let key = iter % self.cfg.train.dataset_batches.max(1) as u64;
+        let (x, t) = self.teacher.batch(self.cfg.train.batch, key)?;
+        Ok((x.col_shards(self.cfg.p)?, t.col_shards(self.cfg.p)?))
+    }
+
+    /// One full iteration's loss and per-rank gradients (optimizer
+    /// parameter order), computed with the production kernels but WITHOUT
+    /// touching the trainer state.
+    pub fn forward_backward(&self, iter: u64) -> Result<(f64, Vec<Vec<Tensor>>)> {
+        let (xs, ts) = self.batch_shards(iter)?;
+        match &self.state {
+            RankStates::Pp(ranks) => self.pp_forward_backward(ranks, &xs, &ts),
+            RankStates::Tp(ranks) => self.tp_forward_backward(ranks, &xs, &ts),
+        }
+    }
+
+    /// Advance one iteration: forward + backward + optimizer, exactly the
+    /// distributed schedule. Returns the global loss.
+    pub fn step(&mut self) -> Result<f64> {
+        let (loss, grads) = self.forward_backward(self.iter)?;
+        match &mut self.state {
+            RankStates::Pp(ranks) => {
+                for (params, (opt, glist)) in
+                    ranks.iter_mut().zip(self.opts.iter_mut().zip(&grads))
+                {
+                    let mut tensors = params.named_tensors();
+                    let mut refs: Vec<&mut Tensor> =
+                        tensors.iter_mut().map(|(_, t)| &mut **t).collect();
+                    opt.step(&mut refs, glist);
+                }
+            }
+            RankStates::Tp(ranks) => {
+                for (params, (opt, glist)) in
+                    ranks.iter_mut().zip(self.opts.iter_mut().zip(&grads))
+                {
+                    let mut tensors = params.named_tensors();
+                    let mut refs: Vec<&mut Tensor> =
+                        tensors.iter_mut().map(|(_, t)| &mut **t).collect();
+                    opt.step(&mut refs, glist);
+                }
+            }
+        }
+        self.losses.push(loss);
+        self.iter += 1;
+        Ok(loss)
+    }
+
+    /// Run `iters` iterations; returns the loss trajectory so far.
+    pub fn run(&mut self, iters: usize) -> Result<&[f64]> {
+        for _ in 0..iters {
+            self.step()?;
+        }
+        Ok(&self.losses)
+    }
+
+    // -- collective simulations (canonical rank order, as the fabric) ------
+
+    /// All-Gather: rank-ordered stack — what every rank receives.
+    fn sim_all_gather(parts: &[Tensor]) -> Result<Tensor> {
+        Tensor::stack(parts)
+    }
+
+    /// Reduce-Scatter: slot j summed across ranks in rank order, delivered
+    /// to rank j. Mirrors `Endpoint::reduce_scatter`'s combine exactly.
+    fn sim_reduce_scatter(parts: &[Tensor]) -> Vec<Tensor> {
+        let p = parts.len();
+        let mut out = Vec::with_capacity(p);
+        for j in 0..p {
+            let mut acc = parts[0].unstack_at(j);
+            for part in &parts[1..] {
+                acc.add_assign(&part.unstack_at(j));
+            }
+            out.push(acc);
+        }
+        out
+    }
+
+    /// All-Reduce: elementwise sum in rank order, as the fabric combines.
+    fn sim_all_reduce(parts: &[Tensor]) -> Tensor {
+        let mut acc = parts[0].clone();
+        for part in &parts[1..] {
+            acc.add_assign(part);
+        }
+        acc
+    }
+
+    // -- phantom-parallel schedule ------------------------------------------
+
+    fn pp_forward_backward(
+        &self,
+        ranks: &[PhantomRankParams],
+        xs: &[Tensor],
+        ts: &[Tensor],
+    ) -> Result<(f64, Vec<Vec<Tensor>>)> {
+        let p = self.cfg.p;
+        let layers = self.cfg.model.layers;
+        let geo = &self.geo;
+
+        // forward: ys[l][r], zs[l][r], g_alls[l][r] (own slot zeroed).
+        let mut ys: Vec<Vec<Tensor>> = Vec::with_capacity(layers);
+        let mut zs: Vec<Vec<Tensor>> = Vec::with_capacity(layers);
+        let mut g_alls: Vec<Vec<Tensor>> = Vec::with_capacity(layers);
+        for l in 0..layers {
+            let mut z_locs = Vec::with_capacity(p);
+            let mut gs = Vec::with_capacity(p);
+            for r in 0..p {
+                let y_in = if l == 0 { &xs[r] } else { &ys[l - 1][r] };
+                let out = run_entry(
+                    geo,
+                    "pp_fwd_local",
+                    &[y_in, &ranks[r].locals[l], &ranks[r].compressors[l]],
+                )?;
+                let [z_loc, g] = two(out)?;
+                z_locs.push(z_loc);
+                gs.push(g);
+            }
+            let gathered = Self::sim_all_gather(&gs)?;
+            let mut y_row = Vec::with_capacity(p);
+            let mut z_row = Vec::with_capacity(p);
+            let mut g_row = Vec::with_capacity(p);
+            for r in 0..p {
+                let mut g_all = gathered.clone();
+                g_all.zero_slot(r);
+                let out = run_entry(
+                    geo,
+                    "pp_fwd_combine",
+                    &[&z_locs[r], &g_all, &ranks[r].decompressors[l], &ranks[r].biases[l]],
+                )?;
+                let [y_out, z] = two(out)?;
+                y_row.push(y_out);
+                z_row.push(z);
+                g_row.push(g_all);
+            }
+            ys.push(y_row);
+            zs.push(z_row);
+            g_alls.push(g_row);
+        }
+
+        // loss + top-layer error compression (rank-ordered f64 sum, as the
+        // driver aggregates).
+        let scale = 1.0 / (self.cfg.train.batch as f64 * self.cfg.model.n as f64);
+        let mut loss_locals = Vec::with_capacity(p);
+        let mut deltas = Vec::with_capacity(p);
+        let mut h_outs = Vec::with_capacity(p);
+        for r in 0..p {
+            let out = run_entry(
+                geo,
+                "mse_delta",
+                &[&ys[layers - 1][r], &zs[layers - 1][r], &ts[r]],
+            )?;
+            let [loss_t, delta] = two(out)?;
+            loss_locals.push(loss_t.data()[0] as f64);
+            let out = run_entry(
+                geo,
+                "pp_bwd_compress",
+                &[&delta, &ranks[r].decompressors[layers - 1]],
+            )?;
+            let [h_out] = one(out)?;
+            deltas.push(delta);
+            h_outs.push(h_out);
+        }
+        let global = loss_locals.iter().sum::<f64>() * scale;
+        let mut h_sums = Self::sim_reduce_scatter(&h_outs);
+
+        // backward: per layer, per rank: pp_grads, then the fused
+        // combine(l)+compress(l-1) composition and the Reduce-Scatter.
+        let mut grads: Vec<Vec<Option<[Tensor; 4]>>> =
+            (0..p).map(|_| (0..layers).map(|_| None).collect()).collect();
+        for l in (0..layers).rev() {
+            for r in 0..p {
+                let y_prev = if l == 0 { &xs[r] } else { &ys[l - 1][r] };
+                let out = run_entry(
+                    geo,
+                    "pp_grads",
+                    &[y_prev, &deltas[r], &h_sums[r], &g_alls[l][r]],
+                )?;
+                let [dl, dc, dd, db] = four(out)?;
+                grads[r][l] = Some([dl, dc, dd, db]);
+            }
+            if l > 0 {
+                let mut next_h = Vec::with_capacity(p);
+                for r in 0..p {
+                    let out = run_entry(
+                        geo,
+                        "pp_bwd_combine",
+                        &[
+                            &deltas[r],
+                            &h_sums[r],
+                            &ranks[r].locals[l],
+                            &ranks[r].compressors[l],
+                            &zs[l - 1][r],
+                        ],
+                    )?;
+                    let [delta_prev] = one(out)?;
+                    let out = run_entry(
+                        geo,
+                        "pp_bwd_compress",
+                        &[&delta_prev, &ranks[r].decompressors[l - 1]],
+                    )?;
+                    let [h_out] = one(out)?;
+                    deltas[r] = delta_prev;
+                    next_h.push(h_out);
+                }
+                h_sums = Self::sim_reduce_scatter(&next_h);
+            }
+        }
+
+        // optimizer order: L*, C*, D*, b* (rank_pp::iteration).
+        let mut out = Vec::with_capacity(p);
+        for rank_grads in grads {
+            out.push(order_pp_grads(rank_grads));
+        }
+        Ok((global, out))
+    }
+
+    // -- tensor-parallel schedule -------------------------------------------
+
+    fn tp_forward_backward(
+        &self,
+        ranks: &[TpRankParams],
+        xs: &[Tensor],
+        ts: &[Tensor],
+    ) -> Result<(f64, Vec<Vec<Tensor>>)> {
+        let p = self.cfg.p;
+        let layers = self.cfg.model.layers;
+        let m = self.cfg.model.n / p;
+        let geo = &self.geo;
+
+        let mut y_shards: Vec<Tensor> = xs.to_vec();
+        let mut y_fulls: Vec<Tensor> = Vec::with_capacity(layers);
+        let mut zs: Vec<Vec<Tensor>> = Vec::with_capacity(layers);
+        for l in 0..layers {
+            let gathered = Self::sim_all_gather(&y_shards)?;
+            let y_full = gathered.concat_shards_stacked()?;
+            let mut z_row = Vec::with_capacity(p);
+            for r in 0..p {
+                let out = run_entry(
+                    geo,
+                    "tp_fwd",
+                    &[&y_full, &ranks[r].weights[l], &ranks[r].biases[l]],
+                )?;
+                let [y_out, z] = two(out)?;
+                y_shards[r] = y_out;
+                z_row.push(z);
+            }
+            y_fulls.push(y_full);
+            zs.push(z_row);
+        }
+
+        let scale = 1.0 / (self.cfg.train.batch as f64 * self.cfg.model.n as f64);
+        let mut loss_locals = Vec::with_capacity(p);
+        let mut deltas = Vec::with_capacity(p);
+        for r in 0..p {
+            let out = run_entry(
+                geo,
+                "mse_delta",
+                &[&y_shards[r], &zs[layers - 1][r], &ts[r]],
+            )?;
+            let [loss_t, delta] = two(out)?;
+            loss_locals.push(loss_t.data()[0] as f64);
+            deltas.push(delta);
+        }
+        let global = loss_locals.iter().sum::<f64>() * scale;
+
+        let mut grads: Vec<Vec<Option<[Tensor; 2]>>> =
+            (0..p).map(|_| (0..layers).map(|_| None).collect()).collect();
+        for r in 0..p {
+            let out = run_entry(geo, "tp_grads", &[&y_fulls[layers - 1], &deltas[r]])?;
+            let [dw, db] = two(out)?;
+            grads[r][layers - 1] = Some([dw, db]);
+        }
+        for l in (1..layers).rev() {
+            let mut partials = Vec::with_capacity(p);
+            for r in 0..p {
+                let out = run_entry(geo, "tp_bwd_partial", &[&deltas[r], &ranks[r].weights[l]])?;
+                let [dy] = one(out)?;
+                partials.push(dy);
+            }
+            let dy_full = Self::sim_all_reduce(&partials);
+            for r in 0..p {
+                let dy_shard = dy_full.col_slice(r * m, m)?;
+                let out = run_entry(geo, "tp_bwd_finish", &[&dy_shard, &zs[l - 1][r]])?;
+                let [delta] = one(out)?;
+                let out = run_entry(geo, "tp_grads", &[&y_fulls[l - 1], &delta])?;
+                let [dw, db] = two(out)?;
+                deltas[r] = delta;
+                grads[r][l - 1] = Some([dw, db]);
+            }
+        }
+
+        // optimizer order: W*, b* (rank_tp::iteration).
+        let mut out = Vec::with_capacity(p);
+        for rank_grads in grads {
+            let mut dws = Vec::with_capacity(layers);
+            let mut dbs = Vec::with_capacity(layers);
+            for g in rank_grads {
+                let [dw, db] = g.expect("every layer produced grads");
+                dws.push(dw);
+                dbs.push(db);
+            }
+            let mut glist = dws;
+            glist.append(&mut dbs);
+            out.push(glist);
+        }
+        Ok((global, out))
+    }
+
+    // -- independent naive reference ---------------------------------------
+
+    /// The same iteration computed by a second, unfused implementation:
+    /// `matmul_naive`, explicit loops, paper-equation gradient formulas.
+    /// Returns (loss, per-rank grads) in the same order as
+    /// `forward_backward`; agreement is within float tolerance, not bitwise
+    /// (summation orders differ by construction).
+    pub fn naive_forward_backward(&self, iter: u64) -> Result<(f64, Vec<Vec<Tensor>>)> {
+        let (xs, ts) = self.batch_shards(iter)?;
+        match &self.state {
+            RankStates::Pp(ranks) => naive_pp(&self.cfg, ranks, &xs, &ts),
+            RankStates::Tp(ranks) => naive_tp(&self.cfg, ranks, &xs, &ts),
+        }
+    }
+}
+
+fn order_pp_grads(rank_grads: Vec<Option<[Tensor; 4]>>) -> Vec<Tensor> {
+    let layers = rank_grads.len();
+    let mut dls = Vec::with_capacity(layers);
+    let mut dcs = Vec::with_capacity(layers);
+    let mut dds = Vec::with_capacity(layers);
+    let mut dbs = Vec::with_capacity(layers);
+    for g in rank_grads {
+        let [dl, dc, dd, db] = g.expect("every layer produced grads");
+        dls.push(dl);
+        dcs.push(dc);
+        dds.push(dd);
+        dbs.push(db);
+    }
+    let mut glist = dls;
+    glist.append(&mut dcs);
+    glist.append(&mut dds);
+    glist.append(&mut dbs);
+    glist
+}
+
+fn one(mut v: Vec<Tensor>) -> Result<[Tensor; 1]> {
+    if v.len() != 1 {
+        bail!("expected 1 output, got {}", v.len());
+    }
+    Ok([v.pop().expect("length checked")])
+}
+
+fn two(v: Vec<Tensor>) -> Result<[Tensor; 2]> {
+    if v.len() != 2 {
+        bail!("expected 2 outputs, got {}", v.len());
+    }
+    Ok(v.try_into().map_err(|_| ()).expect("length checked"))
+}
+
+fn four(v: Vec<Tensor>) -> Result<[Tensor; 4]> {
+    if v.len() != 4 {
+        bail!("expected 4 outputs, got {}", v.len());
+    }
+    Ok(v.try_into().map_err(|_| ()).expect("length checked"))
+}
+
+// -- naive math (independent of runtime::native) ----------------------------
+
+fn relu_mask_into(z: &Tensor, t: &mut Tensor) {
+    for (o, &zv) in t.data_mut().iter_mut().zip(z.data()) {
+        if zv <= 0.0 {
+            *o = 0.0;
+        }
+    }
+}
+
+fn add_bias_relu(mut z: Tensor, b: &Tensor) -> (Tensor, Tensor) {
+    let m = b.numel();
+    for row in z.data_mut().chunks_mut(m) {
+        for (v, &bv) in row.iter_mut().zip(b.data()) {
+            *v += bv;
+        }
+    }
+    let y = z.relu();
+    (y, z)
+}
+
+fn col_sum(t: &Tensor) -> Tensor {
+    let m = *t.shape().last().expect("2-D tensor");
+    let mut out = Tensor::zeros(&[m]);
+    for row in t.data().chunks(m) {
+        for (o, &v) in out.data_mut().iter_mut().zip(row) {
+            *o += v;
+        }
+    }
+    out
+}
+
+fn mse_and_delta(y: &Tensor, z: &Tensor, t: &Tensor, scale: f32) -> (f64, Tensor) {
+    let mut delta = Tensor::zeros(y.shape());
+    let mut loss = 0.0f64;
+    for i in 0..y.numel() {
+        let diff = y.data()[i] - t.data()[i];
+        loss += (diff as f64) * (diff as f64);
+        delta.data_mut()[i] = if z.data()[i] > 0.0 { 2.0 * scale * diff } else { 0.0 };
+    }
+    (loss, delta)
+}
+
+fn naive_pp(
+    cfg: &RunConfig,
+    ranks: &[PhantomRankParams],
+    xs: &[Tensor],
+    ts: &[Tensor],
+) -> Result<(f64, Vec<Vec<Tensor>>)> {
+    let p = cfg.p;
+    let layers = cfg.model.layers;
+    let scale = 1.0 / (cfg.train.batch as f64 * cfg.model.n as f64);
+
+    let mut ys: Vec<Vec<Tensor>> = Vec::with_capacity(layers);
+    let mut zs: Vec<Vec<Tensor>> = Vec::with_capacity(layers);
+    let mut g_alls: Vec<Vec<Tensor>> = Vec::with_capacity(layers);
+    for l in 0..layers {
+        let mut gs = Vec::with_capacity(p);
+        let mut z_locs = Vec::with_capacity(p);
+        for r in 0..p {
+            let y_in = if l == 0 { &xs[r] } else { &ys[l - 1][r] };
+            z_locs.push(y_in.matmul_naive(&ranks[r].locals[l])?);
+            gs.push(y_in.matmul_naive(&ranks[r].compressors[l])?);
+        }
+        let gathered = Tensor::stack(&gs)?;
+        let mut y_row = Vec::with_capacity(p);
+        let mut z_row = Vec::with_capacity(p);
+        let mut g_row = Vec::with_capacity(p);
+        for r in 0..p {
+            let mut g_all = gathered.clone();
+            g_all.zero_slot(r);
+            let mut z = z_locs[r].clone();
+            for src in 0..p {
+                if src == r {
+                    continue;
+                }
+                let d = ranks[r].decompressors[l].unstack_at(src);
+                z.add_assign(&g_all.unstack_at(src).matmul_naive(&d)?);
+            }
+            let (y, z) = add_bias_relu(z, &ranks[r].biases[l]);
+            y_row.push(y);
+            z_row.push(z);
+            g_row.push(g_all);
+        }
+        ys.push(y_row);
+        zs.push(z_row);
+        g_alls.push(g_row);
+    }
+
+    let mut loss = 0.0f64;
+    let mut deltas = Vec::with_capacity(p);
+    for r in 0..p {
+        let (lr, d) =
+            mse_and_delta(&ys[layers - 1][r], &zs[layers - 1][r], &ts[r], scale as f32);
+        loss += lr;
+        deltas.push(d);
+    }
+    let global = loss * scale;
+
+    // h_out[r] = delta_r · D_r[i]ᵀ per destination i; h_sum by slot sum.
+    let h_sum_of = |deltas: &[Tensor], layer: usize| -> Result<Vec<Tensor>> {
+        let mut h_sums: Vec<Option<Tensor>> = (0..p).map(|_| None).collect();
+        for r in 0..p {
+            for i in 0..p {
+                let d = ranks[r].decompressors[layer].unstack_at(i);
+                let h = deltas[r].matmul_naive(&d.transpose()?)?;
+                match &mut h_sums[i] {
+                    None => h_sums[i] = Some(h),
+                    Some(acc) => acc.add_assign(&h),
+                }
+            }
+        }
+        Ok(h_sums.into_iter().map(|h| h.expect("every slot summed")).collect())
+    };
+    let mut h_sums = h_sum_of(&deltas, layers - 1)?;
+
+    let mut grads: Vec<Vec<Option<[Tensor; 4]>>> =
+        (0..p).map(|_| (0..layers).map(|_| None).collect()).collect();
+    for l in (0..layers).rev() {
+        for r in 0..p {
+            let y_prev = if l == 0 { &xs[r] } else { &ys[l - 1][r] };
+            let y_prev_t = y_prev.transpose()?;
+            let dl = y_prev_t.matmul_naive(&deltas[r])?;
+            let dc = y_prev_t.matmul_naive(&h_sums[r])?;
+            let (pk, kk, mm) =
+                match ranks[r].decompressors[l].shape() {
+                    [a, b, c] => (*a, *b, *c),
+                    s => bail!("decompressor must be 3-D, got {s:?}"),
+                };
+            let mut dd = Tensor::zeros(&[pk, kk, mm]);
+            for i in 0..p {
+                if i == r {
+                    continue; // own slot: structurally zero
+                }
+                let gi = g_alls[l][r].unstack_at(i);
+                let block = gi.transpose()?.matmul_naive(&deltas[r])?;
+                dd.data_mut()[i * kk * mm..(i + 1) * kk * mm].copy_from_slice(block.data());
+            }
+            let db = col_sum(&deltas[r]);
+            grads[r][l] = Some([dl, dc, dd, db]);
+        }
+        if l > 0 {
+            let mut next = Vec::with_capacity(p);
+            for r in 0..p {
+                let mut d = deltas[r].matmul_naive(&ranks[r].locals[l].transpose()?)?;
+                d.add_assign(&h_sums[r].matmul_naive(&ranks[r].compressors[l].transpose()?)?);
+                relu_mask_into(&zs[l - 1][r], &mut d);
+                next.push(d);
+            }
+            deltas = next;
+            h_sums = h_sum_of(&deltas, l - 1)?;
+        }
+    }
+
+    let mut out = Vec::with_capacity(p);
+    for rank_grads in grads {
+        out.push(order_pp_grads(rank_grads));
+    }
+    Ok((global, out))
+}
+
+fn naive_tp(
+    cfg: &RunConfig,
+    ranks: &[TpRankParams],
+    xs: &[Tensor],
+    ts: &[Tensor],
+) -> Result<(f64, Vec<Vec<Tensor>>)> {
+    let p = cfg.p;
+    let layers = cfg.model.layers;
+    let m = cfg.model.n / p;
+    let scale = 1.0 / (cfg.train.batch as f64 * cfg.model.n as f64);
+
+    let mut y_shards: Vec<Tensor> = xs.to_vec();
+    let mut y_fulls = Vec::with_capacity(layers);
+    let mut zs: Vec<Vec<Tensor>> = Vec::with_capacity(layers);
+    for l in 0..layers {
+        let y_full = Tensor::from_col_shards(&y_shards)?;
+        let mut z_row = Vec::with_capacity(p);
+        for r in 0..p {
+            let z = y_full.matmul_naive(&ranks[r].weights[l])?;
+            let (y, z) = add_bias_relu(z, &ranks[r].biases[l]);
+            y_shards[r] = y;
+            z_row.push(z);
+        }
+        y_fulls.push(y_full);
+        zs.push(z_row);
+    }
+
+    let mut loss = 0.0f64;
+    let mut deltas = Vec::with_capacity(p);
+    for r in 0..p {
+        let (lr, d) = mse_and_delta(&y_shards[r], &zs[layers - 1][r], &ts[r], scale as f32);
+        loss += lr;
+        deltas.push(d);
+    }
+    let global = loss * scale;
+
+    let mut grads: Vec<Vec<Option<[Tensor; 2]>>> =
+        (0..p).map(|_| (0..layers).map(|_| None).collect()).collect();
+    for r in 0..p {
+        let dw = y_fulls[layers - 1].transpose()?.matmul_naive(&deltas[r])?;
+        grads[r][layers - 1] = Some([dw, col_sum(&deltas[r])]);
+    }
+    for l in (1..layers).rev() {
+        let mut dy_full: Option<Tensor> = None;
+        for r in 0..p {
+            let partial = deltas[r].matmul_naive(&ranks[r].weights[l].transpose()?)?;
+            match &mut dy_full {
+                None => dy_full = Some(partial),
+                Some(acc) => acc.add_assign(&partial),
+            }
+        }
+        let dy_full = dy_full.expect("p >= 1");
+        for r in 0..p {
+            let mut delta = dy_full.col_slice(r * m, m)?;
+            relu_mask_into(&zs[l - 1][r], &mut delta);
+            let dw = y_fulls[l - 1].transpose()?.matmul_naive(&delta)?;
+            let db = col_sum(&delta);
+            deltas[r] = delta;
+            grads[r][l - 1] = Some([dw, db]);
+        }
+    }
+
+    let mut out = Vec::with_capacity(p);
+    for rank_grads in grads {
+        let mut dws = Vec::with_capacity(layers);
+        let mut dbs = Vec::with_capacity(layers);
+        for g in rank_grads {
+            let [dw, db] = g.expect("every layer produced grads");
+            dws.push(dw);
+            dbs.push(db);
+        }
+        let mut glist = dws;
+        glist.append(&mut dbs);
+        out.push(glist);
+    }
+    Ok((global, out))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::preset;
+    use crate::util::proptest::assert_close;
+
+    #[test]
+    fn oracle_runs_and_losses_fall_both_modes() {
+        for mode in [Parallelism::Phantom, Parallelism::Tensor] {
+            let mut cfg = preset("tiny", mode).unwrap();
+            cfg.train.max_iters = 6;
+            let mut oracle = ReferenceTrainer::new(&cfg).unwrap();
+            oracle.run(6).unwrap();
+            assert_eq!(oracle.losses.len(), 6);
+            assert!(
+                oracle.losses[5] < oracle.losses[0],
+                "{}: {:?}",
+                mode.name(),
+                oracle.losses
+            );
+        }
+    }
+
+    #[test]
+    fn kernel_and_naive_paths_agree_on_loss_and_grads() {
+        for mode in [Parallelism::Phantom, Parallelism::Tensor] {
+            let mut cfg = preset("tiny", mode).unwrap();
+            cfg.model.layers = 3;
+            let mut oracle = ReferenceTrainer::new(&cfg).unwrap();
+            // Check at init and again at an evolved state.
+            for round in 0..2 {
+                let (loss_k, grads_k) = oracle.forward_backward(oracle.iterations()).unwrap();
+                let (loss_n, grads_n) =
+                    oracle.naive_forward_backward(oracle.iterations()).unwrap();
+                let rel = (loss_k - loss_n).abs() / loss_k.abs().max(1e-12);
+                assert!(rel < 1e-5, "{} round {round}: loss {loss_k} vs {loss_n}", mode.name());
+                assert_eq!(grads_k.len(), grads_n.len());
+                for (r, (gk, gn)) in grads_k.iter().zip(&grads_n).enumerate() {
+                    assert_eq!(gk.len(), gn.len(), "rank {r}");
+                    for (i, (a, b)) in gk.iter().zip(gn).enumerate() {
+                        assert_eq!(a.shape(), b.shape(), "rank {r} grad {i}");
+                        assert_close(a.data(), b.data(), 1e-3, 1e-5).unwrap_or_else(|e| {
+                            panic!("{} round {round} rank {r} grad {i}: {e}", mode.name())
+                        });
+                    }
+                }
+                oracle.step().unwrap();
+                oracle.step().unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn oracle_is_deterministic() {
+        let cfg = preset("tiny", Parallelism::Phantom).unwrap();
+        let run = || {
+            let mut o = ReferenceTrainer::new(&cfg).unwrap();
+            o.run(4).unwrap().to_vec()
+        };
+        assert_eq!(run(), run());
+    }
+}

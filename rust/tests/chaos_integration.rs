@@ -1,0 +1,164 @@
+//! Chaos integration suite (DESIGN.md §9): scripted failures over the real
+//! training and serving stacks.
+//!
+//! * crash a training rank mid-run: the driver surfaces a structured error
+//!   (rank id + injected-fault payload) instead of hanging, and `--resume`
+//!   from the surviving snapshot reproduces the uninterrupted loss
+//!   trajectory bit for bit — both parallelism modes;
+//! * drop a message: the dropping rank errors, its peers surface the
+//!   rendezvous timeout promptly (injectable timeout, no 60 s hang);
+//! * poison storm: a poisoned fabric fails every rank loudly;
+//! * crash a serve-pool rank: the batch errors, shutdown names the dead
+//!   rank, and a rebuilt pool hot-swapped onto the snapshot replays the
+//!   failed batch — zero dropped, zero reordered, bitwise-equal answers.
+
+use std::time::{Duration, Instant};
+
+use phantom::comm::{FaultAction, Fabric};
+use phantom::config::{preset, Parallelism, ServeConfig};
+use phantom::coordinator::{train_with, TrainOptions};
+use phantom::runtime::ExecServer;
+use phantom::simnet::NetworkProfile;
+use phantom::tensor::Tensor;
+use phantom::testkit::{
+    collectives_per_forward, serve_crash_swap, train_crash_resume, FaultPlan,
+};
+
+fn tdir(tag: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("phantom-chaos-it-{tag}-{}", std::process::id()));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+#[test]
+fn crash_resume_is_bit_identical_both_modes() {
+    for (mode, crash_rank, crash_iter) in
+        [(Parallelism::Phantom, 1usize, 3u64), (Parallelism::Tensor, 0, 4)]
+    {
+        let cfg = preset("tiny_p2", mode).unwrap();
+        let dir = tdir(&format!("resume-{}", mode.name()));
+        let report = train_crash_resume(&cfg, 8, 2, crash_rank, crash_iter, &dir).unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+        assert!(
+            report.bit_identical,
+            "{}: resumed {:?} vs baseline {:?}",
+            mode.name(),
+            report.resumed,
+            report.baseline
+        );
+        assert_eq!(report.baseline.len(), 8, "{}", mode.name());
+        // The crash surfaced structurally: who died, and why.
+        let msg = &report.crash_error;
+        assert!(msg.contains(&format!("rank {crash_rank} panicked")), "{}", msg);
+        assert!(msg.contains("injected fault"), "{msg}");
+        assert!(msg.contains("crashed"), "{msg}");
+    }
+}
+
+#[test]
+fn injected_drop_surfaces_timeout_promptly_not_hang() {
+    // Rank 0 drops its third collective; rank 1 must surface the rendezvous
+    // timeout through the driver in well under the production 60 s.
+    let mut cfg = preset("tiny_p2", Parallelism::Phantom).unwrap();
+    cfg.train.max_iters = 4;
+    let server = ExecServer::for_run(&cfg).unwrap();
+    let t0 = Instant::now();
+    let err = train_with(
+        &cfg,
+        &server,
+        TrainOptions {
+            faults: Some(FaultPlan::drop_message(0, 2).injector_factory()),
+            rendezvous_timeout: Some(Duration::from_millis(250)),
+            ..Default::default()
+        },
+    )
+    .expect_err("a dropped message must fail the run");
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("dropped") || msg.contains("timeout"),
+        "error should name the drop or the timeout: {msg}"
+    );
+    assert!(t0.elapsed() < Duration::from_secs(20), "drop must not ride the 60 s timeout");
+}
+
+#[test]
+fn poison_storm_fails_every_rank_loudly() {
+    let mut cfg = preset("tiny_p2", Parallelism::Phantom).unwrap();
+    cfg.train.max_iters = 4;
+    let server = ExecServer::for_run(&cfg).unwrap();
+    let plan = FaultPlan::new().with(1, 5, FaultAction::Poison);
+    let err = train_with(
+        &cfg,
+        &server,
+        TrainOptions { faults: Some(plan.injector_factory()), ..Default::default() },
+    )
+    .expect_err("a poisoned fabric must fail the run");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("poisoned"), "{msg}");
+    let fired = plan.fired();
+    assert_eq!(fired.len(), 1);
+    assert_eq!((fired[0].rank, fired[0].seq), (1, 5));
+}
+
+#[test]
+fn serve_crash_hot_swap_recovers_with_zero_drops() {
+    for mode in [Parallelism::Phantom, Parallelism::Tensor] {
+        let cfg = preset("tiny_p2", mode).unwrap();
+        let scfg = ServeConfig {
+            max_batch: cfg.train.batch,
+            queue_depth: 4 * cfg.train.batch,
+            linger_s: 1e-3,
+            mode,
+        };
+        // Crash rank 1 inside batch 2 (layers collectives per batch).
+        let crash_seq = collectives_per_forward(cfg.model.layers) * 2 + 1;
+        let report = serve_crash_swap(&cfg, &scfg, 5, 1, crash_seq).unwrap();
+        assert_eq!(report.recovered_batch, 2, "{}", mode.name());
+        // outputs_match doubles as the zero-dropped proof (a missing answer
+        // matches nothing); per-batch ordering is enforced inside
+        // RankPool::execute, which rejects out-of-sequence completions.
+        assert!(report.outputs_match, "{}: answers diverged after hot-swap", mode.name());
+        assert!(
+            report.swap_observable,
+            "{}: swap weights indistinguishable — the hot swap was not exercised",
+            mode.name()
+        );
+        assert!(
+            report.shutdown_error.contains("serve rank 1 panicked"),
+            "{}: {}",
+            mode.name(),
+            report.shutdown_error
+        );
+    }
+}
+
+#[test]
+fn run_ranks_failure_shape_carries_rank_and_context() {
+    // The structured-panic contract chaos tests build on: an injected
+    // crash inside a collective propagates rank id + payload + collective
+    // context through Fabric::run_ranks.
+    let plan = FaultPlan::crash(2, 1);
+    let factory = plan.injector_factory();
+    let err = Fabric::run_ranks(
+        3,
+        NetworkProfile::frontier(),
+        Duration::from_secs(60),
+        move |mut ep, mut led| {
+            if let Some(inj) = factory.for_rank(ep.rank) {
+                ep.arm_faults(inj);
+            }
+            for _ in 0..2 {
+                if ep.all_reduce(Tensor::filled(&[2], 1.0), &mut led).is_err() {
+                    break;
+                }
+            }
+            ep.rank
+        },
+    )
+    .expect_err("rank 2 crashed");
+    assert_eq!(err.rank, 2);
+    assert!(err.payload.contains("injected fault: rank 2 crashed"), "{}", err.payload);
+    assert!(err.payload.contains("'all_reduce'"), "{}", err.payload);
+    assert!(err.payload.contains("collective #1"), "{}", err.payload);
+    assert_eq!(err.all, vec![(2, err.payload.clone())]);
+}

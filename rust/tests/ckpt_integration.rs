@@ -23,6 +23,10 @@ use phantom::util::json::{read_records_json, write_records_json};
 use phantom::util::prng::Prng;
 use phantom::util::proptest::assert_close;
 
+fn topts(ckpt: Option<CkptPolicy>, resume: Option<Snapshot>) -> TrainOptions {
+    TrainOptions { ckpt, resume, ..Default::default() }
+}
+
 fn tdir(tag: &str) -> PathBuf {
     let d = std::env::temp_dir().join(format!("phantom-ckpt-it-{tag}-{}", std::process::id()));
     std::fs::create_dir_all(&d).unwrap();
@@ -46,7 +50,7 @@ fn resume_case(mode: Parallelism, opt: OptimizerConfig, tag: &str) {
     leg_cfg.train.max_iters = 10;
     let policy = CkptPolicy { every: 5, dir: root.clone() };
     let leg =
-        train_with(&leg_cfg, &server, TrainOptions { ckpt: Some(policy), resume: None }).unwrap();
+        train_with(&leg_cfg, &server, topts(Some(policy), None)).unwrap();
     assert_eq!(leg.iterations, 10);
     assert!(root.join("ckpt-000005").join("manifest.json").exists());
     assert!(root.join("ckpt-000010").join("manifest.json").exists());
@@ -60,7 +64,7 @@ fn resume_case(mode: Parallelism, opt: OptimizerConfig, tag: &str) {
     let mut resume_cfg = snap.config.clone();
     resume_cfg.train.max_iters = 20;
     let resumed =
-        train_with(&resume_cfg, &server, TrainOptions { ckpt: None, resume: Some(snap) }).unwrap();
+        train_with(&resume_cfg, &server, topts(None, Some(snap))).unwrap();
 
     // Bit-identical continuation: the resumed run's full trajectory equals
     // the uninterrupted one, f64-exactly.
@@ -90,12 +94,12 @@ fn resume_from_satisfied_snapshot_trains_nothing() {
     cfg.train.max_iters = 6;
     let server = ExecServer::for_run(&cfg).unwrap();
     let policy = CkptPolicy { every: 3, dir: root.clone() };
-    train_with(&cfg, &server, TrainOptions { ckpt: Some(policy), resume: None }).unwrap();
+    train_with(&cfg, &server, topts(Some(policy), None)).unwrap();
 
     // Resuming with the same cap: the snapshot already satisfies it.
     let snap = Snapshot::load(&root.join("ckpt-000006")).unwrap();
     let report =
-        train_with(&cfg, &server, TrainOptions { ckpt: None, resume: Some(snap) }).unwrap();
+        train_with(&cfg, &server, topts(None, Some(snap))).unwrap();
     assert_eq!(report.iterations, 6);
     assert!(report.per_rank.is_empty(), "no rank work for a satisfied snapshot");
     std::fs::remove_dir_all(&root).ok();
@@ -108,20 +112,20 @@ fn resume_rejects_mismatched_config() {
     cfg.train.max_iters = 4;
     let server = ExecServer::for_run(&cfg).unwrap();
     let policy = CkptPolicy { every: 4, dir: root.clone() };
-    train_with(&cfg, &server, TrainOptions { ckpt: Some(policy), resume: None }).unwrap();
+    train_with(&cfg, &server, topts(Some(policy), None)).unwrap();
     let snap = Snapshot::load(&root.join("ckpt-000004")).unwrap();
 
     let mut wrong_seed = cfg.clone();
     wrong_seed.train.seed ^= 1;
     wrong_seed.train.max_iters = 8;
-    let opts = TrainOptions { ckpt: None, resume: Some(snap.clone()) };
+    let opts = topts(None, Some(snap.clone()));
     let err = train_with(&wrong_seed, &server, opts);
     assert!(err.is_err(), "a different data seed must refuse to resume");
 
     let mut wrong_opt = cfg.clone();
     wrong_opt.train.optimizer = OptimizerConfig::Sgd { lr: 0.9 };
     wrong_opt.train.max_iters = 8;
-    let err = train_with(&wrong_opt, &server, TrainOptions { ckpt: None, resume: Some(snap) });
+    let err = train_with(&wrong_opt, &server, topts(None, Some(snap)));
     assert!(err.is_err(), "a different optimizer must refuse to resume");
     std::fs::remove_dir_all(&root).ok();
 }
@@ -141,7 +145,7 @@ fn trained_tp_snapshot_reshards_to_pp_and_serves() {
     tp_cfg.train.max_iters = 6;
     let server = ExecServer::for_run(&tp_cfg).unwrap();
     let policy = CkptPolicy { every: 6, dir: root.clone() };
-    train_with(&tp_cfg, &server, TrainOptions { ckpt: Some(policy), resume: None }).unwrap();
+    train_with(&tp_cfg, &server, topts(Some(policy), None)).unwrap();
 
     let tp_snap = Snapshot::load(&root.join("ckpt-000006")).unwrap();
     let pp_snap = reshard(&tp_snap, 2, Parallelism::Phantom).unwrap();

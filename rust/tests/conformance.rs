@@ -1,0 +1,136 @@
+//! Differential conformance suite (DESIGN.md §9, acceptance criteria of
+//! the testkit ISSUE):
+//!
+//! * the randomized sweep passes TP ≡ PP ≡ dense-oracle on >= 25 configs
+//!   (distributed train vs single-rank `ReferenceTrainer` loss
+//!   trajectories, fused kernels vs naive math gradients, TP <-> PP
+//!   re-shard forward equivalence);
+//! * the determinism contract: the same seeded `FaultPlan` reproduces a
+//!   byte-identical fault schedule — generation-side (canonical bytes)
+//!   and run-side (the fired log of two identical runs) — and injected
+//!   delays perturb only virtual time, never the math;
+//! * one crash-resume trajectory match rides the same contract (the full
+//!   chaos scenarios live in tests/chaos_integration.rs).
+//!
+//! Also refreshes BENCH_conformance.json at the repo root, mirroring the
+//! serve/ckpt bench records.
+
+use phantom::config::{preset, Parallelism};
+use phantom::coordinator::{train_with, TrainOptions};
+use phantom::runtime::ExecServer;
+use phantom::testkit::{
+    run_sweep, train_crash_resume, FaultPlan, StormSpec, SweepConfig,
+};
+use phantom::util::json::read_records_json;
+
+#[test]
+fn differential_sweep_passes_25_randomized_configs() {
+    // >= 25 randomized (n, p, TP|PP, backend, batch) configs, every one
+    // asserting the full equivalence chain. A failure names the config.
+    let sw = SweepConfig { cases: 25, seed: 0xD1FF, iters: 3, ..Default::default() };
+    let report = run_sweep(&sw).unwrap();
+    assert_eq!(report.cases.len(), 25);
+    assert!(
+        report.max_loss_dev <= sw.loss_rtol,
+        "distributed vs oracle loss deviation {:.3e}",
+        report.max_loss_dev
+    );
+    assert!(report.max_grad_dev <= sw.grad_rtol);
+    assert!(report.max_forward_dev <= sw.forward_rtol);
+    // The sweep covers both optimism directions: some PP-favored and some
+    // deeper/shallower geometries actually got sampled.
+    let layers: std::collections::BTreeSet<usize> =
+        report.cases.iter().map(|c| c.layers).collect();
+    assert!(layers.len() > 1, "sweep degenerated to a single depth: {layers:?}");
+
+    // Refresh the repo-root bench record (uploaded as a CI artifact).
+    let records = report.records();
+    let path = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("../BENCH_conformance.json");
+    phantom::serve::write_records_json(&path, &records).unwrap();
+    let back = read_records_json(&path).unwrap();
+    assert_eq!(back.len(), records.len());
+}
+
+#[test]
+fn fault_plan_generation_is_byte_identical_across_runs() {
+    let spec = StormSpec {
+        p: 4,
+        horizon: 24,
+        events: 10,
+        mean_delay_s: 2e-3,
+        allow_drops: true,
+        allow_poison: true,
+    };
+    let a = FaultPlan::generate(0xC4A05, &spec);
+    let b = FaultPlan::generate(0xC4A05, &spec);
+    assert!(!a.is_empty());
+    assert_eq!(
+        a.canonical_bytes(),
+        b.canonical_bytes(),
+        "same seed must reproduce the same schedule, byte for byte"
+    );
+}
+
+#[test]
+fn same_fault_plan_fires_byte_identically_and_preserves_the_math() {
+    // A delay-only storm: non-fatal, so training completes. Two runs under
+    // plans generated from the same seed must (a) fire the same faults at
+    // the same collectives — byte-identical logs — and (b) leave the loss
+    // trajectory exactly equal to the fault-free run: injected faults live
+    // in virtual time, never in the math.
+    let mut cfg = preset("tiny_p2", Parallelism::Phantom).unwrap();
+    cfg.train.max_iters = 4;
+    let server = ExecServer::for_run(&cfg).unwrap();
+    let spec = StormSpec {
+        p: cfg.p,
+        horizon: 16, // 4 iters x 4 collectives/iter
+        events: 6,
+        mean_delay_s: 5e-3,
+        allow_drops: false,
+        allow_poison: false,
+    };
+
+    let clean = train_with(&cfg, &server, TrainOptions::default()).unwrap();
+
+    let mut fired = Vec::new();
+    for _ in 0..2 {
+        let plan = FaultPlan::generate(0xB00, &spec);
+        let opts = TrainOptions { faults: Some(plan.injector_factory()), ..Default::default() };
+        let report = train_with(&cfg, &server, opts).unwrap();
+        assert_eq!(
+            report.losses, clean.losses,
+            "virtual-time faults must not perturb the training math"
+        );
+        // Every scheduled event fired (the run covers the whole horizon),
+        // at exactly the scheduled (rank, seq) points.
+        let fired_keys: Vec<(usize, u64)> =
+            plan.fired().iter().map(|f| (f.rank, f.seq)).collect();
+        let planned_keys: Vec<(usize, u64)> =
+            plan.events().iter().map(|e| (e.rank, e.seq)).collect();
+        assert_eq!(fired_keys, planned_keys, "schedule and firings must agree");
+        fired.push(plan.fired_bytes());
+    }
+    assert_eq!(fired[0], fired[1], "fired-fault logs must be byte-identical across runs");
+    // (The virtual-time arithmetic of a single injected delay — straggler
+    // idle on the delayed rank, matching rendezvous wait on its peers — is
+    // asserted exactly in comm::tests::injected_delay_stalls_straggler...,
+    // where no measured compute time muddies the comparison.)
+}
+
+#[test]
+fn determinism_contract_includes_a_crash_resume_trajectory_match() {
+    let cfg = preset("tiny_p2", Parallelism::Phantom).unwrap();
+    let dir = std::env::temp_dir()
+        .join(format!("phantom-conformance-resume-{}", std::process::id()));
+    let report = train_crash_resume(&cfg, 6, 2, 1, 3, &dir).unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+    assert_eq!(report.resumed_from, 2, "crash at iter 3 resumes from the iter-2 snapshot");
+    assert!(
+        report.bit_identical,
+        "resumed trajectory diverged: {:?} vs {:?}",
+        report.resumed, report.baseline
+    );
+    assert!(report.crash_error.contains("rank 1 panicked"), "{}", report.crash_error);
+    assert!(report.crash_error.contains("injected fault"), "{}", report.crash_error);
+}

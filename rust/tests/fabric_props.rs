@@ -1,4 +1,5 @@
-//! Property tests for the collective fabric (ISSUE 2 hardening pass):
+//! Property tests for the collective fabric (ISSUE 2 hardening pass,
+//! extended by the ISSUE 4 testkit pass):
 //!
 //! * mis-sequenced collectives poison the exchange and error LOUDLY — the
 //!   whole suite runs in seconds, never a 60 s rendezvous hang, thanks to
@@ -6,35 +7,31 @@
 //! * virtual clocks advance monotonically through random collective
 //!   sequences and end aligned across ranks;
 //! * All-Gather followed by a 1/p-scaled Reduce-Scatter is the identity on
-//!   ragged (odd-sized, non-power-of-two) shard shapes.
+//!   ragged (odd-sized, non-power-of-two) shard shapes;
+//! * All-Reduce agrees bitwise with a sequential rank-ordered reduction on
+//!   ragged shapes, is commutative across rank orderings within float
+//!   tolerance, and `all_reduce_scalar` matches the same contract.
 
 use std::sync::Arc;
-use std::thread;
 use std::time::{Duration, Instant};
 
 use phantom::comm::{Endpoint, Fabric};
 use phantom::energy::{Activity, EnergyLedger};
 use phantom::simnet::NetworkProfile;
 use phantom::tensor::Tensor;
+use phantom::util::prng::Prng;
 use phantom::util::proptest::{assert_close, check, PropConfig};
 
 /// Run one closure per rank on its own thread; returns per-rank results in
-/// rank order.
+/// rank order. Thin wrapper over `Fabric::run_ranks`, which propagates a
+/// panicking rank as a structured error instead of a bare join unwrap.
 fn run_ranks<T: Send + 'static>(
     p: usize,
     timeout: Duration,
     f: impl Fn(Endpoint, EnergyLedger) -> T + Send + Sync + 'static,
 ) -> Vec<T> {
-    let endpoints = Fabric::with_timeout(p, NetworkProfile::frontier(), timeout);
-    let f = Arc::new(f);
-    let handles: Vec<_> = endpoints
-        .into_iter()
-        .map(|ep| {
-            let f = f.clone();
-            thread::spawn(move || f(ep, EnergyLedger::new()))
-        })
-        .collect();
-    handles.into_iter().map(|h| h.join().expect("rank thread panicked")).collect()
+    Fabric::run_ranks(p, NetworkProfile::frontier(), timeout, f)
+        .unwrap_or_else(|e| panic!("{e}"))
 }
 
 #[test]
@@ -146,6 +143,111 @@ fn virtual_clocks_monotone_and_aligned() {
                         clocks[round]
                     ));
                 }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Per-rank contribution for the all-reduce properties: ragged shape,
+/// seeded values, optionally permuted so rank r contributes slot perm[r].
+fn contribution(shape: &[usize], seed: u64, slot: usize) -> Tensor {
+    let mut rng = Prng::new(seed ^ (slot as u64).wrapping_mul(0x9E3779B97F4A7C15));
+    Tensor::randn(shape, 1.0, &mut rng)
+}
+
+#[test]
+fn all_reduce_matches_sequential_reduction_on_ragged_shapes() {
+    let cfg = PropConfig { cases: 24, ..PropConfig::default() };
+    check("all-reduce == sequential rank-ordered sum", cfg, |rng| {
+        let p = rng.int_in(2, 6) as usize;
+        let shape = vec![
+            (2 * rng.int_in(0, 3) + 1) as usize,
+            (2 * rng.int_in(0, 6) + 1) as usize,
+        ];
+        let seed = rng.next_u64();
+        let shape_arc = Arc::new(shape.clone());
+        let out = run_ranks(p, Duration::from_secs(60), move |mut ep, mut led| {
+            let t = contribution(shape_arc.as_slice(), seed, ep.rank);
+            ep.all_reduce(t, &mut led).unwrap()
+        });
+        // Sequential reference: fold the contributions in rank order — the
+        // exact order the fabric's last-arriver combine uses, so agreement
+        // is bitwise, not just approximate.
+        let mut want = contribution(&shape, seed, 0);
+        for slot in 1..p {
+            want.add_assign(&contribution(&shape, seed, slot));
+        }
+        for (rank, r) in out.iter().enumerate() {
+            if r.shape() != want.shape() {
+                return Err(format!("rank {rank}: shape {:?} != {:?}", r.shape(), want.shape()));
+            }
+            for (i, (a, b)) in r.data().iter().zip(want.data()).enumerate() {
+                if a.to_bits() != b.to_bits() {
+                    return Err(format!(
+                        "rank {rank} [{i}]: {a} != sequential {b} (bitwise contract)"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn all_reduce_is_commutative_across_rank_orderings() {
+    let cfg = PropConfig { cases: 16, ..PropConfig::default() };
+    check("all-reduce rank-permutation commutativity", cfg, |rng| {
+        let p = rng.int_in(2, 5) as usize;
+        let shape = vec![
+            (2 * rng.int_in(0, 2) + 1) as usize,
+            (2 * rng.int_in(0, 4) + 1) as usize,
+        ];
+        let seed = rng.next_u64();
+        // A random permutation: rank r contributes slot perm[r].
+        let mut perm: Vec<usize> = (0..p).collect();
+        for i in (1..p).rev() {
+            perm.swap(i, rng.int_in(0, i as u64) as usize);
+        }
+        let run = |assignment: Vec<usize>| {
+            let shape = Arc::new(shape.clone());
+            let assignment = Arc::new(assignment);
+            run_ranks(p, Duration::from_secs(60), move |mut ep, mut led| {
+                let t = contribution(shape.as_slice(), seed, assignment[ep.rank]);
+                ep.all_reduce(t, &mut led).unwrap()
+            })
+        };
+        let identity = run((0..p).collect());
+        let permuted = run(perm.clone());
+        for (rank, (a, b)) in identity.iter().zip(&permuted).enumerate() {
+            assert_close(a.data(), b.data(), 1e-5, 1e-6).map_err(|e| {
+                format!("rank {rank}: permuted sum diverged (perm {perm:?}): {e}")
+            })?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn all_reduce_scalar_matches_sequential_f32_sum() {
+    let cfg = PropConfig { cases: 24, ..PropConfig::default() };
+    check("all-reduce-scalar == sequential f32 sum", cfg, |rng| {
+        let p = rng.int_in(2, 6) as usize;
+        let seed = rng.next_u64();
+        let value = |rank: usize| -> f32 {
+            let mut r = Prng::new(seed ^ (rank as u64).wrapping_mul(0xD1B5));
+            (r.next_f64() * 2.0 - 1.0) as f32
+        };
+        let out = run_ranks(p, Duration::from_secs(60), move |mut ep, mut led| {
+            ep.all_reduce_scalar(value(ep.rank), &mut led).unwrap()
+        });
+        let mut want = value(0);
+        for rank in 1..p {
+            want += value(rank);
+        }
+        for (rank, &got) in out.iter().enumerate() {
+            if got.to_bits() != want.to_bits() {
+                return Err(format!("rank {rank}: scalar {got} != sequential {want}"));
             }
         }
         Ok(())
