@@ -24,7 +24,7 @@
 pub mod io;
 pub mod reshard;
 
-pub use reshard::reshard;
+pub use reshard::{collapse_dp, reshard};
 
 use std::path::Path;
 
@@ -154,23 +154,33 @@ impl Snapshot {
         self.config.model.layers
     }
 
+    /// Data-parallel replica count of this snapshot (1 for pure layouts;
+    /// hybrid snapshots carry p * dp shards in world-rank order).
+    pub fn dp(&self) -> usize {
+        self.config.dp.max(1)
+    }
+
     /// Build the snapshot of a freshly initialized (untrained) model —
     /// deterministic from the config, exactly the state training starts
     /// from. Useful for re-sharding demos and tests without a train run.
+    /// Hybrid configs (dp > 1) produce one shard per world rank; replicas
+    /// of a model rank are identical, as training keeps them.
     pub fn init(config: &RunConfig) -> Result<Snapshot> {
-        let mut shards = Vec::with_capacity(config.p);
-        for rank in 0..config.p {
+        let world = config.p * config.dp.max(1);
+        let mut shards = Vec::with_capacity(world);
+        for rank in 0..world {
+            let model_rank = rank % config.p;
             let params = match config.mode {
                 Parallelism::Phantom => RankParams::Phantom(PhantomRankParams::init(
                     &config.model,
                     config.p,
-                    rank,
+                    model_rank,
                     config.train.seed,
                 )?),
                 Parallelism::Tensor => RankParams::Tensor(TpRankParams::init(
                     &config.model,
                     config.p,
-                    rank,
+                    model_rank,
                     config.train.seed,
                 )?),
             };
@@ -185,22 +195,25 @@ impl Snapshot {
         Ok(snap)
     }
 
-    /// Structural validation: one shard per rank in order, every tensor
-    /// shaped for this (p, n, k, layers), own decompressor slots zero.
-    /// Deliberately more permissive than `RunConfig::validate` in exactly
-    /// one place: phantom k may equal n/p (the dense-phantom layout that
-    /// TP→PP re-sharding produces).
+    /// Structural validation: one shard per world rank in order, every
+    /// tensor shaped for this (p, n, k, layers), own decompressor slots
+    /// zero (at the shard's MODEL rank — hybrid shards repeat the model
+    /// geometry once per DP replica). Deliberately more permissive than
+    /// `RunConfig::validate` in exactly one place: phantom k may equal n/p
+    /// (the dense-phantom layout that TP→PP re-sharding produces).
     pub fn validate(&self) -> Result<()> {
         let (p, n, layers) = (self.config.p, self.config.model.n, self.config.model.layers);
-        if p == 0 || n == 0 || layers == 0 {
-            bail!("snapshot geometry must be positive (p={p}, n={n}, layers={layers})");
+        let dp = self.config.dp;
+        if p == 0 || dp == 0 || n == 0 || layers == 0 {
+            bail!("snapshot geometry must be positive (p={p}, dp={dp}, n={n}, layers={layers})");
         }
         if n % p != 0 {
             bail!("n={n} not divisible by p={p}");
         }
         let m = n / p;
-        if self.shards.len() != p {
-            bail!("{} shards for p={p}", self.shards.len());
+        let world = p * dp;
+        if self.shards.len() != world {
+            bail!("{} shards for p={p} x dp={dp}", self.shards.len());
         }
         if self.progress.losses.len() as u64 != self.progress.iter {
             bail!(
@@ -210,6 +223,7 @@ impl Snapshot {
             );
         }
         for (i, s) in self.shards.iter().enumerate() {
+            let model_rank = i % p;
             if s.rank != i {
                 bail!("shard {i} claims rank {}", s.rank);
             }
@@ -234,12 +248,15 @@ impl Snapshot {
                     if ps.p != p || ps.m != m || ps.k != k || ps.layers() != layers {
                         bail!("shard {i}: phantom geometry mismatch");
                     }
+                    if ps.rank != model_rank {
+                        bail!("shard {i}: params claim model rank {} (want {model_rank})", ps.rank);
+                    }
                     for l in 0..layers {
                         check_shape("L", i, l, &ps.locals[l], &[m, m])?;
                         check_shape("C", i, l, &ps.compressors[l], &[m, k])?;
                         check_shape("D", i, l, &ps.decompressors[l], &[p, k, m])?;
                         check_shape("b", i, l, &ps.biases[l], &[m])?;
-                        let own = ps.decompressors[l].unstack_at(i);
+                        let own = ps.decompressors[l].unstack_at(model_rank);
                         if own.data().iter().any(|&x| x != 0.0) {
                             bail!("shard {i} layer {l}: frozen own decompressor slot is nonzero");
                         }
@@ -248,6 +265,9 @@ impl Snapshot {
                 RankParams::Tensor(ts) => {
                     if ts.p != p || ts.m != m || ts.layers() != layers {
                         bail!("shard {i}: tp geometry mismatch");
+                    }
+                    if ts.rank != model_rank {
+                        bail!("shard {i}: params claim model rank {} (want {model_rank})", ts.rank);
                     }
                     for l in 0..layers {
                         check_shape("W", i, l, &ts.weights[l], &[n, m])?;
@@ -261,13 +281,14 @@ impl Snapshot {
 
     /// Host-side forward of the whole snapshot on `x` [B, n] — the
     /// backend-free reference used by `phantom ckpt verify` and the
-    /// re-sharding equivalence proofs.
+    /// re-sharding equivalence proofs. Hybrid snapshots forward replica 0
+    /// (DP replicas are weight-identical copies of the same model).
     pub fn forward_host(&self, x: &Tensor) -> Result<Tensor> {
         self.validate()?;
+        let replica0 = &self.shards[..self.config.p];
         match self.config.mode {
             Parallelism::Phantom => {
-                let ranks: Vec<PhantomRankParams> = self
-                    .shards
+                let ranks: Vec<PhantomRankParams> = replica0
                     .iter()
                     .map(|s| match &s.params {
                         RankParams::Phantom(p) => p.clone(),
@@ -277,8 +298,7 @@ impl Snapshot {
                 DensePhantomOracle::from_ranks(ranks)?.forward(x)
             }
             Parallelism::Tensor => {
-                let shards: Vec<TpRankParams> = self
-                    .shards
+                let shards: Vec<TpRankParams> = replica0
                     .iter()
                     .map(|s| match &s.params {
                         RankParams::Tensor(t) => t.clone(),
@@ -466,6 +486,9 @@ fn load_shard(dir: &Path, config: &RunConfig, e: &ShardEntry) -> Result<RankShar
     if e.file.contains('/') || e.file.contains("..") {
         bail!("shard file name '{}' escapes the snapshot directory", e.file);
     }
+    // Param structs carry the MODEL rank (hybrid world ranks repeat the
+    // model geometry once per DP replica; for dp = 1 they coincide).
+    let model_rank = e.rank % config.p.max(1);
     let records = io::read_shard_file(&dir.join(&e.file), e.bytes, e.fnv)?;
     let mut map: std::collections::BTreeMap<String, Tensor> = records.into_iter().collect();
     let mut take = |name: &str| -> Result<Tensor> {
@@ -485,7 +508,7 @@ fn load_shard(dir: &Path, config: &RunConfig, e: &ShardEntry) -> Result<RankShar
                 biases.push(take(&format!("b{l}"))?);
             }
             RankParams::Phantom(PhantomRankParams {
-                rank: e.rank,
+                rank: model_rank,
                 p: config.p,
                 m: config.model.n / config.p,
                 k: config.model.k,
@@ -503,7 +526,7 @@ fn load_shard(dir: &Path, config: &RunConfig, e: &ShardEntry) -> Result<RankShar
                 biases.push(take(&format!("b{l}"))?);
             }
             RankParams::Tensor(TpRankParams {
-                rank: e.rank,
+                rank: model_rank,
                 p: config.p,
                 m: config.model.n / config.p,
                 weights,
@@ -667,6 +690,117 @@ mod tests {
         );
         std::fs::write(&mpath, text).unwrap();
         assert!(Snapshot::load(&dir).is_err(), "manifest length tamper must fail");
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn torn_write_surfaces_checksum_error_naming_the_file() {
+        // Regression (ISSUE 5): a shard truncated mid-record and a shard
+        // with one corrupt payload byte must both surface as checksum
+        // errors that NAME the rank file — never a panic, and never a
+        // silently loaded half-model.
+        let root = tdir("torn");
+        let snap = pp_snapshot();
+        let dir = root.join("snap");
+
+        // Truncation mid-record (manifest byte count now disagrees).
+        snap.save(&dir).unwrap();
+        let path = dir.join("rank-0002.bin");
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
+        let err = Snapshot::load(&dir).expect_err("truncated shard must fail the load");
+        let msg = format!("{err:#}");
+        assert!(msg.contains("rank-0002.bin"), "error must name the file: {msg}");
+
+        // Truncation that a doctored manifest agrees with (byte count AND
+        // whole-file checksum recomputed for the truncated file): the
+        // record-level decode is the last line of defense and must still
+        // reject the torn record, naming the file. Rank 0 here because its
+        // "bytes" entry is the manifest's first (all shards are equal-sized
+        // at this geometry, so a plain replacen would hit rank 0 anyway).
+        snap.save(&dir).unwrap();
+        let path0 = dir.join("rank-0000.bin");
+        let bytes = std::fs::read(&path0).unwrap();
+        let cut = bytes.len() - 5; // mid-record: inside the last checksum
+        std::fs::write(&path0, &bytes[..cut]).unwrap();
+        let mpath = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&mpath).unwrap();
+        let fixed = text
+            .replacen(
+                &format!("\"bytes\": {}", bytes.len()),
+                &format!("\"bytes\": {cut}"),
+                1,
+            )
+            .replacen(
+                &io::u64_to_hex(io::fnv1a64(&bytes)),
+                &io::u64_to_hex(io::fnv1a64(&bytes[..cut])),
+                1,
+            );
+        assert_ne!(fixed, text, "manifest must carry the shard byte count");
+        std::fs::write(&mpath, fixed).unwrap();
+        let err = Snapshot::load(&dir).expect_err("mid-record truncation must fail");
+        let msg = format!("{err:#}");
+        assert!(msg.contains("rank-0000.bin"), "error must name the file: {msg}");
+        assert!(msg.contains("truncated"), "error must name the truncation: {msg}");
+
+        // One corrupt payload byte: whole-file checksum catches it, and
+        // the error names the file; sibling ranks stay loadable.
+        snap.save(&dir).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x01;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = Snapshot::load(&dir).expect_err("corrupt byte must fail the load");
+        let msg = format!("{err:#}");
+        assert!(msg.contains("rank-0002.bin"), "error must name the file: {msg}");
+        assert!(msg.contains("checksum"), "error must name the checksum: {msg}");
+        assert!(Snapshot::load_rank(&dir, 2).is_err());
+        assert!(Snapshot::load_rank(&dir, 0).is_ok(), "other ranks stay loadable");
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn hybrid_snapshot_roundtrips_and_validates() {
+        let root = tdir("hybrid");
+        for mode in [Parallelism::Phantom, Parallelism::Tensor] {
+            let mut cfg = preset("tiny", mode).unwrap();
+            cfg.dp = 2;
+            let snap = Snapshot::init(&cfg).unwrap();
+            assert_eq!(snap.dp(), 2);
+            assert_eq!(snap.shards.len(), cfg.p * 2);
+            snap.validate().unwrap();
+
+            let dir = root.join(mode.name());
+            snap.save(&dir).unwrap();
+            let back = Snapshot::load(&dir).unwrap();
+            assert_eq!(back.config.dp, 2);
+            assert_eq!(back.shards.len(), cfg.p * 2);
+            for (a, b) in snap.shards.iter().zip(&back.shards) {
+                for ((n1, t1), (_, t2)) in a.params.named().iter().zip(&b.params.named()) {
+                    assert!(tensors_equal(t1, t2), "{} {n1}", mode.name());
+                }
+            }
+            // Replica shards load at world-rank granularity, carrying the
+            // MODEL rank in their params.
+            let w = cfg.p + 1; // replica 1 of model rank 1
+            let shard = Snapshot::load_rank(&dir, w).unwrap();
+            assert_eq!(shard.rank, w);
+            match &shard.params {
+                RankParams::Phantom(ps) => assert_eq!(ps.rank, 1),
+                RankParams::Tensor(ts) => assert_eq!(ts.rank, 1),
+            }
+            // forward_host (replica 0) equals the pure dp=1 snapshot's.
+            let mut pure_cfg = cfg.clone();
+            pure_cfg.dp = 1;
+            let pure = Snapshot::init(&pure_cfg).unwrap();
+            let mut rng = Prng::new(21);
+            let x = Tensor::randn(&[3, snap.n()], 1.0, &mut rng);
+            assert_eq!(
+                snap.forward_host(&x).unwrap(),
+                pure.forward_host(&x).unwrap(),
+                "hybrid forward must equal the single-replica forward"
+            );
+        }
         std::fs::remove_dir_all(&root).ok();
     }
 

@@ -40,9 +40,21 @@ use super::{RankParams, RankShard, Snapshot};
 /// Re-shard `src` into `target_p` ranks in `target_mode`. The result is
 /// forward-equivalent to the source (within floating-point summation
 /// order) and carries the source's training progress with a fresh
-/// optimizer.
+/// optimizer. Hybrid sources (dp > 1) are first collapsed to one replica
+/// — DP replicas must be weight-identical, which is verified bitwise —
+/// and the result is always a pure (dp = 1) layout.
 pub fn reshard(src: &Snapshot, target_p: usize, target_mode: Parallelism) -> Result<Snapshot> {
     src.validate()?;
+    // Collapse hybrid sources in place (no recursion): `src` is already
+    // validated, and the collapsed subset is valid by construction, so
+    // the O(total-params) validation walk runs once, not four times.
+    let collapsed;
+    let src = if src.config.dp > 1 {
+        collapsed = collapse_validated(src)?;
+        &collapsed
+    } else {
+        src
+    };
     let n = src.n();
     if target_p == 0 || n % target_p != 0 {
         bail!("target p={target_p} must divide n={n}");
@@ -91,6 +103,63 @@ pub fn reshard(src: &Snapshot, target_p: usize, target_mode: Parallelism) -> Res
     };
     out.validate()?;
     Ok(out)
+}
+
+/// Collapse a hybrid (dp > 1) snapshot to its replica-0 model-parallel
+/// group. The DP training invariant says replicas of one model rank are
+/// weight-identical (same init, gradients summed by one All-Reduce, same
+/// optimizer step); this is verified BITWISE against replica 0 before any
+/// replica is dropped, so a torn or diverged hybrid snapshot is rejected
+/// instead of silently resharding one replica's view. Optimizer moments of
+/// replica 0 are kept — the collapse does not change the shard geometry.
+pub fn collapse_dp(src: &Snapshot) -> Result<Snapshot> {
+    src.validate()?;
+    collapse_validated(src)
+}
+
+/// `collapse_dp` minus the input validation pass — for callers that have
+/// already validated `src`. The output is a subset of the validated
+/// input (replica-0 shards, dp set to 1), so it is valid by construction
+/// and is not re-walked either.
+fn collapse_validated(src: &Snapshot) -> Result<Snapshot> {
+    let (p, dp) = (src.p(), src.config.dp);
+    if dp <= 1 {
+        return Ok(src.clone());
+    }
+    for w in p..p * dp {
+        let reference = &src.shards[w % p].params;
+        if !params_bitwise_eq(reference, &src.shards[w].params) {
+            bail!(
+                "hybrid snapshot: DP replica {} of model rank {} diverged from replica 0 \
+                 (replicas must be weight-identical; the snapshot is torn or corrupt)",
+                w / p,
+                w % p
+            );
+        }
+    }
+    let mut config = src.config.clone();
+    config.dp = 1;
+    Ok(Snapshot {
+        config,
+        progress: src.progress.clone(),
+        shards: src.shards[..p].to_vec(),
+    })
+}
+
+/// Bitwise tensor-by-tensor equality of two rank param sets (f32 compared
+/// as bits: NaN-safe, -0.0 != 0.0 — exactly what "same bytes" means).
+fn params_bitwise_eq(a: &RankParams, b: &RankParams) -> bool {
+    let (na, nb) = (a.named(), b.named());
+    na.len() == nb.len()
+        && na.iter().zip(&nb).all(|((name_a, ta), (name_b, tb))| {
+            name_a == name_b
+                && ta.shape() == tb.shape()
+                && ta
+                    .data()
+                    .iter()
+                    .zip(tb.data())
+                    .all(|(x, y)| x.to_bits() == y.to_bits())
+        })
 }
 
 /// Gather the logical dense weights [n, n] and biases [n] per layer.
@@ -484,6 +553,42 @@ mod tests {
         back_pp.validate().unwrap();
         assert_eq!(back_pp.k(), 8, "dense-phantom conversion uses k = n/p");
         assert_forward_equiv(&src, &back_pp, "pp -> tp -> pp");
+    }
+
+    #[test]
+    fn hybrid_snapshot_collapses_verified_and_reshards() {
+        // A hybrid DP×PP snapshot: 2 replicas × p=4. Collapse keeps one
+        // replica after verifying the others bitwise; reshard goes through
+        // the same collapse transparently.
+        let mut cfg = crate::config::preset("tiny", Parallelism::Phantom).unwrap();
+        cfg.p = 4;
+        cfg.dp = 2;
+        cfg.model = ModelConfig { n: 32, layers: 2, k: 3 };
+        cfg.artifact = Some("custom".to_string());
+        let hybrid = Snapshot::init(&cfg).unwrap();
+        assert_eq!(hybrid.shards.len(), 8);
+
+        let pure = collapse_dp(&hybrid).unwrap();
+        assert_eq!(pure.config.dp, 1);
+        assert_eq!(pure.shards.len(), 4);
+        assert_forward_equiv(&hybrid, &pure, "hybrid collapse");
+
+        // reshard(hybrid) == reshard(collapse(hybrid)), and the result is
+        // always a pure layout.
+        let re = reshard(&hybrid, 2, Parallelism::Tensor).unwrap();
+        assert_eq!(re.config.dp, 1);
+        assert_forward_equiv(&hybrid, &re, "hybrid -> tp p=2");
+
+        // A diverged replica is rejected, naming the replica and rank.
+        let mut torn = hybrid.clone();
+        if let RankParams::Phantom(ps) = &mut torn.shards[6].params {
+            ps.locals[0].data_mut()[0] += 1.0;
+        }
+        let err = collapse_dp(&torn).expect_err("diverged replica must be rejected");
+        let msg = format!("{err:#}");
+        assert!(msg.contains("replica 1"), "{msg}");
+        assert!(msg.contains("model rank 2"), "{msg}");
+        assert!(reshard(&torn, 2, Parallelism::Tensor).is_err());
     }
 
     #[test]

@@ -87,6 +87,11 @@ COMMANDS:
     train        Train an FFN on the simulated cluster (measured mode)
                    --preset <name>        artifact preset (tiny|quickstart|small|...)
                    --mode <tp|pp>         parallelism strategy    [pp]
+                   --dp <N>               data-parallel replicas  [1]
+                                          (hybrid DP x TP|PP: runs p*N ranks,
+                                          shards the batch by replica, adds one
+                                          DP gradient all-reduce per iteration,
+                                          accounted as its own energy bucket)
                    --backend <native|xla> compute backend         [native]
                                           (native = pure-Rust fused kernels,
                                            no artifacts needed; xla = PJRT

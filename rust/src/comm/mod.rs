@@ -42,7 +42,7 @@ use crate::tensor::Tensor;
 /// Default rendezvous timeout: a mis-sequenced collective (deadlock) fails
 /// loudly instead of hanging the test suite. `Fabric::with_timeout` lets
 /// deadlock tests shrink this to milliseconds.
-const RENDEZVOUS_TIMEOUT: Duration = Duration::from_secs(60);
+pub const RENDEZVOUS_TIMEOUT: Duration = Duration::from_secs(60);
 
 struct ExchangeState {
     gen: u64,
@@ -149,14 +149,65 @@ impl std::fmt::Debug for InjectorFactory {
 
 /// One rank's handle onto the fabric. Moves into the rank's thread.
 pub struct Endpoint {
+    /// Group-local rank: position inside this endpoint's communicator.
     pub rank: usize,
+    /// Group size: how many peers rendezvous on this communicator.
     pub p: usize,
+    /// Global identity for fault hooks and diagnostics. Equals `rank` for
+    /// ungrouped fabrics; grouped fabrics (`Fabric::new_grouped`) stamp the
+    /// owning world rank so fault schedules and crash reports keep naming
+    /// one global rank even when it holds several endpoints.
+    pub world_rank: usize,
     shared: Arc<Shared>,
     profile: NetworkProfile,
     pub stats: CommStats,
     injector: Option<Box<dyn FaultInjector>>,
     /// Rendezvous collectives issued by this endpoint (fault-hook clock).
     collective_seq: u64,
+    /// Ledger bucket this endpoint's wire time is charged to: Communicate
+    /// for model-parallel groups, DpComm for data-parallel groups.
+    comm_activity: Activity,
+}
+
+/// A world rank's coordinates in a hybrid DP × model-parallel grid.
+/// World rank `w` = `dp_rank * p_model + model_rank`: consecutive world
+/// ranks form a model-parallel group (one DP replica), and the ranks with
+/// equal `model_rank` across replicas form a data-parallel group.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GroupLayout {
+    /// Model-parallel group size (the paper's p).
+    pub p_model: usize,
+    /// Data-parallel replica count.
+    pub dp: usize,
+}
+
+impl GroupLayout {
+    pub fn world(&self) -> usize {
+        self.p_model * self.dp
+    }
+
+    pub fn model_rank(&self, world: usize) -> usize {
+        world % self.p_model
+    }
+
+    pub fn dp_rank(&self, world: usize) -> usize {
+        world / self.p_model
+    }
+
+    pub fn world_rank(&self, dp_rank: usize, model_rank: usize) -> usize {
+        dp_rank * self.p_model + model_rank
+    }
+}
+
+/// One world rank's endpoints in a hybrid grid: a model-parallel endpoint
+/// (peers = same replica) and a data-parallel endpoint (peers = same model
+/// rank across replicas). The two communicators rendezvous independently
+/// and keep independent collective sequence numbers; the DP endpoint's
+/// wire time is charged to the ledger's DpComm bucket.
+pub struct HybridEndpoint {
+    pub world: usize,
+    pub model: Endpoint,
+    pub dp: Endpoint,
 }
 
 /// The fabric constructor.
@@ -192,11 +243,48 @@ impl Fabric {
             .map(|rank| Endpoint {
                 rank,
                 p,
+                world_rank: rank,
                 shared: shared.clone(),
                 profile,
                 stats: CommStats::default(),
                 injector: None,
                 collective_seq: 0,
+                comm_activity: Activity::Communicate,
+            })
+            .collect()
+    }
+
+    /// Build the communicators of a hybrid DP × model grid: `layout.dp`
+    /// model-parallel groups of size `p_model` plus `p_model` data-parallel
+    /// groups of size `dp`, returned as one `HybridEndpoint` per world rank
+    /// in world-rank order. Every group is an independent rendezvous fabric
+    /// with its own SPMD check, poison domain and collective sequence
+    /// numbers; the DP endpoints charge their wire time to the DpComm
+    /// ledger bucket so the gradient all-reduce is accounted separately.
+    pub fn new_grouped(
+        layout: GroupLayout,
+        profile: NetworkProfile,
+        timeout: Duration,
+    ) -> Vec<HybridEndpoint> {
+        assert!(layout.p_model >= 1 && layout.dp >= 1);
+        let mut model_groups: Vec<std::collections::VecDeque<Endpoint>> = (0..layout.dp)
+            .map(|_| Fabric::with_timeout(layout.p_model, profile, timeout).into())
+            .collect();
+        let mut dp_groups: Vec<std::collections::VecDeque<Endpoint>> = (0..layout.p_model)
+            .map(|_| Fabric::with_timeout(layout.dp, profile, timeout).into())
+            .collect();
+        (0..layout.world())
+            .map(|world| {
+                let r = layout.model_rank(world);
+                let d = layout.dp_rank(world);
+                let mut model = model_groups[d].pop_front().expect("one endpoint per rank");
+                debug_assert_eq!(model.rank, r);
+                model.world_rank = world;
+                let mut dp = dp_groups[r].pop_front().expect("one endpoint per replica");
+                debug_assert_eq!(dp.rank, d);
+                dp.world_rank = world;
+                dp.comm_activity = Activity::DpComm;
+                HybridEndpoint { world, model, dp }
             })
             .collect()
     }
@@ -308,13 +396,15 @@ impl Endpoint {
 
     /// Consult the armed injector (if any) before a rendezvous collective.
     /// Ticks the per-endpoint sequence counter exactly once per collective.
+    /// The injector sees the endpoint's `world_rank` (= `rank` on ungrouped
+    /// fabrics), so hybrid fault schedules key on one global identity.
     fn fault_gate(&mut self, op: &'static str, ledger: &mut EnergyLedger) -> Result<()> {
         let seq = self.collective_seq;
         self.collective_seq += 1;
         let Some(inj) = self.injector.as_mut() else {
             return Ok(());
         };
-        match inj.on_collective(self.rank, seq, op) {
+        match inj.on_collective(self.world_rank, seq, op) {
             FaultAction::Proceed => Ok(()),
             FaultAction::Delay { seconds } => {
                 // Straggler: virtual-clock stall only — never a real sleep,
@@ -325,13 +415,13 @@ impl Endpoint {
             FaultAction::Drop => Err(anyhow!(
                 "injected fault: rank {} dropped '{op}' (collective #{seq}); \
                  peers will surface the rendezvous timeout",
-                self.rank
+                self.world_rank
             )),
             FaultAction::Poison => {
                 self.poison();
                 Err(anyhow!(
                     "injected fault: rank {} poisoned the fabric at '{op}' (collective #{seq})",
-                    self.rank
+                    self.world_rank
                 ))
             }
             FaultAction::Crash => {
@@ -341,7 +431,7 @@ impl Endpoint {
                 self.poison();
                 panic!(
                     "injected fault: rank {} crashed at '{op}' (collective #{seq})",
-                    self.rank
+                    self.world_rank
                 );
             }
         }
@@ -476,6 +566,16 @@ impl Endpoint {
         }
     }
 
+    /// A detached poisoner for this endpoint's group, usable after the
+    /// endpoint itself has moved into a worker. The hybrid driver holds
+    /// one per DP endpoint so a rank that dies in its MODEL group (whose
+    /// fabric the fault path poisons directly) also wakes its DP-group
+    /// peers promptly instead of leaving them to the wall-clock
+    /// rendezvous timeout.
+    pub fn poisoner(&self) -> FabricPoisoner {
+        FabricPoisoner { shared: self.shared.clone() }
+    }
+
     /// Charge the ledger for a collective: idle until the slowest peer
     /// arrived, then the modeled wire time.
     fn charge(
@@ -487,7 +587,7 @@ impl Endpoint {
     ) {
         let wire_s = self.profile.time(collective, msg_floats, self.p);
         ledger.sync_to(max_arrival);
-        ledger.advance(wire_s, Activity::Communicate);
+        ledger.advance(wire_s, self.comm_activity);
         self.stats.floats_moved += msg_floats as u64;
         self.stats.comm_s += wire_s;
     }
@@ -537,9 +637,28 @@ impl Endpoint {
     /// All-Reduce (sum): every rank contributes `t` and receives the
     /// elementwise sum. Message size m = numel(t).
     pub fn all_reduce(&mut self, t: Tensor, ledger: &mut EnergyLedger) -> Result<Tensor> {
-        self.fault_gate("all_reduce", ledger)?;
+        self.all_reduce_op("all_reduce", t, ledger)
+    }
+
+    /// The data-parallel gradient All-Reduce: identical rendezvous and
+    /// summation semantics to `all_reduce`, under a distinct op tag so the
+    /// SPMD mismatch check and fault schedules can tell the DP gradient
+    /// sync apart from model-parallel traffic. Meant for endpoints of a DP
+    /// group (`Fabric::new_grouped`), whose wire time lands in the DpComm
+    /// ledger bucket.
+    pub fn dp_all_reduce(&mut self, t: Tensor, ledger: &mut EnergyLedger) -> Result<Tensor> {
+        self.all_reduce_op("dp_all_reduce", t, ledger)
+    }
+
+    fn all_reduce_op(
+        &mut self,
+        op: &'static str,
+        t: Tensor,
+        ledger: &mut EnergyLedger,
+    ) -> Result<Tensor> {
+        self.fault_gate(op, ledger)?;
         let m = t.numel();
-        let (result, max_arrival) = self.exchange("all_reduce", t, ledger.now_s, |parts| {
+        let (result, max_arrival) = self.exchange(op, t, ledger.now_s, |parts| {
             let mut acc = parts[0].clone();
             for part in &parts[1..] {
                 acc.add_assign(part);
@@ -599,7 +718,7 @@ impl Endpoint {
         ledger: &mut EnergyLedger,
     ) {
         let wire_s = self.profile.time(collective, msg_floats, self.p);
-        ledger.advance(wire_s, Activity::Communicate);
+        ledger.advance(wire_s, self.comm_activity);
         self.stats.floats_moved += msg_floats as u64;
         self.stats.comm_s += wire_s;
         match collective {
@@ -615,6 +734,21 @@ impl Endpoint {
         let t = Tensor::from_vec(&[1], vec![v])?;
         let r = self.all_reduce(t, ledger)?;
         Ok(r.data()[0])
+    }
+}
+
+/// Detached handle onto one group fabric's poison flag (`Endpoint::poisoner`).
+pub struct FabricPoisoner {
+    shared: Arc<Shared>,
+}
+
+impl FabricPoisoner {
+    /// Poison the group, waking any blocked peers promptly.
+    pub fn poison(&self) {
+        if let Ok(mut s) = self.shared.state.lock() {
+            s.poisoned = true;
+            self.shared.cv.notify_all();
+        }
     }
 }
 
@@ -944,6 +1078,109 @@ mod tests {
             assert_eq!(s.barriers, 1);
             assert_eq!(s.floats_moved, 8 + 8);
             assert!(s.comm_s > 0.0);
+        }
+    }
+
+    #[test]
+    fn group_layout_maps_world_ranks() {
+        let l = GroupLayout { p_model: 3, dp: 2 };
+        assert_eq!(l.world(), 6);
+        for w in 0..l.world() {
+            assert_eq!(l.world_rank(l.dp_rank(w), l.model_rank(w)), w);
+        }
+        assert_eq!(l.model_rank(4), 1);
+        assert_eq!(l.dp_rank(4), 1);
+    }
+
+    #[test]
+    fn grouped_fabric_scopes_collectives_seqs_and_buckets() {
+        let layout = GroupLayout { p_model: 2, dp: 2 };
+        let eps = Fabric::new_grouped(layout, NetworkProfile::frontier(), RENDEZVOUS_TIMEOUT);
+        assert_eq!(eps.len(), 4);
+        let handles: Vec<_> = eps
+            .into_iter()
+            .map(|mut hep| {
+                thread::spawn(move || {
+                    let mut led = EnergyLedger::new();
+                    let w = hep.world;
+                    assert_eq!(hep.model.world_rank, w);
+                    assert_eq!(hep.dp.world_rank, w);
+                    // Model-group collective: stacks this replica's members.
+                    let g = hep.model.all_gather(Tensor::filled(&[1], w as f32), &mut led);
+                    let g = g.unwrap();
+                    // DP-group collective: sums across the replicas that
+                    // share this model rank.
+                    let s = hep.dp.dp_all_reduce(Tensor::filled(&[1], w as f32), &mut led);
+                    let s = s.unwrap();
+                    (w, g, s, led, hep.model.collective_seq(), hep.dp.collective_seq())
+                })
+            })
+            .collect();
+        for h in handles {
+            let (w, g, s, led, mseq, dseq) = h.join().unwrap();
+            let layout = GroupLayout { p_model: 2, dp: 2 };
+            let (d, r) = (layout.dp_rank(w), layout.model_rank(w));
+            // Model group of replica d holds world ranks {2d, 2d+1}.
+            assert_eq!(g.data(), &[(2 * d) as f32, (2 * d + 1) as f32], "world {w}");
+            // DP group of model rank r holds {r, r+2}: value sum = 2r + 2.
+            assert_eq!(s.data(), &[(2 * r + 2) as f32], "world {w}");
+            // Per-group collective sequence numbers tick independently.
+            assert_eq!((mseq, dseq), (1, 1));
+            // Model wire time lands in Communicate, DP in its own bucket.
+            assert!(led.comm_s() > 0.0);
+            assert!(led.dp_comm_s() > 0.0);
+        }
+    }
+
+    #[test]
+    fn dp_all_reduce_is_a_distinct_op_for_spmd_checks() {
+        let out = run_ranks(2, |mut ep, mut led| {
+            let t = Tensor::filled(&[1], 1.0);
+            if ep.rank == 0 {
+                ep.all_reduce(t, &mut led).map(|_| ())
+            } else {
+                ep.dp_all_reduce(t, &mut led).map(|_| ())
+            }
+        });
+        assert!(
+            out.iter().any(|r| r.is_err()),
+            "mixing all_reduce with dp_all_reduce must poison the round"
+        );
+    }
+
+    #[test]
+    fn grouped_fault_hooks_see_world_ranks() {
+        let delay = 2.0f64;
+        let layout = GroupLayout { p_model: 2, dp: 2 };
+        let eps = Fabric::new_grouped(layout, NetworkProfile::frontier(), RENDEZVOUS_TIMEOUT);
+        let handles: Vec<_> = eps
+            .into_iter()
+            .map(|mut hep| {
+                thread::spawn(move || {
+                    let mut led = EnergyLedger::new();
+                    if hep.world == 3 {
+                        // Fires only if the hook reports the WORLD rank (3),
+                        // not the group-local rank (1).
+                        hep.model.arm_faults(Box::new(OneShot {
+                            rank: 3,
+                            seq: 0,
+                            action: FaultAction::Delay { seconds: delay },
+                        }));
+                    }
+                    hep.model.all_gather(Tensor::filled(&[1], 1.0), &mut led).unwrap();
+                    (hep.world, led)
+                })
+            })
+            .collect();
+        let wire = NetworkProfile::frontier().time(Collective::AllGather, 1, 2);
+        for h in handles {
+            let (w, led) = h.join().unwrap();
+            let want = if w >= 2 { delay + wire } else { wire };
+            assert!(
+                (led.now_s - want).abs() < 1e-12,
+                "world {w}: clock {} != {want}",
+                led.now_s
+            );
         }
     }
 }

@@ -289,7 +289,15 @@ impl HardwareConfig {
 #[derive(Debug, Clone, PartialEq)]
 pub struct RunConfig {
     pub mode: Parallelism,
+    /// Model-parallel group size (the paper's p). The cluster runs
+    /// `p * dp` ranks in total.
     pub p: usize,
+    /// Data-parallel replica count (hybrid DP × TP|PP). Each replica is a
+    /// full model-parallel group training on its own row shard of the
+    /// global batch; gradients are summed across replicas with one DP
+    /// All-Reduce per iteration. `1` = pure model parallelism, exactly the
+    /// pre-hybrid behavior.
+    pub dp: usize,
     pub model: ModelConfig,
     pub train: TrainConfig,
     pub hardware: HardwareConfig,
@@ -300,13 +308,28 @@ pub struct RunConfig {
 }
 
 impl RunConfig {
+    /// Total ranks in the cluster: p model ranks × dp replicas.
+    pub fn world(&self) -> usize {
+        self.p * self.dp.max(1)
+    }
+
     pub fn validate(&self) -> Result<()> {
         if self.p == 0 {
             bail!("p must be positive");
         }
+        if self.dp == 0 {
+            bail!("dp must be positive (1 = no data parallelism)");
+        }
         self.model.validate(self.p)?;
         if self.train.batch == 0 {
             bail!("batch must be positive");
+        }
+        if self.train.batch < self.dp {
+            bail!(
+                "batch={} must be >= dp={} (every DP replica needs at least one sample)",
+                self.train.batch,
+                self.dp
+            );
         }
         if matches!(self.hardware.compute, ComputeModel::Measured) && self.artifact.is_none() {
             bail!("measured compute requires an artifact config name");
@@ -343,6 +366,7 @@ impl RunConfig {
         Json::obj(vec![
             ("mode", Json::str(self.mode.name())),
             ("p", Json::int(self.p as i64)),
+            ("dp", Json::int(self.dp as i64)),
             ("n", Json::int(self.model.n as i64)),
             ("layers", Json::int(self.model.layers as i64)),
             ("k", Json::int(self.model.k as i64)),
@@ -381,6 +405,8 @@ impl RunConfig {
     pub fn from_json_unchecked(j: &Json) -> Result<RunConfig> {
         let mode = Parallelism::parse(j.get("mode").as_str().context("mode")?)?;
         let p = j.get("p").as_usize().context("p")?;
+        // Pre-hybrid configs/snapshots have no dp field: default 1.
+        let dp = j.get("dp").as_usize().unwrap_or(1);
         let model = ModelConfig {
             n: j.get("n").as_usize().context("n")?,
             layers: j.get("layers").as_usize().context("layers")?,
@@ -418,6 +444,7 @@ impl RunConfig {
         let cfg = RunConfig {
             mode,
             p,
+            dp,
             model,
             train: TrainConfig {
                 batch: j.get("batch").as_usize().context("batch")?,
@@ -473,6 +500,7 @@ pub fn preset(artifact: &str, mode: Parallelism) -> Result<RunConfig> {
     Ok(RunConfig {
         mode,
         p,
+        dp: 1,
         model: ModelConfig { n, layers: 2, k },
         train: TrainConfig { batch, ..TrainConfig::default() },
         hardware: HardwareConfig::frontier_measured(),
@@ -602,6 +630,28 @@ mod tests {
         assert!(RunConfig::from_json(&j).is_err());
         let back = RunConfig::from_json_unchecked(&j).unwrap();
         assert_eq!(back, cfg);
+    }
+
+    #[test]
+    fn hybrid_dp_validates_and_roundtrips() {
+        let mut cfg = preset("tiny", Parallelism::Phantom).unwrap();
+        assert_eq!(cfg.dp, 1, "presets are pure model-parallel");
+        cfg.dp = 2;
+        assert!(cfg.validate().is_ok());
+        assert_eq!(cfg.world(), cfg.p * 2);
+        let back = RunConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back, cfg);
+        // A pre-hybrid JSON (no dp field) defaults to dp = 1.
+        let mut j = preset("tiny", Parallelism::Phantom).unwrap().to_json();
+        if let Json::Obj(map) = &mut j {
+            map.remove("dp");
+        }
+        assert_eq!(RunConfig::from_json(&j).unwrap().dp, 1);
+        // dp = 0 and batch < dp are rejected.
+        cfg.dp = 0;
+        assert!(cfg.validate().is_err());
+        cfg.dp = cfg.train.batch + 1;
+        assert!(cfg.validate().is_err());
     }
 
     #[test]

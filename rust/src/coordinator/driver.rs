@@ -21,7 +21,7 @@ use super::rank_pp::PhantomRank;
 use super::rank_tp::TensorRank;
 use super::LossReport;
 use crate::ckpt::{self, RankParams, RankShard, Snapshot, TrainProgress};
-use crate::comm::{join_rank_threads, CommStats, Fabric, InjectorFactory};
+use crate::comm::{join_rank_threads, CommStats, Endpoint, Fabric, GroupLayout, InjectorFactory};
 use crate::config::{CkptPolicy, ComputeModel, Parallelism, RunConfig};
 use crate::data::{BatchCache, Teacher};
 use crate::energy::LedgerSummary;
@@ -34,9 +34,14 @@ use crate::util::prng::Prng;
 /// Per-rank outcome.
 #[derive(Debug, Clone)]
 pub struct RankReport {
+    /// World rank (= dp_rank * p + model_rank; the model rank for dp = 1).
     pub rank: usize,
     pub ledger: LedgerSummary,
+    /// Model-parallel group traffic.
     pub stats: CommStats,
+    /// Data-parallel group traffic (the DP gradient All-Reduce); all-zero
+    /// for dp = 1 runs, which never enter the DP fabric.
+    pub dp_stats: CommStats,
     /// Virtual time at which warmup ended (energy accounting boundary).
     pub warm_t: f64,
     /// Energy over the post-warmup training phase only.
@@ -48,6 +53,9 @@ pub struct RankReport {
 pub struct TrainReport {
     pub mode: Parallelism,
     pub p: usize,
+    /// Data-parallel replica count (1 = pure model parallelism). The run
+    /// spanned `p * dp` ranks; `per_rank` lists them in world-rank order.
+    pub dp: usize,
     pub n: usize,
     pub k: usize,
     pub layers: usize,
@@ -160,6 +168,11 @@ pub fn train_with(cfg: &RunConfig, server: &ExecServer, opts: TrainOptions) -> R
     }
 
     let p = cfg.p;
+    // Hybrid DP×(TP|PP): the cluster is p model ranks × dp replicas. Every
+    // control-plane structure below is world-rank sized; dp = 1 collapses
+    // to exactly the pre-hybrid single-group layout.
+    let dp = cfg.dp;
+    let world = p * dp;
     let scale = 1.0 / (cfg.train.batch as f64 * cfg.model.n as f64);
 
     // Resume: replay the saved loss history through a fresh tracker so the
@@ -168,7 +181,7 @@ pub fn train_with(cfg: &RunConfig, server: &ExecServer, opts: TrainOptions) -> R
     let mut tracker = LossTracker::new(cfg.train.target_loss, cfg.train.max_iters);
     let mut run_rng = ckpt::run_stream(cfg.train.seed);
     let start_iter: u64;
-    let mut resume_shards: Vec<Option<RankShard>> = (0..p).map(|_| None).collect();
+    let mut resume_shards: Vec<Option<RankShard>> = (0..world).map(|_| None).collect();
     if let Some(snap) = opts.resume {
         check_resume_compat(cfg, &snap)?;
         start_iter = snap.progress.iter;
@@ -190,15 +203,27 @@ pub fn train_with(cfg: &RunConfig, server: &ExecServer, opts: TrainOptions) -> R
         start_iter = 0;
     }
 
-    let endpoints = match opts.rendezvous_timeout {
-        Some(t) => Fabric::with_timeout(p, cfg.hardware.net, t),
-        None => Fabric::new(p, cfg.hardware.net),
+    // dp = 1 runs the plain single-group fabric (byte-identical to the
+    // pre-hybrid path); dp > 1 builds the grouped communicators. Either
+    // way each world rank gets (model endpoint, optional DP endpoint).
+    let timeout = opts.rendezvous_timeout.unwrap_or(crate::comm::RENDEZVOUS_TIMEOUT);
+    let endpoints: Vec<(Endpoint, Option<Endpoint>)> = if dp == 1 {
+        Fabric::with_timeout(p, cfg.hardware.net, timeout)
+            .into_iter()
+            .map(|ep| (ep, None))
+            .collect()
+    } else {
+        Fabric::new_grouped(GroupLayout { p_model: p, dp }, cfg.hardware.net, timeout)
+            .into_iter()
+            .map(|hep| (hep.model, Some(hep.dp)))
+            .collect()
     };
     let teacher = Teacher::new(cfg.model.n, cfg.train.seed);
     let cache = Arc::new(BatchCache::new(
         teacher,
         cfg.train.batch,
         p,
+        dp,
         cfg.train.dataset_batches,
     ));
 
@@ -206,10 +231,17 @@ pub fn train_with(cfg: &RunConfig, server: &ExecServer, opts: TrainOptions) -> R
     // rank -> leader parameter shards when a snapshot is requested.
     let (loss_tx, loss_rx) = mpsc::channel::<LossReport>();
     let (shard_tx, shard_rx) = mpsc::channel::<RankShard>();
-    let mut cont_txs: Vec<mpsc::Sender<RankCommand>> = Vec::with_capacity(p);
+    let mut cont_txs: Vec<mpsc::Sender<RankCommand>> = Vec::with_capacity(world);
 
-    let mut handles = Vec::with_capacity(p);
-    for ((rank, mut ep), resume_shard) in endpoints.into_iter().enumerate().zip(resume_shards) {
+    let mut handles = Vec::with_capacity(world);
+    for ((rank, (mut ep, dp_ep)), resume_shard) in
+        endpoints.into_iter().enumerate().zip(resume_shards)
+    {
+        // Fault schedules key on world ranks and arm the model-group
+        // endpoint — the one that runs the per-layer collective schedule
+        // the plans' sequence arithmetic describes. The DP group stays
+        // fault-free (its endpoints still poison with their group if a
+        // member dies mid-all-reduce).
         if let Some(factory) = &opts.faults {
             if let Some(injector) = factory.for_rank(rank) {
                 ep.arm_faults(injector);
@@ -234,6 +266,7 @@ pub fn train_with(cfg: &RunConfig, server: &ExecServer, opts: TrainOptions) -> R
                         artifact,
                         exec,
                         ep,
+                        dp_ep,
                         cache,
                         loss_tx,
                         cont_rx: cr,
@@ -261,10 +294,10 @@ pub fn train_with(cfg: &RunConfig, server: &ExecServer, opts: TrainOptions) -> R
             Err(_) => break, // all ranks done or died
         };
         pending.entry(report.iter).or_default().push((report.rank, report.loss_local));
-        while pending.get(&next_iter).map(|v| v.len()) == Some(p) {
+        while pending.get(&next_iter).map(|v| v.len()) == Some(world) {
             let mut parts = pending.remove(&next_iter).expect("presence checked");
-            // Sum in rank order, not arrival order: f64 addition is not
-            // associative, and both run-to-run determinism and the
+            // Sum in world-rank order, not arrival order: f64 addition is
+            // not associative, and both run-to-run determinism and the
             // bit-identical resume guarantee need one canonical order.
             parts.sort_by_key(|&(rank, _)| rank);
             let global = parts.iter().map(|&(_, loss)| loss).sum::<f64>() * scale;
@@ -287,7 +320,7 @@ pub fn train_with(cfg: &RunConfig, server: &ExecServer, opts: TrainOptions) -> R
             if snapshot {
                 let policy = opts.ckpt.as_ref().expect("snapshot implies a policy");
                 if let Err(e) =
-                    write_snapshot(cfg, policy, completed, &tracker, &run_rng, &shard_rx, p)
+                    write_snapshot(cfg, policy, completed, &tracker, &run_rng, &shard_rx, world)
                 {
                     ckpt_err = Some(e);
                     break 'leader;
@@ -303,7 +336,7 @@ pub fn train_with(cfg: &RunConfig, server: &ExecServer, opts: TrainOptions) -> R
     // Structured crash surfacing (rank id + panic payload via RankPanic):
     // chaos tests assert on who died and why, not a bare "thread panicked".
     let (joined, panic) = join_rank_threads(handles);
-    let mut per_rank = Vec::with_capacity(p);
+    let mut per_rank = Vec::with_capacity(world);
     let mut rank_err: Option<anyhow::Error> = None;
     for (rank, res) in joined {
         match res {
@@ -346,6 +379,7 @@ pub fn train_with(cfg: &RunConfig, server: &ExecServer, opts: TrainOptions) -> R
     Ok(TrainReport {
         mode: cfg.mode,
         p,
+        dp,
         n: cfg.model.n,
         k: cfg.model.k,
         layers: cfg.model.layers,
@@ -362,6 +396,8 @@ pub fn train_with(cfg: &RunConfig, server: &ExecServer, opts: TrainOptions) -> R
     })
 }
 
+/// Logical model size (one DP replica's parameters; replicas are copies,
+/// not extra model capacity).
 fn model_params_of(cfg: &RunConfig) -> u64 {
     match cfg.mode {
         Parallelism::Tensor => tp_model_params(cfg.model.n, cfg.model.layers),
@@ -375,6 +411,7 @@ fn finished_report(cfg: &RunConfig, tracker: &LossTracker) -> TrainReport {
     TrainReport {
         mode: cfg.mode,
         p: cfg.p,
+        dp: cfg.dp,
         n: cfg.model.n,
         k: cfg.model.k,
         layers: cfg.model.layers,
@@ -396,13 +433,15 @@ fn finished_report(cfg: &RunConfig, tracker: &LossTracker) -> TrainReport {
 fn check_resume_compat(cfg: &RunConfig, snap: &Snapshot) -> Result<()> {
     snap.validate()?;
     let sc = &snap.config;
-    if sc.mode != cfg.mode || sc.p != cfg.p {
+    if sc.mode != cfg.mode || sc.p != cfg.p || sc.dp != cfg.dp {
         bail!(
-            "resume layout ({}, p={}) does not match run ({}, p={})",
+            "resume layout ({}, p={}, dp={}) does not match run ({}, p={}, dp={})",
             sc.mode.name(),
             sc.p,
+            sc.dp,
             cfg.mode.name(),
-            cfg.p
+            cfg.p,
+            cfg.dp
         );
     }
     if sc.model != cfg.model {
@@ -433,7 +472,7 @@ fn check_resume_compat(cfg: &RunConfig, snap: &Snapshot) -> Result<()> {
     Ok(())
 }
 
-/// Collect one shard per rank off the snapshot channel and write the
+/// Collect one shard per world rank off the snapshot channel and write the
 /// snapshot atomically as `dir/ckpt-NNNNNN`.
 fn write_snapshot(
     cfg: &RunConfig,
@@ -442,10 +481,10 @@ fn write_snapshot(
     tracker: &LossTracker,
     run_rng: &Prng,
     shard_rx: &mpsc::Receiver<RankShard>,
-    p: usize,
+    world: usize,
 ) -> Result<()> {
-    let mut shards: Vec<Option<RankShard>> = (0..p).map(|_| None).collect();
-    for _ in 0..p {
+    let mut shards: Vec<Option<RankShard>> = (0..world).map(|_| None).collect();
+    for _ in 0..world {
         let shard = shard_rx
             .recv()
             .map_err(|_| anyhow!("a rank died before shipping its snapshot shard"))?;
@@ -468,11 +507,14 @@ fn write_snapshot(
 
 /// Arguments of one rank worker thread.
 struct RankCtx<'a> {
+    /// World rank (= dp_rank * p + model_rank).
     rank: usize,
     cfg: &'a RunConfig,
     artifact: String,
     exec: crate::runtime::ExecHandle,
     ep: crate::comm::Endpoint,
+    /// Data-parallel group endpoint; `None` for dp = 1 runs.
+    dp_ep: Option<crate::comm::Endpoint>,
     cache: Arc<BatchCache>,
     loss_tx: mpsc::Sender<LossReport>,
     cont_rx: mpsc::Receiver<RankCommand>,
@@ -480,6 +522,30 @@ struct RankCtx<'a> {
     warmup: usize,
     start_iter: u64,
     resume_shard: Option<RankShard>,
+}
+
+/// Wakes the rank's DP-group peers if the rank exits abnormally. The
+/// fault path poisons the MODEL group directly (fault_gate), but a dying
+/// rank's DP group would otherwise sit in `dp_all_reduce` for the full
+/// wall-clock rendezvous timeout; this guard poisons it on panic or
+/// error-return, and is disarmed on normal completion.
+///
+/// Deliberately scoped to the DP group only: an organic (non-injected)
+/// failure leaving MODEL peers to the rendezvous timeout is the
+/// established pre-hybrid contract — drop faults surface as "dropped"/
+/// "timeout" errors (DESIGN.md §9, chaos suite) — and poisoning the
+/// model group here would mask that root cause behind lower-numbered
+/// peers' "fabric poisoned" errors.
+struct DpPoisonGuard {
+    poisoner: Option<crate::comm::FabricPoisoner>,
+}
+
+impl Drop for DpPoisonGuard {
+    fn drop(&mut self) {
+        if let Some(p) = &self.poisoner {
+            p.poison();
+        }
+    }
 }
 
 fn run_rank(ctx: RankCtx<'_>) -> Result<RankReport> {
@@ -493,6 +559,7 @@ fn run_rank(ctx: RankCtx<'_>) -> Result<RankReport> {
         artifact,
         exec,
         ep,
+        dp_ep,
         cache,
         loss_tx,
         cont_rx,
@@ -501,6 +568,11 @@ fn run_rank(ctx: RankCtx<'_>) -> Result<RankReport> {
         start_iter,
         resume_shard,
     } = ctx;
+    // The worker's shard geometry is keyed on the model rank: DP replicas
+    // of one model rank initialize (and, gradients being summed, stay)
+    // weight-identical.
+    let model_rank = rank % cfg.p;
+    let mut dp_guard = DpPoisonGuard { poisoner: dp_ep.as_ref().map(|e| e.poisoner()) };
     let (resume_params, resume_opt) = match resume_shard {
         Some(shard) => (Some(shard.params), shard.opt),
         None => (None, None),
@@ -510,7 +582,7 @@ fn run_rank(ctx: RankCtx<'_>) -> Result<RankReport> {
             let params = match resume_params {
                 Some(RankParams::Phantom(p)) => p,
                 Some(RankParams::Tensor(_)) => bail!("resume shard is TP but the run is PP"),
-                None => PhantomRankParams::init(&cfg.model, cfg.p, rank, cfg.train.seed)?,
+                None => PhantomRankParams::init(&cfg.model, cfg.p, model_rank, cfg.train.seed)?,
             };
             Worker::Pp(PhantomRank::with_state(
                 params,
@@ -525,7 +597,7 @@ fn run_rank(ctx: RankCtx<'_>) -> Result<RankReport> {
             let params = match resume_params {
                 Some(RankParams::Tensor(t)) => t,
                 Some(RankParams::Phantom(_)) => bail!("resume shard is PP but the run is TP"),
-                None => TpRankParams::init(&cfg.model, cfg.p, rank, cfg.train.seed)?,
+                None => TpRankParams::init(&cfg.model, cfg.p, model_rank, cfg.train.seed)?,
             };
             Worker::Tp(TensorRank::with_state(
                 params,
@@ -537,6 +609,12 @@ fn run_rank(ctx: RankCtx<'_>) -> Result<RankReport> {
             )?)
         }
     };
+    if let Some(dp) = dp_ep {
+        match &mut worker {
+            Worker::Pp(w) => w.arm_dp(dp),
+            Worker::Tp(w) => w.arm_dp(dp),
+        }
+    }
 
     let mut warm_t = 0.0;
     let mut iter: u64 = start_iter;
@@ -587,9 +665,11 @@ fn run_rank(ctx: RankCtx<'_>) -> Result<RankReport> {
         }
     }
 
-    let (ledger, stats) = match worker {
-        Worker::Pp(w) => (w.ledger, w.ep.stats),
-        Worker::Tp(w) => (w.ledger, w.ep.stats),
+    // Normal completion: nothing to wake — every DP peer stops too.
+    dp_guard.poisoner = None;
+    let (ledger, stats, dp_stats) = match worker {
+        Worker::Pp(w) => (w.ledger, w.ep.stats, w.dp_ep.map(|e| e.stats).unwrap_or_default()),
+        Worker::Tp(w) => (w.ledger, w.ep.stats, w.dp_ep.map(|e| e.stats).unwrap_or_default()),
     };
     let energy_train_j =
         ledger.energy_j_between(&cfg.hardware.power, warm_t, ledger.now_s);
@@ -597,6 +677,7 @@ fn run_rank(ctx: RankCtx<'_>) -> Result<RankReport> {
         rank,
         ledger: ledger.summary(),
         stats,
+        dp_stats,
         warm_t,
         energy_train_j,
     })
@@ -624,10 +705,13 @@ pub fn infer(cfg: &RunConfig, server: &ExecServer, batches: usize) -> Result<Inf
     let p = cfg.p;
     let endpoints = Fabric::new(p, cfg.hardware.net);
     let teacher = Teacher::new(cfg.model.n, cfg.train.seed);
+    // Forward-only serving is model-parallel: DP replicas would only
+    // duplicate the stream, so inference always runs one model group.
     let cache = Arc::new(BatchCache::new(
         teacher,
         cfg.train.batch,
         p,
+        1,
         cfg.train.dataset_batches,
     ));
 

@@ -47,6 +47,43 @@ use crate::simnet::Collective;
 use crate::tensor::Tensor;
 use anyhow::Result;
 
+/// The hybrid DP gradient synchronization (DESIGN.md §10): flatten the
+/// rank's gradient list into one contiguous payload, All-Reduce it across
+/// the data-parallel group (elementwise sum in replica order — the same
+/// canonical order every fabric combine uses), and scatter the summed
+/// values back into the per-tensor gradients in place. One collective per
+/// iteration, message size = the rank's full parameter count, charged to
+/// the ledger's DpComm bucket by the DP endpoint. A size-1 group is a
+/// no-op: pure model-parallel runs never enter the DP fabric.
+///
+/// No averaging happens here: every replica computes its gradients with
+/// the *global* batch's loss scale baked into the kernels, so the replica
+/// sum IS the full-batch gradient.
+pub(crate) fn dp_all_reduce_grads(
+    dp_ep: &mut Endpoint,
+    grads: &mut [Tensor],
+    ledger: &mut EnergyLedger,
+) -> Result<()> {
+    if dp_ep.p == 1 {
+        return Ok(());
+    }
+    let total: usize = grads.iter().map(|g| g.numel()).sum();
+    let mut flat = Tensor::zeros(&[total]);
+    let mut off = 0;
+    for g in grads.iter() {
+        flat.data_mut()[off..off + g.numel()].copy_from_slice(g.data());
+        off += g.numel();
+    }
+    let summed = dp_ep.dp_all_reduce(flat, ledger)?;
+    let mut off = 0;
+    for g in grads.iter_mut() {
+        let n = g.numel();
+        g.data_mut().copy_from_slice(&summed.data()[off..off + n]);
+        off += n;
+    }
+    Ok(())
+}
+
 /// Shared helper: execute a compute segment and charge its wall time to the
 /// rank's virtual clock as busy (dynamic-power) time. Inputs are borrowed —
 /// weights and activations are never cloned for a call.

@@ -18,6 +18,10 @@ pub struct PhantomRank {
     opt: Optimizer,
     pub exec: ExecHandle,
     pub ep: Endpoint,
+    /// Data-parallel group endpoint (hybrid DP×PP): armed via `arm_dp`
+    /// when the run has dp > 1; `None` = pure phantom parallelism, whose
+    /// iteration is byte-identical to the pre-hybrid schedule.
+    pub dp_ep: Option<Endpoint>,
     pub ledger: EnergyLedger,
 }
 
@@ -45,7 +49,14 @@ impl PhantomRank {
     ) -> Result<PhantomRank> {
         let shapes = param_shapes(&params);
         let opt = Optimizer::with_state(opt_cfg, &shapes, opt_state)?;
-        Ok(PhantomRank { params, artifact, opt, exec, ep, ledger: EnergyLedger::new() })
+        let ledger = EnergyLedger::new();
+        Ok(PhantomRank { params, artifact, opt, exec, ep, dp_ep: None, ledger })
+    }
+
+    /// Join a data-parallel group: every subsequent iteration ends with
+    /// the DP gradient All-Reduce over `dp_ep` before the optimizer step.
+    pub fn arm_dp(&mut self, dp_ep: Endpoint) {
+        self.dp_ep = Some(dp_ep);
     }
 
     /// Export the optimizer's accumulated state for checkpointing.
@@ -193,8 +204,7 @@ impl PhantomRank {
             }
         }
 
-        // ---- optimizer step (rank-local compute) ----
-        let t0 = std::time::Instant::now();
+        // ---- DP gradient sync + optimizer step (rank-local compute) ----
         // Order must match `param_shapes`/`named_tensors`: L*, C*, D*, b*.
         // The per-layer arrays are moved out, never cloned.
         let mut dls = Vec::with_capacity(layers);
@@ -212,6 +222,15 @@ impl PhantomRank {
         grad_list.append(&mut dcs);
         grad_list.append(&mut dds);
         grad_list.append(&mut dbs);
+        // Hybrid DP×PP: sum gradients across the data-parallel replicas
+        // (one flat All-Reduce, charged to the DpComm bucket) before the
+        // identical optimizer step runs on every replica. Outside the
+        // optimizer's wall-time window: rendezvous wait must never be
+        // charged as compute.
+        if let Some(dp) = self.dp_ep.as_mut() {
+            super::dp_all_reduce_grads(dp, &mut grad_list, &mut self.ledger)?;
+        }
+        let t0 = std::time::Instant::now();
         {
             let mut tensors = self.params.named_tensors();
             let mut refs: Vec<&mut Tensor> =

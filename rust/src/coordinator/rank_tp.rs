@@ -27,6 +27,10 @@ pub struct TensorRank {
     opt: Optimizer,
     pub exec: ExecHandle,
     pub ep: Endpoint,
+    /// Data-parallel group endpoint (hybrid DP×TP): armed via `arm_dp`
+    /// when the run has dp > 1; `None` = pure tensor parallelism, whose
+    /// iteration is byte-identical to the pre-hybrid schedule.
+    pub dp_ep: Option<Endpoint>,
     pub ledger: EnergyLedger,
     /// Charge the paper's full Table II schedule (Broadcast + extra
     /// Reduce-Scatter). On by default; ablation benches switch it off.
@@ -68,9 +72,16 @@ impl TensorRank {
             opt,
             exec,
             ep,
+            dp_ep: None,
             ledger: EnergyLedger::new(),
             paper_schedule: true,
         })
+    }
+
+    /// Join a data-parallel group: every subsequent iteration ends with
+    /// the DP gradient All-Reduce over `dp_ep` before the optimizer step.
+    pub fn arm_dp(&mut self, dp_ep: Endpoint) {
+        self.dp_ep = Some(dp_ep);
     }
 
     /// Export the optimizer's accumulated state for checkpointing.
@@ -180,8 +191,7 @@ impl TensorRank {
             grads[l - 1] = Some([dw, db]);
         }
 
-        // ---- optimizer step ----
-        let t0 = std::time::Instant::now();
+        // ---- DP gradient sync + optimizer step ----
         // Order must match named_tensors: W*, b*; arrays moved, not cloned.
         let mut dws = Vec::with_capacity(layers);
         let mut dbs = Vec::with_capacity(layers);
@@ -192,6 +202,15 @@ impl TensorRank {
         }
         let mut grad_list = dws;
         grad_list.append(&mut dbs);
+        // Hybrid DP×TP: sum gradients across the data-parallel replicas
+        // (one flat All-Reduce, charged to the DpComm bucket) before the
+        // identical optimizer step runs on every replica. Outside the
+        // optimizer's wall-time window: rendezvous wait must never be
+        // charged as compute.
+        if let Some(dp) = self.dp_ep.as_mut() {
+            super::dp_all_reduce_grads(dp, &mut grad_list, &mut self.ledger)?;
+        }
+        let t0 = std::time::Instant::now();
         {
             let mut tensors = self.params.named_tensors();
             let mut refs: Vec<&mut Tensor> =

@@ -72,47 +72,117 @@ impl Teacher {
         rank: usize,
         p: usize,
     ) -> Result<(Tensor, Tensor)> {
-        let (x, y) = self.batch(batch, iter)?;
-        let xs = x.col_shards(p)?;
-        let ys = y.col_shards(p)?;
-        Ok((xs[rank].clone(), ys[rank].clone()))
+        self.hybrid_shard(batch, iter, rank, p, 0, 1)
     }
+
+    /// The hybrid shard of batch `iter` owned by (model rank, DP replica):
+    /// the replica's contiguous row range of the global batch, column-cut
+    /// to the model rank's n/p feature slice. Shard boundaries key only on
+    /// (dp_rank, model_rank): every member of one model group sees the same
+    /// rows, and concatenating all replicas' rows reproduces the full
+    /// batch bitwise — including when `batch % dp != 0` (leading replicas
+    /// carry the remainder rows).
+    pub fn hybrid_shard(
+        &self,
+        batch: usize,
+        iter: u64,
+        model_rank: usize,
+        p: usize,
+        dp_rank: usize,
+        dp: usize,
+    ) -> Result<(Tensor, Tensor)> {
+        let (x, y) = self.batch(batch, iter)?;
+        let (start, len) = dp_row_range(batch, dp, dp_rank);
+        let xs = row_slice(&x, start, len)?.col_shards(p)?;
+        let ys = row_slice(&y, start, len)?.col_shards(p)?;
+        Ok((xs[model_rank].clone(), ys[model_rank].clone()))
+    }
+}
+
+/// The contiguous row range [start, start+len) of a `batch`-row global
+/// batch owned by DP replica `d` of `dp`. The first `batch % dp` replicas
+/// carry one extra row, so the ranges tile the batch exactly for any
+/// remainder.
+pub fn dp_row_range(batch: usize, dp: usize, d: usize) -> (usize, usize) {
+    assert!(dp >= 1 && d < dp, "replica {d} out of range for dp={dp}");
+    let base = batch / dp;
+    let extra = batch % dp;
+    let start = d * base + d.min(extra);
+    let len = base + usize::from(d < extra);
+    (start, len)
+}
+
+/// Rows [start, start+len) of a [B, n] tensor (rows are contiguous in the
+/// row-major layout, so this is a pure copy). Shared with the testkit
+/// oracle, which must reproduce the DP row sharding bitwise.
+pub fn row_slice(t: &Tensor, start: usize, len: usize) -> Result<Tensor> {
+    let n = t.shape()[1];
+    Tensor::from_vec(&[len, n], t.data()[start * n..(start + len) * n].to_vec())
 }
 
 /// A shared, memoized FIXED dataset for multi-rank runs. The paper trains
 /// on a fixed set of (x, y) pairs ("kept fixed for all the examples");
 /// iteration i uses batch i % num_batches, so `num_batches` iterations are
 /// one epoch. Shards are materialized once per distinct batch and shared
-/// across ranks and epochs.
+/// across ranks and epochs. With `dp > 1` the cache holds the hybrid
+/// layout: per batch, `dp` row ranges × `p` column shards, indexed by
+/// world rank (`world = dp_rank * p + model_rank`).
 pub struct BatchCache {
     teacher: Teacher,
     batch: usize,
     p: usize,
+    dp: usize,
     num_batches: u64,
-    inner: std::sync::Mutex<std::collections::HashMap<u64, (Vec<Tensor>, Vec<Tensor>)>>,
+    /// key -> per-world-rank shards, world-rank order.
+    inner: std::sync::Mutex<std::collections::HashMap<u64, Vec<(Tensor, Tensor)>>>,
 }
 
 impl BatchCache {
-    pub fn new(teacher: Teacher, batch: usize, p: usize, num_batches: usize) -> BatchCache {
+    pub fn new(
+        teacher: Teacher,
+        batch: usize,
+        p: usize,
+        dp: usize,
+        num_batches: usize,
+    ) -> BatchCache {
         assert!(num_batches >= 1);
+        assert!(p >= 1 && dp >= 1);
         BatchCache {
             teacher,
             batch,
             p,
+            dp,
             num_batches: num_batches as u64,
             inner: std::sync::Mutex::new(Default::default()),
         }
     }
 
-    pub fn shard(&self, iter: u64, rank: usize) -> Result<(Tensor, Tensor)> {
+    /// The shard of training iteration `iter` owned by `world_rank`
+    /// (= `dp_rank * p + model_rank`; with dp = 1 this is the model rank).
+    pub fn shard(&self, iter: u64, world_rank: usize) -> Result<(Tensor, Tensor)> {
         let key = iter % self.num_batches;
-        let mut g = self.inner.lock().expect("batch cache poisoned");
+        // Poison recovery: the cached shards are read-rebuildable pure
+        // data, so a sibling rank that panicked while holding this lock
+        // must not take the whole cluster down with an opaque secondary
+        // "batch cache poisoned" panic — recover the guard and let the
+        // original rank's panic payload name the true first failure.
+        let mut g = self.inner.lock().unwrap_or_else(|poisoned| poisoned.into_inner());
         if !g.contains_key(&key) {
             let (x, y) = self.teacher.batch(self.batch, key)?;
-            g.insert(key, (x.col_shards(self.p)?, y.col_shards(self.p)?));
+            let mut shards = Vec::with_capacity(self.dp * self.p);
+            for d in 0..self.dp {
+                let (start, len) = dp_row_range(self.batch, self.dp, d);
+                let xs = row_slice(&x, start, len)?.col_shards(self.p)?;
+                let ys = row_slice(&y, start, len)?.col_shards(self.p)?;
+                for (xr, yr) in xs.into_iter().zip(ys) {
+                    shards.push((xr, yr));
+                }
+            }
+            g.insert(key, shards);
         }
-        let (xs, ys) = g.get(&key).unwrap();
-        Ok((xs[rank].clone(), ys[rank].clone()))
+        let shards = g.get(&key).expect("inserted above");
+        let (x, y) = &shards[world_rank];
+        Ok((x.clone(), y.clone()))
     }
 }
 
@@ -171,7 +241,7 @@ mod tests {
     #[test]
     fn cache_agrees_with_direct() {
         let t = Teacher::new(32, 9);
-        let cache = BatchCache::new(t.clone(), 4, 4, 8);
+        let cache = BatchCache::new(t.clone(), 4, 4, 1, 8);
         for iter in [0u64, 1, 2, 1] {
             for r in [0usize, 3, 1] {
                 let (xc, yc) = cache.shard(iter, r).unwrap();
@@ -185,7 +255,7 @@ mod tests {
     #[test]
     fn cache_cycles_the_fixed_dataset() {
         let t = Teacher::new(32, 9);
-        let cache = BatchCache::new(t, 4, 2, 4);
+        let cache = BatchCache::new(t, 4, 2, 1, 4);
         // iteration 6 reuses batch 6 % 4 = 2
         let (x6, y6) = cache.shard(6, 1).unwrap();
         let (x2, y2) = cache.shard(2, 1).unwrap();
@@ -202,5 +272,89 @@ mod tests {
         let (xb, yb) = Teacher::new(16, 2).batch(2, 0).unwrap();
         assert_ne!(xa, xb);
         assert_ne!(ya, yb);
+    }
+
+    #[test]
+    fn dp_row_ranges_tile_the_batch_with_remainders() {
+        for (batch, dp) in [(8usize, 2usize), (7, 2), (7, 3), (5, 4), (4, 4), (3, 1)] {
+            let mut covered = 0usize;
+            for d in 0..dp {
+                let (start, len) = dp_row_range(batch, dp, d);
+                assert_eq!(start, covered, "batch={batch} dp={dp} d={d}");
+                covered += len;
+                // Balanced to within one row.
+                assert!(len >= batch / dp && len <= batch / dp + 1);
+            }
+            assert_eq!(covered, batch, "ranges must tile batch={batch} for dp={dp}");
+        }
+    }
+
+    #[test]
+    fn hybrid_shards_reassemble_the_batch_bitwise() {
+        // Including batch % dp != 0: dp=3 over batch=7.
+        let t = Teacher::new(24, 11);
+        let (batch, p, dp) = (7usize, 2usize, 3usize);
+        let (x, y) = t.batch(batch, 4).unwrap();
+        let mut x_rows: Vec<Tensor> = Vec::new();
+        let mut y_rows: Vec<Tensor> = Vec::new();
+        for d in 0..dp {
+            let mut xs = Vec::new();
+            let mut ys = Vec::new();
+            for r in 0..p {
+                let (xr, yr) = t.hybrid_shard(batch, 4, r, p, d, dp).unwrap();
+                xs.push(xr);
+                ys.push(yr);
+            }
+            x_rows.push(Tensor::from_col_shards(&xs).unwrap());
+            y_rows.push(Tensor::from_col_shards(&ys).unwrap());
+        }
+        let cat = |rows: &[Tensor]| {
+            let n = rows[0].shape()[1];
+            let mut data = Vec::new();
+            for r in rows {
+                data.extend_from_slice(r.data());
+            }
+            Tensor::from_vec(&[batch, n], data).unwrap()
+        };
+        assert_eq!(cat(&x_rows), x, "row-concat of replica shards must equal the batch");
+        assert_eq!(cat(&y_rows), y);
+    }
+
+    #[test]
+    fn hybrid_cache_agrees_with_direct_hybrid_shards() {
+        let t = Teacher::new(24, 13);
+        let (batch, p, dp) = (5usize, 2usize, 2usize);
+        let cache = BatchCache::new(t.clone(), batch, p, dp, 4);
+        for iter in [0u64, 3, 1] {
+            for world in 0..p * dp {
+                let (xc, yc) = cache.shard(iter, world).unwrap();
+                let (xd, yd) =
+                    t.hybrid_shard(batch, iter % 4, world % p, p, world / p, dp).unwrap();
+                assert_eq!(xc, xd, "iter {iter} world {world}");
+                assert_eq!(yc, yd);
+            }
+        }
+    }
+
+    #[test]
+    fn poisoned_cache_recovers_instead_of_cascading() {
+        use std::sync::Arc;
+        let cache = Arc::new(BatchCache::new(Teacher::new(16, 3), 4, 2, 1, 2));
+        // Warm the cache, then poison its mutex: a thread panics while
+        // holding the guard (what a crashing sibling rank does).
+        cache.shard(0, 0).unwrap();
+        let c2 = cache.clone();
+        let _ = std::thread::spawn(move || {
+            let _guard = c2.inner.lock().unwrap_or_else(|p| p.into_inner());
+            panic!("simulated rank crash while holding the batch cache");
+        })
+        .join();
+        // Before the fix this was `lock().expect("batch cache poisoned")`:
+        // every surviving rank died with that opaque secondary panic,
+        // masking the true first failure. Now the cache recovers.
+        let (x, y) = cache.shard(0, 1).expect("poisoned cache must recover");
+        let (xd, yd) = Teacher::new(16, 3).batch_shard(4, 0, 1, 2).unwrap();
+        assert_eq!(x, xd);
+        assert_eq!(y, yd);
     }
 }

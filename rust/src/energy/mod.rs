@@ -37,10 +37,16 @@ impl PowerModel {
 pub enum Activity {
     /// Executing compute (charged at A).
     Compute,
-    /// Driving / waiting on a collective (charged at B).
+    /// Driving / waiting on a model-parallel collective (charged at B).
     Communicate,
     /// Waiting at a rendezvous for slower peers (charged at B).
     Idle,
+    /// Driving the data-parallel gradient All-Reduce (charged at B, like
+    /// any collective, but tracked as its own bucket so hybrid DP×(TP|PP)
+    /// reports can separate the Huber-style DP sync cost from the
+    /// model-parallel traffic the paper compares). Pure model-parallel
+    /// runs (dp = 1) never record this activity.
+    DpComm,
 }
 
 /// One recorded interval.
@@ -96,6 +102,12 @@ impl EnergyLedger {
         self.total(Activity::Idle)
     }
 
+    /// Time spent driving the DP gradient All-Reduce (zero unless the rank
+    /// belongs to a data-parallel group of size > 1).
+    pub fn dp_comm_s(&self) -> f64 {
+        self.total(Activity::DpComm)
+    }
+
     fn total(&self, a: Activity) -> f64 {
         self.intervals
             .iter()
@@ -108,9 +120,9 @@ impl EnergyLedger {
         &self.intervals
     }
 
-    /// Exact energy under `model` (Eqn. 1): busy at A, comm+idle at B.
+    /// Exact energy under `model` (Eqn. 1): busy at A, comm+idle+dp at B.
     pub fn energy_j(&self, model: &PowerModel) -> f64 {
-        model.energy(self.busy_s(), self.comm_s() + self.idle_s())
+        model.energy(self.busy_s(), self.comm_s() + self.idle_s() + self.dp_comm_s())
     }
 
     /// Exact energy restricted to [t0, t1) — used to exclude initialization
@@ -138,13 +150,15 @@ impl EnergyLedger {
     /// Long-lived serving ranks call this per batch so their ledgers stay
     /// O(1) instead of growing with every kernel and collective.
     pub fn compact(&mut self) {
-        let (busy, comm, idle) = (self.busy_s(), self.comm_s(), self.idle_s());
+        let (busy, comm, idle, dp) =
+            (self.busy_s(), self.comm_s(), self.idle_s(), self.dp_comm_s());
         self.intervals.clear();
-        let mut t = self.now_s - (busy + comm + idle);
+        let mut t = self.now_s - (busy + comm + idle + dp);
         for (dur, activity) in [
             (busy, Activity::Compute),
             (comm, Activity::Communicate),
             (idle, Activity::Idle),
+            (dp, Activity::DpComm),
         ] {
             if dur > 0.0 {
                 self.intervals.push(Interval { start_s: t, end_s: t + dur, activity });
@@ -159,6 +173,7 @@ impl EnergyLedger {
             busy_s: self.busy_s(),
             comm_s: self.comm_s(),
             idle_s: self.idle_s(),
+            dp_comm_s: self.dp_comm_s(),
             end_s: self.now_s,
         }
     }
@@ -170,6 +185,8 @@ pub struct LedgerSummary {
     pub busy_s: f64,
     pub comm_s: f64,
     pub idle_s: f64,
+    /// DP gradient All-Reduce time (its own bucket; zero when dp = 1).
+    pub dp_comm_s: f64,
     pub end_s: f64,
 }
 
@@ -178,11 +195,12 @@ impl LedgerSummary {
         self.busy_s += other.busy_s;
         self.comm_s += other.comm_s;
         self.idle_s += other.idle_s;
+        self.dp_comm_s += other.dp_comm_s;
         self.end_s = self.end_s.max(other.end_s);
     }
 
     pub fn energy_j(&self, model: &PowerModel) -> f64 {
-        model.energy(self.busy_s, self.comm_s + self.idle_s)
+        model.energy(self.busy_s, self.comm_s + self.idle_s + self.dp_comm_s)
     }
 }
 
@@ -341,12 +359,38 @@ mod tests {
 
     #[test]
     fn summary_accumulate() {
-        let mut a = LedgerSummary { busy_s: 1.0, comm_s: 2.0, idle_s: 3.0, end_s: 6.0 };
-        let b = LedgerSummary { busy_s: 0.5, comm_s: 0.5, idle_s: 0.5, end_s: 7.0 };
+        let mut a =
+            LedgerSummary { busy_s: 1.0, comm_s: 2.0, idle_s: 3.0, dp_comm_s: 0.0, end_s: 6.0 };
+        let b = LedgerSummary { busy_s: 0.5, comm_s: 0.5, idle_s: 0.5, dp_comm_s: 0.0, end_s: 7.0 };
         a.accumulate(&b);
         assert_eq!(a.busy_s, 1.5);
         assert_eq!(a.end_s, 7.0);
         let m = PowerModel { busy_w: 100.0, idle_w: 10.0 };
         assert!((a.energy_j(&m) - (150.0 + 60.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn dp_comm_is_its_own_bucket_charged_at_static_draw() {
+        let mut l = EnergyLedger::new();
+        l.advance(2.0, Activity::Compute);
+        l.advance(1.0, Activity::Communicate);
+        l.advance(0.5, Activity::DpComm);
+        assert_eq!(l.dp_comm_s(), 0.5);
+        assert_eq!(l.comm_s(), 1.0, "DP time must not leak into the model-parallel bucket");
+        assert_eq!(l.now_s, 3.5);
+        let m = PowerModel::frontier();
+        // DP comm is charged at the static draw B, like any collective.
+        assert!((l.energy_j(&m) - (560.0 * 2.0 + 90.0 * 1.5)).abs() < 1e-9);
+        // Windowed accounting treats DpComm at B too.
+        assert!((l.energy_j_between(&m, 3.0, 3.5) - 90.0 * 0.5).abs() < 1e-9);
+        // Summary carries the bucket and the four buckets partition time.
+        let s = l.summary();
+        assert_eq!(s.dp_comm_s, 0.5);
+        assert!((s.busy_s + s.comm_s + s.idle_s + s.dp_comm_s - s.end_s).abs() < 1e-12);
+        assert!((s.energy_j(&m) - l.energy_j(&m)).abs() < 1e-9);
+        // Compaction preserves the bucket.
+        l.compact();
+        assert_eq!(l.dp_comm_s(), 0.5);
+        assert_eq!(l.now_s, 3.5);
     }
 }

@@ -53,6 +53,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     args.check_known(&[
         "preset",
         "mode",
+        "dp",
         "iters",
         "target-loss",
         "lr",
@@ -71,7 +72,7 @@ fn cmd_train(args: &Args) -> Result<()> {
             // The snapshot fixes everything that shapes the math; allowing
             // these flags alongside --resume would silently diverge from
             // the saved trajectory.
-            for fixed in ["preset", "mode", "optimizer", "lr", "seed", "backend"] {
+            for fixed in ["preset", "mode", "dp", "optimizer", "lr", "seed", "backend"] {
                 if args.opt(fixed).is_some() || args.flag(fixed) {
                     bail!("--{fixed} cannot be combined with --resume (the snapshot fixes it)");
                 }
@@ -92,6 +93,9 @@ fn cmd_train(args: &Args) -> Result<()> {
             let mode = Parallelism::parse(args.opt("mode").unwrap_or("pp"))?;
             let mut cfg = preset(preset_name, mode)?;
             cfg.backend = BackendKind::parse(args.opt("backend").unwrap_or("native"))?;
+            if let Some(dp) = args.opt_parse::<usize>("dp")? {
+                cfg.dp = dp;
+            }
             if let Some(seed) = args.opt_parse::<u64>("seed")? {
                 cfg.train.seed = seed;
             }
@@ -123,10 +127,13 @@ fn cmd_train(args: &Args) -> Result<()> {
 
     let server = ExecServer::for_run(&cfg)?;
     eprintln!(
-        "training {} / {} on {} simulated ranks (n={}, k={}, L={}, backend={})...",
+        "training {} / {} on {} simulated ranks ({} model x {} dp; n={}, k={}, L={}, \
+         backend={})...",
         preset_name,
         cfg.mode.name(),
+        cfg.world(),
         cfg.p,
+        cfg.dp,
         cfg.model.n,
         cfg.model.k,
         cfg.model.layers,
@@ -148,6 +155,21 @@ fn cmd_train(args: &Args) -> Result<()> {
     t.row(vec!["energy (train)".into(), fmt_joules(report.energy_train_j)]);
     t.row(vec!["energy/iter".into(), fmt_joules(report.energy_per_iter_j())]);
     t.row(vec!["virtual wall".into(), fmt_secs(report.wall_train_s)]);
+    if report.dp > 1 {
+        // Hybrid runs: surface the DP gradient-sync bucket on its own
+        // row. Full-run total (warmup included) — labeled as such, since
+        // the energy rows above are post-warmup.
+        let dp_s: f64 = report.per_rank.iter().map(|r| r.ledger.dp_comm_s).sum();
+        t.row(vec!["ranks (model x dp)".into(), format!("{} x {}", report.p, report.dp)]);
+        t.row(vec![
+            "dp grad sync (full run)".into(),
+            format!(
+                "{} ({})",
+                fmt_secs(dp_s),
+                fmt_joules(cfg.hardware.power.idle_w * dp_s)
+            ),
+        ]);
+    }
     print!("{}", t.markdown());
 
     // loss curve (sparse print)
@@ -548,6 +570,7 @@ fn report_json(r: &coordinator::TrainReport) -> Json {
     Json::obj(vec![
         ("mode", Json::str(r.mode.name())),
         ("p", Json::int(r.p as i64)),
+        ("dp", Json::int(r.dp as i64)),
         ("n", Json::int(r.n as i64)),
         ("k", Json::int(r.k as i64)),
         ("layers", Json::int(r.layers as i64)),
@@ -571,8 +594,11 @@ fn report_json(r: &coordinator::TrainReport) -> Json {
                             ("busy_s", Json::num(rr.ledger.busy_s)),
                             ("comm_s", Json::num(rr.ledger.comm_s)),
                             ("idle_s", Json::num(rr.ledger.idle_s)),
+                            ("dp_comm_s", Json::num(rr.ledger.dp_comm_s)),
                             ("floats_moved", Json::int(rr.stats.floats_moved as i64)),
                             ("collectives", Json::int(rr.stats.collectives() as i64)),
+                            ("dp_floats_moved", Json::int(rr.dp_stats.floats_moved as i64)),
+                            ("dp_collectives", Json::int(rr.dp_stats.collectives() as i64)),
                         ])
                     })
                     .collect(),

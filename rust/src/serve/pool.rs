@@ -191,9 +191,17 @@ impl RankPool {
     /// the old weights, every later dispatch by the new — no query is
     /// dropped and no batch sees a torn mix of layouts. The snapshot's
     /// parallelism mode may differ from the pool's starting mode (the
-    /// collective schedule follows the weights).
+    /// collective schedule follows the weights). A hybrid (dp > 1)
+    /// snapshot is collapsed first — its DP replicas are verified
+    /// bitwise-identical, then replica 0 serves (serving is
+    /// model-parallel; replicas carry no extra weights).
     pub fn load_weights(&mut self, snap: &Snapshot) -> Result<()> {
         snap.validate()?;
+        if snap.dp() > 1 {
+            let collapsed = crate::ckpt::collapse_dp(snap)
+                .context("collapsing hybrid snapshot for serving")?;
+            return self.load_weights(&collapsed);
+        }
         if snap.p() != self.p || snap.n() != self.n {
             bail!(
                 "snapshot geometry (p={}, n={}) does not match pool (p={}, n={})",

@@ -1,13 +1,18 @@
-//! Differential conformance runner: randomized `(n, p, mode, backend,
+//! Differential conformance runner: randomized `(n, p, dp, mode, backend,
 //! batch, layers, optimizer, seed)` configs, each asserting the full
 //! equivalence chain
 //!
 //! ```text
-//! distributed train (p ranks, fabric, fused kernels)
+//! distributed train (p*dp ranks, grouped fabric, fused kernels)
 //!   ≡ ReferenceTrainer (single thread, simulated collectives)   [tight]
 //!   ≡ naive unfused math (matmul_naive, paper equations)        [float tol]
 //! TP layout ≡ PP layout (reshard + host-side forward)           [float tol]
 //! ```
+//!
+//! The dp dimension (ISSUE 5) sweeps hybrid DP×TP and DP×PP layouts —
+//! dp ∈ {1, 2, 4}, including batch % dp != 0 splits — against the same
+//! oracle, which simulates the DP row sharding and the replica-ordered
+//! gradient All-Reduce exactly.
 //!
 //! so every future perf PR can be checked against a fixed oracle: if the
 //! fabric, the drivers, the fused kernels, or the re-sharding algebra
@@ -61,6 +66,7 @@ impl Default for SweepConfig {
 pub struct CaseReport {
     pub n: usize,
     pub p: usize,
+    pub dp: usize,
     pub k: usize,
     pub layers: usize,
     pub batch: usize,
@@ -87,8 +93,10 @@ pub struct SweepReport {
 impl SweepReport {
     /// Flat records for BENCH_conformance.json.
     pub fn records(&self) -> Vec<(String, f64)> {
+        let hybrid = self.cases.iter().filter(|c| c.dp > 1).count();
         vec![
             ("conformance_cases".to_string(), self.cases.len() as f64),
+            ("conformance_hybrid_cases".to_string(), hybrid as f64),
             ("conformance_loss_max_rel_dev".to_string(), self.max_loss_dev),
             ("conformance_grad_max_rel_dev".to_string(), self.max_grad_dev as f64),
             ("conformance_forward_max_rel_dev".to_string(), self.max_forward_dev as f64),
@@ -102,7 +110,10 @@ fn sample_case(rng: &mut Prng, iters: usize) -> (RunConfig, &'static str) {
     let m = rng.int_in(3, 8) as usize;
     let n = p * m;
     let layers = rng.int_in(1, 3) as usize;
-    let batch = rng.int_in(2, 6) as usize;
+    // Hybrid dimension: dp ∈ {1, 2, 4}; batch >= dp, deliberately NOT
+    // forced divisible so the remainder row split is swept too.
+    let dp = [1usize, 2, 4][rng.int_in(0, 2) as usize];
+    let batch = rng.int_in(dp.max(2) as u64, 6) as usize;
     let k = rng.int_in(1, (m - 1).min(4) as u64) as usize;
     let (optimizer, opt_name): (OptimizerConfig, &'static str) = match rng.int_in(0, 2) {
         0 => (OptimizerConfig::Sgd { lr: 0.1 }, "sgd"),
@@ -116,6 +127,7 @@ fn sample_case(rng: &mut Prng, iters: usize) -> (RunConfig, &'static str) {
     let cfg = RunConfig {
         mode: Parallelism::Phantom, // per-mode runs overwrite this
         p,
+        dp,
         model: ModelConfig { n, layers, k },
         train: TrainConfig {
             batch,
@@ -262,9 +274,9 @@ pub fn run_sweep(sw: &SweepConfig) -> Result<SweepReport> {
         tp_cfg.mode = Parallelism::Tensor;
 
         let ctx = format!(
-            "case {case}: n={} p={} k={} L={} batch={} opt={} seed={:#x}",
-            base.model.n, base.p, base.model.k, base.model.layers, base.train.batch,
-            opt_name, base.train.seed
+            "case {case}: n={} p={} dp={} k={} L={} batch={} opt={} seed={:#x}",
+            base.model.n, base.p, base.dp, base.model.k, base.model.layers,
+            base.train.batch, opt_name, base.train.seed
         );
         let (pp_loss, pp_grad) = run_mode(&pp_cfg, sw).context(ctx.clone())?;
         let (tp_loss, tp_grad) = run_mode(&tp_cfg, sw).context(ctx.clone())?;
@@ -278,6 +290,7 @@ pub fn run_sweep(sw: &SweepConfig) -> Result<SweepReport> {
         report.cases.push(CaseReport {
             n: base.model.n,
             p: base.p,
+            dp: base.dp,
             k: base.model.k,
             layers: base.model.layers,
             batch: base.train.batch,

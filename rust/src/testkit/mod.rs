@@ -13,9 +13,10 @@
 //!   replaced by their rank-ordered definitions), bit-matching the
 //!   distributed trainer; plus an independent naive-math implementation
 //!   for gradient cross-checks.
-//! * `differential` — the randomized `(n, p, TP|PP, backend, batch)`
+//! * `differential` — the randomized `(n, p, dp, TP|PP, backend, batch)`
 //!   conformance sweep asserting distributed ≡ oracle ≡ naive and
-//!   TP ≡ PP across re-sharding.
+//!   TP ≡ PP across re-sharding, with hybrid DP×(TP|PP) layouts swept
+//!   at dp ∈ {1, 2, 4}.
 //! * `chaos` — scripted failure drivers: crash-resume bit-identity for
 //!   training, crash + hot-swap recovery with zero dropped/reordered
 //!   queries for serving.

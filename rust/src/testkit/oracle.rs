@@ -23,7 +23,7 @@ use anyhow::{bail, Result};
 
 use crate::config::{Parallelism, RunConfig};
 use crate::coordinator::rank_pp::param_shapes;
-use crate::data::Teacher;
+use crate::data::{dp_row_range, row_slice, Teacher};
 use crate::model::{PhantomRankParams, TpRankParams};
 use crate::runtime::native::run_entry;
 use crate::runtime::ManifestConfig;
@@ -52,6 +52,13 @@ impl ReferenceTrainer {
         cfg.model.validate(cfg.p)?;
         if cfg.train.batch == 0 {
             bail!("batch must be positive");
+        }
+        if cfg.dp == 0 || cfg.train.batch < cfg.dp {
+            bail!(
+                "hybrid oracle needs 1 <= dp <= batch (dp={}, batch={})",
+                cfg.dp,
+                cfg.train.batch
+            );
         }
         let geo = ManifestConfig::native(
             "testkit-oracle",
@@ -104,24 +111,60 @@ impl ReferenceTrainer {
         self.iter
     }
 
-    /// The (x, t) shards of training iteration `iter`, identical to the
-    /// driver's `BatchCache` (fixed dataset, iteration i trains on batch
-    /// i % dataset_batches).
-    fn batch_shards(&self, iter: u64) -> Result<(Vec<Tensor>, Vec<Tensor>)> {
+    /// The shared DP decomposition both math paths run through: generate
+    /// iteration `iter`'s batch ONCE (fixed dataset, batch i %
+    /// dataset_batches — the `BatchCache` contract), feed each replica's
+    /// contiguous `dp_row_range` rows (column-cut per model rank, bitwise
+    /// the driver's shards) through `replica_fb`, fold the local losses in
+    /// world-rank order (replicas outer, ranks inner — the leader's
+    /// canonical f64 sum), and sum gradients across replicas in replica
+    /// order — exactly the fabric's `dp_all_reduce` combine. Keeping this
+    /// in ONE place is what lets the kernel and naive paths disagree only
+    /// in per-replica math, never in DP summation order.
+    fn dp_accumulate(
+        &self,
+        iter: u64,
+        mut replica_fb: impl FnMut(&[Tensor], &[Tensor]) -> Result<(Vec<f64>, Vec<Vec<Tensor>>)>,
+    ) -> Result<(f64, Vec<Vec<Tensor>>)> {
+        let dp = self.cfg.dp.max(1);
+        let batch = self.cfg.train.batch;
+        let scale = 1.0 / (batch as f64 * self.cfg.model.n as f64);
         let key = iter % self.cfg.train.dataset_batches.max(1) as u64;
-        let (x, t) = self.teacher.batch(self.cfg.train.batch, key)?;
-        Ok((x.col_shards(self.cfg.p)?, t.col_shards(self.cfg.p)?))
+        let (x, t) = self.teacher.batch(batch, key)?;
+        let mut total = 0.0f64;
+        let mut grads_acc: Option<Vec<Vec<Tensor>>> = None;
+        for d in 0..dp {
+            let (start, len) = dp_row_range(batch, dp, d);
+            let xs = row_slice(&x, start, len)?.col_shards(self.cfg.p)?;
+            let ts = row_slice(&t, start, len)?.col_shards(self.cfg.p)?;
+            let (loss_locals, grads) = replica_fb(&xs, &ts)?;
+            for l in &loss_locals {
+                total += l;
+            }
+            match &mut grads_acc {
+                None => grads_acc = Some(grads),
+                Some(acc) => {
+                    for (acc_rank, g_rank) in acc.iter_mut().zip(&grads) {
+                        for (a, g) in acc_rank.iter_mut().zip(g_rank) {
+                            a.add_assign(g);
+                        }
+                    }
+                }
+            }
+        }
+        Ok((total * scale, grads_acc.expect("dp >= 1")))
     }
 
-    /// One full iteration's loss and per-rank gradients (optimizer
+    /// One full iteration's loss and per-MODEL-rank gradients (optimizer
     /// parameter order), computed with the production kernels but WITHOUT
-    /// touching the trainer state.
+    /// touching the trainer state. Hybrid DP×(TP|PP) is simulated exactly
+    /// (see `dp_accumulate`), so the distributed hybrid run matches bit
+    /// for bit.
     pub fn forward_backward(&self, iter: u64) -> Result<(f64, Vec<Vec<Tensor>>)> {
-        let (xs, ts) = self.batch_shards(iter)?;
-        match &self.state {
-            RankStates::Pp(ranks) => self.pp_forward_backward(ranks, &xs, &ts),
-            RankStates::Tp(ranks) => self.tp_forward_backward(ranks, &xs, &ts),
-        }
+        self.dp_accumulate(iter, |xs, ts| match &self.state {
+            RankStates::Pp(ranks) => self.pp_forward_backward(ranks, xs, ts),
+            RankStates::Tp(ranks) => self.tp_forward_backward(ranks, xs, ts),
+        })
     }
 
     /// Advance one iteration: forward + backward + optimizer, exactly the
@@ -196,12 +239,15 @@ impl ReferenceTrainer {
 
     // -- phantom-parallel schedule ------------------------------------------
 
+    /// One replica's PP schedule over its (already row-sharded) column
+    /// shards. Returns the per-rank UNSCALED local losses in rank order
+    /// plus per-rank gradients; the caller owns scaling and DP summation.
     fn pp_forward_backward(
         &self,
         ranks: &[PhantomRankParams],
         xs: &[Tensor],
         ts: &[Tensor],
-    ) -> Result<(f64, Vec<Vec<Tensor>>)> {
+    ) -> Result<(Vec<f64>, Vec<Vec<Tensor>>)> {
         let p = self.cfg.p;
         let layers = self.cfg.model.layers;
         let geo = &self.geo;
@@ -246,9 +292,8 @@ impl ReferenceTrainer {
             g_alls.push(g_row);
         }
 
-        // loss + top-layer error compression (rank-ordered f64 sum, as the
-        // driver aggregates).
-        let scale = 1.0 / (self.cfg.train.batch as f64 * self.cfg.model.n as f64);
+        // loss + top-layer error compression (per-rank local losses; the
+        // caller folds them in the driver's canonical order).
         let mut loss_locals = Vec::with_capacity(p);
         let mut deltas = Vec::with_capacity(p);
         let mut h_outs = Vec::with_capacity(p);
@@ -269,7 +314,6 @@ impl ReferenceTrainer {
             deltas.push(delta);
             h_outs.push(h_out);
         }
-        let global = loss_locals.iter().sum::<f64>() * scale;
         let mut h_sums = Self::sim_reduce_scatter(&h_outs);
 
         // backward: per layer, per rank: pp_grads, then the fused
@@ -320,17 +364,18 @@ impl ReferenceTrainer {
         for rank_grads in grads {
             out.push(order_pp_grads(rank_grads));
         }
-        Ok((global, out))
+        Ok((loss_locals, out))
     }
 
     // -- tensor-parallel schedule -------------------------------------------
 
+    /// One replica's TP schedule; same contract as `pp_forward_backward`.
     fn tp_forward_backward(
         &self,
         ranks: &[TpRankParams],
         xs: &[Tensor],
         ts: &[Tensor],
-    ) -> Result<(f64, Vec<Vec<Tensor>>)> {
+    ) -> Result<(Vec<f64>, Vec<Vec<Tensor>>)> {
         let p = self.cfg.p;
         let layers = self.cfg.model.layers;
         let m = self.cfg.model.n / p;
@@ -357,7 +402,6 @@ impl ReferenceTrainer {
             zs.push(z_row);
         }
 
-        let scale = 1.0 / (self.cfg.train.batch as f64 * self.cfg.model.n as f64);
         let mut loss_locals = Vec::with_capacity(p);
         let mut deltas = Vec::with_capacity(p);
         for r in 0..p {
@@ -370,7 +414,6 @@ impl ReferenceTrainer {
             loss_locals.push(loss_t.data()[0] as f64);
             deltas.push(delta);
         }
-        let global = loss_locals.iter().sum::<f64>() * scale;
 
         let mut grads: Vec<Vec<Option<[Tensor; 2]>>> =
             (0..p).map(|_| (0..layers).map(|_| None).collect()).collect();
@@ -412,22 +455,22 @@ impl ReferenceTrainer {
             glist.append(&mut dbs);
             out.push(glist);
         }
-        Ok((global, out))
+        Ok((loss_locals, out))
     }
 
     // -- independent naive reference ---------------------------------------
 
     /// The same iteration computed by a second, unfused implementation:
-    /// `matmul_naive`, explicit loops, paper-equation gradient formulas.
-    /// Returns (loss, per-rank grads) in the same order as
-    /// `forward_backward`; agreement is within float tolerance, not bitwise
-    /// (summation orders differ by construction).
+    /// `matmul_naive`, explicit loops, paper-equation gradient formulas —
+    /// through the SAME DP decomposition (`dp_accumulate`). Returns
+    /// (loss, per-rank grads) in the same order as `forward_backward`;
+    /// agreement is within float tolerance, not bitwise (summation orders
+    /// differ by construction).
     pub fn naive_forward_backward(&self, iter: u64) -> Result<(f64, Vec<Vec<Tensor>>)> {
-        let (xs, ts) = self.batch_shards(iter)?;
-        match &self.state {
-            RankStates::Pp(ranks) => naive_pp(&self.cfg, ranks, &xs, &ts),
-            RankStates::Tp(ranks) => naive_tp(&self.cfg, ranks, &xs, &ts),
-        }
+        self.dp_accumulate(iter, |xs, ts| match &self.state {
+            RankStates::Pp(ranks) => naive_pp(&self.cfg, ranks, xs, ts),
+            RankStates::Tp(ranks) => naive_tp(&self.cfg, ranks, xs, ts),
+        })
     }
 }
 
@@ -515,12 +558,16 @@ fn mse_and_delta(y: &Tensor, z: &Tensor, t: &Tensor, scale: f32) -> (f64, Tensor
     (loss, delta)
 }
 
+/// One replica's naive PP math over its (already row-sharded) column
+/// shards: per-rank unscaled local losses + per-rank grads. The delta
+/// scale stays the GLOBAL batch's 1/(B*n) — exactly what the kernels bake
+/// in — so replica gradient sums reproduce the full-batch gradient.
 fn naive_pp(
     cfg: &RunConfig,
     ranks: &[PhantomRankParams],
     xs: &[Tensor],
     ts: &[Tensor],
-) -> Result<(f64, Vec<Vec<Tensor>>)> {
+) -> Result<(Vec<f64>, Vec<Vec<Tensor>>)> {
     let p = cfg.p;
     let layers = cfg.model.layers;
     let scale = 1.0 / (cfg.train.batch as f64 * cfg.model.n as f64);
@@ -561,15 +608,14 @@ fn naive_pp(
         g_alls.push(g_row);
     }
 
-    let mut loss = 0.0f64;
+    let mut loss_locals = Vec::with_capacity(p);
     let mut deltas = Vec::with_capacity(p);
     for r in 0..p {
         let (lr, d) =
             mse_and_delta(&ys[layers - 1][r], &zs[layers - 1][r], &ts[r], scale as f32);
-        loss += lr;
+        loss_locals.push(lr);
         deltas.push(d);
     }
-    let global = loss * scale;
 
     // h_out[r] = delta_r · D_r[i]ᵀ per destination i; h_sum by slot sum.
     let h_sum_of = |deltas: &[Tensor], layer: usize| -> Result<Vec<Tensor>> {
@@ -630,15 +676,16 @@ fn naive_pp(
     for rank_grads in grads {
         out.push(order_pp_grads(rank_grads));
     }
-    Ok((global, out))
+    Ok((loss_locals, out))
 }
 
+/// One replica's naive TP math; same contract as `naive_pp`.
 fn naive_tp(
     cfg: &RunConfig,
     ranks: &[TpRankParams],
     xs: &[Tensor],
     ts: &[Tensor],
-) -> Result<(f64, Vec<Vec<Tensor>>)> {
+) -> Result<(Vec<f64>, Vec<Vec<Tensor>>)> {
     let p = cfg.p;
     let layers = cfg.model.layers;
     let m = cfg.model.n / p;
@@ -660,14 +707,13 @@ fn naive_tp(
         zs.push(z_row);
     }
 
-    let mut loss = 0.0f64;
+    let mut loss_locals = Vec::with_capacity(p);
     let mut deltas = Vec::with_capacity(p);
     for r in 0..p {
         let (lr, d) = mse_and_delta(&y_shards[r], &zs[layers - 1][r], &ts[r], scale as f32);
-        loss += lr;
+        loss_locals.push(lr);
         deltas.push(d);
     }
-    let global = loss * scale;
 
     let mut grads: Vec<Vec<Option<[Tensor; 2]>>> =
         (0..p).map(|_| (0..layers).map(|_| None).collect()).collect();
@@ -708,7 +754,7 @@ fn naive_tp(
         glist.append(&mut dbs);
         out.push(glist);
     }
-    Ok((global, out))
+    Ok((loss_locals, out))
 }
 
 #[cfg(test)]
@@ -771,5 +817,64 @@ mod tests {
             o.run(4).unwrap().to_vec()
         };
         assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn hybrid_oracle_trains_and_matches_full_batch_gradients() {
+        // The DP decomposition is a pure re-bracketing of the full-batch
+        // sums: per-replica gradients (computed at the GLOBAL loss scale)
+        // summed across replicas must equal the dp=1 gradients within
+        // float tolerance — including an uneven split (batch % dp != 0).
+        for mode in [Parallelism::Phantom, Parallelism::Tensor] {
+            let mut cfg = preset("tiny", mode).unwrap();
+            cfg.train.batch = 7; // odd: dp=2 rows split 4 + 3
+            for dp in [2usize, 4] {
+                let mut full = cfg.clone();
+                full.dp = 1;
+                let mut hybrid = cfg.clone();
+                hybrid.dp = dp;
+                let o_full = ReferenceTrainer::new(&full).unwrap();
+                let o_hyb = ReferenceTrainer::new(&hybrid).unwrap();
+                let (l_full, g_full) = o_full.forward_backward(0).unwrap();
+                let (l_hyb, g_hyb) = o_hyb.forward_backward(0).unwrap();
+                let rel = (l_full - l_hyb).abs() / l_full.abs().max(1e-12);
+                assert!(rel < 1e-5, "{} dp={dp}: loss {l_full} vs {l_hyb}", mode.name());
+                for (r, (a, b)) in g_full.iter().zip(&g_hyb).enumerate() {
+                    for (i, (ta, tb)) in a.iter().zip(b).enumerate() {
+                        assert_close(ta.data(), tb.data(), 1e-3, 1e-5).unwrap_or_else(|e| {
+                            panic!("{} dp={dp} rank {r} grad {i}: {e}", mode.name())
+                        });
+                    }
+                }
+            }
+            // And the hybrid oracle actually trains.
+            let mut hybrid = cfg.clone();
+            hybrid.dp = 2;
+            let mut o = ReferenceTrainer::new(&hybrid).unwrap();
+            o.run(5).unwrap();
+            assert!(o.losses[4] < o.losses[0], "{}: {:?}", mode.name(), o.losses);
+        }
+    }
+
+    #[test]
+    fn hybrid_oracle_kernel_and_naive_agree() {
+        for mode in [Parallelism::Phantom, Parallelism::Tensor] {
+            let mut cfg = preset("tiny", mode).unwrap();
+            cfg.train.batch = 6;
+            cfg.dp = 2;
+            let mut oracle = ReferenceTrainer::new(&cfg).unwrap();
+            oracle.step().unwrap();
+            let (lk, gk) = oracle.forward_backward(oracle.iterations()).unwrap();
+            let (ln, gn) = oracle.naive_forward_backward(oracle.iterations()).unwrap();
+            let rel = (lk - ln).abs() / lk.abs().max(1e-12);
+            assert!(rel < 1e-5, "{}: loss {lk} vs naive {ln}", mode.name());
+            for (r, (a, b)) in gk.iter().zip(&gn).enumerate() {
+                for (i, (ta, tb)) in a.iter().zip(b).enumerate() {
+                    assert_close(ta.data(), tb.data(), 1e-3, 1e-5).unwrap_or_else(|e| {
+                        panic!("{} rank {r} grad {i}: {e}", mode.name())
+                    });
+                }
+            }
+        }
     }
 }

@@ -7,6 +7,7 @@
 /// Summary statistics over a sample.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Summary {
+    /// Finite samples the statistics cover.
     pub n: usize,
     pub mean: f64,
     pub std: f64,
@@ -14,15 +15,36 @@ pub struct Summary {
     pub max: f64,
     pub p50: f64,
     pub p95: f64,
+    /// Non-finite samples (NaN/inf) dropped from the statistics. A single
+    /// NaN must degrade the summary, not panic the whole serve/bench
+    /// report: the old `partial_cmp(..).unwrap()` sort did exactly that.
+    pub dropped: usize,
 }
 
 pub fn summarize(xs: &[f64]) -> Summary {
     assert!(!xs.is_empty(), "summarize: empty sample");
-    let n = xs.len();
-    let mean = xs.iter().sum::<f64>() / n as f64;
-    let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
-    let mut sorted: Vec<f64> = xs.to_vec();
-    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mut sorted: Vec<f64> = xs.iter().copied().filter(|x| x.is_finite()).collect();
+    let dropped = xs.len() - sorted.len();
+    if sorted.is_empty() {
+        // Every sample was NaN/inf: report that honestly instead of
+        // crashing — all statistics are NaN, n = 0, dropped = len.
+        return Summary {
+            n: 0,
+            mean: f64::NAN,
+            std: f64::NAN,
+            min: f64::NAN,
+            max: f64::NAN,
+            p50: f64::NAN,
+            p95: f64::NAN,
+            dropped,
+        };
+    }
+    // total_cmp is a total order: no panic even if the filter above is
+    // ever relaxed.
+    sorted.sort_by(f64::total_cmp);
+    let n = sorted.len();
+    let mean = sorted.iter().sum::<f64>() / n as f64;
+    let var = sorted.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
     Summary {
         n,
         mean,
@@ -31,6 +53,7 @@ pub fn summarize(xs: &[f64]) -> Summary {
         max: sorted[n - 1],
         p50: percentile_sorted(&sorted, 50.0),
         p95: percentile_sorted(&sorted, 95.0),
+        dropped,
     }
 }
 
@@ -135,6 +158,33 @@ mod tests {
         assert_eq!(s.min, 1.0);
         assert_eq!(s.max, 5.0);
         assert!((s.p50 - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summarize_survives_nan_samples() {
+        // Regression: a single NaN used to panic the whole summary via
+        // `partial_cmp(..).unwrap()` in the sort comparator.
+        let s = summarize(&[3.0, f64::NAN, 1.0, 2.0]);
+        assert_eq!(s.n, 3);
+        assert_eq!(s.dropped, 1);
+        assert!((s.mean - 2.0).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 3.0);
+        assert!((s.p50 - 2.0).abs() < 1e-12);
+
+        // Infinities are dropped and counted too.
+        let s = summarize(&[f64::INFINITY, 5.0]);
+        assert_eq!((s.n, s.dropped), (1, 1));
+        assert_eq!(s.max, 5.0);
+
+        // All-NaN input degrades honestly instead of crashing.
+        let s = summarize(&[f64::NAN, f64::NAN]);
+        assert_eq!((s.n, s.dropped), (0, 2));
+        assert!(s.mean.is_nan() && s.p95.is_nan());
+
+        // Clean samples are unaffected.
+        let s = summarize(&[1.0, 2.0]);
+        assert_eq!(s.dropped, 0);
     }
 
     #[test]

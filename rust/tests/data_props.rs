@@ -1,0 +1,121 @@
+//! Property tests for the hybrid data layout (ISSUE 5): shard boundaries
+//! key on (dp_replica, model_rank) only, and re-assembling every DP
+//! replica's row range × every model rank's column shard reproduces
+//! `Teacher::batch` bitwise — including when `batch % dp != 0`.
+
+use phantom::data::{dp_row_range, BatchCache, Teacher};
+use phantom::tensor::Tensor;
+use phantom::util::proptest::{check, PropConfig};
+
+/// Row-concatenate [B_d, n] tensors into one [B, n] tensor.
+fn row_concat(rows: &[Tensor]) -> Tensor {
+    let n = rows[0].shape()[1];
+    let mut data = Vec::new();
+    let mut b = 0;
+    for r in rows {
+        assert_eq!(r.shape()[1], n);
+        b += r.shape()[0];
+        data.extend_from_slice(r.data());
+    }
+    Tensor::from_vec(&[b, n], data).unwrap()
+}
+
+#[test]
+fn hybrid_shards_reassemble_the_batch_bitwise_for_any_remainder() {
+    let cfg = PropConfig { cases: 24, ..PropConfig::default() };
+    check("hybrid shard reassembly", cfg, |rng| {
+        let p = rng.int_in(1, 4) as usize;
+        let n = p * rng.int_in(2, 6) as usize;
+        let dp = rng.int_in(1, 4) as usize;
+        // batch >= dp, deliberately often NOT divisible by dp.
+        let batch = dp + rng.int_in(0, 7) as usize;
+        let seed = rng.next_u64();
+        let iter = rng.int_in(0, 5);
+
+        let teacher = Teacher::new(n, seed);
+        let (x, y) = teacher.batch(batch, iter).map_err(|e| e.to_string())?;
+
+        // Row ranges partition the batch contiguously and in order.
+        let mut covered = 0usize;
+        for d in 0..dp {
+            let (start, len) = dp_row_range(batch, dp, d);
+            if start != covered {
+                return Err(format!(
+                    "batch={batch} dp={dp} d={d}: range starts at {start}, want {covered}"
+                ));
+            }
+            covered += len;
+        }
+        if covered != batch {
+            return Err(format!("batch={batch} dp={dp}: ranges cover {covered} rows"));
+        }
+
+        // Reassemble: for each replica, column shards glue back into the
+        // replica's rows; replica rows glue back into the full batch.
+        let mut x_rows = Vec::with_capacity(dp);
+        let mut y_rows = Vec::with_capacity(dp);
+        for d in 0..dp {
+            let mut xs = Vec::with_capacity(p);
+            let mut ys = Vec::with_capacity(p);
+            for r in 0..p {
+                let (xr, yr) = teacher
+                    .hybrid_shard(batch, iter, r, p, d, dp)
+                    .map_err(|e| e.to_string())?;
+                // Model-group peers see the same rows: shard shape is the
+                // replica's row count x n/p.
+                let (_, want_len) = dp_row_range(batch, dp, d);
+                if xr.shape() != &[want_len, n / p] {
+                    return Err(format!(
+                        "d={d} r={r}: shard shaped {:?}, want [{want_len}, {}]",
+                        xr.shape(),
+                        n / p
+                    ));
+                }
+                xs.push(xr);
+                ys.push(yr);
+            }
+            x_rows.push(Tensor::from_col_shards(&xs).map_err(|e| e.to_string())?);
+            y_rows.push(Tensor::from_col_shards(&ys).map_err(|e| e.to_string())?);
+        }
+        let x_back = row_concat(&x_rows);
+        let y_back = row_concat(&y_rows);
+        for (i, (a, b)) in x_back.data().iter().zip(x.data()).enumerate() {
+            if a.to_bits() != b.to_bits() {
+                return Err(format!("x[{i}]: {a} != {b} (bitwise contract)"));
+            }
+        }
+        for (i, (a, b)) in y_back.data().iter().zip(y.data()).enumerate() {
+            if a.to_bits() != b.to_bits() {
+                return Err(format!("y[{i}]: {a} != {b} (bitwise contract)"));
+            }
+        }
+
+        // The shared BatchCache serves the identical hybrid shards.
+        let cache = BatchCache::new(teacher.clone(), batch, p, dp, 8);
+        for d in 0..dp {
+            for r in 0..p {
+                let (xc, yc) = cache.shard(iter, d * p + r).map_err(|e| e.to_string())?;
+                let (xd, yd) = teacher
+                    .hybrid_shard(batch, iter % 8, r, p, d, dp)
+                    .map_err(|e| e.to_string())?;
+                if xc != xd || yc != yd {
+                    return Err(format!("cache diverges from direct shard at d={d} r={r}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn pure_batch_shard_is_the_dp1_special_case() {
+    // `batch_shard` must stay exactly `hybrid_shard(.., dp_rank=0, dp=1)`:
+    // the pre-hybrid data path is the dp=1 slice of the hybrid one.
+    let teacher = Teacher::new(12, 77);
+    for rank in 0..3 {
+        let (xa, ya) = teacher.batch_shard(5, 2, rank, 3).unwrap();
+        let (xb, yb) = teacher.hybrid_shard(5, 2, rank, 3, 0, 1).unwrap();
+        assert_eq!(xa, xb);
+        assert_eq!(ya, yb);
+    }
+}

@@ -1,0 +1,294 @@
+//! Hybrid DP×(TP|PP) end-to-end suite (ISSUE 5):
+//!
+//! * distributed hybrid training ≡ the single-thread reference oracle,
+//!   loss for loss BIT FOR BIT, for dp ∈ {1, 2, 4} in both parallelism
+//!   modes — including a batch % dp != 0 split;
+//! * the energy ledger reports the DP gradient All-Reduce as its own
+//!   bucket (DpComm), the four buckets partition virtual time, and dp = 1
+//!   runs never touch the DP fabric (bucket and stats identically zero);
+//! * hybrid checkpoint → resume is bit-identical, and a hybrid snapshot
+//!   reshard collapses the verified replicas into a pure layout that is
+//!   forward-equivalent;
+//! * hybrid smoke numbers (energy split, DP traffic) are recorded to
+//!   BENCH_hybrid.json at the repo root for the CI artifact.
+
+use std::path::PathBuf;
+
+use phantom::ckpt::{collapse_dp, reshard, Snapshot};
+use phantom::config::{
+    CkptPolicy, HardwareConfig, ModelConfig, OptimizerConfig, Parallelism, RunConfig,
+    TrainConfig,
+};
+use phantom::coordinator::{self, TrainOptions, TrainReport};
+use phantom::runtime::ExecServer;
+use phantom::tensor::Tensor;
+use phantom::testkit::ReferenceTrainer;
+use phantom::util::prng::Prng;
+
+/// A small hybrid-friendly config: n=12 over p=2 model ranks, batch 5 so
+/// dp ∈ {2, 4} exercises the remainder row split (5 = 3+2 = 2+1+1+1).
+fn base_cfg(mode: Parallelism, dp: usize, iters: usize) -> RunConfig {
+    RunConfig {
+        mode,
+        p: 2,
+        dp,
+        model: ModelConfig { n: 12, layers: 2, k: 2 },
+        train: TrainConfig {
+            batch: 5,
+            optimizer: OptimizerConfig::Momentum { lr: 0.05, beta: 0.9 },
+            seed: 0x5EED_0005,
+            max_iters: iters,
+            target_loss: None,
+            warmup_iters: 1,
+            dataset_batches: 2,
+        },
+        hardware: HardwareConfig::frontier_measured(),
+        artifact: Some("hybrid-case".to_string()),
+        backend: Default::default(),
+    }
+}
+
+fn train(cfg: &RunConfig) -> TrainReport {
+    let server = ExecServer::for_run(cfg).expect("backend");
+    coordinator::train(cfg, &server).expect("train")
+}
+
+#[test]
+fn hybrid_training_matches_the_oracle_bitwise_all_dp() {
+    for mode in [Parallelism::Phantom, Parallelism::Tensor] {
+        for dp in [1usize, 2, 4] {
+            let cfg = base_cfg(mode, dp, 3);
+            let report = train(&cfg);
+            assert_eq!(report.dp, dp);
+            assert_eq!(report.per_rank.len(), cfg.p * dp, "one report per world rank");
+
+            let mut oracle = ReferenceTrainer::new(&cfg).expect("oracle");
+            oracle.run(3).expect("oracle run");
+            assert_eq!(report.losses.len(), oracle.losses.len());
+            for (i, (a, b)) in report.losses.iter().zip(&oracle.losses).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "{} dp={dp} iter {i}: distributed {a} vs oracle {b}",
+                    mode.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn dp_gradient_allreduce_is_its_own_energy_bucket() {
+    let iters = 3usize;
+    for mode in [Parallelism::Phantom, Parallelism::Tensor] {
+        // dp = 1: the DP fabric is never touched — bucket and stats zero.
+        let pure = train(&base_cfg(mode, 1, iters));
+        for r in &pure.per_rank {
+            assert_eq!(r.ledger.dp_comm_s, 0.0, "{}: dp=1 must not charge DpComm", mode.name());
+            assert_eq!(r.dp_stats.collectives(), 0);
+            assert_eq!(r.dp_stats.floats_moved, 0);
+        }
+
+        // dp = 2: one DP all-reduce per iteration on every world rank,
+        // charged to the DpComm bucket; buckets partition the clock.
+        let cfg = base_cfg(mode, 2, iters);
+        let hybrid = train(&cfg);
+        let m = cfg.model.n / cfg.p;
+        // The flat gradient message: every parameter tensor, including the
+        // frozen zero D slot PP ships (it is part of the flattened list).
+        let msg = match mode {
+            Parallelism::Phantom => (m * m + m * cfg.model.k + cfg.p * cfg.model.k * m + m)
+                * cfg.model.layers,
+            Parallelism::Tensor => (cfg.model.n * m + m) * cfg.model.layers,
+        } as u64;
+        for r in &hybrid.per_rank {
+            assert!(r.ledger.dp_comm_s > 0.0, "{}: rank {} has no DpComm", mode.name(), r.rank);
+            assert_eq!(r.dp_stats.all_reduces, iters as u64, "one DP sync per iteration");
+            assert_eq!(r.dp_stats.floats_moved, iters as u64 * msg, "{}", mode.name());
+            let l = &r.ledger;
+            let bucket_sum = l.busy_s + l.comm_s + l.idle_s + l.dp_comm_s;
+            assert!(
+                (bucket_sum - l.end_s).abs() <= 1e-9 * l.end_s.max(1.0),
+                "rank {}: buckets {bucket_sum} != clock {}",
+                r.rank,
+                l.end_s
+            );
+            // Model-parallel traffic stays in its own bucket.
+            assert!(l.comm_s > 0.0);
+        }
+    }
+}
+
+#[test]
+fn hybrid_ckpt_resume_is_bit_identical_and_reshard_collapses() {
+    let dir = std::env::temp_dir().join(format!("phantom-hybrid-ckpt-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+
+    let cfg = base_cfg(Parallelism::Phantom, 2, 4);
+    let server = ExecServer::for_run(&cfg).expect("backend");
+    let baseline = coordinator::train(&cfg, &server).expect("baseline").losses;
+
+    // Periodic snapshots, then resume from the mid-run snapshot.
+    let snap_run = coordinator::train_with(
+        &cfg,
+        &server,
+        TrainOptions {
+            ckpt: Some(CkptPolicy { every: 2, dir: dir.clone() }),
+            ..Default::default()
+        },
+    )
+    .expect("snapshotting run");
+    assert_eq!(snap_run.losses, baseline, "snapshotting must not perturb the math");
+
+    let snap = Snapshot::load(&dir.join("ckpt-000002")).expect("mid-run snapshot");
+    assert_eq!(snap.config.dp, 2);
+    assert_eq!(snap.shards.len(), cfg.p * 2, "one shard per world rank");
+    let resumed = coordinator::train_with(
+        &cfg,
+        &server,
+        TrainOptions { resume: Some(snap.clone()), ..Default::default() },
+    )
+    .expect("resumed run")
+    .losses;
+    assert_eq!(
+        resumed.iter().map(|l| l.to_bits()).collect::<Vec<_>>(),
+        baseline.iter().map(|l| l.to_bits()).collect::<Vec<_>>(),
+        "hybrid resume must continue bit-identically"
+    );
+
+    // Resuming into a different dp is refused (the layout shapes the math).
+    let mut wrong = cfg.clone();
+    wrong.dp = 1;
+    let err = coordinator::train_with(
+        &wrong,
+        &server,
+        TrainOptions { resume: Some(snap.clone()), ..Default::default() },
+    )
+    .expect_err("dp mismatch must be rejected");
+    assert!(format!("{err:#}").contains("dp="), "{err:#}");
+
+    // Trained DP replicas stayed weight-identical: collapse verifies them
+    // bitwise; reshard to a pure TP layout stays forward-equivalent.
+    let final_snap = Snapshot::load(&dir.join("ckpt-000004")).expect("final snapshot");
+    let pure = collapse_dp(&final_snap).expect("replicas must be weight-identical");
+    assert_eq!(pure.config.dp, 1);
+    let as_tp = reshard(&final_snap, 1, Parallelism::Tensor).expect("hybrid -> dense TP");
+    assert_eq!(as_tp.config.dp, 1);
+    let mut rng = Prng::new(0xE0E0);
+    let x = Tensor::randn(&[4, cfg.model.n], 1.0, &mut rng);
+    let y_src = final_snap.forward_host(&x).unwrap();
+    let y_pure = pure.forward_host(&x).unwrap();
+    let y_tp = as_tp.forward_host(&x).unwrap();
+    assert_eq!(y_src, y_pure, "collapse keeps replica 0's forward exactly");
+    for (a, b) in y_src.data().iter().zip(y_tp.data()) {
+        assert!(
+            (a - b).abs() / (1e-4 + a.abs().max(b.abs())) < 1e-3,
+            "reshard diverged: {a} vs {b}"
+        );
+    }
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn hybrid_crash_wakes_dp_peers_promptly() {
+    use phantom::testkit::FaultPlan;
+
+    // Crash world rank 1 (replica 0, model rank 1) mid-train on a dp=2
+    // grid. Its model group is poisoned by the fault path; its DP group
+    // {1, 3} must be woken by the driver's DP poison guard — the run has
+    // to surface the structured injected-fault error in wall-clock
+    // seconds, not ride out the 60 s rendezvous timeout.
+    let cfg = base_cfg(Parallelism::Phantom, 2, 6);
+    let server = ExecServer::for_run(&cfg).expect("backend");
+    let plan = FaultPlan::crash_at_iter(1, 2, cfg.mode, cfg.model.layers);
+    let t0 = std::time::Instant::now();
+    let err = coordinator::train_with(
+        &cfg,
+        &server,
+        TrainOptions { faults: Some(plan.injector_factory()), ..Default::default() },
+    )
+    .expect_err("the injected crash must surface as an error");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("injected fault"), "error lost the fault payload: {msg}");
+    assert!(msg.contains("rank 1"), "error must name the world rank: {msg}");
+    assert!(
+        t0.elapsed() < std::time::Duration::from_secs(30),
+        "DP peers must wake via poison, not the 60 s rendezvous timeout ({:?})",
+        t0.elapsed()
+    );
+}
+
+#[test]
+fn serve_pool_hot_swaps_hybrid_snapshots_via_collapse() {
+    use phantom::config::ServeConfig;
+    use phantom::serve::RankPool;
+
+    // The pool itself is model-parallel; a HYBRID snapshot hot-swapped
+    // into it must be collapsed (replicas verified bitwise) and then serve
+    // exactly like the equivalent pure dp=1 snapshot.
+    let cfg = base_cfg(Parallelism::Phantom, 1, 2);
+    let server = ExecServer::for_run(&cfg).expect("backend");
+    let scfg = ServeConfig {
+        max_batch: cfg.train.batch,
+        queue_depth: 4 * cfg.train.batch,
+        linger_s: 1e-3,
+        mode: cfg.mode,
+    };
+    let mut hybrid_cfg = cfg.clone();
+    hybrid_cfg.dp = 2;
+    hybrid_cfg.train.seed ^= 0xA5; // distinguishable from the pool's init
+    let hybrid_snap = Snapshot::init(&hybrid_cfg).expect("hybrid snapshot");
+    let mut pure_cfg = hybrid_cfg.clone();
+    pure_cfg.dp = 1;
+    let pure_snap = Snapshot::init(&pure_cfg).expect("pure snapshot");
+
+    let mut rng = Prng::new(0x5E11);
+    let x = Tensor::randn(&[cfg.train.batch, cfg.model.n], 1.0, &mut rng);
+
+    let mut pool = RankPool::start(&cfg, &scfg, &server).expect("pool");
+    let (y_before, _) = pool.execute(pool.free_s(), &x).expect("pre-swap batch");
+    pool.load_weights(&hybrid_snap).expect("hybrid hot swap");
+    let (y_hybrid, _) = pool.execute(pool.free_s(), &x).expect("post-swap batch");
+    pool.shutdown().expect("pool shutdown");
+
+    let mut pool2 = RankPool::start(&cfg, &scfg, &server).expect("pool2");
+    pool2.load_weights(&pure_snap).expect("pure hot swap");
+    let (y_pure, _) = pool2.execute(pool2.free_s(), &x).expect("pure batch");
+    pool2.shutdown().expect("pool2 shutdown");
+
+    assert_ne!(y_before, y_hybrid, "the swap must be observable");
+    assert_eq!(y_hybrid, y_pure, "hybrid swap must serve replica 0's weights exactly");
+}
+
+/// Hybrid smoke numbers for CI: DP×TP and DP×PP at dp=2 — final loss,
+/// energy split including the DP bucket, and DP traffic. Written to
+/// BENCH_hybrid.json at the repo root (uploaded as a CI artifact).
+#[test]
+fn bench_hybrid_records() {
+    let mut records: Vec<(String, f64)> = Vec::new();
+    for mode in [Parallelism::Phantom, Parallelism::Tensor] {
+        let cfg = base_cfg(mode, 2, 4);
+        let report = train(&cfg);
+        let tag = mode.name();
+        let busy: f64 = report.per_rank.iter().map(|r| r.ledger.busy_s).sum();
+        let comm: f64 = report.per_rank.iter().map(|r| r.ledger.comm_s).sum();
+        let dp_comm: f64 = report.per_rank.iter().map(|r| r.ledger.dp_comm_s).sum();
+        let dp_floats: u64 = report.per_rank.iter().map(|r| r.dp_stats.floats_moved).sum();
+        assert!(dp_comm > 0.0);
+        records.push((format!("hybrid_{tag}_dp2_final_loss"), *report.losses.last().unwrap()));
+        records.push((format!("hybrid_{tag}_dp2_energy_train_j"), report.energy_train_j));
+        records.push((format!("hybrid_{tag}_dp2_busy_s"), busy));
+        records.push((format!("hybrid_{tag}_dp2_comm_s"), comm));
+        records.push((format!("hybrid_{tag}_dp2_dp_comm_s"), dp_comm));
+        records.push((format!("hybrid_{tag}_dp2_dp_floats_moved"), dp_floats as f64));
+        // DP sync share of all communication time: the Huber-style
+        // first-order term this PR makes visible.
+        records.push((
+            format!("hybrid_{tag}_dp2_dp_share_of_comm"),
+            dp_comm / (comm + dp_comm).max(1e-12),
+        ));
+    }
+    let path = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../BENCH_hybrid.json");
+    phantom::serve::write_records_json(&path, &records).expect("write BENCH_hybrid.json");
+}
