@@ -1,0 +1,96 @@
+//! `cargo bench` target: the GEMM kernel pass in detail.
+//!
+//! Measures, per tracked shape: the naive oracle, the frozen seed kernel,
+//! and the live tuned engine — plus the transpose families (`Aᵀ·B`,
+//! `A·Bᵀ`), which the seed computed with naive loops and the engine now
+//! routes through the same packed SIMD path. Emits BENCH_kernels.json at
+//! the repo root with the same key schema as tests/kernel_gate.rs (the
+//! tier-1 writer), so the perf trajectory exists whichever one ran last.
+
+mod bench_util;
+
+use std::path::PathBuf;
+
+use bench_util::{write_records_json, Bench};
+use phantom::tensor::seed::gemm_acc_seed;
+use phantom::tensor::simd::{self, Isa};
+use phantom::tensor::tune::{self, TRACKED_SHAPES};
+use phantom::tensor::{gemm_a_bt_acc, gemm_acc, gemm_at_b_acc, Tensor};
+use phantom::util::prng::Prng;
+
+fn main() {
+    let isa = simd::active();
+    tune::ensure_loaded();
+    eprintln!(
+        "kernel bench: ISA {}, {} tuned shape classes",
+        isa.name(),
+        tune::installed_classes()
+    );
+    let mut records: Vec<(String, f64)> = Vec::new();
+    let mut rng = Prng::new(0x6A7E);
+    let mut geomean_seed_log = 0.0f64;
+    let mut geomean_naive_log = 0.0f64;
+
+    let mut b = Bench::new("GEMM kernels — naive vs seed vs tuned engine (per tracked shape)");
+    for &(m, k, n) in TRACKED_SHAPES {
+        let a = Tensor::randn(&[m, k], 1.0, &mut rng);
+        let x = Tensor::randn(&[k, n], 1.0, &mut rng);
+        let shape = format!("{m}x{k}x{n}");
+        let big = m * k * n >= 1 << 26;
+        let (naive_iters, fast_iters) = if big { (2, 8) } else { (4, 16) };
+
+        let naive = b.case(&format!("naive {shape}"), 1, naive_iters, || {
+            let _ = a.matmul_naive(&x).unwrap();
+        });
+        let mut out = vec![0.0f32; m * n];
+        let seed = b.case(&format!("seed {shape}"), 2, fast_iters, || {
+            out.fill(0.0);
+            gemm_acc_seed(a.data(), m, k, x.data(), n, &mut out);
+        });
+        let tuned = b.case(&format!("tuned {shape}"), 2, fast_iters, || {
+            out.fill(0.0);
+            gemm_acc(a.data(), m, k, x.data(), n, &mut out);
+        });
+
+        records.push((format!("gemm_naive_{shape}_ns"), naive.mean * 1e9));
+        records.push((format!("gemm_seed_{shape}_ns"), seed.mean * 1e9));
+        records.push((format!("gemm_{shape}_ns"), tuned.mean * 1e9));
+        records.push((format!("speedup_vs_naive_{shape}"), naive.mean / tuned.mean));
+        records.push((format!("speedup_vs_seed_{shape}"), seed.mean / tuned.mean));
+        geomean_seed_log += (seed.mean / tuned.mean).ln();
+        geomean_naive_log += (naive.mean / tuned.mean).ln();
+    }
+    b.finish();
+
+    // Transpose families at a representative backward-pass shape: the seed
+    // ran these as naive rank-1 / dot loops; the engine packs them.
+    let (m, k, n) = (256, 256, 256);
+    let mut b = Bench::new("GEMM transpose families — packed strided views");
+    let at = Tensor::randn(&[k, m], 1.0, &mut rng); // Aᵀ·B operand, stored [k, m]
+    let bt = Tensor::randn(&[n, k], 1.0, &mut rng); // A·Bᵀ operand, stored [n, k]
+    let lhs = Tensor::randn(&[m, k], 1.0, &mut rng);
+    let rhs = Tensor::randn(&[k, n], 1.0, &mut rng);
+    let mut out = vec![0.0f32; m * n];
+    let s = b.case(&format!("at_b {k}x{m} @ {k}x{n}"), 2, 16, || {
+        out.fill(0.0);
+        gemm_at_b_acc(at.data(), k, m, rhs.data(), n, &mut out);
+    });
+    records.push((format!("gemm_at_b_{m}x{k}x{n}_ns"), s.mean * 1e9));
+    let s = b.case(&format!("a_bt {m}x{k} @ ({n}x{k})ᵀ"), 2, 16, || {
+        out.fill(0.0);
+        gemm_a_bt_acc(lhs.data(), m, k, bt.data(), n, &mut out);
+    });
+    records.push((format!("gemm_a_bt_{m}x{k}x{n}_ns"), s.mean * 1e9));
+    b.finish();
+
+    let geomean_seed = (geomean_seed_log / TRACKED_SHAPES.len() as f64).exp();
+    let geomean_naive = (geomean_naive_log / TRACKED_SHAPES.len() as f64).exp();
+    records.push(("geomean_speedup_vs_seed".to_string(), geomean_seed));
+    records.push(("geomean_speedup_vs_naive".to_string(), geomean_naive));
+    records.push(("isa_avx2".to_string(), if isa == Isa::Avx2Fma { 1.0 } else { 0.0 }));
+    records.push(("tuned_classes".to_string(), tune::installed_classes() as f64));
+    eprintln!("geomean speedup: {geomean_seed:.2}x vs seed, {geomean_naive:.2}x vs naive");
+
+    let path = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../BENCH_kernels.json");
+    write_records_json(&path, &records);
+}

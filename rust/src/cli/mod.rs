@@ -157,6 +157,17 @@ COMMANDS:
     inspect      List artifact configs in the manifest
                    --backend <native|xla> which manifest           [native]
     fit-comm     Fit the collective model (Table III) and print constants
+    tune         Autotune the GEMM kernels and persist the winners
+                   --shapes <set|list>    tracked | tiny | MxKxN[,MxKxN...]
+                                          [tracked]
+                   --iters <N>            timing repeats per candidate [5]
+                   --quick                small candidate grid (CI smoke)
+                   --fresh                discard an existing manifest
+                                          instead of merging into it
+                   --out <file.json>      manifest path [phantom-tune.json,
+                                          or $PHANTOM_TUNE when set]
+                   --show                 print the active ISA + manifest
+                                          and exit (no benchmarking)
     help         Show this text
 ";
 

@@ -41,6 +41,7 @@ fn run(argv: Vec<String>) -> Result<()> {
         "predict" => cmd_predict(&args),
         "inspect" => cmd_inspect(&args),
         "fit-comm" => cmd_fit_comm(),
+        "tune" => cmd_tune(&args),
         "help" | "--help" | "-h" => {
             print!("{USAGE}");
             Ok(())
@@ -708,5 +709,91 @@ fn cmd_inspect(args: &Args) -> Result<()> {
 fn cmd_fit_comm() -> Result<()> {
     let result = experiments::run("table3", None)?;
     print!("{}", result.render_markdown());
+    Ok(())
+}
+
+fn cmd_tune(args: &Args) -> Result<()> {
+    use phantom::tensor::tune;
+
+    args.check_known(&["shapes", "iters", "out", "quick", "fresh", "show"])?;
+    let out_path = args
+        .opt("out")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(tune::default_manifest_path);
+
+    if args.flag("show") {
+        let isa = phantom::tensor::simd::active();
+        println!("active ISA: {}", isa.name());
+        match tune::Tuning::load(&out_path)? {
+            None => println!("no tuning manifest at {} (defaults in use)", out_path.display()),
+            Some(t) => {
+                println!("manifest: {} (tuned on {})", out_path.display(), t.isa);
+                let mut tab = Table::new(
+                    "GEMM tuning manifest",
+                    &["class", "mr", "kc", "jc", "max_bands", "par_min_flops"],
+                );
+                for (key, p) in &t.classes {
+                    tab.row(vec![
+                        tune::class_name(*key),
+                        p.mr.to_string(),
+                        p.kc.to_string(),
+                        p.jc.to_string(),
+                        p.max_bands.to_string(),
+                        p.par_min_flops.to_string(),
+                    ]);
+                }
+                print!("{}", tab.markdown());
+            }
+        }
+        return Ok(());
+    }
+
+    let shapes = tune::parse_shapes_arg(args.opt("shapes").unwrap_or("tracked"))?;
+    let iters = args.opt_parse::<usize>("iters")?.unwrap_or(5);
+    let quick = args.flag("quick");
+    let isa = phantom::tensor::simd::active();
+    eprintln!(
+        "tune: ISA {}, {} shape(s), {} iters/candidate{}",
+        isa.name(),
+        shapes.len(),
+        iters,
+        if quick { ", quick grid" } else { "" }
+    );
+
+    let (mut tuning, outcomes) = tune::autotune(&shapes, iters, quick);
+
+    // Merge into an existing manifest unless --fresh: re-tuning one shape
+    // set must not throw away winners for the others.
+    if !args.flag("fresh") {
+        match tune::Tuning::load(&out_path) {
+            Ok(Some(prev)) => {
+                for (key, params) in prev.classes {
+                    tuning.classes.entry(key).or_insert(params);
+                }
+            }
+            Ok(None) => {}
+            Err(e) => eprintln!("tune: warning: not merging unreadable manifest: {e}"),
+        }
+    }
+    tuning.save(&out_path)?;
+
+    let mut tab = Table::new(
+        &format!("Autotune — ISA {}", isa.name()),
+        &["shape", "class", "mr", "kc", "jc", "GFLOP/s", "vs default"],
+    );
+    for o in &outcomes {
+        let (m, k, n) = o.shape;
+        tab.row(vec![
+            format!("{m}x{k}x{n}"),
+            tune::class_name(o.class),
+            o.best.mr.to_string(),
+            o.best.kc.to_string(),
+            o.best.jc.to_string(),
+            format!("{:.2}", o.gflops()),
+            format!("{:.2}x", o.speedup_vs_default()),
+        ]);
+    }
+    print!("{}", tab.markdown());
+    println!("wrote {} ({} shape classes)", out_path.display(), tuning.classes.len());
     Ok(())
 }

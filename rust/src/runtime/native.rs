@@ -61,6 +61,10 @@ pub struct NativeBackend {
 
 impl NativeBackend {
     pub fn new(manifest: Manifest) -> NativeBackend {
+        // Pick up the persisted GEMM tuning manifest (phantom-tune.json /
+        // $PHANTOM_TUNE) once per process, so every kernel this backend
+        // dispatches runs with tuned block/thread parameters.
+        crate::tensor::tune::ensure_loaded();
         NativeBackend { manifest, gate: Mutex::new(()) }
     }
 }

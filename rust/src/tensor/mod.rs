@@ -6,22 +6,33 @@
 //! the compute hot path of the whole simulator:
 //!
 //! * `matmul` / `matmul_into` — cache-blocked, panel-packed GEMM with
-//!   4-row register blocking and `std::thread`-based row-band parallelism
-//!   for large shapes (DESIGN.md §4).
+//!   SIMD register tiling (tensor::simd) and `std::thread`-based row-band
+//!   parallelism for large shapes (DESIGN.md §4, §11).
 //! * `matmul_at_b*` / `matmul_a_bt*` — the transpose family (`Aᵀ·B`,
-//!   `A·Bᵀ`) used by the backward kernels, computed without materializing
-//!   the transpose.
-//! * `gemm_acc` and friends — slice-level accumulate kernels the fused
-//!   backend kernels use to sum multi-term products into one buffer
-//!   without intermediate allocations.
-//! * `Scratch` — a reusable buffer pool; the GEMM panel packing draws from
-//!   a thread-local pool, and callers can allocate/recycle output tensors.
+//!   `A·Bᵀ`) used by the backward kernels; strided views into the same
+//!   blocked engine, so no transpose is ever materialized.
+//! * `gemm_acc` and friends (tensor::gemm) — slice-level accumulate kernels
+//!   the fused backend kernels use to sum multi-term products into one
+//!   buffer without intermediate allocations. Blocking/threading parameters
+//!   come from the per-shape tuning manifest (tensor::tune, `phantom tune`).
+//! * `Scratch` — a reusable buffer pool for caller-owned output tensors
+//!   (the engine's internal packing draws from its own global band pool).
 //! * `matmul_naive` — the textbook triple loop kept as the property-test
 //!   oracle for all of the above.
+//! * `seed::gemm_acc_seed` — the pre-SIMD seed kernel, frozen as the CI
+//!   regression-gate baseline.
+
+pub mod gemm;
+pub mod seed;
+pub mod simd;
+pub mod tune;
+
+pub use gemm::{
+    gemm_a_bt_acc, gemm_a_bt_acc_with, gemm_acc, gemm_acc_with, gemm_at_b_acc, gemm_at_b_acc_with,
+};
 
 use crate::util::prng::Prng;
 use anyhow::{bail, Result};
-use std::cell::RefCell;
 
 #[derive(Debug, Clone, PartialEq)]
 pub struct Tensor {
@@ -35,10 +46,9 @@ pub struct Tensor {
 
 /// A pool of reusable f32 allocations. Kernels on the per-iteration critical
 /// path acquire zeroed tensors / raw buffers from it and return them when
-/// done. GEMM panel packing draws from a per-thread pool, so serial GEMMs
-/// (and the calling thread's band of threaded ones) reuse their workspace
-/// across calls on the long-lived rank threads; bands on spawned scoped
-/// threads allocate once per call.
+/// done. (GEMM panel packing no longer uses this: the blocked engine draws
+/// per-band workspaces from a process-global pool in tensor::gemm, so
+/// spawned bands reuse allocations across calls too.)
 #[derive(Debug, Default)]
 pub struct Scratch {
     free: Vec<Vec<f32>>,
@@ -78,175 +88,6 @@ impl Scratch {
     /// Number of pooled (idle) buffers — used by tests.
     pub fn pooled(&self) -> usize {
         self.free.len()
-    }
-}
-
-thread_local! {
-    /// Per-thread pool for GEMM panel packing (each row-band worker packs
-    /// into its own panel, so the pool is contention-free by construction).
-    static PACK_POOL: RefCell<Scratch> = RefCell::new(Scratch::new());
-}
-
-// ---------------------------------------------------------------------------
-// Slice-level GEMM kernels (accumulating: C += ...)
-// ---------------------------------------------------------------------------
-
-/// Register-block height of the microkernel (output rows per pass).
-const MR: usize = 4;
-/// Depth (k) blocking: one packed panel row-count.
-const KC: usize = 256;
-/// Width (j) blocking: packed panel width; KC*JC floats = 512 KiB panel.
-const JC: usize = 512;
-/// Below this many multiply-adds a GEMM stays single-threaded (thread spawn
-/// costs more than it saves on the tiny per-rank shapes).
-const PAR_MIN_FLOPS: usize = 1 << 22;
-
-fn hw_threads() -> usize {
-    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
-}
-
-/// C[m,n] += A[m,kd] @ B[kd,n]; all row-major and contiguous. Blocked and
-/// panel-packed; splits the output into row bands across threads when the
-/// work is large enough.
-pub fn gemm_acc(a: &[f32], m: usize, kd: usize, b: &[f32], n: usize, out: &mut [f32]) {
-    assert_eq!(a.len(), m * kd, "gemm_acc: A length vs [{m}, {kd}]");
-    assert_eq!(b.len(), kd * n, "gemm_acc: B length vs [{kd}, {n}]");
-    assert_eq!(out.len(), m * n, "gemm_acc: C length vs [{m}, {n}]");
-    let flops = m.saturating_mul(kd).saturating_mul(n);
-    let bands = if flops >= PAR_MIN_FLOPS {
-        hw_threads().min(m / MR).max(1)
-    } else {
-        1
-    };
-    if bands <= 1 {
-        gemm_serial(a, m, kd, b, n, out);
-        return;
-    }
-    let rows_per = (m + bands - 1) / bands;
-    std::thread::scope(|s| {
-        let mut first: Option<(&mut [f32], &[f32])> = None;
-        for (band, a_band) in out.chunks_mut(rows_per * n).zip(a.chunks(rows_per * kd)) {
-            if first.is_none() {
-                first = Some((band, a_band));
-                continue;
-            }
-            let rows = band.len() / n;
-            s.spawn(move || gemm_serial(a_band, rows, kd, b, n, band));
-        }
-        // Band 0 runs on the calling thread: rank worker threads are
-        // long-lived, so their pack pool actually gets reused (the spawned
-        // bands' thread-locals die with the scope).
-        if let Some((band, a_band)) = first {
-            let rows = band.len() / n;
-            gemm_serial(a_band, rows, kd, b, n, band);
-        }
-    });
-}
-
-/// Single-threaded blocked kernel behind `gemm_acc`. Packs B panels into a
-/// thread-local scratch buffer and walks them with an MR-row microkernel,
-/// so each loaded B element feeds MR accumulator rows.
-fn gemm_serial(a: &[f32], m: usize, kd: usize, b: &[f32], n: usize, out: &mut [f32]) {
-    if m == 0 || kd == 0 || n == 0 {
-        return;
-    }
-    PACK_POOL.with(|pool| {
-        let mut bp = pool.borrow_mut().buf(KC.min(kd) * JC.min(n));
-        let mut jc = 0;
-        while jc < n {
-            let jw = JC.min(n - jc);
-            let mut kc = 0;
-            while kc < kd {
-                let kw = KC.min(kd - kc);
-                for kk in 0..kw {
-                    let src = (kc + kk) * n + jc;
-                    bp[kk * jw..kk * jw + jw].copy_from_slice(&b[src..src + jw]);
-                }
-                let mut i = 0;
-                while i + MR <= m {
-                    let band = &mut out[i * n..(i + MR) * n];
-                    let (r0, rest) = band.split_at_mut(n);
-                    let (r1, rest) = rest.split_at_mut(n);
-                    let (r2, r3) = rest.split_at_mut(n);
-                    let o0 = &mut r0[jc..jc + jw];
-                    let o1 = &mut r1[jc..jc + jw];
-                    let o2 = &mut r2[jc..jc + jw];
-                    let o3 = &mut r3[jc..jc + jw];
-                    let a0 = &a[i * kd + kc..i * kd + kc + kw];
-                    let a1 = &a[(i + 1) * kd + kc..(i + 1) * kd + kc + kw];
-                    let a2 = &a[(i + 2) * kd + kc..(i + 2) * kd + kc + kw];
-                    let a3 = &a[(i + 3) * kd + kc..(i + 3) * kd + kc + kw];
-                    for kk in 0..kw {
-                        let (v0, v1, v2, v3) = (a0[kk], a1[kk], a2[kk], a3[kk]);
-                        let brow = &bp[kk * jw..kk * jw + jw];
-                        for j in 0..jw {
-                            let bv = brow[j];
-                            o0[j] += v0 * bv;
-                            o1[j] += v1 * bv;
-                            o2[j] += v2 * bv;
-                            o3[j] += v3 * bv;
-                        }
-                    }
-                    i += MR;
-                }
-                while i < m {
-                    let orow = &mut out[i * n + jc..i * n + jc + jw];
-                    let arow = &a[i * kd + kc..i * kd + kc + kw];
-                    for kk in 0..kw {
-                        let v = arow[kk];
-                        let brow = &bp[kk * jw..kk * jw + jw];
-                        for j in 0..jw {
-                            orow[j] += v * brow[j];
-                        }
-                    }
-                    i += 1;
-                }
-                kc += kw;
-            }
-            jc += jw;
-        }
-        pool.borrow_mut().put(bp);
-    });
-}
-
-/// C[m,n] += Aᵀ @ B with A stored as [kd, m], B as [kd, n]. The gradient
-/// kernels' shape (`Yᵀ·delta`): computed by rank-1 row updates so neither
-/// operand is transposed in memory.
-pub fn gemm_at_b_acc(a: &[f32], kd: usize, m: usize, b: &[f32], n: usize, out: &mut [f32]) {
-    assert_eq!(a.len(), kd * m, "gemm_at_b_acc: A length vs [{kd}, {m}]");
-    assert_eq!(b.len(), kd * n, "gemm_at_b_acc: B length vs [{kd}, {n}]");
-    assert_eq!(out.len(), m * n, "gemm_at_b_acc: C length vs [{m}, {n}]");
-    for kk in 0..kd {
-        let arow = &a[kk * m..kk * m + m];
-        let brow = &b[kk * n..kk * n + n];
-        for i in 0..m {
-            let v = arow[i];
-            let orow = &mut out[i * n..i * n + n];
-            for j in 0..n {
-                orow[j] += v * brow[j];
-            }
-        }
-    }
-}
-
-/// C[m,n] += A @ Bᵀ with A stored as [m, kd], B as [n, kd]. Both operands
-/// are walked contiguously (row dot-products), so no transpose is
-/// materialized on the backward path.
-pub fn gemm_a_bt_acc(a: &[f32], m: usize, kd: usize, b: &[f32], n: usize, out: &mut [f32]) {
-    assert_eq!(a.len(), m * kd, "gemm_a_bt_acc: A length vs [{m}, {kd}]");
-    assert_eq!(b.len(), n * kd, "gemm_a_bt_acc: B length vs [{n}, {kd}]");
-    assert_eq!(out.len(), m * n, "gemm_a_bt_acc: C length vs [{m}, {n}]");
-    for i in 0..m {
-        let arow = &a[i * kd..i * kd + kd];
-        let orow = &mut out[i * n..i * n + n];
-        for j in 0..n {
-            let brow = &b[j * kd..j * kd + kd];
-            let mut acc = 0.0f32;
-            for t in 0..kd {
-                acc += arow[t] * brow[t];
-            }
-            orow[j] += acc;
-        }
     }
 }
 

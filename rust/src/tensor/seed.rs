@@ -1,0 +1,140 @@
+//! The seed-PR blocked GEMM, frozen verbatim as the regression-gate
+//! baseline.
+//!
+//! This is the scalar MR=4, B-panel-only kernel the repo shipped with
+//! (thread-local pack pool and all). It exists so the kernel benchmarks and
+//! the CI regression gate (`tests/kernel_gate.rs`, `ci/kernel_baseline.json`)
+//! can measure the live engine (tensor::gemm) against the exact code it
+//! replaced — "≥1.5× geomean over the seed kernel" stays meaningful on any
+//! machine because both sides run in the same process. Do not optimize this
+//! file; it is a measurement artifact, not a code path.
+
+use std::cell::RefCell;
+
+use super::Scratch;
+
+/// Register-block height of the seed microkernel.
+const MR: usize = 4;
+/// Depth (k) blocking of the seed kernel.
+const KC: usize = 256;
+/// Width (j) blocking of the seed kernel.
+const JC: usize = 512;
+/// Seed single-thread threshold.
+const PAR_MIN_FLOPS: usize = 1 << 22;
+
+thread_local! {
+    /// The seed kernel's per-thread pack pool (spawned bands lose theirs
+    /// when the scope ends — the waste the live engine's global pool fixes).
+    static PACK_POOL: RefCell<Scratch> = RefCell::new(Scratch::new());
+}
+
+fn hw_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// C[m,n] += A[m,kd] @ B[kd,n]: the seed blocked kernel, row-band threaded.
+pub fn gemm_acc_seed(a: &[f32], m: usize, kd: usize, b: &[f32], n: usize, out: &mut [f32]) {
+    assert_eq!(a.len(), m * kd, "gemm_acc_seed: A length vs [{m}, {kd}]");
+    assert_eq!(b.len(), kd * n, "gemm_acc_seed: B length vs [{kd}, {n}]");
+    assert_eq!(out.len(), m * n, "gemm_acc_seed: C length vs [{m}, {n}]");
+    let flops = m.saturating_mul(kd).saturating_mul(n);
+    let bands = if flops >= PAR_MIN_FLOPS { hw_threads().min(m / MR).max(1) } else { 1 };
+    if bands <= 1 {
+        gemm_serial(a, m, kd, b, n, out);
+        return;
+    }
+    let rows_per = m.div_ceil(bands);
+    std::thread::scope(|s| {
+        let mut first: Option<(&mut [f32], &[f32])> = None;
+        for (band, a_band) in out.chunks_mut(rows_per * n).zip(a.chunks(rows_per * kd)) {
+            if first.is_none() {
+                first = Some((band, a_band));
+                continue;
+            }
+            let rows = band.len() / n;
+            s.spawn(move || gemm_serial(a_band, rows, kd, b, n, band));
+        }
+        if let Some((band, a_band)) = first {
+            let rows = band.len() / n;
+            gemm_serial(a_band, rows, kd, b, n, band);
+        }
+    });
+}
+
+/// Single-threaded seed kernel: packs B panels only; A is read strided.
+fn gemm_serial(a: &[f32], m: usize, kd: usize, b: &[f32], n: usize, out: &mut [f32]) {
+    if m == 0 || kd == 0 || n == 0 {
+        return;
+    }
+    PACK_POOL.with(|pool| {
+        let mut bp = pool.borrow_mut().buf(KC.min(kd) * JC.min(n));
+        let mut jc = 0;
+        while jc < n {
+            let jw = JC.min(n - jc);
+            let mut kc = 0;
+            while kc < kd {
+                let kw = KC.min(kd - kc);
+                for kk in 0..kw {
+                    let src = (kc + kk) * n + jc;
+                    bp[kk * jw..kk * jw + jw].copy_from_slice(&b[src..src + jw]);
+                }
+                let mut i = 0;
+                while i + MR <= m {
+                    let band = &mut out[i * n..(i + MR) * n];
+                    let (r0, rest) = band.split_at_mut(n);
+                    let (r1, rest) = rest.split_at_mut(n);
+                    let (r2, r3) = rest.split_at_mut(n);
+                    let o0 = &mut r0[jc..jc + jw];
+                    let o1 = &mut r1[jc..jc + jw];
+                    let o2 = &mut r2[jc..jc + jw];
+                    let o3 = &mut r3[jc..jc + jw];
+                    let a0 = &a[i * kd + kc..i * kd + kc + kw];
+                    let a1 = &a[(i + 1) * kd + kc..(i + 1) * kd + kc + kw];
+                    let a2 = &a[(i + 2) * kd + kc..(i + 2) * kd + kc + kw];
+                    let a3 = &a[(i + 3) * kd + kc..(i + 3) * kd + kc + kw];
+                    for kk in 0..kw {
+                        let (v0, v1, v2, v3) = (a0[kk], a1[kk], a2[kk], a3[kk]);
+                        let brow = &bp[kk * jw..kk * jw + jw];
+                        for j in 0..jw {
+                            let bv = brow[j];
+                            o0[j] += v0 * bv;
+                            o1[j] += v1 * bv;
+                            o2[j] += v2 * bv;
+                            o3[j] += v3 * bv;
+                        }
+                    }
+                    i += MR;
+                }
+                while i < m {
+                    let orow = &mut out[i * n + jc..i * n + jc + jw];
+                    let arow = &a[i * kd + kc..i * kd + kc + kw];
+                    for kk in 0..kw {
+                        let v = arow[kk];
+                        let brow = &bp[kk * jw..kk * jw + jw];
+                        for j in 0..jw {
+                            orow[j] += v * brow[j];
+                        }
+                    }
+                    i += 1;
+                }
+                kc += kw;
+            }
+            jc += jw;
+        }
+        pool.borrow_mut().put(bp);
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seed_kernel_accumulates() {
+        let a = vec![1.0f32; 6]; // [2, 3]
+        let b = vec![2.0f32; 6]; // [3, 2]
+        let mut out = vec![10.0f32; 4];
+        gemm_acc_seed(&a, 2, 3, &b, 2, &mut out);
+        assert_eq!(out, vec![16.0; 4]); // 10 + 1*2*3
+    }
+}

@@ -1,0 +1,403 @@
+//! ISA detection and the register-tile microkernels behind the blocked GEMM.
+//!
+//! The blocked engine in `tensor::gemm` packs an A block (`ap[kk*asr + r]`,
+//! row-interleaved) and a B panel (`bp[kk*bs + j]`, row-major) and then calls
+//! `block_kernel` to accumulate the `rows x jw` output tile. Two kernel
+//! families sit behind that call:
+//!
+//! * `x86::mk4x8` / `x86::mk8x8` — hand-vectorized AVX2+FMA kernels that hold
+//!   the C tile in ymm accumulators and broadcast-FMA one packed A column per
+//!   k step. Selected at runtime (`is_x86_feature_detected!`), never at
+//!   compile time, so one binary serves both old and new x86 boxes.
+//! * `micro8::<ROWS>` — a portable const-generic 8-lane kernel whose fixed
+//!   `[[f32; 8]; ROWS]` accumulator array autovectorizes on every target;
+//!   also the fallback for row counts the AVX2 kernels don't cover.
+//!
+//! `PHANTOM_SIMD=portable` forces the portable path (used by the agreement
+//! property tests and as an escape hatch on machines with broken AVX).
+
+use std::sync::OnceLock;
+
+/// Instruction-set tier the microkernels run at, detected once per process.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Isa {
+    /// Hand-vectorized AVX2+FMA kernels (x86-64 with both features).
+    Avx2Fma,
+    /// Autovectorized portable kernels (everything else).
+    Portable,
+}
+
+impl Isa {
+    /// Stable name used in logs and the tuning manifest.
+    pub fn name(self) -> &'static str {
+        match self {
+            Isa::Avx2Fma => "avx2+fma",
+            Isa::Portable => "portable",
+        }
+    }
+}
+
+static ACTIVE_ISA: OnceLock<Isa> = OnceLock::new();
+
+/// The ISA the GEMM kernels dispatch to, cached after first detection.
+/// `PHANTOM_SIMD=portable` overrides detection.
+pub fn active() -> Isa {
+    *ACTIVE_ISA.get_or_init(|| {
+        if std::env::var("PHANTOM_SIMD").map(|v| v == "portable").unwrap_or(false) {
+            Isa::Portable
+        } else {
+            detect_native()
+        }
+    })
+}
+
+/// Every ISA this machine can actually run (ignores the env override).
+/// Property tests iterate this to pin all compiled-in kernel families
+/// against the naive oracle.
+pub fn available() -> Vec<Isa> {
+    match detect_native() {
+        Isa::Avx2Fma => vec![Isa::Avx2Fma, Isa::Portable],
+        Isa::Portable => vec![Isa::Portable],
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn detect_native() -> Isa {
+    if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma") {
+        Isa::Avx2Fma
+    } else {
+        Isa::Portable
+    }
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn detect_native() -> Isa {
+    Isa::Portable
+}
+
+/// Accumulate a packed block product into a C tile:
+///
+/// `C[r, j0+j] += sum_kk Ap[kk*asr + r] * Bp[kk*bs + j]` for
+/// `r in 0..rows`, `j in 0..jw`, where the C tile starts at `cb[c0]` with
+/// row stride `ldc`.
+///
+/// `rows` must be 1..=8; `asr >= rows` is the packed-A row stride (lets the
+/// caller split one packed block into a 4-row SIMD span plus a remainder).
+/// Full 8-column spans go to the ISA kernel, the `jw % 8` tail is scalar.
+pub(crate) fn block_kernel(
+    isa: Isa,
+    rows: usize,
+    ap: &[f32],
+    asr: usize,
+    bp: &[f32],
+    bs: usize,
+    kw: usize,
+    jw: usize,
+    cb: &mut [f32],
+    c0: usize,
+    ldc: usize,
+) {
+    if rows == 0 || kw == 0 || jw == 0 {
+        return;
+    }
+    debug_assert!(rows <= 8 && rows <= asr);
+    let mut j = 0;
+    while j + 8 <= jw {
+        let done = isa == Isa::Avx2Fma
+            && simd_span(rows, ap, asr, &bp[j..], bs, kw, cb, c0 + j, ldc);
+        if !done {
+            portable_span(rows, ap, asr, &bp[j..], bs, kw, cb, c0 + j, ldc);
+        }
+        j += 8;
+    }
+    if j < jw {
+        scalar_tail(rows, ap, asr, &bp[j..], bs, kw, jw - j, cb, c0 + j, ldc);
+    }
+}
+
+/// Dispatch one full 8-column span to the hand-vectorized kernels. Returns
+/// false when no AVX2 kernel covers `rows` (caller falls back to portable).
+#[cfg(target_arch = "x86_64")]
+#[allow(clippy::too_many_arguments)]
+fn simd_span(
+    rows: usize,
+    ap: &[f32],
+    asr: usize,
+    bp: &[f32],
+    bs: usize,
+    kw: usize,
+    cb: &mut [f32],
+    c0: usize,
+    ldc: usize,
+) -> bool {
+    if rows != 4 && rows != 8 {
+        return false;
+    }
+    // Bounds proven here once so the kernels can use raw pointers freely.
+    assert!(ap.len() >= (kw - 1) * asr + rows, "simd_span: packed A too short");
+    assert!(bp.len() >= (kw - 1) * bs + 8, "simd_span: packed B too short");
+    assert!(cb.len() >= c0 + (rows - 1) * ldc + 8, "simd_span: C tile too short");
+    // SAFETY: avx2+fma presence is guaranteed by the Isa::Avx2Fma dispatch
+    // (runtime-detected), and the asserts above establish every pointer
+    // offset the kernels touch is in bounds.
+    unsafe {
+        let c = cb.as_mut_ptr().add(c0);
+        if rows == 4 {
+            x86::mk4x8(ap.as_ptr(), asr, bp.as_ptr(), bs, kw, c, ldc);
+        } else {
+            x86::mk8x8(ap.as_ptr(), asr, bp.as_ptr(), bs, kw, c, ldc);
+        }
+    }
+    true
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+#[allow(clippy::too_many_arguments)]
+fn simd_span(
+    _rows: usize,
+    _ap: &[f32],
+    _asr: usize,
+    _bp: &[f32],
+    _bs: usize,
+    _kw: usize,
+    _cb: &mut [f32],
+    _c0: usize,
+    _ldc: usize,
+) -> bool {
+    false
+}
+
+/// Portable full-width span: pick the const-generic kernel for `rows`.
+#[allow(clippy::too_many_arguments)]
+fn portable_span(
+    rows: usize,
+    ap: &[f32],
+    asr: usize,
+    bp: &[f32],
+    bs: usize,
+    kw: usize,
+    cb: &mut [f32],
+    c0: usize,
+    ldc: usize,
+) {
+    match rows {
+        1 => micro8::<1>(ap, asr, bp, bs, kw, cb, c0, ldc),
+        2 => micro8::<2>(ap, asr, bp, bs, kw, cb, c0, ldc),
+        3 => micro8::<3>(ap, asr, bp, bs, kw, cb, c0, ldc),
+        4 => micro8::<4>(ap, asr, bp, bs, kw, cb, c0, ldc),
+        5 => micro8::<5>(ap, asr, bp, bs, kw, cb, c0, ldc),
+        6 => micro8::<6>(ap, asr, bp, bs, kw, cb, c0, ldc),
+        7 => micro8::<7>(ap, asr, bp, bs, kw, cb, c0, ldc),
+        8 => micro8::<8>(ap, asr, bp, bs, kw, cb, c0, ldc),
+        _ => unreachable!("block_kernel rows must be 1..=8, got {rows}"),
+    }
+}
+
+/// Portable ROWS x 8 register tile. The accumulator array has a fixed shape,
+/// so LLVM keeps it in registers and autovectorizes the inner loop on any
+/// target with 128/256-bit lanes.
+#[inline]
+fn micro8<const ROWS: usize>(
+    ap: &[f32],
+    asr: usize,
+    bp: &[f32],
+    bs: usize,
+    kw: usize,
+    cb: &mut [f32],
+    c0: usize,
+    ldc: usize,
+) {
+    let mut acc = [[0.0f32; 8]; ROWS];
+    for kk in 0..kw {
+        let arow = &ap[kk * asr..kk * asr + ROWS];
+        let brow = &bp[kk * bs..kk * bs + 8];
+        for r in 0..ROWS {
+            let v = arow[r];
+            for j in 0..8 {
+                acc[r][j] += v * brow[j];
+            }
+        }
+    }
+    for (r, arow) in acc.iter().enumerate() {
+        let dst = &mut cb[c0 + r * ldc..c0 + r * ldc + 8];
+        for j in 0..8 {
+            dst[j] += arow[j];
+        }
+    }
+}
+
+/// Scalar tail for the last `jr < 8` columns of a panel.
+#[allow(clippy::too_many_arguments)]
+fn scalar_tail(
+    rows: usize,
+    ap: &[f32],
+    asr: usize,
+    bp: &[f32],
+    bs: usize,
+    kw: usize,
+    jr: usize,
+    cb: &mut [f32],
+    c0: usize,
+    ldc: usize,
+) {
+    for kk in 0..kw {
+        let arow = &ap[kk * asr..kk * asr + rows];
+        let brow = &bp[kk * bs..kk * bs + jr];
+        for (r, &v) in arow.iter().enumerate() {
+            let dst = &mut cb[c0 + r * ldc..c0 + r * ldc + jr];
+            for j in 0..jr {
+                dst[j] += v * brow[j];
+            }
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+pub(crate) mod x86 {
+    //! Hand-vectorized AVX2+FMA microkernels. Raw-pointer based: bounds are
+    //! asserted by `simd_span` before dispatch, and `#[target_feature]`
+    //! keeps the vector code out of the baseline ISA budget of the rest of
+    //! the binary.
+
+    use std::arch::x86_64::*;
+
+    /// 4x8 tile: `c[r*ldc + j] += sum_kk ap[kk*asr + r] * bp[kk*bs + j]`.
+    ///
+    /// # Safety
+    /// Caller must ensure AVX2 and FMA are available and that `ap` holds
+    /// `(kw-1)*asr + 4` floats, `bp` holds `(kw-1)*bs + 8`, and `c` points
+    /// at a tile where rows `0..4` of width 8 at stride `ldc` are writable.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub(crate) unsafe fn mk4x8(
+        ap: *const f32,
+        asr: usize,
+        bp: *const f32,
+        bs: usize,
+        kw: usize,
+        c: *mut f32,
+        ldc: usize,
+    ) {
+        let mut acc0 = _mm256_loadu_ps(c);
+        let mut acc1 = _mm256_loadu_ps(c.add(ldc));
+        let mut acc2 = _mm256_loadu_ps(c.add(2 * ldc));
+        let mut acc3 = _mm256_loadu_ps(c.add(3 * ldc));
+        for kk in 0..kw {
+            let b = _mm256_loadu_ps(bp.add(kk * bs));
+            let a = ap.add(kk * asr);
+            acc0 = _mm256_fmadd_ps(_mm256_set1_ps(*a), b, acc0);
+            acc1 = _mm256_fmadd_ps(_mm256_set1_ps(*a.add(1)), b, acc1);
+            acc2 = _mm256_fmadd_ps(_mm256_set1_ps(*a.add(2)), b, acc2);
+            acc3 = _mm256_fmadd_ps(_mm256_set1_ps(*a.add(3)), b, acc3);
+        }
+        _mm256_storeu_ps(c, acc0);
+        _mm256_storeu_ps(c.add(ldc), acc1);
+        _mm256_storeu_ps(c.add(2 * ldc), acc2);
+        _mm256_storeu_ps(c.add(3 * ldc), acc3);
+    }
+
+    /// 8x8 tile: the main-path kernel (8 ymm accumulators + 1 B vector).
+    ///
+    /// # Safety
+    /// Same contract as [`mk4x8`] with rows `0..8`.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub(crate) unsafe fn mk8x8(
+        ap: *const f32,
+        asr: usize,
+        bp: *const f32,
+        bs: usize,
+        kw: usize,
+        c: *mut f32,
+        ldc: usize,
+    ) {
+        let mut acc0 = _mm256_loadu_ps(c);
+        let mut acc1 = _mm256_loadu_ps(c.add(ldc));
+        let mut acc2 = _mm256_loadu_ps(c.add(2 * ldc));
+        let mut acc3 = _mm256_loadu_ps(c.add(3 * ldc));
+        let mut acc4 = _mm256_loadu_ps(c.add(4 * ldc));
+        let mut acc5 = _mm256_loadu_ps(c.add(5 * ldc));
+        let mut acc6 = _mm256_loadu_ps(c.add(6 * ldc));
+        let mut acc7 = _mm256_loadu_ps(c.add(7 * ldc));
+        for kk in 0..kw {
+            let b = _mm256_loadu_ps(bp.add(kk * bs));
+            let a = ap.add(kk * asr);
+            acc0 = _mm256_fmadd_ps(_mm256_set1_ps(*a), b, acc0);
+            acc1 = _mm256_fmadd_ps(_mm256_set1_ps(*a.add(1)), b, acc1);
+            acc2 = _mm256_fmadd_ps(_mm256_set1_ps(*a.add(2)), b, acc2);
+            acc3 = _mm256_fmadd_ps(_mm256_set1_ps(*a.add(3)), b, acc3);
+            acc4 = _mm256_fmadd_ps(_mm256_set1_ps(*a.add(4)), b, acc4);
+            acc5 = _mm256_fmadd_ps(_mm256_set1_ps(*a.add(5)), b, acc5);
+            acc6 = _mm256_fmadd_ps(_mm256_set1_ps(*a.add(6)), b, acc6);
+            acc7 = _mm256_fmadd_ps(_mm256_set1_ps(*a.add(7)), b, acc7);
+        }
+        _mm256_storeu_ps(c, acc0);
+        _mm256_storeu_ps(c.add(ldc), acc1);
+        _mm256_storeu_ps(c.add(2 * ldc), acc2);
+        _mm256_storeu_ps(c.add(3 * ldc), acc3);
+        _mm256_storeu_ps(c.add(4 * ldc), acc4);
+        _mm256_storeu_ps(c.add(5 * ldc), acc5);
+        _mm256_storeu_ps(c.add(6 * ldc), acc6);
+        _mm256_storeu_ps(c.add(7 * ldc), acc7);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Reference for one packed block product (same layout as block_kernel).
+    #[allow(clippy::too_many_arguments)]
+    fn reference(
+        rows: usize,
+        ap: &[f32],
+        asr: usize,
+        bp: &[f32],
+        bs: usize,
+        kw: usize,
+        jw: usize,
+        cb: &mut [f32],
+        c0: usize,
+        ldc: usize,
+    ) {
+        for kk in 0..kw {
+            for r in 0..rows {
+                let v = ap[kk * asr + r];
+                for j in 0..jw {
+                    cb[c0 + r * ldc + j] += v * bp[kk * bs + j];
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn block_kernel_matches_reference_all_row_counts() {
+        for isa in available() {
+            for rows in 1..=8usize {
+                for (kw, jw) in [(1usize, 1usize), (3, 7), (5, 8), (7, 19), (16, 24)] {
+                    let asr = rows; // packed tight
+                    let bs = jw + 3; // padded panel stride
+                    let ldc = jw + 5;
+                    let ap: Vec<f32> = (0..kw * asr).map(|i| (i % 13) as f32 - 6.0).collect();
+                    let bp: Vec<f32> = (0..kw * bs).map(|i| (i % 7) as f32 * 0.5 - 1.5).collect();
+                    let mut got = vec![0.25f32; rows * ldc + 8];
+                    let mut want = got.clone();
+                    block_kernel(isa, rows, &ap, asr, &bp, bs, kw, jw, &mut got, 2, ldc);
+                    reference(rows, &ap, asr, &bp, bs, kw, jw, &mut want, 2, ldc);
+                    for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+                        assert!(
+                            (g - w).abs() <= 1e-4 * w.abs().max(1.0),
+                            "isa={isa:?} rows={rows} kw={kw} jw={jw} elem {i}: {g} vs {w}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn isa_detection_is_stable() {
+        let a = active();
+        assert_eq!(a, active(), "cached ISA must not change");
+        assert!(available().contains(&detect_native()));
+        assert!(!Isa::Avx2Fma.name().is_empty() && !Isa::Portable.name().is_empty());
+    }
+}

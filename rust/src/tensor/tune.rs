@@ -1,0 +1,516 @@
+//! Per-shape-class GEMM tuning: parameters, the versioned on-disk manifest,
+//! and the `phantom tune` autotuner.
+//!
+//! The blocked engine (tensor::gemm) asks `params_for(m, k, n)` for its
+//! block/thread configuration on every call. Shapes are bucketed into
+//! power-of-two classes (capped at 4096) so one tuned entry covers a whole
+//! neighborhood of shapes and the hot-path lookup is a `BTreeMap` probe on a
+//! `(usize, usize, usize)` key — no string formatting per GEMM.
+//!
+//! Winners are persisted to `phantom-tune.json` (schema below), loaded once
+//! per process at backend init (`ensure_loaded`), and survive restarts:
+//!
+//! ```text
+//! {
+//!   "version": 1,
+//!   "isa": "avx2+fma",
+//!   "classes": {
+//!     "m512_k512_n512": {"mr": 8, "kc": 256, "jc": 512,
+//!                        "max_bands": 0, "par_min_flops": 4194304}
+//!   }
+//! }
+//! ```
+//!
+//! Compatibility contract (mirrors runtime/manifest.rs and the ckpt
+//! manifest): unknown fields are ignored, missing per-class fields default,
+//! and a `version` other than 1 is rejected with a clear error. Deleting the
+//! manifest is always safe — every class falls back to `default_for(isa)`.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::{OnceLock, RwLock};
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::util::json::Json;
+use crate::util::prng::Prng;
+
+use super::simd::{self, Isa};
+
+/// Manifest schema version this build reads and writes.
+pub const TUNE_MANIFEST_VERSION: i64 = 1;
+
+/// Default manifest filename, searched for in the CWD and its ancestors.
+pub const TUNE_MANIFEST_NAME: &str = "phantom-tune.json";
+
+/// Block/thread configuration for one GEMM shape class.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GemmParams {
+    /// Microkernel register-block height (output rows per pass); 4 or 8.
+    pub mr: usize,
+    /// Depth (k) blocking: packed-panel row count.
+    pub kc: usize,
+    /// Width (j) blocking: packed-panel width.
+    pub jc: usize,
+    /// Row-band thread cap; 0 means "all hardware threads".
+    pub max_bands: usize,
+    /// Below this many multiply-adds the GEMM stays single-threaded.
+    pub par_min_flops: usize,
+}
+
+impl GemmParams {
+    /// The untuned configuration for an ISA: the seed kernel's blocking with
+    /// the microkernel height the ISA's widest kernel wants.
+    pub fn default_for(isa: Isa) -> GemmParams {
+        GemmParams {
+            mr: if isa == Isa::Avx2Fma { 8 } else { 4 },
+            kc: 256,
+            jc: 512,
+            max_bands: 0,
+            par_min_flops: 1 << 22,
+        }
+    }
+
+    /// Clamp into the range the engine supports (manifests are data; a
+    /// hand-edited or stale file must not panic the hot path).
+    pub fn sanitized(self) -> GemmParams {
+        GemmParams {
+            mr: if self.mr >= 8 { 8 } else { 4 },
+            kc: self.kc.clamp(8, 1 << 16),
+            jc: self.jc.clamp(8, 1 << 16),
+            max_bands: self.max_bands,
+            par_min_flops: self.par_min_flops,
+        }
+    }
+
+    fn to_json(self) -> Json {
+        Json::obj(vec![
+            ("mr", Json::int(self.mr as i64)),
+            ("kc", Json::int(self.kc as i64)),
+            ("jc", Json::int(self.jc as i64)),
+            ("max_bands", Json::int(self.max_bands as i64)),
+            ("par_min_flops", Json::int(self.par_min_flops as i64)),
+        ])
+    }
+
+    /// Parse one class entry; missing fields take the `base` default,
+    /// unknown fields are ignored (forward compatibility).
+    fn from_json(j: &Json, base: GemmParams) -> GemmParams {
+        GemmParams {
+            mr: j.get("mr").as_usize().unwrap_or(base.mr),
+            kc: j.get("kc").as_usize().unwrap_or(base.kc),
+            jc: j.get("jc").as_usize().unwrap_or(base.jc),
+            max_bands: j.get("max_bands").as_usize().unwrap_or(base.max_bands),
+            par_min_flops: j.get("par_min_flops").as_usize().unwrap_or(base.par_min_flops),
+        }
+        .sanitized()
+    }
+}
+
+impl Default for GemmParams {
+    fn default() -> GemmParams {
+        GemmParams::default_for(Isa::Portable)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shape classes
+// ---------------------------------------------------------------------------
+
+/// Bucket one dimension: next power of two, capped at 4096 (beyond that the
+/// best blocking stops changing with size).
+fn bucket(d: usize) -> usize {
+    if d == 0 {
+        0
+    } else {
+        d.next_power_of_two().min(4096)
+    }
+}
+
+/// The shape class a `[m,k] @ [k,n]` GEMM falls into.
+pub fn class_key(m: usize, k: usize, n: usize) -> (usize, usize, usize) {
+    (bucket(m), bucket(k), bucket(n))
+}
+
+/// Manifest key for a class, e.g. `m512_k512_n512`.
+pub fn class_name(key: (usize, usize, usize)) -> String {
+    format!("m{}_k{}_n{}", key.0, key.1, key.2)
+}
+
+/// Inverse of `class_name`; None for malformed keys (skipped with a warning
+/// at load, not fatal).
+pub fn parse_class_name(s: &str) -> Option<(usize, usize, usize)> {
+    let rest = s.strip_prefix('m')?;
+    let (m, rest) = rest.split_once("_k")?;
+    let (k, n) = rest.split_once("_n")?;
+    Some((m.parse().ok()?, k.parse().ok()?, n.parse().ok()?))
+}
+
+// ---------------------------------------------------------------------------
+// Tuning: the manifest contents
+// ---------------------------------------------------------------------------
+
+/// A set of tuned shape classes, as loaded from / saved to the manifest.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Tuning {
+    /// ISA the tuning was measured on (informational: a manifest tuned on
+    /// another machine still loads; re-tune for best results).
+    pub isa: String,
+    pub classes: BTreeMap<(usize, usize, usize), GemmParams>,
+}
+
+impl Tuning {
+    /// Best params for a shape: the tuned class entry if present, else the
+    /// ISA default.
+    pub fn params_for(&self, m: usize, k: usize, n: usize, isa: Isa) -> GemmParams {
+        self.classes
+            .get(&class_key(m, k, n))
+            .copied()
+            .unwrap_or_else(|| GemmParams::default_for(isa))
+    }
+
+    pub fn to_json(&self) -> Json {
+        let classes: BTreeMap<String, Json> =
+            self.classes.iter().map(|(k, p)| (class_name(*k), p.to_json())).collect();
+        Json::obj(vec![
+            ("version", Json::int(TUNE_MANIFEST_VERSION)),
+            ("isa", Json::str(self.isa.clone())),
+            ("classes", Json::Obj(classes)),
+        ])
+    }
+
+    pub fn parse(text: &str) -> Result<Tuning> {
+        let j = Json::parse(text).map_err(|e| anyhow!("tuning manifest: {e}"))?;
+        let version = j.get("version").as_i64().unwrap_or(0);
+        if version != TUNE_MANIFEST_VERSION {
+            bail!(
+                "unsupported tuning-manifest version {version} (this build reads \
+                 {TUNE_MANIFEST_VERSION}; delete the file or re-run `phantom tune`)"
+            );
+        }
+        let isa = j.get("isa").as_str().unwrap_or("unknown").to_string();
+        let base = GemmParams::default_for(simd::active());
+        let mut classes = BTreeMap::new();
+        if let Some(obj) = j.get("classes").as_obj() {
+            for (name, entry) in obj {
+                match parse_class_name(name) {
+                    Some(key) => {
+                        classes.insert(key, GemmParams::from_json(entry, base));
+                    }
+                    None => eprintln!(
+                        "tune: warning: skipping malformed class key '{name}' in manifest"
+                    ),
+                }
+            }
+        }
+        Ok(Tuning { isa, classes })
+    }
+
+    /// Load a manifest file; `Ok(None)` when the file does not exist (the
+    /// documented fall-back-to-defaults path), `Err` on unreadable/invalid
+    /// contents.
+    pub fn load(path: &Path) -> Result<Option<Tuning>> {
+        let text = match std::fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+            Err(e) => bail!("reading {}: {e}", path.display()),
+        };
+        Tuning::parse(&text).map(Some)
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        std::fs::write(path, self.to_json().pretty())
+            .map_err(|e| anyhow!("writing {}: {e}", path.display()))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Process-global active tuning
+// ---------------------------------------------------------------------------
+
+static ACTIVE: RwLock<Option<Tuning>> = RwLock::new(None);
+static LOAD_ONCE: OnceLock<()> = OnceLock::new();
+
+fn active_lock<T>(f: impl FnOnce(&Option<Tuning>) -> T) -> T {
+    f(&ACTIVE.read().unwrap_or_else(|p| p.into_inner()))
+}
+
+/// Params the engine should use for a shape: the installed tuning's class
+/// entry when present, ISA defaults otherwise.
+pub fn params_for(m: usize, k: usize, n: usize) -> GemmParams {
+    let isa = simd::active();
+    active_lock(|t| match t {
+        Some(t) => t.params_for(m, k, n, isa),
+        None => GemmParams::default_for(isa),
+    })
+}
+
+/// Number of tuned shape classes currently installed (0 = pure defaults).
+pub fn installed_classes() -> usize {
+    active_lock(|t| t.as_ref().map(|t| t.classes.len()).unwrap_or(0))
+}
+
+/// Make `tuning` the process-global active tuning.
+pub fn install(tuning: Tuning) {
+    *ACTIVE.write().unwrap_or_else(|p| p.into_inner()) = Some(tuning);
+}
+
+/// Drop the installed tuning (back to defaults). Test hook.
+#[doc(hidden)]
+pub fn clear_installed() {
+    *ACTIVE.write().unwrap_or_else(|p| p.into_inner()) = None;
+}
+
+/// The manifest path this process reads at init: `$PHANTOM_TUNE` when set,
+/// else the first `phantom-tune.json` found in the CWD or its ancestors,
+/// else CWD/phantom-tune.json (which typically does not exist — defaults).
+pub fn default_manifest_path() -> PathBuf {
+    if let Ok(p) = std::env::var("PHANTOM_TUNE") {
+        if !p.is_empty() {
+            return PathBuf::from(p);
+        }
+    }
+    let cwd = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+    let mut dir = Some(cwd.as_path());
+    while let Some(d) = dir {
+        let cand = d.join(TUNE_MANIFEST_NAME);
+        if cand.exists() {
+            return cand;
+        }
+        dir = d.parent();
+    }
+    cwd.join(TUNE_MANIFEST_NAME)
+}
+
+/// Load the default manifest into the process-global tuning, once per
+/// process. Called from backend init so every entry point (train, serve,
+/// bench, tests) inherits persisted tuning. Missing manifest is silent
+/// (defaults); a malformed one warns and falls back rather than failing the
+/// run — `phantom tune --show` surfaces the error loudly.
+pub fn ensure_loaded() {
+    LOAD_ONCE.get_or_init(|| {
+        let path = default_manifest_path();
+        match Tuning::load(&path) {
+            Ok(Some(t)) => {
+                eprintln!(
+                    "tune: loaded {} shape classes from {} (tuned on {}, running {})",
+                    t.classes.len(),
+                    path.display(),
+                    t.isa,
+                    simd::active().name()
+                );
+                install(t);
+            }
+            Ok(None) => {} // no manifest: defaults, silently
+            Err(e) => {
+                eprintln!("tune: warning: ignoring manifest {}: {e}", path.display());
+            }
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Autotuner
+// ---------------------------------------------------------------------------
+
+/// The GEMM shapes the autotuner and the CI regression gate track: square
+/// compute-bound sizes plus the skinny/fat shapes the per-rank kernels
+/// actually produce (activations tall-thin, reductions short-fat).
+pub const TRACKED_SHAPES: &[(usize, usize, usize)] = &[
+    (128, 128, 128),
+    (512, 512, 512),
+    (32, 256, 256),
+    (256, 32, 256),
+    (64, 2048, 64),
+];
+
+/// Small shapes for the CI tune smoke job (seconds, not minutes).
+pub const TINY_SHAPES: &[(usize, usize, usize)] = &[(16, 32, 32), (8, 64, 16)];
+
+/// One per-shape autotune outcome (for the CLI report).
+#[derive(Debug, Clone)]
+pub struct TuneOutcome {
+    pub shape: (usize, usize, usize),
+    pub class: (usize, usize, usize),
+    pub best: GemmParams,
+    pub best_secs: f64,
+    pub default_secs: f64,
+    pub candidates: usize,
+}
+
+impl TuneOutcome {
+    pub fn gflops(&self) -> f64 {
+        let (m, k, n) = self.shape;
+        2.0 * (m as f64) * (k as f64) * (n as f64) / self.best_secs / 1e9
+    }
+
+    pub fn speedup_vs_default(&self) -> f64 {
+        self.default_secs / self.best_secs
+    }
+}
+
+fn candidate_grid(quick: bool) -> Vec<GemmParams> {
+    let mrs: &[usize] = &[4, 8];
+    let (kcs, jcs, pmfs): (&[usize], &[usize], &[usize]) = if quick {
+        (&[128, 256], &[256, 512], &[1 << 22])
+    } else {
+        (&[64, 128, 256, 512], &[128, 256, 512, 1024], &[1 << 20, 1 << 22])
+    };
+    let mut out = Vec::new();
+    for &mr in mrs {
+        for &kc in kcs {
+            for &jc in jcs {
+                for &pmf in pmfs {
+                    out.push(GemmParams { mr, kc, jc, max_bands: 0, par_min_flops: pmf });
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Minimum wall time of `runs` executions of `f` (min is the stablest
+/// estimator under background load).
+fn best_of<F: FnMut()>(runs: usize, mut f: F) -> f64 {
+    let mut best = f64::INFINITY;
+    for _ in 0..runs.max(1) {
+        let t0 = Instant::now();
+        f();
+        best = best.min(t0.elapsed().as_secs_f64());
+    }
+    best
+}
+
+/// Benchmark the candidate grid on each shape and keep the winner per shape
+/// class. Returns the tuning plus the per-shape report. Deterministic
+/// inputs; timing is min-of-`iters`.
+pub fn autotune(
+    shapes: &[(usize, usize, usize)],
+    iters: usize,
+    quick: bool,
+) -> (Tuning, Vec<TuneOutcome>) {
+    let isa = simd::active();
+    let grid = candidate_grid(quick);
+    let mut rng = Prng::new(0xB10C5EED); // deterministic autotune inputs
+    let mut tuning = Tuning { isa: isa.name().to_string(), ..Default::default() };
+    let mut outcomes = Vec::new();
+    for &(m, k, n) in shapes {
+        let mut a = vec![0.0f32; m * k];
+        let mut b = vec![0.0f32; k * n];
+        rng.fill_normal(&mut a, 1.0);
+        rng.fill_normal(&mut b, 1.0);
+        let mut out = vec![0.0f32; m * n];
+
+        let default = GemmParams::default_for(isa);
+        let default_secs = best_of(iters, || {
+            out.fill(0.0);
+            super::gemm::gemm_acc_with(default, isa, &a, m, k, &b, n, &mut out);
+        });
+
+        let mut best = default;
+        let mut best_secs = default_secs;
+        for &cand in &grid {
+            if cand == default {
+                continue;
+            }
+            let secs = best_of(iters, || {
+                out.fill(0.0);
+                super::gemm::gemm_acc_with(cand, isa, &a, m, k, &b, n, &mut out);
+            });
+            if secs < best_secs {
+                best_secs = secs;
+                best = cand;
+            }
+        }
+        let class = class_key(m, k, n);
+        // First shape to land in a class wins (shapes list is ordered from
+        // most to least representative).
+        tuning.classes.entry(class).or_insert(best);
+        outcomes.push(TuneOutcome {
+            shape: (m, k, n),
+            class,
+            best,
+            best_secs,
+            default_secs,
+            candidates: grid.len(),
+        });
+    }
+    (tuning, outcomes)
+}
+
+/// Resolve a `--shapes` CLI argument: a named set (`tracked`, `tiny`) or a
+/// comma-separated list of `MxKxN` triples.
+pub fn parse_shapes_arg(arg: &str) -> Result<Vec<(usize, usize, usize)>> {
+    match arg {
+        "tracked" => return Ok(TRACKED_SHAPES.to_vec()),
+        "tiny" => return Ok(TINY_SHAPES.to_vec()),
+        _ => {}
+    }
+    let mut out = Vec::new();
+    for part in arg.split(',') {
+        let dims: Vec<usize> = part
+            .split('x')
+            .map(|d| d.trim().parse::<usize>())
+            .collect::<std::result::Result<_, _>>()
+            .map_err(|_| anyhow!("bad shape '{part}' (want MxKxN, e.g. 512x512x512)"))?;
+        if dims.len() != 3 {
+            bail!("bad shape '{part}' (want MxKxN, e.g. 512x512x512)");
+        }
+        out.push((dims[0], dims[1], dims[2]));
+    }
+    if out.is_empty() {
+        bail!("empty shape list");
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucketing_caps_and_handles_degenerates() {
+        assert_eq!(class_key(0, 1, 2), (0, 1, 2));
+        assert_eq!(class_key(3, 5, 9), (4, 8, 16));
+        assert_eq!(class_key(512, 513, 8192), (512, 1024, 4096));
+        assert_eq!(bucket(4096), 4096);
+        assert_eq!(bucket(100_000), 4096);
+    }
+
+    #[test]
+    fn class_name_roundtrip() {
+        for key in [(0, 0, 0), (4, 8, 16), (512, 1024, 4096)] {
+            assert_eq!(parse_class_name(&class_name(key)), Some(key));
+        }
+        for bad in ["", "m1_k2", "x1_k2_n3", "m1_k2_n3x", "m_k2_n3"] {
+            assert_eq!(parse_class_name(bad), None, "{bad}");
+        }
+    }
+
+    #[test]
+    fn sanitize_clamps() {
+        let p = GemmParams { mr: 0, kc: 0, jc: 1 << 30, max_bands: 3, par_min_flops: 7 };
+        let p = p.sanitized();
+        assert_eq!(p.mr, 4);
+        assert_eq!(p.kc, 8);
+        assert_eq!(p.jc, 1 << 16);
+        assert_eq!(p.max_bands, 3);
+        assert_eq!(p.par_min_flops, 7);
+        assert_eq!(GemmParams { mr: 100, ..p }.sanitized().mr, 8);
+    }
+
+    #[test]
+    fn shapes_arg_parses() {
+        assert_eq!(parse_shapes_arg("tracked").unwrap(), TRACKED_SHAPES.to_vec());
+        assert_eq!(parse_shapes_arg("tiny").unwrap(), TINY_SHAPES.to_vec());
+        assert_eq!(parse_shapes_arg("4x5x6, 7x8x9").unwrap(), vec![(4, 5, 6), (7, 8, 9)]);
+        assert!(parse_shapes_arg("4x5").is_err());
+        assert!(parse_shapes_arg("axbxc").is_err());
+    }
+}

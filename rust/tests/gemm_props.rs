@@ -1,0 +1,238 @@
+//! Property tests pinning the SIMD/tuned GEMM engine against the naive
+//! oracle — ragged and degenerate shapes, the whole tunable-parameter grid,
+//! both ISAs where the machine has them — plus the band-workspace reuse
+//! contract and a small differential sweep proving the tuned backend still
+//! matches the single-rank oracle within the PR 4 conformance tolerances.
+
+use phantom::tensor::gemm::{gemm_a_bt_acc_with, gemm_acc_with, gemm_at_b_acc_with, pack_pool_idle};
+use phantom::tensor::seed::gemm_acc_seed;
+use phantom::tensor::simd::{self, Isa};
+use phantom::tensor::tune::GemmParams;
+use phantom::tensor::Tensor;
+use phantom::testkit::differential::{run_sweep, SweepConfig};
+use phantom::util::prng::Prng;
+use phantom::util::proptest::{assert_close, quickcheck};
+
+/// The kernels the microkernel dispatcher must cover: every ISA compiled
+/// into this binary that the machine can run.
+fn isas() -> Vec<Isa> {
+    simd::available()
+}
+
+/// Blocking-parameter grid hitting every dispatch path: both microkernel
+/// heights, panel edges at/below the microkernel width, forced-serial and
+/// forced-threaded.
+fn param_grid() -> Vec<GemmParams> {
+    let mut out = Vec::new();
+    for &mr in &[4usize, 8] {
+        for &kc in &[8usize, 64] {
+            for &jc in &[8usize, 64] {
+                for &pmf in &[0usize, usize::MAX] {
+                    out.push(GemmParams { mr, kc, jc, max_bands: 3, par_min_flops: pmf });
+                }
+            }
+        }
+    }
+    out
+}
+
+#[test]
+fn degenerate_and_edge_shapes_match_naive() {
+    // m < MR, n < lane width, k = 1, empty dims — the shapes where packing
+    // and edge handling can silently go wrong.
+    let shapes: &[(usize, usize, usize)] = &[
+        (0, 3, 4),
+        (3, 0, 4),
+        (3, 4, 0),
+        (0, 0, 0),
+        (1, 1, 1),
+        (1, 7, 1),
+        (2, 1, 5), // k = 1
+        (3, 5, 7), // everything below one tile
+        (5, 9, 3), // n < lane width
+        (7, 3, 8),
+        (8, 8, 8),
+        (9, 17, 33),
+        (13, 1, 13),
+    ];
+    let mut rng = Prng::new(42);
+    for &(m, k, n) in shapes {
+        let a = Tensor::randn(&[m, k], 1.0, &mut rng);
+        let b = Tensor::randn(&[k, n], 1.0, &mut rng);
+        let want = a.matmul_naive(&b).unwrap();
+        for isa in isas() {
+            for p in param_grid() {
+                let mut out = vec![0.5f32; m * n];
+                let mut expect: Vec<f32> = want.data().iter().map(|x| x + 0.5).collect();
+                gemm_acc_with(p, isa, a.data(), m, k, b.data(), n, &mut out);
+                assert_close(&out, &expect, 1e-5, 1e-6).unwrap_or_else(|e| {
+                    panic!("gemm ({m},{k},{n}) isa={isa:?} params={p:?}: {e}")
+                });
+                // Accumulation must stack: run again, expect doubled delta.
+                gemm_acc_with(p, isa, a.data(), m, k, b.data(), n, &mut out);
+                for (e, w) in expect.iter_mut().zip(want.data()) {
+                    *e += w;
+                }
+                assert_close(&out, &expect, 1e-5, 1e-6).unwrap_or_else(|e| {
+                    panic!("gemm acc x2 ({m},{k},{n}) isa={isa:?} params={p:?}: {e}")
+                });
+            }
+        }
+    }
+}
+
+#[test]
+fn ragged_shapes_match_naive_all_params() {
+    quickcheck("tuned gemm == naive over param grid", |rng| {
+        let m = rng.int_in(1, 40) as usize;
+        let k = rng.int_in(1, 40) as usize;
+        let n = rng.int_in(1, 40) as usize;
+        let a = Tensor::randn(&[m, k], 1.0, rng);
+        let b = Tensor::randn(&[k, n], 1.0, rng);
+        let want = a.matmul_naive(&b).unwrap();
+        // One random param set per case keeps the property fast; the dense
+        // grid runs in degenerate_and_edge_shapes_match_naive.
+        let grid = param_grid();
+        let p = grid[rng.int_in(0, grid.len() as u64 - 1) as usize];
+        for isa in isas() {
+            let mut out = vec![0.0f32; m * n];
+            gemm_acc_with(p, isa, a.data(), m, k, b.data(), n, &mut out);
+            assert_close(&out, want.data(), 1e-5, 1e-6)
+                .map_err(|e| format!("({m},{k},{n}) isa={isa:?} params={p:?}: {e}"))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn transpose_families_match_naive_all_params() {
+    quickcheck("tuned at_b/a_bt == naive", |rng| {
+        let m = rng.int_in(1, 24) as usize;
+        let k = rng.int_in(1, 24) as usize;
+        let n = rng.int_in(1, 24) as usize;
+        let grid = param_grid();
+        let p = grid[rng.int_in(0, grid.len() as u64 - 1) as usize];
+
+        // Aᵀ·B: A stored [k, m].
+        let a = Tensor::randn(&[k, m], 1.0, rng);
+        let b = Tensor::randn(&[k, n], 1.0, rng);
+        let want = a.transpose().unwrap().matmul_naive(&b).unwrap();
+        for isa in isas() {
+            let mut out = vec![0.0f32; m * n];
+            gemm_at_b_acc_with(p, isa, a.data(), k, m, b.data(), n, &mut out);
+            assert_close(&out, want.data(), 1e-5, 1e-6)
+                .map_err(|e| format!("at_b ({m},{k},{n}) isa={isa:?} params={p:?}: {e}"))?;
+        }
+
+        // A·Bᵀ: B stored [n, k].
+        let c = Tensor::randn(&[m, k], 1.0, rng);
+        let d = Tensor::randn(&[n, k], 1.0, rng);
+        let want = c.matmul_naive(&d.transpose().unwrap()).unwrap();
+        for isa in isas() {
+            let mut out = vec![0.0f32; m * n];
+            gemm_a_bt_acc_with(p, isa, c.data(), m, k, d.data(), n, &mut out);
+            assert_close(&out, want.data(), 1e-5, 1e-6)
+                .map_err(|e| format!("a_bt ({m},{k},{n}) isa={isa:?} params={p:?}: {e}"))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn portable_and_simd_isas_agree() {
+    // Same packing, same accumulation structure — the two microkernel
+    // families may differ only by FMA contraction, so they must agree to
+    // tight tolerance on moderately sized products.
+    let isas = isas();
+    if isas.len() < 2 {
+        eprintln!("portable_and_simd_isas_agree: only {isas:?} available, self-check only");
+    }
+    let mut rng = Prng::new(7);
+    for (m, k, n) in [(33, 65, 47), (64, 64, 64), (5, 130, 9)] {
+        let a = Tensor::randn(&[m, k], 1.0, &mut rng);
+        let b = Tensor::randn(&[k, n], 1.0, &mut rng);
+        let p = GemmParams { mr: 8, kc: 32, jc: 32, max_bands: 2, par_min_flops: 0 };
+        let mut outs: Vec<Vec<f32>> = Vec::new();
+        for &isa in &isas {
+            let mut out = vec![0.0f32; m * n];
+            gemm_acc_with(p, isa, a.data(), m, k, b.data(), n, &mut out);
+            outs.push(out);
+        }
+        for o in &outs[1..] {
+            assert_close(o, &outs[0], 1e-5, 1e-6)
+                .unwrap_or_else(|e| panic!("ISA disagreement at ({m},{k},{n}): {e}"));
+        }
+    }
+}
+
+#[test]
+fn seed_kernel_still_matches_naive() {
+    // The frozen baseline itself must stay correct, or the regression gate
+    // measures garbage.
+    let mut rng = Prng::new(99);
+    for (m, k, n) in [(1, 1, 1), (7, 13, 9), (64, 32, 48), (130, 70, 65)] {
+        let a = Tensor::randn(&[m, k], 1.0, &mut rng);
+        let b = Tensor::randn(&[k, n], 1.0, &mut rng);
+        let want = a.matmul_naive(&b).unwrap();
+        let mut out = vec![0.0f32; m * n];
+        gemm_acc_seed(a.data(), m, k, b.data(), n, &mut out);
+        assert_close(&out, want.data(), 1e-5, 1e-6)
+            .unwrap_or_else(|e| panic!("seed kernel ({m},{k},{n}): {e}"));
+    }
+}
+
+#[test]
+fn threaded_bands_return_workspace_to_pool() {
+    // A forced-multithreaded GEMM must leave its per-band buffers in the
+    // global pool (not dead thread-locals), and the pool must stay bounded.
+    // Tests run concurrently and share the pool, so assertions are
+    // one-sided: at least the band count after, never above the cap.
+    let p = GemmParams { mr: 4, kc: 16, jc: 16, max_bands: 4, par_min_flops: 0 };
+    let (m, k, n) = (64, 32, 32);
+    let mut rng = Prng::new(123);
+    let a = Tensor::randn(&[m, k], 1.0, &mut rng);
+    let b = Tensor::randn(&[k, n], 1.0, &mut rng);
+    for _ in 0..8 {
+        let mut out = vec![0.0f32; m * n];
+        gemm_acc_with(p, simd::active(), a.data(), m, k, b.data(), n, &mut out);
+    }
+    let idle = pack_pool_idle();
+    assert!(idle >= 1, "threaded bands left no buffers in the pool");
+    assert!(idle <= 64, "pool unbounded: {idle} idle buffers");
+
+    // And matmul_into still reuses caller scratch unchanged.
+    let mut scratch = phantom::tensor::Scratch::new();
+    let mut out = scratch.zeros(&[m, n]);
+    a.matmul_into(&b, &mut out).unwrap();
+    assert_close(out.data(), a.matmul_naive(&b).unwrap().data(), 1e-4, 1e-5).unwrap();
+    scratch.recycle(out);
+    assert_eq!(scratch.pooled(), 1);
+}
+
+#[test]
+fn tuned_backend_matches_oracle_in_differential_sweep() {
+    // The PR 4 conformance contract: distributed execution over the tuned
+    // kernels must match the single-rank oracle (same kernels, same shapes
+    // → bitwise in practice; loss_rtol only absorbs platform drift) and the
+    // fused kernels must match naive math within the sweep tolerances.
+    let sw = SweepConfig { cases: 6, iters: 2, seed: 0x6E44, ..Default::default() };
+    let report = run_sweep(&sw).unwrap();
+    assert!(
+        report.max_loss_dev <= sw.loss_rtol,
+        "distributed vs oracle loss deviation {} exceeds {}",
+        report.max_loss_dev,
+        sw.loss_rtol
+    );
+    assert!(
+        report.max_grad_dev <= sw.grad_rtol,
+        "fused vs naive grad deviation {} exceeds {}",
+        report.max_grad_dev,
+        sw.grad_rtol
+    );
+    assert!(
+        report.max_forward_dev <= sw.forward_rtol,
+        "TP vs PP forward deviation {} exceeds {}",
+        report.max_forward_dev,
+        sw.forward_rtol
+    );
+}

@@ -1,0 +1,161 @@
+//! Kernel regression gate, run under tier-1 and as a named CI step.
+//!
+//! For every tracked GEMM shape this measures the naive oracle, the frozen
+//! seed kernel (tensor::seed) and the live tuned engine (tensor::gemm) in
+//! one process, writes the full trajectory to BENCH_kernels.json at the
+//! repo root, and then enforces `ci/kernel_baseline.json`:
+//!
+//! * per-shape `min_speedup_vs_naive` floors — speedup-vs-naive is a
+//!   machine-independent yardstick (both sides run on the same box), so the
+//!   committed baseline transfers across CI hardware;
+//! * `min_geomean_speedup_vs_seed` — the ≥1.5× tentpole claim, asserted
+//!   when the AVX2 kernels are active (the portable fallback also beats the
+//!   seed, but the margin is ISA-dependent, so floors are halved there).
+//!
+//! The baseline's `tolerance` (0.85 = the ">15% regression fails" rule)
+//! absorbs CI load jitter; the recorded numbers are the real ones. To re-pin
+//! after an intentional kernel change: run this test, read the recorded
+//! speedups from BENCH_kernels.json, and commit conservative floors (see
+//! DESIGN.md §11).
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use phantom::tensor::seed::gemm_acc_seed;
+use phantom::tensor::simd::{self, Isa};
+use phantom::tensor::tune::{self, TRACKED_SHAPES};
+use phantom::tensor::{gemm_acc, Tensor};
+use phantom::util::json::{read_json, write_records_json};
+use phantom::util::prng::Prng;
+use phantom::util::proptest::assert_close;
+
+/// Minimum wall time of `runs` executions (min is the stablest estimator
+/// under background load).
+fn best_of<F: FnMut()>(runs: usize, mut f: F) -> f64 {
+    let mut best = f64::INFINITY;
+    for _ in 0..runs {
+        let t0 = Instant::now();
+        f();
+        best = best.min(t0.elapsed().as_secs_f64());
+    }
+    best
+}
+
+fn repo_root() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("..")
+}
+
+#[test]
+fn tracked_shapes_meet_committed_baseline() {
+    let isa = simd::active();
+    let avx2 = isa == Isa::Avx2Fma;
+    let mut records: Vec<(String, f64)> = Vec::new();
+    let mut speedups_vs_naive: Vec<(String, f64)> = Vec::new();
+    let mut geomean_seed_log = 0.0f64;
+    let mut geomean_naive_log = 0.0f64;
+
+    let mut rng = Prng::new(0x6A7E);
+    for &(m, k, n) in TRACKED_SHAPES {
+        let a = Tensor::randn(&[m, k], 1.0, &mut rng);
+        let b = Tensor::randn(&[k, n], 1.0, &mut rng);
+
+        // Correctness before speed: tuned and seed must match the oracle.
+        let want = a.matmul_naive(&b).unwrap();
+        let mut tuned_out = vec![0.0f32; m * n];
+        gemm_acc(a.data(), m, k, b.data(), n, &mut tuned_out);
+        assert_close(&tuned_out, want.data(), 1e-3, 1e-4)
+            .unwrap_or_else(|e| panic!("tuned != naive at {m}x{k}x{n}: {e}"));
+        let mut seed_out = vec![0.0f32; m * n];
+        gemm_acc_seed(a.data(), m, k, b.data(), n, &mut seed_out);
+        assert_close(&seed_out, want.data(), 1e-3, 1e-4)
+            .unwrap_or_else(|e| panic!("seed != naive at {m}x{k}x{n}: {e}"));
+
+        let big = m * k * n >= 1 << 26;
+        let naive_runs = if big { 2 } else { 3 };
+        let fast_runs = if big { 4 } else { 8 };
+        let t_naive = best_of(naive_runs, || {
+            let _ = a.matmul_naive(&b).unwrap();
+        });
+        let t_seed = best_of(fast_runs, || {
+            seed_out.fill(0.0);
+            gemm_acc_seed(a.data(), m, k, b.data(), n, &mut seed_out);
+        });
+        let t_tuned = best_of(fast_runs, || {
+            tuned_out.fill(0.0);
+            gemm_acc(a.data(), m, k, b.data(), n, &mut tuned_out);
+        });
+
+        let shape = format!("{m}x{k}x{n}");
+        let vs_naive = t_naive / t_tuned;
+        let vs_seed = t_seed / t_tuned;
+        eprintln!(
+            "{shape}: naive {:.3}ms, seed {:.3}ms, tuned {:.3}ms — {vs_naive:.2}x vs naive, \
+             {vs_seed:.2}x vs seed",
+            t_naive * 1e3,
+            t_seed * 1e3,
+            t_tuned * 1e3
+        );
+        records.push((format!("gemm_naive_{shape}_ns"), t_naive * 1e9));
+        records.push((format!("gemm_seed_{shape}_ns"), t_seed * 1e9));
+        records.push((format!("gemm_{shape}_ns"), t_tuned * 1e9));
+        records.push((format!("speedup_vs_naive_{shape}"), vs_naive));
+        records.push((format!("speedup_vs_seed_{shape}"), vs_seed));
+        speedups_vs_naive.push((shape, vs_naive));
+        geomean_seed_log += vs_seed.ln();
+        geomean_naive_log += vs_naive.ln();
+    }
+
+    let geomean_seed = (geomean_seed_log / TRACKED_SHAPES.len() as f64).exp();
+    let geomean_naive = (geomean_naive_log / TRACKED_SHAPES.len() as f64).exp();
+    eprintln!("geomean speedup: {geomean_seed:.2}x vs seed, {geomean_naive:.2}x vs naive");
+    records.push(("geomean_speedup_vs_seed".to_string(), geomean_seed));
+    records.push(("geomean_speedup_vs_naive".to_string(), geomean_naive));
+    records.push(("isa_avx2".to_string(), if avx2 { 1.0 } else { 0.0 }));
+    records.push(("tuned_classes".to_string(), tune::installed_classes() as f64));
+
+    // Record the trajectory before asserting, so a gate failure still
+    // uploads the numbers that explain it.
+    let bench_path = repo_root().join("BENCH_kernels.json");
+    write_records_json(&bench_path, &records).expect("write BENCH_kernels.json");
+
+    // -- the committed gate ------------------------------------------------
+    let baseline_path = repo_root().join("ci/kernel_baseline.json");
+    let baseline = read_json(&baseline_path)
+        .unwrap_or_else(|e| panic!("read {}: {e}", baseline_path.display()));
+    assert_eq!(baseline.get("version").as_i64(), Some(1), "unknown baseline version");
+    let tolerance = baseline.get("tolerance").as_f64().unwrap_or(0.85);
+    // The portable fallback is slower than the AVX2 kernels; halve the
+    // floors there so the gate still means something on exotic runners.
+    let isa_scale = if avx2 { 1.0 } else { 0.5 };
+
+    let shapes = baseline.get("shapes").as_obj().expect("baseline shapes{}");
+    for (shape, entry) in shapes {
+        let floor = entry.get("min_speedup_vs_naive").as_f64().unwrap_or_else(|| {
+            panic!("baseline shape {shape} missing min_speedup_vs_naive")
+        });
+        let measured = speedups_vs_naive
+            .iter()
+            .find(|(s, _)| s == shape)
+            .unwrap_or_else(|| panic!("baseline shape {shape} is not in TRACKED_SHAPES"))
+            .1;
+        let min = floor * tolerance * isa_scale;
+        assert!(
+            measured >= min,
+            "kernel regression at {shape}: {measured:.2}x vs naive, gate {min:.2}x \
+             (baseline {floor:.2}x, tolerance {tolerance}, isa_scale {isa_scale}); \
+             see BENCH_kernels.json"
+        );
+    }
+
+    if avx2 {
+        let min_geo = baseline.get("min_geomean_speedup_vs_seed").as_f64().unwrap_or(1.5);
+        let min = min_geo * tolerance;
+        assert!(
+            geomean_seed >= min,
+            "tuned kernels only {geomean_seed:.2}x geomean over the seed kernel \
+             (gate {min:.2}x from baseline {min_geo:.2}x); see BENCH_kernels.json"
+        );
+    } else {
+        eprintln!("portable ISA: geomean-vs-seed gate skipped (recorded {geomean_seed:.2}x)");
+    }
+}

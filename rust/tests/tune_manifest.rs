@@ -1,0 +1,163 @@
+//! Compatibility contract for the GEMM tuning manifest, mirroring the ckpt
+//! manifest tests: round-trip fidelity, unknown fields ignored, missing
+//! fields defaulted, version bumps rejected with a clear error, and the
+//! missing-file → defaults fallback that makes deleting the manifest always
+//! safe.
+
+use std::collections::BTreeMap;
+
+use phantom::tensor::simd;
+use phantom::tensor::tune::{self, class_key, class_name, GemmParams, Tuning, TUNE_MANIFEST_NAME};
+
+fn sample_tuning() -> Tuning {
+    let mut classes = BTreeMap::new();
+    classes.insert(
+        class_key(512, 512, 512),
+        GemmParams { mr: 8, kc: 128, jc: 256, max_bands: 4, par_min_flops: 1 << 20 },
+    );
+    classes.insert(
+        class_key(32, 256, 256),
+        GemmParams { mr: 4, kc: 256, jc: 512, max_bands: 0, par_min_flops: 1 << 22 },
+    );
+    Tuning { isa: "avx2+fma".to_string(), classes }
+}
+
+fn tmp_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("phantom-tune-test-{tag}-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+#[test]
+fn roundtrips_through_disk() {
+    let dir = tmp_dir("roundtrip");
+    let path = dir.join(TUNE_MANIFEST_NAME);
+    let t = sample_tuning();
+    t.save(&path).unwrap();
+    let back = Tuning::load(&path).unwrap().expect("manifest exists");
+    assert_eq!(back, t);
+    // The serialized form is stable, diffable JSON with named classes.
+    let text = std::fs::read_to_string(&path).unwrap();
+    assert!(text.contains("\"version\": 1"), "{text}");
+    assert!(text.contains("\"m512_k512_n512\""), "{text}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn missing_file_is_defaults_not_error() {
+    let dir = tmp_dir("missing");
+    let path = dir.join("does-not-exist.json");
+    assert!(Tuning::load(&path).unwrap().is_none());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn unknown_fields_are_ignored() {
+    // A manifest written by a future build with extra fields must load:
+    // only the fields this build knows are read.
+    let text = r#"{
+      "version": 1,
+      "isa": "avx2+fma",
+      "written_by": "phantom 9.9",
+      "classes": {
+        "m64_k64_n64": {"mr": 8, "kc": 128, "jc": 256, "max_bands": 2,
+                        "par_min_flops": 1024, "simd_width": 16}
+      }
+    }"#;
+    let t = Tuning::parse(text).unwrap();
+    let p = t.classes[&(64, 64, 64)];
+    assert_eq!(p.mr, 8);
+    assert_eq!(p.kc, 128);
+    assert_eq!(p.jc, 256);
+    assert_eq!(p.max_bands, 2);
+    assert_eq!(p.par_min_flops, 1024);
+}
+
+#[test]
+fn missing_fields_take_defaults() {
+    let text = r#"{
+      "version": 1,
+      "classes": {"m128_k128_n128": {"kc": 64}}
+    }"#;
+    let t = Tuning::parse(text).unwrap();
+    let p = t.classes[&(128, 128, 128)];
+    let base = GemmParams::default_for(simd::active());
+    assert_eq!(p.kc, 64);
+    assert_eq!(p.mr, base.mr);
+    assert_eq!(p.jc, base.jc);
+    assert_eq!(p.max_bands, base.max_bands);
+    assert_eq!(p.par_min_flops, base.par_min_flops);
+    assert_eq!(t.isa, "unknown");
+}
+
+#[test]
+fn hostile_values_are_sanitized_and_bad_keys_skipped() {
+    let text = r#"{
+      "version": 1,
+      "isa": "portable",
+      "classes": {
+        "m16_k16_n16": {"mr": 0, "kc": 0, "jc": 999999999},
+        "not_a_class": {"mr": 8}
+      }
+    }"#;
+    let t = Tuning::parse(text).unwrap();
+    assert_eq!(t.classes.len(), 1, "malformed key must be skipped, not fatal");
+    let p = t.classes[&(16, 16, 16)];
+    assert_eq!(p.mr, 4, "mr clamped to a supported microkernel height");
+    assert!(p.kc >= 8 && p.jc <= 1 << 16, "blocking clamped: {p:?}");
+}
+
+#[test]
+fn version_bump_is_rejected_with_clear_error() {
+    let err = Tuning::parse(r#"{"version": 2, "classes": {}}"#).unwrap_err();
+    let msg = format!("{err}");
+    assert!(msg.contains("version 2"), "error must name the bad version: {msg}");
+    assert!(msg.contains("phantom tune"), "error must say how to recover: {msg}");
+    assert!(Tuning::parse(r#"{"classes": {}}"#).is_err(), "missing version must be rejected");
+    assert!(Tuning::parse("{not json").is_err());
+}
+
+#[test]
+fn installed_tuning_changes_params_and_clears_back_to_defaults() {
+    // All process-global assertions live in this one test: integration
+    // tests in one binary run on parallel threads, and the install/clear
+    // global is shared.
+    let isa = simd::active();
+    let defaults = GemmParams::default_for(isa);
+
+    let mut t = sample_tuning();
+    let tuned = GemmParams { mr: 4, kc: 32, jc: 64, max_bands: 1, par_min_flops: 1 };
+    t.classes.insert(class_key(100, 100, 100), tuned);
+    tune::install(t);
+    assert_eq!(tune::params_for(100, 100, 100), tuned, "class hit must use tuned params");
+    assert_eq!(tune::params_for(100, 128, 100), tuned, "same bucket, same params");
+    assert_eq!(
+        tune::params_for(2000, 2000, 2000),
+        defaults,
+        "class miss must fall back to ISA defaults"
+    );
+    assert!(tune::installed_classes() >= 3);
+
+    tune::clear_installed();
+    assert_eq!(tune::installed_classes(), 0);
+    assert_eq!(tune::params_for(100, 100, 100), defaults, "cleared tuning = defaults");
+
+    // An end-to-end CLI-shaped cycle: autotune tiny shapes on the quick
+    // grid, save, reload, install, observe the configured difference.
+    let dir = tmp_dir("cycle");
+    let path = dir.join(TUNE_MANIFEST_NAME);
+    let (tuning, outcomes) = tune::autotune(&[(16, 32, 32)], 1, true);
+    assert_eq!(outcomes.len(), 1);
+    assert!(outcomes[0].candidates > 1);
+    tuning.save(&path).unwrap();
+    let back = Tuning::load(&path).unwrap().expect("saved manifest loads");
+    assert_eq!(back.classes.len(), tuning.classes.len());
+    assert_eq!(back.isa, isa.name());
+    let key = class_key(16, 32, 32);
+    assert!(back.classes.contains_key(&key), "missing {}", class_name(key));
+    tune::install(back);
+    let got = tune::params_for(16, 32, 32);
+    assert_eq!(got, tuning.classes[&key].sanitized(), "fresh-process params must be the winner");
+    tune::clear_installed();
+    std::fs::remove_dir_all(&dir).ok();
+}
