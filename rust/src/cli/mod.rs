@@ -154,6 +154,30 @@ COMMANDS:
                                           hot_swap recovery, zero drops)
     predict      One-shot analytic prediction (Frontier scale)
                    --n <n> --p <p> --k <k> [--layers 2] [--batch 32]
+    plan         Energy-optimal configuration search (calibrated perfmodel)
+                   --objective <train|serve>  minimize J/step or J/query [train]
+                   --n <n> --layers <L>   model size             [256, 2]
+                   --p <list>             model-parallel sizes   [2,4,8]
+                   --dp <list>            DP replica counts (train) [1,2]
+                   --k <list>             phantom widths (PP cells) [4,16]
+                   --batch <list>         batch sizes            [16]
+                   --linger-ms <list>     batcher lingers (serve) [0,2]
+                   --slo-ms <x>           latency SLO filter (step or
+                                          worst-case query latency)
+                   --calib <file.json>    measured records to fit the model
+                                          [ci/bench_seed/BENCH_calib.json];
+                                          missing groups fall back to the
+                                          Table III / Frontier constants
+                                          with a logged warning
+                   --iters <N>            validation train iters  [6]
+                   --queries <N>          validation serve queries [96]
+                   --no-validate          skip running best/worst for real
+                   --out <file.json>      sweep + predictions + measurements
+                                          + ranking verdict [BENCH_plan.json]
+                   --write-calib          measure THIS machine's GEMM rates,
+                                          stamp fabric comm/power rows, and
+                                          write the calibration fixture to
+                                          --out instead of planning
     inspect      List artifact configs in the manifest
                    --backend <native|xla> which manifest           [native]
     fit-comm     Fit the collective model (Table III) and print constants

@@ -32,6 +32,34 @@ impl PowerModel {
     }
 }
 
+/// Least-squares fit of the Eqn. 1 power split from measured run summaries:
+/// rows of (busy_s, stall_s, energy_j) where stall is everything charged at
+/// the static draw (comm + idle + dp). This is the calibration path from
+/// BENCH records back to the (A, B) constants (perfmodel::calib). Returns
+/// None when the system is under-determined (< 2 rows, or all rows share
+/// the same busy/stall mix) or the solution is unphysical (A <= 0, B < 0,
+/// or A <= B — the paper requires the dynamic draw to exceed static).
+pub fn fit_power(rows: &[(f64, f64, f64)]) -> Option<PowerModel> {
+    if rows.len() < 2 {
+        return None;
+    }
+    let mut x = Vec::with_capacity(rows.len() * 2);
+    let mut y = Vec::with_capacity(rows.len());
+    for &(busy_s, stall_s, energy_j) in rows {
+        x.extend_from_slice(&[busy_s, stall_s]);
+        y.push(energy_j);
+    }
+    let beta = crate::util::stats::least_squares(&x, 2, &y)?;
+    let (busy_w, idle_w) = (beta[0], beta[1]);
+    if !busy_w.is_finite() || !idle_w.is_finite() || busy_w <= 0.0 || idle_w < 0.0 {
+        return None;
+    }
+    if busy_w <= idle_w {
+        return None;
+    }
+    Some(PowerModel { busy_w, idle_w })
+}
+
 /// What a rank was doing during an interval of virtual time.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Activity {
@@ -268,6 +296,34 @@ mod tests {
         assert_eq!(m.busy_w, 560.0);
         assert_eq!(m.idle_w, 90.0);
         assert!(m.busy_w > m.idle_w, "paper requires A > B");
+    }
+
+    #[test]
+    fn fit_power_recovers_constants() {
+        let truth = PowerModel::frontier();
+        // Three runs with distinct busy/stall mixes, energies exact.
+        let rows: Vec<(f64, f64, f64)> = [(2.0, 0.5), (1.0, 3.0), (4.0, 1.0)]
+            .iter()
+            .map(|&(b, s)| (b, s, truth.energy(b, s)))
+            .collect();
+        let fit = fit_power(&rows).unwrap();
+        assert!((fit.busy_w - truth.busy_w).abs() < 1e-6, "A={}", fit.busy_w);
+        assert!((fit.idle_w - truth.idle_w).abs() < 1e-6, "B={}", fit.idle_w);
+    }
+
+    #[test]
+    fn fit_power_rejects_degenerate_inputs() {
+        assert!(fit_power(&[]).is_none());
+        assert!(fit_power(&[(1.0, 1.0, 650.0)]).is_none(), "one row is under-determined");
+        // Identical busy/stall mixes: the normal equations are singular.
+        assert!(fit_power(&[(1.0, 1.0, 650.0), (2.0, 2.0, 1300.0)]).is_none());
+        // Unphysical split (stall draws more than busy) is refused.
+        let inverted = PowerModel { busy_w: 90.0, idle_w: 560.0 };
+        let rows: Vec<(f64, f64, f64)> = [(2.0, 0.5), (1.0, 3.0), (4.0, 1.0)]
+            .iter()
+            .map(|&(b, s)| (b, s, inverted.energy(b, s)))
+            .collect();
+        assert!(fit_power(&rows).is_none());
     }
 
     #[test]

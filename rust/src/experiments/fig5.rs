@@ -61,8 +61,8 @@ fn total_time_sweep(id: &'static str, n: usize, title: &str) -> Result<Experimen
     for p in [8usize, 16, 32, 64, 128, 256] {
         let k = k_for(p, n);
         let w = Workload { n, layers: 2, p, k, batch: 32 };
-        let tp = predict(Tensor, &w, &g, &net).total_s();
-        let pp = predict(Phantom, &w, &g, &net).total_s();
+        let tp = predict(Tensor, &w, &g, &net)?.total_s();
+        let pp = predict(Phantom, &w, &g, &net)?.total_s();
         table.row(vec![
             p.to_string(),
             k.to_string(),

@@ -30,9 +30,9 @@ pub fn fig6() -> Result<ExperimentResult> {
             let tp_fits = fits_memory(Tensor, &w);
             let pp_fits = fits_memory(Phantom, &w);
             assert!(pp_fits, "PP must fit everywhere in Fig 6");
-            let pp = predict(Phantom, &w, &g, &net).total_s();
+            let pp = predict(Phantom, &w, &g, &net)?.total_s();
             let (tp_cell, winner, tp_json) = if tp_fits {
-                let tp = predict(Tensor, &w, &g, &net).total_s();
+                let tp = predict(Tensor, &w, &g, &net)?.total_s();
                 (
                     fmt_secs(tp),
                     if pp < tp { "PP" } else { "TP" },

@@ -39,6 +39,7 @@ fn run(argv: Vec<String>) -> Result<()> {
         "chaos" => cmd_chaos(&args),
         "experiment" => cmd_experiment(&args),
         "predict" => cmd_predict(&args),
+        "plan" => cmd_plan(&args),
         "inspect" => cmd_inspect(&args),
         "fit-comm" => cmd_fit_comm(),
         "tune" => cmd_tune(&args),
@@ -646,13 +647,14 @@ fn cmd_experiment(args: &Args) -> Result<()> {
 
 fn cmd_predict(args: &Args) -> Result<()> {
     args.check_known(&["n", "p", "k", "layers", "batch"])?;
-    let w = Workload {
-        n: args.opt_parse::<usize>("n")?.unwrap_or(131_072),
-        p: args.opt_parse::<usize>("p")?.unwrap_or(64),
-        k: args.opt_parse::<usize>("k")?.unwrap_or(64),
-        layers: args.opt_parse::<usize>("layers")?.unwrap_or(2),
-        batch: args.opt_parse::<usize>("batch")?.unwrap_or(32),
-    };
+    let w = Workload::new(
+        args.opt_parse::<usize>("n")?.unwrap_or(131_072),
+        args.opt_parse::<usize>("layers")?.unwrap_or(2),
+        args.opt_parse::<usize>("p")?.unwrap_or(64),
+        args.opt_parse::<usize>("k")?.unwrap_or(64),
+        args.opt_parse::<usize>("batch")?.unwrap_or(32),
+    )
+    .context("infeasible workload")?;
     let g = GemmModel::frontier();
     let net = NetworkProfile::frontier();
     let power = phantom::energy::PowerModel::frontier();
@@ -664,7 +666,7 @@ fn cmd_predict(args: &Args) -> Result<()> {
         &["mode", "compute", "comm", "dispatch", "total/iter", "energy/iter", "fits HBM"],
     );
     for mode in [Parallelism::Tensor, Parallelism::Phantom] {
-        let c = perfmodel::predict(mode, &w, &g, &net);
+        let c = perfmodel::predict(mode, &w, &g, &net)?;
         t.row(vec![
             mode.name().to_uppercase(),
             fmt_secs(c.compute_s),
@@ -676,6 +678,179 @@ fn cmd_predict(args: &Args) -> Result<()> {
         ]);
     }
     print!("{}", t.markdown());
+    Ok(())
+}
+
+/// Parse a comma-separated list ("2,4,8") into values.
+fn parse_list<T: std::str::FromStr>(s: &str, what: &str) -> Result<Vec<T>> {
+    let vals: Vec<T> = s
+        .split(',')
+        .map(str::trim)
+        .filter(|t| !t.is_empty())
+        .map(|t| t.parse::<T>().map_err(|_| anyhow::anyhow!("bad {what} value '{t}' in '{s}'")))
+        .collect::<Result<_>>()?;
+    if vals.is_empty() {
+        bail!("empty {what} list '{s}'");
+    }
+    Ok(vals)
+}
+
+fn cmd_plan(args: &Args) -> Result<()> {
+    use phantom::perfmodel::{calib, plan};
+
+    args.check_known(&[
+        "objective",
+        "n",
+        "layers",
+        "p",
+        "dp",
+        "k",
+        "batch",
+        "linger-ms",
+        "slo-ms",
+        "calib",
+        "iters",
+        "queries",
+        "out",
+        "no-validate",
+        "write-calib",
+    ])?;
+
+    if args.flag("write-calib") {
+        // Regenerate the calibration fixture: real wall-clock GEMM rates
+        // from this machine's kernels (what the measured simulator runs),
+        // plus collective/power rows stamped from the virtual fabric's own
+        // constants (for those two groups the model IS the measurement).
+        let iters = args.opt_parse::<usize>("iters")?.unwrap_or(5);
+        let out = args.opt("out").unwrap_or(calib::DEFAULT_CALIB_PATH);
+        let mut records = calib::measure_gemm_records(calib::CALIB_GEMM_SHAPES, iters);
+        let synth = calib::synthesize_records(
+            &GemmModel::frontier(),
+            &NetworkProfile::frontier(),
+            &phantom::energy::PowerModel::frontier(),
+        );
+        records.extend(synth.into_iter().filter(|(k, _)| !k.ends_with("_gflops")));
+        if let Some(parent) = Path::new(out).parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        phantom::util::json::write_records_json(Path::new(out), &records)?;
+        eprintln!("wrote {out} ({} calibration records)", records.len());
+        return Ok(());
+    }
+
+    let objective = plan::Objective::parse(args.opt("objective").unwrap_or("train"))?;
+    let calib_path = args.opt("calib").unwrap_or(calib::DEFAULT_CALIB_PATH);
+    let calibration = calib::Calibration::load_or_default(Path::new(calib_path));
+    calibration.log_warnings();
+    eprintln!("plan: calibration from {}", calibration.source.describe());
+
+    let space = plan::PlanSpace {
+        n: args.opt_parse::<usize>("n")?.unwrap_or(256),
+        layers: args.opt_parse::<usize>("layers")?.unwrap_or(2),
+        modes: vec![Parallelism::Phantom, Parallelism::Tensor],
+        p_choices: parse_list(args.opt("p").unwrap_or("2,4,8"), "--p")?,
+        dp_choices: parse_list(args.opt("dp").unwrap_or("1,2"), "--dp")?,
+        k_choices: parse_list(args.opt("k").unwrap_or("4,16"), "--k")?,
+        batch_choices: parse_list(args.opt("batch").unwrap_or("16"), "--batch")?,
+        linger_choices_s: parse_list::<f64>(args.opt("linger-ms").unwrap_or("0,2"), "--linger-ms")?
+            .into_iter()
+            .map(|ms| ms * 1e-3)
+            .collect(),
+    };
+    let slo_s = args.opt_parse::<f64>("slo-ms")?.map(|ms| ms * 1e-3);
+    let report = plan::plan(&space, objective, slo_s, &calibration)?;
+
+    // Feasible cells, cheapest first.
+    let mut priced: Vec<(&plan::PlanCell, &plan::CellPrediction)> = report
+        .cells
+        .iter()
+        .filter_map(|(c, o)| o.prediction().map(|p| (c, p)))
+        .collect();
+    priced.sort_by(|a, b| a.1.j_per_unit.total_cmp(&b.1.j_per_unit));
+    let mut t = Table::new(
+        &format!(
+            "Plan sweep — n={}, L={}, objective {} ({} feasible / {} cells)",
+            space.n,
+            space.layers,
+            objective.name(),
+            priced.len(),
+            report.cells.len()
+        ),
+        &["config", &format!("predicted {}", objective.unit()), "latency", "rank"],
+    );
+    for (i, (cell, pred)) in priced.iter().enumerate() {
+        let rank = match i {
+            0 => "BEST".to_string(),
+            i if i + 1 == priced.len() => "WORST".to_string(),
+            i => (i + 1).to_string(),
+        };
+        t.row(vec![
+            cell.label(),
+            fmt_joules(pred.j_per_unit),
+            fmt_secs(pred.latency_s),
+            rank,
+        ]);
+    }
+    print!("{}", t.markdown());
+    let infeasible = report.cells.len() - priced.len();
+    if infeasible > 0 {
+        eprintln!("plan: {infeasible} cell(s) infeasible (reasons recorded in the sweep output)");
+    }
+
+    let validation = if args.flag("no-validate") {
+        None
+    } else {
+        let opts = plan::ValidateOptions {
+            iters: args.opt_parse::<usize>("iters")?.unwrap_or(6),
+            queries: args.opt_parse::<usize>("queries")?.unwrap_or(96),
+            ..Default::default()
+        };
+        eprintln!("plan: measuring predicted-best and predicted-worst cells...");
+        Some(plan::validate(&report, &space, &opts)?)
+    };
+
+    let out = args.opt("out").unwrap_or("BENCH_plan.json");
+    phantom::util::json::write_json(
+        Path::new(out),
+        &plan::report_json(&report, &calibration, validation.as_ref()),
+    )?;
+    eprintln!("wrote {out}");
+
+    if let Some(v) = &validation {
+        let mut vt = Table::new(
+            &format!("Plan validation — measured {}", objective.unit()),
+            &["cell", "config", "predicted", "measured"],
+        );
+        vt.row(vec![
+            "best".into(),
+            v.best.cell.label(),
+            fmt_joules(v.best.predicted_j),
+            fmt_joules(v.best.measured_j),
+        ]);
+        vt.row(vec![
+            "worst".into(),
+            v.worst.cell.label(),
+            fmt_joules(v.worst.predicted_j),
+            fmt_joules(v.worst.measured_j),
+        ]);
+        print!("{}", vt.markdown());
+        if v.ranking_holds {
+            println!(
+                "\nranking holds: measured best {} < measured worst {}",
+                fmt_joules(v.best.measured_j),
+                fmt_joules(v.worst.measured_j)
+            );
+        } else {
+            bail!(
+                "ranking verdict FAILED: predicted-best measured {} >= predicted-worst \
+                 measured {} (see {out})",
+                fmt_joules(v.best.measured_j),
+                fmt_joules(v.worst.measured_j)
+            );
+        }
+    }
     Ok(())
 }
 

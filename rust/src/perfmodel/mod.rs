@@ -24,8 +24,13 @@
 //! flip-flop falls, and which configs OOM. Absolute milliseconds are *not*
 //! the claim (see DESIGN.md §2).
 
+use anyhow::{bail, Result};
+
 use crate::energy::PowerModel;
 use crate::simnet::{Collective, NetworkProfile};
+
+pub mod calib;
+pub mod plan;
 
 /// Hardware constants for the analytic model (one Frontier MI250X GCD).
 #[derive(Debug, Clone, Copy)]
@@ -94,7 +99,79 @@ pub struct Workload {
 }
 
 impl Workload {
+    /// Validated constructor: the only way callers should obtain a Workload
+    /// they intend to price. Rejects geometries the runtime cannot run
+    /// (non-divisor n/p) and PP widths outside the paper's Eqn. 8 regime.
+    pub fn new(n: usize, layers: usize, p: usize, k: usize, batch: usize) -> Result<Workload> {
+        let w = Workload { n, layers, p, k, batch };
+        w.validate()?;
+        Ok(w)
+    }
+
+    /// Feasibility guard enforced by `predict`/`predict_forward` and the
+    /// planner. Checks, in order:
+    ///   * positive n / layers / batch,
+    ///   * p >= 2 — at p = 1 every collective is free (simnet prices
+    ///     p <= 1 at zero), so a single-rank cell would always "win";
+    ///     the dense baseline must be priced explicitly, not through the
+    ///     parallel cost model,
+    ///   * p | n — `m()` floor-divides, so a non-divisor geometry would be
+    ///     silently priced as a smaller model than requested while
+    ///     `RunConfig::validate` rejects it at runtime,
+    ///   * k < m (hard width requirement), and
+    ///   * Eqn. 8: k < m * (1 - 1/p), the precondition for every PP-vs-TP
+    ///     complexity claim the model encodes (k is ignored by TP math, but
+    ///     a Workload carries one value for both modes; TP cells use k = 0).
+    pub fn validate(&self) -> Result<()> {
+        if self.n == 0 || self.layers == 0 || self.batch == 0 {
+            bail!(
+                "workload n={}, layers={}, batch={} must all be positive",
+                self.n,
+                self.layers,
+                self.batch
+            );
+        }
+        if self.p < 2 {
+            bail!(
+                "p={} has no parallel decomposition: the collective model prices p <= 1 \
+                 communication as free, so single-rank cells must be priced as the dense \
+                 baseline, not through predict()",
+                self.p
+            );
+        }
+        if self.n % self.p != 0 {
+            bail!(
+                "n={} is not divisible by p={}: this geometry cannot run (RunConfig \
+                 rejects it) and must not be priced",
+                self.n,
+                self.p
+            );
+        }
+        let m = self.n / self.p;
+        if self.k >= m {
+            bail!("k={} must be < n/p = {m}", self.k);
+        }
+        let bound = m as f64 * (1.0 - 1.0 / self.p as f64);
+        if self.k as f64 >= bound {
+            bail!(
+                "k={} violates Eqn. 8: k < (n/p)(1 - 1/p) = {bound:.1} at n={}, p={}",
+                self.k,
+                self.n,
+                self.p
+            );
+        }
+        Ok(())
+    }
+
+    /// Per-rank slice width n/p. Callers must hold a validated workload;
+    /// the division floors otherwise (the bug `validate` exists to stop).
     pub fn m(&self) -> usize {
+        debug_assert!(
+            self.p > 0 && self.n % self.p == 0,
+            "unvalidated workload: n={} p={}",
+            self.n,
+            self.p
+        );
         self.n / self.p
     }
 }
@@ -149,9 +226,16 @@ pub fn tp_comm_s(w: &Workload, net: &NetworkProfile) -> f64 {
 /// optimizer slots (Adam-style, f32) + forward stash (y_full per layer).
 pub fn tp_rank_mem_bytes(w: &Workload) -> u64 {
     let (b, n, m, l) = (w.batch as u64, w.n as u64, w.m() as u64, w.layers as u64);
-    let params = l * (n * m + m);
     let stash = l * (b * n + 2 * b * m);
-    4 * (4 * params + stash)
+    4 * (4 * tp_rank_param_floats(w) + stash)
+}
+
+/// TP per-rank parameter count in floats: the column shard W[:, m] plus
+/// bias slice, per layer. This is also the per-rank gradient payload of the
+/// hybrid DP All-Reduce.
+pub fn tp_rank_param_floats(w: &Workload) -> u64 {
+    let (n, m, l) = (w.n as u64, w.m() as u64, w.layers as u64);
+    l * (n * m + m)
 }
 
 // ---------------------------------------------------------------------------
@@ -195,24 +279,41 @@ pub fn pp_comm_s(w: &Workload, net: &NetworkProfile) -> f64 {
 
 /// PP per-rank memory footprint in bytes.
 pub fn pp_rank_mem_bytes(w: &Workload) -> u64 {
-    let (b, m, k, p, l) =
-        (w.batch as u64, w.m() as u64, w.k as u64, w.p as u64, w.layers as u64);
-    let params = l * (m * m + m * k + p * k * m + m);
+    let (b, m, k, p, l) = (w.batch as u64, w.m() as u64, w.k as u64, w.p as u64, w.layers as u64);
     let stash = l * (2 * b * m + p * b * k);
-    4 * (4 * params + stash)
+    4 * (4 * pp_rank_param_floats(w) + stash)
+}
+
+/// PP per-rank parameter count in floats: local block, compressor, p
+/// decompressors and bias slice, per layer. The DP All-Reduce payload.
+pub fn pp_rank_param_floats(w: &Workload) -> u64 {
+    let (m, k, p, l) = (w.m() as u64, w.k as u64, w.p as u64, w.layers as u64);
+    l * (m * m + m * k + p * k * m + m)
+}
+
+/// Per-rank parameter floats for a mode — the gradient payload one rank
+/// contributes to the hybrid DP gradient All-Reduce.
+pub fn rank_param_floats(mode: crate::config::Parallelism, w: &Workload) -> u64 {
+    match mode {
+        crate::config::Parallelism::Tensor => tp_rank_param_floats(w),
+        crate::config::Parallelism::Phantom => pp_rank_param_floats(w),
+    }
 }
 
 /// Frontier GCD HBM capacity (bytes): 64 GB.
 pub const FRONTIER_HBM_BYTES: u64 = 64 * (1 << 30);
 
-/// Full per-iteration prediction for a workload in one mode.
+/// Full per-iteration (forward + backward + update) prediction for a
+/// workload in one mode. Fails on workloads that violate the feasibility
+/// guard (`Workload::validate`): non-divisor n/p, p < 2, or Eqn. 8.
 pub fn predict(
     mode: crate::config::Parallelism,
     w: &Workload,
     g: &GemmModel,
     net: &NetworkProfile,
-) -> IterCost {
-    match mode {
+) -> Result<IterCost> {
+    w.validate()?;
+    Ok(match mode {
         crate::config::Parallelism::Tensor => IterCost {
             compute_s: tp_compute_s(w, g),
             comm_s: tp_comm_s(w, net),
@@ -223,7 +324,41 @@ pub fn predict(
             comm_s: pp_comm_s(w, net),
             dispatch_s: pp_dispatch_s(w, g),
         },
-    }
+    })
+}
+
+/// Forward-only (inference) per-rank prediction: the cost of serving one
+/// batch of `w.batch` queries. Same feasibility guard as `predict`.
+///
+/// TP forward per layer: the local GEMM against the column shard, an
+/// All-Gather of the m*b partial and the n*b activation Broadcast. PP
+/// forward per layer: local block + compressor GEMMs, (p-1) decompressions,
+/// one k*b All-Gather, and the host-side assembly of the decompressor
+/// outputs (batch * n floats) — the backward-only gradient-aggregation
+/// bookkeeping (peer_quad_s) is not charged.
+pub fn predict_forward(
+    mode: crate::config::Parallelism,
+    w: &Workload,
+    g: &GemmModel,
+    net: &NetworkProfile,
+) -> Result<IterCost> {
+    w.validate()?;
+    let (b, m, k, p, l) = (w.batch, w.m(), w.k, w.p, w.layers as f64);
+    Ok(match mode {
+        crate::config::Parallelism::Tensor => IterCost {
+            compute_s: l * g.gemm_s(b, m, w.n),
+            comm_s: l
+                * (net.time(Collective::AllGather, m * b, p)
+                    + net.time(Collective::Broadcast, w.n * b, p)),
+            dispatch_s: 0.0,
+        },
+        crate::config::Parallelism::Phantom => IterCost {
+            compute_s: l
+                * (g.gemm_s(b, m, m) + g.gemm_s(b, k, m) + (p - 1) as f64 * g.gemm_s(b, m, k)),
+            comm_s: l * net.time(Collective::AllGather, k * b, p),
+            dispatch_s: l * g.host_float_s * (b as f64) * (w.n as f64),
+        },
+    })
 }
 
 /// Does this workload fit in GCD memory?
@@ -299,13 +434,13 @@ mod tests {
         let g = gm();
         for p in [32, 64, 128] {
             let w = Workload { n: 131_072, layers: 2, p, k: 64, batch: 32 };
-            let pp = predict(Phantom, &w, &g, &net()).total_s();
-            let tp = predict(Tensor, &w, &g, &net()).total_s();
+            let pp = predict(Phantom, &w, &g, &net()).unwrap().total_s();
+            let tp = predict(Tensor, &w, &g, &net()).unwrap().total_s();
             assert!(pp < tp, "p={p}: pp={pp} tp={tp} (PP should win)");
         }
         let w = Workload { n: 131_072, layers: 2, p: 256, k: 64, batch: 32 };
-        let pp = predict(Phantom, &w, &g, &net()).total_s();
-        let tp = predict(Tensor, &w, &g, &net()).total_s();
+        let pp = predict(Phantom, &w, &g, &net()).unwrap().total_s();
+        let tp = predict(Tensor, &w, &g, &net()).unwrap().total_s();
         assert!(tp < pp, "p=256 flip-flop: tp={tp} pp={pp} (TP should win)");
     }
 
@@ -315,8 +450,8 @@ mod tests {
         let g = gm();
         for p in [64, 128, 256] {
             let w = Workload { n: 262_144, layers: 2, p, k: 64, batch: 32 };
-            let pp = predict(Phantom, &w, &g, &net()).total_s();
-            let tp = predict(Tensor, &w, &g, &net()).total_s();
+            let pp = predict(Phantom, &w, &g, &net()).unwrap().total_s();
+            let tp = predict(Tensor, &w, &g, &net()).unwrap().total_s();
             assert!(pp < tp, "p={p}: pp={pp} tp={tp}");
         }
     }
@@ -351,9 +486,67 @@ mod tests {
         let g = gm();
         for (n, p) in [(16_384, 8), (16_384, 16), (65_536, 64)] {
             let w = Workload { n, layers: 2, p, k: 16, batch: 32 };
-            let pp = predict(Phantom, &w, &g, &net()).energy_j(&power);
-            let tp = predict(Tensor, &w, &g, &net()).energy_j(&power);
+            let pp = predict(Phantom, &w, &g, &net()).unwrap().energy_j(&power);
+            let tp = predict(Tensor, &w, &g, &net()).unwrap().energy_j(&power);
             assert!(pp < tp, "n={n} p={p}: pp={pp} tp={tp}");
         }
+    }
+
+    #[test]
+    fn non_divisor_geometry_cannot_be_priced() {
+        // Regression (ISSUE 7): m() used to floor-divide silently, so a
+        // (n=100, p=3) workload was priced as if n were 99.
+        assert!(Workload::new(100, 2, 3, 4, 32).is_err());
+        let w = Workload { n: 100, layers: 2, p: 3, k: 4, batch: 32 };
+        for mode in [Tensor, Phantom] {
+            assert!(predict(mode, &w, &gm(), &net()).is_err(), "{mode:?}");
+            assert!(predict_forward(mode, &w, &gm(), &net()).is_err(), "{mode:?}");
+        }
+    }
+
+    #[test]
+    fn eqn8_violations_are_rejected() {
+        // k >= m: hard width violation.
+        assert!(Workload::new(64, 2, 4, 16, 32).is_err());
+        // k in [m(1-1/p), m): passes the hard check, fails Eqn. 8.
+        // n=64, p=4: m=16, bound = 12. k=13 must be rejected, k=11 accepted.
+        assert!(Workload::new(64, 2, 4, 13, 32).is_err());
+        assert!(Workload::new(64, 2, 4, 11, 32).is_ok());
+        let w = Workload { n: 64, layers: 2, p: 4, k: 13, batch: 32 };
+        assert!(predict(Phantom, &w, &gm(), &net()).is_err());
+    }
+
+    #[test]
+    fn p1_cannot_be_priced_through_the_parallel_model() {
+        // simnet prices p <= 1 collectives at zero; predict() must refuse
+        // rather than report free communication for a single-rank "cluster".
+        assert!(Workload::new(64, 2, 1, 0, 32).is_err());
+        let w = Workload { n: 64, layers: 2, p: 1, k: 0, batch: 32 };
+        for mode in [Tensor, Phantom] {
+            assert!(predict(mode, &w, &gm(), &net()).is_err(), "{mode:?}");
+        }
+    }
+
+    #[test]
+    fn forward_prediction_is_a_strict_subset_of_training() {
+        for mode in [Tensor, Phantom] {
+            let w = Workload::new(16_384, 2, 16, 16, 32).unwrap();
+            let full = predict(mode, &w, &gm(), &net()).unwrap();
+            let fwd = predict_forward(mode, &w, &gm(), &net()).unwrap();
+            assert!(fwd.compute_s > 0.0 && fwd.compute_s < full.compute_s, "{mode:?}");
+            assert!(fwd.comm_s > 0.0 && fwd.comm_s < full.comm_s, "{mode:?}");
+            assert!(fwd.dispatch_s <= full.dispatch_s, "{mode:?}");
+        }
+    }
+
+    #[test]
+    fn param_floats_match_memory_model_and_dp_payload_sanity() {
+        let w = Workload::new(1024, 2, 8, 16, 32).unwrap();
+        // Eqn. 8 regime: PP carries fewer parameters per rank than TP.
+        assert!(pp_rank_param_floats(&w) < tp_rank_param_floats(&w));
+        assert_eq!(rank_param_floats(Tensor, &w), tp_rank_param_floats(&w));
+        assert_eq!(rank_param_floats(Phantom, &w), pp_rank_param_floats(&w));
+        // The memory model counts 4 f32 copies of the parameters + stash.
+        assert!(tp_rank_mem_bytes(&w) > 16 * tp_rank_param_floats(&w));
     }
 }

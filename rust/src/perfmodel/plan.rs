@@ -1,0 +1,729 @@
+//! Energy-optimal configuration planner (`phantom plan`).
+//!
+//! Enumerates (mode, p, dp, k, batch, linger) cells over a plan space,
+//! filters them through the feasibility guard (divisibility, Eqn. 8,
+//! `fits_memory`, p >= 2 — see `Workload::validate`), prices each feasible
+//! cell with the calibrated analytic model (`predict` for training,
+//! `predict_forward` + batcher linger for serving, plus the hybrid DP
+//! All-Reduce term the base model does not cover), and picks the
+//! minimum-J/step or minimum-J/query cell subject to an optional latency
+//! SLO.
+//!
+//! Validation is empirical: `validate` actually runs the predicted-best and
+//! predicted-worst feasible cells through the measured simulator (the
+//! coordinator driver for training, the serving stack for queries) and
+//! checks that the measured Joule ranking agrees with the predicted one.
+//! `report_json` serializes sweep + predictions + measurements + verdict as
+//! BENCH_plan.json.
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::{
+    BackendKind, HardwareConfig, ModelConfig, Parallelism, RunConfig, ServeConfig, TrainConfig,
+};
+use crate::runtime::ExecServer;
+use crate::serve::{self, LoadGenConfig};
+use crate::simnet::Collective;
+use crate::util::json::Json;
+
+use super::calib::Calibration;
+use super::{fits_memory, predict, predict_forward, rank_param_floats, IterCost, Workload};
+
+/// What the planner minimizes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Objective {
+    /// Cluster Joules per training step (paper Table I's energy column).
+    TrainJPerStep,
+    /// Cluster Joules per served query.
+    ServeJPerQuery,
+}
+
+impl Objective {
+    pub fn parse(s: &str) -> Result<Objective> {
+        match s {
+            "train" | "j-per-step" => Ok(Objective::TrainJPerStep),
+            "serve" | "j-per-query" => Ok(Objective::ServeJPerQuery),
+            _ => bail!("unknown objective '{s}' (want train|serve)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Objective::TrainJPerStep => "train",
+            Objective::ServeJPerQuery => "serve",
+        }
+    }
+
+    pub fn unit(&self) -> &'static str {
+        match self {
+            Objective::TrainJPerStep => "J/step",
+            Objective::ServeJPerQuery => "J/query",
+        }
+    }
+}
+
+/// The search space: a fixed model (n, layers) crossed with configuration
+/// choices. TP cells ignore `k_choices` (they carry the canonical k = 0);
+/// `dp_choices` applies to training only (a serving replica pool serves
+/// independent traffic, so J/query is dp-invariant under this model);
+/// `linger_choices_s` applies to serving only.
+#[derive(Debug, Clone)]
+pub struct PlanSpace {
+    pub n: usize,
+    pub layers: usize,
+    pub modes: Vec<Parallelism>,
+    pub p_choices: Vec<usize>,
+    pub dp_choices: Vec<usize>,
+    pub k_choices: Vec<usize>,
+    pub batch_choices: Vec<usize>,
+    pub linger_choices_s: Vec<f64>,
+}
+
+impl PlanSpace {
+    /// A small default sweep around a model size — the CI smoke grid.
+    pub fn small_sweep(n: usize, layers: usize) -> PlanSpace {
+        PlanSpace {
+            n,
+            layers,
+            modes: vec![Parallelism::Phantom, Parallelism::Tensor],
+            p_choices: vec![2, 4, 8],
+            dp_choices: vec![1],
+            k_choices: vec![4, 16],
+            batch_choices: vec![16],
+            linger_choices_s: vec![0.0, 2e-3],
+        }
+    }
+}
+
+/// One candidate configuration.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PlanCell {
+    pub mode: Parallelism,
+    pub p: usize,
+    pub dp: usize,
+    /// Phantom width; 0 for TP cells (ignored by the TP math).
+    pub k: usize,
+    pub batch: usize,
+    /// Batcher linger deadline (serving cells; 0 for training).
+    pub linger_s: f64,
+}
+
+impl PlanCell {
+    pub fn label(&self) -> String {
+        let mut s = format!("{} p={} dp={}", self.mode.name(), self.p, self.dp);
+        if self.mode == Parallelism::Phantom {
+            s.push_str(&format!(" k={}", self.k));
+        }
+        s.push_str(&format!(" b={}", self.batch));
+        if self.linger_s > 0.0 {
+            s.push_str(&format!(" linger={:.1}ms", self.linger_s * 1e3));
+        }
+        s
+    }
+}
+
+/// Priced analytic prediction for a feasible cell.
+#[derive(Debug, Clone, Copy)]
+pub struct CellPrediction {
+    /// Per-rank model-parallel cost of one step (train) / one dispatched
+    /// batch (serve).
+    pub cost: IterCost,
+    /// Hybrid DP gradient All-Reduce seconds (training, dp > 1).
+    pub dp_comm_s: f64,
+    /// Predicted latency: step time (train) or worst-case query time
+    /// including the full linger wait (serve).
+    pub latency_s: f64,
+    /// Cluster energy of one step / one batch across all p * dp ranks.
+    pub cluster_j: f64,
+    /// The objective: J/step (train) or J/query (serve).
+    pub j_per_unit: f64,
+}
+
+/// Outcome of pricing one cell.
+#[derive(Debug, Clone)]
+pub enum CellOutcome {
+    Priced(CellPrediction),
+    Infeasible(String),
+}
+
+impl CellOutcome {
+    pub fn prediction(&self) -> Option<&CellPrediction> {
+        match self {
+            CellOutcome::Priced(p) => Some(p),
+            CellOutcome::Infeasible(_) => None,
+        }
+    }
+}
+
+/// The full sweep: every enumerated cell with its outcome, plus the argmin
+/// and argmax over the feasible ones.
+#[derive(Debug, Clone)]
+pub struct PlanReport {
+    pub objective: Objective,
+    pub n: usize,
+    pub layers: usize,
+    pub slo_s: Option<f64>,
+    pub cells: Vec<(PlanCell, CellOutcome)>,
+    /// Index into `cells` of the minimum-J feasible cell.
+    pub best: Option<usize>,
+    /// Index into `cells` of the maximum-J feasible cell.
+    pub worst: Option<usize>,
+}
+
+impl PlanReport {
+    pub fn feasible_count(&self) -> usize {
+        self.cells.iter().filter(|(_, o)| o.prediction().is_some()).count()
+    }
+}
+
+/// Enumerate and price the whole space. Infeasible cells are kept in the
+/// report with their rejection reason — the sweep record shows WHY a cell
+/// was excluded, not just that it was.
+pub fn plan(
+    space: &PlanSpace,
+    objective: Objective,
+    slo_s: Option<f64>,
+    calib: &Calibration,
+) -> Result<PlanReport> {
+    if let Some(slo) = slo_s {
+        if !(slo > 0.0) {
+            bail!("latency SLO must be positive, got {slo}");
+        }
+    }
+    let dp_choices: &[usize] = match objective {
+        Objective::TrainJPerStep => &space.dp_choices,
+        Objective::ServeJPerQuery => &[1],
+    };
+    let linger_choices: &[f64] = match objective {
+        Objective::TrainJPerStep => &[0.0],
+        Objective::ServeJPerQuery => &space.linger_choices_s,
+    };
+    let mut cells: Vec<PlanCell> = Vec::new();
+    for &mode in &space.modes {
+        let k_choices: &[usize] = match mode {
+            Parallelism::Phantom => &space.k_choices,
+            Parallelism::Tensor => &[0],
+        };
+        for &p in &space.p_choices {
+            for &dp in dp_choices {
+                for &k in k_choices {
+                    for &batch in &space.batch_choices {
+                        for &linger_s in linger_choices {
+                            cells.push(PlanCell { mode, p, dp, k, batch, linger_s });
+                        }
+                    }
+                }
+            }
+        }
+    }
+    if cells.is_empty() {
+        bail!("empty plan space (no modes, p, k or batch choices)");
+    }
+    let priced: Vec<(PlanCell, CellOutcome)> = cells
+        .into_iter()
+        .map(|cell| {
+            let outcome = price_cell(&cell, space, objective, slo_s, calib);
+            (cell, outcome)
+        })
+        .collect();
+    let mut best: Option<usize> = None;
+    let mut worst: Option<usize> = None;
+    let (mut best_j, mut worst_j) = (f64::INFINITY, f64::NEG_INFINITY);
+    for (i, (_, o)) in priced.iter().enumerate() {
+        if let Some(pred) = o.prediction() {
+            if pred.j_per_unit < best_j {
+                best_j = pred.j_per_unit;
+                best = Some(i);
+            }
+            if pred.j_per_unit > worst_j {
+                worst_j = pred.j_per_unit;
+                worst = Some(i);
+            }
+        }
+    }
+    Ok(PlanReport {
+        objective,
+        n: space.n,
+        layers: space.layers,
+        slo_s,
+        cells: priced,
+        best,
+        worst,
+    })
+}
+
+/// Price one cell, or explain why it cannot be priced.
+fn price_cell(
+    cell: &PlanCell,
+    space: &PlanSpace,
+    objective: Objective,
+    slo_s: Option<f64>,
+    calib: &Calibration,
+) -> CellOutcome {
+    if cell.p < 2 {
+        // Satellite bugfix (ISSUE 7): simnet prices p <= 1 collectives at
+        // zero seconds, so a single-rank cell would always "win" on free
+        // communication. It is excluded from the parallel search space;
+        // price a dense single-device baseline separately if needed.
+        return CellOutcome::Infeasible(
+            "p=1 excluded: the collective model prices single-rank communication as free \
+             (simnet p <= 1 => 0 s), so the parallel cost model cannot rank it honestly"
+                .to_string(),
+        );
+    }
+    if cell.dp == 0 || cell.batch < cell.dp {
+        return CellOutcome::Infeasible(format!(
+            "batch={} cannot be row-sharded over dp={} replicas",
+            cell.batch, cell.dp
+        ));
+    }
+    if cell.mode == Parallelism::Phantom && cell.k == 0 {
+        return CellOutcome::Infeasible("PP needs k >= 1 (zero-width compressor)".to_string());
+    }
+    // Per-replica workload: the DP batch is row-sharded; the slowest
+    // replica carries ceil(batch / dp) rows and sets the step time.
+    let replica_batch = cell.batch.div_ceil(cell.dp);
+    let w = match Workload::new(space.n, space.layers, cell.p, cell.k, replica_batch) {
+        Ok(w) => w,
+        Err(e) => return CellOutcome::Infeasible(format!("{e:#}")),
+    };
+    if !fits_memory(cell.mode, &w) {
+        return CellOutcome::Infeasible(format!(
+            "exceeds the {} GiB GCD HBM budget",
+            super::FRONTIER_HBM_BYTES >> 30
+        ));
+    }
+    let power = &calib.power;
+    match objective {
+        Objective::TrainJPerStep => {
+            let cost = match predict(cell.mode, &w, &calib.gemm, &calib.net) {
+                Ok(c) => c,
+                Err(e) => return CellOutcome::Infeasible(format!("{e:#}")),
+            };
+            // DP extension: one flat gradient All-Reduce of the per-rank
+            // parameter shard across the dp replicas, per step, charged at
+            // the static draw like any collective.
+            let dp_comm_s = if cell.dp > 1 {
+                let payload = rank_param_floats(cell.mode, &w) as usize;
+                calib.net.time(Collective::AllReduce, payload, cell.dp)
+            } else {
+                0.0
+            };
+            let latency_s = cost.total_s() + dp_comm_s;
+            if let Some(slo) = slo_s {
+                if latency_s > slo {
+                    return CellOutcome::Infeasible(format!(
+                        "predicted step latency {latency_s:.3e} s exceeds the SLO {slo:.3e} s"
+                    ));
+                }
+            }
+            let ranks = (cell.p * cell.dp) as f64;
+            let cluster_j = ranks
+                * (power.busy_w * cost.compute_s
+                    + power.idle_w * (cost.comm_s + cost.dispatch_s + dp_comm_s));
+            CellOutcome::Priced(CellPrediction {
+                cost,
+                dp_comm_s,
+                latency_s,
+                cluster_j,
+                j_per_unit: cluster_j,
+            })
+        }
+        Objective::ServeJPerQuery => {
+            let cost = match predict_forward(cell.mode, &w, &calib.gemm, &calib.net) {
+                Ok(c) => c,
+                Err(e) => return CellOutcome::Infeasible(format!("{e:#}")),
+            };
+            // Linger extension: a full batch dispatches after waiting up to
+            // linger_s for stragglers; the pool idles (static draw) while
+            // the batch forms. Worst-case query latency = full linger wait
+            // + the batch's forward time.
+            let latency_s = cell.linger_s + cost.total_s();
+            if let Some(slo) = slo_s {
+                if latency_s > slo {
+                    return CellOutcome::Infeasible(format!(
+                        "predicted worst-case query latency {latency_s:.3e} s exceeds the \
+                         SLO {slo:.3e} s"
+                    ));
+                }
+            }
+            let ranks = cell.p as f64;
+            let batch_j = ranks
+                * (power.busy_w * cost.compute_s
+                    + power.idle_w * (cost.comm_s + cost.dispatch_s + cell.linger_s));
+            CellOutcome::Priced(CellPrediction {
+                cost,
+                dp_comm_s: 0.0,
+                latency_s,
+                cluster_j: batch_j,
+                j_per_unit: batch_j / cell.batch as f64,
+            })
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Empirical validation: run predicted-best and predicted-worst for real
+// ---------------------------------------------------------------------------
+
+/// Knobs for the validation runs.
+#[derive(Debug, Clone, Copy)]
+pub struct ValidateOptions {
+    /// Training iterations per measured cell (>= 2: one warmup iteration
+    /// is excluded from the energy accounting).
+    pub iters: usize,
+    /// Queries per measured serving cell.
+    pub queries: usize,
+    /// Arrival rate for serving cells (virtual q/s).
+    pub rate_qps: f64,
+    pub seed: u64,
+}
+
+impl Default for ValidateOptions {
+    fn default() -> Self {
+        ValidateOptions { iters: 6, queries: 96, rate_qps: 2_000.0, seed: 0x71A2 }
+    }
+}
+
+/// One empirically measured cell.
+#[derive(Debug, Clone)]
+pub struct MeasuredCell {
+    pub cell: PlanCell,
+    pub predicted_j: f64,
+    pub measured_j: f64,
+}
+
+/// The verdict: did the measured Joule ranking agree with the prediction?
+#[derive(Debug, Clone)]
+pub struct ValidationReport {
+    pub best: MeasuredCell,
+    pub worst: MeasuredCell,
+    /// True iff measured(best) < measured(worst), strictly.
+    pub ranking_holds: bool,
+}
+
+/// Run the report's predicted-best and predicted-worst cells through the
+/// measured simulator and compare rankings. Fails if the report has fewer
+/// than two distinct feasible cells.
+pub fn validate(
+    report: &PlanReport,
+    space: &PlanSpace,
+    opts: &ValidateOptions,
+) -> Result<ValidationReport> {
+    let bi = report.best.context("no feasible cells to validate")?;
+    let wi = report.worst.context("no feasible cells to validate")?;
+    if bi == wi {
+        bail!("only one feasible cell; ranking validation needs at least two");
+    }
+    let best = measure_cell(&report.cells[bi], space, report.objective, opts)
+        .context("measuring predicted-best cell")?;
+    let worst = measure_cell(&report.cells[wi], space, report.objective, opts)
+        .context("measuring predicted-worst cell")?;
+    let ranking_holds = best.measured_j < worst.measured_j;
+    Ok(ValidationReport { best, worst, ranking_holds })
+}
+
+fn measure_cell(
+    entry: &(PlanCell, CellOutcome),
+    space: &PlanSpace,
+    objective: Objective,
+    opts: &ValidateOptions,
+) -> Result<MeasuredCell> {
+    let (cell, outcome) = entry;
+    let pred = outcome.prediction().context("cell was not priced")?;
+    let name = format!(
+        "plan-{}-p{}-dp{}-k{}-b{}",
+        cell.mode.name(),
+        cell.p,
+        cell.dp,
+        cell.k,
+        cell.batch
+    );
+    let cfg = RunConfig {
+        mode: cell.mode,
+        p: cell.p,
+        dp: cell.dp,
+        model: ModelConfig { n: space.n, layers: space.layers, k: cell.k },
+        train: TrainConfig {
+            batch: cell.batch,
+            seed: opts.seed,
+            max_iters: opts.iters.max(2),
+            ..TrainConfig::default()
+        },
+        hardware: HardwareConfig::frontier_measured(),
+        artifact: Some(name),
+        backend: BackendKind::Native,
+    };
+    cfg.validate().with_context(|| format!("validation config for {}", cell.label()))?;
+    let server = ExecServer::native_for(&cfg)?;
+    let measured_j = match objective {
+        Objective::TrainJPerStep => {
+            let report = crate::coordinator::train(&cfg, &server)?;
+            report.energy_per_iter_j()
+        }
+        Objective::ServeJPerQuery => {
+            let scfg = ServeConfig {
+                queue_depth: 4 * cell.batch,
+                max_batch: cell.batch,
+                linger_s: cell.linger_s,
+                mode: cell.mode,
+            };
+            let lcfg = LoadGenConfig {
+                queries: opts.queries,
+                rate_qps: opts.rate_qps,
+                seed: opts.seed,
+                open_loop: false,
+            };
+            let report = serve::run_load(&cfg, &scfg, &lcfg, &server)?;
+            report.energy_per_kq_j / 1_000.0
+        }
+    };
+    Ok(MeasuredCell { cell: *cell, predicted_j: pred.j_per_unit, measured_j })
+}
+
+// ---------------------------------------------------------------------------
+// BENCH_plan.json
+// ---------------------------------------------------------------------------
+
+fn cell_json(cell: &PlanCell) -> Vec<(&'static str, Json)> {
+    vec![
+        ("mode", Json::str(cell.mode.name())),
+        ("p", Json::int(cell.p as i64)),
+        ("dp", Json::int(cell.dp as i64)),
+        ("k", Json::int(cell.k as i64)),
+        ("batch", Json::int(cell.batch as i64)),
+        ("linger_s", Json::num(cell.linger_s)),
+    ]
+}
+
+fn measured_json(m: &MeasuredCell) -> Json {
+    let mut fields = cell_json(&m.cell);
+    fields.push(("predicted_j", Json::num(m.predicted_j)));
+    fields.push(("measured_j", Json::num(m.measured_j)));
+    Json::obj(fields)
+}
+
+/// Serialize the full sweep + predictions (+ measurements and verdict when
+/// validation ran) — the structured BENCH_plan.json payload.
+pub fn report_json(
+    report: &PlanReport,
+    calib: &Calibration,
+    validation: Option<&ValidationReport>,
+) -> Json {
+    let sweep: Vec<Json> = report
+        .cells
+        .iter()
+        .map(|(cell, outcome)| {
+            let mut fields = cell_json(cell);
+            match outcome {
+                CellOutcome::Priced(p) => {
+                    fields.push(("feasible", Json::Bool(true)));
+                    fields.push(("predicted_j", Json::num(p.j_per_unit)));
+                    fields.push(("predicted_latency_s", Json::num(p.latency_s)));
+                    fields.push(("dp_comm_s", Json::num(p.dp_comm_s)));
+                }
+                CellOutcome::Infeasible(reason) => {
+                    fields.push(("feasible", Json::Bool(false)));
+                    fields.push(("infeasible_reason", Json::str(reason.as_str())));
+                }
+            }
+            Json::obj(fields)
+        })
+        .collect();
+    let mut fields = vec![
+        ("objective", Json::str(report.objective.name())),
+        ("unit", Json::str(report.objective.unit())),
+        ("n", Json::int(report.n as i64)),
+        ("layers", Json::int(report.layers as i64)),
+        ("slo_s", report.slo_s.map(Json::num).unwrap_or(Json::Null)),
+        ("calibration_source", Json::str(calib.source.describe())),
+        (
+            "calibration_warnings",
+            Json::arr(calib.warnings.iter().map(|w| Json::str(w.as_str())).collect()),
+        ),
+        ("sweep", Json::arr(sweep)),
+        ("feasible_cells", Json::int(report.feasible_count() as i64)),
+        (
+            "predicted_best",
+            report
+                .best
+                .map(|i| Json::obj(cell_json(&report.cells[i].0)))
+                .unwrap_or(Json::Null),
+        ),
+        (
+            "predicted_worst",
+            report
+                .worst
+                .map(|i| Json::obj(cell_json(&report.cells[i].0)))
+                .unwrap_or(Json::Null),
+        ),
+    ];
+    match validation {
+        Some(v) => {
+            fields.push(("measured_best", measured_json(&v.best)));
+            fields.push(("measured_worst", measured_json(&v.worst)));
+            fields.push(("ranking_holds", Json::Bool(v.ranking_holds)));
+        }
+        None => fields.push(("ranking_holds", Json::Null)),
+    }
+    Json::obj(fields)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Prng;
+
+    fn calib() -> Calibration {
+        Calibration::frontier_defaults()
+    }
+
+    #[test]
+    fn small_sweep_prices_both_modes_and_excludes_p1() {
+        let mut space = PlanSpace::small_sweep(256, 2);
+        space.p_choices = vec![1, 2, 4];
+        let report = plan(&space, Objective::TrainJPerStep, None, &calib()).unwrap();
+        assert!(report.feasible_count() >= 3, "{}", report.feasible_count());
+        let mut saw = (false, false);
+        for (cell, outcome) in &report.cells {
+            match outcome {
+                CellOutcome::Priced(pred) => {
+                    assert!(cell.p >= 2, "p=1 must never be priced");
+                    assert!(pred.j_per_unit > 0.0);
+                    match cell.mode {
+                        Parallelism::Phantom => saw.0 = true,
+                        Parallelism::Tensor => saw.1 = true,
+                    }
+                }
+                CellOutcome::Infeasible(reason) => {
+                    if cell.p == 1 {
+                        assert!(reason.contains("p=1"), "{reason}");
+                    }
+                }
+            }
+        }
+        assert!(saw.0 && saw.1, "both modes must appear in the feasible set");
+        assert!(report.best.is_some() && report.worst.is_some());
+        let b = report.cells[report.best.unwrap()].1.prediction().unwrap().j_per_unit;
+        let w = report.cells[report.worst.unwrap()].1.prediction().unwrap().j_per_unit;
+        assert!(b <= w);
+    }
+
+    #[test]
+    fn no_feasible_cell_violates_the_guards() {
+        // Property sweep: randomized spaces; every PRICED cell satisfies
+        // divisibility, Eqn. 8, fits_memory and p >= 2.
+        let mut rng = Prng::new(0x9A7);
+        let mut pick = move |lo: u64, hi: u64| -> usize { rng.int_in(lo, hi) as usize };
+        for _ in 0..40 {
+            let n = [48usize, 96, 100, 256, 1024][pick(0, 4)];
+            let space = PlanSpace {
+                n,
+                layers: pick(1, 3),
+                modes: vec![Parallelism::Phantom, Parallelism::Tensor],
+                p_choices: vec![pick(1, 9), pick(1, 9), 7],
+                dp_choices: vec![1, pick(1, 4)],
+                k_choices: vec![pick(0, 59), pick(1, 12)],
+                batch_choices: vec![pick(1, 33)],
+                linger_choices_s: vec![0.0],
+            };
+            for objective in [Objective::TrainJPerStep, Objective::ServeJPerQuery] {
+                let report = plan(&space, objective, None, &calib()).unwrap();
+                for (cell, outcome) in &report.cells {
+                    let Some(_) = outcome.prediction() else { continue };
+                    assert!(cell.p >= 2, "{}", cell.label());
+                    assert_eq!(space.n % cell.p, 0, "{}", cell.label());
+                    let m = space.n / cell.p;
+                    assert!(
+                        (cell.k as f64) < m as f64 * (1.0 - 1.0 / cell.p as f64),
+                        "Eqn. 8: {}",
+                        cell.label()
+                    );
+                    let rb = cell.batch.div_ceil(cell.dp);
+                    let w = Workload::new(space.n, space.layers, cell.p, cell.k, rb)
+                        .unwrap_or_else(|e| panic!("{}: {e}", cell.label()));
+                    assert!(fits_memory(cell.mode, &w), "{}", cell.label());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn slo_filters_slow_cells() {
+        let space = PlanSpace::small_sweep(256, 2);
+        let open = plan(&space, Objective::TrainJPerStep, None, &calib()).unwrap();
+        // An SLO below every cell's latency leaves nothing feasible.
+        let strict = plan(&space, Objective::TrainJPerStep, Some(1e-12), &calib()).unwrap();
+        assert_eq!(strict.feasible_count(), 0);
+        assert!(strict.best.is_none());
+        // A generous SLO changes nothing.
+        let loose = plan(&space, Objective::TrainJPerStep, Some(1e9), &calib()).unwrap();
+        assert_eq!(loose.feasible_count(), open.feasible_count());
+        assert!(plan(&space, Objective::TrainJPerStep, Some(-1.0), &calib()).is_err());
+    }
+
+    #[test]
+    fn dp_cells_price_the_allreduce_term() {
+        let mut space = PlanSpace::small_sweep(256, 2);
+        space.p_choices = vec![4];
+        space.dp_choices = vec![1, 2];
+        space.k_choices = vec![4];
+        space.batch_choices = vec![16];
+        let report = plan(&space, Objective::TrainJPerStep, None, &calib()).unwrap();
+        let find = |dp: usize| {
+            report
+                .cells
+                .iter()
+                .find(|(c, _)| c.dp == dp && c.mode == Parallelism::Phantom)
+                .and_then(|(_, o)| o.prediction())
+                .copied()
+                .unwrap()
+        };
+        let (solo, hybrid) = (find(1), find(2));
+        assert_eq!(solo.dp_comm_s, 0.0);
+        assert!(hybrid.dp_comm_s > 0.0, "dp=2 must price the gradient All-Reduce");
+        // Serving ignores dp_choices entirely.
+        let serve = plan(&space, Objective::ServeJPerQuery, None, &calib()).unwrap();
+        assert!(serve.cells.iter().all(|(c, _)| c.dp == 1));
+    }
+
+    #[test]
+    fn serve_cells_price_linger_and_latency_includes_it() {
+        let mut space = PlanSpace::small_sweep(256, 2);
+        space.p_choices = vec![4];
+        space.k_choices = vec![4];
+        space.linger_choices_s = vec![0.0, 5e-3];
+        let report = plan(&space, Objective::ServeJPerQuery, None, &calib()).unwrap();
+        let find = |linger: f64, mode: Parallelism| {
+            report
+                .cells
+                .iter()
+                .find(|(c, _)| c.linger_s == linger && c.mode == mode)
+                .and_then(|(_, o)| o.prediction())
+                .copied()
+                .unwrap()
+        };
+        for mode in [Parallelism::Phantom, Parallelism::Tensor] {
+            let (fast, lingering) = (find(0.0, mode), find(5e-3, mode));
+            assert!(lingering.j_per_unit > fast.j_per_unit, "linger idles the pool");
+            assert!((lingering.latency_s - fast.latency_s - 5e-3).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn report_json_round_trips_the_verdict_shape() {
+        let space = PlanSpace::small_sweep(256, 2);
+        let report = plan(&space, Objective::TrainJPerStep, None, &calib()).unwrap();
+        let j = report_json(&report, &calib(), None);
+        assert_eq!(j.get("objective").as_str(), Some("train"));
+        assert_eq!(j.get("ranking_holds"), &Json::Null);
+        assert_eq!(
+            j.get("sweep").as_arr().unwrap().len(),
+            report.cells.len(),
+            "every cell, feasible or not, appears in the sweep record"
+        );
+        // Parse back: the serialized form is valid JSON.
+        let back = Json::parse(&j.pretty()).unwrap();
+        assert_eq!(back.get("n").as_usize(), Some(256));
+    }
+}

@@ -48,6 +48,15 @@ pub struct CollectiveModel {
 
 impl CollectiveModel {
     /// Predicted time in SECONDS for message size `m` floats across `p` ranks.
+    ///
+    /// `p <= 1` is priced at exactly zero — a single rank has no peers to
+    /// talk to. That makes this model WRONG as a ranking signal for
+    /// single-rank configurations: any sweep comparing p = 1 against real
+    /// parallel cells through this model would "discover" free
+    /// communication and crown the degenerate config. Consumers that rank
+    /// configurations must exclude p < 2 from the search space
+    /// (`perfmodel::Workload::validate` and the planner both do) and price
+    /// a dense single-device baseline separately if they need one.
     pub fn time(&self, m: usize, p: usize) -> f64 {
         if p <= 1 {
             return 0.0; // no communication without peers

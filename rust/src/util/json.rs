@@ -217,6 +217,13 @@ pub fn write_records_json(
     std::fs::write(path, obj.pretty())
 }
 
+/// Write an arbitrary (possibly nested) JSON value pretty-printed. Used
+/// for structured result files like BENCH_plan.json whose sweep arrays do
+/// not fit the flat record schema of `write_records_json`.
+pub fn write_json(path: &std::path::Path, value: &Json) -> Result<(), std::io::Error> {
+    std::fs::write(path, value.pretty())
+}
+
 /// Read and parse a JSON file; parse failures surface as
 /// `io::ErrorKind::InvalidData` so callers have one error channel for both
 /// missing and malformed files. Used for checkpoint-manifest reads.

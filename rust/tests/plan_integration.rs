@@ -1,0 +1,150 @@
+//! Planner integration tests (ISSUE 7 tentpole validation).
+//!
+//! * ranking-holds: the predicted-best feasible cell of a small sweep
+//!   spanning TP and PP, when actually trained through the measured
+//!   simulator, consumes less energy per step than the predicted-worst
+//!   cell; sweep + predictions + measurements + verdict land in
+//!   BENCH_plan.json at the repo root (same convention as the other
+//!   BENCH_* trajectories).
+//! * calibration round-trip: fitting on the committed `ci/bench_seed`
+//!   fixture recovers the constants the fixture was stamped from.
+//! * the missing-fixture path is a logged fallback, not an error.
+
+use std::path::PathBuf;
+
+use phantom::config::Parallelism;
+use phantom::perfmodel::calib::{Calibration, CalibSource, DEFAULT_CALIB_PATH};
+use phantom::perfmodel::plan::{
+    plan, report_json, validate, CellOutcome, Objective, PlanSpace, ValidateOptions,
+};
+use phantom::perfmodel::GemmModel;
+use phantom::simnet::NetworkProfile;
+use phantom::util::json::{write_json, Json};
+
+fn repo_root() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("..")
+}
+
+fn fixture_calibration() -> Calibration {
+    let c = Calibration::load_or_default(&repo_root().join(DEFAULT_CALIB_PATH));
+    assert!(
+        matches!(c.source, CalibSource::Measured(_)),
+        "committed fixture must load as measured: {:?}",
+        c.warnings
+    );
+    c
+}
+
+/// A sweep the measured simulator can run in seconds: tiny model, both
+/// modes, two p choices — 4 feasible cells (>= 3, across TP and PP).
+fn small_space() -> PlanSpace {
+    PlanSpace {
+        n: 64,
+        layers: 2,
+        modes: vec![Parallelism::Phantom, Parallelism::Tensor],
+        p_choices: vec![2, 4],
+        dp_choices: vec![1],
+        k_choices: vec![4],
+        batch_choices: vec![8],
+        linger_choices_s: vec![0.0],
+    }
+}
+
+#[test]
+fn predicted_ranking_holds_when_measured() {
+    let calib = fixture_calibration();
+    let space = small_space();
+    let report = plan(&space, Objective::TrainJPerStep, None, &calib).unwrap();
+
+    let feasible: Vec<_> = report
+        .cells
+        .iter()
+        .filter(|(_, o)| matches!(o, CellOutcome::Priced(_)))
+        .collect();
+    assert!(feasible.len() >= 3, "need >= 3 sweep cells, got {}", feasible.len());
+    assert!(
+        feasible.iter().any(|(c, _)| c.mode == Parallelism::Phantom)
+            && feasible.iter().any(|(c, _)| c.mode == Parallelism::Tensor),
+        "sweep must span TP and PP"
+    );
+
+    // Run predicted-best and predicted-worst through the real driver.
+    let opts = ValidateOptions { iters: 4, ..Default::default() };
+    let verdict = validate(&report, &space, &opts).unwrap();
+    assert!(verdict.best.measured_j > 0.0 && verdict.worst.measured_j > 0.0);
+    assert!(
+        verdict.ranking_holds,
+        "predicted-best {} measured {} J/step must beat predicted-worst {} measured {} J/step",
+        verdict.best.cell.label(),
+        verdict.best.measured_j,
+        verdict.worst.cell.label(),
+        verdict.worst.measured_j
+    );
+
+    // Record the full trajectory like the other BENCH_* files.
+    let out = repo_root().join("BENCH_plan.json");
+    let payload = report_json(&report, &calib, Some(&verdict));
+    write_json(&out, &payload).unwrap();
+    let back = phantom::util::json::read_json(&out).unwrap();
+    assert_eq!(back.get("ranking_holds"), &Json::Bool(true));
+    assert_eq!(back.get("sweep").as_arr().unwrap().len(), report.cells.len());
+    assert!(back.get("measured_best").get("measured_j").as_f64().unwrap() > 0.0);
+}
+
+#[test]
+fn serve_objective_prices_and_plans() {
+    // The serving objective plans over linger choices with dp pinned to 1;
+    // the cheapest cell must be strictly cheaper per query than the most
+    // expensive one (the sweep is not degenerate).
+    let calib = fixture_calibration();
+    let mut space = small_space();
+    space.linger_choices_s = vec![0.0, 2e-3];
+    let report = plan(&space, Objective::ServeJPerQuery, None, &calib).unwrap();
+    assert!(report.feasible_count() >= 3);
+    let best = report.cells[report.best.unwrap()].1.prediction().unwrap();
+    let worst = report.cells[report.worst.unwrap()].1.prediction().unwrap();
+    assert!(best.j_per_unit < worst.j_per_unit);
+    assert!(report.cells.iter().all(|(c, _)| c.dp == 1));
+}
+
+#[test]
+fn committed_fixture_round_trips_the_stamped_constants() {
+    // The fixture's rows are stamped from the frontier constants (see
+    // ci/bench_seed/README.md), so the fit must give them back.
+    let calib = fixture_calibration();
+    assert!(calib.warnings.is_empty(), "full fixture must fit cleanly: {:?}", calib.warnings);
+
+    let g = GemmModel::frontier();
+    assert!((calib.gemm.peak_flops - g.peak_flops).abs() / g.peak_flops < 0.01);
+    assert!(
+        (calib.gemm.full_eff_dim - g.full_eff_dim).abs() / g.full_eff_dim < 0.15,
+        "knee {} vs {}",
+        calib.gemm.full_eff_dim,
+        g.full_eff_dim
+    );
+    assert!((calib.gemm.launch_overhead_s - g.launch_overhead_s).abs() < 1e-12);
+
+    let net = NetworkProfile::frontier();
+    for (got, want) in [
+        (calib.net.broadcast, net.broadcast),
+        (calib.net.all_reduce, net.all_reduce),
+        (calib.net.all_gather, net.all_gather),
+        (calib.net.reduce_scatter, net.reduce_scatter),
+    ] {
+        assert!((got.c1 - want.c1).abs() / want.c1 < 0.01, "{got:?} vs {want:?}");
+        assert!((got.c2 - want.c2).abs() / want.c2 < 0.01, "{got:?} vs {want:?}");
+    }
+
+    assert!((calib.power.busy_w - 560.0).abs() < 1e-6);
+    assert!((calib.power.idle_w - 90.0).abs() < 1e-6);
+}
+
+#[test]
+fn missing_fixture_is_a_logged_fallback_and_still_plans() {
+    let calib = Calibration::load_or_default(&repo_root().join("ci/bench_seed/NOPE.json"));
+    assert_eq!(calib.source, CalibSource::Defaults);
+    assert_eq!(calib.warnings.len(), 1);
+    // The planner runs fine on the defaults.
+    let report = plan(&small_space(), Objective::TrainJPerStep, None, &calib).unwrap();
+    assert!(report.best.is_some());
+}
