@@ -57,10 +57,13 @@ impl Bench {
 
 /// Write (key, value) records as a flat JSON object — the machine-readable
 /// perf trajectory future PRs diff against. Delegates to the library's
-/// serializer (util::json::write_records_json) so the format has one
-/// source, keeping bench ergonomics: a failed write warns, not aborts.
-pub fn write_records_json(path: &std::path::Path, records: &[(String, f64)]) {
-    match phantom::util::json::write_records_json(path, records) {
+/// serializer (util::json::write_records_json_with_meta) so the format has
+/// one source, keeping bench ergonomics: a failed write warns, not aborts.
+/// `scenario` lands in the BenchMeta provenance header; benches measure
+/// real wall time, so the virtual duration is stamped as 0.
+pub fn write_records_json(path: &std::path::Path, records: &[(String, f64)], scenario: &str) {
+    let meta = phantom::util::json::BenchMeta::new(scenario, 0.0);
+    match phantom::util::json::write_records_json_with_meta(path, records, &meta) {
         Ok(()) => eprintln!("wrote {}", path.display()),
         Err(e) => eprintln!("could not write {}: {e}", path.display()),
     }

@@ -10,7 +10,7 @@ use std::time::Instant;
 use anyhow::Result;
 use phantom::ckpt::{reshard, Snapshot};
 use phantom::config::{preset, ModelConfig, Parallelism};
-use phantom::util::json::write_records_json;
+use phantom::util::json::{write_records_json_with_meta, BenchMeta};
 use phantom::util::table::Table;
 
 fn main() -> Result<()> {
@@ -77,7 +77,7 @@ fn main() -> Result<()> {
         ("load_mb_per_s".to_string(), mb / load_s.max(1e-9)),
     ];
     let path = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../BENCH_ckpt.json");
-    write_records_json(&path, &records)?;
+    write_records_json_with_meta(&path, &records, &BenchMeta::new("ckpt", 0.0))?;
     eprintln!("wrote {}", path.display());
     Ok(())
 }

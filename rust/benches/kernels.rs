@@ -92,5 +92,5 @@ fn main() {
     eprintln!("geomean speedup: {geomean_seed:.2}x vs seed, {geomean_naive:.2}x vs naive");
 
     let path = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../BENCH_kernels.json");
-    write_records_json(&path, &records);
+    write_records_json(&path, &records, "kernels");
 }

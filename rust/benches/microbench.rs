@@ -165,5 +165,5 @@ fn main() {
     bench_collectives();
     bench_tensor_ops();
     bench_json();
-    write_records_json(&bench_json_path(), &records);
+    write_records_json(&bench_json_path(), &records, "microbench");
 }

@@ -43,7 +43,13 @@ fn main() -> Result<()> {
     let records = combined_records(&reports);
 
     let path = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../BENCH_serve.json");
-    phantom::serve::write_records_json(&path, &records)?;
+    let virtual_s = reports
+        .iter()
+        .flat_map(|r| r.per_rank.iter())
+        .map(|pr| pr.ledger.end_s)
+        .fold(0.0, f64::max);
+    let meta = phantom::util::json::BenchMeta::new("serve", virtual_s);
+    phantom::serve::write_records_json_with_meta(&path, &records, &meta)?;
     eprintln!("wrote {}", path.display());
     Ok(())
 }

@@ -192,7 +192,30 @@ COMMANDS:
                                           or $PHANTOM_TUNE when set]
                    --show                 print the active ISA + manifest
                                           and exit (no benchmarking)
+    trace        Span-trace the train/serve drivers (Perfetto export)
+                   --scenario <train|serve|all>  which drivers to trace [all]
+                   --preset <name>        artifact preset          [quickstart]
+                   --mode <tp|pp>         parallelism strategy     [pp]
+                   --iters <N>            traced train iterations  [12]
+                   --queries <N>          traced serve queries     [64]
+                   --rate <qps>           serve arrival rate       [2000]
+                   --seed <n>             serve payload seed
+                   --runs <N>             timing repeats per arm   [3]
+                                          (overhead fraction = min traced
+                                          wall vs min untraced wall)
+                   --out-dir <dir>        where trace_train.json and
+                                          trace_serve.json go      [.]
+                   --bench-out <file>     overhead + per-category energy
+                                          attribution records
+                                          [BENCH_trace.json]
+                                          (open the trace JSONs in
+                                          ui.perfetto.dev or chrome://tracing)
     help         Show this text
+
+ENVIRONMENT:
+    PHANTOM_LOG   stderr log level: error|warn|info|debug|trace
+                  (binary defaults to info; libraries/tests default to warn)
+    PHANTOM_TUNE  GEMM tuning-manifest path for `tune` and kernel dispatch
 ";
 
 #[cfg(test)]

@@ -576,18 +576,57 @@ impl Endpoint {
         FabricPoisoner { shared: self.shared.clone() }
     }
 
+    /// Span categories for this endpoint's traffic: the DP gradient sync
+    /// gets its own attribution buckets, mirroring the DpComm ledger
+    /// bucket.
+    fn span_cats(&self) -> (&'static str, &'static str) {
+        if self.comm_activity == Activity::DpComm {
+            ("dp.wait", "dp.wire")
+        } else {
+            ("comm.wait", "comm.wire")
+        }
+    }
+
     /// Charge the ledger for a collective: idle until the slowest peer
-    /// arrived, then the modeled wire time.
+    /// arrived, then the modeled wire time. On traced ledgers the
+    /// rendezvous wait and the wire time become separate spans tagged with
+    /// the op, this endpoint's collective seq, and the message size.
     fn charge(
         &mut self,
         ledger: &mut EnergyLedger,
+        op: &'static str,
         collective: Collective,
         msg_floats: usize,
         max_arrival: f64,
     ) {
         let wire_s = self.profile.time(collective, msg_floats, self.p);
-        ledger.sync_to(max_arrival);
-        ledger.advance(wire_s, self.comm_activity);
+        if ledger.traced() {
+            // fault_gate already ticked the counter for this collective.
+            let seq = self.collective_seq.wrapping_sub(1) as i64;
+            let (group_rank, world_rank, p) =
+                (self.rank as i64, self.world_rank as i64, self.p as i64);
+            let (wait_cat, wire_cat) = self.span_cats();
+            if max_arrival > ledger.now_s {
+                ledger.span_begin(wait_cat, op);
+                ledger.sync_to(max_arrival);
+                ledger.span_end_with(|| vec![("seq", crate::obs::Arg::I(seq))]);
+            }
+            ledger.span_begin(wire_cat, op);
+            ledger.advance(wire_s, self.comm_activity);
+            ledger.span_end_with(|| {
+                vec![
+                    ("seq", crate::obs::Arg::I(seq)),
+                    ("floats", crate::obs::Arg::I(msg_floats as i64)),
+                    ("bytes", crate::obs::Arg::I(msg_floats as i64 * 4)),
+                    ("group_size", crate::obs::Arg::I(p)),
+                    ("rank", crate::obs::Arg::I(group_rank)),
+                    ("world_rank", crate::obs::Arg::I(world_rank)),
+                ]
+            });
+        } else {
+            ledger.sync_to(max_arrival);
+            ledger.advance(wire_s, self.comm_activity);
+        }
         self.stats.floats_moved += msg_floats as u64;
         self.stats.comm_s += wire_s;
     }
@@ -601,7 +640,7 @@ impl Endpoint {
             let stacked = Tensor::stack(&parts)?;
             Ok(vec![stacked; parts_len(&parts)])
         })?;
-        self.charge(ledger, Collective::AllGather, m, max_arrival);
+        self.charge(ledger, "all_gather", Collective::AllGather, m, max_arrival);
         self.stats.all_gathers += 1;
         Ok(result)
     }
@@ -629,7 +668,7 @@ impl Endpoint {
             }
             Ok(out)
         })?;
-        self.charge(ledger, Collective::ReduceScatter, m, max_arrival);
+        self.charge(ledger, "reduce_scatter", Collective::ReduceScatter, m, max_arrival);
         self.stats.reduce_scatters += 1;
         Ok(result)
     }
@@ -665,7 +704,7 @@ impl Endpoint {
             }
             Ok(vec![acc; parts.len()])
         })?;
-        self.charge(ledger, Collective::AllReduce, m, max_arrival);
+        self.charge(ledger, op, Collective::AllReduce, m, max_arrival);
         self.stats.all_reduces += 1;
         Ok(result)
     }
@@ -684,7 +723,7 @@ impl Endpoint {
             Ok(vec![chosen; parts.len()])
         })?;
         let m = result.numel();
-        self.charge(ledger, Collective::Broadcast, m, max_arrival);
+        self.charge(ledger, "broadcast", Collective::Broadcast, m, max_arrival);
         self.stats.broadcasts += 1;
         Ok(result)
     }
@@ -696,7 +735,15 @@ impl Endpoint {
             self.exchange("barrier", Tensor::zeros(&[0]), ledger.now_s, |parts| {
                 Ok(vec![Tensor::zeros(&[0]); parts.len()])
             })?;
-        ledger.sync_to(max_arrival);
+        if ledger.traced() && max_arrival > ledger.now_s {
+            let seq = self.collective_seq.wrapping_sub(1) as i64;
+            let (wait_cat, _) = self.span_cats();
+            ledger.span_begin(wait_cat, "barrier");
+            ledger.sync_to(max_arrival);
+            ledger.span_end_with(|| vec![("seq", crate::obs::Arg::I(seq))]);
+        } else {
+            ledger.sync_to(max_arrival);
+        }
         self.stats.barriers += 1;
         Ok(())
     }
@@ -718,7 +765,25 @@ impl Endpoint {
         ledger: &mut EnergyLedger,
     ) {
         let wire_s = self.profile.time(collective, msg_floats, self.p);
-        ledger.advance(wire_s, self.comm_activity);
+        if ledger.traced() {
+            let (_, wire_cat) = self.span_cats();
+            let name = match collective {
+                Collective::Broadcast => "modeled broadcast",
+                Collective::AllReduce => "modeled all_reduce",
+                Collective::AllGather => "modeled all_gather",
+                Collective::ReduceScatter => "modeled reduce_scatter",
+            };
+            ledger.span_begin(wire_cat, name);
+            ledger.advance(wire_s, self.comm_activity);
+            ledger.span_end_with(|| {
+                vec![
+                    ("floats", crate::obs::Arg::I(msg_floats as i64)),
+                    ("bytes", crate::obs::Arg::I(msg_floats as i64 * 4)),
+                ]
+            });
+        } else {
+            ledger.advance(wire_s, self.comm_activity);
+        }
         self.stats.floats_moved += msg_floats as u64;
         self.stats.comm_s += wire_s;
         match collective {

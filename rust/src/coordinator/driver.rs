@@ -46,6 +46,9 @@ pub struct RankReport {
     pub warm_t: f64,
     /// Energy over the post-warmup training phase only.
     pub energy_train_j: f64,
+    /// Span timeline + interval snapshot when the run was traced
+    /// (`TrainOptions::trace`); `None` otherwise.
+    pub trace: Option<crate::obs::TraceCapture>,
 }
 
 /// Aggregated training report (one row of the paper's Table I, plus curves).
@@ -76,6 +79,10 @@ pub struct TrainReport {
     pub wall_s: f64,
     /// Virtual wall time excluding warmup.
     pub wall_train_s: f64,
+    /// Leader-side (host) event timeline when the run was traced:
+    /// checkpoint writes, stamped in REAL wall seconds since the run
+    /// started (the leader has no virtual clock).
+    pub host_trace: Option<crate::obs::SpanRecorder>,
 }
 
 impl TrainReport {
@@ -117,6 +124,9 @@ pub struct TrainOptions {
     /// message drops shrink this to milliseconds so the peers' timeout
     /// errors surface promptly; `None` keeps the production 60 s default.
     pub rendezvous_timeout: Option<std::time::Duration>,
+    /// Arm every rank's span recorder (obs): each `RankReport` then
+    /// carries a `TraceCapture` and the report a leader-side `host_trace`.
+    pub trace: bool,
 }
 
 /// The per-iteration control message the leader sends every rank.
@@ -256,6 +266,7 @@ pub fn train_with(cfg: &RunConfig, server: &ExecServer, opts: TrainOptions) -> R
         let loss_tx = loss_tx.clone();
         let shard_tx = shard_tx.clone();
         let warmup = cfg.train.warmup_iters;
+        let trace = opts.trace;
         handles.push(
             thread::Builder::new()
                 .name(format!("rank-{rank}"))
@@ -274,6 +285,7 @@ pub fn train_with(cfg: &RunConfig, server: &ExecServer, opts: TrainOptions) -> R
                         warmup,
                         start_iter,
                         resume_shard,
+                        trace,
                     })
                 })
                 .context("spawning rank thread")?,
@@ -284,6 +296,12 @@ pub fn train_with(cfg: &RunConfig, server: &ExecServer, opts: TrainOptions) -> R
 
     // Leader loop: aggregate per-iteration losses, decide stopping, and
     // collect + write snapshots at checkpoint boundaries.
+    //
+    // Traced runs also keep a host timeline for leader-side work (the
+    // checkpoint writes); it is stamped in REAL wall seconds since this
+    // point — the leader does not participate in the virtual clock.
+    let host_t0 = std::time::Instant::now();
+    let mut host_rec = opts.trace.then(|| crate::obs::SpanRecorder::new(world));
     let mut pending: std::collections::HashMap<u64, Vec<(usize, f64)>> = Default::default();
     let mut next_iter: u64 = start_iter;
     let mut leader_err: Option<anyhow::Error> = None;
@@ -319,9 +337,17 @@ pub fn train_with(cfg: &RunConfig, server: &ExecServer, opts: TrainOptions) -> R
             next_iter = completed;
             if snapshot {
                 let policy = opts.ckpt.as_ref().expect("snapshot implies a policy");
-                if let Err(e) =
-                    write_snapshot(cfg, policy, completed, &tracker, &run_rng, &shard_rx, world)
-                {
+                if let Some(rec) = host_rec.as_mut() {
+                    let name = format!("ckpt-{completed:06}");
+                    rec.begin("ckpt", &name, host_t0.elapsed().as_secs_f64());
+                }
+                let res =
+                    write_snapshot(cfg, policy, completed, &tracker, &run_rng, &shard_rx, world);
+                if let Some(rec) = host_rec.as_mut() {
+                    let args = vec![("iter", crate::obs::Arg::I(completed as i64))];
+                    rec.end_args(host_t0.elapsed().as_secs_f64(), args);
+                }
+                if let Err(e) = res {
                     ckpt_err = Some(e);
                     break 'leader;
                 }
@@ -393,6 +419,7 @@ pub fn train_with(cfg: &RunConfig, server: &ExecServer, opts: TrainOptions) -> R
         wall_s: totals.end_s,
         wall_train_s: (totals.end_s - warm_t_max).max(0.0),
         per_rank,
+        host_trace: host_rec,
     })
 }
 
@@ -425,6 +452,7 @@ fn finished_report(cfg: &RunConfig, tracker: &LossTracker) -> TrainReport {
         wall_s: 0.0,
         wall_train_s: 0.0,
         per_rank: Vec::new(),
+        host_trace: None,
     }
 }
 
@@ -522,6 +550,8 @@ struct RankCtx<'a> {
     warmup: usize,
     start_iter: u64,
     resume_shard: Option<RankShard>,
+    /// Arm this rank's ledger span recorder.
+    trace: bool,
 }
 
 /// Wakes the rank's DP-group peers if the rank exits abnormally. The
@@ -567,7 +597,9 @@ fn run_rank(ctx: RankCtx<'_>) -> Result<RankReport> {
         warmup,
         start_iter,
         resume_shard,
+        trace,
     } = ctx;
+    crate::obs::log::set_rank(rank);
     // The worker's shard geometry is keyed on the model rank: DP replicas
     // of one model rank initialize (and, gradients being summed, stay)
     // weight-identical.
@@ -613,6 +645,12 @@ fn run_rank(ctx: RankCtx<'_>) -> Result<RankReport> {
         match &mut worker {
             Worker::Pp(w) => w.arm_dp(dp),
             Worker::Tp(w) => w.arm_dp(dp),
+        }
+    }
+    if trace {
+        match &mut worker {
+            Worker::Pp(w) => w.ledger.arm_tracing(rank),
+            Worker::Tp(w) => w.ledger.arm_tracing(rank),
         }
     }
 
@@ -667,10 +705,11 @@ fn run_rank(ctx: RankCtx<'_>) -> Result<RankReport> {
 
     // Normal completion: nothing to wake — every DP peer stops too.
     dp_guard.poisoner = None;
-    let (ledger, stats, dp_stats) = match worker {
+    let (mut ledger, stats, dp_stats) = match worker {
         Worker::Pp(w) => (w.ledger, w.ep.stats, w.dp_ep.map(|e| e.stats).unwrap_or_default()),
         Worker::Tp(w) => (w.ledger, w.ep.stats, w.dp_ep.map(|e| e.stats).unwrap_or_default()),
     };
+    let trace = ledger.take_trace();
     let energy_train_j =
         ledger.energy_j_between(&cfg.hardware.power, warm_t, ledger.now_s);
     Ok(RankReport {
@@ -680,6 +719,7 @@ fn run_rank(ctx: RankCtx<'_>) -> Result<RankReport> {
         dp_stats,
         warm_t,
         energy_train_j,
+        trace,
     })
 }
 

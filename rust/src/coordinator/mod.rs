@@ -94,8 +94,34 @@ pub(crate) fn exec_charged(
     entry: &str,
     inputs: &[&crate::tensor::Tensor],
 ) -> Result<ExecReply> {
+    if !ledger.traced() {
+        let reply = exec.execute(artifact, entry, inputs)?;
+        ledger.advance(reply.wall_s, Activity::Compute);
+        return Ok(reply);
+    }
+    // Traced: wrap the busy charge in an "exec" span annotated with the
+    // GEMM work the native backend did on this thread (tally drained
+    // around the call so concurrent ranks can't mix counts).
+    let _ = crate::tensor::gemm::tally_take();
     let reply = exec.execute(artifact, entry, inputs)?;
-    ledger.advance(reply.wall_s, Activity::Compute);
+    let tally = crate::tensor::gemm::tally_take();
+    let wall_s = reply.wall_s;
+    ledger.span_begin("exec", entry);
+    ledger.advance(wall_s, Activity::Compute);
+    ledger.span_end_with(|| {
+        use crate::obs::Arg;
+        let mut args = vec![
+            ("wall_s", Arg::F(wall_s)),
+            ("gemm_calls", Arg::I(tally.calls as i64)),
+            ("gemm_flops", Arg::I(tally.flops.min(i64::MAX as u64) as i64)),
+            ("max_bands", Arg::I(tally.max_bands as i64)),
+            ("isa", Arg::S(crate::tensor::simd::active().name().to_string())),
+        ];
+        if tally.calls > 0 {
+            args.push(("shapes", Arg::S(tally.shape_names().join(","))));
+        }
+        args
+    });
     Ok(reply)
 }
 

@@ -23,6 +23,8 @@ pub struct PhantomRank {
     /// iteration is byte-identical to the pre-hybrid schedule.
     pub dp_ep: Option<Endpoint>,
     pub ledger: EnergyLedger,
+    /// Iterations completed (names the per-iteration trace spans).
+    iter_no: u64,
 }
 
 impl PhantomRank {
@@ -50,7 +52,7 @@ impl PhantomRank {
         let shapes = param_shapes(&params);
         let opt = Optimizer::with_state(opt_cfg, &shapes, opt_state)?;
         let ledger = EnergyLedger::new();
-        Ok(PhantomRank { params, artifact, opt, exec, ep, dp_ep: None, ledger })
+        Ok(PhantomRank { params, artifact, opt, exec, ep, dp_ep: None, ledger, iter_no: 0 })
     }
 
     /// Join a data-parallel group: every subsequent iteration ends with
@@ -81,7 +83,13 @@ impl PhantomRank {
         let layers = self.params.layers();
         let rank = self.params.rank;
 
+        if self.ledger.traced() {
+            let name = format!("iter {}", self.iter_no);
+            self.ledger.span_begin("iter", &name);
+        }
+
         // ---- forward ----
+        self.ledger.span_begin("phase", "forward");
         // ys[l] = post-activation output of layer l; the layer-l input is
         // x_shard for l == 0, else ys[l - 1].
         let mut ys: Vec<Tensor> = Vec::with_capacity(layers);
@@ -149,6 +157,8 @@ impl PhantomRank {
         }
 
         // ---- loss + top-layer error compression (fused) ----
+        self.ledger.span_end(); // forward
+        self.ledger.span_begin("phase", "loss");
         let r = exec_charged(
             &self.exec,
             &mut self.ledger,
@@ -168,6 +178,8 @@ impl PhantomRank {
         let mut h_sum = self.ep.reduce_scatter(h_out, &mut self.ledger)?;
 
         // ---- backward ----
+        self.ledger.span_end(); // loss
+        self.ledger.span_begin("phase", "backward");
         let mut grads: Vec<Option<[Tensor; 4]>> = (0..layers).map(|_| None).collect();
         for l in (0..layers).rev() {
             // The layer-l input activation, borrowed (not cloned).
@@ -204,6 +216,8 @@ impl PhantomRank {
             }
         }
 
+        self.ledger.span_end(); // backward
+
         // ---- DP gradient sync + optimizer step (rank-local compute) ----
         // Order must match `param_shapes`/`named_tensors`: L*, C*, D*, b*.
         // The per-layer arrays are moved out, never cloned.
@@ -230,6 +244,7 @@ impl PhantomRank {
         if let Some(dp) = self.dp_ep.as_mut() {
             super::dp_all_reduce_grads(dp, &mut grad_list, &mut self.ledger)?;
         }
+        self.ledger.span_begin("opt", "opt step");
         let t0 = std::time::Instant::now();
         {
             let mut tensors = self.params.named_tensors();
@@ -237,8 +252,12 @@ impl PhantomRank {
                 tensors.iter_mut().map(|(_, t)| &mut **t).collect();
             self.opt.step(&mut refs, &grad_list);
         }
-        self.ledger.advance(t0.elapsed().as_secs_f64(), Activity::Compute);
+        let opt_s = t0.elapsed().as_secs_f64();
+        self.ledger.advance(opt_s, Activity::Compute);
+        self.ledger.span_end_with(|| vec![("wall_s", crate::obs::Arg::F(opt_s))]);
 
+        self.ledger.span_end_with(|| vec![("loss_local", crate::obs::Arg::F(loss_local))]);
+        self.iter_no += 1;
         Ok(loss_local)
     }
 }

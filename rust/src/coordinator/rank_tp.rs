@@ -35,6 +35,8 @@ pub struct TensorRank {
     /// Charge the paper's full Table II schedule (Broadcast + extra
     /// Reduce-Scatter). On by default; ablation benches switch it off.
     pub paper_schedule: bool,
+    /// Iterations completed (names the per-iteration trace spans).
+    iter_no: u64,
 }
 
 impl TensorRank {
@@ -75,6 +77,7 @@ impl TensorRank {
             dp_ep: None,
             ledger: EnergyLedger::new(),
             paper_schedule: true,
+            iter_no: 0,
         })
     }
 
@@ -104,7 +107,13 @@ impl TensorRank {
         let n = m * p;
         let batch = x_shard.shape()[0];
 
+        if self.ledger.traced() {
+            let name = format!("iter {}", self.iter_no);
+            self.ledger.span_begin("iter", &name);
+        }
+
         // ---- forward ----
+        self.ledger.span_begin("phase", "forward");
         let mut y_shard = x_shard.clone();
         let mut y_fulls: Vec<Tensor> = Vec::with_capacity(layers);
         let mut zs: Vec<Tensor> = Vec::with_capacity(layers);
@@ -130,6 +139,8 @@ impl TensorRank {
         }
 
         // ---- loss ----
+        self.ledger.span_end(); // forward
+        self.ledger.span_begin("phase", "loss");
         let r = exec_charged(
             &self.exec,
             &mut self.ledger,
@@ -142,6 +153,8 @@ impl TensorRank {
         let mut delta = delta0;
 
         // ---- backward ----
+        self.ledger.span_end(); // loss
+        self.ledger.span_begin("phase", "backward");
         // Top layer's gradients, then for each lower layer the fused
         // tp_bwd_step (finish + grads) after the All-Reduce — one backend
         // call per inter-collective segment (EXPERIMENTS.md §Perf).
@@ -191,6 +204,8 @@ impl TensorRank {
             grads[l - 1] = Some([dw, db]);
         }
 
+        self.ledger.span_end(); // backward
+
         // ---- DP gradient sync + optimizer step ----
         // Order must match named_tensors: W*, b*; arrays moved, not cloned.
         let mut dws = Vec::with_capacity(layers);
@@ -210,6 +225,7 @@ impl TensorRank {
         if let Some(dp) = self.dp_ep.as_mut() {
             super::dp_all_reduce_grads(dp, &mut grad_list, &mut self.ledger)?;
         }
+        self.ledger.span_begin("opt", "opt step");
         let t0 = std::time::Instant::now();
         {
             let mut tensors = self.params.named_tensors();
@@ -217,8 +233,12 @@ impl TensorRank {
                 tensors.iter_mut().map(|(_, t)| &mut **t).collect();
             self.opt.step(&mut refs, &grad_list);
         }
-        self.ledger.advance(t0.elapsed().as_secs_f64(), Activity::Compute);
+        let opt_s = t0.elapsed().as_secs_f64();
+        self.ledger.advance(opt_s, Activity::Compute);
+        self.ledger.span_end_with(|| vec![("wall_s", crate::obs::Arg::F(opt_s))]);
 
+        self.ledger.span_end_with(|| vec![("loss_local", crate::obs::Arg::F(loss_local))]);
+        self.iter_no += 1;
         Ok(loss_local)
     }
 }

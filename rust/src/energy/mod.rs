@@ -91,11 +91,80 @@ pub struct EnergyLedger {
     intervals: Vec<Interval>,
     /// Current virtual clock of this rank (seconds).
     pub now_s: f64,
+    /// Optional span recorder (obs): armed for traced runs so every hook
+    /// site that already holds the ledger can label the intervals it
+    /// charges. Boxed to keep the untraced ledger small.
+    recorder: Option<Box<crate::obs::SpanRecorder>>,
 }
 
 impl EnergyLedger {
     pub fn new() -> EnergyLedger {
         EnergyLedger::default()
+    }
+
+    // -- span tracing (obs) ----------------------------------------------
+    //
+    // Spans never charge time; they only label intervals this ledger
+    // records, stamped from the same virtual clock. Every method below is
+    // a no-op (one branch) when no recorder is armed.
+
+    /// Arm span recording for this rank. Ranks are single-threaded, so
+    /// spans are strictly nested per recorder.
+    pub fn arm_tracing(&mut self, rank: usize) {
+        self.recorder = Some(Box::new(crate::obs::SpanRecorder::new(rank)));
+    }
+
+    /// Is a span recorder armed?
+    pub fn traced(&self) -> bool {
+        self.recorder.is_some()
+    }
+
+    /// Open a span at the current virtual time.
+    pub fn span_begin(&mut self, cat: &'static str, name: &str) {
+        if let Some(r) = &mut self.recorder {
+            let now = self.now_s;
+            r.begin(cat, name, now);
+        }
+    }
+
+    /// Close the innermost open span at the current virtual time.
+    pub fn span_end(&mut self) {
+        if let Some(r) = &mut self.recorder {
+            let now = self.now_s;
+            r.end(now);
+        }
+    }
+
+    /// Close the innermost open span with args built lazily — the closure
+    /// only runs when a recorder is armed, so untraced hot paths never
+    /// allocate.
+    pub fn span_end_with<F>(&mut self, args: F)
+    where
+        F: FnOnce() -> Vec<(&'static str, crate::obs::Arg)>,
+    {
+        if let Some(r) = &mut self.recorder {
+            let now = self.now_s;
+            r.end_args(now, args());
+        }
+    }
+
+    /// Record an instant event at the current virtual time.
+    pub fn trace_event<F>(&mut self, cat: &'static str, name: &str, args: F)
+    where
+        F: FnOnce() -> Vec<(&'static str, crate::obs::Arg)>,
+    {
+        if let Some(r) = &mut self.recorder {
+            let now = self.now_s;
+            r.event(cat, name, now, args());
+        }
+    }
+
+    /// Disarm the recorder and return it together with a snapshot of the
+    /// raw intervals it labeled — the inputs to the attribution pass.
+    pub fn take_trace(&mut self) -> Option<crate::obs::TraceCapture> {
+        self.recorder
+            .take()
+            .map(|r| crate::obs::TraceCapture { recorder: *r, intervals: self.intervals.clone() })
     }
 
     /// Advance the clock by `dur_s` doing `activity`.
@@ -177,7 +246,13 @@ impl EnergyLedger {
     /// (`energy_j_between`) become approximate past the compaction point.
     /// Long-lived serving ranks call this per batch so their ledgers stay
     /// O(1) instead of growing with every kernel and collective.
+    ///
+    /// No-op while a span recorder is armed: attribution needs the raw
+    /// interval sequence, and traced runs are bounded diagnostic runs.
     pub fn compact(&mut self) {
+        if self.recorder.is_some() {
+            return;
+        }
         let (busy, comm, idle, dp) =
             (self.busy_s(), self.comm_s(), self.idle_s(), self.dp_comm_s());
         self.intervals.clear();
@@ -411,6 +486,76 @@ mod tests {
             (integral - exact).abs() / exact < 1e-6,
             "integral={integral} exact={exact}"
         );
+    }
+
+    #[test]
+    fn integrate_empty_samples_is_zero() {
+        let sensor = PowerSensor::new(0.1);
+        assert_eq!(sensor.integrate(&[], 0.0, 10.0), 0.0);
+        // A single sample has no complete step either: the left-Riemann sum
+        // needs two points to bound a rectangle.
+        assert_eq!(sensor.integrate(&[(0.0, 560.0)], 0.0, 10.0), 0.0);
+    }
+
+    #[test]
+    fn integrate_degenerate_window_is_zero() {
+        let sensor = PowerSensor::new(0.5);
+        let samples = vec![(0.0, 560.0), (0.5, 560.0), (1.0, 90.0)];
+        assert_eq!(sensor.integrate(&samples, 0.5, 0.5), 0.0, "t0 == t1");
+        assert_eq!(sensor.integrate(&samples, 0.8, 0.2), 0.0, "inverted window");
+    }
+
+    #[test]
+    fn integrate_window_past_last_sample_clamps() {
+        let sensor = PowerSensor::new(0.5);
+        let samples = vec![(0.0, 560.0), (0.5, 90.0), (1.0, 90.0)];
+        // The curve is only defined up to the last sample; asking for more
+        // integrates exactly the covered area.
+        let covered = sensor.integrate(&samples, 0.0, 1.0);
+        let over = sensor.integrate(&samples, 0.0, 100.0);
+        assert_eq!(over, covered);
+        assert!((covered - (560.0 * 0.5 + 90.0 * 0.5)).abs() < 1e-12);
+        // A window entirely past the last sample is empty.
+        assert_eq!(sensor.integrate(&samples, 2.0, 5.0), 0.0);
+    }
+
+    #[test]
+    fn integrate_partial_window_takes_left_power() {
+        let sensor = PowerSensor::new(1.0);
+        let samples = vec![(0.0, 560.0), (1.0, 90.0), (2.0, 90.0)];
+        // [0.25, 1.5): 0.75 s at 560 W (left sample of step 1), then
+        // 0.5 s at 90 W (left sample of step 2).
+        let e = sensor.integrate(&samples, 0.25, 1.5);
+        assert!((e - (560.0 * 0.75 + 90.0 * 0.5)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn traced_ledger_records_and_gates_compaction() {
+        let mut l = EnergyLedger::new();
+        assert!(!l.traced());
+        l.span_begin("exec", "never-armed"); // no-op without a recorder
+        l.span_end();
+        assert!(l.take_trace().is_none());
+
+        l.arm_tracing(2);
+        assert!(l.traced());
+        l.span_begin("exec", "fwd");
+        l.advance(1.0, Activity::Compute);
+        l.span_end_with(|| vec![("flops", crate::obs::Arg::F(8.0))]);
+        l.advance(0.5, Activity::Communicate);
+        l.trace_event("swap", "hot_swap", Vec::new);
+        // compact() must preserve the raw intervals while traced.
+        l.compact();
+        assert_eq!(l.intervals().len(), 2);
+        let cap = l.take_trace().unwrap();
+        assert!(!l.traced(), "take_trace disarms");
+        assert_eq!(cap.rank(), 2);
+        assert_eq!(cap.recorder.spans().len(), 1);
+        assert_eq!(cap.recorder.events().len(), 1);
+        assert_eq!(cap.intervals.len(), 2);
+        // Once disarmed, compaction works again.
+        l.compact();
+        assert!(l.intervals().len() <= 2);
     }
 
     #[test]

@@ -28,6 +28,7 @@ pub mod data;
 pub mod energy;
 pub mod experiments;
 pub mod model;
+pub mod obs;
 pub mod perfmodel;
 pub mod runtime;
 pub mod serve;

@@ -22,9 +22,12 @@ use phantom::util::json::Json;
 use phantom::util::table::{fmt_joules, fmt_secs, Table};
 
 fn main() {
+    // The binary is chatty by default; libraries and tests inherit the
+    // quiet Warn default. PHANTOM_LOG overrides either way.
+    phantom::obs::log::init(phantom::obs::log::Level::Info);
     let argv: Vec<String> = std::env::args().skip(1).collect();
     if let Err(e) = run(argv) {
-        eprintln!("error: {e:#}");
+        phantom::log_error!("{e:#}");
         std::process::exit(1);
     }
 }
@@ -43,6 +46,7 @@ fn run(argv: Vec<String>) -> Result<()> {
         "inspect" => cmd_inspect(&args),
         "fit-comm" => cmd_fit_comm(),
         "tune" => cmd_tune(&args),
+        "trace" => cmd_trace(&args),
         "help" | "--help" | "-h" => {
             print!("{USAGE}");
             Ok(())
@@ -83,7 +87,7 @@ fn cmd_train(args: &Args) -> Result<()> {
                 .with_context(|| format!("loading --resume snapshot {dir}"))?;
             let cfg = snap.config.clone();
             cfg.validate().context("resumed snapshot config")?;
-            eprintln!(
+            phantom::log_info!(
                 "resuming from {dir} at iteration {} (loss {:.6})",
                 snap.progress.iter,
                 snap.progress.losses.last().copied().unwrap_or(f64::NAN)
@@ -128,7 +132,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     };
 
     let server = ExecServer::for_run(&cfg)?;
-    eprintln!(
+    phantom::log_info!(
         "training {} / {} on {} simulated ranks ({} model x {} dp; n={}, k={}, L={}, \
          backend={})...",
         preset_name,
@@ -185,7 +189,7 @@ fn cmd_train(args: &Args) -> Result<()> {
 
     if let Some(path) = args.opt("out") {
         std::fs::write(path, report_json(&report).pretty())?;
-        eprintln!("wrote {path}");
+        phantom::log_info!("wrote {path}");
     }
     Ok(())
 }
@@ -245,7 +249,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             seed: args.opt_parse::<u64>("seed")?.unwrap_or(defaults.seed),
             open_loop,
         };
-        eprintln!(
+        phantom::log_info!(
             "serving {} / {} ({} queries @ {} q/s, batch<={}, linger {:.1} ms)...",
             preset_name,
             mode.name(),
@@ -288,8 +292,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
         );
     }
     let out = args.opt("out").unwrap_or("BENCH_serve.json");
-    phantom::serve::write_records_json(std::path::Path::new(out), &records)?;
-    eprintln!("wrote {out}");
+    let virtual_s = reports
+        .iter()
+        .flat_map(|r| r.per_rank.iter())
+        .map(|pr| pr.ledger.end_s)
+        .fold(0.0, f64::max);
+    let meta = phantom::util::json::BenchMeta::new("serve", virtual_s);
+    phantom::serve::write_records_json_with_meta(std::path::Path::new(out), &records, &meta)?;
+    phantom::log_info!("wrote {out}");
     Ok(())
 }
 
@@ -353,7 +363,7 @@ fn cmd_ckpt(args: &Args) -> Result<()> {
             };
             let re = ckpt::reshard(&snap, target_p, target_mode)?;
             re.save(Path::new(out))?;
-            eprintln!(
+            phantom::log_info!(
                 "resharded {} (p={}, {}) -> {} (p={}, {}, k={})",
                 dir,
                 snap.p(),
@@ -378,7 +388,7 @@ fn cmd_ckpt(args: &Args) -> Result<()> {
             if !y.data().iter().all(|v| v.is_finite()) {
                 bail!("{dir}: forward produced non-finite outputs");
             }
-            eprintln!("{dir}: checksums ok, forward on [{batch}, {}] finite", snap.n());
+            phantom::log_info!("{dir}: checksums ok, forward on [{batch}, {}] finite", snap.n());
             if let Some(other) = args.opt("against") {
                 let snap2 = Snapshot::load(Path::new(other))?;
                 if snap2.n() != snap.n() {
@@ -474,7 +484,7 @@ fn cmd_chaos(args: &Args) -> Result<()> {
             seed,
             ..Default::default()
         };
-        eprintln!(
+        phantom::log_info!(
             "differential sweep: {} randomized configs x 2 modes, {} iters each...",
             sw.cases, sw.iters
         );
@@ -497,7 +507,7 @@ fn cmd_chaos(args: &Args) -> Result<()> {
         cfg.train.seed = seed;
         let dir = std::env::temp_dir()
             .join(format!("phantom-chaos-{}-{}", std::process::id(), seed));
-        eprintln!(
+        phantom::log_info!(
             "train chaos: crash rank {crash_rank} at iteration {crash_iter}, then resume..."
         );
         let result =
@@ -530,7 +540,7 @@ fn cmd_chaos(args: &Args) -> Result<()> {
             mode: cfg.mode,
         };
         let crash_seq = phantom::testkit::collectives_per_forward(cfg.model.layers) * 2;
-        eprintln!("serve chaos: crash rank {crash_rank} mid-stream, hot-swap recovery...");
+        phantom::log_info!("serve chaos: crash rank {crash_rank} mid-stream, hot-swap recovery...");
         let report =
             phantom::testkit::serve_crash_swap(&cfg, &scfg, 6, crash_rank, crash_seq)?;
         if !report.outputs_match {
@@ -563,8 +573,9 @@ fn cmd_chaos(args: &Args) -> Result<()> {
             None => merged.push((k, v)),
         }
     }
-    phantom::serve::write_records_json(out_path, &merged)?;
-    eprintln!("wrote {out}");
+    let meta = phantom::util::json::BenchMeta::new("chaos", 0.0);
+    phantom::serve::write_records_json_with_meta(out_path, &merged, &meta)?;
+    phantom::log_info!("wrote {out}");
     Ok(())
 }
 
@@ -630,7 +641,7 @@ fn cmd_experiment(args: &Args) -> Result<()> {
         None
     };
     for id in ids {
-        eprintln!("running {id}...");
+        phantom::log_info!("running {id}...");
         let result = experiments::run(id, server.as_ref())?;
         print!("{}", result.render_markdown());
         if let Some(dir) = args.opt("out-dir") {
@@ -735,8 +746,9 @@ fn cmd_plan(args: &Args) -> Result<()> {
                 std::fs::create_dir_all(parent)?;
             }
         }
-        phantom::util::json::write_records_json(Path::new(out), &records)?;
-        eprintln!("wrote {out} ({} calibration records)", records.len());
+        let meta = phantom::util::json::BenchMeta::new("calib", 0.0);
+        phantom::util::json::write_records_json_with_meta(Path::new(out), &records, &meta)?;
+        phantom::log_info!("wrote {out} ({} calibration records)", records.len());
         return Ok(());
     }
 
@@ -744,7 +756,7 @@ fn cmd_plan(args: &Args) -> Result<()> {
     let calib_path = args.opt("calib").unwrap_or(calib::DEFAULT_CALIB_PATH);
     let calibration = calib::Calibration::load_or_default(Path::new(calib_path));
     calibration.log_warnings();
-    eprintln!("plan: calibration from {}", calibration.source.describe());
+    phantom::log_info!("plan: calibration from {}", calibration.source.describe());
 
     let space = plan::PlanSpace {
         n: args.opt_parse::<usize>("n")?.unwrap_or(256),
@@ -796,7 +808,9 @@ fn cmd_plan(args: &Args) -> Result<()> {
     print!("{}", t.markdown());
     let infeasible = report.cells.len() - priced.len();
     if infeasible > 0 {
-        eprintln!("plan: {infeasible} cell(s) infeasible (reasons recorded in the sweep output)");
+        phantom::log_info!(
+            "plan: {infeasible} cell(s) infeasible (reasons recorded in the sweep output)"
+        );
     }
 
     let validation = if args.flag("no-validate") {
@@ -807,16 +821,18 @@ fn cmd_plan(args: &Args) -> Result<()> {
             queries: args.opt_parse::<usize>("queries")?.unwrap_or(96),
             ..Default::default()
         };
-        eprintln!("plan: measuring predicted-best and predicted-worst cells...");
+        phantom::log_info!("plan: measuring predicted-best and predicted-worst cells...");
         Some(plan::validate(&report, &space, &opts)?)
     };
 
     let out = args.opt("out").unwrap_or("BENCH_plan.json");
-    phantom::util::json::write_json(
-        Path::new(out),
-        &plan::report_json(&report, &calibration, validation.as_ref()),
-    )?;
-    eprintln!("wrote {out}");
+    let mut report_doc = plan::report_json(&report, &calibration, validation.as_ref());
+    if let Json::Obj(m) = &mut report_doc {
+        let meta = phantom::util::json::BenchMeta::new("plan", 0.0);
+        m.insert("meta".to_string(), meta.to_json());
+    }
+    phantom::util::json::write_json(Path::new(out), &report_doc)?;
+    phantom::log_info!("wrote {out}");
 
     if let Some(v) = &validation {
         let mut vt = Table::new(
@@ -927,7 +943,7 @@ fn cmd_tune(args: &Args) -> Result<()> {
     let iters = args.opt_parse::<usize>("iters")?.unwrap_or(5);
     let quick = args.flag("quick");
     let isa = phantom::tensor::simd::active();
-    eprintln!(
+    phantom::log_info!(
         "tune: ISA {}, {} shape(s), {} iters/candidate{}",
         isa.name(),
         shapes.len(),
@@ -947,7 +963,9 @@ fn cmd_tune(args: &Args) -> Result<()> {
                 }
             }
             Ok(None) => {}
-            Err(e) => eprintln!("tune: warning: not merging unreadable manifest: {e}"),
+            Err(e) => {
+                phantom::log_warn!("tune: warning: not merging unreadable manifest: {e}")
+            }
         }
     }
     tuning.save(&out_path)?;
@@ -971,4 +989,333 @@ fn cmd_tune(args: &Args) -> Result<()> {
     print!("{}", tab.markdown());
     println!("wrote {} ({} shape classes)", out_path.display(), tuning.classes.len());
     Ok(())
+}
+
+/// `phantom trace` — run the train and/or serve drivers traced and
+/// untraced, reconcile the per-category energy attribution against the
+/// exact ledgers (1e-9 relative), export Perfetto-loadable timelines,
+/// and record the tracing overhead (DESIGN.md §13).
+fn cmd_trace(args: &Args) -> Result<()> {
+    args.check_known(&[
+        "scenario",
+        "preset",
+        "mode",
+        "iters",
+        "queries",
+        "rate",
+        "seed",
+        "runs",
+        "out-dir",
+        "bench-out",
+    ])?;
+    let scenario = args.opt("scenario").unwrap_or("all");
+    if !matches!(scenario, "train" | "serve" | "all") {
+        bail!("unknown --scenario '{scenario}' (expected train, serve, or all)");
+    }
+    let out_dir = std::path::PathBuf::from(args.opt("out-dir").unwrap_or("."));
+    std::fs::create_dir_all(&out_dir)
+        .with_context(|| format!("creating --out-dir {}", out_dir.display()))?;
+    // Wall-clock overhead on these small runs is noisy: every arm takes
+    // the minimum over `runs` repeats, after one discarded warmup run.
+    let runs = args.opt_parse::<usize>("runs")?.unwrap_or(3).max(1);
+
+    let mut records: Vec<(String, f64)> = Vec::new();
+    let mut virtual_s = 0.0f64;
+    if scenario != "serve" {
+        let (r, v) = trace_train(args, &out_dir, runs)?;
+        records.extend(r);
+        virtual_s = virtual_s.max(v);
+    }
+    if scenario != "train" {
+        let (r, v) = trace_serve(args, &out_dir, runs)?;
+        records.extend(r);
+        virtual_s = virtual_s.max(v);
+    }
+
+    let out = args.opt("bench-out").unwrap_or("BENCH_trace.json");
+    let meta = phantom::util::json::BenchMeta::new("trace", virtual_s);
+    phantom::serve::write_records_json_with_meta(Path::new(out), &records, &meta)?;
+    phantom::log_info!("wrote {out}");
+    Ok(())
+}
+
+fn trace_train(args: &Args, out_dir: &Path, runs: usize) -> Result<(Vec<(String, f64)>, f64)> {
+    let preset_name = args.opt("preset").unwrap_or("quickstart");
+    let mode = Parallelism::parse(args.opt("mode").unwrap_or("pp"))?;
+    let mut cfg = preset(preset_name, mode)?;
+    cfg.train.max_iters = args.opt_parse::<usize>("iters")?.unwrap_or(12);
+    cfg.train.target_loss = None;
+    let server = ExecServer::for_run(&cfg)?;
+    let power = cfg.hardware.power;
+    phantom::log_info!(
+        "tracing train {} / {} ({} iters, min of {} runs per arm)...",
+        preset_name,
+        mode.name(),
+        cfg.train.max_iters,
+        runs
+    );
+
+    coordinator::train_with(&cfg, &server, TrainOptions::default())?;
+    let mut untraced_wall = f64::INFINITY;
+    for _ in 0..runs {
+        let t0 = std::time::Instant::now();
+        coordinator::train_with(&cfg, &server, TrainOptions::default())?;
+        untraced_wall = untraced_wall.min(t0.elapsed().as_secs_f64());
+    }
+    let mut traced_wall = f64::INFINITY;
+    let mut report = None;
+    for _ in 0..runs {
+        let opts = TrainOptions { trace: true, ..Default::default() };
+        let t0 = std::time::Instant::now();
+        let r = coordinator::train_with(&cfg, &server, opts)?;
+        traced_wall = traced_wall.min(t0.elapsed().as_secs_f64());
+        report = Some(r);
+    }
+    let report = report.expect("runs >= 1");
+
+    let caps: Vec<(usize, &phantom::obs::TraceCapture, f64)> = report
+        .per_rank
+        .iter()
+        .map(|rr| {
+            let cap = rr.trace.as_ref().expect("traced run must capture every rank");
+            (rr.rank, cap, rr.ledger.energy_j(&power))
+        })
+        .collect();
+
+    let mut tracks: Vec<phantom::obs::trace::Track> = caps
+        .iter()
+        .map(|(rank, cap, _)| phantom::obs::trace::Track {
+            name: format!("rank {rank} ({})", mode.name()),
+            tid: *rank as i64,
+            recorder: &cap.recorder,
+        })
+        .collect();
+    if let Some(host) = &report.host_trace {
+        tracks.push(phantom::obs::trace::Track {
+            name: "host (real time)".to_string(),
+            tid: report.per_rank.len() as i64,
+            recorder: host,
+        });
+    }
+    let doc = phantom::obs::trace::chrome_trace(&tracks);
+    phantom::obs::trace::validate_trace(&doc)
+        .map_err(|e| anyhow::anyhow!("train trace failed validation: {e}"))?;
+    let path = out_dir.join("trace_train.json");
+    std::fs::write(&path, doc.pretty())?;
+    phantom::log_info!("wrote {} ({} tracks)", path.display(), tracks.len());
+
+    let title = format!("Energy attribution — train {preset_name} ({})", mode.name());
+    let records = attribution_records("train", &title, &caps, &power, untraced_wall, traced_wall)?;
+    Ok((records, report.wall_s))
+}
+
+/// Everything `trace serve` needs from one driven run of the pool.
+struct ServeTraceRun {
+    /// Real seconds for the whole driven run (submission to shutdown).
+    wall_s: f64,
+    /// Latest virtual rank clock, for the BENCH meta header.
+    virtual_s: f64,
+    per_rank: Vec<phantom::serve::PoolRankReport>,
+    metrics: phantom::obs::MetricsSnapshot,
+    events: Option<phantom::obs::SpanRecorder>,
+    completed: usize,
+}
+
+/// One closed-loop serve run against a fresh pool: `queries` spaced
+/// arrivals, then a same-instant burst past the queue depth so the shed
+/// path shows up in the metrics and (traced) in the event timeline.
+fn drive_serve(
+    cfg: &phantom::config::RunConfig,
+    exec: &ExecServer,
+    scfg: ServeConfig,
+    queries: usize,
+    rate_qps: f64,
+    seed: u64,
+    trace: bool,
+) -> Result<ServeTraceRun> {
+    let opts = phantom::serve::PoolOptions { trace, ..Default::default() };
+    let mut server = phantom::serve::Server::start_with(cfg, scfg, exec, opts)?;
+    let n = cfg.model.n;
+    let mut rng = phantom::util::prng::Prng::new(seed);
+    let dt = 1.0 / rate_qps.max(1e-9);
+    let t0 = std::time::Instant::now();
+    let mut t = 0.0f64;
+    for _ in 0..queries {
+        t += dt;
+        let x = phantom::tensor::Tensor::randn(&[n], 1.0, &mut rng);
+        let (_, effective_s) = server.submit_blocking(t, x)?;
+        t = t.max(effective_s);
+    }
+    for _ in 0..scfg.queue_depth + 2 {
+        let x = phantom::tensor::Tensor::randn(&[n], 1.0, &mut rng);
+        server.try_submit(t, x)?;
+    }
+    server.drain()?;
+    let metrics = server.metrics();
+    let events = server.take_host_events();
+    let (responses, _stats, per_rank) = server.finish()?;
+    let wall_s = t0.elapsed().as_secs_f64();
+    let virtual_s = per_rank.iter().map(|pr| pr.ledger.end_s).fold(0.0, f64::max);
+    Ok(ServeTraceRun {
+        wall_s,
+        virtual_s,
+        per_rank,
+        metrics,
+        events,
+        completed: responses.len(),
+    })
+}
+
+fn trace_serve(args: &Args, out_dir: &Path, runs: usize) -> Result<(Vec<(String, f64)>, f64)> {
+    let preset_name = args.opt("preset").unwrap_or("quickstart");
+    let mode = Parallelism::parse(args.opt("mode").unwrap_or("pp"))?;
+    let cfg = preset(preset_name, mode)?;
+    let exec = ExecServer::for_run(&cfg)?;
+    let power = cfg.hardware.power;
+    let queries = args.opt_parse::<usize>("queries")?.unwrap_or(64);
+    let rate = args.opt_parse::<f64>("rate")?.unwrap_or(2_000.0);
+    let seed = args.opt_parse::<u64>("seed")?.unwrap_or(0x7ACE);
+    let scfg = ServeConfig {
+        queue_depth: 2 * cfg.train.batch,
+        max_batch: cfg.train.batch,
+        linger_s: 2e-3,
+        mode,
+    };
+    phantom::log_info!(
+        "tracing serve {} / {} ({} queries @ {} q/s, min of {} runs per arm)...",
+        preset_name,
+        mode.name(),
+        queries,
+        rate,
+        runs
+    );
+
+    drive_serve(&cfg, &exec, scfg, queries, rate, seed, false)?;
+    let mut untraced_wall = f64::INFINITY;
+    for _ in 0..runs {
+        let r = drive_serve(&cfg, &exec, scfg, queries, rate, seed, false)?;
+        untraced_wall = untraced_wall.min(r.wall_s);
+    }
+    let mut traced_wall = f64::INFINITY;
+    let mut run = None;
+    for _ in 0..runs {
+        let r = drive_serve(&cfg, &exec, scfg, queries, rate, seed, true)?;
+        traced_wall = traced_wall.min(r.wall_s);
+        run = Some(r);
+    }
+    let run = run.expect("runs >= 1");
+
+    let caps: Vec<(usize, &phantom::obs::TraceCapture, f64)> = run
+        .per_rank
+        .iter()
+        .map(|pr| {
+            let cap = pr.trace.as_ref().expect("traced pool must capture every rank");
+            (pr.rank, cap, pr.ledger.energy_j(&power))
+        })
+        .collect();
+
+    let mut tracks: Vec<phantom::obs::trace::Track> = caps
+        .iter()
+        .map(|(rank, cap, _)| phantom::obs::trace::Track {
+            name: format!("rank {rank} ({})", mode.name()),
+            tid: *rank as i64,
+            recorder: &cap.recorder,
+        })
+        .collect();
+    if let Some(ev) = &run.events {
+        tracks.push(phantom::obs::trace::Track {
+            name: "batcher".to_string(),
+            tid: cfg.p as i64,
+            recorder: ev,
+        });
+    }
+    let doc = phantom::obs::trace::chrome_trace(&tracks);
+    phantom::obs::trace::validate_trace(&doc)
+        .map_err(|e| anyhow::anyhow!("serve trace failed validation: {e}"))?;
+    let path = out_dir.join("trace_serve.json");
+    std::fs::write(&path, doc.pretty())?;
+    phantom::log_info!("wrote {} ({} tracks)", path.display(), tracks.len());
+
+    let title = format!("Energy attribution — serve {preset_name} ({})", mode.name());
+    let mut records =
+        attribution_records("serve", &title, &caps, &power, untraced_wall, traced_wall)?;
+    records.push(("serve_completed".to_string(), run.completed as f64));
+    for (k, v) in &run.metrics.records {
+        records.push((format!("serve_metric_{k}"), *v));
+    }
+    Ok((records, run.virtual_s))
+}
+
+/// Shared tail of both trace scenarios: reconcile every rank's span
+/// attribution against its exact ledger energy (1e-9 relative — the
+/// invariant is exactness, not approximation), print the per-category
+/// rollup, and emit the `{label}_*` BENCH records.
+fn attribution_records(
+    label: &str,
+    title: &str,
+    caps: &[(usize, &phantom::obs::TraceCapture, f64)],
+    power: &phantom::energy::PowerModel,
+    untraced_wall: f64,
+    traced_wall: f64,
+) -> Result<Vec<(String, f64)>> {
+    let mut rollup = phantom::obs::Attribution::default();
+    let mut exact_total = 0.0f64;
+    let mut rel_err_max = 0.0f64;
+    let mut spans = 0u64;
+    let mut dropped = 0u64;
+    for (rank, cap, exact_j) in caps {
+        let attr = cap.attribution(power);
+        if !attr.reconciles(*exact_j, 1e-9) {
+            bail!(
+                "rank {rank}: attribution {} J does not reconcile with ledger {} J",
+                attr.total_j(),
+                exact_j
+            );
+        }
+        let rel = (attr.total_j() - exact_j).abs() / exact_j.abs().max(1e-12);
+        rel_err_max = rel_err_max.max(rel);
+        spans += cap.recorder.spans().len() as u64;
+        dropped += cap.recorder.dropped();
+        exact_total += exact_j;
+        rollup.accumulate(&attr);
+    }
+
+    let total = rollup.total_j();
+    let mut t = Table::new(title, &["category", "busy", "stall", "energy", "share"]);
+    for (cat, ce) in &rollup.by_category {
+        t.row(vec![
+            cat.clone(),
+            fmt_secs(ce.busy_s),
+            fmt_secs(ce.stall_s),
+            fmt_joules(ce.energy_j),
+            format!("{:.1}%", 100.0 * ce.energy_j / total.max(1e-12)),
+        ]);
+    }
+    let u = &rollup.untraced;
+    t.row(vec![
+        "(untraced)".into(),
+        fmt_secs(u.busy_s),
+        fmt_secs(u.stall_s),
+        fmt_joules(u.energy_j),
+        format!("{:.1}%", 100.0 * u.energy_j / total.max(1e-12)),
+    ]);
+    print!("{}", t.markdown());
+
+    let overhead = ((traced_wall - untraced_wall) / untraced_wall.max(1e-9)).max(0.0);
+    let mut records = vec![
+        (format!("{label}_untraced_wall_s"), untraced_wall),
+        (format!("{label}_traced_wall_s"), traced_wall),
+        (format!("{label}_overhead_frac"), overhead),
+        (format!("{label}_overhead_ok"), if overhead < 0.05 { 1.0 } else { 0.0 }),
+        (format!("{label}_reconciled"), 1.0),
+        (format!("{label}_rel_err_max"), rel_err_max),
+        (format!("{label}_spans"), spans as f64),
+        (format!("{label}_spans_dropped"), dropped as f64),
+        (format!("{label}_ledger_j"), exact_total),
+    ];
+    for (cat, ce) in &rollup.by_category {
+        records.push((format!("{label}_cat_{}_j", cat.replace('.', "_")), ce.energy_j));
+    }
+    records.push((format!("{label}_cat_untraced_j"), u.energy_j));
+    Ok(records)
 }

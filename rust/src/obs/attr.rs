@@ -1,0 +1,299 @@
+//! Exact energy attribution: fold recorded spans against the ledger's raw
+//! intervals so every Joule lands in a span category.
+//!
+//! The ledger is the source of truth for *when* energy was drawn (interval
+//! activity → Watts under Eqn. 1); spans only say *what the rank was doing*
+//! then. Attribution flattens the strictly-nested spans into disjoint
+//! "leaf segments" — each instant labeled by the deepest covering span —
+//! then intersects those segments with the ledger intervals. Interval time
+//! no segment covers (pre-arming lead-in, dropped spans, untraced gaps)
+//! goes to the `untraced` bucket at that interval's own power draw, so
+//!
+//!   Σ_category energy + untraced energy == ledger energy (exact)
+//!
+//! up to float summation noise. The tier-1 test asserts this within 1e-9
+//! relative error on the quickstart TP and PP configs.
+
+use std::collections::BTreeMap;
+
+use crate::energy::{Activity, Interval, PowerModel};
+
+use super::span::Span;
+
+/// Time and energy assigned to one span category.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct CategoryEnergy {
+    /// Seconds charged at the busy draw A (Compute intervals).
+    pub busy_s: f64,
+    /// Seconds charged at the static draw B (Communicate/Idle/DpComm).
+    pub stall_s: f64,
+    pub energy_j: f64,
+}
+
+impl CategoryEnergy {
+    fn add(&mut self, dur_s: f64, activity: Activity, model: &PowerModel) {
+        match activity {
+            Activity::Compute => {
+                self.busy_s += dur_s;
+                self.energy_j += model.busy_w * dur_s;
+            }
+            _ => {
+                self.stall_s += dur_s;
+                self.energy_j += model.idle_w * dur_s;
+            }
+        }
+    }
+
+    fn accumulate(&mut self, other: &CategoryEnergy) {
+        self.busy_s += other.busy_s;
+        self.stall_s += other.stall_s;
+        self.energy_j += other.energy_j;
+    }
+}
+
+/// Per-category energy rollup for one rank (or, after `accumulate`, a
+/// whole run).
+#[derive(Debug, Clone, Default)]
+pub struct Attribution {
+    pub by_category: BTreeMap<String, CategoryEnergy>,
+    /// Interval time no span covered, at the intervals' own draw.
+    pub untraced: CategoryEnergy,
+}
+
+impl Attribution {
+    /// Total energy across all categories plus the untraced bucket — the
+    /// quantity that must reconcile with `LedgerSummary::energy_j`.
+    pub fn total_j(&self) -> f64 {
+        self.by_category.values().map(|c| c.energy_j).sum::<f64>() + self.untraced.energy_j
+    }
+
+    /// Does the rollup reconcile with the exact ledger energy within
+    /// relative error `rel`?
+    pub fn reconciles(&self, exact_j: f64, rel: f64) -> bool {
+        let diff = (self.total_j() - exact_j).abs();
+        diff <= rel * exact_j.abs().max(1e-12)
+    }
+
+    /// Merge another rank's attribution into this rollup.
+    pub fn accumulate(&mut self, other: &Attribution) {
+        for (cat, ce) in &other.by_category {
+            self.by_category.entry(cat.clone()).or_default().accumulate(ce);
+        }
+        self.untraced.accumulate(&other.untraced);
+    }
+}
+
+/// A maximal segment of time labeled with the deepest covering span's
+/// category. Segments are disjoint and sorted.
+#[derive(Debug, Clone, Copy)]
+struct Segment {
+    start_s: f64,
+    end_s: f64,
+    cat: &'static str,
+}
+
+/// Flatten strictly-nested spans into disjoint leaf segments via a stack
+/// sweep. Spans are sorted parents-first (earlier start, or same start and
+/// later end); each emitted segment carries the category of the deepest
+/// span active over it.
+fn leaf_segments(spans: &[Span]) -> Vec<Segment> {
+    let mut sorted: Vec<&Span> = spans.iter().filter(|s| s.end_s > s.start_s).collect();
+    sorted.sort_by(|a, b| {
+        a.start_s
+            .partial_cmp(&b.start_s)
+            .unwrap()
+            .then(b.end_s.partial_cmp(&a.end_s).unwrap())
+            .then(a.depth.cmp(&b.depth))
+    });
+    let mut segs: Vec<Segment> = Vec::new();
+    // (end_s, cat) of currently-active spans, outermost first.
+    let mut stack: Vec<(f64, &'static str)> = Vec::new();
+    let mut cursor = f64::NEG_INFINITY;
+    let mut emit = |segs: &mut Vec<Segment>, start: f64, end: f64, cat: &'static str| {
+        if end > start {
+            segs.push(Segment { start_s: start, end_s: end, cat });
+        }
+    };
+    for sp in sorted {
+        // Close spans that finish before this one starts, emitting their
+        // uncovered tails deepest-first.
+        while let Some(&(end, cat)) = stack.last() {
+            if end <= sp.start_s {
+                emit(&mut segs, cursor.max(f64::MIN), end, cat);
+                cursor = cursor.max(end);
+                stack.pop();
+            } else {
+                break;
+            }
+        }
+        // The enclosing span (if any) owns the gap up to this span's start.
+        if let Some(&(_, cat)) = stack.last() {
+            emit(&mut segs, cursor, sp.start_s, cat);
+        }
+        cursor = cursor.max(sp.start_s);
+        stack.push((sp.end_s, sp.cat));
+    }
+    while let Some((end, cat)) = stack.pop() {
+        emit(&mut segs, cursor, end, cat);
+        cursor = cursor.max(end);
+    }
+    segs
+}
+
+/// Attribute every Joule of `intervals` to the category of the deepest
+/// span covering it; uncovered time goes to `untraced`.
+pub fn attribute(spans: &[Span], intervals: &[Interval], model: &PowerModel) -> Attribution {
+    let segs = leaf_segments(spans);
+    let mut out = Attribution::default();
+    let mut si = 0usize;
+    for iv in intervals {
+        let (s, e) = (iv.start_s, iv.end_s);
+        if e <= s {
+            continue;
+        }
+        // Ledger intervals are chronological, so the segment cursor only
+        // moves forward — but rewind defensively if an interval starts
+        // before the previous one ended (compacted ledgers).
+        while si > 0 && segs[si - 1].end_s > s {
+            si -= 1;
+        }
+        while si < segs.len() && segs[si].end_s <= s {
+            si += 1;
+        }
+        let mut covered = 0.0;
+        let mut j = si;
+        while j < segs.len() && segs[j].start_s < e {
+            let o_start = segs[j].start_s.max(s);
+            let o_end = segs[j].end_s.min(e);
+            if o_end > o_start {
+                let dur = o_end - o_start;
+                covered += dur;
+                out.by_category
+                    .entry(segs[j].cat.to_string())
+                    .or_default()
+                    .add(dur, iv.activity, model);
+            }
+            j += 1;
+        }
+        let uncovered = (e - s) - covered;
+        if uncovered > 0.0 {
+            out.untraced.add(uncovered, iv.activity, model);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::span::SpanRecorder;
+
+    fn span(cat: &'static str, start: f64, end: f64, depth: u32) -> Span {
+        Span { cat, name: cat.to_string(), start_s: start, end_s: end, depth, args: vec![] }
+    }
+
+    #[test]
+    fn leaf_segments_take_deepest_cover() {
+        // iter [0,10) wrapping exec [1,4) and comm [6,8).
+        let spans = vec![
+            span("exec", 1.0, 4.0, 1),
+            span("comm", 6.0, 8.0, 1),
+            span("iter", 0.0, 10.0, 0),
+        ];
+        let segs = leaf_segments(&spans);
+        let got: Vec<(f64, f64, &str)> = segs.iter().map(|s| (s.start_s, s.end_s, s.cat)).collect();
+        assert_eq!(
+            got,
+            vec![
+                (0.0, 1.0, "iter"),
+                (1.0, 4.0, "exec"),
+                (4.0, 6.0, "iter"),
+                (6.0, 8.0, "comm"),
+                (8.0, 10.0, "iter"),
+            ]
+        );
+    }
+
+    #[test]
+    fn attribution_reconciles_exactly() {
+        let model = PowerModel::frontier();
+        let mut ledger = crate::energy::EnergyLedger::new();
+        ledger.arm_tracing(0);
+        ledger.span_begin("iter", "iter 0");
+        ledger.span_begin("exec", "fwd");
+        ledger.advance(0.5, Activity::Compute);
+        ledger.span_end();
+        ledger.span_begin("comm.wire", "all_gather");
+        ledger.advance(0.2, Activity::Communicate);
+        ledger.span_end();
+        // Idle gap inside the iteration, covered by the iter span.
+        ledger.sync_to(1.0);
+        ledger.span_end();
+        // Trailing time no span covers → untraced.
+        ledger.advance(0.25, Activity::Compute);
+        let exact = ledger.energy_j(&model);
+        let cap = ledger.take_trace().unwrap();
+        let attr = cap.attribution(&model);
+        assert!(attr.reconciles(exact, 1e-12), "total={} exact={exact}", attr.total_j());
+        let exec = attr.by_category.get("exec").unwrap();
+        assert!((exec.energy_j - 560.0 * 0.5).abs() < 1e-9);
+        let wire = attr.by_category.get("comm.wire").unwrap();
+        assert!((wire.energy_j - 90.0 * 0.2).abs() < 1e-9);
+        let iter = attr.by_category.get("iter").unwrap();
+        assert!((iter.energy_j - 90.0 * 0.3).abs() < 1e-9, "idle gap stays with iter");
+        assert!((attr.untraced.energy_j - 560.0 * 0.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn dropped_spans_fall_to_untraced_and_still_reconcile() {
+        let model = PowerModel::frontier();
+        let mut rec = SpanRecorder::with_cap(0, 1);
+        let mut intervals = Vec::new();
+        let mut t = 0.0;
+        for i in 0..4 {
+            rec.begin("exec", "k", t);
+            intervals.push(Interval { start_s: t, end_s: t + 1.0, activity: Activity::Compute });
+            t += 1.0;
+            rec.end(t);
+            let _ = i;
+        }
+        assert_eq!(rec.dropped(), 3);
+        let attr = attribute(rec.spans(), &intervals, &model);
+        let exact = 560.0 * 4.0;
+        assert!(attr.reconciles(exact, 1e-12));
+        assert!((attr.by_category.get("exec").unwrap().energy_j - 560.0).abs() < 1e-9);
+        assert!((attr.untraced.energy_j - 560.0 * 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rollup_accumulates_across_ranks() {
+        let model = PowerModel { busy_w: 100.0, idle_w: 10.0 };
+        let a = attribute(
+            &[span("exec", 0.0, 1.0, 0)],
+            &[Interval { start_s: 0.0, end_s: 1.0, activity: Activity::Compute }],
+            &model,
+        );
+        let b = attribute(
+            &[span("exec", 0.0, 2.0, 0)],
+            &[Interval { start_s: 0.0, end_s: 2.0, activity: Activity::Idle }],
+            &model,
+        );
+        let mut total = Attribution::default();
+        total.accumulate(&a);
+        total.accumulate(&b);
+        let exec = total.by_category.get("exec").unwrap();
+        assert_eq!(exec.busy_s, 1.0);
+        assert_eq!(exec.stall_s, 2.0);
+        assert!((total.total_j() - 120.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_spans_put_everything_in_untraced() {
+        let model = PowerModel::frontier();
+        let intervals = [Interval { start_s: 0.0, end_s: 2.0, activity: Activity::Idle }];
+        let attr = attribute(&[], &intervals, &model);
+        assert!(attr.by_category.is_empty());
+        assert!((attr.untraced.energy_j - 180.0).abs() < 1e-9);
+        assert!(attr.reconciles(180.0, 1e-12));
+    }
+}

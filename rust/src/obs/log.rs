@@ -1,0 +1,195 @@
+//! Leveled, rank-prefixed structured logger — the logging front end for
+//! the whole crate (`PHANTOM_LOG` selects the level).
+//!
+//! Resolution order: `PHANTOM_LOG` (error|warn|info|debug|trace|off) wins;
+//! otherwise the default installed by `init` (the `phantom` binary
+//! installs `info` at startup); otherwise `warn`, so library users and
+//! tier-1 tests stay quiet. Rank threads call `set_rank` once so every
+//! line they emit is prefixed `[level rN] …`; host/driver threads log as
+//! `[level] …`. Output goes to stderr, leaving stdout to command output.
+//!
+//! Use the `log_error!`/`log_warn!`/`log_info!`/`log_debug!`/`log_trace!`
+//! macros: format arguments are only evaluated when the level is enabled.
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicU8, Ordering};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+impl Level {
+    fn tag(self) -> &'static str {
+        match self {
+            Level::Error => "error",
+            Level::Warn => "warn",
+            Level::Info => "info",
+            Level::Debug => "debug",
+            Level::Trace => "trace",
+        }
+    }
+}
+
+/// Parse a `PHANTOM_LOG` value. `off` (or `none`) disables everything;
+/// unrecognized values are reported as None so the caller keeps its
+/// default rather than silently going quiet.
+fn parse_level(s: &str) -> Option<Option<Level>> {
+    match s.trim().to_ascii_lowercase().as_str() {
+        "error" => Some(Some(Level::Error)),
+        "warn" | "warning" => Some(Some(Level::Warn)),
+        "info" => Some(Some(Level::Info)),
+        "debug" => Some(Some(Level::Debug)),
+        "trace" => Some(Some(Level::Trace)),
+        "off" | "none" => Some(None),
+        _ => None,
+    }
+}
+
+const UNSET: u8 = 0xFF;
+const OFF: u8 = 0xFE;
+
+static LEVEL: AtomicU8 = AtomicU8::new(UNSET);
+
+fn resolve(default: Level) -> u8 {
+    match std::env::var("PHANTOM_LOG") {
+        Ok(v) => match parse_level(&v) {
+            Some(Some(l)) => l as u8,
+            Some(None) => OFF,
+            None => {
+                eprintln!(
+                    "[warn] PHANTOM_LOG={v:?} is not a level \
+                     (error|warn|info|debug|trace|off); using {}",
+                    default.tag()
+                );
+                default as u8
+            }
+        },
+        Err(_) => default as u8,
+    }
+}
+
+/// Install `default` as the level used when `PHANTOM_LOG` is unset. The
+/// `phantom` binary calls this with `Info` at startup; libraries never
+/// call it and inherit the quiet `Warn` default.
+pub fn init(default: Level) {
+    LEVEL.store(resolve(default), Ordering::Relaxed);
+}
+
+fn current() -> u8 {
+    let v = LEVEL.load(Ordering::Relaxed);
+    if v != UNSET {
+        return v;
+    }
+    let resolved = resolve(Level::Warn);
+    LEVEL.store(resolved, Ordering::Relaxed);
+    resolved
+}
+
+/// Is `level` currently enabled? The log macros check this before
+/// evaluating their format arguments.
+pub fn enabled(level: Level) -> bool {
+    (level as u8) <= current()
+}
+
+thread_local! {
+    static RANK: Cell<Option<usize>> = const { Cell::new(None) };
+}
+
+/// Tag this thread's log lines with a world-rank prefix. Called once at
+/// the top of each rank loop.
+pub fn set_rank(rank: usize) {
+    RANK.with(|r| r.set(Some(rank)));
+}
+
+/// Emit one line (used via the `log_*!` macros, which gate on `enabled`).
+pub fn write(level: Level, args: std::fmt::Arguments<'_>) {
+    let rank = RANK.with(|r| r.get());
+    match rank {
+        Some(r) => eprintln!("[{} r{r}] {args}", level.tag()),
+        None => eprintln!("[{}] {args}", level.tag()),
+    }
+}
+
+#[macro_export]
+macro_rules! log_error {
+    ($($t:tt)*) => {
+        if $crate::obs::log::enabled($crate::obs::log::Level::Error) {
+            $crate::obs::log::write($crate::obs::log::Level::Error, format_args!($($t)*));
+        }
+    };
+}
+
+#[macro_export]
+macro_rules! log_warn {
+    ($($t:tt)*) => {
+        if $crate::obs::log::enabled($crate::obs::log::Level::Warn) {
+            $crate::obs::log::write($crate::obs::log::Level::Warn, format_args!($($t)*));
+        }
+    };
+}
+
+#[macro_export]
+macro_rules! log_info {
+    ($($t:tt)*) => {
+        if $crate::obs::log::enabled($crate::obs::log::Level::Info) {
+            $crate::obs::log::write($crate::obs::log::Level::Info, format_args!($($t)*));
+        }
+    };
+}
+
+#[macro_export]
+macro_rules! log_debug {
+    ($($t:tt)*) => {
+        if $crate::obs::log::enabled($crate::obs::log::Level::Debug) {
+            $crate::obs::log::write($crate::obs::log::Level::Debug, format_args!($($t)*));
+        }
+    };
+}
+
+#[macro_export]
+macro_rules! log_trace {
+    ($($t:tt)*) => {
+        if $crate::obs::log::enabled($crate::obs::log::Level::Trace) {
+            $crate::obs::log::write($crate::obs::log::Level::Trace, format_args!($($t)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_levels() {
+        assert_eq!(parse_level("info"), Some(Some(Level::Info)));
+        assert_eq!(parse_level(" WARN "), Some(Some(Level::Warn)));
+        assert_eq!(parse_level("warning"), Some(Some(Level::Warn)));
+        assert_eq!(parse_level("off"), Some(None));
+        assert_eq!(parse_level("bogus"), None);
+    }
+
+    #[test]
+    fn levels_order() {
+        assert!(Level::Error < Level::Warn);
+        assert!(Level::Warn < Level::Info);
+        assert!(Level::Info < Level::Debug);
+        assert!(Level::Debug < Level::Trace);
+    }
+
+    #[test]
+    fn default_is_quiet_under_tests() {
+        // Unless the environment overrides it, libraries (and the test
+        // harness) run at Warn: info/debug/trace stay silent.
+        if std::env::var("PHANTOM_LOG").is_err() {
+            assert!(enabled(Level::Warn));
+            assert!(!enabled(Level::Info));
+            assert!(!enabled(Level::Trace));
+        }
+    }
+}

@@ -1,0 +1,200 @@
+//! Rolling metrics registry: counters, gauges, windowed histograms, and
+//! EWMAs — the live-feedback interface the serve pool exposes (queue
+//! depth, shed rate, latency p50/p99, J/query) and that ROADMAP items 1
+//! (online re-planning) and 3 (energy-aware fleet routing) consume.
+//!
+//! The registry is owned mutably by its producer (the `serve::Server`
+//! drives it from its own thread), so there is no interior mutability or
+//! locking; consumers read point-in-time `MetricsSnapshot`s.
+
+use std::collections::BTreeMap;
+
+/// Ring buffer of the last `cap` observations; quantiles are computed on
+/// snapshot, not on the hot path.
+#[derive(Debug, Clone)]
+struct WindowHist {
+    buf: Vec<f64>,
+    pos: usize,
+    count: u64,
+    sum: f64,
+}
+
+impl WindowHist {
+    fn new(cap: usize) -> WindowHist {
+        WindowHist { buf: Vec::with_capacity(cap.min(4096)), pos: 0, count: 0, sum: 0.0 }
+    }
+
+    fn observe(&mut self, v: f64, cap: usize) {
+        self.count += 1;
+        self.sum += v;
+        if self.buf.len() < cap {
+            self.buf.push(v);
+        } else {
+            self.buf[self.pos] = v;
+            self.pos = (self.pos + 1) % cap;
+        }
+    }
+
+    /// Nearest-rank quantile over the current window, `q` in [0, 1].
+    fn quantile(&self, q: f64) -> Option<f64> {
+        if self.buf.is_empty() {
+            return None;
+        }
+        let mut sorted = self.buf.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+        let idx = ((sorted.len() - 1) as f64 * q).round() as usize;
+        Some(sorted[idx.min(sorted.len() - 1)])
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Ewma {
+    value: f64,
+    alpha: f64,
+}
+
+/// Default histogram window (observations kept per histogram).
+pub const DEFAULT_WINDOW: usize = 1024;
+
+/// Rolling metrics registry. Metric names are `&'static str` so the hot
+/// path never allocates for a lookup key.
+#[derive(Debug, Clone)]
+pub struct MetricsRegistry {
+    window: usize,
+    counters: BTreeMap<&'static str, u64>,
+    gauges: BTreeMap<&'static str, f64>,
+    hists: BTreeMap<&'static str, WindowHist>,
+    ewmas: BTreeMap<&'static str, Ewma>,
+}
+
+impl Default for MetricsRegistry {
+    fn default() -> MetricsRegistry {
+        MetricsRegistry::new(DEFAULT_WINDOW)
+    }
+}
+
+impl MetricsRegistry {
+    pub fn new(window: usize) -> MetricsRegistry {
+        assert!(window > 0);
+        MetricsRegistry {
+            window,
+            counters: BTreeMap::new(),
+            gauges: BTreeMap::new(),
+            hists: BTreeMap::new(),
+            ewmas: BTreeMap::new(),
+        }
+    }
+
+    /// Increment a monotone counter.
+    pub fn inc(&mut self, name: &'static str) {
+        self.add(name, 1);
+    }
+
+    pub fn add(&mut self, name: &'static str, delta: u64) {
+        *self.counters.entry(name).or_insert(0) += delta;
+    }
+
+    /// Set a point-in-time gauge (e.g. queue depth).
+    pub fn set_gauge(&mut self, name: &'static str, v: f64) {
+        self.gauges.insert(name, v);
+    }
+
+    /// Record one observation into a windowed histogram.
+    pub fn observe(&mut self, name: &'static str, v: f64) {
+        let window = self.window;
+        self.hists.entry(name).or_insert_with(|| WindowHist::new(window)).observe(v, window);
+    }
+
+    /// Fold `v` into an exponentially-weighted moving average. The first
+    /// observation seeds the average.
+    pub fn ewma(&mut self, name: &'static str, v: f64, alpha: f64) {
+        match self.ewmas.get_mut(name) {
+            Some(e) => e.value = e.alpha * v + (1.0 - e.alpha) * e.value,
+            None => {
+                self.ewmas.insert(name, Ewma { value: v, alpha });
+            }
+        }
+    }
+
+    /// Point-in-time snapshot: flat (name, value) records. Counters and
+    /// gauges keep their names; histograms expand to `<name>_p50`,
+    /// `<name>_p99`, `<name>_count`; EWMAs to `<name>_ewma`.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let mut records: Vec<(String, f64)> = Vec::new();
+        for (k, v) in &self.counters {
+            records.push((k.to_string(), *v as f64));
+        }
+        for (k, v) in &self.gauges {
+            records.push((k.to_string(), *v));
+        }
+        for (k, h) in &self.hists {
+            if let (Some(p50), Some(p99)) = (h.quantile(0.5), h.quantile(0.99)) {
+                records.push((format!("{k}_p50"), p50));
+                records.push((format!("{k}_p99"), p99));
+            }
+            records.push((format!("{k}_count"), h.count as f64));
+        }
+        for (k, e) in &self.ewmas {
+            records.push((format!("{k}_ewma"), e.value));
+        }
+        MetricsSnapshot { records }
+    }
+}
+
+/// Flat point-in-time view of a registry.
+#[derive(Debug, Clone, Default)]
+pub struct MetricsSnapshot {
+    pub records: Vec<(String, f64)>,
+}
+
+impl MetricsSnapshot {
+    pub fn get(&self, name: &str) -> Option<f64> {
+        self.records.iter().find(|(k, _)| k == name).map(|(_, v)| *v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_gauges_and_ewma() {
+        let mut m = MetricsRegistry::default();
+        m.inc("shed");
+        m.add("shed", 2);
+        m.set_gauge("queue_depth", 7.0);
+        m.ewma("j_per_query", 10.0, 0.5);
+        m.ewma("j_per_query", 20.0, 0.5);
+        let s = m.snapshot();
+        assert_eq!(s.get("shed"), Some(3.0));
+        assert_eq!(s.get("queue_depth"), Some(7.0));
+        assert_eq!(s.get("j_per_query_ewma"), Some(15.0));
+        assert_eq!(s.get("absent"), None);
+    }
+
+    #[test]
+    fn histogram_quantiles_over_window() {
+        let mut m = MetricsRegistry::new(8);
+        for v in 1..=100 {
+            m.observe("latency_s", v as f64);
+        }
+        let s = m.snapshot();
+        // Window keeps the last 8 observations: 93..=100.
+        assert_eq!(s.get("latency_s_count"), Some(100.0));
+        let p50 = s.get("latency_s_p50").unwrap();
+        assert!((93.0..=100.0).contains(&p50), "p50={p50}");
+        let p99 = s.get("latency_s_p99").unwrap();
+        assert_eq!(p99, 100.0);
+        assert!(p50 <= p99);
+    }
+
+    #[test]
+    fn single_observation_quantiles() {
+        let mut m = MetricsRegistry::default();
+        m.observe("x", 4.25);
+        let s = m.snapshot();
+        assert_eq!(s.get("x_p50"), Some(4.25));
+        assert_eq!(s.get("x_p99"), Some(4.25));
+        assert_eq!(s.get("x_count"), Some(1.0));
+    }
+}

@@ -1,0 +1,27 @@
+//! Observability substrate: per-rank span tracing in virtual time, exact
+//! energy attribution against the `EnergyLedger`, Chrome trace-event export
+//! (Perfetto-viewable), a rolling serve metrics registry, and the leveled
+//! `PHANTOM_LOG` logger.
+//!
+//! The paper's argument (Eqn. 1) splits every Joule into busy vs.
+//! idle/communicating time; this module splits the same Joules one level
+//! finer — per collective, per kernel launch, per batcher decision — while
+//! keeping the ledger the single source of truth. Spans never *charge*
+//! time; they only label intervals the ledger already recorded, so the
+//! attribution rollup reconciles exactly with `LedgerSummary` (tested
+//! invariant, see `attr`).
+//!
+//! Recording is opt-in per ledger (`EnergyLedger::arm_tracing`) and every
+//! hook is a no-op when no recorder is armed, so untraced runs pay one
+//! branch per hook. See DESIGN.md §13 for the span taxonomy.
+
+pub mod attr;
+pub mod log;
+pub mod metrics;
+pub mod span;
+pub mod trace;
+
+pub use attr::{attribute, Attribution, CategoryEnergy};
+pub use metrics::{MetricsRegistry, MetricsSnapshot};
+pub use span::{Arg, Event, Span, SpanRecorder, TraceCapture};
+pub use trace::{chrome_trace, Track};

@@ -1,0 +1,221 @@
+//! Bounded per-rank span recorder stamped in *virtual* time.
+//!
+//! A rank's `SpanRecorder` lives inside its `EnergyLedger` (the one object
+//! already threaded through every hook site) and is stamped from the
+//! ledger's virtual clock, so spans and energy intervals share one
+//! timeline by construction. Ranks are single-threaded, so spans are
+//! strictly nested: `begin`/`end` maintain an open-span stack and closed
+//! spans carry their nesting depth.
+//!
+//! The recorder is bounded: once `cap` closed spans (or events) are held,
+//! further ones are counted in `dropped` instead of stored. Dropped spans
+//! simply leave their intervals unlabeled — the attribution pass assigns
+//! that time to the `untraced` bucket, so the energy reconciliation
+//! invariant survives overflow.
+
+use crate::energy::Interval;
+
+/// A typed span/event argument. Numbers stay numbers so the trace export
+/// and BENCH rollups don't round-trip through strings.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Arg {
+    F(f64),
+    I(i64),
+    S(String),
+}
+
+/// A closed span on one rank's virtual timeline. `cat` is the attribution
+/// category (taxonomy in DESIGN.md §13); `name` is the display label.
+#[derive(Debug, Clone)]
+pub struct Span {
+    pub cat: &'static str,
+    pub name: String,
+    pub start_s: f64,
+    pub end_s: f64,
+    pub depth: u32,
+    pub args: Vec<(&'static str, Arg)>,
+}
+
+/// An instant (zero-duration) event — batcher decisions, checkpoint
+/// writes, hot swaps.
+#[derive(Debug, Clone)]
+pub struct Event {
+    pub cat: &'static str,
+    pub name: String,
+    pub t_s: f64,
+    pub args: Vec<(&'static str, Arg)>,
+}
+
+#[derive(Debug, Clone)]
+struct OpenSpan {
+    cat: &'static str,
+    name: String,
+    start_s: f64,
+}
+
+/// Default bound on stored spans/events per rank. A quickstart-sized
+/// traced run records a few thousand spans; the cap exists so a
+/// forgotten-armed long-lived serve rank degrades to counting drops
+/// instead of growing without bound.
+pub const DEFAULT_SPAN_CAP: usize = 1 << 20;
+
+/// Per-rank bounded span/event recorder.
+#[derive(Debug, Clone)]
+pub struct SpanRecorder {
+    pub rank: usize,
+    cap: usize,
+    spans: Vec<Span>,
+    events: Vec<Event>,
+    stack: Vec<OpenSpan>,
+    dropped: u64,
+}
+
+impl SpanRecorder {
+    pub fn new(rank: usize) -> SpanRecorder {
+        SpanRecorder::with_cap(rank, DEFAULT_SPAN_CAP)
+    }
+
+    pub fn with_cap(rank: usize, cap: usize) -> SpanRecorder {
+        SpanRecorder {
+            rank,
+            cap,
+            spans: Vec::new(),
+            events: Vec::new(),
+            stack: Vec::new(),
+            dropped: 0,
+        }
+    }
+
+    /// Open a span at virtual time `now_s`.
+    pub fn begin(&mut self, cat: &'static str, name: &str, now_s: f64) {
+        self.stack.push(OpenSpan { cat, name: name.to_string(), start_s: now_s });
+    }
+
+    /// Close the innermost open span at `now_s`.
+    pub fn end(&mut self, now_s: f64) {
+        self.end_args(now_s, Vec::new());
+    }
+
+    /// Close the innermost open span, attaching args known only at the end
+    /// (measured wall time, FLOP tallies, arrival stamps).
+    pub fn end_args(&mut self, now_s: f64, args: Vec<(&'static str, Arg)>) {
+        let Some(open) = self.stack.pop() else {
+            debug_assert!(false, "span_end without matching span_begin");
+            return;
+        };
+        if self.spans.len() >= self.cap {
+            self.dropped += 1;
+            return;
+        }
+        self.spans.push(Span {
+            cat: open.cat,
+            name: open.name,
+            start_s: open.start_s,
+            end_s: now_s,
+            depth: self.stack.len() as u32,
+            args,
+        });
+    }
+
+    /// Record an instant event at `t_s`.
+    pub fn event(
+        &mut self,
+        cat: &'static str,
+        name: &str,
+        t_s: f64,
+        args: Vec<(&'static str, Arg)>,
+    ) {
+        if self.events.len() >= self.cap {
+            self.dropped += 1;
+            return;
+        }
+        self.events.push(Event { cat, name: name.to_string(), t_s, args });
+    }
+
+    pub fn spans(&self) -> &[Span] {
+        &self.spans
+    }
+
+    pub fn events(&self) -> &[Event] {
+        &self.events
+    }
+
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Open spans still on the stack (should be zero after a clean run).
+    pub fn open_depth(&self) -> usize {
+        self.stack.len()
+    }
+}
+
+/// Everything needed to attribute and export one rank's timeline,
+/// extracted from its ledger at the end of a traced run: the recorded
+/// spans plus a snapshot of the raw energy intervals they label.
+#[derive(Debug, Clone)]
+pub struct TraceCapture {
+    pub recorder: SpanRecorder,
+    pub intervals: Vec<Interval>,
+}
+
+impl TraceCapture {
+    pub fn rank(&self) -> usize {
+        self.recorder.rank
+    }
+
+    /// Fold the spans against the interval snapshot (see `attr`).
+    pub fn attribution(&self, model: &crate::energy::PowerModel) -> super::attr::Attribution {
+        super::attr::attribute(self.recorder.spans(), &self.intervals, model)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_nested_spans_with_depth() {
+        let mut r = SpanRecorder::new(3);
+        r.begin("iter", "iter 0", 0.0);
+        r.begin("exec", "fwd", 0.0);
+        r.end(1.0);
+        r.begin("comm.wire", "all_gather", 1.0);
+        r.end_args(1.5, vec![("seq", Arg::I(7))]);
+        r.end(1.5);
+        assert_eq!(r.spans().len(), 3);
+        assert_eq!(r.open_depth(), 0);
+        // Children close first and carry depth 1; the iter span is depth 0.
+        assert_eq!(r.spans()[0].name, "fwd");
+        assert_eq!(r.spans()[0].depth, 1);
+        assert_eq!(r.spans()[1].args, vec![("seq", Arg::I(7))]);
+        assert_eq!(r.spans()[2].cat, "iter");
+        assert_eq!(r.spans()[2].depth, 0);
+        assert_eq!(r.spans()[2].end_s, 1.5);
+    }
+
+    #[test]
+    fn cap_counts_drops_instead_of_growing() {
+        let mut r = SpanRecorder::with_cap(0, 2);
+        for i in 0..5 {
+            r.begin("exec", "k", i as f64);
+            r.end(i as f64 + 0.5);
+        }
+        assert_eq!(r.spans().len(), 2);
+        assert_eq!(r.dropped(), 3);
+        r.event("ckpt", "write", 9.0, vec![]);
+        assert_eq!(r.events().len(), 1, "event budget is separate from the span vec");
+    }
+
+    #[test]
+    fn unmatched_end_is_ignored_in_release() {
+        let mut r = SpanRecorder::new(0);
+        r.begin("iter", "i", 0.0);
+        r.end(1.0);
+        // A stray end must not panic in release builds (debug_assert only).
+        if !cfg!(debug_assertions) {
+            r.end(2.0);
+            assert_eq!(r.spans().len(), 1);
+        }
+    }
+}

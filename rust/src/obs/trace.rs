@@ -1,0 +1,184 @@
+//! Chrome trace-event JSON export (the format Perfetto and
+//! `chrome://tracing` load natively).
+//!
+//! Each rank becomes one track (`pid` 0, `tid` = track id): closed spans
+//! are emitted as "X" complete events with `ts`/`dur` in microseconds of
+//! *virtual* time, instants as "i" events, and an "M" metadata event names
+//! the track. Events are sorted per track by start time (parents before
+//! children on ties) so per-track timestamps are nondecreasing — the
+//! property the CI trace validator checks.
+
+use crate::util::json::Json;
+
+use super::span::{Arg, SpanRecorder};
+
+/// One timeline in the exported trace: a rank's recorder plus its display
+/// name (e.g. "rank 2 (pp)" or "host").
+pub struct Track<'a> {
+    pub name: String,
+    pub tid: i64,
+    pub recorder: &'a SpanRecorder,
+}
+
+fn arg_json(a: &Arg) -> Json {
+    match a {
+        Arg::F(x) => Json::num(*x),
+        Arg::I(x) => Json::int(*x),
+        Arg::S(s) => Json::str(s.clone()),
+    }
+}
+
+fn args_obj(args: &[(&'static str, Arg)]) -> Json {
+    Json::Obj(args.iter().map(|(k, v)| (k.to_string(), arg_json(v))).collect())
+}
+
+const US: f64 = 1e6;
+
+/// Build the full trace document: `{"traceEvents": [...], "displayTimeUnit": "ms"}`.
+pub fn chrome_trace(tracks: &[Track]) -> Json {
+    let mut events: Vec<Json> = Vec::new();
+    for track in tracks {
+        events.push(Json::obj(vec![
+            ("ph", Json::str("M")),
+            ("name", Json::str("thread_name")),
+            ("pid", Json::int(0)),
+            ("tid", Json::int(track.tid)),
+            ("args", Json::obj(vec![("name", Json::str(track.name.clone()))])),
+        ]));
+        // (start_us, depth, event) — sort by start, parents first on ties.
+        let mut timed: Vec<(f64, u32, Json)> = Vec::new();
+        for sp in track.recorder.spans() {
+            let ts = sp.start_s * US;
+            timed.push((
+                ts,
+                sp.depth,
+                Json::obj(vec![
+                    ("ph", Json::str("X")),
+                    ("name", Json::str(sp.name.clone())),
+                    ("cat", Json::str(sp.cat)),
+                    ("pid", Json::int(0)),
+                    ("tid", Json::int(track.tid)),
+                    ("ts", Json::num(ts)),
+                    ("dur", Json::num((sp.end_s - sp.start_s) * US)),
+                    ("args", args_obj(&sp.args)),
+                ]),
+            ));
+        }
+        for ev in track.recorder.events() {
+            let ts = ev.t_s * US;
+            timed.push((
+                ts,
+                u32::MAX,
+                Json::obj(vec![
+                    ("ph", Json::str("i")),
+                    ("name", Json::str(ev.name.clone())),
+                    ("cat", Json::str(ev.cat)),
+                    ("pid", Json::int(0)),
+                    ("tid", Json::int(track.tid)),
+                    ("ts", Json::num(ts)),
+                    ("s", Json::str("t")),
+                    ("args", args_obj(&ev.args)),
+                ]),
+            ));
+        }
+        timed.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+        events.extend(timed.into_iter().map(|(_, _, e)| e));
+    }
+    Json::obj(vec![
+        ("traceEvents", Json::Arr(events)),
+        ("displayTimeUnit", Json::str("ms")),
+    ])
+}
+
+/// Validate a parsed trace document: the structure a Perfetto load needs,
+/// plus nondecreasing per-track timestamps. Returns a description of the
+/// first violation, if any. Used by the `phantom trace` CLI and the CI
+/// trace-smoke job.
+pub fn validate_trace(doc: &Json) -> Result<(), String> {
+    let events = doc
+        .get("traceEvents")
+        .as_arr()
+        .ok_or_else(|| "missing traceEvents array".to_string())?;
+    let mut last_ts: std::collections::BTreeMap<i64, f64> = std::collections::BTreeMap::new();
+    for (i, ev) in events.iter().enumerate() {
+        let ph = ev.get("ph").as_str().ok_or_else(|| format!("event {i}: missing ph"))?;
+        if ev.get("name").as_str().is_none() {
+            return Err(format!("event {i}: missing name"));
+        }
+        let tid = ev.get("tid").as_i64().ok_or_else(|| format!("event {i}: missing tid"))?;
+        match ph {
+            "M" => continue,
+            "X" | "i" => {
+                let ts = ev.get("ts").as_f64().ok_or_else(|| format!("event {i}: missing ts"))?;
+                if !ts.is_finite() || ts < 0.0 {
+                    return Err(format!("event {i}: bad ts {ts}"));
+                }
+                if ph == "X" {
+                    let dur =
+                        ev.get("dur").as_f64().ok_or_else(|| format!("event {i}: missing dur"))?;
+                    if !dur.is_finite() || dur < 0.0 {
+                        return Err(format!("event {i}: bad dur {dur}"));
+                    }
+                }
+                let prev = last_ts.entry(tid).or_insert(f64::NEG_INFINITY);
+                if ts < *prev {
+                    return Err(format!("event {i}: ts {ts} < previous {prev} on track {tid}"));
+                }
+                *prev = ts;
+            }
+            other => return Err(format!("event {i}: unknown ph {other:?}")),
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::span::Arg;
+
+    #[test]
+    fn exports_sorted_valid_trace() {
+        let mut r = SpanRecorder::new(1);
+        r.begin("iter", "iter 0", 0.0);
+        r.begin("exec", "fwd", 0.001);
+        r.end(0.002);
+        let args = vec![("loss", Arg::F(0.5)), ("iter", Arg::I(0)), ("mode", Arg::S("pp".into()))];
+        r.end_args(0.003, args);
+        r.event("ckpt", "write", 0.0005, vec![]);
+        // Recorder stores children before parents (close order); export must
+        // still come out start-sorted.
+        let doc = chrome_trace(&[Track { name: "rank 1".into(), tid: 1, recorder: &r }]);
+        validate_trace(&doc).unwrap();
+        let events = doc.get("traceEvents").as_arr().unwrap();
+        assert_eq!(events.len(), 4);
+        assert_eq!(events[0].get("ph").as_str(), Some("M"));
+        assert_eq!(events[1].get("name").as_str(), Some("iter 0"));
+        assert_eq!(events[1].get("ts").as_f64(), Some(0.0));
+        assert_eq!(events[1].get("dur").as_f64(), Some(3000.0));
+        assert_eq!(events[2].get("ph").as_str(), Some("i"));
+        assert_eq!(events[3].get("name").as_str(), Some("fwd"));
+        // Round-trips through the parser.
+        let parsed = Json::parse(&doc.pretty()).unwrap();
+        validate_trace(&parsed).unwrap();
+    }
+
+    #[test]
+    fn validator_rejects_non_monotone_and_malformed() {
+        let bad = Json::parse(
+            r#"{"traceEvents": [
+                {"ph": "X", "name": "a", "pid": 0, "tid": 0, "ts": 5.0, "dur": 1.0, "args": {}},
+                {"ph": "X", "name": "b", "pid": 0, "tid": 0, "ts": 2.0, "dur": 1.0, "args": {}}
+            ]}"#,
+        )
+        .unwrap();
+        assert!(validate_trace(&bad).unwrap_err().contains("track 0"));
+        let missing = Json::parse(r#"{"other": 1}"#).unwrap();
+        assert!(validate_trace(&missing).is_err());
+        let neg = Json::parse(
+            r#"{"traceEvents": [{"ph": "X", "name": "a", "tid": 0, "ts": 1.0, "dur": -2.0}]}"#,
+        )
+        .unwrap();
+        assert!(validate_trace(&neg).is_err());
+    }
+}

@@ -99,7 +99,7 @@ impl Calibration {
     /// logged-fallback contract).
     pub fn log_warnings(&self) {
         for w in &self.warnings {
-            eprintln!("calib: warning: {w}");
+            crate::log_warn!("calib: warning: {w}");
         }
     }
 

@@ -29,10 +29,11 @@ use std::collections::VecDeque;
 use anyhow::{bail, Result};
 
 use crate::config::{RunConfig, ServeConfig};
+use crate::obs::{Arg, MetricsRegistry, MetricsSnapshot, SpanRecorder};
 use crate::runtime::ExecServer;
 use crate::tensor::Tensor;
 
-use super::pool::{PoolRankReport, RankPool};
+use super::pool::{PoolOptions, PoolRankReport, RankPool};
 
 /// One served query's outcome.
 #[derive(Debug, Clone)]
@@ -92,11 +93,28 @@ pub struct Server {
     next_id: u64,
     last_arrival_s: f64,
     pub stats: ServerStats,
+    /// Rolling live metrics (queue depth, shed/admit counters, latency
+    /// p50/p99, J/query EWMA) — always on; snapshot via [`Server::metrics`].
+    metrics: MetricsRegistry,
+    /// Batcher decision timeline (admit/shed/batch/swap instants, stamped
+    /// in virtual time) when the serve run is traced; `None` otherwise.
+    events: Option<SpanRecorder>,
 }
 
 impl Server {
     pub fn start(run: &RunConfig, scfg: ServeConfig, exec: &ExecServer) -> Result<Server> {
-        let pool = RankPool::start(run, &scfg, exec)?;
+        Self::start_with(run, scfg, exec, PoolOptions::default())
+    }
+
+    /// `start` with fault-injection / timeout / tracing options.
+    pub fn start_with(
+        run: &RunConfig,
+        scfg: ServeConfig,
+        exec: &ExecServer,
+        opts: PoolOptions,
+    ) -> Result<Server> {
+        let trace = opts.trace;
+        let pool = RankPool::start_with(run, &scfg, exec, opts)?;
         Ok(Server {
             pool,
             scfg,
@@ -105,6 +123,8 @@ impl Server {
             next_id: 0,
             last_arrival_s: 0.0,
             stats: ServerStats::default(),
+            metrics: MetricsRegistry::default(),
+            events: trace.then(|| SpanRecorder::new(run.p)),
         })
     }
 
@@ -122,7 +142,26 @@ impl Server {
     /// and everything submitted later — are served by the new weights;
     /// nothing queued is dropped or reordered.
     pub fn hot_swap(&mut self, snap: &crate::ckpt::Snapshot) -> Result<()> {
-        self.pool.load_weights(snap)
+        self.pool.load_weights(snap)?;
+        self.metrics.inc("swaps");
+        if let Some(rec) = self.events.as_mut() {
+            rec.event("serve.swap", "hot swap", self.last_arrival_s, vec![]);
+        }
+        Ok(())
+    }
+
+    /// Point-in-time snapshot of the live serve metrics: counters
+    /// (admitted/shed/blocked/batches/swaps), the queue-depth gauge,
+    /// latency and batch-size histograms (`*_p50`/`*_p99`/`*_count`), and
+    /// the J/query EWMA (`j_per_query_ewma`).
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.metrics.snapshot()
+    }
+
+    /// Take the batcher's virtual-time decision timeline (traced serve
+    /// runs only; `None` otherwise or if already taken).
+    pub fn take_host_events(&mut self) -> Option<SpanRecorder> {
+        self.events.take()
     }
 
     /// Open-loop submission at virtual time `arrival_s` (must be
@@ -136,6 +175,10 @@ impl Server {
         self.advance_to(arrival_s)?;
         if self.pending.len() >= self.scfg.queue_depth {
             self.stats.rejected += 1;
+            self.metrics.inc("shed");
+            if let Some(rec) = self.events.as_mut() {
+                rec.event("serve.shed", "shed", arrival_s, vec![]);
+            }
             return Ok(Admission::Rejected);
         }
         Ok(Admission::Accepted(self.enqueue(arrival_s, x)))
@@ -162,6 +205,7 @@ impl Server {
         }
         if was_blocked {
             self.stats.blocked += 1;
+            self.metrics.inc("blocked");
         }
         self.last_arrival_s = effective_s;
         Ok((self.enqueue(effective_s, x), effective_s))
@@ -209,6 +253,11 @@ impl Server {
         self.pending.push_back(Pending { id, arrival_s, x });
         self.stats.admitted += 1;
         self.stats.max_queue_seen = self.stats.max_queue_seen.max(self.pending.len());
+        self.metrics.inc("admitted");
+        self.metrics.set_gauge("queue_depth", self.pending.len() as f64);
+        if let Some(rec) = self.events.as_mut() {
+            rec.event("serve.admit", "admit", arrival_s, vec![("id", Arg::I(id as i64))]);
+        }
         id
     }
 
@@ -267,6 +316,7 @@ impl Server {
         }
         for (i, q) in queries.into_iter().enumerate() {
             let y = Tensor::from_vec(&[n], y_full.data()[i * n..(i + 1) * n].to_vec())?;
+            self.metrics.observe("latency_s", done_s - q.arrival_s);
             self.completed.push(Response {
                 id: q.id,
                 arrival_s: q.arrival_s,
@@ -278,6 +328,19 @@ impl Server {
         }
         self.stats.batches += 1;
         self.stats.dispatched += count as u64;
+        let batch_j = self.pool.last_batch_energy_j();
+        self.metrics.inc("batches");
+        self.metrics.observe("batch_size", count as f64);
+        self.metrics.ewma("j_per_query", batch_j / count as f64, 0.2);
+        self.metrics.set_gauge("queue_depth", self.pending.len() as f64);
+        if let Some(rec) = self.events.as_mut() {
+            let args = vec![
+                ("queries", Arg::I(count as i64)),
+                ("done_s", Arg::F(done_s)),
+                ("energy_j", Arg::F(batch_j)),
+            ];
+            rec.event("serve.batch", "dispatch", dispatch_s, args);
+        }
         Ok(())
     }
 }

@@ -36,6 +36,17 @@ pub fn write_records_json(path: &std::path::Path, records: &[(String, f64)]) -> 
         .with_context(|| format!("writing {}", path.display()))
 }
 
+/// `write_records_json` with the shared BENCH provenance header stamped
+/// under the reserved `meta` key.
+pub fn write_records_json_with_meta(
+    path: &std::path::Path,
+    records: &[(String, f64)],
+    meta: &crate::util::json::BenchMeta,
+) -> Result<()> {
+    crate::util::json::write_records_json_with_meta(path, records, meta)
+        .with_context(|| format!("writing {}", path.display()))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -54,6 +54,9 @@ struct Done {
     rank: usize,
     y_shard: Tensor,
     now_s: f64,
+    /// Energy this rank spent since its previous completion (idle gap +
+    /// batch), Joules — the pool sums it per batch for J/query metrics.
+    energy_j: f64,
 }
 
 /// Final accounting for one pool rank, returned at shutdown.
@@ -62,6 +65,9 @@ pub struct PoolRankReport {
     pub rank: usize,
     pub ledger: LedgerSummary,
     pub stats: CommStats,
+    /// Span timeline + interval snapshot when the pool was traced
+    /// (`PoolOptions::trace`); `None` otherwise.
+    pub trace: Option<crate::obs::TraceCapture>,
 }
 
 /// The long-lived worker pool. Batches go in via `execute`; per-rank
@@ -75,6 +81,7 @@ pub struct RankPool {
     handles: Vec<thread::JoinHandle<PoolRankReport>>,
     next_seq: u64,
     free_s: f64,
+    last_batch_j: f64,
 }
 
 /// Optional pool wiring for chaos/conformance testing (DESIGN.md §9).
@@ -86,6 +93,9 @@ pub struct PoolOptions {
     /// Override the fabric rendezvous timeout (chaos tests shrink it so
     /// injected drops surface in milliseconds). `None` = production 60 s.
     pub rendezvous_timeout: Option<std::time::Duration>,
+    /// Arm every rank's span recorder (obs): each `PoolRankReport` then
+    /// carries a `TraceCapture`.
+    pub trace: bool,
 }
 
 impl RankPool {
@@ -144,11 +154,16 @@ impl RankPool {
             let model = run.model;
             let seed = run.train.seed;
             let mode = scfg.mode;
+            let power = run.hardware.power;
+            let trace = opts.trace;
             handles.push(
                 thread::Builder::new()
                     .name(format!("serve-rank-{rank}"))
                     .spawn(move || {
-                        rank_loop(rank, p, mode, model, seed, artifact, handle, ep, job_rx, done_tx)
+                        rank_loop(
+                            rank, p, mode, model, seed, artifact, handle, ep, job_rx, done_tx,
+                            power, trace,
+                        )
                     })
                     .context("spawning serve rank thread")?,
             );
@@ -164,6 +179,7 @@ impl RankPool {
             handles,
             next_seq: 0,
             free_s: 0.0,
+            last_batch_j: 0.0,
         })
     }
 
@@ -171,6 +187,12 @@ impl RankPool {
     /// first dispatch). The batcher never dispatches earlier than this.
     pub fn free_s(&self) -> f64 {
         self.free_s
+    }
+
+    /// Cluster energy (all ranks, idle gap + compute) spent on the last
+    /// `execute` call, Joules. 0 before the first batch.
+    pub fn last_batch_energy_j(&self) -> f64 {
+        self.last_batch_j
     }
 
     pub fn p(&self) -> usize {
@@ -243,6 +265,7 @@ impl RankPool {
         }
         let mut outs: Vec<Option<Tensor>> = (0..self.p).map(|_| None).collect();
         let mut done_s = dispatch_s;
+        let mut batch_j = 0.0;
         for _ in 0..self.p {
             let d = self
                 .done_rx
@@ -252,8 +275,10 @@ impl RankPool {
                 bail!("out-of-sequence completion: got {} want {seq}", d.seq);
             }
             done_s = done_s.max(d.now_s);
+            batch_j += d.energy_j;
             outs[d.rank] = Some(d.y_shard);
         }
+        self.last_batch_j = batch_j;
         let shards: Vec<Tensor> =
             outs.into_iter().map(|o| o.expect("every rank reported")).collect();
         let y_full = Tensor::from_col_shards(&shards)?;
@@ -290,8 +315,16 @@ fn rank_loop(
     mut ep: crate::comm::Endpoint,
     job_rx: mpsc::Receiver<RankMsg>,
     done_tx: mpsc::Sender<Result<Done>>,
+    power: crate::energy::PowerModel,
+    trace: bool,
 ) -> PoolRankReport {
+    crate::obs::log::set_rank(rank);
     let mut ledger = EnergyLedger::new();
+    if trace {
+        ledger.arm_tracing(rank);
+    }
+    // Per-batch energy deltas for the Done reports (J/query metrics).
+    let mut prev_j = 0.0;
     let worker = match mode {
         Parallelism::Phantom => PhantomRankParams::init(&model, p, rank, seed).map(Worker::Pp),
         Parallelism::Tensor => TpRankParams::init(&model, p, rank, seed).map(Worker::Tp),
@@ -309,7 +342,18 @@ fn rank_loop(
                     }
                     RankMsg::Job(job) => job,
                 };
-                ledger.sync_to(job.dispatch_s);
+                if ledger.traced() && job.dispatch_s > ledger.now_s {
+                    ledger.span_begin("pool.idle", "idle");
+                    ledger.sync_to(job.dispatch_s);
+                    ledger.span_end();
+                } else {
+                    ledger.sync_to(job.dispatch_s);
+                }
+                let rows = job.x_shard.shape()[0];
+                if ledger.traced() {
+                    let name = format!("batch {}", job.seq);
+                    ledger.span_begin("batch", &name);
+                }
                 let res = match &worker {
                     Worker::Pp(params) => pp_forward_shard(
                         &exec, &artifact, params, &mut ep, &mut ledger, job.x_shard,
@@ -318,11 +362,24 @@ fn rank_loop(
                         &exec, &artifact, params, &mut ep, &mut ledger, job.x_shard, true,
                     ),
                 };
-                // Long-lived thread: keep the ledger O(1) across batches.
+                let total_j = ledger.energy_j(&power);
+                let energy_j = total_j - prev_j;
+                prev_j = total_j;
+                let seq = job.seq;
+                ledger.span_end_with(|| {
+                    vec![
+                        ("seq", crate::obs::Arg::I(seq as i64)),
+                        ("rows", crate::obs::Arg::I(rows as i64)),
+                        ("energy_j", crate::obs::Arg::F(energy_j)),
+                    ]
+                });
+                // Long-lived thread: keep the ledger O(1) across batches
+                // (no-op while traced — attribution needs the intervals).
                 ledger.compact();
                 match res {
                     Ok(y_shard) => {
-                        let done = Done { seq: job.seq, rank, y_shard, now_s: ledger.now_s };
+                        let done =
+                            Done { seq: job.seq, rank, y_shard, now_s: ledger.now_s, energy_j };
                         if done_tx.send(Ok(done)).is_err() {
                             break; // leader gone: drain and report
                         }
@@ -342,5 +399,6 @@ fn rank_loop(
             let _ = done_tx.send(Err(e.context(format!("serve rank {rank} init"))));
         }
     }
-    PoolRankReport { rank, ledger: ledger.summary(), stats: ep.stats }
+    let trace = ledger.take_trace();
+    PoolRankReport { rank, ledger: ledger.summary(), stats: ep.stats, trace }
 }

@@ -26,10 +26,97 @@
 //! of burning a fresh thread-local arena that dies with the scope — the
 //! scratch-waste fix the seed's `gemm_acc` comment conceded.
 
+use std::cell::Cell;
 use std::sync::Mutex;
 
 use super::simd::{self, block_kernel, Isa};
 use super::tune::{self, GemmParams};
+
+// ---------------------------------------------------------------------------
+// Per-thread GEMM tally (observability)
+// ---------------------------------------------------------------------------
+
+/// Distinct shapes a [`GemmTally`] records before it only counts them.
+pub const TALLY_SHAPE_SLOTS: usize = 4;
+
+/// Numeric per-thread tally of GEMM work since the last [`tally_take`]:
+/// call/flop counts, the widest band fan-out, and up to
+/// [`TALLY_SHAPE_SLOTS`] distinct `m x k x n` shapes. The coordinator
+/// drains it around each kernel execution to annotate compute spans.
+/// Counting is purely numeric (no allocation, no formatting) so it stays
+/// on unconditionally. Bands spawned by a GEMM tally on the calling
+/// thread; out-of-process backends (PJRT) execute elsewhere and read as
+/// zero.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct GemmTally {
+    /// GEMM engine invocations.
+    pub calls: u64,
+    /// Multiply-add count summed over calls (saturating).
+    pub flops: u64,
+    /// Widest row-band fan-out any single call used.
+    pub max_bands: u64,
+    /// Distinct shapes observed (may exceed the slots stored).
+    pub shapes_seen: u64,
+    shapes: [u64; TALLY_SHAPE_SLOTS],
+}
+
+/// Pack a shape into one nonzero u64 slot key (21 bits per dim,
+/// saturating; dims here are layer widths, far below 2^21).
+fn pack_shape(m: usize, kd: usize, n: usize) -> u64 {
+    const CAP: u64 = (1 << 21) - 1;
+    let d = |v: usize| (v as u64).min(CAP);
+    (d(m) << 42) | (d(kd) << 21) | d(n)
+}
+
+impl GemmTally {
+    const fn empty() -> GemmTally {
+        GemmTally {
+            calls: 0,
+            flops: 0,
+            max_bands: 0,
+            shapes_seen: 0,
+            shapes: [0; TALLY_SHAPE_SLOTS],
+        }
+    }
+
+    fn note(&mut self, m: usize, kd: usize, n: usize, flops: usize, bands: usize) {
+        self.calls += 1;
+        self.flops = self.flops.saturating_add(flops as u64);
+        self.max_bands = self.max_bands.max(bands as u64);
+        let key = pack_shape(m, kd, n);
+        for slot in &mut self.shapes {
+            if *slot == key {
+                return;
+            }
+            if *slot == 0 {
+                *slot = key;
+                self.shapes_seen += 1;
+                return;
+            }
+        }
+        // All slots taken by other shapes: counted but not stored.
+        self.shapes_seen += 1;
+    }
+
+    /// The stored distinct shapes, formatted `MxKxN` (oldest first).
+    pub fn shape_names(&self) -> Vec<String> {
+        const CAP: u64 = (1 << 21) - 1;
+        self.shapes
+            .iter()
+            .take_while(|&&k| k != 0)
+            .map(|&k| format!("{}x{}x{}", (k >> 42) & CAP, (k >> 21) & CAP, k & CAP))
+            .collect()
+    }
+}
+
+thread_local! {
+    static TALLY: Cell<GemmTally> = const { Cell::new(GemmTally::empty()) };
+}
+
+/// Take (and reset) this thread's GEMM tally.
+pub fn tally_take() -> GemmTally {
+    TALLY.with(|t| t.replace(GemmTally::empty()))
+}
 
 // ---------------------------------------------------------------------------
 // Strided operand views
@@ -212,6 +299,11 @@ fn gemm_view(a: View<'_>, b: View<'_>, out: &mut [f32], params: GemmParams, isa:
     let flops = m.saturating_mul(kd).saturating_mul(n);
     let cap = if p.max_bands == 0 { hw_threads() } else { hw_threads().min(p.max_bands) };
     let bands = if flops >= p.par_min_flops { cap.min(m / p.mr).max(1) } else { 1 };
+    TALLY.with(|t| {
+        let mut tally = t.get();
+        tally.note(m, kd, n, flops, bands);
+        t.set(tally);
+    });
     if bands <= 1 {
         let mut ws = ws_take(1, ws_len);
         gemm_band(a, b, out, p, isa, &mut ws[0]);
@@ -344,6 +436,26 @@ mod tests {
         let again = ws_take(1, 33);
         assert_eq!(again[0].len(), 33);
         ws_put(again);
+    }
+
+    #[test]
+    fn tally_counts_calls_flops_and_shapes() {
+        let _ = tally_take(); // isolate from anything earlier on this thread
+        let a = vec![1.0f32; 4 * 3];
+        let b = vec![1.0f32; 3 * 5];
+        let mut out = vec![0.0f32; 4 * 5];
+        gemm_acc(&a, 4, 3, &b, 5, &mut out);
+        gemm_acc(&a, 4, 3, &b, 5, &mut out);
+        let mut c = vec![0.0f32; 3 * 3];
+        gemm_at_b_acc(&a, 4, 3, &b[..4 * 3], 3, &mut c);
+        let t = tally_take();
+        assert_eq!(t.calls, 3);
+        assert_eq!(t.flops, (4 * 3 * 5 + 4 * 3 * 5 + 3 * 4 * 3) as u64);
+        assert_eq!(t.shapes_seen, 2);
+        assert_eq!(t.shape_names(), vec!["4x3x5".to_string(), "3x4x3".to_string()]);
+        assert!(t.max_bands >= 1);
+        // Drained: the next take is empty.
+        assert_eq!(tally_take(), GemmTally::empty());
     }
 
     #[test]

@@ -198,7 +198,7 @@ impl Tuning {
                     Some(key) => {
                         classes.insert(key, GemmParams::from_json(entry, base));
                     }
-                    None => eprintln!(
+                    None => crate::log_warn!(
                         "tune: warning: skipping malformed class key '{name}' in manifest"
                     ),
                 }
@@ -298,7 +298,9 @@ pub fn ensure_loaded() {
         let path = default_manifest_path();
         match Tuning::load(&path) {
             Ok(Some(t)) => {
-                eprintln!(
+                // CI's tune-smoke job greps for this exact "tune: loaded"
+                // text — keep it stable.
+                crate::log_info!(
                     "tune: loaded {} shape classes from {} (tuned on {}, running {})",
                     t.classes.len(),
                     path.display(),
@@ -309,7 +311,7 @@ pub fn ensure_loaded() {
             }
             Ok(None) => {} // no manifest: defaults, silently
             Err(e) => {
-                eprintln!("tune: warning: ignoring manifest {}: {e}", path.display());
+                crate::log_warn!("tune: warning: ignoring manifest {}: {e}", path.display());
             }
         }
     });

@@ -206,6 +206,47 @@ fn write_escaped(out: &mut String, s: &str) {
     out.push('"');
 }
 
+/// Schema version stamped into the reserved `meta` key of every
+/// BENCH_*.json record file. Bump when the record format itself changes
+/// shape (not when individual record keys come and go).
+pub const BENCH_SCHEMA_VERSION: i64 = 1;
+
+/// Provenance header for BENCH_*.json record files: which scenario wrote
+/// the file, on which SIMD ISA, and how long the virtual run was. Written
+/// under the reserved `meta` key (the only nesting the flat record format
+/// allows); `read_records_json` skips it when reading records back.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BenchMeta {
+    pub scenario: String,
+    pub isa: String,
+    /// Virtual (simulated) duration of the run that produced the records,
+    /// in seconds; 0.0 for scenarios with no virtual clock.
+    pub virtual_s: f64,
+}
+
+impl BenchMeta {
+    /// Header for `scenario`, stamped with the active SIMD ISA.
+    pub fn new(scenario: &str, virtual_s: f64) -> BenchMeta {
+        BenchMeta {
+            scenario: scenario.to_string(),
+            isa: crate::tensor::simd::active().name().to_string(),
+            virtual_s,
+        }
+    }
+
+    /// The header as a JSON object — what lands under the `meta` key.
+    /// Public so nested result files (e.g. BENCH_plan.json) can embed the
+    /// same header without going through the flat record writer.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("schema", Json::int(BENCH_SCHEMA_VERSION)),
+            ("scenario", Json::str(self.scenario.as_str())),
+            ("isa", Json::str(self.isa.as_str())),
+            ("virtual_s", Json::num(self.virtual_s)),
+        ])
+    }
+}
+
 /// Write flat (key, value) records as a pretty JSON object — the
 /// machine-readable perf-trajectory format (BENCH_*.json) that benches,
 /// tests and the CLI diff across PRs.
@@ -215,6 +256,24 @@ pub fn write_records_json(
 ) -> Result<(), std::io::Error> {
     let obj = Json::obj(records.iter().map(|(k, v)| (k.as_str(), Json::num(*v))).collect());
     std::fs::write(path, obj.pretty())
+}
+
+/// `write_records_json` plus the `meta` provenance header. Record keys
+/// named "meta" would collide with the header and are rejected.
+pub fn write_records_json_with_meta(
+    path: &std::path::Path,
+    records: &[(String, f64)],
+    meta: &BenchMeta,
+) -> Result<(), std::io::Error> {
+    if records.iter().any(|(k, _)| k == "meta") {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidInput,
+            "record key 'meta' is reserved for the BenchMeta header",
+        ));
+    }
+    let mut pairs: Vec<(&str, Json)> = vec![("meta", meta.to_json())];
+    pairs.extend(records.iter().map(|(k, v)| (k.as_str(), Json::num(*v))));
+    std::fs::write(path, Json::obj(pairs).pretty())
 }
 
 /// Write an arbitrary (possibly nested) JSON value pretty-printed. Used
@@ -237,7 +296,8 @@ pub fn read_json(path: &std::path::Path) -> Result<Json, std::io::Error> {
 /// Counterpart of `write_records_json`: read a flat (key, value) record
 /// file back as ordered pairs. Rejects nesting — the perf-trajectory format
 /// is a single object of numbers, and a file that stopped being flat should
-/// fail loudly rather than be half-read.
+/// fail loudly rather than be half-read. The one exception is the reserved
+/// `meta` key (the `BenchMeta` provenance header), which is skipped.
 pub fn read_records_json(path: &std::path::Path) -> Result<Vec<(String, f64)>, std::io::Error> {
     let invalid = |msg: String| std::io::Error::new(std::io::ErrorKind::InvalidData, msg);
     let j = read_json(path)?;
@@ -246,6 +306,9 @@ pub fn read_records_json(path: &std::path::Path) -> Result<Vec<(String, f64)>, s
         .ok_or_else(|| invalid(format!("{}: records file must be an object", path.display())))?;
     let mut out = Vec::with_capacity(obj.len());
     for (k, v) in obj {
+        if k == "meta" && v.as_obj().is_some() {
+            continue;
+        }
         let x = v.as_f64().ok_or_else(|| {
             invalid(format!("{}: record '{k}' is not a number", path.display()))
         })?;
@@ -574,6 +637,35 @@ mod tests {
         let err = read_json(&path).unwrap_err();
         assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
         assert!(read_json(&dir.join("missing.json")).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn records_meta_header_roundtrips_and_is_skipped() {
+        let dir =
+            std::env::temp_dir().join(format!("phantom-json-meta-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bench.json");
+        let records = vec![("alpha".to_string(), 1.5), ("beta".to_string(), 2.0)];
+        let meta =
+            BenchMeta { scenario: "serve".to_string(), isa: "scalar".to_string(), virtual_s: 3.25 };
+        write_records_json_with_meta(&path, &records, &meta).unwrap();
+
+        // Reading records back skips the header...
+        let back = read_records_json(&path).unwrap();
+        assert_eq!(back.len(), records.len());
+        assert!(back.iter().all(|(k, _)| k != "meta"));
+
+        // ...but it is present and well-formed in the raw JSON.
+        let j = read_json(&path).unwrap();
+        assert_eq!(j.get("meta").get("schema").as_i64(), Some(BENCH_SCHEMA_VERSION));
+        assert_eq!(j.get("meta").get("scenario").as_str(), Some("serve"));
+        assert_eq!(j.get("meta").get("isa").as_str(), Some("scalar"));
+        assert_eq!(j.get("meta").get("virtual_s").as_f64(), Some(3.25));
+
+        // A record key named "meta" would collide with the header.
+        let clash = vec![("meta".to_string(), 1.0)];
+        assert!(write_records_json_with_meta(&path, &clash, &meta).is_err());
         std::fs::remove_dir_all(&dir).ok();
     }
 

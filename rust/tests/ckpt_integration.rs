@@ -19,7 +19,7 @@ use phantom::coordinator::{train_with, TrainOptions};
 use phantom::runtime::ExecServer;
 use phantom::serve::Server;
 use phantom::tensor::Tensor;
-use phantom::util::json::{read_records_json, write_records_json};
+use phantom::util::json::{read_records_json, write_records_json_with_meta, BenchMeta};
 use phantom::util::prng::Prng;
 use phantom::util::proptest::assert_close;
 
@@ -334,7 +334,7 @@ fn ckpt_perf_trajectory_records() {
         ("load_mb_per_s".to_string(), mb / load_s.max(1e-9)),
     ];
     let path = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../BENCH_ckpt.json");
-    write_records_json(&path, &records).unwrap();
+    write_records_json_with_meta(&path, &records, &BenchMeta::new("ckpt", 0.0)).unwrap();
 
     let back = read_records_json(&path).unwrap();
     for key in ["snapshot_mb", "save_s", "load_s", "reshard_p4_to_p2_s"] {

@@ -47,7 +47,8 @@ fn differential_sweep_passes_25_randomized_configs() {
     let records = report.records();
     let path = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
         .join("../BENCH_conformance.json");
-    phantom::serve::write_records_json(&path, &records).unwrap();
+    let meta = phantom::util::json::BenchMeta::new("conformance", 0.0);
+    phantom::serve::write_records_json_with_meta(&path, &records, &meta).unwrap();
     let back = read_records_json(&path).unwrap();
     assert_eq!(back.len(), records.len());
 }

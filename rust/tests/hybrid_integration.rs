@@ -290,5 +290,7 @@ fn bench_hybrid_records() {
         ));
     }
     let path = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../BENCH_hybrid.json");
-    phantom::serve::write_records_json(&path, &records).expect("write BENCH_hybrid.json");
+    let meta = phantom::util::json::BenchMeta::new("hybrid", 0.0);
+    phantom::serve::write_records_json_with_meta(&path, &records, &meta)
+        .expect("write BENCH_hybrid.json");
 }

@@ -25,7 +25,7 @@ use phantom::tensor::seed::gemm_acc_seed;
 use phantom::tensor::simd::{self, Isa};
 use phantom::tensor::tune::{self, TRACKED_SHAPES};
 use phantom::tensor::{gemm_acc, Tensor};
-use phantom::util::json::{read_json, write_records_json};
+use phantom::util::json::{read_json, write_records_json_with_meta};
 use phantom::util::prng::Prng;
 use phantom::util::proptest::assert_close;
 
@@ -116,7 +116,9 @@ fn tracked_shapes_meet_committed_baseline() {
     // Record the trajectory before asserting, so a gate failure still
     // uploads the numbers that explain it.
     let bench_path = repo_root().join("BENCH_kernels.json");
-    write_records_json(&bench_path, &records).expect("write BENCH_kernels.json");
+    let meta = phantom::util::json::BenchMeta::new("kernels", 0.0);
+    write_records_json_with_meta(&bench_path, &records, &meta)
+        .expect("write BENCH_kernels.json");
 
     // -- the committed gate ------------------------------------------------
     let baseline_path = repo_root().join("ci/kernel_baseline.json");

@@ -1,0 +1,135 @@
+//! Obs-subsystem integration (DESIGN.md §13): traced runs must attribute
+//! every Joule — per-category energy plus the untraced bucket equals the
+//! exact ledger energy to 1e-9 relative error on the quickstart TP and PP
+//! configs — the exported timeline must be valid Chrome trace-event JSON,
+//! and a traced server must feed its live metrics registry.
+
+use phantom::config::{preset, Parallelism, ServeConfig};
+use phantom::coordinator::{train_with, TrainOptions};
+use phantom::obs::trace::{chrome_trace, validate_trace, Track};
+use phantom::runtime::ExecServer;
+use phantom::serve::{PoolOptions, Server};
+use phantom::tensor::Tensor;
+use phantom::util::json::Json;
+use phantom::util::prng::Prng;
+
+#[test]
+fn traced_train_attributes_every_joule_tp_and_pp() {
+    for mode in [Parallelism::Tensor, Parallelism::Phantom] {
+        let mut cfg = preset("quickstart", mode).unwrap();
+        cfg.train.max_iters = 4;
+        cfg.train.target_loss = None;
+        let server = ExecServer::for_run(&cfg).unwrap();
+        let opts = TrainOptions { trace: true, ..Default::default() };
+        let report = train_with(&cfg, &server, opts).unwrap();
+        let power = cfg.hardware.power;
+
+        assert_eq!(report.per_rank.len(), cfg.world());
+        assert!(report.host_trace.is_some(), "traced run carries a host timeline");
+        for rr in &report.per_rank {
+            let cap = rr.trace.as_ref().expect("traced run captures every rank");
+            assert_eq!(cap.rank(), rr.rank);
+            assert_eq!(cap.recorder.dropped(), 0, "no spans dropped on a tiny run");
+            assert_eq!(cap.recorder.open_depth(), 0, "all spans closed");
+            assert!(!cap.recorder.spans().is_empty());
+
+            let attr = cap.attribution(&power);
+            let exact = rr.ledger.energy_j(&power);
+            assert!(
+                attr.reconciles(exact, 1e-9),
+                "{} rank {}: attribution {} J vs ledger {} J",
+                mode.name(),
+                rr.rank,
+                attr.total_j(),
+                exact
+            );
+            // Compute time is covered by exec spans, charged at busy draw.
+            let exec = attr.by_category.get("exec").expect("exec spans present");
+            assert!(exec.busy_s > 0.0 && exec.energy_j > 0.0);
+        }
+    }
+}
+
+#[test]
+fn exported_trace_is_valid_and_survives_a_round_trip() {
+    let mut cfg = preset("quickstart", Parallelism::Phantom).unwrap();
+    cfg.train.max_iters = 3;
+    cfg.train.target_loss = None;
+    let server = ExecServer::for_run(&cfg).unwrap();
+    let opts = TrainOptions { trace: true, ..Default::default() };
+    let report = train_with(&cfg, &server, opts).unwrap();
+
+    let tracks: Vec<Track> = report
+        .per_rank
+        .iter()
+        .map(|rr| Track {
+            name: format!("rank {}", rr.rank),
+            tid: rr.rank as i64,
+            recorder: &rr.trace.as_ref().unwrap().recorder,
+        })
+        .collect();
+    let doc = chrome_trace(&tracks);
+    validate_trace(&doc).expect("valid trace-event JSON");
+    // Survives serialize -> parse (what Perfetto actually ingests).
+    let back = Json::parse(&doc.pretty()).expect("trace re-parses");
+    validate_trace(&back).expect("still valid after a round trip");
+}
+
+#[test]
+fn traced_serve_reconciles_and_feeds_live_metrics() {
+    let cfg = preset("quickstart", Parallelism::Phantom).unwrap();
+    let exec = ExecServer::for_run(&cfg).unwrap();
+    let power = cfg.hardware.power;
+    let scfg = ServeConfig {
+        queue_depth: 16,
+        max_batch: 8,
+        linger_s: 1e-3,
+        mode: Parallelism::Phantom,
+    };
+    let opts = PoolOptions { trace: true, ..Default::default() };
+    let mut server = Server::start_with(&cfg, scfg, &exec, opts).unwrap();
+
+    let n = cfg.model.n;
+    let queries = 24usize;
+    let mut rng = Prng::new(0x0B5);
+    let mut t = 0.0f64;
+    for _ in 0..queries {
+        t += 5e-4;
+        let x = Tensor::randn(&[n], 1.0, &mut rng);
+        let (_, effective_s) = server.submit_blocking(t, x).unwrap();
+        t = t.max(effective_s);
+    }
+    server.drain().unwrap();
+
+    let snap = server.metrics();
+    assert_eq!(snap.get("admitted"), Some(queries as f64));
+    assert!(snap.get("batches").unwrap_or(0.0) >= 1.0);
+    assert!(snap.get("latency_s_p50").unwrap_or(0.0) > 0.0);
+    assert!(snap.get("j_per_query_ewma").unwrap_or(0.0) > 0.0);
+
+    let events = server.take_host_events().expect("traced server records a timeline");
+    assert!(
+        events.events().iter().any(|e| e.cat == "serve.admit"),
+        "admissions show up as instants"
+    );
+    assert!(
+        events.events().iter().any(|e| e.cat == "serve.batch"),
+        "dispatches show up as instants"
+    );
+
+    let (responses, stats, per_rank) = server.finish().unwrap();
+    assert_eq!(responses.len(), queries);
+    assert!(stats.batches >= 1);
+    for pr in &per_rank {
+        let cap = pr.trace.as_ref().expect("traced pool captures every rank");
+        let attr = cap.attribution(&power);
+        let exact = pr.ledger.energy_j(&power);
+        assert!(
+            attr.reconciles(exact, 1e-9),
+            "rank {}: attribution {} J vs ledger {} J",
+            pr.rank,
+            attr.total_j(),
+            exact
+        );
+    }
+}

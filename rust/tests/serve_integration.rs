@@ -139,7 +139,13 @@ fn small_preset_load_run_pp_beats_tp_energy_and_records_trajectory() {
     );
 
     let path = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../BENCH_serve.json");
-    phantom::serve::write_records_json(&path, &records).unwrap();
+    let virtual_s = reports
+        .iter()
+        .flat_map(|r| r.per_rank.iter())
+        .map(|pr| pr.ledger.end_s)
+        .fold(0.0, f64::max);
+    let meta = phantom::util::json::BenchMeta::new("serve", virtual_s);
+    phantom::serve::write_records_json_with_meta(&path, &records, &meta).unwrap();
     eprintln!(
         "serve trajectory: pp {pp:.1} J/kq vs tp {tp:.1} J/kq -> {}",
         path.display()
