@@ -129,6 +129,24 @@ COMMANDS:
                                           blocking the arrival stream
                    --seed <n>             arrival/payload seed
                    --out <file.json>      perf-trajectory records  [BENCH_serve.json]
+    fleet        DP replica fleet: energy-routed serving under bursty load
+                   --preset <name>        artifact preset          [quickstart]
+                   --mode <tp|pp>         pipeline to serve        [pp]
+                   --backend <native|xla> compute backend          [native]
+                   --replicas <list>      max replica counts to run [2,3]
+                   --policy <list|all>    rr | least | energy      [all]
+                   --queries <N>          arrival-trace length     [480]
+                   --base-qps <x>         burst-model base rate    [2000]
+                   --max-batch <B>        micro-batcher cap        [preset batch]
+                   --linger-ms <x>        batcher linger deadline  [2.0]
+                   --queue-depth <D>      per-replica queue bound  [max-batch]
+                   --seed <n>             trace/payload seed
+                   --out <file.json>      fleet records [BENCH_fleet.json]
+                                          (per replica-count x policy rows:
+                                          p50/p99 latency, shed rate, mean
+                                          active replicas, J/1k-queries;
+                                          verdicts fleet_misordered and
+                                          energy_beats_rr)
     ckpt         Inspect, re-shard and verify checkpoint snapshots
                    inspect --dir <D>      manifest + shard summary
                    reshard --dir <D> --out <D2> [--p <P>] [--mode <tp|pp>]

@@ -289,6 +289,29 @@ impl Fabric {
             .collect()
     }
 
+    /// Replica fabrics for a serving fleet: `replicas` independent
+    /// model-parallel groups of size `p`, one `Vec<Endpoint>` per replica
+    /// in replica order (group-local rank order within each). Built on
+    /// `new_grouped`, so each endpoint's `world_rank` is its global
+    /// identity (`replica * p + rank`) for fault schedules and thread
+    /// names. The cross-replica data-parallel endpoints are dropped:
+    /// serving replicas are fully independent and never issue a DP
+    /// collective, and an endpoint that never rendezvouses blocks nobody.
+    pub fn replica_groups(
+        p: usize,
+        replicas: usize,
+        profile: NetworkProfile,
+        timeout: Duration,
+    ) -> Vec<Vec<Endpoint>> {
+        let layout = GroupLayout { p_model: p, dp: replicas };
+        let mut groups: Vec<Vec<Endpoint>> =
+            (0..replicas).map(|_| Vec::with_capacity(p)).collect();
+        for he in Self::new_grouped(layout, profile, timeout) {
+            groups[layout.dp_rank(he.world)].push(he.model);
+        }
+        groups
+    }
+
     /// Run a closure on p fabric ranks, one OS thread each, and return the
     /// per-rank results in rank order. A panicking rank is propagated as a
     /// structured `RankPanic` (rank id + panic payload + the offending

@@ -38,6 +38,7 @@ fn run(argv: Vec<String>) -> Result<()> {
     match cmd {
         "train" => cmd_train(&args),
         "serve" => cmd_serve(&args),
+        "fleet" => cmd_fleet(&args),
         "ckpt" => cmd_ckpt(&args),
         "chaos" => cmd_chaos(&args),
         "experiment" => cmd_experiment(&args),
@@ -298,6 +299,144 @@ fn cmd_serve(args: &Args) -> Result<()> {
         .map(|pr| pr.ledger.end_s)
         .fold(0.0, f64::max);
     let meta = phantom::util::json::BenchMeta::new("serve", virtual_s);
+    phantom::serve::write_records_json_with_meta(std::path::Path::new(out), &records, &meta)?;
+    phantom::log_info!("wrote {out}");
+    Ok(())
+}
+
+fn cmd_fleet(args: &Args) -> Result<()> {
+    use phantom::serve::{AutoscaleConfig, BurstModel, FleetConfig, RoutePolicy};
+
+    args.check_known(&[
+        "preset",
+        "mode",
+        "backend",
+        "replicas",
+        "policy",
+        "queries",
+        "base-qps",
+        "max-batch",
+        "linger-ms",
+        "queue-depth",
+        "seed",
+        "out",
+    ])?;
+    let preset_name = args.opt("preset").unwrap_or("quickstart");
+    let mode = Parallelism::parse(args.opt("mode").unwrap_or("pp"))?;
+    let mut cfg = preset(preset_name, mode)?;
+    cfg.backend = BackendKind::parse(args.opt("backend").unwrap_or("native"))?;
+    let exec = ExecServer::for_run(&cfg)?;
+
+    let max_batch = args.opt_parse::<usize>("max-batch")?.unwrap_or(cfg.train.batch);
+    let scfg = ServeConfig {
+        // Per-replica bound defaults to one batch: shedding and occupancy
+        // pressure show up at realistic replica counts.
+        queue_depth: args.opt_parse::<usize>("queue-depth")?.unwrap_or(max_batch),
+        max_batch,
+        linger_s: args.opt_parse::<f64>("linger-ms")?.unwrap_or(2.0) * 1e-3,
+        mode,
+    };
+    let replica_counts: Vec<usize> = args
+        .opt("replicas")
+        .unwrap_or("2,3")
+        .split(',')
+        .map(|s| s.trim().parse::<usize>().map_err(|e| anyhow::anyhow!("--replicas {s}: {e}")))
+        .collect::<Result<_>>()?;
+    let policies: Vec<RoutePolicy> = match args.opt("policy").unwrap_or("all") {
+        "all" => RoutePolicy::all().to_vec(),
+        list => list.split(',').map(|s| RoutePolicy::parse(s.trim())).collect::<Result<_>>()?,
+    };
+    let queries = args.opt_parse::<usize>("queries")?.unwrap_or(480);
+    let seed = args.opt_parse::<u64>("seed")?.unwrap_or(0xF1EE7);
+    let burst = BurstModel {
+        base_qps: args.opt_parse::<f64>("base-qps")?.unwrap_or(BurstModel::default().base_qps),
+        ..BurstModel::default()
+    };
+    burst.validate()?;
+    // One trace per run: every replica count and policy serves the same
+    // arrivals and payloads, so rows are directly comparable.
+    let arrivals = burst.trace(seed, queries);
+
+    let mut table = Table::new(
+        &format!("Replica fleet — preset {preset_name} ({}), bursty load", mode.name()),
+        &[
+            "replicas",
+            "policy",
+            "completed",
+            "shed rate",
+            "p50 latency",
+            "p99 latency",
+            "mean active",
+            "energy / 1k queries",
+            "scale up/down",
+        ],
+    );
+    let mut records: Vec<(String, f64)> = Vec::new();
+    let mut total_misordered = 0usize;
+    let mut energy_ok = true;
+    let mut compared = false;
+    let mut virtual_s = 0.0f64;
+    for &rmax in &replica_counts {
+        let autoscale = AutoscaleConfig { max_replicas: rmax, ..AutoscaleConfig::default() };
+        let mut rr_jkq: Option<f64> = None;
+        for &policy in &policies {
+            let fcfg = FleetConfig { policy, autoscale };
+            phantom::log_info!(
+                "fleet {preset_name}/{}: {} queries, {} replicas max, policy {}...",
+                mode.name(),
+                queries,
+                rmax,
+                policy.name()
+            );
+            let r = phantom::serve::run_fleet(&cfg, &scfg, &fcfg, &arrivals, seed, &exec)?;
+            total_misordered += r.misordered;
+            virtual_s = virtual_s.max(r.virtual_s);
+            match policy {
+                RoutePolicy::RoundRobin => rr_jkq = Some(r.energy_per_kq_j),
+                RoutePolicy::EnergyAware => {
+                    if let Some(rr) = rr_jkq {
+                        compared = true;
+                        let beats = r.energy_per_kq_j <= rr;
+                        energy_ok &= beats;
+                        records.push((
+                            format!("r{rmax}_energy_beats_rr"),
+                            if beats { 1.0 } else { 0.0 },
+                        ));
+                    }
+                }
+                RoutePolicy::LeastQueue => {}
+            }
+            table.row(vec![
+                rmax.to_string(),
+                policy.name().to_string(),
+                format!("{}/{}", r.completed, r.queries),
+                format!("{:.1}%", 100.0 * r.shed as f64 / r.queries as f64),
+                fmt_secs(r.latency.p50),
+                fmt_secs(r.latency.p99),
+                format!("{:.2}", r.mean_active),
+                fmt_joules(r.energy_per_kq_j),
+                format!("{}/{}", r.scale_ups, r.scale_downs),
+            ]);
+            records.extend(phantom::serve::fleet_records(&r));
+        }
+    }
+    print!("{}", table.markdown());
+
+    if total_misordered > 0 {
+        bail!("{total_misordered} fleet responses arrived out of order (serve bug)");
+    }
+    records.push(("fleet_misordered".to_string(), total_misordered as f64));
+    if compared {
+        // The CI smoke greps this verdict: the energy-aware router must
+        // serve at or below round-robin's J/query on the same trace.
+        records.push(("energy_beats_rr".to_string(), if energy_ok { 1.0 } else { 0.0 }));
+        println!(
+            "\nenergy-aware router {} round-robin on J/query across replica counts.",
+            if energy_ok { "beats or matches" } else { "LOSES to" }
+        );
+    }
+    let out = args.opt("out").unwrap_or("BENCH_fleet.json");
+    let meta = phantom::util::json::BenchMeta::new("fleet", virtual_s);
     phantom::serve::write_records_json_with_meta(std::path::Path::new(out), &records, &meta)?;
     phantom::log_info!("wrote {out}");
     Ok(())

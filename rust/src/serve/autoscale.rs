@@ -1,0 +1,207 @@
+//! Occupancy-driven replica autoscaling with hysteresis (DESIGN.md §14).
+//!
+//! The fleet samples mean active-replica occupancy (queued / queue_depth)
+//! at every arrival and feeds it here. Two guards stop flapping under the
+//! bursty load model: a scale decision needs `patience` *consecutive*
+//! samples beyond the watermark, and after acting the scaler holds still
+//! for `cooldown_s` of virtual time. Everything is pure state over the
+//! fed samples, so autoscaling replays deterministically with the trace.
+
+use anyhow::{bail, Result};
+
+/// Autoscaler policy knobs.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AutoscaleConfig {
+    /// Never drain below this many active replicas (also the fleet's
+    /// starting active count).
+    pub min_replicas: usize,
+    /// Never activate more than this many (the fleet pre-spawns exactly
+    /// this many pools; standby replicas cost no energy).
+    pub max_replicas: usize,
+    /// Mean occupancy at/above which the fleet wants another replica.
+    pub high_water: f64,
+    /// Mean occupancy at/below which a replica should drain.
+    pub low_water: f64,
+    /// Consecutive beyond-watermark samples required before acting.
+    pub patience: u32,
+    /// Virtual seconds to hold still after a scale action.
+    pub cooldown_s: f64,
+}
+
+impl Default for AutoscaleConfig {
+    fn default() -> Self {
+        AutoscaleConfig {
+            min_replicas: 1,
+            max_replicas: 2,
+            high_water: 0.75,
+            low_water: 0.15,
+            patience: 8,
+            cooldown_s: 0.05,
+        }
+    }
+}
+
+impl AutoscaleConfig {
+    pub fn validate(&self) -> Result<()> {
+        if self.min_replicas < 1 || self.max_replicas < self.min_replicas {
+            bail!(
+                "autoscale needs 1 <= min_replicas <= max_replicas, got {}..{}",
+                self.min_replicas,
+                self.max_replicas
+            );
+        }
+        if !(0.0..=1.0).contains(&self.low_water)
+            || !(0.0..=1.0).contains(&self.high_water)
+            || self.low_water >= self.high_water
+        {
+            bail!(
+                "watermarks need 0 <= low < high <= 1, got {}..{}",
+                self.low_water,
+                self.high_water
+            );
+        }
+        if self.patience == 0 || self.cooldown_s < 0.0 {
+            bail!("patience must be >= 1 and cooldown nonnegative");
+        }
+        Ok(())
+    }
+}
+
+/// A scale decision for the fleet to apply.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScaleAction {
+    /// Activate one standby replica (snapshot spin-up).
+    Up,
+    /// Start draining one active replica.
+    Down,
+}
+
+/// Hysteresis state machine over occupancy samples.
+#[derive(Debug, Clone)]
+pub struct Autoscaler {
+    cfg: AutoscaleConfig,
+    above: u32,
+    below: u32,
+    cooldown_until: f64,
+    ups: usize,
+    downs: usize,
+}
+
+impl Autoscaler {
+    pub fn new(cfg: AutoscaleConfig) -> Autoscaler {
+        Autoscaler { cfg, above: 0, below: 0, cooldown_until: 0.0, ups: 0, downs: 0 }
+    }
+
+    pub fn config(&self) -> &AutoscaleConfig {
+        &self.cfg
+    }
+
+    /// Scale-up / scale-down actions taken so far.
+    pub fn actions(&self) -> (usize, usize) {
+        (self.ups, self.downs)
+    }
+
+    /// Feed one occupancy sample at virtual time `now_s` with `active`
+    /// replicas currently active (Draining replicas excluded). Returns the
+    /// action the fleet must apply, if any.
+    pub fn observe(&mut self, now_s: f64, occupancy: f64, active: usize) -> Option<ScaleAction> {
+        if occupancy >= self.cfg.high_water {
+            self.above += 1;
+            self.below = 0;
+        } else if occupancy <= self.cfg.low_water {
+            self.below += 1;
+            self.above = 0;
+        } else {
+            self.above = 0;
+            self.below = 0;
+        }
+        if now_s < self.cooldown_until {
+            return None;
+        }
+        if self.above >= self.cfg.patience && active < self.cfg.max_replicas {
+            self.above = 0;
+            self.below = 0;
+            self.cooldown_until = now_s + self.cfg.cooldown_s;
+            self.ups += 1;
+            return Some(ScaleAction::Up);
+        }
+        if self.below >= self.cfg.patience && active > self.cfg.min_replicas {
+            self.above = 0;
+            self.below = 0;
+            self.cooldown_until = now_s + self.cfg.cooldown_s;
+            self.downs += 1;
+            return Some(ScaleAction::Down);
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> AutoscaleConfig {
+        AutoscaleConfig {
+            min_replicas: 1,
+            max_replicas: 3,
+            high_water: 0.8,
+            low_water: 0.2,
+            patience: 3,
+            cooldown_s: 1.0,
+        }
+    }
+
+    #[test]
+    fn patience_gates_scale_up_and_cooldown_holds() {
+        let mut a = Autoscaler::new(cfg());
+        assert_eq!(a.observe(0.0, 1.0, 1), None);
+        assert_eq!(a.observe(0.1, 1.0, 1), None);
+        // Third consecutive high sample: act.
+        assert_eq!(a.observe(0.2, 1.0, 1), Some(ScaleAction::Up));
+        // Saturated again immediately — cooldown holds until t = 1.2.
+        assert_eq!(a.observe(0.3, 1.0, 2), None);
+        assert_eq!(a.observe(0.4, 1.0, 2), None);
+        assert_eq!(a.observe(1.3, 1.0, 2), Some(ScaleAction::Up));
+        // At max: no further up.
+        for i in 0..5 {
+            assert_eq!(a.observe(3.0 + i as f64, 1.0, 3), None);
+        }
+        assert_eq!(a.actions(), (2, 0));
+    }
+
+    #[test]
+    fn mid_band_samples_reset_streaks() {
+        let mut a = Autoscaler::new(cfg());
+        assert_eq!(a.observe(0.0, 1.0, 1), None);
+        assert_eq!(a.observe(0.1, 1.0, 1), None);
+        assert_eq!(a.observe(0.2, 0.5, 1), None); // streak broken
+        assert_eq!(a.observe(0.3, 1.0, 1), None);
+        assert_eq!(a.observe(0.4, 1.0, 1), None);
+        assert_eq!(a.observe(0.5, 1.0, 1), Some(ScaleAction::Up));
+    }
+
+    #[test]
+    fn scale_down_respects_min() {
+        let mut a = Autoscaler::new(cfg());
+        for i in 0..3 {
+            let want = if i == 2 { Some(ScaleAction::Down) } else { None };
+            assert_eq!(a.observe(2.0 + i as f64, 0.0, 2), want);
+        }
+        // Already at min: low occupancy never drains the last replica.
+        for i in 0..5 {
+            assert_eq!(a.observe(10.0 + i as f64, 0.0, 1), None);
+        }
+        assert_eq!(a.actions(), (0, 1));
+    }
+
+    #[test]
+    fn config_validation_rejects_inverted_watermarks() {
+        let mut c = cfg();
+        assert!(c.validate().is_ok());
+        c.low_water = 0.9;
+        assert!(c.validate().is_err());
+        c.low_water = 0.2;
+        c.max_replicas = 0;
+        assert!(c.validate().is_err());
+    }
+}

@@ -39,6 +39,9 @@ use super::pool::{PoolOptions, PoolRankReport, RankPool};
 #[derive(Debug, Clone)]
 pub struct Response {
     pub id: u64,
+    /// The client's original (pre-backpressure) arrival intent. Equals
+    /// `arrival_s` unless the submission blocked for a queue slot.
+    pub intent_s: f64,
     /// Effective admission time (after any backpressure blocking).
     pub arrival_s: f64,
     /// When its batch left the queue.
@@ -52,8 +55,19 @@ pub struct Response {
 }
 
 impl Response {
+    /// End-to-end latency as the client experienced it: completion minus
+    /// the original intent time, blocking delay included. This is the
+    /// number both `Server::metrics()` and `LoadReport` quote — under
+    /// backpressure the old admission-based accounting under-reported and
+    /// the two surfaces disagreed.
     pub fn latency_s(&self) -> f64 {
-        self.done_s - self.arrival_s
+        self.done_s - self.intent_s
+    }
+
+    /// Time spent queued after admission, before the batch dispatched —
+    /// the server-side component of `latency_s`, kept as its own metric.
+    pub fn queue_wait_s(&self) -> f64 {
+        self.dispatch_s - self.arrival_s
     }
 }
 
@@ -80,6 +94,9 @@ pub struct ServerStats {
 
 struct Pending {
     id: u64,
+    /// Original client intent time (latency accounting).
+    intent_s: f64,
+    /// Effective admission time (batch-composition rules).
     arrival_s: f64,
     x: Tensor, // [n]
 }
@@ -92,6 +109,10 @@ pub struct Server {
     completed: Vec<Response>,
     next_id: u64,
     last_arrival_s: f64,
+    /// Latest client intent observed (blocking submissions): intents must
+    /// themselves be nondecreasing even when backpressure pushes the
+    /// effective admissions past them.
+    last_intent_s: f64,
     pub stats: ServerStats,
     /// Rolling live metrics (queue depth, shed/admit counters, latency
     /// p50/p99, J/query EWMA) — always on; snapshot via [`Server::metrics`].
@@ -115,17 +136,37 @@ impl Server {
     ) -> Result<Server> {
         let trace = opts.trace;
         let pool = RankPool::start_with(run, &scfg, exec, opts)?;
-        Ok(Server {
+        Ok(Self::from_pool(run, scfg, pool, trace))
+    }
+
+    /// Start a server whose pool runs on caller-provided fabric endpoints
+    /// (the fleet gives each replica its own communicator group from
+    /// `Fabric::replica_groups`).
+    pub fn start_on(
+        run: &RunConfig,
+        scfg: ServeConfig,
+        exec: &ExecServer,
+        opts: PoolOptions,
+        endpoints: Vec<crate::comm::Endpoint>,
+    ) -> Result<Server> {
+        let trace = opts.trace;
+        let pool = RankPool::start_on(run, &scfg, exec, opts, endpoints)?;
+        Ok(Self::from_pool(run, scfg, pool, trace))
+    }
+
+    fn from_pool(run: &RunConfig, scfg: ServeConfig, pool: RankPool, trace: bool) -> Server {
+        Server {
             pool,
             scfg,
             pending: VecDeque::new(),
             completed: Vec::new(),
             next_id: 0,
             last_arrival_s: 0.0,
+            last_intent_s: 0.0,
             stats: ServerStats::default(),
             metrics: MetricsRegistry::default(),
             events: trace.then(|| SpanRecorder::new(run.p)),
-        })
+        }
     }
 
     pub fn n(&self) -> usize {
@@ -172,6 +213,7 @@ impl Server {
         // Every observed arrival advances the frontier, rejected or not —
         // a later submission must never precede a rejection it witnessed.
         self.last_arrival_s = arrival_s;
+        self.last_intent_s = self.last_intent_s.max(arrival_s);
         self.advance_to(arrival_s)?;
         if self.pending.len() >= self.scfg.queue_depth {
             self.stats.rejected += 1;
@@ -181,17 +223,33 @@ impl Server {
             }
             return Ok(Admission::Rejected);
         }
-        Ok(Admission::Accepted(self.enqueue(arrival_s, x)))
+        Ok(Admission::Accepted(self.enqueue(arrival_s, arrival_s, x)))
     }
 
-    /// Closed-loop submission: when the queue is full, the client blocks
-    /// until a dispatch frees a slot and is admitted at that instant.
-    /// Returns (query id, effective arrival time). Subsequent submissions
-    /// must not precede the returned effective arrival.
-    pub fn submit_blocking(&mut self, arrival_s: f64, x: Tensor) -> Result<(u64, f64)> {
-        self.check_arrival(arrival_s, &x)?;
-        self.advance_to(arrival_s)?;
-        let mut effective_s = arrival_s;
+    /// Closed-loop submission at the client's intent time: when the stream
+    /// is stalled (an earlier submission blocked past `intent_s`) or the
+    /// queue is full, the client blocks until a dispatch frees a slot and
+    /// is admitted at that instant. The query's latency clock starts at
+    /// `intent_s` regardless — both the live histogram and the Response
+    /// report client-intent latency. Intents must be nondecreasing across
+    /// calls (they may lag the effective-admission frontier). Returns
+    /// (query id, effective arrival time).
+    pub fn submit_blocking(&mut self, intent_s: f64, x: Tensor) -> Result<(u64, f64)> {
+        if !intent_s.is_finite() || intent_s < self.last_intent_s {
+            bail!(
+                "intents must be finite and nondecreasing: got {intent_s} after {}",
+                self.last_intent_s
+            );
+        }
+        if x.shape() != &[self.pool.n()] {
+            bail!("query must be a [n]={} row, got {:?}", self.pool.n(), x.shape());
+        }
+        self.last_intent_s = intent_s;
+        // A single closed-loop stream cannot deliver before its previous
+        // admission: the wire arrival starts at the later of the intent
+        // and the current frontier.
+        let mut effective_s = intent_s.max(self.last_arrival_s);
+        self.advance_to(effective_s)?;
         let mut was_blocked = false;
         while self.pending.len() >= self.scfg.queue_depth {
             // The blocked client is the next event in the stream, so no
@@ -208,7 +266,23 @@ impl Server {
             self.metrics.inc("blocked");
         }
         self.last_arrival_s = effective_s;
-        Ok((self.enqueue(effective_s, x), effective_s))
+        Ok((self.enqueue(intent_s, effective_s, x), effective_s))
+    }
+
+    /// Advance the server's virtual clock to `now_s` without submitting:
+    /// dispatch every batch whose timing is certain by that instant. The
+    /// fleet front-end calls this on every global arrival so all replicas'
+    /// clocks move coherently — a replica receiving no traffic still
+    /// flushes its lingering batches while its peers are being fed.
+    pub fn advance_clock(&mut self, now_s: f64) -> Result<()> {
+        if !now_s.is_finite() || now_s < self.last_arrival_s {
+            bail!(
+                "clock must advance monotonically: got {now_s} after {}",
+                self.last_arrival_s
+            );
+        }
+        self.last_arrival_s = now_s;
+        self.advance_to(now_s)
     }
 
     /// Dispatch everything still queued (the arrival stream has ended).
@@ -246,11 +320,11 @@ impl Server {
         Ok(())
     }
 
-    fn enqueue(&mut self, arrival_s: f64, x: Tensor) -> u64 {
+    fn enqueue(&mut self, intent_s: f64, arrival_s: f64, x: Tensor) -> u64 {
         let id = self.next_id;
         self.next_id += 1;
         self.last_arrival_s = self.last_arrival_s.max(arrival_s);
-        self.pending.push_back(Pending { id, arrival_s, x });
+        self.pending.push_back(Pending { id, intent_s, arrival_s, x });
         self.stats.admitted += 1;
         self.stats.max_queue_seen = self.stats.max_queue_seen.max(self.pending.len());
         self.metrics.inc("admitted");
@@ -316,9 +390,16 @@ impl Server {
         }
         for (i, q) in queries.into_iter().enumerate() {
             let y = Tensor::from_vec(&[n], y_full.data()[i * n..(i + 1) * n].to_vec())?;
-            self.metrics.observe("latency_s", done_s - q.arrival_s);
+            // Client-intent latency: blocking delay included. The old
+            // `done_s - q.arrival_s` measured from the post-backpressure
+            // admission instant, silently under-reporting p50/p99 whenever
+            // submissions blocked. Queue wait (admission -> dispatch) stays
+            // observable as its own histogram.
+            self.metrics.observe("latency_s", done_s - q.intent_s);
+            self.metrics.observe("queue_wait_s", dispatch_s - q.arrival_s);
             self.completed.push(Response {
                 id: q.id,
+                intent_s: q.intent_s,
                 arrival_s: q.arrival_s,
                 dispatch_s,
                 done_s,

@@ -1,0 +1,332 @@
+//! Energy-routed replica fleet: N independent `RankPool` replicas behind
+//! a router and an occupancy autoscaler (DESIGN.md §14, ROADMAP item 3).
+//!
+//! Each replica is a full serving stack (admission queue + batcher + rank
+//! pool) on its own communicator group from `Fabric::replica_groups` —
+//! replicas never exchange traffic, so the fleet scales the paper's
+//! model-parallel serving story to DP width without new collectives. The
+//! front-end is event-driven in virtual time: every global arrival first
+//! advances *all* non-standby replicas' clocks coherently (a replica
+//! receiving no traffic still flushes its lingering batches while peers
+//! are fed), then samples the autoscaler, then routes the query.
+//!
+//! Scale-up spins a standby replica onto a snapshot via the existing
+//! `Server::hot_swap` path; scale-down marks a replica Draining — the
+//! router stops feeding it, it flushes naturally with the shared clock,
+//! and it parks as Standby once empty. Standby replicas dispatch nothing,
+//! so their ledgers never advance: an idle replica costs no energy, which
+//! is exactly why packing queries onto few warm replicas (the
+//! energy-aware policy) beats spreading them round-robin.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::ckpt::Snapshot;
+use crate::comm::{Fabric, RENDEZVOUS_TIMEOUT};
+use crate::config::{RunConfig, ServeConfig};
+use crate::runtime::ExecServer;
+use crate::tensor::Tensor;
+use crate::util::prng::Prng;
+use crate::util::stats::{summarize, Summary};
+
+use super::autoscale::{AutoscaleConfig, Autoscaler, ScaleAction};
+use super::batcher::{Admission, Server};
+use super::pool::PoolOptions;
+use super::router::{ReplicaStatus, RoutePolicy, Router};
+
+/// Fleet-level knobs: routing policy plus autoscaler envelope. The fleet
+/// pre-spawns `autoscale.max_replicas` pools and starts
+/// `autoscale.min_replicas` of them Active.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FleetConfig {
+    pub policy: RoutePolicy,
+    pub autoscale: AutoscaleConfig,
+}
+
+/// One fleet run's summary — deterministic (bit-identical under a fixed
+/// trace and seed), which the replay property test asserts via `==`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetReport {
+    pub policy: RoutePolicy,
+    /// Pre-spawned replica pools (`autoscale.max_replicas`).
+    pub replicas: usize,
+    pub queries: usize,
+    pub completed: usize,
+    /// Shed by the routed replica's admission control (open-loop).
+    pub shed: usize,
+    /// Per-replica response-order violations — structurally 0.
+    pub misordered: usize,
+    /// Client-intent latency over completed queries, seconds.
+    pub latency: Summary,
+    /// Post-admission queue wait, seconds.
+    pub queue_wait: Summary,
+    pub throughput_qps: f64,
+    /// Whole-fleet energy (every rank of every replica), Joules.
+    pub energy_j: f64,
+    pub energy_per_kq_j: f64,
+    /// Mean Active-replica count over arrival samples.
+    pub mean_active: f64,
+    /// Mean Active-replica occupancy (queued / queue_depth) over samples.
+    pub mean_occupancy: f64,
+    pub scale_ups: usize,
+    pub scale_downs: usize,
+    pub per_replica_completed: Vec<usize>,
+    /// Virtual end time (max rank-ledger clock across the fleet).
+    pub virtual_s: f64,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum ReplicaState {
+    /// Routable.
+    Active,
+    /// Flushing its queue; the router skips it.
+    Draining,
+    /// Empty and parked; costs no energy until spun up.
+    Standby,
+}
+
+struct Replica {
+    server: Server,
+    state: ReplicaState,
+    /// Local query id -> global query id (admission order).
+    assigned: Vec<u64>,
+    /// Next expected local response id (per-replica order check).
+    collected: u64,
+    completed: usize,
+}
+
+impl Replica {
+    /// Pull completed responses, verifying per-replica id order and
+    /// recording fleet-level latency samples.
+    fn collect(
+        &mut self,
+        misordered: &mut usize,
+        latencies: &mut Vec<f64>,
+        queue_waits: &mut Vec<f64>,
+        last_done: &mut f64,
+    ) {
+        for r in self.server.take_responses() {
+            if r.id != self.collected {
+                *misordered += 1;
+            }
+            self.collected = r.id + 1;
+            self.completed += 1;
+            latencies.push(r.latency_s());
+            queue_waits.push(r.queue_wait_s());
+            *last_done = last_done.max(r.done_s);
+        }
+    }
+}
+
+/// Run one fleet over an explicit arrival trace (`BurstModel::trace`
+/// materializes one; tests hand-craft saturate/lull phases). Query
+/// payloads are a pure function of `payload_seed` and the arrival index,
+/// independent of routing — every policy and replica count serves
+/// bit-identical traffic.
+pub fn run_fleet(
+    run: &RunConfig,
+    scfg: &ServeConfig,
+    fcfg: &FleetConfig,
+    arrivals: &[f64],
+    payload_seed: u64,
+    exec: &ExecServer,
+) -> Result<FleetReport> {
+    run.validate()?;
+    scfg.validate()?;
+    fcfg.autoscale.validate()?;
+    if arrivals.is_empty() {
+        bail!("fleet needs at least one arrival");
+    }
+    let mut prev = 0.0f64;
+    for &t in arrivals {
+        if !t.is_finite() || t < prev {
+            bail!("fleet arrivals must be finite and nondecreasing");
+        }
+        prev = t;
+    }
+
+    let max_r = fcfg.autoscale.max_replicas;
+    let n = run.model.n;
+    // One independent communicator group per replica; globally unique
+    // world ranks (replica * p + rank) name the threads.
+    let groups = Fabric::replica_groups(run.p, max_r, run.hardware.net, RENDEZVOUS_TIMEOUT);
+    let mut reps: Vec<Replica> = Vec::with_capacity(max_r);
+    for (i, eps) in groups.into_iter().enumerate() {
+        let server = Server::start_on(run, *scfg, exec, PoolOptions::default(), eps)?;
+        let state = if i < fcfg.autoscale.min_replicas {
+            ReplicaState::Active
+        } else {
+            ReplicaState::Standby
+        };
+        reps.push(Replica { server, state, assigned: Vec::new(), collected: 0, completed: 0 });
+    }
+    // Spin-up weights: the deterministic init snapshot (identical to what
+    // every pool already holds — the swap exercises the snapshot path).
+    let snap = Snapshot::init(run)?;
+
+    let mut router = Router::new(fcfg.policy);
+    let mut scaler = Autoscaler::new(fcfg.autoscale);
+    let mut rng = Prng::new(payload_seed);
+
+    let mut shed = 0usize;
+    let mut misordered = 0usize;
+    let mut latencies: Vec<f64> = Vec::with_capacity(arrivals.len());
+    let mut queue_waits: Vec<f64> = Vec::with_capacity(arrivals.len());
+    let mut last_done = 0.0f64;
+    let mut occupancy_sum = 0.0f64;
+    let mut active_sum = 0usize;
+
+    for (gid, &t) in arrivals.iter().enumerate() {
+        // Payload drawn before routing: the PRNG stream never depends on
+        // policy or fleet state.
+        let x = Tensor::randn(&[n], 1.0, &mut rng);
+
+        // 1. Advance every non-standby replica's clock coherently and
+        //    harvest what completed.
+        for rep in reps.iter_mut() {
+            if rep.state != ReplicaState::Standby {
+                rep.server.advance_clock(t)?;
+            }
+            rep.collect(&mut misordered, &mut latencies, &mut queue_waits, &mut last_done);
+            if rep.state == ReplicaState::Draining && rep.server.queued() == 0 {
+                rep.state = ReplicaState::Standby;
+            }
+        }
+
+        // 2. Sample occupancy over Active replicas and autoscale.
+        let active: Vec<usize> = (0..reps.len())
+            .filter(|&i| reps[i].state == ReplicaState::Active)
+            .collect();
+        let occ = active
+            .iter()
+            .map(|&i| reps[i].server.queued() as f64 / scfg.queue_depth as f64)
+            .sum::<f64>()
+            / active.len() as f64;
+        occupancy_sum += occ;
+        active_sum += active.len();
+        match scaler.observe(t, occ, active.len()) {
+            Some(ScaleAction::Up) => {
+                // Prefer a parked standby (snapshot spin-up); else cancel
+                // a drain in progress — it still holds weights and queue.
+                if let Some(i) = reps.iter().position(|r| r.state == ReplicaState::Standby) {
+                    reps[i].server.advance_clock(t)?;
+                    reps[i].server.hot_swap(&snap)?;
+                    reps[i].state = ReplicaState::Active;
+                } else if let Some(i) =
+                    reps.iter().position(|r| r.state == ReplicaState::Draining)
+                {
+                    reps[i].state = ReplicaState::Active;
+                }
+            }
+            Some(ScaleAction::Down) => {
+                // Drain the emptiest Active replica (ties to the highest
+                // id, keeping low ids warm for the router).
+                let victim = active
+                    .iter()
+                    .copied()
+                    .min_by_key(|&i| (reps[i].server.queued(), usize::MAX - i))
+                    .expect("scale-down only fires with active > min >= 1");
+                reps[victim].state = ReplicaState::Draining;
+            }
+            None => {}
+        }
+
+        // 3. Route among the (possibly just-changed) Active replicas.
+        let statuses: Vec<ReplicaStatus> = (0..reps.len())
+            .filter(|&i| reps[i].state == ReplicaState::Active)
+            .map(|i| ReplicaStatus {
+                id: i,
+                queued: reps[i].server.queued(),
+                queue_depth: scfg.queue_depth,
+                j_per_query: reps[i].server.metrics().get("j_per_query_ewma"),
+            })
+            .collect();
+        let pick = router
+            .pick(&statuses)
+            .ok_or_else(|| anyhow!("fleet has no active replica (autoscaler bug)"))?;
+        let rid = statuses[pick].id;
+        match reps[rid].server.try_submit(t, x)? {
+            Admission::Accepted(local) => {
+                debug_assert_eq!(local as usize, reps[rid].assigned.len());
+                reps[rid].assigned.push(gid as u64);
+            }
+            Admission::Rejected => shed += 1,
+        }
+    }
+
+    // The stream ended: flush everything still queued, everywhere.
+    for rep in reps.iter_mut() {
+        rep.server.drain()?;
+        rep.collect(&mut misordered, &mut latencies, &mut queue_waits, &mut last_done);
+    }
+
+    let completed = latencies.len();
+    if completed + shed != arrivals.len() {
+        bail!(
+            "fleet dropped queries: {} completed + {} shed != {} offered",
+            completed,
+            shed,
+            arrivals.len()
+        );
+    }
+    if completed == 0 {
+        bail!("fleet shed every query — raise queue_depth or lower the offered rate");
+    }
+
+    let mut energy_j = 0.0f64;
+    let mut virtual_s = 0.0f64;
+    let mut per_replica_completed = Vec::with_capacity(reps.len());
+    for rep in reps {
+        debug_assert_eq!(rep.completed, rep.assigned.len(), "every admitted query completed");
+        per_replica_completed.push(rep.completed);
+        let (tail, _stats, per_rank) = rep.server.finish()?;
+        debug_assert!(tail.is_empty(), "drain + collect already took every response");
+        for pr in &per_rank {
+            energy_j += pr.ledger.energy_j(&run.hardware.power);
+            virtual_s = virtual_s.max(pr.ledger.end_s);
+        }
+    }
+
+    let samples = arrivals.len() as f64;
+    let (scale_ups, scale_downs) = scaler.actions();
+    Ok(FleetReport {
+        policy: fcfg.policy,
+        replicas: max_r,
+        queries: arrivals.len(),
+        completed,
+        shed,
+        misordered,
+        latency: summarize(&latencies),
+        queue_wait: summarize(&queue_waits),
+        throughput_qps: completed as f64 / last_done.max(1e-12),
+        energy_j,
+        energy_per_kq_j: energy_j / completed as f64 * 1_000.0,
+        mean_active: active_sum as f64 / samples,
+        mean_occupancy: occupancy_sum / samples,
+        scale_ups,
+        scale_downs,
+        per_replica_completed,
+        virtual_s,
+    })
+}
+
+/// Flat (key, value) records for one fleet run, prefixed
+/// `r{replicas}_{policy}_` — the BENCH_fleet.json rows.
+pub fn fleet_records(r: &FleetReport) -> Vec<(String, f64)> {
+    let pre = format!("r{}_{}", r.replicas, r.policy.name());
+    vec![
+        (format!("{pre}_queries"), r.queries as f64),
+        (format!("{pre}_completed"), r.completed as f64),
+        (format!("{pre}_shed"), r.shed as f64),
+        (format!("{pre}_shed_rate"), r.shed as f64 / r.queries as f64),
+        (format!("{pre}_misordered"), r.misordered as f64),
+        (format!("{pre}_p50_latency_s"), r.latency.p50),
+        (format!("{pre}_p99_latency_s"), r.latency.p99),
+        (format!("{pre}_p50_queue_wait_s"), r.queue_wait.p50),
+        (format!("{pre}_throughput_qps"), r.throughput_qps),
+        (format!("{pre}_energy_per_kq_j"), r.energy_per_kq_j),
+        (format!("{pre}_mean_active"), r.mean_active),
+        (format!("{pre}_occupancy"), r.mean_occupancy),
+        (format!("{pre}_scale_ups"), r.scale_ups as f64),
+        (format!("{pre}_scale_downs"), r.scale_downs as f64),
+    ]
+}

@@ -11,6 +11,7 @@ use anyhow::{bail, Result};
 use crate::comm::CommStats;
 use crate::config::{Parallelism, RunConfig, ServeConfig};
 use crate::energy::PowerModel;
+use crate::obs::MetricsSnapshot;
 use crate::runtime::ExecServer;
 use crate::tensor::Tensor;
 use crate::util::prng::Prng;
@@ -56,8 +57,12 @@ pub struct LoadReport {
     pub blocked: usize,
     /// Responses whose id regressed — structurally 0, asserted anyway.
     pub misordered: usize,
-    /// Latency (done - original arrival) over completed queries, seconds.
+    /// Latency (done - original client intent, blocking delay included)
+    /// over completed queries, seconds.
     pub latency: Summary,
+    /// Post-admission queue wait (dispatch - admission) summary, seconds —
+    /// the server-side slice of `latency`.
+    pub queue_wait: Summary,
     /// Completed queries per virtual second, over [0, last completion].
     pub throughput_qps: f64,
     /// Cluster energy over the whole run, Joules (all ranks, Eqn. 1).
@@ -69,6 +74,113 @@ pub struct LoadReport {
     /// Aggregated wire traffic across all rank endpoints.
     pub comm: CommStats,
     pub per_rank: Vec<PoolRankReport>,
+    /// The server's own live-metrics snapshot, taken after the drain —
+    /// the same surface `Server::metrics()` exposes mid-run. Its
+    /// `latency_s_p50`/`latency_s_p99` must agree with `latency` (both are
+    /// client-intent based; the regression suite asserts it).
+    pub live: MetricsSnapshot,
+}
+
+/// Bursty, diurnal, heavy-tailed arrival model — the fleet's replacement
+/// for the single-rate Poisson stream. Three effects compose, all drawn
+/// from the deterministic PRNG so one seed defines one reproducible trace
+/// that every router policy and replica count can be measured against:
+///
+/// * **diurnal**: the base rate is modulated by a sinusoid (amplitude
+///   `diurnal_amp`, period `diurnal_period_s`) — the slow day/night swing
+///   the autoscaler should track by draining replicas;
+/// * **bursts**: with probability `burst_prob` per arrival, the next
+///   `burst_len` arrivals come at `burst_mult` times the current rate —
+///   the flash crowds that force scale-up and shedding;
+/// * **lulls**: with probability `lull_prob`, a Pareto-distributed quiet
+///   gap (tail index `lull_alpha`, scale `lull_scale_s`) is inserted —
+///   the heavy-tailed silences that leave lingering batches to flush.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BurstModel {
+    /// Mean arrival rate before modulation, queries per virtual second.
+    pub base_qps: f64,
+    /// Sinusoid amplitude on the rate, in [0, 1).
+    pub diurnal_amp: f64,
+    /// Sinusoid period, virtual seconds.
+    pub diurnal_period_s: f64,
+    /// Per-arrival probability of entering a burst.
+    pub burst_prob: f64,
+    /// Rate multiplier while inside a burst (> 1).
+    pub burst_mult: f64,
+    /// Arrivals per burst.
+    pub burst_len: usize,
+    /// Per-arrival probability of a heavy-tailed lull (outside bursts).
+    pub lull_prob: f64,
+    /// Pareto tail index of the lull length (smaller = heavier tail).
+    pub lull_alpha: f64,
+    /// Pareto scale (minimum lull), virtual seconds.
+    pub lull_scale_s: f64,
+}
+
+impl Default for BurstModel {
+    fn default() -> Self {
+        BurstModel {
+            base_qps: 2_000.0,
+            diurnal_amp: 0.6,
+            diurnal_period_s: 0.25,
+            burst_prob: 0.02,
+            burst_mult: 8.0,
+            burst_len: 24,
+            lull_prob: 0.01,
+            lull_alpha: 1.5,
+            lull_scale_s: 5e-3,
+        }
+    }
+}
+
+impl BurstModel {
+    pub fn validate(&self) -> Result<()> {
+        if self.base_qps <= 0.0 || !self.base_qps.is_finite() {
+            bail!("burst model needs a positive finite base rate");
+        }
+        if !(0.0..1.0).contains(&self.diurnal_amp) || self.diurnal_period_s <= 0.0 {
+            bail!("diurnal amplitude must be in [0, 1) with a positive period");
+        }
+        if !(0.0..=1.0).contains(&self.burst_prob) || !(0.0..=1.0).contains(&self.lull_prob) {
+            bail!("burst/lull probabilities must be in [0, 1]");
+        }
+        if self.burst_mult < 1.0 || self.lull_alpha <= 0.0 || self.lull_scale_s < 0.0 {
+            bail!("burst multiplier must be >= 1 and the lull tail well-formed");
+        }
+        Ok(())
+    }
+
+    /// Materialize `queries` arrival timestamps (nondecreasing, starting
+    /// after 0). The whole trace is a pure function of `seed`.
+    pub fn trace(&self, seed: u64, queries: usize) -> Vec<f64> {
+        let mut rng = Prng::new(seed);
+        let mut t = 0.0f64;
+        let mut in_burst = 0usize;
+        let mut out = Vec::with_capacity(queries);
+        for _ in 0..queries {
+            let phase = std::f64::consts::TAU * t / self.diurnal_period_s;
+            // Clamp away from zero so a deep trough never stalls the trace.
+            let diurnal = (1.0 + self.diurnal_amp * phase.sin()).max(0.05);
+            let mut rate = self.base_qps * diurnal;
+            if in_burst > 0 {
+                in_burst -= 1;
+                rate *= self.burst_mult;
+            } else if rng.next_f64() < self.burst_prob {
+                in_burst = self.burst_len;
+                rate *= self.burst_mult;
+            }
+            let mut gap = -(1.0 - rng.next_f64()).ln() / rate;
+            if in_burst == 0 && rng.next_f64() < self.lull_prob {
+                // Pareto(alpha, scale) quiet period: u^(-1/alpha) has a
+                // heavy tail, so a few lulls dominate the idle time.
+                let u = 1.0 - rng.next_f64(); // (0, 1]
+                gap += self.lull_scale_s * u.powf(-1.0 / self.lull_alpha);
+            }
+            t += gap;
+            out.push(t);
+        }
+        out
+    }
 }
 
 /// Drive one full load-generator run through a fresh serving stack.
@@ -86,10 +198,7 @@ pub fn run_load(
 
     let mut rng = Prng::new(lcfg.seed);
     let mut t = 0.0f64;
-    // Original (pre-backpressure) arrival time per query id, for honest
-    // client-side latency accounting.
-    let mut arrivals: Vec<f64> = Vec::with_capacity(lcfg.queries);
-    let mut last_effective = 0.0f64;
+    let mut admitted = 0u64;
     let mut responses = Vec::with_capacity(lcfg.queries);
     for _ in 0..lcfg.queries {
         // Exponential inter-arrival gap (1 - u in (0, 1] avoids ln 0).
@@ -99,24 +208,31 @@ pub fn run_load(
             // Open loop: shed clients never delay the stream.
             match server.try_submit(t, x)? {
                 Admission::Accepted(id) => {
-                    debug_assert_eq!(id as usize, arrivals.len());
-                    arrivals.push(t);
+                    debug_assert_eq!(id, admitted);
+                    admitted += 1;
                 }
                 Admission::Rejected => {}
             }
         } else {
-            // A blocked stream delays every later arrival past the block.
-            let (id, effective) = server.submit_blocking(t.max(last_effective), x)?;
-            debug_assert_eq!(id as usize, arrivals.len());
-            arrivals.push(t); // latency is measured from the client's intent
-            last_effective = effective;
+            // A blocked stream delays every later delivery past the block,
+            // but the intent clock keeps running at the offered rate: the
+            // server clamps the effective admission itself and the
+            // Response carries both instants, so latency is measured from
+            // the client's intent on every surface.
+            let (id, _effective) = server.submit_blocking(t, x)?;
+            debug_assert_eq!(id, admitted);
+            admitted += 1;
         }
         responses.append(&mut server.take_responses());
     }
+    server.drain()?;
+    // Snapshot the live metrics after the drain, before teardown: this is
+    // the surface a router or dashboard would read mid-run.
+    let live = server.metrics();
     let (mut tail, stats, per_rank) = server.finish()?;
     responses.append(&mut tail);
 
-    summarize_run(run, lcfg, scfg, stats, per_rank, &arrivals, responses)
+    summarize_run(run, lcfg, scfg, stats, per_rank, live, responses)
 }
 
 fn summarize_run(
@@ -125,7 +241,7 @@ fn summarize_run(
     scfg: &ServeConfig,
     stats: ServerStats,
     per_rank: Vec<PoolRankReport>,
-    arrivals: &[f64],
+    live: MetricsSnapshot,
     responses: Vec<super::batcher::Response>,
 ) -> Result<LoadReport> {
     let completed = responses.len();
@@ -135,6 +251,7 @@ fn summarize_run(
     let mut misordered = 0usize;
     let mut last_id: Option<u64> = None;
     let mut latencies = Vec::with_capacity(completed);
+    let mut queue_waits = Vec::with_capacity(completed);
     let mut last_done = 0.0f64;
     for r in &responses {
         if let Some(prev) = last_id {
@@ -143,8 +260,8 @@ fn summarize_run(
             }
         }
         last_id = Some(r.id);
-        let orig = arrivals.get(r.id as usize).copied().unwrap_or(r.arrival_s);
-        latencies.push(r.done_s - orig);
+        latencies.push(r.latency_s());
+        queue_waits.push(r.queue_wait_s());
         last_done = last_done.max(r.done_s);
     }
 
@@ -166,6 +283,7 @@ fn summarize_run(
         blocked: stats.blocked as usize,
         misordered,
         latency: summarize(&latencies),
+        queue_wait: summarize(&queue_waits),
         throughput_qps: completed as f64 / last_done.max(1e-12),
         energy_j,
         energy_per_kq_j: energy_j / completed as f64 * 1_000.0,
@@ -174,6 +292,7 @@ fn summarize_run(
         max_queue_seen: stats.max_queue_seen,
         comm,
         per_rank,
+        live,
     })
 }
 
@@ -181,36 +300,143 @@ fn summarize_run(
 /// append the `pp_over_tp_energy` headline ratio. The single source of the
 /// BENCH_serve.json schema for the CLI, the serve bench, and the CI smoke
 /// test.
+///
+/// When a mode contributed several reports (a replica fleet produces one
+/// per replica), they are aggregated rather than silently dropped: counts
+/// and energy sum exactly, latency percentiles are completed-weighted, and
+/// `energy_per_kq_j` is recomputed from the total energy over the total
+/// completions (i.e. energy-weighted, not a mean of per-replica ratios).
+/// `{mode}_reports` records how many reports fed each mode's row, so the
+/// `pp_over_tp_energy` headline stays honest at any replica count.
 pub fn combined_records(reports: &[LoadReport]) -> Vec<(String, f64)> {
     let mut records: Vec<(String, f64)> = Vec::new();
+    // Group by mode preserving first-seen order (at most a handful of
+    // modes, so the quadratic scan is fine).
+    let mut groups: Vec<(Parallelism, Vec<&LoadReport>)> = Vec::new();
     for r in reports {
-        records.extend(bench_records(r));
+        match groups.iter_mut().find(|(m, _)| *m == r.mode) {
+            Some((_, g)) => g.push(r),
+            None => groups.push((r.mode, vec![r])),
+        }
     }
-    let energy =
-        |mode: Parallelism| reports.iter().find(|r| r.mode == mode).map(|r| r.energy_per_kq_j);
+    for (mode, group) in &groups {
+        records.extend(aggregate_records(*mode, group));
+        records.push((format!("{}_reports", mode.name()), group.len() as f64));
+    }
+    let energy = |mode: Parallelism| {
+        groups.iter().find(|(m, _)| *m == mode).map(|(_, g)| {
+            let e: f64 = g.iter().map(|r| r.energy_j).sum();
+            let c: f64 = g.iter().map(|r| r.completed as f64).sum();
+            e / c.max(1.0) * 1_000.0
+        })
+    };
     if let (Some(pp), Some(tp)) = (energy(Parallelism::Phantom), energy(Parallelism::Tensor)) {
         records.push(("pp_over_tp_energy".to_string(), pp / tp));
     }
     records
 }
 
+/// Aggregate one mode's reports into the flat record schema. A single
+/// report reduces exactly to `bench_records`.
+fn aggregate_records(mode: Parallelism, group: &[&LoadReport]) -> Vec<(String, f64)> {
+    let m = mode.name();
+    let sum = |f: &dyn Fn(&LoadReport) -> f64| group.iter().map(|r| f(r)).sum::<f64>();
+    let completed = sum(&|r| r.completed as f64);
+    let batches = sum(&|r| r.batches as f64);
+    // Completed-weighted latency percentiles: each replica's percentile
+    // contributes in proportion to the queries it actually answered.
+    let wlat = |f: &dyn Fn(&LoadReport) -> f64| {
+        sum(&|r| f(r) * r.completed as f64) / completed.max(1.0)
+    };
+    vec![
+        (format!("{m}_queries"), sum(&|r| r.queries as f64)),
+        (format!("{m}_rate_qps"), sum(&|r| r.rate_qps)),
+        (format!("{m}_queue_depth"), sum(&|r| r.queue_depth as f64)),
+        (format!("{m}_completed"), completed),
+        (format!("{m}_rejected"), sum(&|r| r.rejected as f64)),
+        (format!("{m}_blocked"), sum(&|r| r.blocked as f64)),
+        (format!("{m}_misordered"), sum(&|r| r.misordered as f64)),
+        (format!("{m}_p50_latency_s"), wlat(&|r| r.latency.p50)),
+        (format!("{m}_p95_latency_s"), wlat(&|r| r.latency.p95)),
+        (format!("{m}_p99_latency_s"), wlat(&|r| r.latency.p99)),
+        (format!("{m}_p50_queue_wait_s"), wlat(&|r| r.queue_wait.p50)),
+        (format!("{m}_throughput_qps"), sum(&|r| r.throughput_qps)),
+        (format!("{m}_energy_per_kq_j"), sum(&|r| r.energy_j) / completed.max(1.0) * 1_000.0),
+        (format!("{m}_batches"), batches),
+        (format!("{m}_mean_batch"), sum(&|r| r.mean_batch * r.batches as f64) / batches.max(1.0)),
+        (format!("{m}_floats_moved"), sum(&|r| r.comm.floats_moved as f64)),
+    ]
+}
+
 /// Flat (key, value) records for one mode's run, prefixed by the mode name
 /// ("pp_p50_latency_s", ...).
 pub fn bench_records(r: &LoadReport) -> Vec<(String, f64)> {
-    let m = r.mode.name();
-    vec![
-        (format!("{m}_queries"), r.queries as f64),
-        (format!("{m}_rate_qps"), r.rate_qps),
-        (format!("{m}_queue_depth"), r.queue_depth as f64),
-        (format!("{m}_completed"), r.completed as f64),
-        (format!("{m}_rejected"), r.rejected as f64),
-        (format!("{m}_misordered"), r.misordered as f64),
-        (format!("{m}_p50_latency_s"), r.latency.p50),
-        (format!("{m}_p95_latency_s"), r.latency.p95),
-        (format!("{m}_throughput_qps"), r.throughput_qps),
-        (format!("{m}_energy_per_kq_j"), r.energy_per_kq_j),
-        (format!("{m}_batches"), r.batches as f64),
-        (format!("{m}_mean_batch"), r.mean_batch),
-        (format!("{m}_floats_moved"), r.comm.floats_moved as f64),
-    ]
+    aggregate_records(r.mode, &[r])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report(mode: Parallelism, completed: usize, energy_j: f64, p50: f64) -> LoadReport {
+        let lat = summarize(&[p50]);
+        LoadReport {
+            mode,
+            queries: completed,
+            rate_qps: 100.0,
+            queue_depth: 8,
+            completed,
+            rejected: 0,
+            blocked: 0,
+            misordered: 0,
+            latency: lat,
+            queue_wait: lat,
+            throughput_qps: 10.0,
+            energy_j,
+            energy_per_kq_j: energy_j / completed as f64 * 1_000.0,
+            batches: 4,
+            mean_batch: completed as f64 / 4.0,
+            max_queue_seen: 8,
+            comm: CommStats::default(),
+            per_rank: Vec::new(),
+            live: MetricsSnapshot::default(),
+        }
+    }
+
+    #[test]
+    fn combined_records_aggregates_all_reports_per_mode() {
+        // Regression: the old `find` kept only the first report per mode,
+        // so a fleet's later replicas silently vanished from the headline.
+        let pp_a = report(Parallelism::Phantom, 100, 50.0, 0.010);
+        let pp_b = report(Parallelism::Phantom, 300, 90.0, 0.030);
+        let tp = report(Parallelism::Tensor, 400, 280.0, 0.020);
+        let recs = combined_records(&[pp_a, pp_b, tp]);
+        let get = |k: &str| {
+            recs.iter().find(|(n, _)| n == k).map(|(_, v)| *v).unwrap_or_else(|| {
+                panic!("missing record {k}")
+            })
+        };
+        assert_eq!(get("pp_reports"), 2.0);
+        assert_eq!(get("tp_reports"), 1.0);
+        assert_eq!(get("pp_completed"), 400.0);
+        // Energy per 1k queries from totals: (50 + 90) / 400 * 1000.
+        assert!((get("pp_energy_per_kq_j") - 350.0).abs() < 1e-9);
+        // Completed-weighted p50: (0.010*100 + 0.030*300) / 400.
+        assert!((get("pp_p50_latency_s") - 0.025).abs() < 1e-12);
+        // Headline uses the aggregate, not the first pp report:
+        // 350 / (280/400*1000) = 350 / 700 = 0.5.
+        assert!((get("pp_over_tp_energy") - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bench_records_matches_single_report_aggregate() {
+        let r = report(Parallelism::Phantom, 64, 32.0, 0.005);
+        let solo = bench_records(&r);
+        let combined = combined_records(std::slice::from_ref(&r));
+        for (k, v) in &solo {
+            let c = combined.iter().find(|(n, _)| n == k).map(|(_, x)| *x);
+            assert_eq!(c, Some(*v), "record {k} diverged");
+        }
+        assert!((r.energy_per_kq_j - 500.0).abs() < 1e-9);
+    }
 }

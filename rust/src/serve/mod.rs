@@ -11,20 +11,41 @@
 //!   micro-batcher (fill up to `max_batch`, or linger `linger_s` past
 //!   pool-ready, whichever closes the batch first).
 //! * `loadgen` — open-loop Poisson-ish load harness over the deterministic
-//!   PRNG; reports p50/p95 latency, throughput and energy per 1k queries,
-//!   and emits the BENCH_serve.json perf-trajectory records.
+//!   PRNG; reports p50/p99 latency, throughput and energy per 1k queries,
+//!   and emits the BENCH_serve.json perf-trajectory records. Its
+//!   `BurstModel` adds bursty/diurnal/heavy-tailed traces for fleet runs.
+//!
+//! On top of the single-replica stack sits the DP fleet (DESIGN.md §14):
+//!
+//! * `router`    — per-query replica choice from live queue depth and the
+//!   J/query EWMA (round-robin / least-queue / energy-aware policies);
+//! * `autoscale` — occupancy-watermark scaler with patience + cooldown
+//!   hysteresis;
+//! * `fleet`     — the event-driven front-end holding N replicas on
+//!   independent communicator groups, advancing all virtual clocks
+//!   coherently, spinning replicas up from snapshots and draining them
+//!   down; reports fleet p50/p99, shed rate, occupancy and J/1k-queries
+//!   into BENCH_fleet.json.
 //!
 //! PP's forward path saves the same All-Gather traffic per query as per
 //! training step (paper Table II), so the serving comparison mirrors the
 //! training one: same fabric, same energy ledger, same Eqn. 26 wire model.
 
+pub mod autoscale;
 pub mod batcher;
+pub mod fleet;
 pub mod loadgen;
 pub mod pool;
+pub mod router;
 
+pub use autoscale::{AutoscaleConfig, Autoscaler, ScaleAction};
 pub use batcher::{Admission, Response, Server, ServerStats};
-pub use loadgen::{bench_records, combined_records, run_load, LoadGenConfig, LoadReport};
+pub use fleet::{fleet_records, run_fleet, FleetConfig, FleetReport};
+pub use loadgen::{
+    bench_records, combined_records, run_load, BurstModel, LoadGenConfig, LoadReport,
+};
 pub use pool::{PoolOptions, PoolRankReport, RankPool};
+pub use router::{ReplicaStatus, RoutePolicy, Router};
 
 use anyhow::{Context, Result};
 

@@ -114,6 +114,26 @@ impl RankPool {
         exec: &ExecServer,
         opts: PoolOptions,
     ) -> Result<RankPool> {
+        let endpoints = match opts.rendezvous_timeout {
+            Some(t) => Fabric::with_timeout(run.p, run.hardware.net, t),
+            None => Fabric::new(run.p, run.hardware.net),
+        };
+        Self::start_on(run, scfg, exec, opts, endpoints)
+    }
+
+    /// Spawn the rank threads onto caller-provided fabric endpoints. The
+    /// fleet front-end builds one independent communicator group per
+    /// replica (`Fabric::replica_groups`) and starts each replica's pool
+    /// on its own group; fault arming and thread names use the endpoint's
+    /// `world_rank`, so every rank in a fleet keeps a globally unique
+    /// identity (`world_rank == rank` for the single-pool path).
+    pub fn start_on(
+        run: &RunConfig,
+        scfg: &ServeConfig,
+        exec: &ExecServer,
+        opts: PoolOptions,
+        endpoints: Vec<crate::comm::Endpoint>,
+    ) -> Result<RankPool> {
         run.validate()?;
         scfg.validate()?;
         let artifact = run
@@ -133,16 +153,16 @@ impl RankPool {
         }
 
         let p = run.p;
-        let endpoints = match opts.rendezvous_timeout {
-            Some(t) => Fabric::with_timeout(p, run.hardware.net, t),
-            None => Fabric::new(p, run.hardware.net),
-        };
+        if endpoints.len() != p {
+            bail!("pool needs {p} endpoints, got {}", endpoints.len());
+        }
         let (done_tx, done_rx) = mpsc::channel::<Result<Done>>();
         let mut job_txs = Vec::with_capacity(p);
         let mut handles = Vec::with_capacity(p);
         for (rank, mut ep) in endpoints.into_iter().enumerate() {
+            let world = ep.world_rank;
             if let Some(factory) = &opts.faults {
-                if let Some(injector) = factory.for_rank(rank) {
+                if let Some(injector) = factory.for_rank(world) {
                     ep.arm_faults(injector);
                 }
             }
@@ -158,7 +178,7 @@ impl RankPool {
             let trace = opts.trace;
             handles.push(
                 thread::Builder::new()
-                    .name(format!("serve-rank-{rank}"))
+                    .name(format!("serve-rank-{world}"))
                     .spawn(move || {
                         rank_loop(
                             rank, p, mode, model, seed, artifact, handle, ep, job_rx, done_tx,

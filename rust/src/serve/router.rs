@@ -1,0 +1,194 @@
+//! Replica-choice policies for the serving fleet (DESIGN.md §14).
+//!
+//! The router sees only what a real front-end would: each active
+//! replica's live queue depth and its J/query EWMA from the replica's own
+//! `Server::metrics()` — the PIE-P-style predicted-energy signal
+//! (PAPERS.md) that the metrics registry has exported since PR 8 but
+//! nothing consumed until now. Routing is deterministic: the same policy
+//! over the same replica statuses always picks the same replica, so fleet
+//! runs replay bit-identically under a fixed seed.
+
+use anyhow::{bail, Result};
+
+/// Which replica gets the next query.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoutePolicy {
+    /// Rotate over the active replicas, blind to their state. Sheds when
+    /// the chosen replica is full even if a peer has room — the classic
+    /// stateless load balancer, kept naive on purpose as the baseline.
+    RoundRobin,
+    /// Pick the active replica with the shortest queue (ties to the
+    /// lowest replica id).
+    LeastQueue,
+    /// Pick the non-full replica with the lowest live J/query EWMA;
+    /// replicas that have not yet dispatched a batch (no EWMA) rank after
+    /// warm ones, and ties break toward the *most* queued candidate so
+    /// queries pack into fuller batches — amortizing per-batch collective
+    /// and idle energy is exactly how serving energy is won (Huber et
+    /// al.). Falls back to least-queue when every active replica is full.
+    EnergyAware,
+}
+
+impl RoutePolicy {
+    pub fn parse(s: &str) -> Result<RoutePolicy> {
+        Ok(match s {
+            "rr" | "round-robin" => RoutePolicy::RoundRobin,
+            "least" | "least-queue" => RoutePolicy::LeastQueue,
+            "energy" | "energy-aware" => RoutePolicy::EnergyAware,
+            other => bail!("unknown route policy '{other}' (rr | least | energy)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            RoutePolicy::RoundRobin => "rr",
+            RoutePolicy::LeastQueue => "least",
+            RoutePolicy::EnergyAware => "energy",
+        }
+    }
+
+    /// Every policy, baseline first — the order the fleet CLI reports.
+    pub fn all() -> [RoutePolicy; 3] {
+        [RoutePolicy::RoundRobin, RoutePolicy::LeastQueue, RoutePolicy::EnergyAware]
+    }
+}
+
+/// One active replica's live state as the router sees it.
+#[derive(Debug, Clone, Copy)]
+pub struct ReplicaStatus {
+    /// Fleet-wide replica id (stable across scale events).
+    pub id: usize,
+    /// Queries admitted but not yet dispatched.
+    pub queued: usize,
+    /// The replica's admission bound.
+    pub queue_depth: usize,
+    /// Live J/query EWMA from the replica's metrics; `None` until its
+    /// first batch completes.
+    pub j_per_query: Option<f64>,
+}
+
+impl ReplicaStatus {
+    fn full(&self) -> bool {
+        self.queued >= self.queue_depth
+    }
+}
+
+/// Stateful router: owns the round-robin cursor.
+#[derive(Debug, Clone)]
+pub struct Router {
+    policy: RoutePolicy,
+    rr_next: usize,
+}
+
+impl Router {
+    pub fn new(policy: RoutePolicy) -> Router {
+        Router { policy, rr_next: 0 }
+    }
+
+    pub fn policy(&self) -> RoutePolicy {
+        self.policy
+    }
+
+    /// Choose a replica for the next query among `statuses` (the active
+    /// replicas, in stable id order). Returns an index into `statuses`,
+    /// or `None` when the slice is empty. The router never refuses a full
+    /// replica outright — admission control (shed/block) stays with the
+    /// replica's own server.
+    pub fn pick(&mut self, statuses: &[ReplicaStatus]) -> Option<usize> {
+        if statuses.is_empty() {
+            return None;
+        }
+        Some(match self.policy {
+            RoutePolicy::RoundRobin => {
+                let i = self.rr_next % statuses.len();
+                self.rr_next = self.rr_next.wrapping_add(1);
+                i
+            }
+            RoutePolicy::LeastQueue => least_queue(statuses),
+            RoutePolicy::EnergyAware => {
+                let mut best: Option<usize> = None;
+                for (i, s) in statuses.iter().enumerate() {
+                    if s.full() {
+                        continue;
+                    }
+                    best = Some(match best {
+                        None => i,
+                        Some(b) => {
+                            if energy_pref(s, &statuses[b]) {
+                                i
+                            } else {
+                                b
+                            }
+                        }
+                    });
+                }
+                // Everyone full: the least-loaded replica sheds/blocks
+                // least badly.
+                best.unwrap_or_else(|| least_queue(statuses))
+            }
+        })
+    }
+}
+
+fn least_queue(statuses: &[ReplicaStatus]) -> usize {
+    let mut best = 0usize;
+    for (i, s) in statuses.iter().enumerate().skip(1) {
+        if s.queued < statuses[best].queued {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Does candidate `a` beat incumbent `b` under the energy-aware order?
+/// Lower EWMA wins; a known EWMA beats an unknown one; otherwise prefer
+/// the fuller queue (batch packing), then the lower id.
+fn energy_pref(a: &ReplicaStatus, b: &ReplicaStatus) -> bool {
+    match (a.j_per_query, b.j_per_query) {
+        (Some(ja), Some(jb)) if ja != jb => ja < jb,
+        (Some(_), None) => true,
+        (None, Some(_)) => false,
+        _ => a.queued > b.queued, // equal-energy or both cold: pack
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn st(id: usize, queued: usize, j: Option<f64>) -> ReplicaStatus {
+        ReplicaStatus { id, queued, queue_depth: 8, j_per_query: j }
+    }
+
+    #[test]
+    fn round_robin_cycles() {
+        let mut r = Router::new(RoutePolicy::RoundRobin);
+        let s = [st(0, 0, None), st(1, 5, None), st(2, 8, None)];
+        let picks: Vec<usize> = (0..6).map(|_| r.pick(&s).unwrap()).collect();
+        // Blind rotation — even onto the full replica 2.
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn least_queue_prefers_shortest_with_low_id_ties() {
+        let mut r = Router::new(RoutePolicy::LeastQueue);
+        assert_eq!(r.pick(&[st(0, 3, None), st(1, 1, None), st(2, 1, None)]), Some(1));
+    }
+
+    #[test]
+    fn energy_aware_prefers_low_ewma_then_packs() {
+        let mut r = Router::new(RoutePolicy::EnergyAware);
+        // Warm cheap replica beats warm expensive and cold ones.
+        assert_eq!(
+            r.pick(&[st(0, 2, Some(9.0)), st(1, 2, Some(3.0)), st(2, 7, None)]),
+            Some(1)
+        );
+        // Cold fleet: pack the fullest non-full queue.
+        assert_eq!(r.pick(&[st(0, 2, None), st(1, 6, None), st(2, 8, None)]), Some(1));
+        // Cheapest is full: spill to the next-cheapest with room.
+        assert_eq!(r.pick(&[st(0, 8, Some(1.0)), st(1, 3, Some(5.0))]), Some(1));
+        // Everyone full: fall back to least-queue.
+        assert_eq!(r.pick(&[st(0, 9, Some(1.0)), st(1, 8, Some(5.0))]), Some(1));
+        assert_eq!(r.pick(&[]), None);
+    }
+}

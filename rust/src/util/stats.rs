@@ -15,6 +15,9 @@ pub struct Summary {
     pub max: f64,
     pub p50: f64,
     pub p95: f64,
+    /// Tail percentile for SLO-style reporting (fleet serving headlines
+    /// quote p50/p99, matching the live metrics histograms).
+    pub p99: f64,
     /// Non-finite samples (NaN/inf) dropped from the statistics. A single
     /// NaN must degrade the summary, not panic the whole serve/bench
     /// report: the old `partial_cmp(..).unwrap()` sort did exactly that.
@@ -36,6 +39,7 @@ pub fn summarize(xs: &[f64]) -> Summary {
             max: f64::NAN,
             p50: f64::NAN,
             p95: f64::NAN,
+            p99: f64::NAN,
             dropped,
         };
     }
@@ -53,6 +57,7 @@ pub fn summarize(xs: &[f64]) -> Summary {
         max: sorted[n - 1],
         p50: percentile_sorted(&sorted, 50.0),
         p95: percentile_sorted(&sorted, 95.0),
+        p99: percentile_sorted(&sorted, 99.0),
         dropped,
     }
 }
@@ -158,6 +163,7 @@ mod tests {
         assert_eq!(s.min, 1.0);
         assert_eq!(s.max, 5.0);
         assert!((s.p50 - 3.0).abs() < 1e-12);
+        assert!(s.p50 <= s.p95 && s.p95 <= s.p99 && s.p99 <= s.max);
     }
 
     #[test]

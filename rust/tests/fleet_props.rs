@@ -1,0 +1,133 @@
+//! Fleet router/autoscaler property tests (DESIGN.md §14):
+//!
+//! * deterministic replay: the same trace, seed and policy produce a
+//!   bit-identical `FleetReport` (routing, autoscaling and energy are all
+//!   pure functions of the inputs);
+//! * no query is dropped or reordered across replica scale-up and drain —
+//!   every offered query is either completed or shed at admission, and
+//!   per-replica response ids stay strictly sequential;
+//! * the live queue-depth gauge agrees with the server's admission
+//!   accounting after every submission.
+
+use phantom::config::{preset, Parallelism, ServeConfig};
+use phantom::runtime::ExecServer;
+use phantom::serve::{
+    run_fleet, Admission, AutoscaleConfig, FleetConfig, RoutePolicy, Server,
+};
+use phantom::tensor::Tensor;
+use phantom::util::prng::Prng;
+
+fn tiny_scfg() -> ServeConfig {
+    ServeConfig { queue_depth: 4, max_batch: 4, linger_s: 1e-3, mode: Parallelism::Phantom }
+}
+
+/// Two-phase trace that forces both autoscaler directions regardless of
+/// absolute service times: a near-simultaneous flood saturates the
+/// bounded queues (occupancy 1.0 -> scale-up), then a sparse trickle with
+/// one-second gaps lets everything drain (occupancy 0.0 -> scale-down).
+fn two_phase_arrivals() -> Vec<f64> {
+    let mut t = Vec::new();
+    for i in 1..=120 {
+        t.push(1e-7 * i as f64);
+    }
+    for i in 0..20 {
+        t.push(10.0 + i as f64);
+    }
+    t
+}
+
+fn scale_cfg(policy: RoutePolicy) -> FleetConfig {
+    FleetConfig {
+        policy,
+        autoscale: AutoscaleConfig {
+            min_replicas: 1,
+            max_replicas: 2,
+            high_water: 0.75,
+            low_water: 0.15,
+            patience: 2,
+            cooldown_s: 1e-6,
+        },
+    }
+}
+
+#[test]
+fn fleet_replays_deterministically_and_scales_both_ways() {
+    let cfg = preset("tiny_p2", Parallelism::Phantom).unwrap();
+    let exec = ExecServer::for_run(&cfg).unwrap();
+    let arrivals = two_phase_arrivals();
+    let fcfg = scale_cfg(RoutePolicy::EnergyAware);
+
+    let a = run_fleet(&cfg, &tiny_scfg(), &fcfg, &arrivals, 0xD0D0, &exec).unwrap();
+    let b = run_fleet(&cfg, &tiny_scfg(), &fcfg, &arrivals, 0xD0D0, &exec).unwrap();
+    assert_eq!(a, b, "same trace + seed + policy must replay bit-identically");
+
+    // The trace must actually have exercised both scale directions.
+    assert!(a.scale_ups >= 1, "the flood phase must trigger a scale-up");
+    assert!(a.scale_downs >= 1, "the trickle phase must trigger a drain");
+    assert!(a.shed > 0, "the flood must overflow the bounded queues");
+    assert_eq!(a.misordered, 0);
+    assert_eq!(a.completed + a.shed, arrivals.len(), "every query completed or shed");
+    assert_eq!(a.per_replica_completed.iter().sum::<usize>(), a.completed);
+    assert!(a.energy_j > 0.0 && a.latency.p50 > 0.0);
+
+    // A different payload seed still conserves queries (routing is
+    // payload-independent, so admission counts match exactly).
+    let c = run_fleet(&cfg, &tiny_scfg(), &fcfg, &arrivals, 0x0514, &exec).unwrap();
+    assert_eq!(c.completed + c.shed, arrivals.len());
+    assert_eq!((c.completed, c.shed), (a.completed, a.shed));
+}
+
+#[test]
+fn no_policy_drops_or_reorders_across_scale_events() {
+    let cfg = preset("tiny_p2", Parallelism::Phantom).unwrap();
+    let exec = ExecServer::for_run(&cfg).unwrap();
+    let arrivals = two_phase_arrivals();
+    for policy in RoutePolicy::all() {
+        let r = run_fleet(&cfg, &tiny_scfg(), &scale_cfg(policy), &arrivals, 0xFEED, &exec)
+            .unwrap();
+        assert_eq!(r.misordered, 0, "{}: responses reordered", policy.name());
+        assert_eq!(
+            r.completed + r.shed,
+            arrivals.len(),
+            "{}: queries dropped",
+            policy.name()
+        );
+        assert!(r.scale_ups >= 1, "{}: no scale-up under the flood", policy.name());
+    }
+}
+
+#[test]
+fn queue_depth_gauge_matches_admission_accounting() {
+    let cfg = preset("tiny_p2", Parallelism::Phantom).unwrap();
+    let exec = ExecServer::for_run(&cfg).unwrap();
+    let mut server = Server::start(&cfg, tiny_scfg(), &exec).unwrap();
+    let n = server.n();
+    let mut rng = Prng::new(0x9A6E);
+
+    let mut admitted = 0u64;
+    let mut shed = 0u64;
+    for i in 1..=64u64 {
+        // Tight spacing keeps the queue saturated so both admissions and
+        // rejections occur.
+        let t = 1e-7 * i as f64;
+        match server.try_submit(t, Tensor::randn(&[n], 1.0, &mut rng)).unwrap() {
+            Admission::Accepted(_) => admitted += 1,
+            Admission::Rejected => shed += 1,
+        }
+        let m = server.metrics();
+        assert_eq!(
+            m.get("queue_depth"),
+            Some(server.queued() as f64),
+            "gauge must track the pending queue after every submission"
+        );
+        assert_eq!(m.get("admitted"), Some(admitted as f64));
+        if shed > 0 {
+            assert_eq!(m.get("shed"), Some(shed as f64));
+        }
+    }
+    assert!(shed > 0, "the flood must shed on queue_depth 4");
+    let (responses, stats, _) = server.finish().unwrap();
+    assert_eq!(stats.admitted, admitted);
+    assert_eq!(stats.rejected, shed);
+    assert_eq!(responses.len() as u64, admitted);
+}

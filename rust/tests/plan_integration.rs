@@ -108,6 +108,32 @@ fn serve_objective_prices_and_plans() {
 }
 
 #[test]
+fn serve_objective_ranking_holds_when_measured() {
+    // ROADMAP item 1 leftover: only the train objective was ever
+    // measured-ranked. Run the serve objective's predicted-best and
+    // predicted-worst cells through the real serving stack (pool +
+    // batcher + loadgen) and demand the predicted order survives
+    // measurement — the same gate the CI plan smoke now applies.
+    let calib = fixture_calibration();
+    let mut space = small_space();
+    space.linger_choices_s = vec![0.0, 2e-3];
+    let report = plan(&space, Objective::ServeJPerQuery, None, &calib).unwrap();
+    assert!(report.feasible_count() >= 3);
+
+    let opts = ValidateOptions { queries: 64, ..Default::default() };
+    let verdict = validate(&report, &space, &opts).unwrap();
+    assert!(verdict.best.measured_j > 0.0 && verdict.worst.measured_j > 0.0);
+    assert!(
+        verdict.ranking_holds,
+        "predicted-best {} measured {} J/query must beat predicted-worst {} measured {} J/query",
+        verdict.best.cell.label(),
+        verdict.best.measured_j,
+        verdict.worst.cell.label(),
+        verdict.worst.measured_j
+    );
+}
+
+#[test]
 fn committed_fixture_round_trips_the_stamped_constants() {
     // The fixture's rows are stamped from the frontier constants (see
     // ci/bench_seed/README.md), so the fit must give them back.

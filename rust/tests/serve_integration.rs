@@ -107,6 +107,57 @@ fn tp_serving_is_batching_invariant() {
 }
 
 #[test]
+fn live_metrics_latency_agrees_with_load_report_under_backpressure() {
+    // Regression (latency accounting): the live `latency_s` histogram used
+    // to be fed `done_s - arrival_s` with the *post-backpressure* admission
+    // time, while the load report measured from the client's original
+    // intent — so whenever submissions blocked, `Server::metrics()`
+    // under-reported p50/p99 and the two surfaces disagreed. Saturate a
+    // tiny queue so nearly every submission blocks, then assert the views
+    // agree exactly (both use the same interpolating percentile over the
+    // same client-intent samples).
+    let cfg = preset("tiny_p2", Parallelism::Phantom).unwrap();
+    let exec = ExecServer::for_run(&cfg).unwrap();
+    let scfg = ServeConfig {
+        queue_depth: 4,
+        max_batch: 4,
+        linger_s: 1e-4,
+        mode: Parallelism::Phantom,
+    };
+    // Offered rate far beyond service capacity: the closed-loop stream
+    // must block for queue slots almost immediately and stay blocked.
+    let lcfg = LoadGenConfig { queries: 200, rate_qps: 1.0e6, seed: 0xBAC4, open_loop: false };
+    let r = run_load(&cfg, &scfg, &lcfg, &exec).unwrap();
+
+    assert_eq!(r.completed, 200, "blocking mode drops nothing");
+    assert!(r.blocked > 0, "the run must actually exercise backpressure");
+
+    let live_p50 = r.live.get("latency_s_p50").unwrap();
+    let live_p99 = r.live.get("latency_s_p99").unwrap();
+    assert_eq!(
+        live_p50, r.latency.p50,
+        "live latency p50 must equal the load report's (client-intent basis)"
+    );
+    assert_eq!(
+        live_p99, r.latency.p99,
+        "live latency p99 must equal the load report's (client-intent basis)"
+    );
+    assert_eq!(r.live.get("latency_s_count"), Some(r.completed as f64));
+
+    // Queue wait is its own surface, and under heavy blocking the
+    // client-intent latency strictly dominates the post-admission wait.
+    let live_wait_p50 = r.live.get("queue_wait_s_p50").unwrap();
+    assert_eq!(live_wait_p50, r.queue_wait.p50);
+    assert!(
+        r.latency.p50 > r.queue_wait.p50,
+        "blocked intents must stretch latency beyond queue wait: latency p50 {} vs wait p50 {}",
+        r.latency.p50,
+        r.queue_wait.p50
+    );
+    assert_eq!(r.live.get("blocked"), Some(r.blocked as f64));
+}
+
+#[test]
 fn small_preset_load_run_pp_beats_tp_energy_and_records_trajectory() {
     let queries = 256usize;
     let lcfg = LoadGenConfig { queries, rate_qps: 2_000.0, seed: 0x5E47E, open_loop: false };
