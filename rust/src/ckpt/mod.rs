@@ -414,7 +414,10 @@ fn append_opt_records<'a>(
             for (i, t) in velocity.iter().enumerate() {
                 records.push((format!("opt.v.{i}"), t));
             }
-            vec![("opt", Json::str("momentum"))]
+            vec![
+                ("opt", Json::str("momentum")),
+                ("opt_params", Json::int(velocity.len() as i64)),
+            ]
         }
         Some(OptimizerState::Adam { t, m, v }) => {
             for (i, x) in m.iter().enumerate() {
@@ -423,7 +426,11 @@ fn append_opt_records<'a>(
             for (i, x) in v.iter().enumerate() {
                 records.push((format!("opt.v.{i}"), x));
             }
-            vec![("opt", Json::str("adam")), ("opt_t", Json::int(*t as i64))]
+            vec![
+                ("opt", Json::str("adam")),
+                ("opt_t", Json::int(*t as i64)),
+                ("opt_params", Json::int(m.len() as i64)),
+            ]
         }
     }
 }
@@ -438,6 +445,10 @@ struct ShardEntry {
     /// Adam step count; required (not defaulted) when `opt == "adam"` so a
     /// damaged manifest fails the load instead of silently resetting t.
     opt_t: Option<u64>,
+    /// Moment tensors per moment array. Defaults to the mode-derived
+    /// per-parameter count (4·layers PP / 2·layers TP) when absent —
+    /// ZeRO-sharded states carry exactly 1 flat slice tensor instead.
+    opt_params: Option<usize>,
 }
 
 fn load_manifest(dir: &Path) -> Result<(RunConfig, TrainProgress, Vec<ShardEntry>)> {
@@ -477,6 +488,7 @@ fn load_manifest(dir: &Path) -> Result<(RunConfig, TrainProgress, Vec<ShardEntry
             fnv: io::u64_from_hex(e.get("fnv").as_str().context("shard fnv")?)?,
             opt: e.get("opt").as_str().unwrap_or("none").to_string(),
             opt_t: e.get("opt_t").as_i64().map(|v| v as u64),
+            opt_params: e.get("opt_params").as_i64().map(|v| v as usize),
         });
     }
     Ok((config, progress, entries))
@@ -534,10 +546,10 @@ fn load_shard(dir: &Path, config: &RunConfig, e: &ShardEntry) -> Result<RankShar
             })
         }
     };
-    let n_params = match &params {
+    let n_params = e.opt_params.unwrap_or(match &params {
         RankParams::Phantom(_) => 4 * layers,
         RankParams::Tensor(_) => 2 * layers,
-    };
+    });
     let opt = match e.opt.as_str() {
         "none" => None,
         "sgd" => Some(OptimizerState::Sgd),

@@ -29,11 +29,12 @@
 //! to the shard geometry), so re-sharded shards carry `opt: None`; loss
 //! history, iteration count and PRNG state are preserved.
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::config::Parallelism;
 use crate::model::{assemble_tp_dense, PhantomRankParams, TpRankParams};
 use crate::tensor::Tensor;
+use crate::train::OptimizerState;
 
 use super::{RankParams, RankShard, Snapshot};
 
@@ -112,6 +113,11 @@ pub fn reshard(src: &Snapshot, target_p: usize, target_mode: Parallelism) -> Res
 /// replica is dropped, so a torn or diverged hybrid snapshot is rejected
 /// instead of silently resharding one replica's view. Optimizer moments of
 /// replica 0 are kept — the collapse does not change the shard geometry.
+/// ZeRO-sharded snapshots (`train.sharded_state`) hold each replica's
+/// owned optimizer slice only; the collapse concatenates the slices in
+/// DP-rank order and unflattens them back to full per-parameter moments,
+/// so the collapsed (dp = 1) snapshot resumes bit-identically as a flat
+/// run.
 pub fn collapse_dp(src: &Snapshot) -> Result<Snapshot> {
     src.validate()?;
     collapse_validated(src)
@@ -139,11 +145,35 @@ fn collapse_validated(src: &Snapshot) -> Result<Snapshot> {
     }
     let mut config = src.config.clone();
     config.dp = 1;
-    Ok(Snapshot {
-        config,
-        progress: src.progress.clone(),
-        shards: src.shards[..p].to_vec(),
-    })
+    let mut shards = src.shards[..p].to_vec();
+    // ZeRO-1: each replica's shard holds only its owned flat optimizer
+    // slice. Gather the slices of every model rank in DP-rank order and
+    // unflatten them back to full per-parameter moments, so the collapsed
+    // snapshot carries exactly the state a flat dp=1 run would have.
+    if config.train.sharded_state {
+        for (r, shard) in shards.iter_mut().enumerate() {
+            let parts: Vec<&OptimizerState> = (0..dp)
+                .filter_map(|d| src.shards[d * p + r].opt.as_ref())
+                .collect();
+            if parts.is_empty() {
+                continue; // fresh optimizer everywhere: nothing to merge
+            }
+            if parts.len() != dp {
+                bail!(
+                    "hybrid snapshot: model rank {r} has {} of {dp} sharded optimizer \
+                     slices (the snapshot is torn)",
+                    parts.len()
+                );
+            }
+            let shapes: Vec<Vec<usize>> =
+                shard.params.named().iter().map(|(_, t)| t.shape().to_vec()).collect();
+            shard.opt = Some(
+                OptimizerState::concat_sharded(&parts, &shapes)
+                    .with_context(|| format!("merging model rank {r}'s optimizer slices"))?,
+            );
+        }
+    }
+    Ok(Snapshot { config, progress: src.progress.clone(), shards })
 }
 
 /// Bitwise tensor-by-tensor equality of two rank param sets (f32 compared

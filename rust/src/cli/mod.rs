@@ -92,6 +92,16 @@ COMMANDS:
                                           shards the batch by replica, adds one
                                           DP gradient all-reduce per iteration,
                                           accounted as its own energy bucket)
+                   --micro <M>            micro-batches per iteration (PP) [1]
+                   --schedule <sync|1f1b> micro-batch schedule (PP) [sync]
+                                          (1f1b interleaves fwd/bwd and hides
+                                          boundary-collective wire time behind
+                                          the next chunk's compute)
+                   --sharded              ZeRO-1: shard optimizer state across
+                                          the DP group (reduce-scatter grads,
+                                          step the owned slice, all-gather);
+                                          bit-identical losses, ~1/dp per-rank
+                                          optimizer-state floats
                    --backend <native|xla> compute backend         [native]
                                           (native = pure-Rust fused kernels,
                                            no artifacts needed; xla = PJRT
@@ -108,9 +118,22 @@ COMMANDS:
                                           (both --ckpt-* flags go together)
                    --resume <dir>         continue from a snapshot directory
                                           (bit-identical loss trajectory; the
-                                          snapshot fixes preset/mode/optimizer,
-                                          only --iters/--target-loss/--ckpt-*
-                                          may be combined)
+                                          snapshot fixes preset/mode/schedule/
+                                          sharding/optimizer, only --iters/
+                                          --target-loss/--ckpt-* may be
+                                          combined)
+    pipeline     Schedule/sharding bench: sync vs 1f1b, flat vs ZeRO-sharded
+                   --preset <name>        artifact preset          [tiny]
+                   --iters <N>            iterations per arm       [8]
+                   --micro <M>            micro-batches per iteration
+                                          [min(batch, 4)]
+                   --dp <N>               replicas for the sharded arm [2]
+                   --seed <n>             data/init seed
+                   --out <file.json>      bench records [BENCH_pipeline.json]
+                                          (J/step, bubble fraction, opt-state
+                                          floats per arm; verdicts
+                                          bubble_reduced, schedule_bitwise,
+                                          sharded_bitwise)
     experiment   Regenerate a paper table/figure
                    <id|all>               fig5a fig5b fig5c fig6 fig7a fig7b
                                           fig7c table1 table3

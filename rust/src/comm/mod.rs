@@ -623,6 +623,37 @@ impl Endpoint {
         max_arrival: f64,
     ) {
         let wire_s = self.profile.time(collective, msg_floats, self.p);
+        if ledger.defer_armed() {
+            // Overlapped (1F1B) collective: the rendezvous wait is real —
+            // peers must still arrive, so clocks stay aligned — but the
+            // wire time is parked on the ledger's overlap register, where
+            // subsequent compute drains it concurrently and the scheduler
+            // charges only the un-hidden remainder (`drain_deferred`).
+            // Traffic stats below still record the full wire time: the
+            // bytes move either way, hidden or not.
+            if ledger.traced() {
+                let seq = self.collective_seq.wrapping_sub(1) as i64;
+                let (wait_cat, wire_cat) = self.span_cats();
+                if max_arrival > ledger.now_s {
+                    ledger.span_begin(wait_cat, op);
+                    ledger.sync_to(max_arrival);
+                    ledger.span_end_with(|| vec![("seq", crate::obs::Arg::I(seq))]);
+                }
+                ledger.trace_event(wire_cat, op, || {
+                    vec![
+                        ("seq", crate::obs::Arg::I(seq)),
+                        ("deferred_wire_s", crate::obs::Arg::F(wire_s)),
+                        ("floats", crate::obs::Arg::I(msg_floats as i64)),
+                    ]
+                });
+            } else {
+                ledger.sync_to(max_arrival);
+            }
+            ledger.defer_comm(wire_s);
+            self.stats.floats_moved += msg_floats as u64;
+            self.stats.comm_s += wire_s;
+            return;
+        }
         if ledger.traced() {
             // fault_gate already ticked the counter for this collective.
             let seq = self.collective_seq.wrapping_sub(1) as i64;
@@ -657,13 +688,32 @@ impl Endpoint {
     /// All-Gather: every rank contributes `t`; every rank receives the
     /// rank-ordered stack `[p, ...t.shape]`. Message size m = numel(t).
     pub fn all_gather(&mut self, t: Tensor, ledger: &mut EnergyLedger) -> Result<Tensor> {
-        self.fault_gate("all_gather", ledger)?;
+        self.all_gather_op("all_gather", t, ledger)
+    }
+
+    /// The ZeRO parameter All-Gather on a data-parallel group: identical
+    /// rendezvous and stacking semantics to `all_gather`, under a distinct
+    /// op tag (like `dp_all_reduce`) so SPMD mismatch checks and fault
+    /// schedules can tell the sharded-optimizer traffic apart from
+    /// model-parallel collectives. Wire time lands in the DpComm bucket
+    /// when used on a DP-group endpoint.
+    pub fn dp_all_gather(&mut self, t: Tensor, ledger: &mut EnergyLedger) -> Result<Tensor> {
+        self.all_gather_op("dp_all_gather", t, ledger)
+    }
+
+    fn all_gather_op(
+        &mut self,
+        op: &'static str,
+        t: Tensor,
+        ledger: &mut EnergyLedger,
+    ) -> Result<Tensor> {
+        self.fault_gate(op, ledger)?;
         let m = t.numel();
-        let (result, max_arrival) = self.exchange("all_gather", t, ledger.now_s, |parts| {
+        let (result, max_arrival) = self.exchange(op, t, ledger.now_s, |parts| {
             let stacked = Tensor::stack(&parts)?;
             Ok(vec![stacked; parts_len(&parts)])
         })?;
-        self.charge(ledger, "all_gather", Collective::AllGather, m, max_arrival);
+        self.charge(ledger, op, Collective::AllGather, m, max_arrival);
         self.stats.all_gathers += 1;
         Ok(result)
     }
@@ -671,16 +721,35 @@ impl Endpoint {
     /// Reduce-Scatter: every rank contributes `[p, ...]`; slot j is summed
     /// across ranks and delivered to rank j. Message size m = slot numel.
     pub fn reduce_scatter(&mut self, t: Tensor, ledger: &mut EnergyLedger) -> Result<Tensor> {
-        self.fault_gate("reduce_scatter", ledger)?;
+        self.reduce_scatter_op("reduce_scatter", t, ledger)
+    }
+
+    /// The ZeRO gradient Reduce-Scatter on a data-parallel group: identical
+    /// rendezvous and rank-ordered summation semantics to `reduce_scatter`
+    /// — and therefore the same bitwise fold order as `dp_all_reduce`,
+    /// which is what makes the sharded optimizer update bit-identical to
+    /// the flat path — under a distinct op tag for SPMD checks and fault
+    /// schedules.
+    pub fn dp_reduce_scatter(&mut self, t: Tensor, ledger: &mut EnergyLedger) -> Result<Tensor> {
+        self.reduce_scatter_op("dp_reduce_scatter", t, ledger)
+    }
+
+    fn reduce_scatter_op(
+        &mut self,
+        op: &'static str,
+        t: Tensor,
+        ledger: &mut EnergyLedger,
+    ) -> Result<Tensor> {
+        self.fault_gate(op, ledger)?;
         let p = self.p;
         if t.shape().first() != Some(&p) {
             return Err(anyhow!(
-                "reduce_scatter input must have leading dim p={p}, got {:?}",
+                "{op} input must have leading dim p={p}, got {:?}",
                 t.shape()
             ));
         }
         let m = t.numel() / p;
-        let (result, max_arrival) = self.exchange("reduce_scatter", t, ledger.now_s, |parts| {
+        let (result, max_arrival) = self.exchange(op, t, ledger.now_s, |parts| {
             let mut out = Vec::with_capacity(p);
             for j in 0..p {
                 let mut acc = parts[0].unstack_at(j);
@@ -691,7 +760,7 @@ impl Endpoint {
             }
             Ok(out)
         })?;
-        self.charge(ledger, "reduce_scatter", Collective::ReduceScatter, m, max_arrival);
+        self.charge(ledger, op, Collective::ReduceScatter, m, max_arrival);
         self.stats.reduce_scatters += 1;
         Ok(result)
     }

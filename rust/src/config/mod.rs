@@ -118,6 +118,43 @@ impl OptimizerConfig {
     }
 }
 
+/// Micro-batch schedule of the PP training loop (DESIGN.md §15).
+///
+/// Both schedules split the rank's batch shard into `micro` contiguous
+/// row chunks, complete every chunk's backward in chunk order, and
+/// accumulate gradients in chunk order — so the two are bit-identical at
+/// equal `micro` and differ only in *when* collectives overlap compute in
+/// virtual time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Schedule {
+    /// Each micro-batch runs forward + backward to completion before the
+    /// next starts; every collective's wire time is exposed.
+    Sync,
+    /// Interleaved one-forward-one-backward: warmup forwards fill the
+    /// pipeline, steady-state alternates backward/forward, cooldown drains
+    /// — boundary collectives of in-flight micro-batches defer their wire
+    /// time onto the ledger's overlap register, where the next chunk's
+    /// compute hides it.
+    OneFOneB,
+}
+
+impl Schedule {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Schedule::Sync => "sync",
+            Schedule::OneFOneB => "1f1b",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Schedule> {
+        match s {
+            "sync" => Ok(Schedule::Sync),
+            "1f1b" => Ok(Schedule::OneFOneB),
+            other => bail!("unknown schedule '{other}' (sync | 1f1b)"),
+        }
+    }
+}
+
 /// Training-loop configuration.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct TrainConfig {
@@ -134,6 +171,20 @@ pub struct TrainConfig {
     /// Size of the fixed dataset in batches; iteration i trains on batch
     /// i % dataset_batches (the paper keeps the dataset fixed).
     pub dataset_batches: usize,
+    /// Micro-batches per iteration (PP only; 1 = the pre-pipeline loop,
+    /// byte-identical to it). NOTE: micro > 1 splits each GEMM into
+    /// per-chunk GEMMs, which changes f32 summation order — trajectories
+    /// at different `micro` are numerically close but not bitwise equal.
+    pub micro: usize,
+    /// Micro-batch schedule (PP only; irrelevant at micro = 1, where both
+    /// schedules price identically).
+    pub schedule: Schedule,
+    /// ZeRO-1: shard optimizer state across the DP group — reduce-scatter
+    /// the flat gradient, update only the owned parameter slice, all-gather
+    /// the updated slices. Bit-identical to the flat path (the DP
+    /// reduce-scatter folds in the same rank order as the all-reduce);
+    /// per-rank optimizer-state floats drop to ~1/dp. No-op at dp = 1.
+    pub sharded_state: bool,
 }
 
 impl Default for TrainConfig {
@@ -146,6 +197,9 @@ impl Default for TrainConfig {
             target_loss: None,
             warmup_iters: 1,
             dataset_batches: 16,
+            micro: 1,
+            schedule: Schedule::Sync,
+            sharded_state: false,
         }
     }
 }
@@ -331,6 +385,31 @@ impl RunConfig {
                 self.dp
             );
         }
+        if self.train.micro == 0 {
+            bail!("micro must be positive (1 = no micro-batching)");
+        }
+        if self.mode == Parallelism::Tensor
+            && (self.train.micro != 1 || self.train.schedule != Schedule::Sync)
+        {
+            bail!(
+                "micro-batch pipelining (micro={}, schedule={}) is a PP schedule; \
+                 TP runs take micro=1, schedule=sync",
+                self.train.micro,
+                self.train.schedule.name()
+            );
+        }
+        // The smallest DP replica shard carries floor(batch/dp) rows; every
+        // micro-batch chunk needs at least one of them.
+        if self.train.micro > self.train.batch / self.dp {
+            bail!(
+                "micro={} exceeds the {} rows of the smallest DP replica shard \
+                 (batch={} over dp={})",
+                self.train.micro,
+                self.train.batch / self.dp,
+                self.train.batch,
+                self.dp
+            );
+        }
         if matches!(self.hardware.compute, ComputeModel::Measured) && self.artifact.is_none() {
             bail!("measured compute requires an artifact config name");
         }
@@ -380,6 +459,9 @@ impl RunConfig {
             ),
             ("warmup_iters", Json::int(self.train.warmup_iters as i64)),
             ("dataset_batches", Json::int(self.train.dataset_batches as i64)),
+            ("micro", Json::int(self.train.micro as i64)),
+            ("schedule", Json::str(self.train.schedule.name())),
+            ("sharded_state", Json::Bool(self.train.sharded_state)),
             ("compute", compute),
             (
                 "artifact",
@@ -454,6 +536,14 @@ impl RunConfig {
                 target_loss: j.get("target_loss").as_f64(),
                 warmup_iters: j.get("warmup_iters").as_usize().unwrap_or(1),
                 dataset_batches: j.get("dataset_batches").as_usize().unwrap_or(16),
+                // Pre-pipeline configs/snapshots lack the schedule fields:
+                // default to the exact pre-pipeline behavior.
+                micro: j.get("micro").as_usize().unwrap_or(1),
+                schedule: match j.get("schedule").as_str() {
+                    Some(s) => Schedule::parse(s)?,
+                    None => Schedule::Sync,
+                },
+                sharded_state: j.get("sharded_state").as_bool().unwrap_or(false),
             },
             hardware,
             artifact: j.get("artifact").as_str().map(|s| s.to_string()),

@@ -46,6 +46,9 @@ pub struct RankReport {
     pub warm_t: f64,
     /// Energy over the post-warmup training phase only.
     pub energy_train_j: f64,
+    /// Floats of optimizer state held on this rank at the end of the run
+    /// (ZeRO-1 sharding drops this to ~1/dp of the flat baseline).
+    pub opt_state_floats: usize,
     /// Span timeline + interval snapshot when the run was traced
     /// (`TrainOptions::trace`); `None` otherwise.
     pub trace: Option<crate::obs::TraceCapture>,
@@ -497,6 +500,25 @@ fn check_resume_compat(cfg: &RunConfig, snap: &Snapshot) -> Result<()> {
             cfg.train.optimizer
         );
     }
+    // The schedule shapes the math (micro-batch row chunking changes the
+    // f32 summation order) and sharding shapes the optimizer-state layout
+    // each shard persists, so a bit-identical continuation needs all
+    // three to match.
+    if sc.train.micro != cfg.train.micro
+        || sc.train.schedule != cfg.train.schedule
+        || sc.train.sharded_state != cfg.train.sharded_state
+    {
+        bail!(
+            "resume schedule (micro={}, schedule={}, sharded_state={}) does not match run \
+             (micro={}, schedule={}, sharded_state={})",
+            sc.train.micro,
+            sc.train.schedule.name(),
+            sc.train.sharded_state,
+            cfg.train.micro,
+            cfg.train.schedule.name(),
+            cfg.train.sharded_state
+        );
+    }
     Ok(())
 }
 
@@ -609,6 +631,10 @@ fn run_rank(ctx: RankCtx<'_>) -> Result<RankReport> {
         Some(shard) => (Some(shard.params), shard.opt),
         None => (None, None),
     };
+    // ZeRO-1: with sharded_state on a dp > 1 grid, each replica's
+    // optimizer is laid out for its owned flat parameter slice
+    // (ceil(total/dp) floats) instead of the full parameter list.
+    let sharded = cfg.train.sharded_state && cfg.dp > 1;
     let mut worker = match cfg.mode {
         Parallelism::Phantom => {
             let params = match resume_params {
@@ -616,14 +642,27 @@ fn run_rank(ctx: RankCtx<'_>) -> Result<RankReport> {
                 Some(RankParams::Tensor(_)) => bail!("resume shard is TP but the run is PP"),
                 None => PhantomRankParams::init(&cfg.model, cfg.p, model_rank, cfg.train.seed)?,
             };
-            Worker::Pp(PhantomRank::with_state(
+            let sharded_slot = sharded.then(|| {
+                let total: usize = super::rank_pp::param_shapes(&params)
+                    .iter()
+                    .map(|s| s.iter().product::<usize>())
+                    .sum();
+                super::zero::slot_len(total, cfg.dp)
+            });
+            let mut w = PhantomRank::with_state(
                 params,
                 artifact,
                 cfg.train.optimizer,
                 resume_opt,
                 exec,
                 ep,
-            )?)
+                sharded_slot,
+            )?;
+            w.set_schedule(
+                cfg.train.micro,
+                cfg.train.schedule == crate::config::Schedule::OneFOneB,
+            );
+            Worker::Pp(w)
         }
         Parallelism::Tensor => {
             let params = match resume_params {
@@ -631,6 +670,15 @@ fn run_rank(ctx: RankCtx<'_>) -> Result<RankReport> {
                 Some(RankParams::Phantom(_)) => bail!("resume shard is PP but the run is TP"),
                 None => TpRankParams::init(&cfg.model, cfg.p, model_rank, cfg.train.seed)?,
             };
+            let sharded_slot = sharded.then(|| {
+                let total: usize = params
+                    .weights
+                    .iter()
+                    .chain(params.biases.iter())
+                    .map(|t| t.numel())
+                    .sum();
+                super::zero::slot_len(total, cfg.dp)
+            });
             Worker::Tp(TensorRank::with_state(
                 params,
                 artifact,
@@ -638,6 +686,7 @@ fn run_rank(ctx: RankCtx<'_>) -> Result<RankReport> {
                 resume_opt,
                 exec,
                 ep,
+                sharded_slot,
             )?)
         }
     };
@@ -705,6 +754,10 @@ fn run_rank(ctx: RankCtx<'_>) -> Result<RankReport> {
 
     // Normal completion: nothing to wake — every DP peer stops too.
     dp_guard.poisoner = None;
+    let opt_state_floats = match &worker {
+        Worker::Pp(w) => w.opt_state_floats(),
+        Worker::Tp(w) => w.opt_state_floats(),
+    };
     let (mut ledger, stats, dp_stats) = match worker {
         Worker::Pp(w) => (w.ledger, w.ep.stats, w.dp_ep.map(|e| e.stats).unwrap_or_default()),
         Worker::Tp(w) => (w.ledger, w.ep.stats, w.dp_ep.map(|e| e.stats).unwrap_or_default()),
@@ -719,6 +772,7 @@ fn run_rank(ctx: RankCtx<'_>) -> Result<RankReport> {
         dp_stats,
         warm_t,
         energy_train_j,
+        opt_state_floats,
         trace,
     })
 }

@@ -84,6 +84,162 @@ pub(crate) fn dp_all_reduce_grads(
     Ok(())
 }
 
+/// ZeRO-1 flat-slice algebra (DESIGN.md §15): the helpers that carve a
+/// rank's parameter/gradient list into the dp-rank-owned slices the
+/// sharded optimizer path reduce-scatters, updates, and all-gathers.
+///
+/// The layout is the same flat concatenation `dp_all_reduce_grads` uses,
+/// zero-padded to `dp * slot` and viewed as `[dp, slot]`: replica d owns
+/// flat range `[d*slot, (d+1)*slot)`. Because the fabric's Reduce-Scatter
+/// sums slot j across ranks in the SAME rank order as All-Reduce sums the
+/// whole payload, the owned slice of a reduce-scattered gradient is
+/// bitwise equal to the matching slice of the all-reduced gradient — which
+/// is what makes the sharded optimizer update bit-identical to the flat
+/// path (the optimizers are elementwise with a fixed scalar order, and the
+/// zero pad is inert under all of them).
+///
+/// Public (not pub(crate)) so `tests/fabric_props.rs` can drive the ragged
+/// tiling and round-trip properties directly.
+pub mod zero {
+    use crate::tensor::Tensor;
+
+    /// Owned slice length per replica: `ceil(total / dp)` (the last
+    /// replica's tail is zero padding when `dp` does not divide `total`).
+    pub fn slot_len(total: usize, dp: usize) -> usize {
+        assert!(dp >= 1);
+        total.div_ceil(dp)
+    }
+
+    /// Flatten a tensor list into one contiguous `[total]` payload
+    /// (the `dp_all_reduce_grads` concatenation order).
+    pub fn flatten(tensors: &[Tensor]) -> Tensor {
+        let total: usize = tensors.iter().map(|t| t.numel()).sum();
+        let mut flat = Tensor::zeros(&[total]);
+        let mut off = 0;
+        for t in tensors {
+            flat.data_mut()[off..off + t.numel()].copy_from_slice(t.data());
+            off += t.numel();
+        }
+        flat
+    }
+
+    /// View a flat `[total]` payload as the `[dp, slot]` stack the fabric's
+    /// Reduce-Scatter consumes, zero-padding the tail.
+    pub fn pad_stack(flat: &Tensor, dp: usize) -> Tensor {
+        let total = flat.numel();
+        let slot = slot_len(total, dp);
+        let mut stacked = Tensor::zeros(&[dp, slot]);
+        stacked.data_mut()[..total].copy_from_slice(flat.data());
+        stacked
+    }
+
+    /// Scatter a flat payload back into the tensor list it was flattened
+    /// from (inverse of `flatten`; `flat` may carry trailing padding).
+    pub fn unflatten_into(flat: &Tensor, tensors: &mut [&mut Tensor]) {
+        let mut off = 0;
+        for t in tensors.iter_mut() {
+            let n = t.numel();
+            t.data_mut().copy_from_slice(&flat.data()[off..off + n]);
+            off += n;
+        }
+        debug_assert!(off <= flat.numel());
+    }
+
+    /// Copy the `[start, start+len)` window of the flat view of `tensors`
+    /// into an owned `[len]` tensor, zero-padding past the end — the
+    /// replica's owned parameter slice the sharded optimizer steps on.
+    pub fn read_slice(tensors: &[&mut Tensor], start: usize, len: usize) -> Tensor {
+        let mut out = Tensor::zeros(&[len]);
+        let mut off = 0usize; // flat offset of the current tensor
+        for t in tensors.iter() {
+            let n = t.numel();
+            let lo = start.max(off);
+            let hi = (start + len).min(off + n);
+            if lo < hi {
+                out.data_mut()[lo - start..hi - start]
+                    .copy_from_slice(&t.data()[lo - off..hi - off]);
+            }
+            off += n;
+        }
+        out
+    }
+}
+
+/// The end-of-iteration tail shared by both rank loops: DP gradient
+/// synchronization followed by the optimizer step, with the step's real
+/// wall time charged to the virtual clock as busy compute.
+///
+/// * Flat path (`sharded_slot == None`, or no DP group): the PR 5
+///   schedule, byte-identical — one flat `dp_all_reduce`, then the full
+///   optimizer step on every replica.
+/// * ZeRO-1 path (`sharded_slot == Some(slot)`, DP group of size > 1):
+///   Reduce-Scatter the flat gradient (each replica receives the summed
+///   gradient for its owned slice only), step a slice-sized optimizer on
+///   an owned copy of the parameter slice, then All-Gather the updated
+///   slices and scatter the full parameter vector back. Optimizer moments
+///   exist only for the owned slice (~1/dp of the flat footprint); both
+///   collectives are charged to the DpComm bucket by the DP endpoint.
+pub(crate) fn dp_sync_and_step(
+    dp_ep: &mut Option<Endpoint>,
+    sharded_slot: Option<usize>,
+    opt: &mut crate::train::Optimizer,
+    params: &mut [&mut Tensor],
+    mut grad_list: Vec<Tensor>,
+    ledger: &mut EnergyLedger,
+) -> Result<()> {
+    let sharded = match (dp_ep.as_ref(), sharded_slot) {
+        (Some(dp), Some(_)) if dp.p > 1 => true,
+        _ => false,
+    };
+    if !sharded {
+        if let Some(dp) = dp_ep.as_mut() {
+            dp_all_reduce_grads(dp, &mut grad_list, ledger)?;
+        }
+        ledger.span_begin("opt", "opt step");
+        let t0 = std::time::Instant::now();
+        opt.step(params, &grad_list);
+        let opt_s = t0.elapsed().as_secs_f64();
+        ledger.advance(opt_s, Activity::Compute);
+        ledger.span_end_with(|| vec![("wall_s", crate::obs::Arg::F(opt_s))]);
+        for g in grad_list {
+            g.recycle(); // dead gradients feed the next iteration's kernels
+        }
+        return Ok(());
+    }
+    let dp = dp_ep.as_mut().expect("sharded implies a DP group");
+    let slot = sharded_slot.expect("sharded implies a slot length");
+    let d = dp.rank;
+    debug_assert_eq!(slot, zero::slot_len(params.iter().map(|t| t.numel()).sum(), dp.p));
+
+    // Reduce-Scatter the flat gradient: replica d receives the summed
+    // gradient for its owned slice, in the all-reduce fold order.
+    let flat = zero::flatten(&grad_list);
+    for g in grad_list {
+        g.recycle();
+    }
+    let total = flat.numel();
+    let own_grad = dp.dp_reduce_scatter(zero::pad_stack(&flat, dp.p), ledger)?;
+    flat.recycle();
+
+    // Slice-local optimizer step on an owned copy of the parameter slice.
+    let mut own_params = zero::read_slice(params, d * slot, slot);
+    ledger.span_begin("opt", "opt step");
+    let t0 = std::time::Instant::now();
+    opt.step(&mut [&mut own_params], std::slice::from_ref(&own_grad));
+    let opt_s = t0.elapsed().as_secs_f64();
+    ledger.advance(opt_s, Activity::Compute);
+    ledger.span_end_with(|| vec![("wall_s", crate::obs::Arg::F(opt_s))]);
+
+    // All-Gather the updated slices and write the full vector back.
+    let gathered = dp.dp_all_gather(own_params, ledger)?;
+    debug_assert_eq!(gathered.numel(), dp.p * slot);
+    debug_assert!(gathered.numel() >= total);
+    zero::unflatten_into(&gathered, params);
+    own_grad.recycle();
+    gathered.recycle();
+    Ok(())
+}
+
 /// Shared helper: execute a compute segment and charge its wall time to the
 /// rank's virtual clock as busy (dynamic-power) time. Inputs are borrowed —
 /// weights and activations are never cloned for a call.

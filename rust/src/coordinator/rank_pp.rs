@@ -1,4 +1,27 @@
-//! Phantom-parallel rank worker: one training iteration's phase schedule.
+//! Phantom-parallel rank worker: one training iteration's phase schedule,
+//! generalized over micro-batches and the interleaved 1F1B pipeline
+//! schedule (DESIGN.md §15).
+//!
+//! The batch shard is split into `micro` contiguous row chunks (same
+//! remainder tiling as the DP row split). Two schedules drive the chunks:
+//!
+//! * `sync` (GPipe-style): all forwards in micro order, then all
+//!   backwards in micro order. Every collective is exposed — priced
+//!   exactly like the pre-pipeline schedule.
+//! * `1f1b`: `W = min(p-1, micro)` warmup forwards, then a steady state
+//!   alternating backward(i) / forward(W+i), then cooldown backwards.
+//!   Interior collectives are *overlapped*: their wire time is parked on
+//!   the ledger's deferral register and drained at zero cost by
+//!   subsequent micro-batch compute; only micro 0's forward and the last
+//!   micro's backward collectives (the pipeline-fill/drain boundary,
+//!   which has no compute to hide under) stay exposed, plus whatever
+//!   remainder compute could not cover.
+//!
+//! Both schedules run every forward in micro order and every backward in
+//! micro order with gradient accumulation and the f64 loss sum in micro
+//! order, so they are bitwise identical to each other at equal `micro`.
+//! `micro = 1` is byte-identical to the historical synchronous path (one
+//! chunk = the whole shard, nothing deferred).
 
 use anyhow::{bail, Result};
 
@@ -23,8 +46,22 @@ pub struct PhantomRank {
     /// iteration is byte-identical to the pre-hybrid schedule.
     pub dp_ep: Option<Endpoint>,
     pub ledger: EnergyLedger,
+    /// Micro-batches per iteration (1 = the historical whole-shard path).
+    micro: usize,
+    /// Run the interleaved 1F1B schedule with comm/compute overlap.
+    one_f_one_b: bool,
+    /// ZeRO-1: `Some(slot)` = the optimizer holds state only for this
+    /// replica's owned flat parameter slice of `slot` floats.
+    sharded_slot: Option<usize>,
     /// Iterations completed (names the per-iteration trace spans).
     iter_no: u64,
+}
+
+/// Retained per-micro-batch forward state consumed by its backward.
+struct MicroStash {
+    ys: Vec<Tensor>,
+    zs: Vec<Tensor>,
+    g_alls: Vec<Tensor>,
 }
 
 impl PhantomRank {
@@ -35,12 +72,16 @@ impl PhantomRank {
         exec: ExecHandle,
         ep: Endpoint,
     ) -> PhantomRank {
-        Self::with_state(params, artifact, opt_cfg, None, exec, ep)
+        Self::with_state(params, artifact, opt_cfg, None, exec, ep, None)
             .expect("a fresh optimizer always matches its own shapes")
     }
 
     /// Build with a restored optimizer state (checkpoint resume); `None`
-    /// starts a fresh optimizer, identical to `new`.
+    /// starts a fresh optimizer, identical to `new`. With
+    /// `sharded_slot = Some(slot)` the optimizer is laid out for the
+    /// replica's owned flat parameter slice (one `[slot]` moment per
+    /// tensor) instead of the full parameter list — the ZeRO-1 mode; any
+    /// restored state must match that layout.
     pub fn with_state(
         params: PhantomRankParams,
         artifact: String,
@@ -48,22 +89,54 @@ impl PhantomRank {
         opt_state: Option<OptimizerState>,
         exec: ExecHandle,
         ep: Endpoint,
+        sharded_slot: Option<usize>,
     ) -> Result<PhantomRank> {
-        let shapes = param_shapes(&params);
+        let shapes = match sharded_slot {
+            Some(slot) => vec![vec![slot]],
+            None => param_shapes(&params),
+        };
         let opt = Optimizer::with_state(opt_cfg, &shapes, opt_state)?;
         let ledger = EnergyLedger::new();
-        Ok(PhantomRank { params, artifact, opt, exec, ep, dp_ep: None, ledger, iter_no: 0 })
+        Ok(PhantomRank {
+            params,
+            artifact,
+            opt,
+            exec,
+            ep,
+            dp_ep: None,
+            ledger,
+            micro: 1,
+            one_f_one_b: false,
+            sharded_slot,
+            iter_no: 0,
+        })
     }
 
     /// Join a data-parallel group: every subsequent iteration ends with
-    /// the DP gradient All-Reduce over `dp_ep` before the optimizer step.
+    /// the DP gradient synchronization over `dp_ep` (flat All-Reduce, or
+    /// the ZeRO Reduce-Scatter/All-Gather pair when sharded) before the
+    /// optimizer step.
     pub fn arm_dp(&mut self, dp_ep: Endpoint) {
         self.dp_ep = Some(dp_ep);
+    }
+
+    /// Configure the micro-batch count and pipeline schedule for all
+    /// subsequent iterations. `micro = 1, one_f_one_b = false` (the
+    /// default) is the historical synchronous whole-shard path.
+    pub fn set_schedule(&mut self, micro: usize, one_f_one_b: bool) {
+        assert!(micro >= 1, "micro-batch count must be at least 1");
+        self.micro = micro;
+        self.one_f_one_b = one_f_one_b;
     }
 
     /// Export the optimizer's accumulated state for checkpointing.
     pub fn opt_state(&self) -> OptimizerState {
         self.opt.state()
+    }
+
+    /// Floats of optimizer state held on this rank (sharded: ~1/dp flat).
+    pub fn opt_state_floats(&self) -> usize {
+        self.opt.state_floats()
     }
 
     /// One forward+backward+update iteration over the local shard.
@@ -74,24 +147,152 @@ impl PhantomRank {
     /// one backend execution — 7 calls per 2-layer iteration instead of 10
     /// (EXPERIMENTS.md §Perf). The collective schedule is unchanged from
     /// the paper's Table II: one k*batch All-Gather per layer forward, one
-    /// k*batch Reduce-Scatter per layer backward.
+    /// k*batch Reduce-Scatter per layer backward — per micro-batch.
     ///
     /// Zero-clone hot path: every backend call borrows its inputs, so no
     /// weight, decompressor, bias or retained activation is copied — only
-    /// the collectives take (and must take) owned payloads.
+    /// the collectives take (and must take) owned payloads, and a
+    /// micro > 1 run copies the row chunks out of the shard once.
     pub fn iteration(&mut self, x_shard: &Tensor, t_shard: &Tensor) -> Result<f64> {
-        let layers = self.params.layers();
-        let rank = self.params.rank;
-
         if self.ledger.traced() {
             let name = format!("iter {}", self.iter_no);
             self.ledger.span_begin("iter", &name);
         }
 
-        // ---- forward ----
+        let rows = x_shard.shape()[0];
+        let micro = self.micro.min(rows).max(1);
+        let overlap = self.one_f_one_b && micro > 1;
+
+        // Row chunks: same remainder tiling as the DP row split, so every
+        // chunk is non-empty and they tile the shard exactly. The loss
+        // kernels scale by the config's global 1/(batch*n) constant, not
+        // the chunk row count, so per-chunk losses and gradients sum to
+        // the whole-shard values exactly.
+        let chunks: Vec<(Tensor, Tensor)> = if micro == 1 {
+            Vec::new() // borrow x_shard/t_shard directly, no copy
+        } else {
+            (0..micro)
+                .map(|i| {
+                    let (start, len) = crate::data::dp_row_range(rows, micro, i);
+                    Ok((
+                        crate::data::row_slice(x_shard, start, len)?,
+                        crate::data::row_slice(t_shard, start, len)?,
+                    ))
+                })
+                .collect::<Result<_>>()?
+        };
+        let mb = |i: usize| -> (&Tensor, &Tensor) {
+            if micro == 1 {
+                (x_shard, t_shard)
+            } else {
+                (&chunks[i].0, &chunks[i].1)
+            }
+        };
+
+        let mut loss_local = 0.0f64;
+        let mut grad_acc: Option<Vec<Tensor>> = None;
+        let mut bwd =
+            |rank: &mut Self, stash: MicroStash, i: usize, expose: bool| -> Result<()> {
+                let (x_mb, t_mb) = if micro == 1 {
+                    (x_shard, t_shard)
+                } else {
+                    (&chunks[i].0, &chunks[i].1)
+                };
+                let (loss, grads) = rank.backward_micro(stash, x_mb, t_mb, expose)?;
+                loss_local += loss;
+                match grad_acc.as_mut() {
+                    None => grad_acc = Some(grads),
+                    Some(acc) => {
+                        for (a, g) in acc.iter_mut().zip(grads) {
+                            a.add_assign(&g);
+                            g.recycle(); // back to the band pool for micro i+1
+                        }
+                    }
+                }
+                Ok(())
+            };
+
+        if !overlap {
+            // Synchronous (GPipe-style): all forwards in micro order, then
+            // all backwards in micro order, every collective exposed.
+            // micro = 1 is byte-identical to the historical path.
+            let mut stashes: Vec<MicroStash> = Vec::with_capacity(micro);
+            for i in 0..micro {
+                stashes.push(self.forward_micro(mb(i).0, true)?);
+            }
+            for (i, stash) in stashes.into_iter().enumerate() {
+                bwd(self, stash, i, true)?;
+            }
+        } else {
+            // 1F1B: warmup fills the pipeline with W forwards, the steady
+            // state drains one backward per new forward, cooldown drains
+            // the rest. Interior collectives defer their wire time onto
+            // the overlap register (micro 0's forward and the last
+            // micro's backward stay exposed — fill and drain have no
+            // neighboring compute to hide under).
+            let w = (self.ep.p - 1).clamp(1, micro);
+            let mut in_flight: std::collections::VecDeque<MicroStash> =
+                std::collections::VecDeque::with_capacity(w);
+            for i in 0..w {
+                in_flight.push_back(self.forward_micro(mb(i).0, i == 0)?);
+            }
+            for i in 0..micro - w {
+                let stash = in_flight.pop_front().expect("warmup filled the queue");
+                bwd(self, stash, i, i == micro - 1)?;
+                in_flight.push_back(self.forward_micro(mb(w + i).0, false)?);
+            }
+            for i in micro - w..micro {
+                let stash = in_flight.pop_front().expect("one stash per micro");
+                bwd(self, stash, i, i == micro - 1)?;
+            }
+            // Un-hidden overlapped wire time: charge the remainder before
+            // the DP sync so the deferral register never leaks across
+            // iterations (and the buckets keep partitioning the clock).
+            self.ledger.drain_deferred(Activity::Communicate);
+        }
+        drop(bwd);
+
+        let grad_list = grad_acc.expect("at least one micro-batch ran");
+
+        // ---- DP gradient sync + optimizer step (rank-local compute) ----
+        // Flat: one All-Reduce then the full step on every replica.
+        // Sharded (ZeRO-1): Reduce-Scatter -> slice step -> All-Gather.
+        {
+            let mut tensors = self.params.named_tensors();
+            let mut refs: Vec<&mut Tensor> =
+                tensors.iter_mut().map(|(_, t)| &mut **t).collect();
+            super::dp_sync_and_step(
+                &mut self.dp_ep,
+                self.sharded_slot,
+                &mut self.opt,
+                &mut refs,
+                grad_list,
+                &mut self.ledger,
+            )?;
+        }
+
+        self.ledger.span_end_with(|| vec![("loss_local", crate::obs::Arg::F(loss_local))]);
+        self.iter_no += 1;
+        Ok(loss_local)
+    }
+
+    /// Forward pass over one micro-batch: pp_fwd_local, then per layer the
+    /// All-Gather + fused combine/local step, stashing the retained
+    /// activations for the matching backward. `expose = false` parks the
+    /// collectives' wire time on the ledger's overlap register.
+    fn forward_micro(&mut self, x_mb: &Tensor, expose: bool) -> Result<MicroStash> {
+        self.ledger.set_defer(!expose);
+        let r = self.forward_micro_inner(x_mb);
+        self.ledger.set_defer(false);
+        r
+    }
+
+    fn forward_micro_inner(&mut self, x_mb: &Tensor) -> Result<MicroStash> {
+        let layers = self.params.layers();
+        let rank = self.params.rank;
         self.ledger.span_begin("phase", "forward");
         // ys[l] = post-activation output of layer l; the layer-l input is
-        // x_shard for l == 0, else ys[l - 1].
+        // x_mb for l == 0, else ys[l - 1].
         let mut ys: Vec<Tensor> = Vec::with_capacity(layers);
         let mut zs: Vec<Tensor> = Vec::with_capacity(layers);
         let mut g_alls: Vec<Tensor> = Vec::with_capacity(layers);
@@ -101,7 +302,7 @@ impl PhantomRank {
             &mut self.ledger,
             &self.artifact,
             "pp_fwd_local",
-            &[x_shard, &self.params.locals[0], &self.params.compressors[0]],
+            &[x_mb, &self.params.locals[0], &self.params.compressors[0]],
         )?;
         let [mut z_loc, g]: [Tensor; 2] = unpack(r.outputs, "pp_fwd_local")?;
         let mut g = Some(g);
@@ -155,9 +356,37 @@ impl PhantomRank {
                 g_alls.push(g_all);
             }
         }
+        self.ledger.span_end(); // forward
+        Ok(MicroStash { ys, zs, g_alls })
+    }
+
+    /// Loss + backward pass over one micro-batch, consuming its forward
+    /// stash. Returns the micro-batch's local loss and its gradient list
+    /// in `param_shapes` order (L*, C*, D*, b*). `expose = false` parks
+    /// the collectives' wire time on the ledger's overlap register.
+    fn backward_micro(
+        &mut self,
+        stash: MicroStash,
+        x_mb: &Tensor,
+        t_mb: &Tensor,
+        expose: bool,
+    ) -> Result<(f64, Vec<Tensor>)> {
+        self.ledger.set_defer(!expose);
+        let r = self.backward_micro_inner(stash, x_mb, t_mb);
+        self.ledger.set_defer(false);
+        r
+    }
+
+    fn backward_micro_inner(
+        &mut self,
+        stash: MicroStash,
+        x_mb: &Tensor,
+        t_mb: &Tensor,
+    ) -> Result<(f64, Vec<Tensor>)> {
+        let layers = self.params.layers();
+        let MicroStash { ys, zs, g_alls } = stash;
 
         // ---- loss + top-layer error compression (fused) ----
-        self.ledger.span_end(); // forward
         self.ledger.span_begin("phase", "loss");
         let r = exec_charged(
             &self.exec,
@@ -167,7 +396,7 @@ impl PhantomRank {
             &[
                 &ys[layers - 1],
                 &zs[layers - 1],
-                t_shard,
+                t_mb,
                 &self.params.decompressors[layers - 1],
             ],
         )?;
@@ -183,7 +412,7 @@ impl PhantomRank {
         let mut grads: Vec<Option<[Tensor; 4]>> = (0..layers).map(|_| None).collect();
         for l in (0..layers).rev() {
             // The layer-l input activation, borrowed (not cloned).
-            let y_prev: &Tensor = if l == 0 { x_shard } else { &ys[l - 1] };
+            let y_prev: &Tensor = if l == 0 { x_mb } else { &ys[l - 1] };
             let r = exec_charged(
                 &self.exec,
                 &mut self.ledger,
@@ -211,14 +440,21 @@ impl PhantomRank {
                     ],
                 )?;
                 let [d, h_out_prev]: [Tensor; 2] = unpack(r.outputs, "pp_bwd_step")?;
-                delta = d;
-                h_sum = self.ep.reduce_scatter(h_out_prev, &mut self.ledger)?;
+                std::mem::replace(&mut delta, d).recycle();
+                let h_next = self.ep.reduce_scatter(h_out_prev, &mut self.ledger)?;
+                std::mem::replace(&mut h_sum, h_next).recycle();
             }
         }
-
         self.ledger.span_end(); // backward
+        // The micro-batch's error/activation tensors are dead: fold their
+        // allocations back into the bounded band pool so the next
+        // micro-batch's kernels reuse them instead of re-allocating.
+        delta.recycle();
+        h_sum.recycle();
+        for t in ys.into_iter().chain(zs).chain(g_alls) {
+            t.recycle();
+        }
 
-        // ---- DP gradient sync + optimizer step (rank-local compute) ----
         // Order must match `param_shapes`/`named_tensors`: L*, C*, D*, b*.
         // The per-layer arrays are moved out, never cloned.
         let mut dls = Vec::with_capacity(layers);
@@ -236,29 +472,7 @@ impl PhantomRank {
         grad_list.append(&mut dcs);
         grad_list.append(&mut dds);
         grad_list.append(&mut dbs);
-        // Hybrid DP×PP: sum gradients across the data-parallel replicas
-        // (one flat All-Reduce, charged to the DpComm bucket) before the
-        // identical optimizer step runs on every replica. Outside the
-        // optimizer's wall-time window: rendezvous wait must never be
-        // charged as compute.
-        if let Some(dp) = self.dp_ep.as_mut() {
-            super::dp_all_reduce_grads(dp, &mut grad_list, &mut self.ledger)?;
-        }
-        self.ledger.span_begin("opt", "opt step");
-        let t0 = std::time::Instant::now();
-        {
-            let mut tensors = self.params.named_tensors();
-            let mut refs: Vec<&mut Tensor> =
-                tensors.iter_mut().map(|(_, t)| &mut **t).collect();
-            self.opt.step(&mut refs, &grad_list);
-        }
-        let opt_s = t0.elapsed().as_secs_f64();
-        self.ledger.advance(opt_s, Activity::Compute);
-        self.ledger.span_end_with(|| vec![("wall_s", crate::obs::Arg::F(opt_s))]);
-
-        self.ledger.span_end_with(|| vec![("loss_local", crate::obs::Arg::F(loss_local))]);
-        self.iter_no += 1;
-        Ok(loss_local)
+        Ok((loss_local, grad_list))
     }
 }
 

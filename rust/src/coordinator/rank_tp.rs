@@ -13,7 +13,7 @@ use super::exec_charged;
 use super::rank_pp::unpack;
 use crate::comm::Endpoint;
 use crate::config::OptimizerConfig;
-use crate::energy::{Activity, EnergyLedger};
+use crate::energy::EnergyLedger;
 use crate::model::TpRankParams;
 use crate::runtime::ExecHandle;
 use crate::simnet::Collective;
@@ -35,6 +35,9 @@ pub struct TensorRank {
     /// Charge the paper's full Table II schedule (Broadcast + extra
     /// Reduce-Scatter). On by default; ablation benches switch it off.
     pub paper_schedule: bool,
+    /// ZeRO-1: `Some(slot)` = the optimizer holds state only for this
+    /// replica's owned flat parameter slice of `slot` floats.
+    sharded_slot: Option<usize>,
     /// Iterations completed (names the per-iteration trace spans).
     iter_no: u64,
 }
@@ -47,12 +50,15 @@ impl TensorRank {
         exec: ExecHandle,
         ep: Endpoint,
     ) -> TensorRank {
-        Self::with_state(params, artifact, opt_cfg, None, exec, ep)
+        Self::with_state(params, artifact, opt_cfg, None, exec, ep, None)
             .expect("a fresh optimizer always matches its own shapes")
     }
 
     /// Build with a restored optimizer state (checkpoint resume); `None`
-    /// starts a fresh optimizer, identical to `new`.
+    /// starts a fresh optimizer, identical to `new`. With
+    /// `sharded_slot = Some(slot)` the optimizer is laid out for the
+    /// replica's owned flat parameter slice (ZeRO-1); any restored state
+    /// must match that layout.
     pub fn with_state(
         params: TpRankParams,
         artifact: String,
@@ -60,13 +66,17 @@ impl TensorRank {
         opt_state: Option<OptimizerState>,
         exec: ExecHandle,
         ep: Endpoint,
+        sharded_slot: Option<usize>,
     ) -> Result<TensorRank> {
-        let shapes: Vec<Vec<usize>> = params
-            .weights
-            .iter()
-            .map(|t| t.shape().to_vec())
-            .chain(params.biases.iter().map(|t| t.shape().to_vec()))
-            .collect();
+        let shapes: Vec<Vec<usize>> = match sharded_slot {
+            Some(slot) => vec![vec![slot]],
+            None => params
+                .weights
+                .iter()
+                .map(|t| t.shape().to_vec())
+                .chain(params.biases.iter().map(|t| t.shape().to_vec()))
+                .collect(),
+        };
         let opt = Optimizer::with_state(opt_cfg, &shapes, opt_state)?;
         Ok(TensorRank {
             params,
@@ -77,6 +87,7 @@ impl TensorRank {
             dp_ep: None,
             ledger: EnergyLedger::new(),
             paper_schedule: true,
+            sharded_slot,
             iter_no: 0,
         })
     }
@@ -90,6 +101,11 @@ impl TensorRank {
     /// Export the optimizer's accumulated state for checkpointing.
     pub fn opt_state(&self) -> OptimizerState {
         self.opt.state()
+    }
+
+    /// Floats of optimizer state held on this rank (sharded: ~1/dp flat).
+    pub fn opt_state_floats(&self) -> usize {
+        self.opt.state_floats()
     }
 
     /// One forward+backward+update iteration. Returns the rank-local sum of
@@ -200,11 +216,17 @@ impl TensorRank {
                 &[&dy_shard, &zs[l - 1], &y_fulls[l - 1]],
             )?;
             let [d, dw, db]: [Tensor; 3] = unpack(r.outputs, "tp_bwd_step")?;
-            delta = d;
+            std::mem::replace(&mut delta, d).recycle();
             grads[l - 1] = Some([dw, db]);
         }
 
         self.ledger.span_end(); // backward
+        // Dead error/activation tensors fold back into the bounded band
+        // pool so the next iteration's kernels reuse their allocations.
+        delta.recycle();
+        for t in y_fulls.into_iter().chain(zs) {
+            t.recycle();
+        }
 
         // ---- DP gradient sync + optimizer step ----
         // Order must match named_tensors: W*, b*; arrays moved, not cloned.
@@ -217,25 +239,25 @@ impl TensorRank {
         }
         let mut grad_list = dws;
         grad_list.append(&mut dbs);
-        // Hybrid DP×TP: sum gradients across the data-parallel replicas
-        // (one flat All-Reduce, charged to the DpComm bucket) before the
-        // identical optimizer step runs on every replica. Outside the
-        // optimizer's wall-time window: rendezvous wait must never be
-        // charged as compute.
-        if let Some(dp) = self.dp_ep.as_mut() {
-            super::dp_all_reduce_grads(dp, &mut grad_list, &mut self.ledger)?;
-        }
-        self.ledger.span_begin("opt", "opt step");
-        let t0 = std::time::Instant::now();
+        // Hybrid DP×TP: synchronize gradients across the data-parallel
+        // replicas before the optimizer step — one flat All-Reduce then
+        // the full step on every replica, or the ZeRO-1 Reduce-Scatter →
+        // slice step → All-Gather cycle when the state is sharded. Comm
+        // lands in the DpComm bucket; rendezvous wait is never charged as
+        // compute.
         {
             let mut tensors = self.params.named_tensors();
             let mut refs: Vec<&mut Tensor> =
                 tensors.iter_mut().map(|(_, t)| &mut **t).collect();
-            self.opt.step(&mut refs, &grad_list);
+            super::dp_sync_and_step(
+                &mut self.dp_ep,
+                self.sharded_slot,
+                &mut self.opt,
+                &mut refs,
+                grad_list,
+                &mut self.ledger,
+            )?;
         }
-        let opt_s = t0.elapsed().as_secs_f64();
-        self.ledger.advance(opt_s, Activity::Compute);
-        self.ledger.span_end_with(|| vec![("wall_s", crate::obs::Arg::F(opt_s))]);
 
         self.ledger.span_end_with(|| vec![("loss_local", crate::obs::Arg::F(loss_local))]);
         self.iter_no += 1;

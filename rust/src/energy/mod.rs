@@ -95,6 +95,16 @@ pub struct EnergyLedger {
     /// site that already holds the ledger can label the intervals it
     /// charges. Boxed to keep the untraced ledger small.
     recorder: Option<Box<crate::obs::SpanRecorder>>,
+    /// Comm wire time deferred for compute overlap (the 1F1B schedule):
+    /// while `defer_armed`, endpoints park their wire seconds here instead
+    /// of advancing the clock. Subsequent Compute advances drain the
+    /// register at zero cost — the NIC moves bytes while the ALUs are busy,
+    /// and the busy draw A already dominates the static draw B — and
+    /// `drain_deferred` charges whatever compute could not hide as real
+    /// stall time. The rendezvous *wait* is never deferred: peers must
+    /// still arrive, so clocks stay aligned across ranks.
+    deferred_s: f64,
+    defer_armed: bool,
 }
 
 impl EnergyLedger {
@@ -167,15 +177,58 @@ impl EnergyLedger {
             .map(|r| crate::obs::TraceCapture { recorder: *r, intervals: self.intervals.clone() })
     }
 
-    /// Advance the clock by `dur_s` doing `activity`.
+    /// Advance the clock by `dur_s` doing `activity`. Compute advances
+    /// additionally drain the deferred-comm register: up to `dur_s` of
+    /// parked wire time completes concurrently with the compute, costing
+    /// no extra virtual time or energy (comm hidden under the busy draw).
     pub fn advance(&mut self, dur_s: f64, activity: Activity) {
         assert!(dur_s >= 0.0, "negative duration {dur_s}");
         if dur_s == 0.0 {
             return;
         }
+        if activity == Activity::Compute && self.deferred_s > 0.0 {
+            self.deferred_s = (self.deferred_s - dur_s).max(0.0);
+        }
         let start = self.now_s;
         self.now_s += dur_s;
         self.intervals.push(Interval { start_s: start, end_s: self.now_s, activity });
+    }
+
+    // -- comm/compute overlap (1F1B) -------------------------------------
+
+    /// Arm or disarm wire-time deferral. While armed, `Endpoint::charge`
+    /// parks wire seconds via `defer_comm` instead of advancing the clock.
+    pub fn set_defer(&mut self, armed: bool) {
+        self.defer_armed = armed;
+    }
+
+    /// Is wire-time deferral armed?
+    pub fn defer_armed(&self) -> bool {
+        self.defer_armed
+    }
+
+    /// Park `dur_s` of collective wire time on the overlap register
+    /// (no clock movement; see `advance` / `drain_deferred`).
+    pub fn defer_comm(&mut self, dur_s: f64) {
+        assert!(dur_s >= 0.0, "negative deferred duration {dur_s}");
+        self.deferred_s += dur_s;
+    }
+
+    /// Wire seconds currently parked on the overlap register.
+    pub fn deferred_s(&self) -> f64 {
+        self.deferred_s
+    }
+
+    /// Charge the un-hidden remainder of the overlap register as real
+    /// stall time under `activity` and clear it. Schedulers call this at
+    /// the overlap boundary (before the DP sync / optimizer step) so no
+    /// wire time silently vanishes from the accounting.
+    pub fn drain_deferred(&mut self, activity: Activity) {
+        let rest = self.deferred_s;
+        self.deferred_s = 0.0;
+        if rest > 0.0 {
+            self.advance(rest, activity);
+        }
     }
 
     /// Jump the clock forward to `t_s` (rendezvous with slower peers),
@@ -556,6 +609,40 @@ mod tests {
         // Once disarmed, compaction works again.
         l.compact();
         assert!(l.intervals().len() <= 2);
+    }
+
+    #[test]
+    fn deferred_comm_hides_under_compute_and_remainder_is_charged() {
+        let mut l = EnergyLedger::new();
+        l.set_defer(true);
+        assert!(l.defer_armed());
+        l.defer_comm(0.3);
+        assert_eq!(l.deferred_s(), 0.3);
+        assert_eq!(l.now_s, 0.0, "deferral must not move the clock");
+        l.advance(0.2, Activity::Compute); // hides 0.2 s of parked wire
+        assert!((l.deferred_s() - 0.1).abs() < 1e-12);
+        l.defer_comm(0.05);
+        l.set_defer(false);
+        l.drain_deferred(Activity::Communicate);
+        assert_eq!(l.deferred_s(), 0.0);
+        // 0.2 s compute + 0.15 s un-hidden wire remainder.
+        assert!((l.busy_s() - 0.2).abs() < 1e-12);
+        assert!((l.comm_s() - 0.15).abs() < 1e-12);
+        assert!((l.now_s - 0.35).abs() < 1e-12);
+        let s = l.summary();
+        assert!((s.busy_s + s.comm_s + s.idle_s + s.dp_comm_s - s.end_s).abs() < 1e-12);
+        // A register fully covered by compute costs nothing at the drain.
+        l.defer_comm(0.01);
+        l.advance(1.0, Activity::Compute);
+        l.drain_deferred(Activity::Communicate);
+        assert!((l.now_s - 1.35).abs() < 1e-12);
+        assert!((l.comm_s() - 0.15).abs() < 1e-12);
+        // Idle waiting never hides wire time (the bubble stays a bubble).
+        l.defer_comm(0.02);
+        l.advance(0.5, Activity::Idle);
+        assert!((l.deferred_s() - 0.02).abs() < 1e-12);
+        l.drain_deferred(Activity::Communicate);
+        assert!((l.comm_s() - 0.17).abs() < 1e-12);
     }
 
     #[test]

@@ -12,7 +12,9 @@ use anyhow::{bail, Context, Result};
 
 use phantom::ckpt::{self, Snapshot};
 use phantom::cli::{Args, USAGE};
-use phantom::config::{preset, BackendKind, CkptPolicy, OptimizerConfig, Parallelism, ServeConfig};
+use phantom::config::{
+    preset, BackendKind, CkptPolicy, OptimizerConfig, Parallelism, Schedule, ServeConfig,
+};
 use phantom::coordinator::{self, TrainOptions};
 use phantom::experiments;
 use phantom::perfmodel::{self, GemmModel, Workload};
@@ -37,6 +39,7 @@ fn run(argv: Vec<String>) -> Result<()> {
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     match cmd {
         "train" => cmd_train(&args),
+        "pipeline" => cmd_pipeline(&args),
         "serve" => cmd_serve(&args),
         "fleet" => cmd_fleet(&args),
         "ckpt" => cmd_ckpt(&args),
@@ -61,6 +64,9 @@ fn cmd_train(args: &Args) -> Result<()> {
         "preset",
         "mode",
         "dp",
+        "micro",
+        "schedule",
+        "sharded",
         "iters",
         "target-loss",
         "lr",
@@ -79,7 +85,18 @@ fn cmd_train(args: &Args) -> Result<()> {
             // The snapshot fixes everything that shapes the math; allowing
             // these flags alongside --resume would silently diverge from
             // the saved trajectory.
-            for fixed in ["preset", "mode", "dp", "optimizer", "lr", "seed", "backend"] {
+            for fixed in [
+                "preset",
+                "mode",
+                "dp",
+                "micro",
+                "schedule",
+                "sharded",
+                "optimizer",
+                "lr",
+                "seed",
+                "backend",
+            ] {
                 if args.opt(fixed).is_some() || args.flag(fixed) {
                     bail!("--{fixed} cannot be combined with --resume (the snapshot fixes it)");
                 }
@@ -113,6 +130,15 @@ fn cmd_train(args: &Args) -> Result<()> {
                 "adam" => OptimizerConfig::Adam { lr, beta1: 0.9, beta2: 0.999, eps: 1e-8 },
                 o => bail!("unknown optimizer '{o}'"),
             };
+            if let Some(micro) = args.opt_parse::<usize>("micro")? {
+                cfg.train.micro = micro;
+            }
+            if let Some(s) = args.opt("schedule") {
+                cfg.train.schedule = Schedule::parse(s)?;
+            }
+            if args.flag("sharded") {
+                cfg.train.sharded_state = true;
+            }
             (cfg, preset_name.to_string(), None)
         }
     };
@@ -191,6 +217,154 @@ fn cmd_train(args: &Args) -> Result<()> {
     if let Some(path) = args.opt("out") {
         std::fs::write(path, report_json(&report).pretty())?;
         phantom::log_info!("wrote {path}");
+    }
+    Ok(())
+}
+
+/// Rank-seconds not spent computing (exposed comm + DP sync + idle) as a
+/// fraction of total rank-seconds: the pipeline-bubble metric the 1F1B
+/// schedule exists to shrink.
+fn bubble_fraction(report: &coordinator::TrainReport) -> f64 {
+    let mut stall = 0.0;
+    let mut total = 0.0;
+    for r in &report.per_rank {
+        stall += r.ledger.comm_s + r.ledger.dp_comm_s + r.ledger.idle_s;
+        total += r.ledger.end_s;
+    }
+    if total > 0.0 {
+        stall / total
+    } else {
+        0.0
+    }
+}
+
+fn cmd_pipeline(args: &Args) -> Result<()> {
+    args.check_known(&["preset", "iters", "micro", "dp", "seed", "out"])?;
+    let preset_name = args.opt("preset").unwrap_or("tiny");
+    let iters = args.opt_parse::<usize>("iters")?.unwrap_or(8);
+    let dp = args.opt_parse::<usize>("dp")?.unwrap_or(2);
+    if dp < 2 {
+        bail!("--dp must be >= 2 (the flat-vs-sharded arm shards optimizer state across DP)");
+    }
+
+    // All four arms share geometry, seed and a stateful (momentum)
+    // optimizer so the sharded arm has per-rank moment floats to shrink.
+    let mut base = preset(preset_name, Parallelism::Phantom)?;
+    base.train.max_iters = iters;
+    base.train.optimizer = OptimizerConfig::Momentum { lr: 0.05, beta: 0.9 };
+    if let Some(seed) = args.opt_parse::<u64>("seed")? {
+        base.train.seed = seed;
+    }
+    let micro = args.opt_parse::<usize>("micro")?.unwrap_or_else(|| base.train.batch.min(4));
+    let run = |cfg: &phantom::config::RunConfig| -> Result<coordinator::TrainReport> {
+        cfg.validate()?;
+        let server = ExecServer::for_run(cfg)?;
+        coordinator::train_with(cfg, &server, TrainOptions::default())
+    };
+
+    // Arm 1/2 — schedule: sync vs 1F1B at the same micro-batching. The
+    // interleaved schedule must reproduce the sync trajectory bitwise while
+    // hiding boundary-collective wire time behind the next chunk's compute.
+    phantom::log_info!(
+        "pipeline bench: {preset_name} p={} micro={micro}, sync vs 1f1b...",
+        base.p
+    );
+    let mut sync_cfg = base.clone();
+    sync_cfg.train.micro = micro;
+    sync_cfg.train.schedule = Schedule::Sync;
+    let sync = run(&sync_cfg)?;
+    let mut ofob_cfg = sync_cfg.clone();
+    ofob_cfg.train.schedule = Schedule::OneFOneB;
+    let ofob = run(&ofob_cfg)?;
+
+    // Arm 3/4 — optimizer state: flat vs ZeRO-1 sharded at dp replicas
+    // (micro=1/sync isolates the sharding change). Bitwise-equal losses and
+    // ~1/dp per-rank optimizer-state floats are the contract.
+    phantom::log_info!("pipeline bench: {preset_name} dp={dp}, flat vs sharded state...");
+    let mut flat_cfg = base.clone();
+    flat_cfg.dp = dp;
+    let flat = run(&flat_cfg)?;
+    let mut shard_cfg = flat_cfg.clone();
+    shard_cfg.train.sharded_state = true;
+    let sharded = run(&shard_cfg)?;
+
+    let opt_floats = |r: &coordinator::TrainReport| {
+        r.per_rank.iter().map(|pr| pr.opt_state_floats).max().unwrap_or(0) as f64
+    };
+    let sync_bubble = bubble_fraction(&sync);
+    let ofob_bubble = bubble_fraction(&ofob);
+    let bubble_reduced = ofob_bubble < sync_bubble;
+    let schedule_bitwise = sync.losses == ofob.losses && sync.iterations == ofob.iterations;
+    let sharded_bitwise = flat.losses == sharded.losses && flat.iterations == sharded.iterations;
+
+    let mut t = Table::new(
+        &format!("Pipeline bench — {preset_name} (p={}, micro={micro}, dp={dp})", base.p),
+        &["arm", "J/step", "bubble", "opt floats/rank", "virtual wall"],
+    );
+    let flat_label = format!("flat dp={dp}");
+    let shard_label = format!("sharded dp={dp}");
+    for (name, r) in [
+        ("sync", &sync),
+        ("1f1b", &ofob),
+        (flat_label.as_str(), &flat),
+        (shard_label.as_str(), &sharded),
+    ] {
+        t.row(vec![
+            name.to_string(),
+            fmt_joules(r.energy_per_iter_j()),
+            format!("{:.1}%", bubble_fraction(r) * 100.0),
+            format!("{:.0}", opt_floats(r)),
+            fmt_secs(r.wall_train_s),
+        ]);
+    }
+    print!("{}", t.markdown());
+
+    let verdict = |ok: bool| if ok { 1.0 } else { 0.0 };
+    let records: Vec<(String, f64)> = vec![
+        ("pipeline_p".into(), base.p as f64),
+        ("pipeline_micro".into(), micro as f64),
+        ("pipeline_dp".into(), dp as f64),
+        ("pipeline_iters".into(), iters as f64),
+        ("sync_j_per_step".into(), sync.energy_per_iter_j()),
+        ("1f1b_j_per_step".into(), ofob.energy_per_iter_j()),
+        ("sync_bubble_frac".into(), sync_bubble),
+        ("1f1b_bubble_frac".into(), ofob_bubble),
+        ("flat_j_per_step".into(), flat.energy_per_iter_j()),
+        ("sharded_j_per_step".into(), sharded.energy_per_iter_j()),
+        ("flat_opt_state_floats".into(), opt_floats(&flat)),
+        ("sharded_opt_state_floats".into(), opt_floats(&sharded)),
+        ("bubble_reduced".into(), verdict(bubble_reduced)),
+        ("schedule_bitwise".into(), verdict(schedule_bitwise)),
+        ("sharded_bitwise".into(), verdict(sharded_bitwise)),
+    ];
+    let out = args.opt("out").unwrap_or("BENCH_pipeline.json");
+    let virtual_s = [&sync, &ofob, &flat, &sharded]
+        .iter()
+        .flat_map(|r| r.per_rank.iter())
+        .map(|pr| pr.ledger.end_s)
+        .fold(0.0, f64::max);
+    let meta = phantom::util::json::BenchMeta::new("pipeline", virtual_s);
+    phantom::util::json::write_records_json_with_meta(Path::new(out), &records, &meta)?;
+    phantom::log_info!("wrote {out}");
+    phantom::log_info!(
+        "verdicts: bubble_reduced={} ({:.2}% -> {:.2}%), schedule_bitwise={}, \
+         sharded_bitwise={} (opt floats {} -> {})",
+        bubble_reduced,
+        sync_bubble * 100.0,
+        ofob_bubble * 100.0,
+        schedule_bitwise,
+        sharded_bitwise,
+        opt_floats(&flat),
+        opt_floats(&sharded),
+    );
+    if !bubble_reduced {
+        bail!("1f1b bubble {ofob_bubble:.4} is not below the sync bubble {sync_bubble:.4}");
+    }
+    if !schedule_bitwise {
+        bail!("1f1b loss trajectory diverged bitwise from the sync schedule at equal micro");
+    }
+    if !sharded_bitwise {
+        bail!("sharded-state loss trajectory diverged bitwise from the flat dp={dp} run");
     }
     Ok(())
 }
@@ -892,8 +1066,13 @@ fn cmd_plan(args: &Args) -> Result<()> {
     }
 
     let objective = plan::Objective::parse(args.opt("objective").unwrap_or("train"))?;
-    let calib_path = args.opt("calib").unwrap_or(calib::DEFAULT_CALIB_PATH);
-    let calibration = calib::Calibration::load_or_default(Path::new(calib_path));
+    // --calib pins an explicit record file; otherwise auto-calibrate from
+    // the real measured trajectories the benches leave at the repo root
+    // (BENCH_kernels/hybrid/serve), seed fixture for whatever they miss.
+    let calibration = match args.opt("calib") {
+        Some(path) => calib::Calibration::load_or_default(Path::new(path)),
+        None => calib::Calibration::auto_load(Path::new(".")),
+    };
     calibration.log_warnings();
     phantom::log_info!("plan: calibration from {}", calibration.source.describe());
 

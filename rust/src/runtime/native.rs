@@ -17,6 +17,12 @@
 //! stages, unlike the unfused composition the property tests compare
 //! against.
 //!
+//! The backward kernels allocate their output tensors from the bounded
+//! band pool (`Tensor::zeros_pooled`, the same pool the GEMM bands pack
+//! panels from): the rank loops recycle them when the gradients die, so
+//! a steady-state training iteration reuses the same buffers call after
+//! call instead of churning the allocator once per micro-batch.
+//!
 //! Shape conventions (batch-major, matching ref.py):
 //!   y [B, m] · L [m, m] · C [m, k] · D [p, k, m] · g_all [p, B, k] ·
 //!   b [m] · h_sum [B, k];  m = n/p.
@@ -150,7 +156,7 @@ pub fn run_entry(geo: &ManifestConfig, entry: &str, inputs: &[&Tensor]) -> Resul
             if mw != m {
                 bail!("{entry}: delta {:?} vs W {:?}", delta.shape(), w.shape());
             }
-            let mut dy = Tensor::zeros(&[bsz, n]);
+            let mut dy = Tensor::zeros_pooled(&[bsz, n]);
             delta.matmul_a_bt_into(w, &mut dy)?;
             Ok(vec![dy])
         }
@@ -238,7 +244,7 @@ fn mse_delta(entry: &str, y: &Tensor, z: &Tensor, t: &Tensor, scale: f32) -> Res
     if y.shape() != z.shape() || y.shape() != t.shape() || y.shape().len() != 2 {
         bail!("{entry}: y {:?} vs z {:?} vs target {:?}", y.shape(), z.shape(), t.shape());
     }
-    let mut delta = Tensor::zeros(y.shape());
+    let mut delta = Tensor::zeros_pooled(y.shape());
     let mut loss = 0.0f64;
     let two_scale = 2.0 * scale;
     for ((dv, &yv), (&zv, &tv)) in delta
@@ -261,7 +267,7 @@ fn compress(entry: &str, delta: &Tensor, d: &Tensor) -> Result<Tensor> {
     if md != m {
         bail!("{entry}: delta {:?} vs D {:?}", delta.shape(), d.shape());
     }
-    let mut h = Tensor::zeros(&[p, bsz, k]);
+    let mut h = Tensor::zeros_pooled(&[p, bsz, k]);
     for i in 0..p {
         gemm_a_bt_acc(
             delta.data(),
@@ -299,7 +305,7 @@ fn pp_bwd_combine(
             z_prev.shape()
         );
     }
-    let mut out = Tensor::zeros(&[bsz, m]);
+    let mut out = Tensor::zeros_pooled(&[bsz, m]);
     delta.matmul_a_bt_into(l, &mut out)?;
     gemm_a_bt_acc(h_sum.data(), bsz, k, c.data(), m, out.data_mut());
     for (o, &zv) in out.data_mut().iter_mut().zip(z_prev.data()) {
@@ -334,11 +340,11 @@ fn pp_grads(
             g_all.shape()
         );
     }
-    let mut dl = Tensor::zeros(&[m, m]);
+    let mut dl = Tensor::zeros_pooled(&[m, m]);
     y_prev.matmul_at_b_into(delta, &mut dl)?;
-    let mut dc = Tensor::zeros(&[m, k]);
+    let mut dc = Tensor::zeros_pooled(&[m, k]);
     y_prev.matmul_at_b_into(h_sum, &mut dc)?;
-    let mut dd = Tensor::zeros(&[p, k, m]);
+    let mut dd = Tensor::zeros_pooled(&[p, k, m]);
     for i in 0..p {
         gemm_at_b_acc(
             &g_all.data()[i * bsz * k..(i + 1) * bsz * k],
@@ -378,7 +384,7 @@ fn tp_grads(entry: &str, y_full: &Tensor, delta: &Tensor) -> Result<Vec<Tensor>>
     if bd != bsz {
         bail!("{entry}: y_full {:?} vs delta {:?}", y_full.shape(), delta.shape());
     }
-    let mut dw = Tensor::zeros(&[n, m]);
+    let mut dw = Tensor::zeros_pooled(&[n, m]);
     y_full.matmul_at_b_into(delta, &mut dw)?;
     let db = col_sum(delta, m);
     Ok(vec![dw, db])
@@ -389,11 +395,9 @@ fn tp_bwd_finish(entry: &str, dy: &Tensor, z_prev: &Tensor) -> Result<Tensor> {
     if dy.shape() != z_prev.shape() || dy.shape().len() != 2 {
         bail!("{entry}: dy {:?} vs z_prev {:?}", dy.shape(), z_prev.shape());
     }
-    let mut out = dy.clone();
-    for (o, &zv) in out.data_mut().iter_mut().zip(z_prev.data()) {
-        if zv <= 0.0 {
-            *o = 0.0;
-        }
+    let mut out = Tensor::zeros_pooled(dy.shape());
+    for ((o, &dv), &zv) in out.data_mut().iter_mut().zip(dy.data()).zip(z_prev.data()) {
+        *o = if zv > 0.0 { dv } else { 0.0 };
     }
     Ok(out)
 }
@@ -424,7 +428,7 @@ fn d3(entry: &str, what: &str, t: &Tensor) -> Result<(usize, usize, usize)> {
 
 /// Column sums of a [B, m] tensor -> [m].
 fn col_sum(t: &Tensor, m: usize) -> Tensor {
-    let mut out = Tensor::zeros(&[m]);
+    let mut out = Tensor::zeros_pooled(&[m]);
     for row in t.data().chunks(m) {
         for (o, &v) in out.data_mut().iter_mut().zip(row) {
             *o += v;

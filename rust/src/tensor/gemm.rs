@@ -166,7 +166,7 @@ static WS_POOL: Mutex<Vec<Vec<f32>>> = Mutex::new(Vec::new());
 
 /// Upper bound on idle pooled buffers (bounds memory after a burst of very
 /// wide GEMMs; beyond this, returned buffers are simply dropped).
-const WS_POOL_CAP: usize = 64;
+pub const PACK_POOL_CAP: usize = 64;
 
 fn ws_take(count: usize, len: usize) -> Vec<Vec<f32>> {
     let mut out = {
@@ -187,11 +187,25 @@ fn ws_take(count: usize, len: usize) -> Vec<Vec<f32>> {
 fn ws_put(bufs: Vec<Vec<f32>>) {
     let mut pool = WS_POOL.lock().unwrap_or_else(|p| p.into_inner());
     for b in bufs {
-        if pool.len() >= WS_POOL_CAP {
+        if pool.len() >= PACK_POOL_CAP {
             break;
         }
         pool.push(b);
     }
+}
+
+/// A zero-filled `len`-float buffer drawn from the bounded band pool — the
+/// allocation-reuse path for kernel output tensors on the per-iteration
+/// critical path (the backward fused kernels' per-call scratch folds in
+/// here). Return it with [`pooled_buf_put`] when the value dies.
+pub fn pooled_buf(len: usize) -> Vec<f32> {
+    ws_take(1, len).pop().expect("ws_take returns `count` buffers")
+}
+
+/// Return a buffer to the bounded band pool (silently dropped when the
+/// pool already holds [`PACK_POOL_CAP`] idle buffers).
+pub fn pooled_buf_put(buf: Vec<f32>) {
+    ws_put(vec![buf]);
 }
 
 /// Idle buffers in the band workspace pool — observability hook for the
@@ -431,7 +445,7 @@ mod tests {
         assert!(bufs.iter().all(|b| b.len() == 16));
         ws_put(bufs);
         let idle = pack_pool_idle();
-        assert!(idle >= 1 && idle <= WS_POOL_CAP, "idle={idle}");
+        assert!(idle >= 1 && idle <= PACK_POOL_CAP, "idle={idle}");
         // Buffers come back resized to the new request.
         let again = ws_take(1, 33);
         assert_eq!(again[0].len(), 33);

@@ -97,6 +97,24 @@ impl Tensor {
         Tensor { shape: shape.to_vec(), data: vec![0.0; numel] }
     }
 
+    /// A zeroed tensor whose allocation is drawn from the process-global
+    /// bounded band pool (the same pool the GEMM engine's bands pack
+    /// panels from), so per-iteration kernel outputs reuse buffers across
+    /// calls instead of churning the allocator. Pair with
+    /// [`Tensor::recycle`] at the value's death site; plain dropping is
+    /// always safe, it just forfeits the reuse.
+    pub fn zeros_pooled(shape: &[usize]) -> Tensor {
+        let numel = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: gemm::pooled_buf(numel) }
+    }
+
+    /// Return this tensor's allocation to the bounded band pool, where
+    /// the next [`Tensor::zeros_pooled`] (or GEMM band workspace) reuses
+    /// it. The pool is capped, so recycling never grows memory unbounded.
+    pub fn recycle(self) {
+        gemm::pooled_buf_put(self.data);
+    }
+
     pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Result<Tensor> {
         let numel: usize = shape.iter().product();
         if numel != data.len() {

@@ -23,7 +23,7 @@ use anyhow::{bail, Context, Result};
 use crate::ckpt::{reshard, Snapshot};
 use crate::config::{
     BackendKind, HardwareConfig, ModelConfig, OptimizerConfig, Parallelism, RunConfig,
-    TrainConfig,
+    Schedule, TrainConfig,
 };
 use crate::coordinator;
 use crate::runtime::ExecServer;
@@ -73,6 +73,10 @@ pub struct CaseReport {
     pub optimizer: &'static str,
     pub seed: u64,
     pub backend: &'static str,
+    /// PP schedule swept for the phantom-mode run ("sync" or "1f1b").
+    pub schedule: &'static str,
+    /// ZeRO-1 sharded optimizer state (active when dp > 1).
+    pub sharded: bool,
     /// Worst relative loss deviation across both modes and all iterations.
     pub loss_dev: f64,
     /// Worst normalized gradient deviation (kernel vs naive), both modes.
@@ -94,9 +98,13 @@ impl SweepReport {
     /// Flat records for BENCH_conformance.json.
     pub fn records(&self) -> Vec<(String, f64)> {
         let hybrid = self.cases.iter().filter(|c| c.dp > 1).count();
+        let sharded = self.cases.iter().filter(|c| c.sharded && c.dp > 1).count();
+        let one_f_one_b = self.cases.iter().filter(|c| c.schedule == "1f1b").count();
         vec![
             ("conformance_cases".to_string(), self.cases.len() as f64),
             ("conformance_hybrid_cases".to_string(), hybrid as f64),
+            ("conformance_sharded_cases".to_string(), sharded as f64),
+            ("conformance_1f1b_cases".to_string(), one_f_one_b as f64),
             ("conformance_loss_max_rel_dev".to_string(), self.max_loss_dev),
             ("conformance_grad_max_rel_dev".to_string(), self.max_grad_dev as f64),
             ("conformance_forward_max_rel_dev".to_string(), self.max_forward_dev as f64),
@@ -124,6 +132,14 @@ fn sample_case(rng: &mut Prng, iters: usize) -> (RunConfig, &'static str) {
         ),
     };
     let seed = rng.next_u64();
+    // ISSUE 10 dimensions: ZeRO-1 sharded optimizer state and the 1F1B
+    // schedule, swept against the same dense oracle. Both are bit-exact
+    // vs the flat/sync baselines at micro = 1 (the rank-ordered
+    // reduce-scatter fold matches the all-reduce fold, and 1F1B at one
+    // micro-batch degenerates to the synchronous order), so the oracle
+    // needs no schedule/sharding awareness.
+    let sharded = rng.int_in(0, 1) == 1;
+    let schedule = if rng.int_in(0, 1) == 1 { Schedule::OneFOneB } else { Schedule::Sync };
     let cfg = RunConfig {
         mode: Parallelism::Phantom, // per-mode runs overwrite this
         p,
@@ -137,6 +153,9 @@ fn sample_case(rng: &mut Prng, iters: usize) -> (RunConfig, &'static str) {
             target_loss: None,
             warmup_iters: 1,
             dataset_batches: 2,
+            micro: 1,
+            schedule,
+            sharded_state: sharded,
         },
         hardware: HardwareConfig::frontier_measured(),
         artifact: Some("conformance-case".to_string()),
@@ -272,11 +291,15 @@ pub fn run_sweep(sw: &SweepConfig) -> Result<SweepReport> {
         pp_cfg.mode = Parallelism::Phantom;
         let mut tp_cfg = base.clone();
         tp_cfg.mode = Parallelism::Tensor;
+        // Pipelining is a PP-only knob; the TP leg of the case keeps the
+        // sharded_state dimension but runs the (only legal) sync schedule.
+        tp_cfg.train.schedule = Schedule::Sync;
 
         let ctx = format!(
-            "case {case}: n={} p={} dp={} k={} L={} batch={} opt={} seed={:#x}",
+            "case {case}: n={} p={} dp={} k={} L={} batch={} opt={} sched={} sharded={} seed={:#x}",
             base.model.n, base.p, base.dp, base.model.k, base.model.layers,
-            base.train.batch, opt_name, base.train.seed
+            base.train.batch, opt_name, base.train.schedule.name(),
+            base.train.sharded_state, base.train.seed
         );
         let (pp_loss, pp_grad) = run_mode(&pp_cfg, sw).context(ctx.clone())?;
         let (tp_loss, tp_grad) = run_mode(&tp_cfg, sw).context(ctx.clone())?;
@@ -297,6 +320,8 @@ pub fn run_sweep(sw: &SweepConfig) -> Result<SweepReport> {
             optimizer: opt_name,
             seed: base.train.seed,
             backend: base.backend.name(),
+            schedule: base.train.schedule.name(),
+            sharded: base.train.sharded_state,
             loss_dev,
             grad_dev,
             forward_dev: fwd,

@@ -37,6 +37,92 @@ impl OptimizerState {
             OptimizerState::Adam { .. } => "adam",
         }
     }
+
+    /// Number of f32 moment values this state holds. Under ZeRO-1 sharding
+    /// each DP replica keeps state only for its owned flat slice, so this
+    /// drops to ~1/dp of the replicated baseline — the memory/energy term
+    /// BENCH_pipeline.json reports.
+    pub fn floats(&self) -> usize {
+        match self {
+            OptimizerState::Sgd => 0,
+            OptimizerState::Momentum { velocity } => velocity.iter().map(Tensor::numel).sum(),
+            OptimizerState::Adam { m, v, .. } => {
+                m.iter().map(Tensor::numel).sum::<usize>()
+                    + v.iter().map(Tensor::numel).sum::<usize>()
+            }
+        }
+    }
+
+    /// Re-materialize a full per-parameter state from dp-rank-ordered
+    /// sharded slice states (each holding one flat `[slot]` tensor per
+    /// moment). Concatenating the owned slices reproduces the padded flat
+    /// moment vector; the zero pad is truncated and the rest unflattened
+    /// into `shapes`. Used by `ckpt::collapse_dp` so elastic resume from a
+    /// sharded-state checkpoint is bit-identical.
+    pub fn concat_sharded(
+        parts: &[&OptimizerState],
+        shapes: &[Vec<usize>],
+    ) -> Result<OptimizerState> {
+        let total: usize = shapes.iter().map(|s| s.iter().product::<usize>()).sum();
+        let gather = |slices: Vec<&[Tensor]>| -> Result<Vec<Tensor>> {
+            let mut flat = Vec::with_capacity(total);
+            for (r, ts) in slices.iter().enumerate() {
+                if ts.len() != 1 {
+                    bail!("sharded slice {r}: expected 1 flat moment tensor, got {}", ts.len());
+                }
+                flat.extend_from_slice(ts[0].data());
+            }
+            if flat.len() < total {
+                bail!("sharded slices hold {} floats for {} parameters", flat.len(), total);
+            }
+            flat.truncate(total); // drop the zero pad
+            let mut out = Vec::with_capacity(shapes.len());
+            let mut at = 0usize;
+            for s in shapes {
+                let n: usize = s.iter().product();
+                out.push(Tensor::from_vec(s, flat[at..at + n].to_vec())?);
+                at += n;
+            }
+            Ok(out)
+        };
+        let Some(first) = parts.first() else { bail!("no sharded optimizer slices") };
+        for p in parts {
+            if p.kind() != first.kind() {
+                bail!("mixed sharded state kinds: {} vs {}", p.kind(), first.kind());
+            }
+        }
+        Ok(match first {
+            OptimizerState::Sgd => OptimizerState::Sgd,
+            OptimizerState::Momentum { .. } => {
+                let vs: Vec<&[Tensor]> = parts
+                    .iter()
+                    .map(|p| match p {
+                        OptimizerState::Momentum { velocity } => velocity.as_slice(),
+                        _ => unreachable!("kind checked above"),
+                    })
+                    .collect();
+                OptimizerState::Momentum { velocity: gather(vs)? }
+            }
+            OptimizerState::Adam { t, .. } => {
+                let t0 = *t;
+                let mut ms = Vec::with_capacity(parts.len());
+                let mut vs = Vec::with_capacity(parts.len());
+                for p in parts {
+                    match p {
+                        OptimizerState::Adam { t, m, v } => {
+                            if *t != t0 {
+                                bail!("sharded Adam step counts diverge: {t} vs {t0}");
+                            }
+                            ms.push(m.as_slice());
+                            vs.push(v.as_slice());
+                        }
+                        _ => unreachable!("kind checked above"),
+                    }
+                }
+                OptimizerState::Adam { t: t0, m: gather(ms)?, v: gather(vs)? }
+            }
+        })
+    }
 }
 
 impl Optimizer {
@@ -116,6 +202,19 @@ impl Optimizer {
             }
             Optimizer::Adam { t, m, v, .. } => {
                 OptimizerState::Adam { t: *t, m: m.clone(), v: v.clone() }
+            }
+        }
+    }
+
+    /// Number of f32 moment values currently held (see
+    /// [`OptimizerState::floats`]) without cloning the state.
+    pub fn state_floats(&self) -> usize {
+        match self {
+            Optimizer::Sgd { .. } => 0,
+            Optimizer::Momentum { velocity, .. } => velocity.iter().map(Tensor::numel).sum(),
+            Optimizer::Adam { m, v, .. } => {
+                m.iter().map(Tensor::numel).sum::<usize>()
+                    + v.iter().map(Tensor::numel).sum::<usize>()
             }
         }
     }

@@ -255,6 +255,189 @@ fn all_reduce_scalar_matches_sequential_f32_sum() {
 }
 
 #[test]
+fn zero_reduce_scatter_all_gather_matches_all_reduce_bitwise() {
+    // The ZeRO-1 identity: reduce-scattering the zero-padded [dp, slot]
+    // view of a flat gradient delivers each rank the SAME bits the flat
+    // all-reduce would (both fold contributions in rank order), and the
+    // all-gather of the slices reassembles the full all-reduced vector
+    // bitwise. This is the whole bit-exactness argument for sharded
+    // optimizer states — exercised on ragged totals that p does not
+    // divide, so the zero pad is live.
+    let cfg = PropConfig { cases: 16, ..PropConfig::default() };
+    check("reduce_scatter . all_gather == all_reduce (bitwise)", cfg, |rng| {
+        let p = rng.int_in(2, 5) as usize;
+        let total = rng.int_in(1, 37) as usize;
+        let seed = rng.next_u64();
+        let out = run_ranks(p, Duration::from_secs(60), move |mut ep, mut led| {
+            let mine = contribution(&[total], seed, ep.rank);
+            let reduced = ep.all_reduce(mine.clone(), &mut led).unwrap();
+            let stacked = phantom::coordinator::zero::pad_stack(&mine, ep.p);
+            let own = ep.dp_reduce_scatter(stacked, &mut led).unwrap();
+            let slot = own.numel();
+            // Own slice must equal the matching window of the all-reduce.
+            let lo = (ep.rank * slot).min(total);
+            let hi = ((ep.rank + 1) * slot).min(total);
+            for (i, &x) in own.data()[..hi - lo].iter().enumerate() {
+                assert_eq!(
+                    x.to_bits(),
+                    reduced.data()[lo + i].to_bits(),
+                    "rank {} slice [{i}] diverged from the all-reduce",
+                    ep.rank
+                );
+            }
+            for &x in &own.data()[hi - lo..] {
+                assert_eq!(x, 0.0, "zero pad must reduce to zero");
+            }
+            let gathered = ep.dp_all_gather(own, &mut led).unwrap();
+            (reduced, gathered)
+        });
+        for (rank, (reduced, gathered)) in out.iter().enumerate() {
+            if gathered.numel() < total {
+                return Err(format!(
+                    "rank {rank}: gathered {} floats for total {total}",
+                    gathered.numel()
+                ));
+            }
+            for (i, (a, b)) in gathered.data()[..total].iter().zip(reduced.data()).enumerate() {
+                if a.to_bits() != b.to_bits() {
+                    return Err(format!(
+                        "rank {rank} [{i}]: RS.AG {a} != all-reduce {b} (bitwise contract)"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn zero_flat_slice_tiling_roundtrips_ragged_totals() {
+    // Host-side half of the ZeRO contract: flatten -> per-rank read_slice
+    // windows tile the flat vector exactly (zero-padded past the end),
+    // and unflatten_into is the inverse of flatten for any ragged
+    // shape list whose total the replica count does not divide.
+    use phantom::coordinator::zero;
+    let cfg = PropConfig { cases: 32, ..PropConfig::default() };
+    check("zero helpers tile ragged totals", cfg, |rng| {
+        let dp = rng.int_in(1, 5) as usize;
+        let n_tensors = rng.int_in(1, 5) as usize;
+        let shapes: Vec<Vec<usize>> = (0..n_tensors)
+            .map(|_| vec![rng.int_in(1, 4) as usize, (2 * rng.int_in(0, 3) + 1) as usize])
+            .collect();
+        let mut prng = Prng::new(rng.next_u64());
+        let mut tensors: Vec<Tensor> =
+            shapes.iter().map(|s| Tensor::randn(s, 1.0, &mut prng)).collect();
+        let flat = zero::flatten(&tensors);
+        let total: usize = shapes.iter().map(|s| s.iter().product::<usize>()).sum();
+        if flat.numel() != total {
+            return Err(format!("flatten produced {} floats, want {total}", flat.numel()));
+        }
+        let slot = zero::slot_len(total, dp);
+        if slot * dp < total || slot * dp >= total + dp.max(2) {
+            return Err(format!("slot_len({total}, {dp}) = {slot} does not tile"));
+        }
+        // The dp read_slice windows concatenate back to flat + zero pad.
+        let mut refs: Vec<&mut Tensor> = tensors.iter_mut().collect();
+        let mut rebuilt: Vec<f32> = Vec::with_capacity(dp * slot);
+        for d in 0..dp {
+            rebuilt.extend_from_slice(zero::read_slice(&refs, d * slot, slot).data());
+        }
+        for (i, &x) in rebuilt.iter().enumerate() {
+            let want = if i < total { flat.data()[i] } else { 0.0 };
+            if x.to_bits() != want.to_bits() {
+                return Err(format!("slice tiling [{i}]: {x} != {want}"));
+            }
+        }
+        // unflatten_into inverts flatten, tolerating trailing pad.
+        let padded = Tensor::from_vec(&[dp * slot], rebuilt).unwrap();
+        let before: Vec<Vec<f32>> = refs.iter().map(|t| t.data().to_vec()).collect();
+        for t in refs.iter_mut() {
+            t.data_mut().iter_mut().for_each(|x| *x = f32::NAN);
+        }
+        zero::unflatten_into(&padded, &mut refs);
+        for (t, want) in refs.iter().zip(&before) {
+            for (a, b) in t.data().iter().zip(want) {
+                if a.to_bits() != b.to_bits() {
+                    return Err("unflatten_into failed to invert flatten".into());
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn reduce_scatter_is_commutative_across_rank_orderings() {
+    // Slot j's sum folds contributions in rank order; permuting which rank
+    // contributes which stack changes only the f32 fold order, so results
+    // agree within float tolerance (the same contract all_reduce keeps).
+    let cfg = PropConfig { cases: 16, ..PropConfig::default() };
+    check("reduce-scatter rank-permutation commutativity", cfg, |rng| {
+        let p = rng.int_in(2, 5) as usize;
+        let slot_shape = vec![(2 * rng.int_in(0, 2) + 1) as usize, (2 * rng.int_in(0, 4) + 1) as usize];
+        let seed = rng.next_u64();
+        let mut perm: Vec<usize> = (0..p).collect();
+        for i in (1..p).rev() {
+            perm.swap(i, rng.int_in(0, i as u64) as usize);
+        }
+        let run = |assignment: Vec<usize>| {
+            let slot_shape = Arc::new(slot_shape.clone());
+            let assignment = Arc::new(assignment);
+            run_ranks(p, Duration::from_secs(60), move |mut ep, mut led| {
+                // Stack [p, ...slot_shape], seeded per (contributor, slot).
+                let mut stack_shape = vec![ep.p];
+                stack_shape.extend_from_slice(&slot_shape);
+                let mut stack = Tensor::zeros(&stack_shape);
+                let slot_n: usize = slot_shape.iter().product();
+                for j in 0..ep.p {
+                    let c = contribution(
+                        &slot_shape,
+                        seed ^ (assignment[ep.rank] as u64).wrapping_mul(0xABCD),
+                        j,
+                    );
+                    stack.data_mut()[j * slot_n..(j + 1) * slot_n].copy_from_slice(c.data());
+                }
+                ep.reduce_scatter(stack, &mut led).unwrap()
+            })
+        };
+        let identity = run((0..p).collect());
+        let permuted = run(perm.clone());
+        for (rank, (a, b)) in identity.iter().zip(&permuted).enumerate() {
+            assert_close(a.data(), b.data(), 1e-5, 1e-6).map_err(|e| {
+                format!("rank {rank}: permuted reduce-scatter diverged (perm {perm:?}): {e}")
+            })?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn zero_collective_mismatch_poisons_fabric() {
+    // SPMD safety for the ZeRO traffic: a rank calling dp_all_gather while
+    // its peers call dp_reduce_scatter is a programming error that must
+    // poison the exchange loudly (distinct op tags make it detectable),
+    // and every later collective on the poisoned fabric must fail fast.
+    let t0 = Instant::now();
+    let out = run_ranks(3, Duration::from_millis(250), |mut ep, mut led| {
+        let r = if ep.rank == 0 {
+            ep.dp_all_gather(Tensor::filled(&[4], 1.0), &mut led).map(|_| ())
+        } else {
+            ep.dp_reduce_scatter(Tensor::filled(&[3, 4], 1.0), &mut led).map(|_| ())
+        };
+        let after = ep.dp_all_gather(Tensor::filled(&[4], 1.0), &mut led);
+        (r, after.map(|_| ()))
+    });
+    assert!(
+        out.iter().any(|(r, _)| r.is_err()),
+        "dp op mismatch must surface as at least one error"
+    );
+    for (i, (_, after)) in out.iter().enumerate() {
+        assert!(after.is_err(), "rank {i}: dp collective succeeded on a poisoned fabric");
+    }
+    assert!(t0.elapsed() < Duration::from_secs(10), "poison must fail fast, not hang");
+}
+
+#[test]
 fn gather_scatter_roundtrip_is_identity_on_ragged_shapes() {
     let cfg = PropConfig { cases: 24, ..PropConfig::default() };
     check("all-gather/reduce-scatter round-trip", cfg, |rng| {

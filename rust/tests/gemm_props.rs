@@ -4,7 +4,9 @@
 //! contract and a small differential sweep proving the tuned backend still
 //! matches the single-rank oracle within the PR 4 conformance tolerances.
 
-use phantom::tensor::gemm::{gemm_a_bt_acc_with, gemm_acc_with, gemm_at_b_acc_with, pack_pool_idle};
+use phantom::tensor::gemm::{
+    gemm_a_bt_acc_with, gemm_acc_with, gemm_at_b_acc_with, pack_pool_idle, PACK_POOL_CAP,
+};
 use phantom::tensor::seed::gemm_acc_seed;
 use phantom::tensor::simd::{self, Isa};
 use phantom::tensor::tune::GemmParams;
@@ -207,6 +209,60 @@ fn threaded_bands_return_workspace_to_pool() {
     assert_close(out.data(), a.matmul_naive(&b).unwrap().data(), 1e-4, 1e-5).unwrap();
     scratch.recycle(out);
     assert_eq!(scratch.pooled(), 1);
+}
+
+#[test]
+fn pooled_tensor_churn_stays_within_band_pool_cap() {
+    // Tensor::zeros_pooled / Tensor::recycle are the backward kernels'
+    // scratch path: hammering the cycle far past the cap must never grow
+    // the idle pool beyond PACK_POOL_CAP, and every pooled tensor must
+    // come back zeroed (recycled buffers carry stale values).
+    for _ in 0..3 * PACK_POOL_CAP {
+        let mut t = Tensor::zeros_pooled(&[17, 3]);
+        assert!(t.data().iter().all(|&v| v == 0.0), "pooled tensor not zeroed");
+        t.data_mut().fill(7.5); // poison so a non-zeroing reuse would show
+        t.recycle();
+    }
+    let idle = pack_pool_idle();
+    assert!(idle <= PACK_POOL_CAP, "pool unbounded: {idle} idle buffers");
+}
+
+#[test]
+fn backward_fused_kernel_outputs_recycle_deterministically() {
+    // The backward fused kernels draw their output tensors from the
+    // bounded band pool; the rank loops recycle them at death. Churning
+    // one kernel through many recycle cycles must (a) keep the idle pool
+    // within its cap and (b) reproduce the first call's results bitwise —
+    // proving reused buffers never leak stale data into outputs.
+    use phantom::runtime::native::run_entry;
+    use phantom::runtime::ManifestConfig;
+    let (p, bsz, k, m) = (3usize, 4usize, 2usize, 8usize);
+    let geo = ManifestConfig::native("pool-test", p, p * m, k, bsz);
+    let mut rng = Prng::new(0xBA4D);
+    let delta = Tensor::randn(&[bsz, m], 1.0, &mut rng);
+    let h_sum = Tensor::randn(&[bsz, k], 1.0, &mut rng);
+    let l = Tensor::randn(&[m, m], 1.0, &mut rng);
+    let c = Tensor::randn(&[m, k], 1.0, &mut rng);
+    let z_prev = Tensor::randn(&[bsz, m], 1.0, &mut rng);
+    let d_prev = Tensor::randn(&[p, k, m], 1.0, &mut rng);
+    let inputs: [&Tensor; 6] = [&delta, &h_sum, &l, &c, &z_prev, &d_prev];
+
+    let want = run_entry(&geo, "pp_bwd_step", &inputs).unwrap();
+    for round in 0..100 {
+        let out = run_entry(&geo, "pp_bwd_step", &inputs).unwrap();
+        assert_eq!(out.len(), want.len());
+        for (o, w) in out.iter().zip(&want) {
+            assert!(
+                o.shape() == w.shape() && o.data() == w.data(),
+                "round {round}: pooled reuse changed the kernel output"
+            );
+        }
+        for t in out {
+            t.recycle();
+        }
+        let idle = pack_pool_idle();
+        assert!(idle <= PACK_POOL_CAP, "round {round}: pool unbounded ({idle} idle)");
+    }
 }
 
 #[test]

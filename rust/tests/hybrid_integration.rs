@@ -41,6 +41,7 @@ fn base_cfg(mode: Parallelism, dp: usize, iters: usize) -> RunConfig {
             target_loss: None,
             warmup_iters: 1,
             dataset_batches: 2,
+            ..TrainConfig::default()
         },
         hardware: HardwareConfig::frontier_measured(),
         artifact: Some("hybrid-case".to_string()),

@@ -1,0 +1,285 @@
+//! 1F1B schedule + ZeRO-1 sharded-state end-to-end suite (DESIGN.md §15):
+//!
+//! * the interleaved 1F1B schedule reproduces the synchronous schedule's
+//!   loss trajectory BIT FOR BIT at every micro-batching, while exposing
+//!   strictly less collective wire time on the energy ledger (the deferred
+//!   boundary collectives drain under the next chunk's compute);
+//! * micro = 1 is byte-identical to the historical non-pipelined loop for
+//!   both schedules;
+//! * ZeRO-1 sharded optimizer state matches the flat DP path and the
+//!   single-thread oracle bitwise for dp in {2, 4} in both parallelism
+//!   modes, holds ~1/dp of the moment floats per rank, and swaps the
+//!   per-iteration DP All-Reduce for one Reduce-Scatter + one All-Gather;
+//! * sharded and 1F1B checkpoints resume bit-identically mid-run, refuse
+//!   schedule / sharding mismatches, and collapse_dp re-materializes the
+//!   full optimizer state from the rank-ordered owned slices.
+
+use phantom::ckpt::{collapse_dp, Snapshot};
+use phantom::config::{
+    CkptPolicy, HardwareConfig, ModelConfig, OptimizerConfig, Parallelism, RunConfig, Schedule,
+    TrainConfig,
+};
+use phantom::coordinator::{self, TrainOptions, TrainReport};
+use phantom::runtime::ExecServer;
+use phantom::tensor::Tensor;
+use phantom::testkit::ReferenceTrainer;
+use phantom::util::prng::Prng;
+
+/// A deep-enough pipeline for scheduling to matter: p = 4 stages, batch 8
+/// so micro in {1, 2, 4} divides into whole chunks (and 3 exercises the
+/// ragged 3+3+2 split).
+fn pp_cfg(micro: usize, schedule: Schedule, iters: usize) -> RunConfig {
+    RunConfig {
+        mode: Parallelism::Phantom,
+        p: 4,
+        dp: 1,
+        model: ModelConfig { n: 16, layers: 2, k: 2 },
+        train: TrainConfig {
+            batch: 8,
+            optimizer: OptimizerConfig::Momentum { lr: 0.05, beta: 0.9 },
+            seed: 0x1F1B_0001,
+            max_iters: iters,
+            target_loss: None,
+            warmup_iters: 1,
+            dataset_batches: 2,
+            micro,
+            schedule,
+            ..TrainConfig::default()
+        },
+        hardware: HardwareConfig::frontier_measured(),
+        artifact: Some("pipeline-case".to_string()),
+        backend: Default::default(),
+    }
+}
+
+/// The hybrid grid from hybrid_integration, parameterized on sharding:
+/// p = 2 model ranks, batch 5 so dp = 2 and 4 split ragged rows.
+fn dp_cfg(mode: Parallelism, dp: usize, sharded: bool, iters: usize) -> RunConfig {
+    RunConfig {
+        mode,
+        p: 2,
+        dp,
+        model: ModelConfig { n: 12, layers: 2, k: 2 },
+        train: TrainConfig {
+            batch: 5,
+            optimizer: OptimizerConfig::Adam { lr: 1e-2, beta1: 0.9, beta2: 0.999, eps: 1e-8 },
+            seed: 0x5EED_2E20,
+            max_iters: iters,
+            target_loss: None,
+            warmup_iters: 1,
+            dataset_batches: 2,
+            sharded_state: sharded,
+            ..TrainConfig::default()
+        },
+        hardware: HardwareConfig::frontier_measured(),
+        artifact: Some("zero-case".to_string()),
+        backend: Default::default(),
+    }
+}
+
+fn train(cfg: &RunConfig) -> TrainReport {
+    let server = ExecServer::for_run(cfg).expect("backend");
+    coordinator::train(cfg, &server).expect("train")
+}
+
+fn bits(losses: &[f64]) -> Vec<u64> {
+    losses.iter().map(|l| l.to_bits()).collect()
+}
+
+#[test]
+fn one_f_one_b_matches_sync_bitwise_at_every_micro() {
+    for micro in [1usize, 2, 3, 4] {
+        let sync = train(&pp_cfg(micro, Schedule::Sync, 3));
+        let ofob = train(&pp_cfg(micro, Schedule::OneFOneB, 3));
+        assert_eq!(
+            bits(&sync.losses),
+            bits(&ofob.losses),
+            "micro={micro}: 1f1b must replay the sync trajectory bitwise"
+        );
+        assert_eq!(sync.iterations, ofob.iterations);
+    }
+}
+
+#[test]
+fn micro_one_is_identical_to_the_flat_loop_for_both_schedules() {
+    // micro = 1 short-circuits the chunking entirely, so both schedules
+    // must reproduce the historical single-chunk loop exactly — including
+    // its comm accounting (nothing in flight => nothing to defer).
+    let flat = train(&pp_cfg(1, Schedule::Sync, 3));
+    let ofob = train(&pp_cfg(1, Schedule::OneFOneB, 3));
+    assert_eq!(bits(&flat.losses), bits(&ofob.losses));
+    let comm = |r: &TrainReport| -> f64 { r.per_rank.iter().map(|pr| pr.ledger.comm_s).sum() };
+    assert_eq!(comm(&flat), comm(&ofob), "micro=1 exposes every collective on both schedules");
+}
+
+#[test]
+fn one_f_one_b_hides_boundary_collective_wire_time() {
+    // Wire time is modeled (deterministic), so the comparison is exact:
+    // with micro-batches in flight, 1F1B must expose strictly less
+    // collective time than the synchronous schedule at the same math.
+    let sync = train(&pp_cfg(4, Schedule::Sync, 3));
+    let ofob = train(&pp_cfg(4, Schedule::OneFOneB, 3));
+    let comm = |r: &TrainReport| -> f64 { r.per_rank.iter().map(|pr| pr.ledger.comm_s).sum() };
+    let (cs, co) = (comm(&sync), comm(&ofob));
+    assert!(co < cs, "1f1b exposed {co} s of comm, sync exposed {cs} s — deferral hid nothing");
+    // The moved floats are identical — only the exposure changes.
+    let floats =
+        |r: &TrainReport| -> u64 { r.per_rank.iter().map(|pr| pr.stats.floats_moved).sum() };
+    assert_eq!(floats(&sync), floats(&ofob));
+}
+
+#[test]
+fn sharded_state_matches_flat_and_oracle_bitwise_all_dp() {
+    for mode in [Parallelism::Phantom, Parallelism::Tensor] {
+        for dp in [2usize, 4] {
+            let flat = train(&dp_cfg(mode, dp, false, 3));
+            let sharded = train(&dp_cfg(mode, dp, true, 3));
+            assert_eq!(
+                bits(&flat.losses),
+                bits(&sharded.losses),
+                "{} dp={dp}: ZeRO-1 must be bit-identical to the flat DP path",
+                mode.name()
+            );
+
+            let cfg = dp_cfg(mode, dp, true, 3);
+            let mut oracle = ReferenceTrainer::new(&cfg).expect("oracle");
+            oracle.run(3).expect("oracle run");
+            assert_eq!(bits(&sharded.losses), bits(&oracle.losses), "{} dp={dp}", mode.name());
+        }
+    }
+}
+
+#[test]
+fn sharded_state_holds_a_dp_fraction_of_the_moments_and_uses_rs_ag() {
+    let iters = 3usize;
+    for mode in [Parallelism::Phantom, Parallelism::Tensor] {
+        let dp = 2usize;
+        let flat = train(&dp_cfg(mode, dp, false, iters));
+        let sharded = train(&dp_cfg(mode, dp, true, iters));
+
+        let peak = |r: &TrainReport| -> usize {
+            r.per_rank.iter().map(|pr| pr.opt_state_floats).max().unwrap_or(0)
+        };
+        let (pf, ps) = (peak(&flat), peak(&sharded));
+        assert!(pf > 0, "{}: Adam must hold moments", mode.name());
+        // Adam holds two moments; flat ranks hold both full (pf = 2*total),
+        // sharded ranks hold the owned ceil(total/dp) slice of each.
+        let slot = pf.div_ceil(2).div_ceil(dp);
+        assert_eq!(ps, 2 * slot, "{}: sharded rank holds exactly its slice", mode.name());
+
+        for r in &sharded.per_rank {
+            assert_eq!(r.dp_stats.all_reduces, 0, "{}: ZeRO path must not all-reduce", mode.name());
+            assert_eq!(r.dp_stats.reduce_scatters, iters as u64);
+            assert_eq!(r.dp_stats.all_gathers, iters as u64);
+        }
+        for r in &flat.per_rank {
+            assert_eq!(r.dp_stats.all_reduces, iters as u64);
+            assert_eq!(r.dp_stats.reduce_scatters, 0);
+            assert_eq!(r.dp_stats.all_gathers, 0);
+        }
+    }
+}
+
+#[test]
+fn sharded_ckpt_resumes_bitwise_and_collapse_rebuilds_full_state() {
+    let dir = std::env::temp_dir().join(format!("phantom-zero-ckpt-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+
+    let cfg = dp_cfg(Parallelism::Phantom, 2, true, 4);
+    let server = ExecServer::for_run(&cfg).expect("backend");
+    let baseline = coordinator::train(&cfg, &server).expect("baseline").losses;
+
+    let snap_run = coordinator::train_with(
+        &cfg,
+        &server,
+        TrainOptions {
+            ckpt: Some(CkptPolicy { every: 2, dir: dir.clone() }),
+            ..Default::default()
+        },
+    )
+    .expect("snapshotting run");
+    assert_eq!(bits(&snap_run.losses), bits(&baseline));
+
+    // Crash-equivalent: resume from the mid-run snapshot must replay the
+    // tail bit-identically through the sharded optimizer slices.
+    let snap = Snapshot::load(&dir.join("ckpt-000002")).expect("mid-run snapshot");
+    assert!(snap.config.train.sharded_state);
+    let resumed = coordinator::train_with(
+        &cfg,
+        &server,
+        TrainOptions { resume: Some(snap.clone()), ..Default::default() },
+    )
+    .expect("resumed run")
+    .losses;
+    assert_eq!(bits(&resumed), bits(&baseline), "sharded resume must continue bit-identically");
+
+    // A sharded snapshot refuses to resume a flat run: the state layout
+    // shapes what each shard persists.
+    let mut flat_cfg = cfg.clone();
+    flat_cfg.train.sharded_state = false;
+    let err = coordinator::train_with(
+        &flat_cfg,
+        &server,
+        TrainOptions { resume: Some(snap.clone()), ..Default::default() },
+    )
+    .expect_err("sharding mismatch must be rejected");
+    assert!(format!("{err:#}").contains("sharded_state"), "{err:#}");
+
+    // collapse_dp re-materializes the full optimizer state by
+    // concatenating the rank-ordered owned slices; the collapsed pure
+    // snapshot serves replica 0's forward exactly.
+    let final_snap = Snapshot::load(&dir.join("ckpt-000004")).expect("final snapshot");
+    let pure = collapse_dp(&final_snap).expect("sharded collapse");
+    assert_eq!(pure.config.dp, 1);
+    let mut rng = Prng::new(0x2E20);
+    let x = Tensor::randn(&[4, cfg.model.n], 1.0, &mut rng);
+    let y_src = final_snap.forward_host(&x).unwrap();
+    let y_pure = pure.forward_host(&x).unwrap();
+    assert_eq!(y_src, y_pure);
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn one_f_one_b_ckpt_resume_is_bit_identical() {
+    let dir = std::env::temp_dir().join(format!("phantom-1f1b-ckpt-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+
+    let cfg = pp_cfg(4, Schedule::OneFOneB, 4);
+    let server = ExecServer::for_run(&cfg).expect("backend");
+    let baseline = coordinator::train(&cfg, &server).expect("baseline").losses;
+    coordinator::train_with(
+        &cfg,
+        &server,
+        TrainOptions {
+            ckpt: Some(CkptPolicy { every: 2, dir: dir.clone() }),
+            ..Default::default()
+        },
+    )
+    .expect("snapshotting run");
+
+    let snap = Snapshot::load(&dir.join("ckpt-000002")).expect("mid-run snapshot");
+    let resumed = coordinator::train_with(
+        &cfg,
+        &server,
+        TrainOptions { resume: Some(snap.clone()), ..Default::default() },
+    )
+    .expect("resumed run")
+    .losses;
+    assert_eq!(bits(&resumed), bits(&baseline));
+
+    // Resuming under a different micro-batching is refused — chunked row
+    // splits change the f32 summation order, so the trajectory would
+    // silently diverge from the snapshot's.
+    let mut other = cfg.clone();
+    other.train.micro = 2;
+    let err = coordinator::train_with(
+        &other,
+        &server,
+        TrainOptions { resume: Some(snap), ..Default::default() },
+    )
+    .expect_err("micro mismatch must be rejected");
+    assert!(format!("{err:#}").contains("micro"), "{err:#}");
+
+    std::fs::remove_dir_all(&dir).ok();
+}
